@@ -1,0 +1,69 @@
+//! The full data-market workflow of the paper's Fig 1 on real artifacts:
+//!
+//!   stage 1 (clear) — bootstrap purchase,
+//!   stage 2 (MPC)   — two-phase private selection with distilled proxies,
+//!   stage 3 (clear) — appraisal + transaction settlement.
+//!
+//! Requires `make artifacts` (distilbert_s/sst2s cell).
+//!
+//!     cargo run --release --example market_selection
+
+use selectformer::coordinator::market::{self, Budget, Transaction};
+use selectformer::coordinator::{multi_phase_select, SelectionOptions};
+use selectformer::exp::Cell;
+use selectformer::models::WeightFile;
+use selectformer::util::report::{fmt_bytes, fmt_duration};
+
+fn main() -> anyhow::Result<()> {
+    let cell = Cell::new(&Cell::default_root(), "distilbert_s", "sst2s");
+    if !cell.exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let ds = cell.train_dataset()?;
+    let budget = Budget::from_fraction(ds.n, 0.20, 0.25);
+    println!("== stage 1 (clear): bootstrap purchase ==");
+    println!("corpus: {} unlabeled points; budget: {} points total", ds.n, budget.total);
+    let bootstrap = cell.bootstrap_indices()?;
+    println!("bootstrap sample: {} points (random, no MPC)", bootstrap.len());
+
+    println!("\n== stage 2 (MPC): two-phase private selection ==");
+    let candidates = market::selection_candidates(ds.n, &bootstrap);
+    let keep = budget.total - bootstrap.len();
+    let frac = keep as f64 / candidates.len() as f64;
+    let mid = (1.5 * frac).min(1.0);
+    let schedule = selectformer::coordinator::PhaseSchedule::new(
+        vec![
+            selectformer::coordinator::ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            selectformer::coordinator::ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 },
+        ],
+        vec![mid, frac / mid],
+    );
+    let p1 = cell.proxy_phase(1);
+    let p2 = cell.proxy_phase(2);
+    let wf1 = WeightFile::load(&p1)?;
+    println!("phase 1 proxy: {:?}", wf1.config()?);
+    let opts = SelectionOptions { batch: 16, ..Default::default() };
+    let outcome = multi_phase_select(
+        &[p1.as_path(), p2.as_path()],
+        &schedule,
+        &ds,
+        candidates,
+        &opts,
+    )?;
+    for (i, p) in outcome.phases.iter().enumerate() {
+        println!(
+            "  phase {}: {} survivors, {} exchanged, simulated delay {}",
+            i + 1,
+            p.survivors.len(),
+            fmt_bytes(p.meter_p0.bytes + p.meter_p1.bytes),
+            fmt_duration(p.sim_delay)
+        );
+    }
+
+    println!("\n== stage 3 (clear): transaction ==");
+    let tx = Transaction::new(bootstrap, outcome.selected.clone(), 0.01);
+    println!("purchased {} points for ${:.2}", tx.purchased().len(), tx.total_price());
+    println!("data owner ships {} of tokens", fmt_bytes(tx.shipped_bytes(ds.seq_len)));
+    println!("\ntotal private-selection delay: {}", fmt_duration(outcome.total_delay()));
+    Ok(())
+}

@@ -1,0 +1,62 @@
+//! END-TO-END validation driver (DESIGN.md §7): run the full system on a
+//! real workload and prove all three layers compose —
+//!
+//!   L3 rust MPC engine selects data with the distilled phase proxies,
+//!   L2/L1 AOT artifacts (JAX model + Pallas kernels, lowered to HLO)
+//!   train the target model on the purchase from rust via PJRT,
+//!
+//! then report the loss curve and the Ours / Random / Oracle test
+//! accuracies (the paper's Table 1 cell for this benchmark).
+//!
+//! Requires `make artifacts`.
+//!
+//!     cargo run --release --example train_selected [-- <steps>]
+
+use selectformer::coordinator::SelectionOptions;
+use selectformer::exp::{self, Cell, Method};
+use selectformer::runtime::Runtime;
+use selectformer::util::report::fmt_duration;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(150);
+    let cell = Cell::new(&Cell::default_root(), "distilbert_s", "sst2s");
+    if !cell.exists() {
+        anyhow::bail!("artifacts missing — run `make artifacts` first");
+    }
+    let mut rt = Runtime::new()?;
+    let opts = SelectionOptions { batch: 16, ..Default::default() };
+    println!("== end-to-end: {}/{} @ 20% budget, {steps} train steps ==",
+             cell.target, cell.bench);
+
+    // --- Ours: private 2-phase selection over MPC ---
+    let t0 = std::time::Instant::now();
+    let ours = exp::select(&cell, Method::Ours, 0.2, &opts, None)?;
+    let sim = ours.outcome.as_ref().unwrap().total_delay();
+    println!("[ours] selected {} pts in {:.0}s wall / {} simulated WAN",
+             ours.indices.len(), t0.elapsed().as_secs_f64(), fmt_duration(sim));
+
+    let (curve, acc_ours) = exp::train_and_eval(&cell, &mut rt, &ours, steps, 11)?;
+    println!("[ours] loss curve: {}",
+             curve.iter().step_by((steps / 12).max(1))
+                  .map(|l| format!("{l:.3}"))
+                  .collect::<Vec<_>>().join(" → "));
+    println!("[ours] test accuracy: {:.2}%", acc_ours * 100.0);
+
+    // --- Random baseline ---
+    let random = exp::select(&cell, Method::Random, 0.2, &opts, None)?;
+    let (_c, acc_rand) = exp::train_and_eval(&cell, &mut rt, &random, steps, 11)?;
+    println!("[random] test accuracy: {:.2}%  (ours {:+.2} pts)",
+             acc_rand * 100.0, (acc_ours - acc_rand) * 100.0);
+
+    // --- Oracle (gold): select by target-model entropy ---
+    let oracle = exp::select(&cell, Method::Oracle, 0.2, &opts, Some(&mut rt))?;
+    let (_c, acc_orac) = exp::train_and_eval(&cell, &mut rt, &oracle, steps, 11)?;
+    println!("[oracle] test accuracy: {:.2}%  (ours {:+.2} pts)",
+             acc_orac * 100.0, (acc_ours - acc_orac) * 100.0);
+
+    println!("\npaper shape check: Ours > Random, Ours ≈ Oracle.");
+    Ok(())
+}

@@ -1,0 +1,333 @@
+"""AOT pipeline: run the build-time python ONCE, emit everything rust needs.
+
+Outputs under artifacts/ (all consumed by rust/src/{runtime,models,data}):
+
+  data/<bench>.{train,test}.bin        synthetic benchmarks (SFDS)
+  backbones/<target>.sfw               "pretrained" target checkpoints
+  <target>/<bench>/boot_idx.bin        bootstrap sample indices (SFIX)
+  <target>/<bench>/target_init.sfw     pretrained backbone + fresh head
+  <target>/<bench>/proxy_phase<i>.sfw  phase proxies (+ meta.* scalars)
+  <target>/<bench>/proxy_<kind>.sfw    mpcformer / bolt / ablation proxies
+  hlo/<target>_<bench>_*.hlo.txt       AOT executables (HLO TEXT — jax≥0.5
+                                       serialized protos are rejected by
+                                       xla_extension 0.5.1, see DESIGN.md §6)
+  hlo/*.sig.txt                        argument-order sidecars
+  manifest.tsv                         everything above, with params
+
+Idempotent: existing files are skipped unless --force. --profile core
+builds a 5-combo subset for the dev loop; full builds all 14 paper cells.
+"""
+
+import argparse
+import sys
+import time
+from dataclasses import replace as dc_replace
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from compile import model as M  # noqa: E402
+from selectformer import config as C  # noqa: E402
+from selectformer import datasets as D  # noqa: E402
+from selectformer import export as E  # noqa: E402
+from selectformer import proxygen as PG  # noqa: E402
+from selectformer import baselines as BL  # noqa: E402
+
+BOOT_FRACTION = 0.05  # paper: S_boot is a small slice (5%) of the budget
+PRETRAIN_CLASSES = 8
+TRAIN_BATCH = 32
+EVAL_BATCH = 100
+FWD_BATCH = 64
+
+NLP_TARGETS = ["distilbert_s", "bert_s"]
+CV_TARGETS = ["vit_small_s", "vit_base_s"]
+
+CORE_CELLS = [
+    ("distilbert_s", "sst2s"), ("distilbert_s", "qqps"),
+    ("distilbert_s", "agnewss"), ("bert_s", "sst2s"),
+    ("vit_small_s", "cifar10s"),
+]
+# Table 2 ablation cells (NoAttnSM / NoAttnLN / NoApprox variants)
+ABLATION_CELLS = [("distilbert_s", b) for b in ("sst2s", "qqps", "agnewss")] \
+    + [("bert_s", b) for b in ("sst2s", "qqps", "agnewss")]
+# Table 3 baseline cells (MPCFormer / Bolt)
+BASELINE_CELLS = [("bert_s", b) for b in ("sst2s", "qnlis", "qqps")]
+
+
+def all_cells():
+    cells = []
+    for b in C.BENCHMARKS:
+        targets = NLP_TARGETS if b.modality == "nlp" else CV_TARGETS
+        cells.extend((t, b.name) for t in targets)
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# HLO lowering (text interchange — see /opt/xla-example/README.md)
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, example_args, path: Path, signature: list, force=False):
+    sig_path = path.with_suffix(".sig.txt")
+    if path.exists() and sig_path.exists() and not force:
+        return False
+    lowered = jax.jit(fn).lower(*example_args)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(to_hlo_text(lowered))
+    sig_path.write_text("\n".join(signature) + "\n")
+    return True
+
+
+def shape_spec(arr):
+    return jax.ShapeDtypeStruct(arr.shape, arr.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-artifact builders
+# ---------------------------------------------------------------------------
+
+
+def build_datasets(outdir: Path, force=False):
+    ddir = outdir / "data"
+    rows = []
+    for spec in C.BENCHMARKS:
+        for split, make in (("train", 0), ("test", 1)):
+            path = ddir / f"{spec.name}.{split}.bin"
+            rows.append((f"data/{spec.name}.{split}.bin", spec.paper_name))
+            if path.exists() and not force:
+                continue
+            train, test = D.synth_benchmark(spec, seed=0)
+            D.write_bin(train if split == "train" else test, path)
+    return rows
+
+
+def write_idx(path: Path, idx: np.ndarray):
+    import struct
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(b"SFIX")
+        f.write(struct.pack("<II", 1, len(idx)))
+        f.write(np.asarray(idx, dtype="<u4").tobytes())
+
+
+def build_backbone(target: str, outdir: Path, force=False):
+    path = outdir / "backbones" / f"{target}.sfw"
+    cfg = C.TARGETS[target]
+    if path.exists() and not force:
+        flat = E.read_sfw(path)
+        return jax.tree.map(jnp.asarray, E.unflatten_params(flat)), cfg
+    t0 = time.time()
+    corpus = D.pretrain_corpus(4096, PRETRAIN_CLASSES, seed=hash(target) % 997)
+    params = PG.pretrain_backbone(cfg, corpus.tokens, corpus.labels,
+                                  PRETRAIN_CLASSES, steps=400,
+                                  seed=hash(target) % 991)
+    E.write_sfw(E.flatten_params(params), path)
+    print(f"  backbone {target}: {time.time()-t0:.1f}s")
+    return params, cfg
+
+
+def add_meta(flat: dict, pcfg, d_mlp: int, variant: int):
+    """Encode the model config as meta.* scalars so .sfw is self-describing."""
+    meta = {
+        "meta.n_layers": pcfg.n_layers, "meta.n_heads": pcfg.n_heads,
+        "meta.d_model": pcfg.d_model, "meta.d_mlp": d_mlp,
+        "meta.seq_len": pcfg.seq_len, "meta.vocab": pcfg.vocab,
+        "meta.n_classes": pcfg.n_classes, "meta.variant": variant,
+        "meta.d_head": pcfg.d_head,
+    }
+    for k, v in meta.items():
+        flat[k] = np.float32(v)
+    return flat
+
+VARIANT_MLP, VARIANT_QUAD, VARIANT_POLY, VARIANT_EXACT = 0, 1, 2, 3
+
+
+def build_cell(target: str, bench: str, outdir: Path, ablations: bool,
+               baselines: bool, force=False):
+    """Everything for one (target model, benchmark) pair."""
+    cdir = outdir / target / bench
+    done = (cdir / ".done").exists()
+    if done and not force:
+        return
+    t0 = time.time()
+    bspec = C.BENCHMARK_BY_NAME[bench]
+    backbone, base_cfg = build_backbone(target, outdir)
+    cfg = dc_replace(base_cfg, n_classes=bspec.n_classes)
+
+    train_ds = D.read_bin(outdir / "data" / f"{bench}.train.bin")
+    rng = np.random.default_rng(abs(hash((target, bench))) % (2**31))
+    n_boot = max(64, int(BOOT_FRACTION * len(train_ds)))
+    boot_idx = rng.choice(len(train_ds), size=n_boot, replace=False)
+    write_idx(cdir / "boot_idx.bin", np.sort(boot_idx))
+    boot_tokens = train_ds.tokens[boot_idx].astype(np.int32)
+    boot_labels = train_ds.labels[boot_idx].astype(np.int32)
+
+    # target with fresh head, lightly finetuned on the (labeled, purchased)
+    # bootstrap so Oracle entropies are meaningful — stands in for the
+    # paper's pretrained M_target (DESIGN.md §3)
+    tparams = PG.with_fresh_head(backbone, cfg, bspec.n_classes,
+                                 seed=len(bench))
+    tparams, _ = PG.train_classifier(tparams, cfg, boot_tokens, boot_labels,
+                                     steps=60, seed=3,
+                                     cache_key=("target_boot",))
+    E.write_sfw(add_meta(E.flatten_params(tparams), cfg, 0, VARIANT_EXACT),
+                cdir / "target_init.sfw")
+
+    # phase proxies (default 2-phase schedule, §5.1)
+    sched = C.default_schedule(bspec.modality, cfg.n_heads, budget=0.20)
+    proxies, pcfgs, mg, mg_cfg = PG.generate_proxies(
+        tparams, cfg, boot_tokens, sched.proxies, seed=11)
+    for i, (proxy, pcfg, spec) in enumerate(zip(proxies, pcfgs,
+                                                sched.proxies)):
+        flat = add_meta(E.flatten_params(proxy), pcfg, spec.d_mlp,
+                        VARIANT_MLP)
+        E.write_sfw(flat, cdir / f"proxy_phase{i + 1}.sfw")
+
+    if ablations:
+        for tag, approx in (("noattnsm", ("ln", "se")),
+                            ("noattnln", ("sm", "se")),
+                            ("noapprox", ())):
+            aproxies, apcfgs, _, _ = PG.generate_proxies(
+                tparams, cfg, boot_tokens, sched.proxies[-1:], seed=13,
+                approx=approx)
+            flat = add_meta(E.flatten_params(aproxies[0]), apcfgs[0],
+                            sched.proxies[-1].d_mlp, VARIANT_MLP)
+            E.write_sfw(flat, cdir / f"proxy_{tag}.sfw")
+
+    if baselines:
+        spec = sched.proxies[-1]
+        for kind, variant in (("mpcformer", VARIANT_QUAD),
+                              ("bolt", VARIANT_POLY)):
+            bproxy, bpcfg = BL.generate_baseline_proxy(
+                tparams, cfg, boot_tokens, spec, kind, seed=17)
+            flat = add_meta(E.flatten_params(bproxy), bpcfg, spec.d_mlp,
+                            variant)
+            E.write_sfw(flat, cdir / f"proxy_{kind}.sfw")
+
+    build_cell_hlo(target, bench, cfg, tparams, proxies, pcfgs, outdir,
+                   force=force)
+    (cdir / ".done").write_text("ok\n")
+    print(f"  cell {target}/{bench}: {time.time()-t0:.1f}s")
+
+
+def build_cell_hlo(target, bench, cfg, tparams, proxies, pcfgs, outdir,
+                   force=False):
+    hdir = outdir / "hlo"
+    names = M.flat_names(tparams)
+    flat = [M.get_by_name(tparams, n) for n in names]
+    toks32 = jnp.zeros((TRAIN_BATCH, cfg.seq_len), jnp.int32)
+    toks100 = jnp.zeros((EVAL_BATCH, cfg.seq_len), jnp.int32)
+    toks64 = jnp.zeros((FWD_BATCH, cfg.seq_len), jnp.int32)
+    labels = jnp.zeros((TRAIN_BATCH,), jnp.int32)
+    prefix = f"{target}_{bench}"
+
+    # train_step: [params..., m..., v..., step, tokens, labels] →
+    #             (params'..., m'..., v'..., loss)
+    step_fn = M.make_target_train_step(cfg, lr=3e-4)
+
+    def flat_step(*args):
+        p = M.flat_to_tree(args[:len(names)], names)
+        m = M.flat_to_tree(args[len(names):2 * len(names)], names)
+        v = M.flat_to_tree(args[2 * len(names):3 * len(names)], names)
+        step, tokens, lab = args[3 * len(names):]
+        p2, m2, v2, loss = step_fn(p, m, v, step, tokens, lab)
+        return tuple([M.get_by_name(p2, n) for n in names]
+                     + [M.get_by_name(m2, n) for n in names]
+                     + [M.get_by_name(v2, n) for n in names] + [loss])
+
+    zeros = [jnp.zeros_like(a) for a in flat]
+    sig = ([f"param:{n}" for n in names] + [f"m:{n}" for n in names]
+           + [f"v:{n}" for n in names] + ["step", "tokens", "labels"])
+    lower_to_file(flat_step,
+                  [*map(shape_spec, flat), *map(shape_spec, zeros),
+                   *map(shape_spec, zeros), shape_spec(jnp.float32(1)),
+                   shape_spec(toks32), shape_spec(labels)],
+                  hdir / f"{prefix}_train_step_b{TRAIN_BATCH}.hlo.txt",
+                  sig, force=force)
+
+    # eval: [params..., tokens] → (logits,)
+    def flat_eval(*args):
+        p = M.flat_to_tree(args[:len(names)], names)
+        return (M.target_forward(p, args[len(names)], cfg),)
+
+    lower_to_file(flat_eval, [*map(shape_spec, flat), shape_spec(toks100)],
+                  hdir / f"{prefix}_eval_b{EVAL_BATCH}.hlo.txt",
+                  [f"param:{n}" for n in names] + ["tokens"], force=force)
+
+    # oracle entropy: [params..., tokens] → (entropy,)
+    def flat_entropy(*args):
+        p = M.flat_to_tree(args[:len(names)], names)
+        return (M.target_entropy(p, args[len(names)], cfg),)
+
+    lower_to_file(flat_entropy, [*map(shape_spec, flat), shape_spec(toks64)],
+                  hdir / f"{prefix}_oracle_entropy_b{FWD_BATCH}.hlo.txt",
+                  [f"param:{n}" for n in names] + ["tokens"], force=force)
+
+    # proxy fwd (pallas path): [proxy params..., tokens] → (logits, entropy)
+    for i, (proxy, pcfg) in enumerate(zip(proxies, pcfgs)):
+        pnames = M.flat_names(proxy)
+        pflat = [M.get_by_name(proxy, n) for n in pnames]
+
+        def flat_proxy(*args, _pnames=pnames, _pcfg=pcfg):
+            p = M.flat_to_tree(args[:len(_pnames)], _pnames)
+            logits, ent = M.proxy_forward(p, args[len(_pnames)], _pcfg,
+                                          use_pallas=True)
+            return (logits, ent)
+
+        lower_to_file(flat_proxy, [*map(shape_spec, pflat),
+                                   shape_spec(toks64)],
+                      hdir / f"{prefix}_proxy_p{i+1}_fwd_b{FWD_BATCH}.hlo.txt",
+                      [f"param:{n}" for n in pnames] + ["tokens"],
+                      force=force)
+
+
+def write_manifest(outdir: Path):
+    rows = []
+    for p in sorted(outdir.rglob("*")):
+        if p.is_file() and p.suffix in (".bin", ".sfw", ".txt") \
+                and p.name != "manifest.tsv":
+            rows.append(f"{p.relative_to(outdir)}\t{p.stat().st_size}")
+    (outdir / "manifest.tsv").write_text("\n".join(rows) + "\n")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default=str(
+        Path(__file__).resolve().parent.parent.parent / "artifacts"))
+    ap.add_argument("--out", default=None, help="(compat) ignored")
+    ap.add_argument("--profile", choices=["core", "full"], default="core")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    outdir = Path(args.outdir)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    t0 = time.time()
+    print("== datasets ==")
+    build_datasets(outdir, force=args.force)
+
+    cells = all_cells() if args.profile == "full" else CORE_CELLS
+    print(f"== cells ({args.profile}: {len(cells)}) ==")
+    for target, bench in cells:
+        build_cell(target, bench, outdir,
+                   ablations=(target, bench) in ABLATION_CELLS,
+                   baselines=(target, bench) in BASELINE_CELLS,
+                   force=args.force)
+
+    write_manifest(outdir)
+    print(f"== artifacts complete in {time.time()-t0:.1f}s ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""L1: Pallas kernels for SelectFormer's compute hot-spots.
+
+All kernels are lowered with interpret=True (CPU PJRT cannot execute Mosaic
+custom-calls) and are checked against the pure-jnp oracles in ref.py.
+"""
+
+from .mlp_softmax import mlp_softmax  # noqa: F401
+from .mlp_entropy import mlp_entropy  # noqa: F401
+from .layernorm_mlp import layernorm_mlp  # noqa: F401
+from .attention import proxy_attention  # noqa: F401
+from . import ref  # noqa: F401

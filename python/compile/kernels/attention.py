@@ -1,0 +1,61 @@
+"""Pallas kernel: fused proxy attention block — the compute hot-spot.
+
+One grid step computes, for one (batch·head, q-block):
+
+    scores = (Q_tile @ K^T) * scale          # MXU
+    probs  = ReLU(scores @ W1 + b1) @ W2 + b2  # the MLP_sm emulation, VMEM-resident
+    out    = probs @ V                       # MXU
+
+Hardware adaptation (DESIGN.md §4): the paper schedules this over CUDA
+threadblocks / Crypten message batches; on TPU the BlockSpec grid
+(batch·heads × q-blocks) is the HBM↔VMEM schedule.  K, V and the MLP
+weights for a head are loaded once per grid column and reused across
+q-blocks; the (block_q × s) score tile and the d≤16 bottleneck never leave
+VMEM — the on-chip analogue of the paper's "never pay WAN for the
+nonlinearity" rule.
+
+interpret=True throughout (CPU PJRT); TPU perf is estimated, not measured.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref,
+            *, scale):
+    q = q_ref[0]  # (block_q, dh)
+    k = k_ref[0]  # (s, dh)
+    v = v_ref[0]  # (s, dh)
+    scores = (q @ k.T) * scale  # (block_q, s)
+    h = jnp.maximum(scores @ w1_ref[...] + b1_ref[...], 0.0)  # (block_q, d)
+    probs = h @ w2_ref[...] + b2_ref[...]  # (block_q, s)
+    o_ref[0] = probs @ v  # (block_q, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_q"))
+def proxy_attention(q, k, v, w1, b1, w2, b2, scale: float, block_q: int = 128):
+    """q,k,v: (bh, s, dh) → (bh, s, dh). MLP_sm weights shared across heads."""
+    bh, s, dh = q.shape
+    d = w1.shape[1]
+    block = min(block_q, s)
+    assert s % block == 0, "seq_len must be a multiple of block_q"
+    grid = (bh, s // block)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((s, d), lambda i, j: (0, 0)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((d, s), lambda i, j: (0, 0)),
+            pl.BlockSpec((s,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block, dh), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, w1, b1, w2, b2)

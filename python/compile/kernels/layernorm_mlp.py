@@ -1,0 +1,61 @@
+"""Pallas kernel: LayerNorm with MLP-emulated reciprocal-sqrt (MLP_ln).
+
+Mean and centered second moment are exact (sums and constant multiplies are
+nearly free over MPC and on the VPU); only the 1/sqrt(var+eps) scalar passes
+through the linear→ReLU→linear bottleneck.  The affine gamma/beta come from
+the original LayerNorm of M_g (paper §4.3).
+
+One grid step normalizes a (block × dm) row tile fully inside VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, g_ref, be_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]  # (block, dm)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    cen = x - mu
+    var = jnp.mean(cen * cen, axis=-1, keepdims=True)  # (block, 1)
+    h = jnp.maximum(var @ w1_ref[...] + b1_ref[...], 0.0)  # (block, d)
+    inv = h @ w2_ref[...] + b2_ref[...]  # (block, 1)
+    o_ref[...] = cen * inv * g_ref[...] + be_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def layernorm_mlp(x, gamma, beta, w1, b1, w2, b2, block_rows: int = 128):
+    """x: (..., dm) → same shape. gamma/beta (dm,), w1 (1,d), w2 (d,1)."""
+    orig_shape = x.shape
+    dm = orig_shape[-1]
+    rows = 1
+    for dim in orig_shape[:-1]:
+        rows *= dim
+    flat = x.reshape(rows, dm)
+    d = w1.shape[1]
+    block = min(block_rows, rows)
+    pad = (-rows) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    grid = (flat.shape[0] // block,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, dm), lambda i: (i, 0)),
+            pl.BlockSpec((dm,), lambda i: (0,)),
+            pl.BlockSpec((dm,), lambda i: (0,)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, dm), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, x.dtype),
+        interpret=True,
+    )(flat, gamma, beta, w1, b1, w2, b2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

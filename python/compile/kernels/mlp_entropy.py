@@ -1,0 +1,45 @@
+"""Pallas kernel: fused softmax-over-logits + entropy head (MLP_se).
+
+The paper fuses the classifier softmax and the entropy computation into one
+MLP whose output IS the entropy — over MPC this removes both the exp/log
+approximation iterations and a full C-dim reduction, leaving two matmuls of
+width d≤16.  The kernel maps a (block × C) logits tile to a (block,) entropy
+tile in one VMEM-resident step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(l_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    h = jnp.maximum(l_ref[...] @ w1_ref[...] + b1_ref[...], 0.0)
+    o_ref[...] = (h @ w2_ref[...] + b2_ref[...])[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def mlp_entropy(logits, w1, b1, w2, b2, block_rows: int = 256):
+    """logits: (n, C) → entropy (n,).  w1 (C,d) b1 (d,) w2 (d,1) b2 (1,)."""
+    n, c = logits.shape
+    d = w1.shape[1]
+    block = min(block_rows, n)
+    pad = (-n) % block
+    x = jnp.pad(logits, ((0, pad), (0, 0))) if pad else logits
+    grid = (x.shape[0] // block,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, c), lambda i: (i, 0)),
+            pl.BlockSpec((c, d), lambda i: (0, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), logits.dtype),
+        interpret=True,
+    )(x, w1, b1, w2, b2)
+    return out[:n]

@@ -1,0 +1,59 @@
+"""Pallas kernel: MLP-emulated softmax (the paper's §4.3 MLP_sm).
+
+Replaces softmax along the last axis of attention scores with a
+linear→ReLU→linear bottleneck of hidden dimension d (2..16).  On MPC this is
+the entire point of the paper — the k-dim nonlinearity becomes two tiny
+matmuls — and on TPU it means the whole emulation stays inside one VMEM
+tile: the (block_rows × k) score tile is read from HBM once, the (k×d) and
+(d×k) weight tiles are broadcast to every grid step, and no intermediate
+ever round-trips to HBM.
+
+Lowered with interpret=True (CPU PJRT cannot run Mosaic custom-calls);
+DESIGN.md §8 carries the TPU VMEM/MXU estimate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(s_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    s = s_ref[...]  # (block_rows, k)
+    h = jnp.maximum(s @ w1_ref[...] + b1_ref[...], 0.0)  # (block_rows, d)
+    o_ref[...] = h @ w2_ref[...] + b2_ref[...]  # (block_rows, k)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def mlp_softmax(scores, w1, b1, w2, b2, block_rows: int = 128):
+    """scores: (..., k) → same shape.  w1 (k,d) b1 (d,) w2 (d,k) b2 (k,)."""
+    orig_shape = scores.shape
+    k = orig_shape[-1]
+    rows = 1
+    for dim in orig_shape[:-1]:
+        rows *= dim
+    flat = scores.reshape(rows, k)
+    block = min(block_rows, rows)
+    # pad rows to a multiple of the block so the grid tiles exactly
+    pad = (-rows) % block
+    if pad:
+        flat = jnp.pad(flat, ((0, pad), (0, 0)))
+    grid = (flat.shape[0] // block,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, w1.shape[1]), lambda i: (0, 0)),
+            pl.BlockSpec((w1.shape[1],), lambda i: (0,)),
+            pl.BlockSpec((w1.shape[1], k), lambda i: (0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(flat.shape, scores.dtype),
+        interpret=True,
+    )(flat, w1, b1, w2, b2)
+    if pad:
+        out = out[:rows]
+    return out.reshape(orig_shape)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel, plus the exact nonlinearities.
+
+These are the single source of truth for correctness:
+  * pytest checks each Pallas kernel (interpret=True) against its ref here;
+  * the rust MPC engine is checked against HLO built from these refs;
+  * the exact_* functions are the target model's (non-approximated) math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Exact nonlinearities (target model / NoApprox ablation)
+# ---------------------------------------------------------------------------
+
+
+def exact_softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def exact_layernorm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def exact_entropy(logits):
+    """Prediction entropy of softmax(logits), natural log; (..., C) → (...)."""
+    p = exact_softmax(logits)
+    return -jnp.sum(p * jnp.log(jnp.clip(p, 1e-12, 1.0)), axis=-1)
+
+
+def gelu(x):
+    return 0.5 * x * (1.0 + jnp.tanh(
+        0.7978845608028654 * (x + 0.044715 * x ** 3)))
+
+
+# ---------------------------------------------------------------------------
+# MLP emulators (the paper's §4.3 approximators). Each MLP is
+# linear → ReLU → linear with hidden dimension d ∈ {2, 8, 16}.
+# ---------------------------------------------------------------------------
+
+
+def mlp_softmax_ref(scores, w1, b1, w2, b2):
+    """Emulated attention softmax along the last axis.
+
+    scores: (..., k); w1: (k, d); b1: (d,); w2: (d, k); b2: (k,)
+    Same input/output shape as softmax; the k-dim nonlinearity is collapsed
+    through a d-dim bottleneck (the paper's dimension-reduction insight).
+    """
+    h = jax.nn.relu(scores @ w1 + b1)
+    return h @ w2 + b2
+
+
+def layernorm_mlp_ref(x, gamma, beta, w1, b1, w2, b2):
+    """LayerNorm with the reciprocal-sqrt emulated by a scalar MLP.
+
+    The numerator (x - mean) is exact (cheap over MPC: sums and constant
+    multiplies); only 1/sqrt(var+eps) goes through the MLP.
+    x: (..., dm); gamma/beta: (dm,); w1: (1, d); b1: (d,); w2: (d, 1); b2: (1,)
+    """
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    inv = jax.nn.relu(var @ w1 + b1) @ w2 + b2  # (..., 1)
+    return (x - mu) * inv * gamma + beta
+
+
+def mlp_entropy_ref(logits, w1, b1, w2, b2):
+    """Fused softmax-over-logits + entropy head: (..., C) → (...)."""
+    h = jax.nn.relu(logits @ w1 + b1)
+    return (h @ w2 + b2)[..., 0]
+
+
+def proxy_attention_ref(q, k, v, w1, b1, w2, b2, scale):
+    """One fused proxy attention: scores → MLP-softmax → weighted values.
+
+    q, k, v: (..., s, dh) with matching leading dims.
+    """
+    scores = (q @ jnp.swapaxes(k, -1, -2)) * scale
+    probs = mlp_softmax_ref(scores, w1, b1, w2, b2)
+    return probs @ v
+
+
+def exact_attention_ref(q, k, v, scale):
+    scores = (q @ jnp.swapaxes(k, -1, -2)) * scale
+    return exact_softmax(scores) @ v

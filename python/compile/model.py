@@ -1,0 +1,297 @@
+"""L2: SelectFormer's JAX models — target transformers and proxy models.
+
+Two forward paths:
+
+  * target_forward — exact nonlinearities (softmax / LayerNorm / GeLU +
+    FFN).  This is the model being purchased-for, the Oracle selector, and
+    the NoApprox ablation.
+  * proxy_forward — the paper's §4.2 proxy: pruned layers/heads, FFN
+    removed, GeLU→ReLU, and all three nonlinearities emulated by MLPs
+    (MLP_sm, MLP_ln, MLP_se).  `use_pallas=True` routes the three
+    emulations through the L1 Pallas kernels; the default pure-jnp path is
+    numerically identical (see kernels/ref.py) and is what AOT lowering
+    uses for train/eval because pallas_call has no registered VJP.
+
+Parameter trees are plain nested dicts of jnp arrays; `flat_names` fixes a
+deterministic ordering shared with the rust runtime (sorted dotted names,
+the .sfw order).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels import mlp_softmax as k_mlp_softmax
+from .kernels import layernorm_mlp as k_layernorm_mlp
+from .kernels import mlp_entropy as k_mlp_entropy
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(rng, fan_in, fan_out):
+    std = (2.0 / (fan_in + fan_out)) ** 0.5
+    return rng.normal(0.0, std, size=(fan_in, fan_out)).astype(np.float32)
+
+
+def init_target_params(cfg, seed: int = 0) -> dict:
+    """Full target transformer: exact attention + FFN + classifier."""
+    rng = np.random.default_rng(seed)
+    dm, dff = cfg.d_model, cfg.d_ff
+    params = {
+        "emb": {
+            "tok": rng.normal(0, 0.02, size=(cfg.vocab, dm)).astype(np.float32),
+            "pos": rng.normal(0, 0.02, size=(cfg.seq_len, dm)).astype(np.float32),
+        },
+        "cls": {"w": _dense_init(rng, dm, cfg.n_classes),
+                "b": np.zeros(cfg.n_classes, np.float32)},
+    }
+    for i in range(cfg.n_layers):
+        params[f"layer{i}"] = {
+            "wq": _dense_init(rng, dm, dm), "bq": np.zeros(dm, np.float32),
+            "wk": _dense_init(rng, dm, dm), "bk": np.zeros(dm, np.float32),
+            "wv": _dense_init(rng, dm, dm), "bv": np.zeros(dm, np.float32),
+            "wo": _dense_init(rng, dm, dm), "bo": np.zeros(dm, np.float32),
+            "ln1": {"gamma": np.ones(dm, np.float32),
+                    "beta": np.zeros(dm, np.float32)},
+            "ln2": {"gamma": np.ones(dm, np.float32),
+                    "beta": np.zeros(dm, np.float32)},
+            "ffn": {"w1": _dense_init(rng, dm, dff),
+                    "b1": np.zeros(dff, np.float32),
+                    "w2": _dense_init(rng, dff, dm),
+                    "b2": np.zeros(dm, np.float32)},
+        }
+    return jax.tree.map(jnp.asarray, params)
+
+
+def init_mlp(rng, d_in: int, d_hidden: int, d_out: int) -> dict:
+    return {
+        "w1": _dense_init(rng, d_in, d_hidden),
+        "b1": np.zeros(d_hidden, np.float32),
+        "w2": _dense_init(rng, d_hidden, d_out),
+        "b2": np.zeros(d_out, np.float32),
+    }
+
+
+def init_proxy_params(pcfg, d_mlp: int, seed: int = 0) -> dict:
+    """Random proxy init (normally overwritten by pruning M_g — proxygen.py)."""
+    rng = np.random.default_rng(seed)
+    dm = pcfg.d_model
+    dh_total = pcfg.n_heads * pcfg.d_head
+    params = {
+        "emb": {
+            "tok": rng.normal(0, 0.02, size=(pcfg.vocab, dm)).astype(np.float32),
+            "pos": rng.normal(0, 0.02, size=(pcfg.seq_len, dm)).astype(np.float32),
+        },
+        "cls": {"w": _dense_init(rng, dm, pcfg.n_classes),
+                "b": np.zeros(pcfg.n_classes, np.float32)},
+        "mlp_se": init_mlp(rng, pcfg.n_classes, d_mlp, 1),
+    }
+    for i in range(pcfg.n_layers):
+        params[f"layer{i}"] = {
+            "wq": _dense_init(rng, dm, dh_total), "bq": np.zeros(dh_total, np.float32),
+            "wk": _dense_init(rng, dm, dh_total), "bk": np.zeros(dh_total, np.float32),
+            "wv": _dense_init(rng, dm, dh_total), "bv": np.zeros(dh_total, np.float32),
+            "wo": _dense_init(rng, dh_total, dm), "bo": np.zeros(dm, np.float32),
+            "ln1": {"gamma": np.ones(dm, np.float32),
+                    "beta": np.zeros(dm, np.float32)},
+            "mlp_sm": init_mlp(rng, pcfg.seq_len, d_mlp, pcfg.seq_len),
+            "mlp_ln": init_mlp(rng, 1, d_mlp, 1),
+        }
+    return jax.tree.map(jnp.asarray, params)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n_heads):
+    b, s, d = x.shape
+    return x.reshape(b, s, n_heads, d // n_heads).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def target_forward(params, tokens, cfg):
+    """Exact transformer classifier: tokens (B,S) int32 → logits (B,C)."""
+    x = params["emb"]["tok"][tokens] + params["emb"]["pos"][None, :, :]
+    scale = 1.0 / float(cfg.d_head) ** 0.5
+    for i in range(cfg.n_layers):
+        lp = params[f"layer{i}"]
+        q = _split_heads(x @ lp["wq"] + lp["bq"], cfg.n_heads)
+        k = _split_heads(x @ lp["wk"] + lp["bk"], cfg.n_heads)
+        v = _split_heads(x @ lp["wv"] + lp["bv"], cfg.n_heads)
+        attn = ref.exact_attention_ref(q, k, v, scale)
+        attn = _merge_heads(attn) @ lp["wo"] + lp["bo"]
+        x = ref.exact_layernorm(x + attn, lp["ln1"]["gamma"], lp["ln1"]["beta"])
+        ffn = ref.gelu(x @ lp["ffn"]["w1"] + lp["ffn"]["b1"])
+        ffn = ffn @ lp["ffn"]["w2"] + lp["ffn"]["b2"]
+        x = ref.exact_layernorm(x + ffn, lp["ln2"]["gamma"], lp["ln2"]["beta"])
+    pooled = jnp.mean(x, axis=1)
+    return pooled @ params["cls"]["w"] + params["cls"]["b"]
+
+
+def target_entropy(params, tokens, cfg):
+    """Oracle selector: exact prediction entropy of the target model."""
+    return ref.exact_entropy(target_forward(params, tokens, cfg))
+
+
+def proxy_forward(params, tokens, pcfg, use_pallas: bool = False,
+                  approx=("sm", "ln", "se")):
+    """Proxy classifier with MLP-emulated nonlinearities.
+
+    approx toggles individual emulations for the Table 2 ablations:
+      "sm" — attention softmax → MLP_sm      (else exact softmax)
+      "ln" — LayerNorm reciprocal → MLP_ln   (else exact LayerNorm)
+      "se" — softmax+entropy head → MLP_se   (else exact entropy)
+    Returns (logits, entropy).
+    """
+    x = params["emb"]["tok"][tokens] + params["emb"]["pos"][None, :, :]
+    scale = 1.0 / float(pcfg.d_head) ** 0.5
+    b, s = tokens.shape
+    for i in range(pcfg.n_layers):
+        lp = params[f"layer{i}"]
+        q = _split_heads(x @ lp["wq"] + lp["bq"], pcfg.n_heads)
+        k = _split_heads(x @ lp["wk"] + lp["bk"], pcfg.n_heads)
+        v = _split_heads(x @ lp["wv"] + lp["bv"], pcfg.n_heads)
+        sm = lp["mlp_sm"]
+        if "sm" in approx:
+            if use_pallas:
+                from .kernels import proxy_attention
+                dh = q.shape[-1]
+                flat = lambda t: t.reshape(b * pcfg.n_heads, s, dh)
+                attn = proxy_attention(flat(q), flat(k), flat(v),
+                                       sm["w1"], sm["b1"], sm["w2"], sm["b2"],
+                                       scale).reshape(b, pcfg.n_heads, s, dh)
+            else:
+                attn = ref.proxy_attention_ref(q, k, v, sm["w1"], sm["b1"],
+                                               sm["w2"], sm["b2"], scale)
+        else:
+            attn = ref.exact_attention_ref(q, k, v, scale)
+        attn = _merge_heads(attn) @ lp["wo"] + lp["bo"]
+        res = x + attn
+        ln, lnm = lp["ln1"], lp["mlp_ln"]
+        if "ln" in approx:
+            f = k_layernorm_mlp if use_pallas else ref.layernorm_mlp_ref
+            x = f(res, ln["gamma"], ln["beta"], lnm["w1"], lnm["b1"],
+                  lnm["w2"], lnm["b2"])
+        else:
+            x = ref.exact_layernorm(res, ln["gamma"], ln["beta"])
+    pooled = jnp.mean(x, axis=1)
+    logits = pooled @ params["cls"]["w"] + params["cls"]["b"]
+    se = params["mlp_se"]
+    if "se" in approx:
+        f = k_mlp_entropy if use_pallas else ref.mlp_entropy_ref
+        ent = f(logits, se["w1"], se["b1"], se["w2"], se["b2"])
+    else:
+        ent = ref.exact_entropy(logits)
+    return logits, ent
+
+
+# ---------------------------------------------------------------------------
+# Training (cross-entropy + Adam), used both by proxygen and the AOT
+# train_step artifact that the rust driver loops over.
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params)}
+
+
+def adam_update(params, grads, m, v, step, lr, b1=0.9, b2=0.999, eps=1e-8):
+    m = jax.tree.map(lambda a, g: b1 * a + (1 - b1) * g, m, grads)
+    v = jax.tree.map(lambda a, g: b2 * a + (1 - b2) * g * g, v, grads)
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    params = jax.tree.map(
+        lambda p, mm, vv: p - lr * (mm / bc1) / (jnp.sqrt(vv / bc2) + eps),
+        params, m, v)
+    return params, m, v
+
+
+def make_target_train_step(cfg, lr: float):
+    """(params, m, v, step, tokens, labels) → (params', m', v', loss)."""
+
+    def loss_fn(params, tokens, labels):
+        return cross_entropy(target_forward(params, tokens, cfg), labels)
+
+    def step_fn(params, m, v, step, tokens, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+        params, m, v = adam_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    return step_fn
+
+
+def make_proxy_train_step(pcfg, lr: float, approx=("sm", "ln", "se")):
+    """In-vivo finetuning step for a proxy (pure-jnp path; pallas kernels
+    have no VJP, and the two paths are numerically identical)."""
+
+    def loss_fn(params, tokens, labels):
+        logits, _ = proxy_forward(params, tokens, pcfg, approx=approx)
+        return cross_entropy(logits, labels)
+
+    def step_fn(params, m, v, step, tokens, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, labels)
+        params, m, v = adam_update(params, grads, m, v, step, lr)
+        return params, m, v, loss
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Flat calling conventions for AOT export (shared with rust/src/runtime)
+# ---------------------------------------------------------------------------
+
+
+def flat_names(params, prefix="") -> list:
+    """Sorted dotted names — the canonical .sfw / HLO argument order."""
+    out = []
+    for k, v in params.items():
+        name = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.extend(flat_names(v, name))
+        else:
+            out.append(name)
+    return sorted(out)
+
+
+def tree_to_flat(params) -> list:
+    names = flat_names(params)
+    return [get_by_name(params, n) for n in names]
+
+
+def flat_to_tree(flat, names) -> dict:
+    tree: dict = {}
+    for name, arr in zip(names, flat):
+        parts = name.split(".")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return tree
+
+
+def get_by_name(params, dotted: str):
+    node = params
+    for p in dotted.split("."):
+        node = node[p]
+    return node

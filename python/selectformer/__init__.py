@@ -1,0 +1,13 @@
+"""SelectFormer build-time pipeline.
+
+Everything in this package runs ONCE at `make artifacts`:
+  * synthesize the benchmark datasets,
+  * generate proxy models (M_g extraction, bootstrap finetune, ex-vivo /
+    in-vivo MLP training),
+  * export weights (.sfw), datasets (.bin) and HLO text artifacts consumed
+    by the rust coordinator.
+
+Nothing here is imported on the request path.
+"""
+
+from . import config  # noqa: F401

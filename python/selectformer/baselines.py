@@ -1,0 +1,114 @@
+"""Baseline nonlinearity approximations: MPCFormer (§5.3) and Bolt (§7.2).
+
+Both replace individual nonlinear operators with MPC-friendly polynomials —
+crucially WITHOUT the paper's dimension reduction, which is why they lose
+both speed (full-width reciprocal still needed) and, trained only on the
+tiny skewed S_boot, accuracy.
+
+  * MPCFormer "2Quad": softmax(x) ≈ (x+c)² / Σ(x+c)², then distill the
+    whole student on S_boot.
+  * Bolt: high-order polynomial exp approximation, exact normalization —
+    the highest-accuracy / highest-delay approximation point.
+
+Proxy architecture / init / bootstrap budget are identical to Ours (paper's
+fair-comparison protocol); only the nonlinearity and the training recipe
+differ.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.kernels import ref
+from . import proxygen
+from .config import ModelConfig, ProxySpec, proxy_model_config
+
+
+def quad_softmax(x, c: float = 5.0, axis=-1):
+    """MPCFormer's 2Quad: (x+c)² normalized. Cheap over MPC (squares +
+    one reciprocal) but a crude shape match for softmax."""
+    q = (x + c) ** 2
+    return q / (jnp.sum(q, axis=axis, keepdims=True) + 1e-6)
+
+
+def poly_exp(x, k: int = 6):
+    """Bolt-style high-accuracy polynomial exp: the degree-2^k limit
+    polynomial (1 + x/2^k)^(2^k), evaluated with k squarings — accurate on
+    the post-max-subtraction domain x ∈ [-2^k, 2]."""
+    x = jnp.clip(x, -float(1 << k) + 2.0, 2.0)
+    y = 1.0 + x / float(1 << k)
+    for _ in range(k):
+        y = y * y
+    return jnp.maximum(y, 1e-6)
+
+
+def poly_softmax(x, axis=-1):
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = poly_exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def baseline_proxy_forward(params, tokens, pcfg: ModelConfig, softmax_fn):
+    """Proxy trunk identical to Ours but with a polynomial softmax and
+    exact LayerNorm/entropy (what MPCFormer/Bolt would run over MPC)."""
+    x = params["emb"]["tok"][tokens] + params["emb"]["pos"][None]
+    scale = 1.0 / float(pcfg.d_head) ** 0.5
+    for i in range(pcfg.n_layers):
+        lp = params[f"layer{i}"]
+        q = M._split_heads(x @ lp["wq"] + lp["bq"], pcfg.n_heads)
+        k = M._split_heads(x @ lp["wk"] + lp["bk"], pcfg.n_heads)
+        v = M._split_heads(x @ lp["wv"] + lp["bv"], pcfg.n_heads)
+        scores = (q @ jnp.swapaxes(k, -1, -2)) * scale
+        attn = softmax_fn(scores) @ v
+        attn = M._merge_heads(attn) @ lp["wo"] + lp["bo"]
+        x = ref.exact_layernorm(x + attn, lp["ln1"]["gamma"],
+                                lp["ln1"]["beta"])
+    logits = jnp.mean(x, axis=1) @ params["cls"]["w"] + params["cls"]["b"]
+    return logits
+
+
+def generate_baseline_proxy(target_params, target_cfg: ModelConfig,
+                            boot_tokens, spec: ProxySpec, kind: str,
+                            seed=0, steps=200):
+    """Build + distill an MPCFormer / Bolt proxy on S_boot.
+
+    Returns (params, pcfg). params reuse Our proxy layout (mlp_* tensors
+    present but unused by the baseline forward) so the .sfw format and the
+    rust loader are shared.
+    """
+    softmax_fn = quad_softmax if kind == "mpcformer" else poly_softmax
+    depth = spec.n_layers
+    mg, mg_cfg = proxygen.extract_mg(target_params, target_cfg, depth)
+    teacher_logits = np.asarray(M.target_forward(
+        target_params, jnp.asarray(boot_tokens, jnp.int32), target_cfg))
+
+    rng = np.random.default_rng(seed)
+    dims = spec.d_mlp
+    mlps_sm = [jax.tree.map(jnp.asarray,
+                            M.init_mlp(rng, mg_cfg.seq_len, dims, mg_cfg.seq_len))
+               for _ in range(depth)]
+    mlps_ln = [jax.tree.map(jnp.asarray, M.init_mlp(rng, 1, dims, 1))
+               for _ in range(depth)]
+    mlp_se = jax.tree.map(jnp.asarray,
+                          M.init_mlp(rng, mg_cfg.n_classes, dims, 1))
+    proxy, pcfg = proxygen.prune_to_proxy(mg, mg_cfg, spec, mlps_sm, mlps_ln,
+                                          mlp_se)
+
+    def student_fwd(p, t):
+        return baseline_proxy_forward(p, t, pcfg, softmax_fn)
+
+    proxy, _ = proxygen.distill(proxy, student_fwd, teacher_logits,
+                                np.asarray(boot_tokens), steps=steps,
+                                seed=seed,
+                                cache_key=("baseline", kind, depth,
+                                           pcfg.n_heads, pcfg.n_classes,
+                                           pcfg.d_model))
+    return proxy, pcfg
+
+
+def baseline_entropy(params, tokens, pcfg, kind: str):
+    softmax_fn = quad_softmax if kind == "mpcformer" else poly_softmax
+    logits = baseline_proxy_forward(params, jnp.asarray(tokens, jnp.int32),
+                                    pcfg, softmax_fn)
+    return ref.exact_entropy(logits)

@@ -1,0 +1,161 @@
+"""Model / proxy / benchmark configuration.
+
+The paper evaluates DistilBERT (6L), BERT (12L) and ViT-small/base on five
+NLP and two CV benchmarks.  We reproduce at laptop scale (DESIGN.md §3):
+the *shape* of every experiment is preserved (class counts, imbalance,
+relative dataset sizes, proxy schedules ⟨l, w, d⟩), while d_model / seq_len
+/ dataset sizes are scaled so the full pipeline runs on one CPU box.
+Paper-scale shapes (768-dim, seq 128) are still exercised by the MPC cost
+benches, which need no training.
+"""
+
+from dataclasses import dataclass, field
+from typing import List, Tuple
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of a (target or backbone) transformer classifier."""
+
+    name: str
+    n_layers: int
+    n_heads: int
+    d_model: int
+    d_ff: int
+    vocab: int
+    seq_len: int
+    n_classes: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+@dataclass(frozen=True)
+class ProxySpec:
+    """One selection phase's proxy model: ⟨l layers, w heads, d mlp-hidden⟩."""
+
+    n_layers: int
+    n_heads: int
+    d_mlp: int
+
+    def tag(self) -> str:
+        return f"l{self.n_layers}w{self.n_heads}d{self.d_mlp}"
+
+
+@dataclass(frozen=True)
+class PhaseSchedule:
+    """A multi-phase selection schedule: per-phase proxy + selectivity.
+
+    selectivities are |S_i| / |S_{i-1}|; the product times |S_0| must end at
+    the purchase budget B (enforced by the rust planner, mirrored here for
+    the python-side experiments).
+    """
+
+    proxies: Tuple[ProxySpec, ...]
+    selectivities: Tuple[float, ...]
+
+    def __post_init__(self):
+        assert len(self.proxies) == len(self.selectivities)
+
+
+@dataclass(frozen=True)
+class BenchmarkSpec:
+    """A synthetic stand-in for one of the paper's benchmarks."""
+
+    name: str  # e.g. "sst2s" ~ SST2
+    paper_name: str
+    n_train: int
+    n_test: int
+    n_classes: int
+    # class prior skew: p(c) ∝ skew**c (normalized); skew=1 → balanced
+    skew: float
+    # probability that a token is a class-signal token (difficulty knob)
+    signal: float
+    modality: str = "nlp"  # "nlp" | "cv"
+    # fraction of each class's signal band shared with its neighbour —
+    # confusable classes are what give entropy selection its edge
+    overlap: float = 0.5
+
+
+# ---------------------------------------------------------------------------
+# Scaled-down target models (stand-ins for the paper's four targets)
+# ---------------------------------------------------------------------------
+
+VOCAB = 512
+SEQ_LEN = 32
+
+DISTILBERT_S = ModelConfig("distilbert_s", n_layers=4, n_heads=4, d_model=128,
+                           d_ff=256, vocab=VOCAB, seq_len=SEQ_LEN, n_classes=2)
+BERT_S = ModelConfig("bert_s", n_layers=6, n_heads=4, d_model=128,
+                     d_ff=256, vocab=VOCAB, seq_len=SEQ_LEN, n_classes=2)
+VIT_SMALL_S = ModelConfig("vit_small_s", n_layers=4, n_heads=4, d_model=128,
+                          d_ff=256, vocab=VOCAB, seq_len=SEQ_LEN, n_classes=10)
+VIT_BASE_S = ModelConfig("vit_base_s", n_layers=6, n_heads=4, d_model=128,
+                         d_ff=256, vocab=VOCAB, seq_len=SEQ_LEN, n_classes=10)
+
+TARGETS = {m.name: m for m in [DISTILBERT_S, BERT_S, VIT_SMALL_S, VIT_BASE_S]}
+
+# Paper-scale shapes for the MPC cost benches (no training involved).
+BERT_PAPER = ModelConfig("bert_paper", n_layers=12, n_heads=12, d_model=768,
+                         d_ff=3072, vocab=30522, seq_len=128, n_classes=2)
+DISTILBERT_PAPER = ModelConfig("distilbert_paper", n_layers=6, n_heads=12,
+                               d_model=768, d_ff=3072, vocab=30522,
+                               seq_len=128, n_classes=2)
+
+# ---------------------------------------------------------------------------
+# Benchmarks (sizes ≈ paper / 10, relative ordering preserved)
+# ---------------------------------------------------------------------------
+
+# knobs calibrated so that maximum-entropy selection visibly beats Random
+# at a 20% budget while Random is far from saturated (mirrors the paper's
+# imbalanced-benchmark construction; see EXPERIMENTS.md §Calibration)
+BENCHMARKS: List[BenchmarkSpec] = [
+    BenchmarkSpec("sst2s", "SST2", n_train=4200, n_test=800, n_classes=2,
+                  skew=0.10, signal=0.10),
+    BenchmarkSpec("qnlis", "QNLI", n_train=5800, n_test=800, n_classes=2,
+                  skew=0.12, signal=0.11),
+    BenchmarkSpec("qqps", "QQP", n_train=8000, n_test=1000, n_classes=2,
+                  skew=0.06, signal=0.10),
+    BenchmarkSpec("agnewss", "AGNEWS", n_train=4000, n_test=800, n_classes=4,
+                  skew=0.35, signal=0.12),
+    BenchmarkSpec("yelps", "YELP", n_train=8000, n_test=1000, n_classes=5,
+                  skew=0.40, signal=0.09),
+    BenchmarkSpec("cifar10s", "CIFAR10", n_train=2400, n_test=600,
+                  n_classes=10, skew=0.55, signal=0.12, modality="cv"),
+    BenchmarkSpec("cifar100s", "CIFAR100", n_train=3000, n_test=800,
+                  n_classes=20, skew=0.70, signal=0.14, modality="cv"),
+]
+
+BENCHMARK_BY_NAME = {b.name: b for b in BENCHMARKS}
+
+# Default schedules from the paper (§5.1): phase-1 = 1 layer (NLP) or
+# 3 layers (CV) with d_mlp=2; phase-2 = 3 layers with d_mlp=16.
+# Head counts follow Table 3's caption (1 head then full width).
+def default_schedule(modality: str, n_heads_full: int, budget: float) -> PhaseSchedule:
+    """Two-phase default: 100% → 1.5*budget → budget."""
+    mid = min(1.0, 1.5 * budget)
+    p1_layers = 1 if modality == "nlp" else 3
+    return PhaseSchedule(
+        proxies=(ProxySpec(p1_layers, 1, 2), ProxySpec(3, n_heads_full, 16)),
+        selectivities=(mid, budget / mid),
+    )
+
+
+def proxy_model_config(base: ModelConfig, spec: ProxySpec) -> ModelConfig:
+    """The transformer shape of a proxy extracted from `base`.
+
+    Proxies keep d_model (weights are copied from M_g) but prune heads and
+    layers; FFN is removed entirely so d_ff is irrelevant (kept 0).
+    """
+    return ModelConfig(
+        name=f"{base.name}_proxy_{spec.tag()}",
+        n_layers=spec.n_layers,
+        n_heads=spec.n_heads,
+        d_model=base.d_model,
+        d_ff=0,
+        vocab=base.vocab,
+        seq_len=base.seq_len,
+        n_classes=base.n_classes,
+    )

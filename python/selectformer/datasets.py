@@ -1,0 +1,136 @@
+"""Synthetic imbalanced benchmarks.
+
+The paper selects from UNLABELED, class-imbalanced corpora (SST2, QNLI, QQP,
+AGNEWS, YELP, CIFAR-10/100 with datapoints removed to skew the label
+distribution).  We have no license to ship those corpora, so we synthesize
+token-sequence classification tasks with the same statistical structure
+(DESIGN.md §3):
+
+  * each class c owns a disjoint band of "signal" tokens;
+  * a sequence is background noise with each position independently replaced
+    by a signal token of its class with probability `signal`;
+  * class priors follow a geometric skew  p(c) ∝ skew**c, mirroring the
+    paper's imbalance construction;
+  * "cv" benchmarks are identical machinery over quantized-patch ids (the
+    ViT view of an image is just a token sequence).
+
+What matters for reproducing the paper is *relative entropy ranking under
+imbalance* — rare-class and low-signal examples carry high prediction
+entropy, so maximum-entropy selection beats Random — and this construction
+preserves exactly that.
+"""
+
+from dataclasses import dataclass
+from pathlib import Path
+import struct
+
+import numpy as np
+
+from .config import BenchmarkSpec, VOCAB, SEQ_LEN
+
+MAGIC = b"SFDS"
+VERSION = 1
+
+# the first BACKGROUND tokens of the vocab are class-neutral noise
+BACKGROUND = VOCAB // 2
+
+
+@dataclass
+class Dataset:
+    name: str
+    tokens: np.ndarray  # (n, seq_len) uint32
+    labels: np.ndarray  # (n,) uint32
+    n_classes: int
+    vocab: int
+
+    def __len__(self) -> int:
+        return len(self.labels)
+
+
+def class_priors(n_classes: int, skew: float) -> np.ndarray:
+    p = skew ** np.arange(n_classes, dtype=np.float64)
+    return p / p.sum()
+
+
+def signal_band(c: int, n_classes: int, overlap: float = 0.0) -> tuple[int, int]:
+    """Token-id band [lo, hi) owned by class c.
+
+    With overlap o > 0, adjacent classes share a fraction o of their band
+    (bands are packed at stride (1−o)·width), making classes confusable —
+    the ambiguity maximum-entropy selection exploits.
+    """
+    width = (VOCAB - BACKGROUND) // n_classes
+    stride = max(1, int(width * (1.0 - overlap)))
+    lo = BACKGROUND + c * stride
+    hi = min(lo + width, VOCAB)
+    return lo, hi
+
+
+def synth_split(spec: BenchmarkSpec, n: int, seed: int,
+                balanced: bool = False) -> Dataset:
+    """Synthesize one split. Test splits are balanced (paper keeps the
+    original test sets); train splits follow the skewed prior."""
+    rng = np.random.default_rng(seed)
+    priors = (np.full(spec.n_classes, 1.0 / spec.n_classes)
+              if balanced else class_priors(spec.n_classes, spec.skew))
+    labels = rng.choice(spec.n_classes, size=n, p=priors).astype(np.uint32)
+    tokens = rng.integers(0, BACKGROUND, size=(n, SEQ_LEN)).astype(np.uint32)
+    # per-example difficulty: examples vary in how much signal they carry,
+    # which is what gives the entropy ranking something to find
+    difficulty = rng.uniform(0.35, 1.65, size=n)
+    for c in range(spec.n_classes):
+        idx = np.where(labels == c)[0]
+        if len(idx) == 0:
+            continue
+        lo, hi = signal_band(c, spec.n_classes, spec.overlap)
+        sig = rng.random((len(idx), SEQ_LEN)) < (
+            spec.signal * difficulty[idx][:, None])
+        repl = rng.integers(lo, hi, size=(len(idx), SEQ_LEN)).astype(np.uint32)
+        tokens[idx] = np.where(sig, repl, tokens[idx])
+    return Dataset(spec.name, tokens, labels, spec.n_classes, VOCAB)
+
+
+def synth_benchmark(spec: BenchmarkSpec, seed: int = 0) -> tuple[Dataset, Dataset]:
+    train = synth_split(spec, spec.n_train, seed * 7919 + 11, balanced=False)
+    test = synth_split(spec, spec.n_test, seed * 7919 + 13, balanced=True)
+    return train, test
+
+
+def pretrain_corpus(n: int, n_classes: int, seed: int = 0) -> Dataset:
+    """Balanced generic corpus used to 'pretrain' target models (stand-in
+    for the paper's off-the-shelf pretrained BERT/ViT checkpoints)."""
+    spec = BenchmarkSpec("pretrain", "PRETRAIN", n_train=n, n_test=0,
+                         n_classes=n_classes, skew=1.0, signal=0.15)
+    return synth_split(spec, n, seed * 104729 + 3, balanced=True)
+
+
+# ---------------------------------------------------------------------------
+# .bin interchange (read by rust/src/data/loader.rs)
+# ---------------------------------------------------------------------------
+
+def write_bin(ds: Dataset, path: Path) -> None:
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    n, seq_len = ds.tokens.shape
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<IIIII", VERSION, n, seq_len, ds.n_classes,
+                            ds.vocab))
+        # row-major: label then tokens, all u32 LE
+        inter = np.empty((n, seq_len + 1), dtype="<u4")
+        inter[:, 0] = ds.labels
+        inter[:, 1:] = ds.tokens
+        f.write(inter.tobytes())
+
+
+def read_bin(path: Path) -> Dataset:
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == MAGIC, f"bad magic {magic!r} in {path}"
+        version, n, seq_len, n_classes, vocab = struct.unpack("<IIIII",
+                                                              f.read(20))
+        assert version == VERSION
+        flat = np.frombuffer(f.read(n * (seq_len + 1) * 4), dtype="<u4")
+    inter = flat.reshape(n, seq_len + 1)
+    return Dataset(Path(path).stem, inter[:, 1:].copy(), inter[:, 0].copy(),
+                   n_classes, vocab)

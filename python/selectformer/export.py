@@ -1,0 +1,90 @@
+"""Artifact writers: .sfw weight files and HLO text.
+
+.sfw layout (read by rust/src/models/weights.rs):
+    magic  b"SFWT"
+    u32    version (1)
+    u32    tensor count
+    per tensor:
+        u32      name length, then utf-8 name
+        u8       dtype (0 = f32)
+        u32      rank
+        u64*rank dims
+        f32 LE   data (row-major)
+
+Tensors are written in sorted-name order; rust keeps them in a map so the
+order is informational only, but determinism keeps artifacts diffable.
+"""
+
+from pathlib import Path
+import struct
+
+import numpy as np
+
+MAGIC = b"SFWT"
+VERSION = 1
+DTYPE_F32 = 0
+
+
+def flatten_params(params, prefix="") -> dict:
+    """Flatten a nested dict-of-arrays into {dotted.name: np.ndarray}."""
+    out = {}
+    for k, v in params.items():
+        name = f"{prefix}.{k}" if prefix else str(k)
+        if isinstance(v, dict):
+            out.update(flatten_params(v, name))
+        else:
+            out[name] = np.asarray(v, dtype=np.float32)
+    return out
+
+
+def write_sfw(params, path: Path) -> None:
+    flat = flatten_params(params) if not _is_flat(params) else {
+        k: np.asarray(v, dtype=np.float32) for k, v in params.items()}
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(flat)))
+        for name in sorted(flat):
+            arr = np.ascontiguousarray(flat[name], dtype="<f4")
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BI", DTYPE_F32, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(arr.tobytes())
+
+
+def read_sfw(path: Path) -> dict:
+    out = {}
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, f"bad magic in {path}"
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == VERSION
+        for _ in range(count):
+            (nlen,) = struct.unpack("<I", f.read(4))
+            name = f.read(nlen).decode("utf-8")
+            dtype, rank = struct.unpack("<BI", f.read(5))
+            assert dtype == DTYPE_F32
+            dims = struct.unpack(f"<{rank}Q", f.read(8 * rank))
+            size = int(np.prod(dims)) if rank else 1
+            data = np.frombuffer(f.read(4 * size), dtype="<f4")
+            out[name] = data.reshape(dims).copy()
+    return out
+
+
+def _is_flat(params) -> bool:
+    return all(not isinstance(v, dict) for v in params.values())
+
+
+def unflatten_params(flat: dict) -> dict:
+    """Inverse of flatten_params."""
+    out: dict = {}
+    for name, arr in flat.items():
+        parts = name.split(".")
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = arr
+    return out

@@ -1,0 +1,98 @@
+"""Repair pass: re-fit the MLP entropy head of already-exported proxies.
+
+Cheap (head-only — no trunk retraining): for every proxy_*.sfw in the
+artifacts tree, compute the trunk's logits on its cell's bootstrap sample,
+check corr(MLP_se output, exact entropy), and re-fit the head (analytic
+init + MSE) when the ranking is weak or inverted.  Run:
+
+    cd python && python -m selectformer.repair [--root ../artifacts]
+"""
+
+import argparse
+from dataclasses import replace as dc_replace
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from compile.kernels import ref
+from . import config as C
+from . import datasets as D
+from . import export as E
+from . import proxygen as PG
+
+
+def load_params(path: Path):
+    flat = E.read_sfw(path)
+    meta = {k[5:]: float(np.asarray(v).ravel()[0]) for k, v in flat.items() if k.startswith("meta.")}
+    params = E.unflatten_params(
+        {k: v for k, v in flat.items() if not k.startswith("meta.")})
+    return jax.tree.map(jnp.asarray, params), meta
+
+
+def pcfg_from_meta(base: C.ModelConfig, meta, n_classes: int):
+    return dc_replace(
+        base,
+        n_layers=int(meta["n_layers"]),
+        n_heads=int(meta["n_heads"]),
+        d_ff=0,
+        n_classes=n_classes,
+    )
+
+
+def repair_proxy(path: Path, boot_tokens, base_cfg, n_classes: int) -> str:
+    params, meta = load_params(path)
+    if int(meta.get("variant", 0)) != 0:
+        return "skip (baseline variant)"
+    pcfg = pcfg_from_meta(base_cfg, meta, n_classes)
+    toks = jnp.asarray(boot_tokens, jnp.int32)
+    logits, _ = M.proxy_forward(params, toks, pcfg)
+    target = ref.exact_entropy(logits)
+    corr = PG._head_corr(params["mlp_se"], logits, target)
+    if corr >= 0.6:
+        return f"ok (corr {corr:+.3f})"
+    fixed = PG._fit_entropy_head(params["mlp_se"], logits, target)
+    new_corr = PG._head_corr(fixed, logits, target)
+    params = dict(params)
+    params["mlp_se"] = fixed
+    flat = E.flatten_params(params)
+    for k, v in meta.items():
+        flat[f"meta.{k}"] = np.float32(v)
+    E.write_sfw(flat, path)
+    return f"REPAIRED (corr {corr:+.3f} → {new_corr:+.3f})"
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--root", default="../artifacts")
+    args = ap.parse_args()
+    root = Path(args.root)
+    for target_name, base in C.TARGETS.items():
+        tdir = root / target_name
+        if not tdir.exists():
+            continue
+        for cdir in sorted(tdir.iterdir()):
+            bench = cdir.name
+            if bench not in C.BENCHMARK_BY_NAME:
+                continue
+            spec = C.BENCHMARK_BY_NAME[bench]
+            train = D.read_bin(root / "data" / f"{bench}.train.bin")
+            import struct
+            boot_path = cdir / "boot_idx.bin"
+            if not boot_path.exists():
+                continue
+            raw = boot_path.read_bytes()
+            n = struct.unpack("<I", raw[8:12])[0]
+            idx = np.frombuffer(raw[12:12 + 4 * n], dtype="<u4")
+            boot = train.tokens[idx]
+            cfg = dc_replace(base, n_classes=spec.n_classes)
+            for proxy in sorted(cdir.glob("proxy_*.sfw")):
+                status = repair_proxy(proxy, boot, cfg, spec.n_classes)
+                print(f"{target_name}/{bench}/{proxy.name}: {status}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""MPCFormer / Bolt baseline approximations."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model as M
+from selectformer import baselines as BL
+from selectformer import proxygen as PG
+from selectformer.config import ModelConfig, ProxySpec
+
+TINY = ModelConfig("tiny", n_layers=2, n_heads=2, d_model=32, d_ff=64,
+                   vocab=64, seq_len=8, n_classes=2)
+
+
+def test_quad_softmax_normalizes_but_distorts():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 1, size=(16, 8)), jnp.float32)
+    q = BL.quad_softmax(x)
+    np.testing.assert_allclose(np.asarray(q).sum(-1), np.ones(16), rtol=1e-3)
+    # 2Quad is a crude softmax: correlated but visibly off
+    s = jax.nn.softmax(x, -1)
+    err = float(jnp.mean(jnp.abs(q - s)))
+    assert 0.005 < err < 0.5, err
+
+
+def test_poly_softmax_close_to_softmax():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 2, size=(16, 8)), jnp.float32)
+    p = BL.poly_softmax(x)
+    s = jax.nn.softmax(x, -1)
+    err = float(jnp.max(jnp.abs(p - s)))
+    assert err < 0.05, err  # Bolt = high-accuracy approximation
+
+
+def test_poly_exp_positive_and_monotone():
+    x = jnp.linspace(-8, 1.5, 50)
+    e = np.asarray(BL.poly_exp(x))
+    assert (e > 0).all()
+    assert (np.diff(e) >= -1e-6).all()
+
+
+def test_generate_baseline_proxy_runs_and_distills():
+    rng = np.random.default_rng(2)
+    tp = M.init_target_params(TINY, 1)
+    boot = rng.integers(0, TINY.vocab, size=(96, TINY.seq_len)).astype(np.int32)
+    for kind in ("mpcformer", "bolt"):
+        proxy, pcfg = BL.generate_baseline_proxy(
+            tp, TINY, boot, ProxySpec(1, 1, 2), kind, seed=0, steps=40)
+        ent = BL.baseline_entropy(proxy, boot[:8], pcfg, kind)
+        assert ent.shape == (8,)
+        assert np.isfinite(np.asarray(ent)).all()
+
+
+def test_baseline_forward_uses_its_softmax():
+    rng = np.random.default_rng(3)
+    tp = M.init_target_params(TINY, 1)
+    mg, mg_cfg = PG.extract_mg(tp, TINY, 1)
+    spec = ProxySpec(1, 1, 2)
+    mlps_sm = [jax.tree.map(jnp.asarray, M.init_mlp(rng, 8, 2, 8))]
+    mlps_ln = [jax.tree.map(jnp.asarray, M.init_mlp(rng, 1, 2, 1))]
+    mlp_se = jax.tree.map(jnp.asarray, M.init_mlp(rng, 2, 2, 1))
+    proxy, pcfg = PG.prune_to_proxy(mg, mg_cfg, spec, mlps_sm, mlps_ln, mlp_se)
+    toks = jnp.asarray(rng.integers(0, 64, size=(4, 8)), jnp.int32)
+    a = BL.baseline_proxy_forward(proxy, toks, pcfg, BL.quad_softmax)
+    b = BL.baseline_proxy_forward(proxy, toks, pcfg, BL.poly_softmax)
+    assert not np.allclose(np.asarray(a), np.asarray(b))

@@ -1,0 +1,84 @@
+"""Synthetic benchmark construction + .bin interchange."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from selectformer import datasets as D
+from selectformer.config import BENCHMARKS, BenchmarkSpec
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def test_train_split_is_skewed_test_is_balanced():
+    spec = BENCHMARKS[0]  # sst2s, skew 0.10
+    tr, te = D.synth_benchmark(spec, seed=0)
+    htr = np.bincount(tr.labels, minlength=2)
+    hte = np.bincount(te.labels, minlength=2)
+    assert htr[0] > 5 * htr[1], htr
+    assert 0.7 < hte[0] / max(hte[1], 1) < 1.4, hte
+
+
+def test_class_priors_normalized():
+    p = D.class_priors(5, 0.4)
+    assert abs(p.sum() - 1.0) < 1e-12
+    assert all(p[i] > p[i + 1] for i in range(4))
+
+
+@given(c=st.integers(0, 4), overlap=st.sampled_from([0.0, 0.3, 0.5]))
+def test_signal_bands_in_vocab(c, overlap):
+    lo, hi = D.signal_band(c, 5, overlap)
+    assert D.BACKGROUND <= lo < hi <= D.VOCAB
+
+
+def test_signal_bands_overlap_adjacent():
+    lo0, hi0 = D.signal_band(0, 2, 0.5)
+    lo1, hi1 = D.signal_band(1, 2, 0.5)
+    assert lo1 < hi0, "bands must overlap at overlap=0.5"
+    lo0, hi0 = D.signal_band(0, 2, 0.0)
+    lo1, hi1 = D.signal_band(1, 2, 0.0)
+    assert lo1 >= hi0, "bands must be disjoint at overlap=0"
+
+
+def test_signal_correlates_with_class():
+    spec = BenchmarkSpec("t", "T", 2000, 0, 2, skew=1.0, signal=0.15)
+    ds = D.synth_split(spec, 2000, 7, balanced=True)
+    lo, hi = D.signal_band(1, 2, spec.overlap)
+    # the top of class-1's band is exclusive to class 1
+    excl_lo = max(lo, D.signal_band(0, 2, spec.overlap)[1])
+    counts = [0, 0]
+    for i in range(len(ds)):
+        counts[ds.labels[i]] += int(
+            np.sum((ds.tokens[i] >= excl_lo) & (ds.tokens[i] < hi)))
+    assert counts[1] > 5 * max(counts[0], 1), counts
+
+
+@given(seed=st.integers(0, 1000))
+def test_bin_roundtrip(seed):
+    import tempfile
+    from pathlib import Path
+
+    spec = BenchmarkSpec("t", "T", 64, 0, 3, skew=0.5, signal=0.2)
+    ds = D.synth_split(spec, 64, seed)
+    with tempfile.TemporaryDirectory() as d:
+        p = Path(d) / "t.bin"
+        D.write_bin(ds, p)
+        back = D.read_bin(p)
+    np.testing.assert_array_equal(ds.tokens, back.tokens)
+    np.testing.assert_array_equal(ds.labels, back.labels)
+    assert back.n_classes == 3
+    assert back.vocab == D.VOCAB
+
+
+def test_difficulty_varies_signal_density():
+    spec = BenchmarkSpec("t", "T", 4000, 0, 2, skew=1.0, signal=0.2)
+    ds = D.synth_split(spec, 4000, 3, balanced=True)
+    dens = (ds.tokens >= D.BACKGROUND).mean(axis=1)
+    # per-example signal density should spread widely (difficulty knob)
+    assert dens.std() > 0.05, dens.std()
+
+
+def test_pretrain_corpus_balanced():
+    ds = D.pretrain_corpus(1000, 8, seed=1)
+    h = np.bincount(ds.labels, minlength=8)
+    assert h.min() > 60, h

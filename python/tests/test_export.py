@@ -1,0 +1,65 @@
+"""`.sfw` writer/reader + param tree flattening (the rust interchange)."""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from selectformer import export as E
+
+settings.register_profile("ci", max_examples=20, deadline=None)
+settings.load_profile("ci")
+
+
+def test_flatten_unflatten_roundtrip():
+    tree = {
+        "emb": {"tok": np.ones((3, 2), np.float32)},
+        "layer0": {"ln1": {"gamma": np.zeros(4, np.float32)}},
+        "cls": {"b": np.asarray([1.0, 2.0], np.float32)},
+    }
+    flat = E.flatten_params(tree)
+    assert set(flat) == {"emb.tok", "layer0.ln1.gamma", "cls.b"}
+    back = E.unflatten_params(flat)
+    np.testing.assert_array_equal(back["emb"]["tok"], tree["emb"]["tok"])
+    np.testing.assert_array_equal(
+        back["layer0"]["ln1"]["gamma"], tree["layer0"]["ln1"]["gamma"])
+
+
+@given(
+    n_tensors=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sfw_roundtrip(n_tensors, seed):
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for i in range(n_tensors):
+        rank = rng.integers(0, 4)
+        shape = tuple(int(rng.integers(1, 5)) for _ in range(rank))
+        tensors[f"t{i}.x"] = rng.normal(size=shape).astype(np.float32)
+    with tempfile.TemporaryDirectory() as d:
+        p = Path(d) / "w.sfw"
+        E.write_sfw(tensors, p)
+        back = E.read_sfw(p)
+    assert set(back) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(np.atleast_1d(tensors[k]),
+                                      back[k].reshape(np.atleast_1d(tensors[k]).shape))
+
+
+def test_sfw_is_sorted_and_deterministic():
+    t = {"b.x": np.zeros(2, np.float32), "a.y": np.ones(3, np.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        p1, p2 = Path(d) / "1.sfw", Path(d) / "2.sfw"
+        E.write_sfw(t, p1)
+        E.write_sfw(dict(reversed(list(t.items()))), p2)
+        assert p1.read_bytes() == p2.read_bytes()
+
+
+def test_sfw_rejects_bad_magic():
+    import pytest
+    with tempfile.TemporaryDirectory() as d:
+        p = Path(d) / "bad.sfw"
+        p.write_bytes(b"NOPE" + b"\x00" * 16)
+        with pytest.raises(AssertionError):
+            E.read_sfw(p)

@@ -1,0 +1,151 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles — the CORE L1
+correctness signal.  hypothesis sweeps shapes/dtypes/magnitudes."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    layernorm_mlp,
+    mlp_entropy,
+    mlp_softmax,
+    proxy_attention,
+    ref,
+)
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def arr(rng, shape, scale=1.0, dtype=np.float32):
+    return jnp.asarray(rng.normal(0, scale, size=shape), dtype)
+
+
+def mlp_weights(rng, d_in, d, d_out, dtype=np.float32):
+    return (
+        arr(rng, (d_in, d), 0.5, dtype),
+        arr(rng, (d,), 0.1, dtype),
+        arr(rng, (d, d_out), 0.5, dtype),
+        arr(rng, (d_out,), 0.1, dtype),
+    )
+
+
+@given(
+    rows=st.integers(1, 80),
+    k=st.sampled_from([4, 16, 32, 128]),
+    d=st.sampled_from([2, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+    block=st.sampled_from([8, 64, 128]),
+)
+def test_mlp_softmax_matches_ref(rows, k, d, seed, block):
+    rng = np.random.default_rng(seed)
+    scores = arr(rng, (rows, k), 2.0)
+    w1, b1, w2, b2 = mlp_weights(rng, k, d, k)
+    got = mlp_softmax(scores, w1, b1, w2, b2, block_rows=block)
+    want = ref.mlp_softmax_ref(scores, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    lead=st.sampled_from([(3,), (2, 5), (2, 3, 7)]),
+    k=st.sampled_from([8, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_softmax_nd_shapes(lead, k, seed):
+    rng = np.random.default_rng(seed)
+    scores = arr(rng, lead + (k,), 1.0)
+    w1, b1, w2, b2 = mlp_weights(rng, k, 4, k)
+    got = mlp_softmax(scores, w1, b1, w2, b2)
+    want = ref.mlp_softmax_ref(scores, w1, b1, w2, b2)
+    assert got.shape == scores.shape
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    n=st.integers(1, 300),
+    c=st.sampled_from([2, 4, 5, 10, 20]),
+    d=st.sampled_from([2, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mlp_entropy_matches_ref(n, c, d, seed):
+    rng = np.random.default_rng(seed)
+    logits = arr(rng, (n, c), 3.0)
+    w1, b1, w2, b2 = mlp_weights(rng, c, d, 1)
+    got = mlp_entropy(logits, w1, b1, w2, b2)
+    want = ref.mlp_entropy_ref(logits, w1, b1, w2, b2)
+    assert got.shape == (n,)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@given(
+    rows=st.integers(1, 60),
+    dm=st.sampled_from([16, 64, 128]),
+    d=st.sampled_from([2, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_layernorm_mlp_matches_ref(rows, dm, d, seed):
+    rng = np.random.default_rng(seed)
+    x = arr(rng, (rows, dm), 2.0)
+    gamma = arr(rng, (dm,), 0.3) + 1.0
+    beta = arr(rng, (dm,), 0.2)
+    w1, b1, w2, b2 = mlp_weights(rng, 1, d, 1)
+    got = layernorm_mlp(x, gamma, beta, w1, b1, w2, b2)
+    want = ref.layernorm_mlp_ref(x, gamma, beta, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@given(
+    bh=st.integers(1, 12),
+    s=st.sampled_from([8, 16, 32]),
+    dh=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([2, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_proxy_attention_matches_ref(bh, s, dh, d, seed):
+    rng = np.random.default_rng(seed)
+    q = arr(rng, (bh, s, dh), 1.0)
+    k = arr(rng, (bh, s, dh), 1.0)
+    v = arr(rng, (bh, s, dh), 1.0)
+    w1, b1, w2, b2 = mlp_weights(rng, s, d, s)
+    scale = 1.0 / float(dh) ** 0.5
+    got = proxy_attention(q, k, v, w1, b1, w2, b2, scale)
+    want = ref.proxy_attention_ref(q, k, v, w1, b1, w2, b2, scale)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.parametrize("block_q", [8, 16, 32])
+def test_proxy_attention_blocking_invariance(block_q):
+    """Different q-block tilings must produce identical numerics."""
+    rng = np.random.default_rng(0)
+    q = arr(rng, (4, 32, 16))
+    k = arr(rng, (4, 32, 16))
+    v = arr(rng, (4, 32, 16))
+    w1, b1, w2, b2 = mlp_weights(rng, 32, 4, 32)
+    a = proxy_attention(q, k, v, w1, b1, w2, b2, 0.25, block_q=block_q)
+    b = proxy_attention(q, k, v, w1, b1, w2, b2, 0.25, block_q=32)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_mlp_softmax_row_padding():
+    """Row counts that don't divide the block are padded then sliced."""
+    rng = np.random.default_rng(1)
+    scores = arr(rng, (67, 16))
+    w1, b1, w2, b2 = mlp_weights(rng, 16, 4, 16)
+    got = mlp_softmax(scores, w1, b1, w2, b2, block_rows=32)
+    want = ref.mlp_softmax_ref(scores, w1, b1, w2, b2)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_exact_refs_sanity():
+    """The exact oracles themselves behave: softmax sums to 1, entropy is
+    maximal for uniform logits, layernorm standardizes."""
+    rng = np.random.default_rng(2)
+    x = arr(rng, (5, 8), 2.0)
+    p = ref.exact_softmax(x)
+    np.testing.assert_allclose(p.sum(-1), np.ones(5), rtol=1e-5)
+    ent_flat = ref.exact_entropy(jnp.zeros((1, 8)))
+    assert abs(float(ent_flat[0]) - np.log(8)) < 1e-5
+    ln = ref.exact_layernorm(x, jnp.ones(8), jnp.zeros(8))
+    np.testing.assert_allclose(np.mean(np.asarray(ln), -1), np.zeros(5), atol=1e-5)
+    np.testing.assert_allclose(np.std(np.asarray(ln), -1), np.ones(5), atol=1e-2)

@@ -1,0 +1,109 @@
+"""L2 model tests: shapes, pallas/jnp parity, training dynamics, the flat
+calling convention shared with the rust runtime."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from selectformer.config import DISTILBERT_S, ProxySpec, proxy_model_config
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+CFG = DISTILBERT_S
+
+
+def toks(rng, b, cfg=CFG):
+    return jnp.asarray(rng.integers(0, cfg.vocab, size=(b, cfg.seq_len)), jnp.int32)
+
+
+def test_target_forward_shapes():
+    rng = np.random.default_rng(0)
+    p = M.init_target_params(CFG, 0)
+    logits = M.target_forward(p, toks(rng, 4), CFG)
+    assert logits.shape == (4, CFG.n_classes)
+    ent = M.target_entropy(p, toks(rng, 4), CFG)
+    assert ent.shape == (4,)
+    assert bool(jnp.all(ent >= -1e-4))
+
+
+@given(heads=st.sampled_from([1, 2, 4]), layers=st.integers(1, 3),
+       d=st.sampled_from([2, 8, 16]))
+def test_proxy_forward_shapes(heads, layers, d):
+    rng = np.random.default_rng(layers * 100 + heads)
+    spec = ProxySpec(layers, heads, d)
+    pcfg = proxy_model_config(CFG, spec)
+    pp = M.init_proxy_params(pcfg, d, 0)
+    logits, ent = M.proxy_forward(pp, toks(rng, 3), pcfg)
+    assert logits.shape == (3, pcfg.n_classes)
+    assert ent.shape == (3,)
+
+
+def test_proxy_pallas_equals_jnp():
+    rng = np.random.default_rng(1)
+    spec = ProxySpec(2, 2, 8)
+    pcfg = proxy_model_config(CFG, spec)
+    pp = M.init_proxy_params(pcfg, spec.d_mlp, 3)
+    t = toks(rng, 5)
+    l1, e1 = M.proxy_forward(pp, t, pcfg, use_pallas=False)
+    l2, e2 = M.proxy_forward(pp, t, pcfg, use_pallas=True)
+    np.testing.assert_allclose(l1, l2, rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(e1, e2, rtol=5e-4, atol=5e-4)
+
+
+def test_ablation_toggles_change_path():
+    rng = np.random.default_rng(2)
+    spec = ProxySpec(1, 1, 2)
+    pcfg = proxy_model_config(CFG, spec)
+    pp = M.init_proxy_params(pcfg, 2, 0)
+    t = toks(rng, 3)
+    _, ours = M.proxy_forward(pp, t, pcfg, approx=("sm", "ln", "se"))
+    _, nosm = M.proxy_forward(pp, t, pcfg, approx=("ln", "se"))
+    _, none = M.proxy_forward(pp, t, pcfg, approx=())
+    assert not np.allclose(ours, nosm)
+    assert bool(jnp.all(none >= -1e-4))  # exact entropy is nonnegative
+
+
+def test_train_step_reduces_loss():
+    rng = np.random.default_rng(3)
+    p = M.init_target_params(CFG, 1)
+    step = jax.jit(M.make_target_train_step(CFG, 1e-3))
+    opt = M.adam_init(p)
+    m, v = opt["m"], opt["v"]
+    t = toks(rng, 32)
+    y = jnp.asarray(rng.integers(0, 2, size=32), jnp.int32)
+    losses = []
+    for i in range(25):
+        p, m, v, loss = step(p, m, v, jnp.float32(i + 1), t, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses[:3] + losses[-3:]
+
+
+def test_adam_bias_correction_first_step():
+    """After one step with grad g, Adam moves by ≈ lr·sign(g)."""
+    p = {"w": jnp.asarray([1.0, -1.0])}
+    g = {"w": jnp.asarray([0.5, -0.25])}
+    opt = M.adam_init(p)
+    p2, _, _ = M.adam_update(p, g, opt["m"], opt["v"], jnp.float32(1.0), 0.1)
+    np.testing.assert_allclose(p2["w"], [0.9, -0.9], rtol=1e-4)
+
+
+def test_flat_roundtrip_and_order():
+    p = M.init_target_params(CFG, 0)
+    names = M.flat_names(p)
+    assert names == sorted(names)
+    flat = M.tree_to_flat(p)
+    back = M.flat_to_tree(flat, names)
+    for n in names:
+        np.testing.assert_array_equal(M.get_by_name(p, n), M.get_by_name(back, n))
+
+
+def test_cross_entropy_and_accuracy():
+    logits = jnp.asarray([[10.0, -10.0], [-10.0, 10.0]])
+    labels = jnp.asarray([0, 1], jnp.int32)
+    assert float(M.cross_entropy(logits, labels)) < 1e-3
+    assert float(M.accuracy(logits, labels)) == 1.0
+    wrong = jnp.asarray([1, 0], jnp.int32)
+    assert float(M.accuracy(logits, wrong)) == 0.0

@@ -1,0 +1,101 @@
+//! MPC primitive microbenchmarks — the perf-pass instrument (EXPERIMENTS
+//! §Perf): wall-clock throughput + protocol cost of each 2PC primitive at
+//! the shapes the proxy forward actually uses.
+
+use std::time::Instant;
+
+use selectformer::benchkit::{banner, write_tsv};
+use selectformer::mpc::cmp;
+use selectformer::mpc::engine::run_pair_metered;
+use selectformer::mpc::proto::{
+    matmul, mul, recv_share, share_input, PartyCtx, Shared,
+};
+use selectformer::tensor::{TensorF, TensorR};
+use selectformer::util::report::{fmt_bytes, Table};
+use selectformer::util::Rng;
+
+fn bench_op<F>(name: &'static str, iters: usize, shape: &[usize], f: F) -> Vec<String>
+where
+    F: Fn(&mut PartyCtx, &Shared) -> Shared + Send + Clone + 'static,
+{
+    let n: usize = shape.iter().product();
+    let mut rng = Rng::new(7);
+    let data: Vec<f32> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let x = TensorR::from_f32(&TensorF::from_vec(data, shape));
+    let shape0 = shape.to_vec();
+    let f1 = f.clone();
+    let ((tuple_out, _meter0), _) = run_pair_metered(
+        3,
+        {
+            let x = x.clone();
+            move |ctx| {
+                let xs = share_input(ctx, &x);
+                let b0 = ctx.chan.meter.bytes;
+                let r0 = ctx.chan.meter.rounds;
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    let _ = f(ctx, &xs);
+                }
+                (
+                    t0.elapsed().as_secs_f64() / iters as f64,
+                    (ctx.chan.meter.bytes - b0) / iters as u64,
+                    (ctx.chan.meter.rounds - r0) / iters as u64,
+                )
+            }
+        },
+        move |ctx| {
+            let xs = recv_share(ctx, &shape0);
+            for _ in 0..iters {
+                let _ = f1(ctx, &xs);
+            }
+        },
+    );
+    let (elapsed, bytes, rounds) = elapsed_tuple(tuple_out);
+    vec![
+        name.to_string(),
+        format!("{shape:?}"),
+        format!("{:.3} ms", elapsed * 1e3),
+        format!("{:.2} Melem/s", n as f64 / elapsed / 1e6),
+        rounds.to_string(),
+        fmt_bytes(bytes),
+    ]
+}
+
+fn elapsed_tuple(t: (f64, u64, u64)) -> (f64, u64, u64) {
+    t
+}
+
+fn main() {
+    banner("microbench", "2PC primitive throughput (local wall-clock, per call)");
+    let mut t = Table::new(
+        "MPC primitives",
+        &["op", "shape", "latency", "throughput", "rounds", "bytes/call (p0)"],
+    );
+    t.row(bench_op("beaver mul", 20, &[4096], |ctx, x| mul(ctx, x, x)));
+    t.row(bench_op("beaver mul", 5, &[65536], |ctx, x| mul(ctx, x, x)));
+    t.row(bench_op("matmul 128×128", 10, &[128, 128], |ctx, x| {
+        matmul(ctx, x, x)
+    }));
+    t.row(bench_op("matmul 512×512", 3, &[512, 512], |ctx, x| {
+        matmul(ctx, x, x)
+    }));
+    t.row(bench_op("LTZ", 10, &[4096], |ctx, x| cmp::ltz(ctx, x)));
+    t.row(bench_op("LTZ", 3, &[65536], |ctx, x| cmp::ltz(ctx, x)));
+    t.row(bench_op("ReLU", 10, &[4096], |ctx, x| cmp::relu(ctx, x)));
+    t.row(bench_op("exp", 5, &[4096], |ctx, x| {
+        selectformer::mpc::nonlin::exact_exp(ctx, x)
+    }));
+    t.row(bench_op("reciprocal", 3, &[4096], |ctx, x| {
+        selectformer::mpc::nonlin::exact_reciprocal(ctx, x)
+    }));
+    t.row(bench_op("softmax 128-dim", 2, &[512, 128], |ctx, x| {
+        selectformer::mpc::nonlin::exact_softmax(ctx, x, 512, 128)
+    }));
+    t.print();
+    let rows: Vec<Vec<String>> = t.rows.clone();
+    write_tsv(
+        "mpc_microbench",
+        &["op", "shape", "latency", "throughput", "rounds", "bytes"],
+        &rows,
+    );
+}

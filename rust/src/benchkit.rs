@@ -1,0 +1,110 @@
+//! Shared machinery for the paper-table cost benches (rust/benches/*):
+//! measure MPC phase profiles at arbitrary shapes (incl. paper scale) and
+//! extrapolate to full-dataset delays under the WAN model.
+//!
+//! MPC traffic is data-independent and exactly linear in batches, so a
+//! 1-vs-2 batch diff gives an exact per-batch marginal; layer costs are
+//! likewise uniform, so deep targets are measured at 1–2 layers and
+//! scaled (validated in rust/tests/cost_model.rs).
+
+use anyhow::Result;
+
+use crate::coordinator::planner::{profile_phase, PhaseCostProfile};
+use crate::coordinator::SchedPolicy;
+use crate::models::{ModelConfig, Variant};
+use crate::mpc::net::NetConfig;
+
+/// The paper's five NLP benchmark sizes (Fig 6).
+pub const PAPER_BENCHES: [(&str, usize); 5] = [
+    ("SST2", 42_000),
+    ("QNLI", 58_000),
+    ("AGNEWS", 40_000),
+    ("QQP", 149_000),
+    ("YELP", 188_000),
+];
+
+/// Paper-scale proxy shapes over the BERT-base trunk.
+pub fn paper_proxy(l: usize, w: usize, d: usize, variant: Variant) -> ModelConfig {
+    let base = ModelConfig::bert_paper();
+    ModelConfig::proxy(&base, l, w, d).with_variant(variant)
+}
+
+/// Profile a deep EXACT-nonlinearity target by measuring 1- and 2-layer
+/// versions and scaling the per-layer marginal — running 12 exact BERT
+/// layers over MPC directly would take hours of single-core sim time for
+/// identical numbers.
+pub fn profile_deep_target(
+    base: &ModelConfig,
+    batch: usize,
+) -> Result<PhaseCostProfile> {
+    let mut one = *base;
+    one.n_layers = 1;
+    let mut two = *base;
+    two.n_layers = 2;
+    let p1 = profile_phase(&one, batch)?;
+    let p2 = profile_phase(&two, batch)?;
+    let scale = base.n_layers as u64;
+    let fscale = base.n_layers as f64;
+    Ok(PhaseCostProfile {
+        cfg: *base,
+        batch,
+        setup_bytes: p1.setup_bytes
+            + (p2.setup_bytes.saturating_sub(p1.setup_bytes)) * (scale - 1),
+        setup_rounds: p1.setup_rounds
+            + (p2.setup_rounds.saturating_sub(p1.setup_rounds)) * (scale - 1),
+        batch_bytes: p1.batch_bytes
+            + (p2.batch_bytes.saturating_sub(p1.batch_bytes)) * (scale - 1),
+        batch_rounds: p1.batch_rounds
+            + (p2.batch_rounds.saturating_sub(p1.batch_rounds)) * (scale - 1),
+        batch_compute_s: p1.batch_compute_s
+            + (p2.batch_compute_s - p1.batch_compute_s) * (fscale - 1.0),
+    })
+}
+
+/// Measured paper-scale profiles for the Ours 2-phase schedule (profile
+/// once, reuse across benchmark sizes — MPC cost is data-independent).
+pub fn ours_profiles(batch: usize) -> Result<(PhaseCostProfile, PhaseCostProfile)> {
+    Ok((
+        profile_phase(&paper_proxy(1, 1, 2, Variant::Mlp), batch)?,
+        profile_phase(&paper_proxy(3, 12, 16, Variant::Mlp), batch)?,
+    ))
+}
+
+/// Delay of a 2-phase Ours selection over n points (paper default
+/// schedule, 20% budget), from measured paper-scale profiles.
+pub fn ours_delay_from(
+    profiles: &(PhaseCostProfile, PhaseCostProfile),
+    n: usize,
+    net: &NetConfig,
+    policy: SchedPolicy,
+) -> f64 {
+    let survivors = (n as f64 * 0.3) as usize;
+    profiles.0.estimate(n, net, policy) + profiles.1.estimate(survivors, net, policy)
+}
+
+/// Measured profile of Oracle (full BERT-base, exact nonlinearities).
+pub fn oracle_profile(batch: usize) -> Result<PhaseCostProfile> {
+    let base = ModelConfig::bert_paper().with_variant(Variant::Exact);
+    profile_deep_target(&base, batch)
+}
+
+/// Format a bench header line (benches run with `cargo bench`, no
+/// criterion — each prints its paper table directly).
+pub fn banner(name: &str, what: &str) {
+    println!();
+    println!("================================================================");
+    println!("  {name} — {what}");
+    println!("  (simulated WAN: 100 MB/s, 100 ms — the paper's §5.1 testbed)");
+    println!("================================================================");
+}
+
+/// Write rows to results/<name>.tsv for EXPERIMENTS.md.
+pub fn write_tsv(name: &str, header: &[&str], rows: &[Vec<String>]) {
+    let mut s = header.join("\t") + "\n";
+    for r in rows {
+        s += &(r.join("\t") + "\n");
+    }
+    let dir = std::path::Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(format!("{name}.tsv")), s);
+}

@@ -1,0 +1,342 @@
+//! Accuracy benches — the paper tables that need actual selection +
+//! training, driven from the CLI (`selectformer bench <table>`): Table 1/8,
+//! Table 2, Table 3 (accuracy half), Table 4/5, Table 6, Fig 5 / Table 7.
+//!
+//! Results print in the paper's row/column layout and are mirrored to
+//! results/*.tsv.  Absolute numbers are laptop-scale (DESIGN.md §3); what
+//! must reproduce is the ORDER: Ours > Random, Ours ≈ Oracle, Ours ≫
+//! MPCFormer, multi-phase ≥ single-phase.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{multi_phase_select, PhaseSchedule, ProxySpec, SelectionOptions};
+use crate::exp::{self, Cell, Method};
+use crate::models::ApproxToggles;
+use crate::runtime::Runtime;
+use crate::util::report::Table;
+
+use super::Args;
+
+pub fn run(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .context("usage: selectformer bench <table1|table2|table3acc|table4|table6|fig5>")?;
+    let root = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(Cell::default_root);
+    let quick = args.has("quick");
+    let steps = args.usize_or("steps", if quick { 100 } else { 150 })?;
+    match which.as_str() {
+        "table1" => table1(&root, steps, quick),
+        "table2" => table2(&root, steps, quick),
+        "table3acc" => table3acc(&root, steps),
+        "table4" => table4(&root, steps, quick),
+        "table6" => table6(&root, steps, quick),
+        "fig5" => fig5(&root, steps, quick),
+        other => anyhow::bail!("unknown bench `{other}`"),
+    }
+}
+
+fn accuracy_for(
+    cell: &Cell,
+    rt: &mut Runtime,
+    method: Method,
+    approx: ApproxToggles,
+    budget: f64,
+    steps: usize,
+) -> Result<f32> {
+    let opts = SelectionOptions { batch: 16, approx, ..Default::default() };
+    let purchase = if method == Method::Oracle {
+        exp::select(cell, method, budget, &opts, Some(rt))?
+    } else {
+        exp::select(cell, method, budget, &opts, None)?
+    };
+    let (_curve, acc) = exp::train_and_eval(cell, rt, &purchase, steps, 11)?;
+    Ok(acc)
+}
+
+fn built(root: &Path, cells: &[(&str, &str)]) -> Vec<Cell> {
+    cells
+        .iter()
+        .map(|(t, b)| Cell::new(root, t, b))
+        .filter(|c| {
+            let ok = c.exists();
+            if !ok {
+                eprintln!("  (skipping {}/{} — not built)", c.target, c.bench);
+            }
+            ok
+        })
+        .collect()
+}
+
+/// Table 1 / Table 8: Ours vs Random vs Oracle at 20% across all cells.
+fn table1(root: &Path, steps: usize, quick: bool) -> Result<()> {
+    let mut rt = Runtime::new()?;
+    let all: Vec<(&str, &str)> = if quick {
+        vec![("distilbert_s", "sst2s"), ("distilbert_s", "qqps")]
+    } else {
+        vec![
+            ("distilbert_s", "sst2s"), ("distilbert_s", "qnlis"),
+            ("distilbert_s", "qqps"), ("distilbert_s", "agnewss"),
+            ("distilbert_s", "yelps"),
+            ("bert_s", "sst2s"), ("bert_s", "qnlis"), ("bert_s", "qqps"),
+            ("bert_s", "agnewss"), ("bert_s", "yelps"),
+            ("vit_small_s", "cifar10s"), ("vit_small_s", "cifar100s"),
+            ("vit_base_s", "cifar10s"), ("vit_base_s", "cifar100s"),
+        ]
+    };
+    let mut t = Table::new(
+        "Table 1: accuracy @ 20% budget (Ours vs Random vs Oracle)",
+        &["cell", "Ours", "Random", "(vs Ours)", "Oracle", "(vs Ours)"],
+    );
+    for cell in built(root, &all) {
+        let label = format!("{}/{}", cell.target, cell.bench);
+        eprintln!("  running {label}…");
+        let ours = accuracy_for(&cell, &mut rt, Method::Ours, ApproxToggles::OURS, 0.2, steps)?;
+        let rand = accuracy_for(&cell, &mut rt, Method::Random, ApproxToggles::OURS, 0.2, steps)?;
+        let orac = accuracy_for(&cell, &mut rt, Method::Oracle, ApproxToggles::OURS, 0.2, steps)?;
+        t.row(vec![
+            label,
+            format!("{:.2}", ours * 100.0),
+            format!("{:.2}", rand * 100.0),
+            format!("{:+.2}", (rand - ours) * 100.0),
+            format!("{:.2}", orac * 100.0),
+            format!("{:+.2}", (orac - ours) * 100.0),
+        ]);
+    }
+    t.print();
+    t.write_tsv(&root.join("..").join("results").join("table1.tsv"))?;
+    Ok(())
+}
+
+/// Table 2: MLP-emulation ablations.
+fn table2(root: &Path, steps: usize, quick: bool) -> Result<()> {
+    let mut rt = Runtime::new()?;
+    let cells: Vec<(&str, &str)> = if quick {
+        vec![("distilbert_s", "sst2s")]
+    } else {
+        vec![
+            ("distilbert_s", "sst2s"), ("distilbert_s", "qqps"),
+            ("distilbert_s", "agnewss"),
+            ("bert_s", "sst2s"), ("bert_s", "qqps"), ("bert_s", "agnewss"),
+        ]
+    };
+    let variants: [(&str, Method, ApproxToggles); 4] = [
+        ("Ours", Method::Ours, ApproxToggles::OURS),
+        ("NoAttnSM", Method::Variant("noattnsm"), ApproxToggles::NO_ATTN_SM),
+        ("NoAttnLN", Method::Variant("noattnln"), ApproxToggles::NO_ATTN_LN),
+        ("NoApprox", Method::Variant("noapprox"), ApproxToggles::NO_APPROX),
+    ];
+    let mut t = Table::new(
+        "Table 2: MLP emulation ablation (accuracy @ 20%)",
+        &["cell", "Ours", "NoAttnSM", "NoAttnLN", "NoApprox"],
+    );
+    for cell in built(root, &cells) {
+        let label = format!("{}/{}", cell.target, cell.bench);
+        eprintln!("  running {label}…");
+        let mut row = vec![label];
+        for (name, method, approx) in variants.iter() {
+            let acc = accuracy_for(&cell, &mut rt, *method, *approx, 0.2, steps)
+                .map(|a| format!("{:.2}", a * 100.0))
+                .unwrap_or_else(|e| {
+                    eprintln!("    {name}: {e}");
+                    "-".into()
+                });
+            row.push(acc);
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_tsv(&root.join("..").join("results").join("table2.tsv"))?;
+    Ok(())
+}
+
+/// Table 3 (accuracy): Ours vs MPCFormer vs Bolt on BERT cells.
+fn table3acc(root: &Path, steps: usize) -> Result<()> {
+    let mut rt = Runtime::new()?;
+    let cells = vec![("bert_s", "sst2s"), ("bert_s", "qnlis"), ("bert_s", "qqps")];
+    let mut t = Table::new(
+        "Table 3 + §7.2: accuracy vs MPCFormer / Bolt (@ 20%)",
+        &["cell", "Ours", "MPCFormer", "Bolt"],
+    );
+    for cell in built(root, &cells) {
+        let label = format!("{}/{}", cell.target, cell.bench);
+        eprintln!("  running {label}…");
+        let ours = accuracy_for(&cell, &mut rt, Method::Ours, ApproxToggles::OURS, 0.2, steps)?;
+        let mpcf = accuracy_for(
+            &cell, &mut rt, Method::Variant("mpcformer"), ApproxToggles::OURS, 0.2, steps,
+        );
+        let bolt = accuracy_for(
+            &cell, &mut rt, Method::Variant("bolt"), ApproxToggles::OURS, 0.2, steps,
+        );
+        t.row(vec![
+            label,
+            format!("{:.2}", ours * 100.0),
+            mpcf.map(|a| format!("{:.2}", a * 100.0)).unwrap_or("-".into()),
+            bolt.map(|a| format!("{:.2}", a * 100.0)).unwrap_or("-".into()),
+        ]);
+    }
+    t.print();
+    t.write_tsv(&root.join("..").join("results").join("table3acc.tsv"))?;
+    Ok(())
+}
+
+/// Table 4/5: phase-count schedules.
+fn table4(root: &Path, steps: usize, quick: bool) -> Result<()> {
+    let mut rt = Runtime::new()?;
+    let cells: Vec<(&str, &str)> = if quick {
+        vec![("distilbert_s", "sst2s")]
+    } else {
+        vec![
+            ("distilbert_s", "sst2s"), ("distilbert_s", "qqps"),
+            ("bert_s", "sst2s"), ("bert_s", "qqps"),
+        ]
+    };
+    let mut t = Table::new(
+        "Table 4: multi-phase schedules (accuracy @ 20%)",
+        &["cell", "1-phase (16)", "2-phase (2,16)", "3-phase (2,2,16)"],
+    );
+    for cell in built(root, &cells) {
+        let label = format!("{}/{}", cell.target, cell.bench);
+        eprintln!("  running {label}…");
+        let mut row = vec![label];
+        for phases in [1usize, 2, 3] {
+            let acc = schedule_accuracy(&cell, &mut rt, phases, 0.2, steps)
+                .map(|a| format!("{:.2}", a * 100.0))
+                .unwrap_or_else(|e| {
+                    eprintln!("    {phases}-phase: {e}");
+                    "-".into()
+                });
+            row.push(acc);
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_tsv(&root.join("..").join("results").join("table4.tsv"))?;
+    Ok(())
+}
+
+/// Accuracy with an n-phase schedule built from the exported phase
+/// proxies (phase1 = d2 small, phase2 = d16 final).
+pub fn schedule_accuracy(
+    cell: &Cell,
+    rt: &mut Runtime,
+    phases: usize,
+    budget: f64,
+    steps: usize,
+) -> Result<f32> {
+    let ds = cell.train_dataset()?;
+    let bootstrap = cell.bootstrap_indices()?;
+    let candidates = crate::coordinator::market::selection_candidates(ds.n, &bootstrap);
+    let keep = ((budget * ds.n as f64) as usize).saturating_sub(bootstrap.len());
+    let frac = (keep as f64 / candidates.len() as f64).clamp(1e-6, 1.0);
+    let p1 = cell.proxy_phase(1);
+    let p2 = cell.proxy_phase(2);
+    let spec1 = ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 };
+    let spec2 = ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 };
+    let (paths, schedule): (Vec<&Path>, PhaseSchedule) = match phases {
+        1 => (vec![&p2], PhaseSchedule::new(vec![spec2], vec![frac])),
+        2 => {
+            let mid = (1.5 * frac).min(1.0);
+            (
+                vec![&p1, &p2],
+                PhaseSchedule::new(vec![spec1, spec2], vec![mid, frac / mid]),
+            )
+        }
+        _ => {
+            let s1 = (2.5 * frac).min(1.0);
+            let s2 = ((1.5 * frac) / s1).min(1.0);
+            (
+                vec![&p1, &p1, &p2],
+                PhaseSchedule::new(
+                    vec![spec1, spec1, spec2],
+                    vec![s1, s2, frac / (s1 * s2)],
+                ),
+            )
+        }
+    };
+    let opts = SelectionOptions { batch: 16, ..Default::default() };
+    let outcome = multi_phase_select(&paths, &schedule, &ds, candidates, &opts)?;
+    let purchase = exp::Purchase {
+        indices: outcome.selected.clone(),
+        outcome: Some(outcome),
+        bootstrap,
+    };
+    let (_c, acc) = exp::train_and_eval(cell, rt, &purchase, steps, 11)?;
+    Ok(acc)
+}
+
+/// Table 6: budget robustness (20–40%).
+fn table6(root: &Path, steps: usize, quick: bool) -> Result<()> {
+    let mut rt = Runtime::new()?;
+    let cells: Vec<(&str, &str)> = if quick {
+        vec![("distilbert_s", "sst2s")]
+    } else {
+        vec![
+            ("distilbert_s", "sst2s"), ("distilbert_s", "qqps"),
+            ("distilbert_s", "agnewss"),
+        ]
+    };
+    let budgets = [0.2, 0.25, 0.3, 0.4];
+    let mut t = Table::new(
+        "Table 6: budget robustness (Ours / Oracle / Random)",
+        &["cell", "budget", "Ours", "Oracle", "Random"],
+    );
+    for cell in built(root, &cells) {
+        let label = format!("{}/{}", cell.target, cell.bench);
+        for &b in &budgets {
+            eprintln!("  running {label} @ {:.0}%…", b * 100.0);
+            let ours =
+                accuracy_for(&cell, &mut rt, Method::Ours, ApproxToggles::OURS, b, steps)?;
+            let orac =
+                accuracy_for(&cell, &mut rt, Method::Oracle, ApproxToggles::OURS, b, steps)?;
+            let rand =
+                accuracy_for(&cell, &mut rt, Method::Random, ApproxToggles::OURS, b, steps)?;
+            t.row(vec![
+                label.clone(),
+                format!("{:.0}%", b * 100.0),
+                format!("{:.2}", ours * 100.0),
+                format!("{:.2}", orac * 100.0),
+                format!("{:.2}", rand * 100.0),
+            ]);
+        }
+    }
+    t.print();
+    t.write_tsv(&root.join("..").join("results").join("table6.tsv"))?;
+    Ok(())
+}
+
+/// Fig 5 / Table 7: how much budget Random needs to match Ours@20%.
+fn fig5(root: &Path, steps: usize, quick: bool) -> Result<()> {
+    let mut rt = Runtime::new()?;
+    let cells: Vec<(&str, &str)> = if quick {
+        vec![("distilbert_s", "sst2s")]
+    } else {
+        vec![("distilbert_s", "sst2s"), ("bert_s", "sst2s"), ("distilbert_s", "qqps")]
+    };
+    let budgets = [0.2, 0.4, 0.6, 0.8, 1.0];
+    let mut t = Table::new(
+        "Fig 5 / Table 7: Random budget sweep vs Ours@20%",
+        &["cell", "Ours@20%", "Rnd@20%", "Rnd@40%", "Rnd@60%", "Rnd@80%", "Rnd@100%"],
+    );
+    for cell in built(root, &cells) {
+        let label = format!("{}/{}", cell.target, cell.bench);
+        eprintln!("  running {label}…");
+        let ours =
+            accuracy_for(&cell, &mut rt, Method::Ours, ApproxToggles::OURS, 0.2, steps)?;
+        let mut row = vec![label, format!("{:.2}", ours * 100.0)];
+        for &b in &budgets {
+            let rand =
+                accuracy_for(&cell, &mut rt, Method::Random, ApproxToggles::OURS, b, steps)?;
+            row.push(format!("{:.2}", rand * 100.0));
+        }
+        t.row(row);
+    }
+    t.print();
+    t.write_tsv(&root.join("..").join("results").join("fig5.tsv"))?;
+    Ok(())
+}

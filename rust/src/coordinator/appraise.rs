@@ -1,0 +1,90 @@
+//! Post-selection appraisal (paper §4.1): both parties jointly compute the
+//! average prediction entropy over the selected set and reveal either the
+//! value or — if the average itself is sensitive — only the one-bit
+//! outcome of a threshold comparison.
+
+use crate::fixed;
+use crate::mpc::cmp;
+use crate::mpc::proto::{open, PartyCtx, Shared};
+use crate::tensor::TensorR;
+
+/// Average of shared entropies, revealed in the clear.
+pub fn appraise_average(ctx: &mut PartyCtx, entropies: &Shared) -> f32 {
+    let n = entropies.len();
+    let mut acc = 0i64;
+    for &v in &entropies.0.data {
+        acc = acc.wrapping_add(v);
+    }
+    let inv_n = fixed::encode(1.0 / n as f32);
+    let avg_share = fixed::trunc(acc.wrapping_mul(inv_n));
+    let opened = open(ctx, &Shared(TensorR::from_vec(vec![avg_share], &[1])));
+    fixed::decode(opened.data[0])
+}
+
+/// Threshold appraisal: reveal ONLY whether avg entropy > threshold.
+pub fn appraise_threshold(ctx: &mut PartyCtx, entropies: &Shared, threshold: f32) -> bool {
+    let n = entropies.len();
+    let mut acc = 0i64;
+    for &v in &entropies.0.data {
+        acc = acc.wrapping_add(v);
+    }
+    let inv_n = fixed::encode(1.0 / n as f32);
+    let avg_share = fixed::trunc(acc.wrapping_mul(inv_n));
+    let avg = Shared(TensorR::from_vec(vec![avg_share], &[1]));
+    let thr = crate::mpc::nonlin::const_share(ctx, threshold, &[1]);
+    let gt = cmp::gt(ctx, &avg, &thr);
+    open(ctx, &gt).data[0] == 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::engine::run_pair;
+    use crate::mpc::proto::{recv_share, share_input};
+    use crate::tensor::TensorF;
+
+    #[test]
+    fn average_is_revealed_correctly() {
+        let vals = vec![0.2f32, 0.4, 0.9, 0.5];
+        let x = TensorR::from_f32(&TensorF::from_vec(vals, &[4]));
+        let (avg, _) = run_pair(
+            91,
+            {
+                let x = x.clone();
+                move |ctx| {
+                    let sh = share_input(ctx, &x);
+                    appraise_average(ctx, &sh)
+                }
+            },
+            move |ctx| {
+                let sh = recv_share(ctx, &[4]);
+                appraise_average(ctx, &sh)
+            },
+        );
+        assert!((avg - 0.5).abs() < 1e-2, "{avg}");
+    }
+
+    #[test]
+    fn threshold_reveals_one_bit() {
+        let vals = vec![0.2f32, 0.4, 0.9, 0.5];
+        let x = TensorR::from_f32(&TensorF::from_vec(vals, &[4]));
+        for (thr, expect) in [(0.4f32, true), (0.6, false)] {
+            let (got, got1) = run_pair(
+                93,
+                {
+                    let x = x.clone();
+                    move |ctx| {
+                        let sh = share_input(ctx, &x);
+                        appraise_threshold(ctx, &sh, thr)
+                    }
+                },
+                move |ctx| {
+                    let sh = recv_share(ctx, &[4]);
+                    appraise_threshold(ctx, &sh, thr)
+                },
+            );
+            assert_eq!(got, expect, "thr={thr}");
+            assert_eq!(got, got1, "parties agree");
+        }
+    }
+}

@@ -1,0 +1,146 @@
+//! IO scheduling (paper §4.4): batching latency-bound MPC ops and
+//! overlapping communication with computation.
+//!
+//! The engine meters every logical op (rounds, bytes, local compute); this
+//! module turns a metered trace into a simulated wall-clock under four
+//! policies that correspond to the paper's Fig 7 variants:
+//!
+//!   Sequential            — P / PM: every op serial, every round pays L
+//!   Coalesced             — PMT: latency-bound ops stacked across batches
+//!                           (rounds deflated by the coalescing window)
+//!   Overlapped            — comm/compute pipelined across batches
+//!   CoalescedOverlapped   — Ours: both
+//!
+//! "Latency-bound" = an op whose per-round payload is far below the
+//! bandwidth-delay product; stacking W of them costs ~1 round instead of W.
+
+use crate::mpc::net::{CostMeter, NetConfig};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedPolicy {
+    Sequential,
+    Coalesced,
+    Overlapped,
+    CoalescedOverlapped,
+}
+
+/// How many batches' worth of latency-bound rounds coalesce into one.
+pub const COALESCE_WINDOW: f64 = 8.0;
+
+/// Startup / dependency residual that overlap cannot hide.
+const OVERLAP_RESIDUAL: f64 = 0.07;
+
+/// Simulated delay of a metered session under `policy`.
+pub fn delay(
+    p0: &CostMeter,
+    p1: &CostMeter,
+    net: &NetConfig,
+    policy: SchedPolicy,
+) -> f64 {
+    let payload = p0.bytes.max(p1.bytes) as f64 / net.bandwidth;
+    let compute = p0.compute_s.max(p1.compute_s);
+    let rounds = effective_rounds(p0, net, policy);
+    let lat = rounds * net.latency;
+    match policy {
+        SchedPolicy::Sequential | SchedPolicy::Coalesced => lat + payload + compute,
+        SchedPolicy::Overlapped | SchedPolicy::CoalescedOverlapped => {
+            let comm = lat + payload;
+            comm.max(compute) + OVERLAP_RESIDUAL * comm.min(compute)
+        }
+    }
+}
+
+/// Round count after (optional) coalescing of latency-bound ops.
+fn effective_rounds(p0: &CostMeter, net: &NetConfig, policy: SchedPolicy) -> f64 {
+    match policy {
+        SchedPolicy::Sequential | SchedPolicy::Overlapped => p0.rounds as f64,
+        SchedPolicy::Coalesced | SchedPolicy::CoalescedOverlapped => {
+            // bandwidth-delay product: payloads below this are latency-bound
+            let bdp = net.bandwidth * net.latency;
+            if p0.ops.is_empty() {
+                // no trace — assume the global mix coalesces uniformly
+                return p0.rounds as f64 / COALESCE_WINDOW;
+            }
+            let mut total = 0.0;
+            let mut traced = 0u64;
+            for op in &p0.ops {
+                traced += op.rounds;
+                if op.rounds == 0 {
+                    continue;
+                }
+                let per_round = op.bytes as f64 / op.rounds as f64;
+                if per_round < 0.1 * bdp {
+                    total += op.rounds as f64 / COALESCE_WINDOW;
+                } else {
+                    total += op.rounds as f64;
+                }
+            }
+            // rounds outside any traced op (setup etc.) stay serial
+            total + p0.rounds.saturating_sub(traced) as f64
+        }
+    }
+}
+
+/// Convenience: the Fig 7 ladder for one metered session.
+pub fn fig7_ladder(p0: &CostMeter, p1: &CostMeter, net: &NetConfig) -> [(String, f64); 3] {
+    [
+        ("PM (serial)".into(), delay(p0, p1, net, SchedPolicy::Sequential)),
+        ("PMT (+batching)".into(), delay(p0, p1, net, SchedPolicy::Coalesced)),
+        (
+            "Ours (+overlap)".into(),
+            delay(p0, p1, net, SchedPolicy::CoalescedOverlapped),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::net::OpRecord;
+
+    fn meter(bytes: u64, rounds: u64, compute: f64, ops: Vec<OpRecord>) -> CostMeter {
+        CostMeter { bytes, rounds, messages: rounds, compute_s: compute, ops }
+    }
+
+    #[test]
+    fn policies_are_monotone() {
+        let ops = vec![
+            OpRecord { name: "mlp", rounds: 80, bytes: 80 * 100, compute_s: 0.5 },
+            OpRecord { name: "matmul", rounds: 20, bytes: 200_000_000, compute_s: 1.0 },
+        ];
+        let p0 = meter(200_008_000, 100, 1.5, ops);
+        let p1 = meter(200_008_000, 100, 1.5, vec![]);
+        let net = NetConfig::default();
+        let seq = delay(&p0, &p1, &net, SchedPolicy::Sequential);
+        let coal = delay(&p0, &p1, &net, SchedPolicy::Coalesced);
+        let ours = delay(&p0, &p1, &net, SchedPolicy::CoalescedOverlapped);
+        assert!(coal < seq, "coalescing must help: {coal} vs {seq}");
+        assert!(ours <= coal, "overlap must not hurt: {ours} vs {coal}");
+    }
+
+    #[test]
+    fn coalesce_only_deflates_latency_bound_rounds() {
+        let net = NetConfig::default();
+        // one op, bandwidth-bound: per-round payload ≫ BDP
+        let big = vec![OpRecord {
+            name: "matmul",
+            rounds: 10,
+            bytes: 10 * 200_000_000,
+            compute_s: 0.0,
+        }];
+        let p = meter(2_000_000_000, 10, 0.0, big);
+        let seq = delay(&p, &p, &net, SchedPolicy::Sequential);
+        let coal = delay(&p, &p, &net, SchedPolicy::Coalesced);
+        assert!((seq - coal).abs() < 1e-9, "bandwidth-bound ops don't coalesce");
+    }
+
+    #[test]
+    fn overlap_hides_compute_behind_comm() {
+        let net = NetConfig::default();
+        let p = meter(1_000_000_000, 10, 5.0, vec![]); // 10s payload, 5s compute
+        let seq = delay(&p, &p, &net, SchedPolicy::Sequential);
+        let ovl = delay(&p, &p, &net, SchedPolicy::Overlapped);
+        assert!(seq > 15.0);
+        assert!(ovl < 12.0, "compute should hide behind comm: {ovl}");
+    }
+}

@@ -1,0 +1,116 @@
+//! The data-market bookkeeping around the private selection: the three
+//! clear/MPC/clear stages of Fig 1 — pre-selection bootstrap purchase,
+//! private multi-phase selection, final transaction.
+
+use crate::util::Rng;
+
+/// Purchase budget, expressed in datapoints.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    /// total points the model owner will pay for
+    pub total: usize,
+    /// fraction of `total` spent up front on the bootstrap sample
+    pub bootstrap_fraction: f64,
+}
+
+impl Budget {
+    pub fn from_fraction(n_dataset: usize, fraction: f64, bootstrap_fraction: f64) -> Self {
+        Budget {
+            total: ((n_dataset as f64) * fraction).round() as usize,
+            bootstrap_fraction,
+        }
+    }
+
+    pub fn bootstrap_points(&self) -> usize {
+        ((self.total as f64) * self.bootstrap_fraction).round() as usize
+    }
+
+    pub fn selection_points(&self) -> usize {
+        self.total - self.bootstrap_points()
+    }
+}
+
+/// Stage 1 (clear): the data owner randomly samples the bootstrap set;
+/// no selection, no MPC.
+pub fn bootstrap_purchase(n_dataset: usize, budget: &Budget, seed: u64) -> Vec<usize> {
+    let mut idx = Rng::new(seed ^ 0xb007).choose(n_dataset, budget.bootstrap_points());
+    idx.sort_unstable();
+    idx
+}
+
+/// Stage 3 (clear): the final transaction record. The data owner ships the
+/// union of bootstrap + selected points; the model owner pays per point.
+#[derive(Clone, Debug)]
+pub struct Transaction {
+    pub bootstrap: Vec<usize>,
+    pub selected: Vec<usize>,
+    pub price_per_point: f64,
+}
+
+impl Transaction {
+    pub fn new(bootstrap: Vec<usize>, selected: Vec<usize>, price_per_point: f64) -> Self {
+        Transaction { bootstrap, selected, price_per_point }
+    }
+
+    /// All purchased indices, deduplicated and sorted (selection excludes
+    /// bootstrap indices upstream, but be defensive).
+    pub fn purchased(&self) -> Vec<usize> {
+        let mut all: Vec<usize> =
+            self.bootstrap.iter().chain(&self.selected).copied().collect();
+        all.sort_unstable();
+        all.dedup();
+        all
+    }
+
+    pub fn total_price(&self) -> f64 {
+        self.purchased().len() as f64 * self.price_per_point
+    }
+
+    /// Bytes the data owner ships at settlement (tokens only — labels do
+    /// not exist in the market's threat model).
+    pub fn shipped_bytes(&self, seq_len: usize) -> u64 {
+        (self.purchased().len() * seq_len * 4) as u64
+    }
+}
+
+/// The set the selection phases operate on: everything NOT already bought
+/// as bootstrap.
+pub fn selection_candidates(n_dataset: usize, bootstrap: &[usize]) -> Vec<usize> {
+    let mut is_boot = vec![false; n_dataset];
+    for &b in bootstrap {
+        is_boot[b] = true;
+    }
+    (0..n_dataset).filter(|&i| !is_boot[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_splits() {
+        let b = Budget::from_fraction(1000, 0.2, 0.25);
+        assert_eq!(b.total, 200);
+        assert_eq!(b.bootstrap_points(), 50);
+        assert_eq!(b.selection_points(), 150);
+    }
+
+    #[test]
+    fn bootstrap_and_candidates_partition() {
+        let b = Budget::from_fraction(100, 0.2, 0.25);
+        let boot = bootstrap_purchase(100, &b, 3);
+        let cand = selection_candidates(100, &boot);
+        assert_eq!(boot.len() + cand.len(), 100);
+        for i in &boot {
+            assert!(!cand.contains(i));
+        }
+    }
+
+    #[test]
+    fn transaction_dedups_and_prices() {
+        let t = Transaction::new(vec![1, 2, 3], vec![3, 4, 5], 2.0);
+        assert_eq!(t.purchased(), vec![1, 2, 3, 4, 5]);
+        assert!((t.total_price() - 10.0).abs() < 1e-9);
+        assert_eq!(t.shipped_bytes(32), 5 * 32 * 4);
+    }
+}

@@ -1,0 +1,20 @@
+//! The L3 coordinator — the paper's system contribution: multi-phase
+//! private selection (§4.1), QuickSelect over secret comparisons, offline
+//! schedule planning (§4.2), IO scheduling (§4.4), appraisal and the
+//! data-market workflow (Fig 1).
+
+pub mod appraise;
+pub mod iosched;
+pub mod market;
+pub mod phase;
+pub mod planner;
+pub mod quickselect;
+pub mod selector;
+pub mod testutil;
+
+pub use iosched::SchedPolicy;
+pub use phase::{PhaseSchedule, ProxySpec};
+pub use selector::{
+    multi_phase_select, random_select, run_phase_mpc, SelectionOptions,
+    SelectionOutcome,
+};

@@ -1,0 +1,115 @@
+//! Phase schedules: ⟨l, w, d⟩ per phase plus selectivities (paper §4.1).
+
+/// One phase's proxy shape.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ProxySpec {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_mlp: usize,
+}
+
+impl ProxySpec {
+    pub fn tag(&self) -> String {
+        format!("l{}w{}d{}", self.n_layers, self.n_heads, self.d_mlp)
+    }
+}
+
+/// A multi-phase selection schedule. `selectivities[i]` = |S_i|/|S_{i−1}|;
+/// their product is the purchase budget fraction.
+#[derive(Clone, Debug)]
+pub struct PhaseSchedule {
+    pub proxies: Vec<ProxySpec>,
+    pub selectivities: Vec<f64>,
+}
+
+impl PhaseSchedule {
+    pub fn new(proxies: Vec<ProxySpec>, selectivities: Vec<f64>) -> Self {
+        assert_eq!(proxies.len(), selectivities.len());
+        assert!(selectivities.iter().all(|&a| a > 0.0 && a <= 1.0));
+        PhaseSchedule { proxies, selectivities }
+    }
+
+    pub fn n_phases(&self) -> usize {
+        self.proxies.len()
+    }
+
+    pub fn budget(&self) -> f64 {
+        self.selectivities.iter().product()
+    }
+
+    /// Survivor counts for an initial pool of n candidates.
+    pub fn survivor_counts(&self, n: usize) -> Vec<usize> {
+        let mut cur = n as f64;
+        self.selectivities
+            .iter()
+            .map(|&a| {
+                cur *= a;
+                (cur.round() as usize).max(1)
+            })
+            .collect()
+    }
+
+    /// The paper's default 2-phase schedule (§5.1): phase 1 = 1-layer
+    /// (NLP) or 3-layer (CV), 1 head, d=2; phase 2 = 3 layers, full
+    /// heads, d=16. Intermediate selectivity 1.5·budget.
+    pub fn default_two_phase(modality_cv: bool, full_heads: usize, budget: f64) -> Self {
+        let mid = (1.5 * budget).min(1.0);
+        PhaseSchedule::new(
+            vec![
+                ProxySpec {
+                    n_layers: if modality_cv { 3 } else { 1 },
+                    n_heads: 1,
+                    d_mlp: 2,
+                },
+                ProxySpec { n_layers: 3, n_heads: full_heads, d_mlp: 16 },
+            ],
+            vec![mid, budget / mid],
+        )
+    }
+
+    /// Single-phase schedule with the final (largest) proxy — the SPS
+    /// ablation baseline of §5.4.
+    pub fn single_phase(full_heads: usize, budget: f64) -> Self {
+        PhaseSchedule::new(
+            vec![ProxySpec { n_layers: 3, n_heads: full_heads, d_mlp: 16 }],
+            vec![budget],
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn survivor_counts_multiply_down() {
+        let s = PhaseSchedule::new(
+            vec![
+                ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+                ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 },
+            ],
+            vec![0.3, 0.6667],
+        );
+        let counts = s.survivor_counts(1000);
+        assert_eq!(counts, vec![300, 200]);
+        assert!((s.budget() - 0.2).abs() < 0.01);
+    }
+
+    #[test]
+    fn default_schedule_hits_budget() {
+        let s = PhaseSchedule::default_two_phase(false, 4, 0.2);
+        assert!((s.budget() - 0.2).abs() < 1e-9);
+        assert_eq!(s.proxies[0].n_layers, 1);
+        let cv = PhaseSchedule::default_two_phase(true, 4, 0.2);
+        assert_eq!(cv.proxies[0].n_layers, 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_selectivity_rejected() {
+        PhaseSchedule::new(
+            vec![ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 }],
+            vec![0.0],
+        );
+    }
+}

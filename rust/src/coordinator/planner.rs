@@ -1,0 +1,260 @@
+//! Schedule planning: measured-profile cost model + offline grid search
+//! (the paper's "SelectFormer determines the schedule via offline grid
+//! search", §4.2).
+//!
+//! MPC cost is exactly linear in the number of batches, so the cost model
+//! is EMPIRICAL: run one metered batch at the real shape (random weights —
+//! cost is data-independent), subtract the one-time setup, and extrapolate.
+//! This is both simpler and tighter than an analytic op-count model, and
+//! it is validated against full runs in the test suite.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::{synth, SynthSpec};
+use crate::models::{ModelConfig, Variant};
+use crate::mpc::net::NetConfig;
+
+use super::iosched::SchedPolicy;
+use super::phase::{PhaseSchedule, ProxySpec};
+use super::selector::{run_phase_mpc, SelectionOptions};
+use super::testutil;
+
+/// Measured per-phase cost profile at a given model shape + batch size.
+#[derive(Clone, Copy, Debug)]
+pub struct PhaseCostProfile {
+    pub cfg: ModelConfig,
+    pub batch: usize,
+    /// one-time session setup (weight sharing): bytes both ways
+    pub setup_bytes: u64,
+    pub setup_rounds: u64,
+    /// marginal per-batch forward cost
+    pub batch_bytes: u64,
+    pub batch_rounds: u64,
+    pub batch_compute_s: f64,
+}
+
+impl PhaseCostProfile {
+    /// Extrapolate to a phase over `n_points` candidates (+ QuickSelect).
+    pub fn estimate(&self, n_points: usize, net: &NetConfig, policy: SchedPolicy) -> f64 {
+        let n_batches = n_points.div_ceil(self.batch) as u64;
+        let bytes = self.setup_bytes + n_batches * self.batch_bytes + qs_bytes(n_points);
+        let mut rounds = self.setup_rounds + n_batches * self.batch_rounds;
+        let compute = n_batches as f64 * self.batch_compute_s;
+        let qs_rounds = qs_rounds(n_points);
+        match policy {
+            SchedPolicy::Sequential | SchedPolicy::Overlapped => {}
+            SchedPolicy::Coalesced | SchedPolicy::CoalescedOverlapped => {
+                // latency-bound rounds coalesce across the batch window
+                rounds = self.setup_rounds
+                    + ((n_batches * self.batch_rounds) as f64
+                        / super::iosched::COALESCE_WINDOW) as u64;
+            }
+        }
+        let lat = (rounds + qs_rounds) as f64 * net.latency;
+        let payload = bytes as f64 / net.bandwidth / 2.0; // both-ways → one-way max
+        match policy {
+            SchedPolicy::Sequential | SchedPolicy::Coalesced => lat + payload + compute,
+            _ => (lat + payload).max(compute) + 0.07 * (lat + payload).min(compute),
+        }
+    }
+}
+
+/// QuickSelect expected cost: ~3.4n comparisons at 432 B each (both ways),
+/// in ~2·log2(n) batched partition rounds of 9 LTZ rounds each.
+fn qs_bytes(n: usize) -> u64 {
+    (3.4 * n as f64 * 432.0) as u64
+}
+
+fn qs_rounds(n: usize) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    2 * (n as f64).log2().ceil() as u64 * 9
+}
+
+/// Measure a phase profile by running 1- and 2-batch sessions with random
+/// weights at the true shape (MPC traffic is data-independent).
+pub fn profile_phase(cfg: &ModelConfig, batch: usize) -> Result<PhaseCostProfile> {
+    let dir = std::env::temp_dir().join("sf_planner_profiles");
+    let path: PathBuf = dir.join(format!(
+        "p_{}_{}_{}_{}_{}_{}.sfw",
+        cfg.n_layers, cfg.n_heads, cfg.d_mlp, cfg.d_model, cfg.seq_len, cfg.variant_code
+    ));
+    testutil::write_random_sfw(&path, cfg);
+    let wf = crate::models::WeightFile::load(&path)?;
+    let ds = synth(
+        &SynthSpec {
+            n_classes: cfg.n_classes,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            ..Default::default()
+        },
+        2 * batch,
+        false,
+        7,
+    );
+    let opts = SelectionOptions { batch, ..Default::default() };
+    let one: Vec<usize> = (0..batch).collect();
+    let two: Vec<usize> = (0..2 * batch).collect();
+    let o1 = run_phase_mpc(&wf, &ds, &one, 1, &opts)?;
+    let o2 = run_phase_mpc(&wf, &ds, &two, 1, &opts)?;
+    let b1 = o1.meter_p0.bytes + o1.meter_p1.bytes;
+    let b2 = o2.meter_p0.bytes + o2.meter_p1.bytes;
+    let r1 = o1.meter_p0.rounds;
+    let r2 = o2.meter_p0.rounds;
+    let c1 = o1.meter_p0.compute_s.max(o1.meter_p1.compute_s);
+    let c2 = o2.meter_p0.compute_s.max(o2.meter_p1.compute_s);
+    let batch_bytes = b2.saturating_sub(b1);
+    let batch_rounds = r2.saturating_sub(r1);
+    Ok(PhaseCostProfile {
+        cfg: *cfg,
+        batch,
+        setup_bytes: b1.saturating_sub(batch_bytes),
+        setup_rounds: r1.saturating_sub(batch_rounds),
+        batch_bytes,
+        batch_rounds,
+        batch_compute_s: (c2 - c1).max(1e-6),
+    })
+}
+
+/// One candidate schedule's estimated end-to-end delay.
+pub fn estimate_schedule(
+    base: &ModelConfig,
+    schedule: &PhaseSchedule,
+    n_total: usize,
+    batch: usize,
+    net: &NetConfig,
+    policy: SchedPolicy,
+) -> Result<f64> {
+    let counts = schedule.survivor_counts(n_total);
+    let mut pool = n_total;
+    let mut total = 0.0;
+    for (spec, &keep) in schedule.proxies.iter().zip(&counts) {
+        let cfg = ModelConfig::proxy(base, spec.n_layers, spec.n_heads, spec.d_mlp)
+            .with_variant(Variant::Mlp);
+        let profile = profile_phase(&cfg, batch)?;
+        total += profile.estimate(pool, net, policy);
+        pool = keep;
+    }
+    Ok(total)
+}
+
+/// The grid the paper searches (§5.4 Tables 4/5): 1–3 phases over the
+/// d ∈ {2, 8, 16} MLP dims, final proxy pinned to ⟨3, full, 16⟩.
+pub fn schedule_grid(modality_cv: bool, full_heads: usize, budget: f64) -> Vec<PhaseSchedule> {
+    let p1l = if modality_cv { 3 } else { 1 };
+    let last = ProxySpec { n_layers: 3, n_heads: full_heads, d_mlp: 16 };
+    let mut out = vec![PhaseSchedule::new(vec![last], vec![budget])];
+    for d1 in [2usize, 4, 8] {
+        let mid = (1.5 * budget).min(1.0);
+        out.push(PhaseSchedule::new(
+            vec![ProxySpec { n_layers: p1l, n_heads: 1, d_mlp: d1 }, last],
+            vec![mid, budget / mid],
+        ));
+    }
+    for (d1, d2) in [(2usize, 2usize), (2, 8), (2, 16)] {
+        let s1 = (2.5 * budget).min(1.0);
+        let s2 = (1.5 * budget / s1).min(1.0);
+        out.push(PhaseSchedule::new(
+            vec![
+                ProxySpec { n_layers: p1l, n_heads: 1, d_mlp: d1 },
+                ProxySpec { n_layers: p1l, n_heads: 1, d_mlp: d2 },
+                last,
+            ],
+            vec![s1, s2, budget / (s1 * s2)],
+        ));
+    }
+    out
+}
+
+/// Offline grid search: the cheapest schedule for this workload.
+pub fn plan(
+    base: &ModelConfig,
+    modality_cv: bool,
+    n_total: usize,
+    budget: f64,
+    batch: usize,
+    net: &NetConfig,
+) -> Result<(PhaseSchedule, f64)> {
+    let mut best: Option<(PhaseSchedule, f64)> = None;
+    for sched in schedule_grid(modality_cv, base.n_heads, budget) {
+        let cost = estimate_schedule(
+            base,
+            &sched,
+            n_total,
+            batch,
+            net,
+            SchedPolicy::CoalescedOverlapped,
+        )?;
+        if best.as_ref().map(|(_, c)| cost < *c).unwrap_or(true) {
+            best = Some((sched, cost));
+        }
+    }
+    Ok(best.expect("non-empty grid"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil::tiny_proxy_cfg;
+
+    #[test]
+    fn profile_extrapolates_within_tolerance() {
+        // measure a profile, then check it predicts a 4-batch phase
+        let cfg = tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8);
+        let batch = 8;
+        let profile = profile_phase(&cfg, batch).unwrap();
+        let net = NetConfig::default();
+        let est = profile.estimate(4 * batch, &net, SchedPolicy::Sequential);
+
+        // actual 4-batch run
+        let dir = std::env::temp_dir().join("sf_planner_check");
+        let path = dir.join("p.sfw");
+        testutil::write_random_sfw(&path, &cfg);
+        let wf = crate::models::WeightFile::load(&path).unwrap();
+        let ds = synth(
+            &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+            4 * batch,
+            false,
+            9,
+        );
+        let opts = SelectionOptions { batch, ..Default::default() };
+        let out = run_phase_mpc(&wf, &ds, &(0..4 * batch).collect::<Vec<_>>(), 4, &opts)
+            .unwrap();
+        let actual = out.serial_delay;
+        let ratio = est / actual;
+        assert!(
+            (0.6..1.6).contains(&ratio),
+            "estimate {est:.3}s vs actual {actual:.3}s (ratio {ratio:.2})"
+        );
+    }
+
+    #[test]
+    fn grid_has_one_two_and_three_phase_schedules() {
+        let grid = schedule_grid(false, 4, 0.2);
+        assert!(grid.iter().any(|s| s.n_phases() == 1));
+        assert!(grid.iter().any(|s| s.n_phases() == 2));
+        assert!(grid.iter().any(|s| s.n_phases() == 3));
+        for s in &grid {
+            assert!((s.budget() - 0.2).abs() < 1e-6, "budget broken: {s:?}");
+        }
+    }
+
+    #[test]
+    fn multi_phase_beats_single_phase_on_big_pools() {
+        // with many candidates, filtering with a tiny phase-1 proxy must be
+        // cheaper than running the big proxy on everything (paper §5.4)
+        let base = tiny_proxy_cfg(3, 4, 16, 16, 64, 2, 8);
+        let net = NetConfig::default();
+        let single = PhaseSchedule::single_phase(4, 0.2);
+        let two = PhaseSchedule::default_two_phase(false, 4, 0.2);
+        let c1 =
+            estimate_schedule(&base, &single, 4000, 8, &net, SchedPolicy::Sequential)
+                .unwrap();
+        let c2 = estimate_schedule(&base, &two, 4000, 8, &net, SchedPolicy::Sequential)
+            .unwrap();
+        assert!(c2 < c1, "two-phase {c2:.1}s !< single-phase {c1:.1}s");
+    }
+}

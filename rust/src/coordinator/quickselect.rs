@@ -1,0 +1,180 @@
+//! Top-k selection over SECRET values with public outcome bits —
+//! the paper's "QuickSelect over MPC" (§4.1).
+//!
+//! Each partition step compares the pivot against every remaining element
+//! in ONE batched LTZ (constant rounds per partition, O(n) comparisons in
+//! expectation overall).  Only the binary comparison outcomes are revealed
+//! — i.e. the *rank order* around pivots, exactly the leakage the paper
+//! declares.  Entropy values themselves never leave their shares.
+
+use crate::mpc::cmp;
+use crate::mpc::proto::{open, PartyCtx, Shared};
+use crate::tensor::TensorR;
+
+/// Statistics of one top-k run (for the cost model / tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SelectStats {
+    pub comparisons: u64,
+    pub partition_rounds: u64,
+}
+
+/// Indices (into `values`) of the k largest shared values.
+/// Both parties run this symmetrically and learn the same index set.
+pub fn top_k_indices(
+    ctx: &mut PartyCtx,
+    values: &Shared,
+    k: usize,
+) -> (Vec<usize>, SelectStats) {
+    let n = values.len();
+    assert!(k <= n, "k={k} > n={n}");
+    let mut stats = SelectStats::default();
+    if k == 0 {
+        return (Vec::new(), stats);
+    }
+    if k == n {
+        return ((0..n).collect(), stats);
+    }
+    let mut pool: Vec<usize> = (0..n).collect();
+    let mut selected: Vec<usize> = Vec::with_capacity(k);
+    let mut need = k;
+    // both parties must pick the SAME pivot: derive from the dealer-shared
+    // randomness (public coin)
+    while need > 0 && !pool.is_empty() {
+        if pool.len() == need {
+            selected.extend_from_slice(&pool);
+            break;
+        }
+        let coin = public_coin(ctx, pool.len());
+        let pivot_idx = pool[coin];
+        let rest: Vec<usize> =
+            pool.iter().copied().filter(|&i| i != pivot_idx).collect();
+        // batched compare: rest[i] > pivot ?
+        let m = rest.len();
+        let pivot_share = values.0.data[pivot_idx];
+        let a = Shared(TensorR::from_vec(
+            rest.iter().map(|&i| values.0.data[i]).collect(),
+            &[m],
+        ));
+        let b = Shared(TensorR::from_vec(vec![pivot_share; m], &[m]));
+        let gt_bits = ctx.op("qs_partition", |ctx| {
+            let g = cmp::gt(ctx, &a, &b);
+            open(ctx, &g) // reveal ONLY the outcome bits
+        });
+        stats.comparisons += m as u64;
+        stats.partition_rounds += 1;
+        let mut above = Vec::new();
+        let mut below = Vec::new();
+        for (j, &i) in rest.iter().enumerate() {
+            if gt_bits.data[j] == 1 {
+                above.push(i);
+            } else {
+                below.push(i);
+            }
+        }
+        use std::cmp::Ordering;
+        match above.len().cmp(&need) {
+            Ordering::Equal => {
+                selected.extend_from_slice(&above);
+                break;
+            }
+            Ordering::Less => {
+                // everything above the pivot survives, plus the pivot
+                selected.extend_from_slice(&above);
+                selected.push(pivot_idx);
+                need -= above.len() + 1;
+                pool = below;
+                if need == 0 {
+                    break;
+                }
+            }
+            Ordering::Greater => {
+                pool = above;
+            }
+        }
+    }
+    selected.sort_unstable();
+    (selected, stats)
+}
+
+/// A public coin both parties derive identically from dealer randomness.
+fn public_coin(ctx: &mut PartyCtx, n: usize) -> usize {
+    // dealer streams are synchronized; draw one triple element as the coin
+    let (a, _, _) = ctx.dealer.triples(1);
+    // the SHARE differs per party, but a0+a1 is common — open it cheaply
+    let opened = open(
+        ctx,
+        &Shared(TensorR::from_vec(vec![a[0]], &[1])),
+    );
+    (opened.data[0] as u64 % n as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::engine::run_pair;
+    use crate::mpc::proto::{recv_share, share_input};
+    use crate::tensor::{TensorF, TensorR};
+    use crate::util::Rng;
+
+    fn run_topk(vals: Vec<f32>, k: usize) -> (Vec<usize>, SelectStats) {
+        let n = vals.len();
+        let x = TensorR::from_f32(&TensorF::from_vec(vals, &[n]));
+        let ((idx, st), (idx1, _)) = run_pair(
+            77,
+            {
+                let x = x.clone();
+                move |ctx| {
+                    let sh = share_input(ctx, &x);
+                    top_k_indices(ctx, &sh, k)
+                }
+            },
+            move |ctx| {
+                let sh = recv_share(ctx, &[n]);
+                top_k_indices(ctx, &sh, k)
+            },
+        );
+        assert_eq!(idx, idx1, "parties must agree on the selection");
+        (idx, st)
+    }
+
+    fn brute_topk(vals: &[f32], k: usize) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..vals.len()).collect();
+        idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+        let mut out = idx[..k].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn selects_the_top_k() {
+        let vals = vec![0.1f32, 5.0, -3.0, 2.5, 2.4, 7.7, 0.0, -0.5];
+        let (got, _) = run_topk(vals.clone(), 3);
+        assert_eq!(got, brute_topk(&vals, 3));
+    }
+
+    #[test]
+    fn random_sweep_matches_bruteforce() {
+        let mut r = Rng::new(3);
+        for trial in 0..6 {
+            let n = 20 + r.below(80);
+            let k = 1 + r.below(n - 1);
+            let vals: Vec<f32> =
+                (0..n).map(|_| r.uniform(-100.0, 100.0)).collect();
+            let (got, st) = run_topk(vals.clone(), k);
+            assert_eq!(got, brute_topk(&vals, k), "trial {trial} n={n} k={k}");
+            // linear comparison budget (expectation ~3.4n; allow slack)
+            assert!(
+                st.comparisons < (8 * n) as u64,
+                "trial {trial}: {} comparisons for n={n}",
+                st.comparisons
+            );
+        }
+    }
+
+    #[test]
+    fn k_equals_n_and_zero() {
+        let vals = vec![1.0f32, 2.0, 3.0];
+        assert_eq!(run_topk(vals.clone(), 3).0, vec![0, 1, 2]);
+        assert_eq!(run_topk(vals, 0).0, Vec::<usize>::new());
+    }
+}

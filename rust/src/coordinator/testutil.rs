@@ -1,0 +1,185 @@
+//! Test/bench helpers: synthesize a random `.sfw` (proxy or full target)
+//! for any [`ModelConfig`], so the MPC pipeline and the cost profiler can
+//! run at arbitrary shapes — including paper scale — without
+//! `make artifacts`.
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::models::ModelConfig;
+use crate::util::Rng;
+
+fn put_tensor(out: &mut Vec<u8>, name: &str, shape: &[usize], data: &[f32]) {
+    out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.push(0u8); // dtype f32
+    out.extend_from_slice(&(shape.len() as u32).to_le_bytes());
+    for &d in shape {
+        out.extend_from_slice(&(d as u64).to_le_bytes());
+    }
+    for &v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Write a random `.sfw` matching `cfg` (FFN tensors iff `cfg.d_ff > 0`,
+/// emulation MLPs iff `cfg.d_ff == 0`).
+pub fn write_random_sfw(path: &Path, cfg: &ModelConfig) {
+    let mut rng = Rng::new(0xbadc0de ^ cfg.n_layers as u64);
+    let dm = cfg.d_model;
+    let aw = cfg.attn_width();
+    let (s, d, c) = (cfg.seq_len, cfg.d_mlp.max(1), cfg.n_classes);
+    type Entry = (String, Vec<usize>, Vec<f32>);
+    let mut tensors: Vec<Entry> = Vec::new();
+    fn push(ts: &mut Vec<Entry>, rng: &mut Rng, name: String, shape: Vec<usize>, std: f32) {
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        ts.push((name, shape, data));
+    }
+    push(&mut tensors, &mut rng, "emb.tok".into(), vec![cfg.vocab, dm], 0.05);
+    push(&mut tensors, &mut rng, "emb.pos".into(), vec![s, dm], 0.05);
+    for i in 0..cfg.n_layers {
+        let p = |t: &str| format!("layer{i}.{t}");
+        for (w, b, wi, wo) in
+            [("wq", "bq", dm, aw), ("wk", "bk", dm, aw), ("wv", "bv", dm, aw), ("wo", "bo", aw, dm)]
+        {
+            push(&mut tensors, &mut rng, p(w), vec![wi, wo], 0.08);
+            push(&mut tensors, &mut rng, p(b), vec![wo], 0.01);
+        }
+        tensors.push((p("ln1.gamma"), vec![dm], vec![1.0; dm]));
+        tensors.push((p("ln1.beta"), vec![dm], vec![0.0; dm]));
+        if cfg.d_ff > 0 {
+            push(&mut tensors, &mut rng, p("ffn.w1"), vec![dm, cfg.d_ff], 0.08);
+            push(&mut tensors, &mut rng, p("ffn.b1"), vec![cfg.d_ff], 0.01);
+            push(&mut tensors, &mut rng, p("ffn.w2"), vec![cfg.d_ff, dm], 0.08);
+            push(&mut tensors, &mut rng, p("ffn.b2"), vec![dm], 0.01);
+            tensors.push((p("ln2.gamma"), vec![dm], vec![1.0; dm]));
+            tensors.push((p("ln2.beta"), vec![dm], vec![0.0; dm]));
+        } else {
+            push(&mut tensors, &mut rng, p("mlp_sm.w1"), vec![s, d], 0.2);
+            push(&mut tensors, &mut rng, p("mlp_sm.b1"), vec![d], 0.01);
+            push(&mut tensors, &mut rng, p("mlp_sm.w2"), vec![d, s], 0.2);
+            push(&mut tensors, &mut rng, p("mlp_sm.b2"), vec![s], 0.01);
+            push(&mut tensors, &mut rng, p("mlp_ln.w1"), vec![1, d], 0.2);
+            push(&mut tensors, &mut rng, p("mlp_ln.b1"), vec![d], 0.01);
+            push(&mut tensors, &mut rng, p("mlp_ln.w2"), vec![d, 1], 0.2);
+            push(&mut tensors, &mut rng, p("mlp_ln.b2"), vec![1], 0.01);
+        }
+    }
+    push(&mut tensors, &mut rng, "cls.w".into(), vec![dm, c], 0.1);
+    push(&mut tensors, &mut rng, "cls.b".into(), vec![c], 0.01);
+    if cfg.d_ff == 0 {
+        push(&mut tensors, &mut rng, "mlp_se.w1".into(), vec![c, d], 0.2);
+        push(&mut tensors, &mut rng, "mlp_se.b1".into(), vec![d], 0.01);
+        push(&mut tensors, &mut rng, "mlp_se.w2".into(), vec![d, 1], 0.2);
+        push(&mut tensors, &mut rng, "mlp_se.b2".into(), vec![1], 0.01);
+    }
+    let meta: Vec<(String, f32)> = vec![
+        ("meta.n_layers".into(), cfg.n_layers as f32),
+        ("meta.n_heads".into(), cfg.n_heads as f32),
+        ("meta.d_model".into(), dm as f32),
+        ("meta.d_mlp".into(), cfg.d_mlp as f32),
+        ("meta.seq_len".into(), s as f32),
+        ("meta.vocab".into(), cfg.vocab as f32),
+        ("meta.n_classes".into(), c as f32),
+        ("meta.variant".into(), cfg.variant_code as f32),
+        ("meta.d_head".into(), cfg.d_head as f32),
+    ];
+    let mut out = Vec::new();
+    out.extend_from_slice(b"SFWT");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&((tensors.len() + meta.len()) as u32).to_le_bytes());
+    for (name, shape, data) in &tensors {
+        put_tensor(&mut out, name, shape, data);
+    }
+    for (name, v) in &meta {
+        put_tensor(&mut out, name, &[], &[*v]);
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent).unwrap();
+    }
+    std::fs::File::create(path).unwrap().write_all(&out).unwrap();
+}
+
+/// Small proxy config for tests: ⟨l, w, d⟩ over a 32-wide trunk.
+pub fn tiny_proxy_cfg(
+    n_layers: usize,
+    n_heads: usize,
+    d_mlp: usize,
+    seq_len: usize,
+    vocab: usize,
+    n_classes: usize,
+    d_head: usize,
+) -> ModelConfig {
+    ModelConfig {
+        n_layers,
+        n_heads,
+        d_model: d_head * 4,
+        d_head,
+        d_mlp,
+        seq_len,
+        vocab,
+        n_classes,
+        variant_code: 0,
+        d_ff: 0,
+        attn_scale_dim: d_head,
+    }
+}
+
+/// Convenience wrapper kept for the selector tests.
+#[allow(clippy::too_many_arguments)]
+pub fn write_random_proxy_sfw(
+    path: &Path,
+    n_layers: usize,
+    n_heads: usize,
+    d_mlp: usize,
+    seq_len: usize,
+    vocab: usize,
+    n_classes: usize,
+    d_head: usize,
+) {
+    let cfg = tiny_proxy_cfg(n_layers, n_heads, d_mlp, seq_len, vocab, n_classes, d_head);
+    write_random_sfw(path, &cfg);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::WeightFile;
+
+    #[test]
+    fn random_sfw_loads_and_configures() {
+        let path = std::env::temp_dir().join("sf_testutil").join("r.sfw");
+        write_random_proxy_sfw(&path, 2, 2, 4, 16, 64, 3, 8);
+        let wf = WeightFile::load(&path).unwrap();
+        let cfg = wf.config().unwrap();
+        assert_eq!(cfg.n_layers, 2);
+        assert_eq!(cfg.n_heads, 2);
+        assert_eq!(cfg.d_model, 32);
+        assert_eq!(cfg.d_ff, 0);
+        assert_eq!(cfg.n_classes, 3);
+    }
+
+    #[test]
+    fn target_sfw_has_ffn() {
+        let path = std::env::temp_dir().join("sf_testutil").join("t.sfw");
+        let cfg = ModelConfig {
+            n_layers: 1,
+            n_heads: 2,
+            d_model: 16,
+            d_head: 8,
+            d_mlp: 2,
+            seq_len: 8,
+            vocab: 32,
+            n_classes: 2,
+            variant_code: 3,
+            d_ff: 32,
+            attn_scale_dim: 8,
+        };
+        write_random_sfw(&path, &cfg);
+        let wf = WeightFile::load(&path).unwrap();
+        assert_eq!(wf.config().unwrap().d_ff, 32);
+        assert!(wf.get("layer0.ffn.w1").is_ok());
+        assert!(wf.tensors.get("layer0.mlp_sm.w1").is_none());
+    }
+}

@@ -1,0 +1,225 @@
+//! Benchmark datasets: the SFDS `.bin` loader (written by
+//! python/selectformer/datasets.py) plus a mirror synthetic generator for
+//! tests/benches that must not depend on `make artifacts`.
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt};
+
+use crate::util::Rng;
+
+const MAGIC: &[u8; 4] = b"SFDS";
+const IDX_MAGIC: &[u8; 4] = b"SFIX";
+
+/// An unlabeled-from-the-selector's-view dataset (labels are carried for
+/// the training/eval side of the experiments; the selection path never
+/// reads them — enforced by the coordinator API taking tokens only).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub tokens: Vec<u32>, // (n, seq_len) row-major
+    pub labels: Vec<u32>, // (n,)
+    pub n: usize,
+    pub seq_len: usize,
+    pub n_classes: usize,
+    pub vocab: usize,
+}
+
+impl Dataset {
+    pub fn load(path: &Path) -> Result<Dataset> {
+        let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic");
+        }
+        let version = r.read_u32::<LittleEndian>()?;
+        if version != 1 {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let n = r.read_u32::<LittleEndian>()? as usize;
+        let seq_len = r.read_u32::<LittleEndian>()? as usize;
+        let n_classes = r.read_u32::<LittleEndian>()? as usize;
+        let vocab = r.read_u32::<LittleEndian>()? as usize;
+        let mut inter = vec![0u32; n * (seq_len + 1)];
+        r.read_u32_into::<LittleEndian>(&mut inter)?;
+        let mut tokens = Vec::with_capacity(n * seq_len);
+        let mut labels = Vec::with_capacity(n);
+        for row in inter.chunks(seq_len + 1) {
+            labels.push(row[0]);
+            tokens.extend_from_slice(&row[1..]);
+        }
+        let name = path
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        Ok(Dataset { name, tokens, labels, n, seq_len, n_classes, vocab })
+    }
+
+    pub fn example(&self, i: usize) -> &[u32] {
+        &self.tokens[i * self.seq_len..(i + 1) * self.seq_len]
+    }
+
+    /// Gather tokens for a set of indices (selection output → train input).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<u32>, Vec<u32>) {
+        let mut toks = Vec::with_capacity(idx.len() * self.seq_len);
+        let mut labs = Vec::with_capacity(idx.len());
+        for &i in idx {
+            toks.extend_from_slice(self.example(i));
+            labs.push(self.labels[i]);
+        }
+        (toks, labs)
+    }
+
+    /// Class histogram (diagnostics for the imbalance experiments).
+    pub fn class_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.n_classes];
+        for &l in &self.labels {
+            h[l as usize] += 1;
+        }
+        h
+    }
+}
+
+/// Load an SFIX index file (bootstrap sample indices).
+pub fn load_indices(path: &Path) -> Result<Vec<usize>> {
+    let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != IDX_MAGIC {
+        bail!("{path:?}: bad magic");
+    }
+    let version = r.read_u32::<LittleEndian>()?;
+    if version != 1 {
+        bail!("unsupported version {version}");
+    }
+    let n = r.read_u32::<LittleEndian>()? as usize;
+    let mut idx = vec![0u32; n];
+    r.read_u32_into::<LittleEndian>(&mut idx)?;
+    Ok(idx.into_iter().map(|v| v as usize).collect())
+}
+
+/// Synthetic generator mirroring python/selectformer/datasets.py (not
+/// bit-identical — independent PRNGs — but statistically equivalent:
+/// geometric class skew, per-class signal-token bands, per-example
+/// difficulty).
+pub struct SynthSpec {
+    pub n_classes: usize,
+    pub skew: f64,
+    pub signal: f64,
+    pub seq_len: usize,
+    pub vocab: usize,
+    /// fraction of each class's signal band shared with its neighbour
+    pub overlap: f64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec {
+            n_classes: 2,
+            skew: 0.10,
+            signal: 0.10,
+            seq_len: 32,
+            vocab: 512,
+            overlap: 0.5,
+        }
+    }
+}
+
+pub fn synth(spec: &SynthSpec, n: usize, balanced: bool, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let background = spec.vocab / 2;
+    let band = (spec.vocab - background) / spec.n_classes;
+    let stride = ((band as f64) * (1.0 - spec.overlap)).max(1.0) as usize;
+    let priors: Vec<f64> = (0..spec.n_classes)
+        .map(|c| if balanced { 1.0 } else { spec.skew.powi(c as i32) })
+        .collect();
+    let mut tokens = Vec::with_capacity(n * spec.seq_len);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let c = rng.categorical(&priors);
+        labels.push(c as u32);
+        let difficulty = rng.f64() * 1.3 + 0.35;
+        let lo = background + c * stride;
+        let hi = (lo + band).min(spec.vocab);
+        for _ in 0..spec.seq_len {
+            if rng.f64() < spec.signal * difficulty {
+                tokens.push((lo + rng.below(hi - lo)) as u32);
+            } else {
+                tokens.push(rng.below(background) as u32);
+            }
+        }
+    }
+    Dataset {
+        name: "synth".into(),
+        tokens,
+        labels,
+        n,
+        seq_len: spec.seq_len,
+        n_classes: spec.n_classes,
+        vocab: spec.vocab,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_is_skewed_and_sized() {
+        let ds = synth(&SynthSpec::default(), 2000, false, 1);
+        assert_eq!(ds.n, 2000);
+        assert_eq!(ds.tokens.len(), 2000 * 32);
+        let h = ds.class_histogram();
+        assert!(h[0] > 3 * h[1], "expected skew, got {h:?}");
+    }
+
+    #[test]
+    fn synth_balanced_test_split() {
+        let ds = synth(&SynthSpec::default(), 2000, true, 2);
+        let h = ds.class_histogram();
+        let ratio = h[0] as f64 / h[1] as f64;
+        assert!((0.8..1.25).contains(&ratio), "{h:?}");
+    }
+
+    #[test]
+    fn gather_selects_rows() {
+        let ds = synth(&SynthSpec::default(), 10, false, 3);
+        let (t, l) = ds.gather(&[3, 7]);
+        assert_eq!(t.len(), 2 * ds.seq_len);
+        assert_eq!(l.len(), 2);
+        assert_eq!(&t[..ds.seq_len], ds.example(3));
+    }
+
+    #[test]
+    fn signal_tokens_correlate_with_class() {
+        let spec = SynthSpec::default();
+        let ds = synth(&spec, 3000, true, 4);
+        let background = spec.vocab / 2;
+        let band = (spec.vocab - background) / spec.n_classes;
+        let stride = ((band as f64) * (1.0 - spec.overlap)) as usize;
+        // the sub-band [background, background+stride) is EXCLUSIVE to
+        // class 0 even with overlap
+        let mut in_class = 0usize;
+        let mut out_class = 0usize;
+        for i in 0..ds.n {
+            let c = ds.labels[i] as usize;
+            for &t in ds.example(i) {
+                let t = t as usize;
+                if t >= background && t < background + stride {
+                    if c == 0 {
+                        in_class += 1;
+                    } else {
+                        out_class += 1;
+                    }
+                }
+            }
+        }
+        assert!(in_class > 5 * out_class.max(1), "{in_class} vs {out_class}");
+    }
+}

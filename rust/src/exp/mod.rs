@@ -1,0 +1,313 @@
+//! Experiment harness: resolves artifact paths for a (target, benchmark)
+//! cell and provides the end-to-end flows the CLI / examples / paper-table
+//! benches share — select (Ours / Random / Oracle / baselines), train the
+//! target on the purchase, evaluate.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{
+    market::{self, Budget},
+    multi_phase_select, random_select, PhaseSchedule, SelectionOptions,
+    SelectionOutcome,
+};
+use crate::data::{self, Dataset};
+use crate::models::WeightFile;
+use crate::runtime::Runtime;
+use crate::train::{self, Trainer};
+
+/// Artifact layout for one (target model, benchmark) cell.
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub target: String,
+    pub bench: String,
+    pub root: PathBuf,
+}
+
+impl Cell {
+    pub fn new(root: &Path, target: &str, bench: &str) -> Cell {
+        Cell {
+            target: target.to_string(),
+            bench: bench.to_string(),
+            root: root.to_path_buf(),
+        }
+    }
+
+    /// Artifacts root: $SELECTFORMER_ARTIFACTS or ./artifacts.
+    pub fn default_root() -> PathBuf {
+        std::env::var("SELECTFORMER_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn dir(&self) -> PathBuf {
+        self.root.join(&self.target).join(&self.bench)
+    }
+
+    pub fn exists(&self) -> bool {
+        self.dir().join(".done").exists()
+    }
+
+    pub fn proxy_phase(&self, i: usize) -> PathBuf {
+        self.dir().join(format!("proxy_phase{i}.sfw"))
+    }
+
+    pub fn proxy_variant(&self, tag: &str) -> PathBuf {
+        self.dir().join(format!("proxy_{tag}.sfw"))
+    }
+
+    pub fn target_init(&self) -> PathBuf {
+        self.dir().join("target_init.sfw")
+    }
+
+    pub fn boot_idx(&self) -> PathBuf {
+        self.dir().join("boot_idx.bin")
+    }
+
+    fn hlo(&self, kind: &str) -> PathBuf {
+        self.root
+            .join("hlo")
+            .join(format!("{}_{}_{kind}.hlo.txt", self.target, self.bench))
+    }
+
+    pub fn train_step_hlo(&self) -> PathBuf {
+        self.hlo(&format!("train_step_b{}", train::TRAIN_BATCH))
+    }
+
+    pub fn eval_hlo(&self) -> PathBuf {
+        self.hlo(&format!("eval_b{}", train::EVAL_BATCH))
+    }
+
+    pub fn oracle_hlo(&self) -> PathBuf {
+        self.hlo("oracle_entropy_b64")
+    }
+
+    pub fn proxy_fwd_hlo(&self, phase: usize) -> PathBuf {
+        self.hlo(&format!("proxy_p{phase}_fwd_b64"))
+    }
+
+    pub fn train_dataset(&self) -> Result<Dataset> {
+        Dataset::load(&self.root.join("data").join(format!("{}.train.bin", self.bench)))
+    }
+
+    pub fn test_dataset(&self) -> Result<Dataset> {
+        Dataset::load(&self.root.join("data").join(format!("{}.test.bin", self.bench)))
+    }
+
+    pub fn bootstrap_indices(&self) -> Result<Vec<usize>> {
+        data::load_indices(&self.boot_idx())
+    }
+}
+
+/// Which selector produced a purchase set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Ours,
+    Random,
+    Oracle,
+    /// Table 2 ablations / Table 3 baselines: named proxy variant file
+    Variant(&'static str),
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::Ours => "Ours".into(),
+            Method::Random => "Random".into(),
+            Method::Oracle => "Oracle".into(),
+            Method::Variant(v) => v.to_string(),
+        }
+    }
+}
+
+/// A full selection run: purchased indices + (for MPC methods) the
+/// selection outcome with meters.
+pub struct Purchase {
+    pub indices: Vec<usize>,
+    pub outcome: Option<SelectionOutcome>,
+    pub bootstrap: Vec<usize>,
+}
+
+/// Run the paper's full pre-purchase pipeline for one method.
+///
+/// Budget semantics follow §5.1: `budget` is the fraction of the dataset
+/// purchased in total; the bootstrap sample (already fixed in the
+/// artifacts) counts toward it.
+pub fn select(
+    cell: &Cell,
+    method: Method,
+    budget: f64,
+    opts: &SelectionOptions,
+    rt: Option<&mut Runtime>,
+) -> Result<Purchase> {
+    let ds = cell.train_dataset()?;
+    let bootstrap = cell.bootstrap_indices()?;
+    let b = Budget::from_fraction(ds.n, budget, bootstrap.len() as f64 / (budget * ds.n as f64));
+    let candidates = market::selection_candidates(ds.n, &bootstrap);
+    let keep = b.selection_points().min(candidates.len());
+    match method {
+        Method::Random => {
+            let picked = random_select(candidates.len(), keep, 0xabcd ^ ds.n as u64);
+            let indices: Vec<usize> = picked.iter().map(|&j| candidates[j]).collect();
+            Ok(Purchase { indices, outcome: None, bootstrap })
+        }
+        Method::Oracle => {
+            let rt = rt.context("Oracle selection needs the PJRT runtime")?;
+            let weights = WeightFile::load(&cell.target_init())?;
+            let ent = train::oracle_entropies(
+                rt,
+                &cell.oracle_hlo(),
+                &weights,
+                &ds,
+                &candidates,
+                64,
+            )?;
+            let picked = train::top_k_clear(&ent, keep);
+            let indices: Vec<usize> = picked.iter().map(|&j| candidates[j]).collect();
+            Ok(Purchase { indices, outcome: None, bootstrap })
+        }
+        Method::Ours => {
+            let schedule = default_schedule_for(cell, budget, &bootstrap, ds.n)?;
+            let p1 = cell.proxy_phase(1);
+            let p2 = cell.proxy_phase(2);
+            let paths: Vec<&Path> = match schedule.n_phases() {
+                1 => vec![&p2],
+                _ => vec![&p1, &p2],
+            };
+            let outcome =
+                multi_phase_select(&paths, &schedule, &ds, candidates, opts)?;
+            Ok(Purchase {
+                indices: outcome.selected.clone(),
+                outcome: Some(outcome),
+                bootstrap,
+            })
+        }
+        Method::Variant(tag) => {
+            // single-phase selection with the named proxy variant
+            let path = cell.proxy_variant(tag);
+            if !path.exists() {
+                bail!("variant {tag} not built for {}/{}", cell.target, cell.bench);
+            }
+            let frac = keep as f64 / candidates.len() as f64;
+            let schedule = PhaseSchedule::new(
+                vec![crate::coordinator::ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 }],
+                vec![frac.clamp(1e-6, 1.0)],
+            );
+            let outcome = multi_phase_select(
+                &[path.as_path()],
+                &schedule,
+                &ds,
+                candidates,
+                opts,
+            )?;
+            Ok(Purchase {
+                indices: outcome.selected.clone(),
+                outcome: Some(outcome),
+                bootstrap,
+            })
+        }
+    }
+}
+
+/// The paper's default 2-phase schedule sized so that phase-N output +
+/// bootstrap = budget·|D|.
+fn default_schedule_for(
+    cell: &Cell,
+    budget: f64,
+    bootstrap: &[usize],
+    n_dataset: usize,
+) -> Result<PhaseSchedule> {
+    let wf = WeightFile::load(&cell.proxy_phase(2))
+        .or_else(|_| WeightFile::load(&cell.proxy_phase(1)))?;
+    let cfg = wf.config()?;
+    let candidates = n_dataset - bootstrap.len();
+    let keep = ((budget * n_dataset as f64) as usize).saturating_sub(bootstrap.len());
+    let final_frac = (keep as f64 / candidates as f64).clamp(1e-6, 1.0);
+    let is_cv = cell.bench.starts_with("cifar");
+    let mid = (1.5 * final_frac).min(1.0);
+    Ok(PhaseSchedule::new(
+        vec![
+            crate::coordinator::ProxySpec {
+                n_layers: if is_cv { 3 } else { 1 },
+                n_heads: 1,
+                d_mlp: 2,
+            },
+            crate::coordinator::ProxySpec {
+                n_layers: 3,
+                n_heads: cfg.n_heads,
+                d_mlp: 16,
+            },
+        ],
+        vec![mid, final_frac / mid],
+    ))
+}
+
+/// Train the target on a purchase (bootstrap ∪ selected) and return
+/// (loss curve, test accuracy).
+pub fn train_and_eval(
+    cell: &Cell,
+    rt: &mut Runtime,
+    purchase: &Purchase,
+    steps: usize,
+    seed: u64,
+) -> Result<(Vec<f32>, f32)> {
+    let ds = cell.train_dataset()?;
+    let test = cell.test_dataset()?;
+    let mut all: Vec<usize> = purchase
+        .bootstrap
+        .iter()
+        .chain(&purchase.indices)
+        .copied()
+        .collect();
+    all.sort_unstable();
+    all.dedup();
+    let (tokens, labels) = ds.gather(&all);
+    let weights = WeightFile::load(&cell.target_init())?;
+    let mut trainer = Trainer::new(&weights, &cell.train_step_hlo(), ds.seq_len)?;
+    let curve = trainer.train(rt, &tokens, &labels, steps, seed)?;
+    let acc = trainer.evaluate(rt, &cell.eval_hlo(), &test)?;
+    Ok((curve, acc))
+}
+
+/// All 14 paper cells (Table 1 / 8 layout).
+pub fn paper_cells(root: &Path) -> Vec<Cell> {
+    let mut cells = Vec::new();
+    for target in ["distilbert_s", "bert_s"] {
+        for bench in ["sst2s", "qnlis", "qqps", "agnewss", "yelps"] {
+            cells.push(Cell::new(root, target, bench));
+        }
+    }
+    for target in ["vit_small_s", "vit_base_s"] {
+        for bench in ["cifar10s", "cifar100s"] {
+            cells.push(Cell::new(root, target, bench));
+        }
+    }
+    cells
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_paths_are_consistent() {
+        let c = Cell::new(Path::new("/tmp/a"), "bert_s", "sst2s");
+        assert!(c
+            .train_step_hlo()
+            .to_string_lossy()
+            .ends_with("hlo/bert_s_sst2s_train_step_b32.hlo.txt"));
+        assert!(c.proxy_phase(2).to_string_lossy().ends_with("proxy_phase2.sfw"));
+    }
+
+    #[test]
+    fn paper_cells_count_matches_table1() {
+        assert_eq!(paper_cells(Path::new("x")).len(), 14);
+    }
+
+    #[test]
+    fn method_labels() {
+        assert_eq!(Method::Ours.label(), "Ours");
+        assert_eq!(Method::Variant("mpcformer").label(), "mpcformer");
+    }
+}

@@ -1,0 +1,125 @@
+//! Fixed-point encoding over the ring Z_2^64 — the numeric substrate of the
+//! 2PC engine (Crypten-compatible layout: i64 two's-complement words,
+//! fractional scale 2^FRAC_BITS).
+//!
+//! All ring arithmetic is wrapping; a product of two fixed-point values
+//! carries scale 2^(2·FRAC_BITS) and must be re-scaled with [`trunc`] (or,
+//! over MPC, with the probabilistic local truncation in `mpc::proto`).
+
+/// Fractional bits. 16 gives ~4.6 decimal digits below the point and
+/// a ±2^31 integer range after one un-truncated product — plenty for
+/// activations that LayerNorm keeps near unit scale.
+pub const FRAC_BITS: u32 = 16;
+
+/// 2^FRAC_BITS as f64.
+pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
+
+/// Encode a real into the ring (round-to-nearest).
+#[inline]
+pub fn encode(x: f32) -> i64 {
+    (x as f64 * SCALE).round() as i64
+}
+
+/// Decode a ring element back to a real.
+#[inline]
+pub fn decode(x: i64) -> f32 {
+    (x as f64 / SCALE) as f32
+}
+
+#[inline]
+pub fn encode_vec(xs: &[f32]) -> Vec<i64> {
+    xs.iter().map(|&x| encode(x)).collect()
+}
+
+#[inline]
+pub fn decode_vec(xs: &[i64]) -> Vec<f32> {
+    xs.iter().map(|&x| decode(x)).collect()
+}
+
+/// Re-scale after a fixed×fixed product: divide by 2^FRAC_BITS with
+/// arithmetic (sign-preserving) shift.
+#[inline]
+pub fn trunc(x: i64) -> i64 {
+    x >> FRAC_BITS
+}
+
+/// Ring add / sub / neg (wrapping — the ring is Z_2^64).
+#[inline]
+pub fn radd(a: i64, b: i64) -> i64 {
+    a.wrapping_add(b)
+}
+
+#[inline]
+pub fn rsub(a: i64, b: i64) -> i64 {
+    a.wrapping_sub(b)
+}
+
+#[inline]
+pub fn rneg(a: i64) -> i64 {
+    a.wrapping_neg()
+}
+
+/// Ring product of two fixed-point values including the re-scale.
+/// Uses i128 for the intermediate so |a·b| up to 2^126 is exact.
+#[inline]
+pub fn rmul_fixed(a: i64, b: i64) -> i64 {
+    ((a as i128 * b as i128) >> FRAC_BITS) as i64
+}
+
+/// Ring product WITHOUT re-scale (for Beaver cross terms, where the
+/// truncation happens once on the assembled product).
+#[inline]
+pub fn rmul_raw(a: i64, b: i64) -> i64 {
+    a.wrapping_mul(b)
+}
+
+/// Multiply by a public integer constant (no scale change).
+#[inline]
+pub fn rmul_int(a: i64, k: i64) -> i64 {
+    a.wrapping_mul(k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_precision() {
+        let mut r = Rng::new(1);
+        for _ in 0..1000 {
+            let x = r.uniform(-100.0, 100.0);
+            let err = (decode(encode(x)) - x).abs();
+            assert!(err <= 1.0 / SCALE as f32, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn product_scale() {
+        let a = encode(3.5);
+        let b = encode(-2.0);
+        assert!((decode(rmul_fixed(a, b)) + 7.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn trunc_of_raw_product_matches() {
+        let a = encode(1.25);
+        let b = encode(4.0);
+        assert_eq!(trunc(rmul_raw(a, b)), rmul_fixed(a, b));
+    }
+
+    #[test]
+    fn wrapping_is_a_ring() {
+        // (a + b) - b == a even at the boundary
+        let a = i64::MAX - 3;
+        let b = 1000;
+        assert_eq!(rsub(radd(a, b), b), a);
+    }
+
+    #[test]
+    fn negative_trunc_is_sign_preserving() {
+        let x = encode(-0.5); // -32768 at scale 16
+        let sq = trunc(rmul_raw(x, x));
+        assert!((decode(sq) - 0.25).abs() < 1e-3);
+    }
+}

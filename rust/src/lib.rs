@@ -1,0 +1,27 @@
+//! # SelectFormer
+//!
+//! Private and practical data selection for Transformers over 2PC MPC —
+//! a full-system reproduction of Ouyang, Lin & Ji (2023) on the
+//! rust + JAX + Pallas three-layer architecture (AOT via xla/PJRT).
+//!
+//! * [`mpc`] — the 2PC engine (shares, Beaver triples, comparisons,
+//!   nonlinear approximations) with WAN cost metering.
+//! * [`models`] — proxy/target transformers over MPC + `.sfw` weights.
+//! * [`coordinator`] — multi-phase selection, QuickSelect over secret
+//!   comparisons, schedule planning, IO scheduling, appraisal.
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
+//! * [`train`] — rust-driven target finetuning over `train_step` HLO.
+//! * [`data`] — synthetic benchmark loader/generator.
+
+pub mod benchkit;
+pub mod cli;
+pub mod coordinator;
+pub mod exp;
+pub mod data;
+pub mod fixed;
+pub mod models;
+pub mod runtime;
+pub mod train;
+pub mod mpc;
+pub mod tensor;
+pub mod util;

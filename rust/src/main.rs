@@ -1,0 +1,8 @@
+//! SelectFormer CLI — see `selectformer info` / rust/src/cli.rs.
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = selectformer::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

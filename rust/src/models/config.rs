@@ -1,0 +1,150 @@
+//! Model configuration shared by the weight loader and the MPC forward.
+
+/// Which nonlinearity implementation a proxy runs over MPC.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Ours: the paper's MLP emulation (MLP_sm / MLP_ln / MLP_se).
+    Mlp,
+    /// MPCFormer: "2Quad" softmax (x+5)²/Σ, exact LN + entropy.
+    Quad,
+    /// Bolt: polynomial exp softmax, exact LN + entropy.
+    Poly,
+    /// Exact Crypten-style nonlinearities everywhere (Oracle / NoApprox).
+    Exact,
+}
+
+impl Variant {
+    pub fn from_code(code: u32) -> Variant {
+        match code {
+            0 => Variant::Mlp,
+            1 => Variant::Quad,
+            2 => Variant::Poly,
+            _ => Variant::Exact,
+        }
+    }
+}
+
+/// Per-nonlinearity toggles for the Table 2 ablations. All-true = Ours.
+#[derive(Clone, Copy, Debug)]
+pub struct ApproxToggles {
+    pub softmax: bool,
+    pub layernorm: bool,
+    pub entropy: bool,
+}
+
+impl ApproxToggles {
+    pub const OURS: ApproxToggles =
+        ApproxToggles { softmax: true, layernorm: true, entropy: true };
+    pub const NO_ATTN_SM: ApproxToggles =
+        ApproxToggles { softmax: false, layernorm: true, entropy: true };
+    pub const NO_ATTN_LN: ApproxToggles =
+        ApproxToggles { softmax: true, layernorm: false, entropy: true };
+    pub const NO_APPROX: ApproxToggles =
+        ApproxToggles { softmax: false, layernorm: false, entropy: false };
+}
+
+/// Transformer shape of a (proxy or target) classifier — mirrors
+/// python/selectformer/config.py; architecture is public (paper §4.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ModelConfig {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub d_mlp: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub n_classes: usize,
+    pub variant_code: u32,
+    /// FFN hidden width; 0 = proxy (FFN removed, paper §4.2), >0 = full
+    /// target transformer (Oracle over MPC).
+    pub d_ff: usize,
+    /// Divisor for the attention scale 1/√d. The python proxy pipeline
+    /// scales by d_model/n_heads of the PRUNED model (and in-vivo
+    /// finetunes under that convention), so this can differ from
+    /// `d_head` — consistency with the exported weights is what matters.
+    pub attn_scale_dim: usize,
+}
+
+impl ModelConfig {
+    pub fn variant(&self) -> Variant {
+        Variant::from_code(self.variant_code)
+    }
+
+    /// Width of the pruned attention (w heads × d_head).
+    pub fn attn_width(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    /// Paper-scale shapes for the cost benches (BERT-base block).
+    pub fn bert_paper() -> ModelConfig {
+        ModelConfig {
+            n_layers: 12,
+            n_heads: 12,
+            d_model: 768,
+            d_head: 64,
+            d_mlp: 16,
+            seq_len: 128,
+            vocab: 30522,
+            n_classes: 2,
+            variant_code: 0,
+            d_ff: 3072,
+            attn_scale_dim: 64,
+        }
+    }
+
+    pub fn with_variant(mut self, v: Variant) -> Self {
+        self.variant_code = match v {
+            Variant::Mlp => 0,
+            Variant::Quad => 1,
+            Variant::Poly => 2,
+            Variant::Exact => 3,
+        };
+        self
+    }
+
+    /// Proxy shape ⟨l, w, d⟩ over a given base width (paper §4.2).
+    pub fn proxy(base: &ModelConfig, l: usize, w: usize, d: usize) -> ModelConfig {
+        ModelConfig {
+            n_layers: l,
+            n_heads: w,
+            d_mlp: d,
+            d_ff: 0, // FFN removed from proxies
+            attn_scale_dim: base.d_head,
+            ..*base
+        }
+    }
+
+    /// Approximate parameter count of the MPC-evaluated portion.
+    pub fn param_count(&self) -> usize {
+        let aw = self.attn_width();
+        let per_layer = 3 * (self.d_model * aw + aw) // QKV
+            + aw * self.d_model + self.d_model       // output proj
+            + 2 * self.d_model                        // LN affine
+            + 2 * self.seq_len * self.d_mlp + self.d_mlp + self.seq_len // MLP_sm
+            + 2 * self.d_mlp + 2;                     // MLP_ln
+        self.n_layers * per_layer
+            + self.d_model * self.n_classes + self.n_classes // classifier
+            + self.n_classes * self.d_mlp + self.d_mlp + self.d_mlp + 1 // MLP_se
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_roundtrip() {
+        assert_eq!(Variant::from_code(0), Variant::Mlp);
+        assert_eq!(Variant::from_code(1), Variant::Quad);
+        assert_eq!(Variant::from_code(2), Variant::Poly);
+        assert_eq!(Variant::from_code(3), Variant::Exact);
+    }
+
+    #[test]
+    fn proxy_shrinks_params() {
+        let base = ModelConfig::bert_paper();
+        let p = ModelConfig::proxy(&base, 1, 1, 2);
+        assert!(p.param_count() < base.param_count() / 10);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model layer: `.sfw` weights, public configs, and the transformer
+//! forward pass over 2PC MPC (with Ours / MPCFormer / Bolt / Exact
+//! nonlinearity variants).
+
+pub mod config;
+pub mod proxy_mpc;
+pub mod weights;
+
+pub use config::{ApproxToggles, ModelConfig, Variant};
+pub use proxy_mpc::{embed_clear, ModelMpc, SecretLinear, SecretMlp};
+pub use weights::WeightFile;

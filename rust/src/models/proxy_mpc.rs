@@ -1,0 +1,625 @@
+//! Proxy (and target) transformer forward pass over 2PC — the private
+//! selection hot path.
+//!
+//! Weights are SECRET (model-owner input, shared once per session; weight
+//! matmuls use the cached-delta Beaver specialization so only activations
+//! are re-masked per batch).  Activations are SECRET (data-owner input).
+//! The nonlinearity implementation is selected by [`Variant`]:
+//!
+//!   Mlp   — paper §4.3: MLP_sm / MLP_ln / MLP_se (batched ReLU is the only
+//!           comparison, at hidden d ≤ 16)
+//!   Quad  — MPCFormer 2Quad softmax + exact LN/entropy
+//!   Poly  — Bolt polynomial softmax + exact LN/entropy
+//!   Exact — Crypten-style iterations everywhere (Oracle / NoApprox)
+//!
+//! Following MPCFormer, token+position embedding is computed by the data
+//! owner in the clear against a table the model owner releases (the one
+//! deliberate relaxation vs. the paper, which does not specify the
+//! embedding path; see DESIGN.md §3).
+
+use anyhow::Result;
+
+use crate::mpc::cmp;
+use crate::mpc::nonlin;
+use crate::mpc::proto::{
+    self, matmul_batch, matmul_weight, recv_share, share_input, PartyCtx,
+    SecretWeight, Shared,
+};
+use crate::tensor::{TensorF, TensorR};
+
+use super::config::{ApproxToggles, ModelConfig, Variant};
+use super::weights::WeightFile;
+
+/// A secret linear layer (weight-stationary Beaver).
+pub struct SecretLinear {
+    pub w: SecretWeight,
+    pub b: Shared,
+}
+
+impl SecretLinear {
+    pub fn forward(&mut self, ctx: &mut PartyCtx, x: &Shared) -> Shared {
+        let y = matmul_weight(ctx, x, &mut self.w);
+        Shared(y.0.add_row(&self.b.0))
+    }
+}
+
+/// A secret emulation MLP (linear → ReLU → linear).
+pub struct SecretMlp {
+    pub l1: SecretLinear,
+    pub l2: SecretLinear,
+}
+
+impl SecretMlp {
+    pub fn forward(&mut self, ctx: &mut PartyCtx, x: &Shared) -> Shared {
+        let h = self.l1.forward(ctx, x);
+        let h = cmp::relu(ctx, &h);
+        self.l2.forward(ctx, &h)
+    }
+}
+
+struct LayerMpc {
+    wq: SecretLinear,
+    wk: SecretLinear,
+    wv: SecretLinear,
+    wo: SecretLinear,
+    ln_gamma: Shared,
+    ln_beta: Shared,
+    /// MLP emulators — present on proxies (d_ff == 0)
+    mlp_sm: Option<SecretMlp>,
+    mlp_ln: Option<SecretMlp>,
+    /// FFN + second LayerNorm — present on full targets (d_ff > 0)
+    ffn: Option<(SecretLinear, SecretLinear)>,
+    ln2: Option<(Shared, Shared)>,
+}
+
+/// One party's half of a model session: secret weight shares + config.
+pub struct ModelMpc {
+    pub cfg: ModelConfig,
+    pub approx: ApproxToggles,
+    layers: Vec<LayerMpc>,
+    cls: SecretLinear,
+    mlp_se: Option<SecretMlp>,
+    key_counter: u64,
+}
+
+/// Model-owner-side weight source during setup (None on the data owner).
+pub type WeightSource<'a> = Option<&'a WeightFile>;
+
+fn share_named(
+    ctx: &mut PartyCtx,
+    src: WeightSource,
+    name: &str,
+    shape: &[usize],
+) -> Result<Shared> {
+    match src {
+        Some(wf) => {
+            let t = wf.get(name)?;
+            assert_eq!(
+                t.shape, shape,
+                "{name}: expected {shape:?}, file has {:?}",
+                t.shape
+            );
+            Ok(share_input(ctx, &TensorR::from_f32(t)))
+        }
+        None => Ok(recv_share(ctx, shape)),
+    }
+}
+
+impl ModelMpc {
+    /// Joint setup: the model owner streams weight shares to the data
+    /// owner (the "secretly share encrypted proxy model parameters" step
+    /// of the paper's workflow; its bytes are metered like everything
+    /// else).  Both parties call this with the same public `cfg`.
+    pub fn setup(
+        ctx: &mut PartyCtx,
+        cfg: ModelConfig,
+        approx: ApproxToggles,
+        src: WeightSource,
+    ) -> Result<ModelMpc> {
+        let dm = cfg.d_model;
+        let aw = cfg.attn_width();
+        let s = cfg.seq_len;
+        let d = cfg.d_mlp;
+        let mut key = 1u64;
+        let mut next_key = || {
+            key += 1;
+            key
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |t: &str| format!("layer{i}.{t}");
+            let mut lin = |ctx: &mut PartyCtx,
+                           wname: String,
+                           bname: String,
+                           wshape: &[usize],
+                           bshape: &[usize]|
+             -> Result<SecretLinear> {
+                Ok(SecretLinear {
+                    w: SecretWeight::new(
+                        share_named(ctx, src, &wname, wshape)?.0,
+                        next_key(),
+                    ),
+                    b: share_named(ctx, src, &bname, bshape)?,
+                })
+            };
+            let is_target = cfg.d_ff > 0;
+            let (mlp_sm, mlp_ln, ffn, ln2) = if is_target {
+                let ffn1 =
+                    lin(ctx, p("ffn.w1"), p("ffn.b1"), &[dm, cfg.d_ff], &[cfg.d_ff])?;
+                let ffn2 =
+                    lin(ctx, p("ffn.w2"), p("ffn.b2"), &[cfg.d_ff, dm], &[dm])?;
+                let g2 = share_named(ctx, src, &p("ln2.gamma"), &[dm])?;
+                let b2 = share_named(ctx, src, &p("ln2.beta"), &[dm])?;
+                (None, None, Some((ffn1, ffn2)), Some((g2, b2)))
+            } else {
+                let sm = SecretMlp {
+                    l1: lin(ctx, p("mlp_sm.w1"), p("mlp_sm.b1"), &[s, d], &[d])?,
+                    l2: lin(ctx, p("mlp_sm.w2"), p("mlp_sm.b2"), &[d, s], &[s])?,
+                };
+                let ln = SecretMlp {
+                    l1: lin(ctx, p("mlp_ln.w1"), p("mlp_ln.b1"), &[1, d], &[d])?,
+                    l2: lin(ctx, p("mlp_ln.w2"), p("mlp_ln.b2"), &[d, 1], &[1])?,
+                };
+                (Some(sm), Some(ln), None, None)
+            };
+            layers.push(LayerMpc {
+                wq: lin(ctx, p("wq"), p("bq"), &[dm, aw], &[aw])?,
+                wk: lin(ctx, p("wk"), p("bk"), &[dm, aw], &[aw])?,
+                wv: lin(ctx, p("wv"), p("bv"), &[dm, aw], &[aw])?,
+                wo: lin(ctx, p("wo"), p("bo"), &[aw, dm], &[dm])?,
+                ln_gamma: share_named(ctx, src, &p("ln1.gamma"), &[dm])?,
+                ln_beta: share_named(ctx, src, &p("ln1.beta"), &[dm])?,
+                mlp_sm,
+                mlp_ln,
+                ffn,
+                ln2,
+            });
+        }
+        let c = cfg.n_classes;
+        let cls = SecretLinear {
+            w: SecretWeight::new(
+                share_named(ctx, src, "cls.w", &[dm, c])?.0,
+                next_key(),
+            ),
+            b: share_named(ctx, src, "cls.b", &[c])?,
+        };
+        let mlp_se = if cfg.d_ff == 0 {
+            Some(SecretMlp {
+                l1: SecretLinear {
+                    w: SecretWeight::new(
+                        share_named(ctx, src, "mlp_se.w1", &[c, d])?.0,
+                        next_key(),
+                    ),
+                    b: share_named(ctx, src, "mlp_se.b1", &[d])?,
+                },
+                l2: SecretLinear {
+                    w: SecretWeight::new(
+                        share_named(ctx, src, "mlp_se.w2", &[d, 1])?.0,
+                        next_key(),
+                    ),
+                    b: share_named(ctx, src, "mlp_se.b2", &[1])?,
+                },
+            })
+        } else {
+            None
+        };
+        Ok(ModelMpc {
+            cfg,
+            approx,
+            layers,
+            cls,
+            mlp_se,
+            key_counter: key,
+        })
+    }
+
+    /// Forward a shared activation batch (B·S, d_model) → shares of
+    /// (logits (B, C), entropy (B,)).
+    pub fn forward(
+        &mut self,
+        ctx: &mut PartyCtx,
+        x: &Shared,
+        batch: usize,
+    ) -> (Shared, Shared) {
+        let cfg = self.cfg;
+        let s = cfg.seq_len;
+        let dh = cfg.d_head;
+        let scale_dim = cfg.attn_scale_dim.max(1);
+        let h = cfg.n_heads;
+        let rows = batch * s;
+        assert_eq!(x.shape(), &[rows, cfg.d_model]);
+        let variant = cfg.variant();
+        let mut cur = x.clone();
+        for layer in self.layers.iter_mut() {
+            cur = ctx.op("layer", |ctx| {
+                forward_layer(
+                    ctx, layer, &cur, batch, s, dh, scale_dim, h, variant, self.approx,
+                )
+            });
+        }
+        // mean-pool over the sequence (local)
+        let pooled = ctx.chan.compute(|| mean_pool(&cur, batch, s, cfg.d_model));
+        let logits = self.cls.forward(ctx, &pooled);
+        let use_mlp_entropy =
+            variant == Variant::Mlp && self.approx.entropy && self.mlp_se.is_some();
+        let ent = if use_mlp_entropy {
+            let se = self.mlp_se.as_mut().unwrap();
+            let e = ctx.op("mlp_entropy", |ctx| se.forward(ctx, &logits));
+            Shared(e.0.reshape(&[batch]))
+        } else {
+            nonlin::exact_entropy(ctx, &logits, batch, cfg.n_classes)
+        };
+        (logits, ent)
+    }
+
+    /// Fresh Beaver keys for a new session (avoids cross-session reuse).
+    pub fn key_space(&self) -> u64 {
+        self.key_counter
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn forward_layer(
+    ctx: &mut PartyCtx,
+    layer: &mut LayerMpc,
+    x: &Shared,
+    batch: usize,
+    s: usize,
+    dh: usize,
+    scale_dim: usize,
+    h: usize,
+    variant: Variant,
+    approx: ApproxToggles,
+) -> Shared {
+    let rows = batch * s;
+    let aw = h * dh;
+    let q = layer.wq.forward(ctx, x); // (rows, aw)
+    let k = layer.wk.forward(ctx, x);
+    let v = layer.wv.forward(ctx, x);
+
+    // split into per-(example, head) (s, dh) blocks
+    let q_heads = ctx.chan.compute(|| split_heads(&q, batch, s, h, dh));
+    let k_heads = ctx.chan.compute(|| split_heads(&k, batch, s, h, dh));
+    let v_heads = ctx.chan.compute(|| split_heads(&v, batch, s, h, dh));
+    let kt_heads: Vec<Shared> = ctx
+        .chan
+        .compute(|| k_heads.iter().map(|t| Shared(t.0.transpose2())).collect());
+
+    // all B·H score products in ONE round (§4.4 coalescing)
+    let score_pairs: Vec<(&Shared, &Shared)> =
+        q_heads.iter().zip(&kt_heads).collect();
+    let scores = ctx.op("qk_scores", |ctx| matmul_batch(ctx, &score_pairs));
+    let scale = 1.0 / (scale_dim as f32).sqrt();
+    let scaled: Vec<Shared> = scores
+        .iter()
+        .map(|t| proto::mul_public_fixed(t, scale))
+        .collect();
+
+    // stack all rows: (B·H·s, s)
+    let flat = ctx.chan.compute(|| stack_rows(&scaled, s));
+    let use_mlp_sm = variant == Variant::Mlp && approx.softmax && layer.mlp_sm.is_some();
+    let probs_flat = match (variant, use_mlp_sm) {
+        (Variant::Mlp, true) => {
+            let sm = layer.mlp_sm.as_mut().unwrap();
+            ctx.op("mlp_softmax", |ctx| sm.forward(ctx, &flat))
+        }
+        (Variant::Quad, _) => quad_softmax(ctx, &flat, batch * h * s, s),
+        (Variant::Poly, _) => poly_softmax(ctx, &flat, batch * h * s, s),
+        _ => nonlin::exact_softmax(ctx, &flat, batch * h * s, s),
+    };
+    let probs = ctx.chan.compute(|| unstack_rows(&probs_flat, batch * h, s, s));
+
+    // all B·H attention·V products in one round
+    let av_pairs: Vec<(&Shared, &Shared)> = probs.iter().zip(&v_heads).collect();
+    let attn = ctx.op("attn_v", |ctx| matmul_batch(ctx, &av_pairs));
+    let merged = ctx.chan.compute(|| merge_heads(&attn, batch, s, h, dh)); // (rows, aw)
+    debug_assert_eq!(merged.shape(), &[rows, aw]);
+
+    let out = layer.wo.forward(ctx, &merged);
+    let res = proto::add(x, &out);
+
+    // LayerNorm (attention)
+    let dm = x.shape()[1];
+    let use_mlp_ln =
+        variant == Variant::Mlp && approx.layernorm && layer.mlp_ln.is_some();
+    let normed = if use_mlp_ln {
+        let ln = layer.mlp_ln.as_mut().unwrap();
+        let (g, b) = (&layer.ln_gamma, &layer.ln_beta);
+        ctx.op("mlp_layernorm", |ctx| {
+            let (cen, var) = nonlin::layernorm_moments(ctx, &res, rows, dm);
+            let inv = ln.forward(ctx, &var);
+            ln_affine_secret(ctx, &cen, &inv, g, b, rows, dm)
+        })
+    } else {
+        let (g, b) = (&layer.ln_gamma, &layer.ln_beta);
+        ctx.op("layernorm", |ctx| {
+            let (cen, var) = nonlin::layernorm_moments(ctx, &res, rows, dm);
+            let inv = nonlin::exact_rsqrt(ctx, &var);
+            ln_affine_secret(ctx, &cen, &inv, g, b, rows, dm)
+        })
+    };
+
+    // full targets: FFN (GeLU) + second LayerNorm — the Oracle's extra cost
+    if let (Some((ffn1, ffn2)), Some((g2, b2))) =
+        (layer.ffn.as_mut(), layer.ln2.as_ref())
+    {
+        let h = ctx.op("ffn1", |ctx| ffn1.forward(ctx, &normed));
+        let h = nonlin::exact_gelu(ctx, &h);
+        let h = ctx.op("ffn2", |ctx| ffn2.forward(ctx, &h));
+        let res2 = proto::add(&normed, &h);
+        ctx.op("layernorm", |ctx| {
+            let (cen, var) = nonlin::layernorm_moments(ctx, &res2, rows, dm);
+            let inv = nonlin::exact_rsqrt(ctx, &var);
+            ln_affine_secret(ctx, &cen, &inv, g2, b2, rows, dm)
+        })
+    } else {
+        normed
+    }
+}
+
+/// (x−μ)·inv·γ + β with SECRET γ/β (shared affine params).
+fn ln_affine_secret(
+    ctx: &mut PartyCtx,
+    cen: &Shared,
+    inv: &Shared,
+    gamma: &Shared,
+    beta: &Shared,
+    rows: usize,
+    cols: usize,
+) -> Shared {
+    // broadcast inv over columns and gamma over rows, fold into one
+    // elementwise Beaver product each
+    let mut inv_b = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        for _ in 0..cols {
+            inv_b.push(inv.0.data[r]);
+        }
+    }
+    let normed = proto::mul(
+        ctx,
+        cen,
+        &Shared(TensorR::from_vec(inv_b, cen.shape())),
+    );
+    let mut gamma_b = Vec::with_capacity(rows * cols);
+    for _ in 0..rows {
+        gamma_b.extend_from_slice(&gamma.0.data);
+    }
+    let scaled = proto::mul(
+        ctx,
+        &normed,
+        &Shared(TensorR::from_vec(gamma_b, cen.shape())),
+    );
+    Shared(scaled.0.add_row(&beta.0))
+}
+
+/// MPCFormer 2Quad: (x+5)² / Σ(x+5)².
+fn quad_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Shared {
+    ctx.op("quad_softmax", |ctx| {
+        let shifted = proto::add_public(
+            ctx,
+            x,
+            &TensorR::from_vec(
+                vec![crate::fixed::encode(5.0); rows * cols],
+                x.shape(),
+            ),
+        );
+        let sq = proto::mul(ctx, &shifted, &shifted);
+        let mut sums = vec![0i64; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                sums[r] = sums[r].wrapping_add(sq.0.data[r * cols + c]);
+            }
+        }
+        let inv =
+            nonlin::exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
+        let mut bro = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for _ in 0..cols {
+                bro.push(inv.0.data[r]);
+            }
+        }
+        proto::mul(ctx, &sq, &Shared(TensorR::from_vec(bro, x.shape())))
+    })
+}
+
+/// Bolt-style polynomial softmax: max-stabilized 6-term exp polynomial,
+/// exact normalization — accurate but round-heavy.
+fn poly_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Shared {
+    ctx.op("poly_softmax", |ctx| {
+        let max = cmp::max_last(ctx, x, rows, cols);
+        let mut cen = x.0.clone();
+        for r in 0..rows {
+            for c in 0..cols {
+                cen.data[r * cols + c] =
+                    cen.data[r * cols + c].wrapping_sub(max.0.data[r]);
+            }
+        }
+        let xs = Shared(cen);
+        // Bolt-style degree-64 limit polynomial: (1 + x/64)^64 via 6
+        // interactive squarings — accurate across the post-max domain.
+        let one = TensorR::from_vec(
+            vec![crate::fixed::encode(1.0); rows * cols],
+            xs.shape(),
+        );
+        let mut acc = proto::add_public(
+            ctx,
+            &proto::mul_public_fixed(&xs, 1.0 / 64.0),
+            &one,
+        );
+        for _ in 0..6 {
+            acc = proto::mul(ctx, &acc, &acc);
+        }
+        // ReLU guards the clipped negative tail (Bolt's piecewise guard)
+        let e = cmp::relu(ctx, &acc);
+        let mut sums = vec![0i64; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                sums[r] = sums[r].wrapping_add(e.0.data[r * cols + c]);
+            }
+        }
+        let inv =
+            nonlin::exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
+        let mut bro = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for _ in 0..cols {
+                bro.push(inv.0.data[r]);
+            }
+        }
+        proto::mul(ctx, &e, &Shared(TensorR::from_vec(bro, x.shape())))
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Local share-shuffling helpers (communication-free)
+// ---------------------------------------------------------------------------
+
+fn split_heads(x: &Shared, batch: usize, s: usize, h: usize, dh: usize) -> Vec<Shared> {
+    let aw = h * dh;
+    let mut out = Vec::with_capacity(batch * h);
+    for b in 0..batch {
+        for head in 0..h {
+            let mut data = Vec::with_capacity(s * dh);
+            for t in 0..s {
+                let row = (b * s + t) * aw + head * dh;
+                data.extend_from_slice(&x.0.data[row..row + dh]);
+            }
+            out.push(Shared(TensorR::from_vec(data, &[s, dh])));
+        }
+    }
+    out
+}
+
+fn merge_heads(heads: &[Shared], batch: usize, s: usize, h: usize, dh: usize) -> Shared {
+    let aw = h * dh;
+    let mut data = vec![0i64; batch * s * aw];
+    for b in 0..batch {
+        for head in 0..h {
+            let t = &heads[b * h + head];
+            for tt in 0..s {
+                let dst = (b * s + tt) * aw + head * dh;
+                data[dst..dst + dh]
+                    .copy_from_slice(&t.0.data[tt * dh..(tt + 1) * dh]);
+            }
+        }
+    }
+    Shared(TensorR::from_vec(data, &[batch * s, aw]))
+}
+
+fn stack_rows(blocks: &[Shared], cols: usize) -> Shared {
+    let rows: usize = blocks.iter().map(|b| b.0.shape[0]).sum();
+    let mut data = Vec::with_capacity(rows * cols);
+    for b in blocks {
+        assert_eq!(b.0.shape[1], cols);
+        data.extend_from_slice(&b.0.data);
+    }
+    Shared(TensorR::from_vec(data, &[rows, cols]))
+}
+
+fn unstack_rows(flat: &Shared, n_blocks: usize, rows: usize, cols: usize) -> Vec<Shared> {
+    (0..n_blocks)
+        .map(|i| {
+            Shared(TensorR::from_vec(
+                flat.0.data[i * rows * cols..(i + 1) * rows * cols].to_vec(),
+                &[rows, cols],
+            ))
+        })
+        .collect()
+}
+
+fn mean_pool(x: &Shared, batch: usize, s: usize, dm: usize) -> Shared {
+    let inv_s = crate::fixed::encode(1.0 / s as f32);
+    let mut data = vec![0i64; batch * dm];
+    for b in 0..batch {
+        for t in 0..s {
+            let row = &x.0.data[(b * s + t) * dm..(b * s + t + 1) * dm];
+            for (j, &v) in row.iter().enumerate() {
+                data[b * dm + j] = data[b * dm + j].wrapping_add(v);
+            }
+        }
+    }
+    for v in data.iter_mut() {
+        *v = crate::fixed::trunc(v.wrapping_mul(inv_s));
+    }
+    Shared(TensorR::from_vec(data, &[batch, dm]))
+}
+
+/// Data-owner-side cleartext embedding: tokens (B,S) → (B·S, d_model)
+/// activations (token + position), per the MPCFormer embedding convention.
+pub fn embed_clear(
+    tokens: &[u32],
+    batch: usize,
+    emb_tok: &TensorF,
+    emb_pos: &TensorF,
+) -> TensorF {
+    let s = emb_pos.shape[0];
+    let dm = emb_pos.shape[1];
+    assert_eq!(tokens.len(), batch * s);
+    let mut data = Vec::with_capacity(batch * s * dm);
+    for b in 0..batch {
+        for t in 0..s {
+            let tok = tokens[b * s + t] as usize;
+            let trow = &emb_tok.data[tok * dm..(tok + 1) * dm];
+            let prow = &emb_pos.data[t * dm..(t + 1) * dm];
+            data.extend(trow.iter().zip(prow).map(|(a, b)| a + b));
+        }
+    }
+    TensorF::from_vec(data, &[batch * s, dm])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_merge_roundtrip() {
+        let (batch, s, h, dh) = (2, 3, 2, 4);
+        let n = batch * s * h * dh;
+        let x = Shared(TensorR::from_vec(
+            (0..n as i64).collect(),
+            &[batch * s, h * dh],
+        ));
+        let heads = split_heads(&x, batch, s, h, dh);
+        assert_eq!(heads.len(), batch * h);
+        let back = merge_heads(&heads, batch, s, h, dh);
+        assert_eq!(back.0, x.0);
+    }
+
+    #[test]
+    fn stack_unstack_roundtrip() {
+        let blocks: Vec<Shared> = (0..3)
+            .map(|i| {
+                Shared(TensorR::from_vec(
+                    (0..8).map(|v| (i * 8 + v) as i64).collect(),
+                    &[2, 4],
+                ))
+            })
+            .collect();
+        let flat = stack_rows(&blocks, 4);
+        let back = unstack_rows(&flat, 3, 2, 4);
+        for (a, b) in blocks.iter().zip(&back) {
+            assert_eq!(a.0, b.0);
+        }
+    }
+
+    #[test]
+    fn mean_pool_averages() {
+        // batch 1, seq 2, dm 2: rows [2,4] and [4,8] → mean [3,6]
+        let x = Shared(TensorR::from_f32(&TensorF::from_vec(
+            vec![2.0, 4.0, 4.0, 8.0],
+            &[2, 2],
+        )));
+        let p = mean_pool(&x, 1, 2, 2).0.to_f32();
+        assert!((p.data[0] - 3.0).abs() < 1e-2);
+        assert!((p.data[1] - 6.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn embed_clear_shapes() {
+        let emb_tok = TensorF::from_vec(vec![0.0, 0.0, 1.0, 2.0, 3.0, 4.0], &[3, 2]);
+        let emb_pos = TensorF::from_vec(vec![0.1, 0.2, 0.3, 0.4], &[2, 2]);
+        let out = embed_clear(&[1, 2], 1, &emb_tok, &emb_pos);
+        assert_eq!(out.shape, vec![2, 2]);
+        assert!((out.data[0] - 1.1).abs() < 1e-6);
+        assert!((out.data[3] - 4.4).abs() < 1e-6);
+    }
+}

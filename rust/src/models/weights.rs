@@ -1,0 +1,165 @@
+//! `.sfw` weight file loader (layout documented in
+//! python/selectformer/export.py and DESIGN.md §6), plus the `meta.*`
+//! self-description convention that carries the model config.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+use byteorder::{LittleEndian, ReadBytesExt};
+
+use crate::tensor::TensorF;
+
+use super::config::ModelConfig;
+
+const MAGIC: &[u8; 4] = b"SFWT";
+
+#[derive(Clone, Debug)]
+pub struct WeightFile {
+    pub tensors: BTreeMap<String, TensorF>,
+}
+
+impl WeightFile {
+    pub fn load(path: &Path) -> Result<WeightFile> {
+        let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = BufReader::new(f);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let version = r.read_u32::<LittleEndian>()?;
+        if version != 1 {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let count = r.read_u32::<LittleEndian>()?;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            let nlen = r.read_u32::<LittleEndian>()? as usize;
+            let mut name = vec![0u8; nlen];
+            r.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            let dtype = r.read_u8()?;
+            if dtype != 0 {
+                bail!("{path:?}: tensor {name}: unsupported dtype {dtype}");
+            }
+            let rank = r.read_u32::<LittleEndian>()? as usize;
+            let mut shape = Vec::with_capacity(rank.max(1));
+            for _ in 0..rank {
+                shape.push(r.read_u64::<LittleEndian>()? as usize);
+            }
+            if rank == 0 {
+                shape.push(1); // scalars as [1]
+            }
+            let numel: usize = shape.iter().product();
+            let mut data = vec![0f32; numel];
+            r.read_f32_into::<LittleEndian>(&mut data)?;
+            tensors.insert(name, TensorF::from_vec(data, &shape));
+        }
+        Ok(WeightFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&TensorF> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))
+    }
+
+    pub fn meta(&self, key: &str) -> Result<f32> {
+        Ok(self.get(&format!("meta.{key}"))?.data[0])
+    }
+
+    /// Parse the self-describing `meta.*` scalars into a [`ModelConfig`].
+    /// `d_ff` is inferred from the presence of FFN tensors (proxies have
+    /// the FFN removed; targets carry it for the Oracle-over-MPC path).
+    pub fn config(&self) -> Result<ModelConfig> {
+        let d_ff = self
+            .tensors
+            .get("layer0.ffn.w1")
+            .map(|t| t.shape[1])
+            .unwrap_or(0);
+        let n_heads = self.meta("n_heads")? as usize;
+        // split width comes from the actual pruned weight shapes; the
+        // meta.d_head scalar is the SCALE divisor the python pipeline
+        // trained under (d_model / pruned_heads) — see ModelConfig docs.
+        let d_head = match self.tensors.get("layer0.wq") {
+            Some(wq) => wq.shape[1] / n_heads,
+            None => self.meta("d_head")? as usize,
+        };
+        Ok(ModelConfig {
+            d_ff,
+            n_heads,
+            d_head,
+            attn_scale_dim: self.meta("d_head")? as usize,
+            n_layers: self.meta("n_layers")? as usize,
+            d_model: self.meta("d_model")? as usize,
+            d_mlp: self.meta("d_mlp")? as usize,
+            seq_len: self.meta("seq_len")? as usize,
+            vocab: self.meta("vocab")? as usize,
+            n_classes: self.meta("n_classes")? as usize,
+            variant_code: self.meta("variant")? as u32,
+        })
+    }
+
+    /// Tensor names in canonical (sorted) order — the HLO argument order
+    /// produced by compile/aot.py, excluding the meta.* scalars.
+    pub fn param_names(&self) -> Vec<&str> {
+        self.tensors
+            .keys()
+            .filter(|k| !k.starts_with("meta."))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Hand-roll a tiny .sfw and read it back.
+    fn write_test_sfw(path: &Path) {
+        let mut f = File::create(path).unwrap();
+        f.write_all(MAGIC).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap(); // version
+        f.write_all(&2u32.to_le_bytes()).unwrap(); // count
+        // tensor "a.b": f32[2,2]
+        let name = b"a.b";
+        f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(name).unwrap();
+        f.write_all(&[0u8]).unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        f.write_all(&2u64.to_le_bytes()).unwrap();
+        for v in [1.0f32, 2.0, 3.0, 4.0] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        // scalar "meta.n_layers" = 3
+        let name = b"meta.n_layers";
+        f.write_all(&(name.len() as u32).to_le_bytes()).unwrap();
+        f.write_all(name).unwrap();
+        f.write_all(&[0u8]).unwrap();
+        f.write_all(&0u32.to_le_bytes()).unwrap(); // rank 0
+        f.write_all(&3.0f32.to_le_bytes()).unwrap();
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("sfw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.sfw");
+        write_test_sfw(&path);
+        let wf = WeightFile::load(&path).unwrap();
+        assert_eq!(wf.get("a.b").unwrap().shape, vec![2, 2]);
+        assert_eq!(wf.get("a.b").unwrap().data, vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(wf.meta("n_layers").unwrap(), 3.0);
+        assert_eq!(wf.param_names(), vec!["a.b"]);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(WeightFile::load(Path::new("/nonexistent/x.sfw")).is_err());
+    }
+}

@@ -1,0 +1,336 @@
+//! Trusted dealer: correlated randomness for the online phase.
+//!
+//! Standard semi-honest preprocessing model (Beaver 1992): a dealer hands
+//! each party additive shares of random triples (a, b, c=a·b), matrix
+//! triples (A, B, C=A·B), binary AND triples, and bit pairs for B2A
+//! conversion.  Offline cost is not on the selection critical path (the
+//! paper, like Crypten, treats triple generation as offline), so the dealer
+//! here is a deterministic generator: both parties hold Dealer instances
+//! seeded identically, each derives the full triple and keeps only its own
+//! share.  This is communication-free and exactly reproduces the *online*
+//! protocol the paper measures.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::tensor::TensorR;
+use crate::util::Rng;
+
+use super::net::Role;
+
+/// Opportunistic sharing of the EXPENSIVE half of preprocessing: the
+/// C = A·B matrix products.  Both parties draw identical (A, B, masks)
+/// from their synchronized dealer RNGs; whoever computes C first parks a
+/// copy keyed by sequence number, and the other party — if it arrives
+/// later — takes it instead of recomputing.  Strictly non-blocking
+/// (try_lock, never waits), so it can only remove work from the
+/// single-core critical path, never add sync latency (EXPERIMENTS §Perf).
+#[derive(Default)]
+pub struct Hub {
+    products: Mutex<HashMap<u64, (Role, Arc<TensorR>)>>,
+}
+
+impl Hub {
+    pub fn new() -> Arc<Hub> {
+        Arc::new(Hub::default())
+    }
+
+    /// Fetch the peer-parked product for `seq`, if present.
+    fn try_take(&self, seq: u64, me: Role) -> Option<Arc<TensorR>> {
+        let mut map = self.products.try_lock().ok()?;
+        match map.get(&seq) {
+            Some((producer, _)) if *producer != me => {
+                Some(map.remove(&seq).unwrap().1)
+            }
+            _ => None,
+        }
+    }
+
+    /// Park a freshly computed product for the peer (best effort).
+    fn park(&self, seq: u64, me: Role, c: Arc<TensorR>) {
+        if let Ok(mut map) = self.products.try_lock() {
+            use std::collections::hash_map::Entry;
+            match map.entry(seq) {
+                Entry::Vacant(v) => {
+                    v.insert((me, c));
+                }
+                Entry::Occupied(o) => {
+                    // peer computed it too — drop the stale copy
+                    if o.get().0 != me {
+                        o.remove();
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone)]
+pub struct Dealer {
+    rng: Rng,
+    role: Role,
+    seed: u64,
+    /// cached fixed-B correlations for weight-stationary matmuls,
+    /// keyed by caller-chosen weight id → (B_full, B_share)
+    fixed_b: HashMap<(u64, usize, usize), (TensorR, TensorR)>,
+    hub: Option<Arc<Hub>>,
+    seq: u64,
+}
+
+impl Dealer {
+    pub fn new(seed: u64, role: Role) -> Self {
+        Dealer {
+            rng: Rng::new(seed ^ 0xdea1e4),
+            role,
+            seed,
+            fixed_b: HashMap::new(),
+            hub: None,
+            seq: 0,
+        }
+    }
+
+    /// Attach the shared preprocessing hub (engine::run_pair does this).
+    pub fn with_hub(mut self, hub: Arc<Hub>) -> Self {
+        self.hub = Some(hub);
+        self
+    }
+
+    /// `n` elementwise Beaver triples: returns this party's shares of
+    /// (a, b, c) with c = a·b (raw ring product, no fixed-point re-scale).
+    /// Generation is RNG-dominated, so it stays local to each party
+    /// (identical streams ⇒ consistent triples).
+    pub fn triples(&mut self, n: usize) -> (Vec<i64>, Vec<i64>, Vec<i64>) {
+        self.seq += 1;
+        let mut a_sh = Vec::with_capacity(n);
+        let mut b_sh = Vec::with_capacity(n);
+        let mut c_sh = Vec::with_capacity(n);
+        let leader = self.role == Role::ModelOwner;
+        for _ in 0..n {
+            let a = self.rng.next_i64();
+            let b = self.rng.next_i64();
+            let c = a.wrapping_mul(b);
+            let a0 = self.rng.next_i64();
+            let b0 = self.rng.next_i64();
+            let c0 = self.rng.next_i64();
+            if leader {
+                a_sh.push(a0);
+                b_sh.push(b0);
+                c_sh.push(c0);
+            } else {
+                a_sh.push(a.wrapping_sub(a0));
+                b_sh.push(b.wrapping_sub(b0));
+                c_sh.push(c.wrapping_sub(c0));
+            }
+        }
+        (a_sh, b_sh, c_sh)
+    }
+
+    fn rand_tensor(&mut self, shape: &[usize]) -> TensorR {
+        TensorR::from_vec(
+            (0..shape.iter().product::<usize>())
+                .map(|_| self.rng.next_i64())
+                .collect(),
+            shape,
+        )
+    }
+
+    /// The product C = A·B, shared opportunistically through the hub.
+    fn product(&mut self, a: &TensorR, b: &TensorR) -> TensorR {
+        self.seq += 1;
+        if let Some(hub) = &self.hub {
+            if let Some(c) = hub.try_take(self.seq, self.role) {
+                return (*c).clone();
+            }
+            let c = Arc::new(a.matmul_raw(b));
+            hub.park(self.seq, self.role, c.clone());
+            return (*c).clone();
+        }
+        a.matmul_raw(b)
+    }
+
+    /// Matrix Beaver triple for an (m,k)×(k,n) product: shares of
+    /// (A, B, C=A·B).  One triple covers the whole matmul → one opening
+    /// round regardless of size (the reason MPC matmuls are
+    /// bandwidth-bound, not latency-bound).
+    pub fn matrix_triple(
+        &mut self,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (TensorR, TensorR, TensorR) {
+        let a = self.rand_tensor(&[m, k]);
+        let b = self.rand_tensor(&[k, n]);
+        let a0 = self.rand_tensor(&[m, k]);
+        let b0 = self.rand_tensor(&[k, n]);
+        let c0 = self.rand_tensor(&[m, n]);
+        let c = self.product(&a, &b);
+        match self.role {
+            Role::ModelOwner => (a0, b0, c0),
+            Role::DataOwner => (a.sub(&a0), b.sub(&b0), c.sub(&c0)),
+        }
+    }
+
+    /// Weight-stationary matrix triple: B is FIXED per `key` (derived from
+    /// the dealer seed), A and C = A·B are fresh per call.  Lets a secret
+    /// weight matrix open its masked delta W−B once and amortize it across
+    /// every batch — the classic inference-time Beaver specialization.
+    /// Returns (A_share, B_share, C_share); B_share is identical across
+    /// calls with the same key.
+    pub fn matrix_triple_fixed_b(
+        &mut self,
+        key: u64,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> (TensorR, TensorR, TensorR) {
+        let (b_full, b_share) = self.fixed_b_for(key, k, n);
+        let a = self.rand_tensor(&[m, k]);
+        let a0 = self.rand_tensor(&[m, k]);
+        let c0 = self.rand_tensor(&[m, n]);
+        let c = self.product(&a, &b_full);
+        match self.role {
+            Role::ModelOwner => (a0, b_share, c0),
+            Role::DataOwner => (a.sub(&a0), b_share, c.sub(&c0)),
+        }
+    }
+
+    /// The per-weight fixed mask B and this party's share of it (cached).
+    fn fixed_b_for(&mut self, key: u64, k: usize, n: usize) -> (TensorR, TensorR) {
+        let seed = self.seed;
+        let role = self.role;
+        let (b, share) = self
+            .fixed_b
+            .entry((key, k, n))
+            .or_insert_with(|| {
+                let mut brng = Rng::new(seed ^ key.wrapping_mul(0x2545F4914F6CDD1D));
+                let b = TensorR::from_vec(
+                    (0..k * n).map(|_| brng.next_i64()).collect(),
+                    &[k, n],
+                );
+                let b0 = TensorR::from_vec(
+                    (0..k * n).map(|_| brng.next_i64()).collect(),
+                    &[k, n],
+                );
+                let share = match role {
+                    Role::ModelOwner => b0.clone(),
+                    Role::DataOwner => b.sub(&b0),
+                };
+                (b, share)
+            })
+            .clone();
+        (b, share)
+    }
+
+    /// `n` binary AND triples over u64 words (bitwise, XOR-shared):
+    /// returns shares of (u, v, w) with w = u & v. RNG-dominated → local.
+    pub fn bin_triples(&mut self, n: usize) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
+        self.seq += 1;
+        let mut u_sh = Vec::with_capacity(n);
+        let mut v_sh = Vec::with_capacity(n);
+        let mut w_sh = Vec::with_capacity(n);
+        let leader = self.role == Role::ModelOwner;
+        for _ in 0..n {
+            let u = self.rng.next_u64();
+            let v = self.rng.next_u64();
+            let w = u & v;
+            let u0 = self.rng.next_u64();
+            let v0 = self.rng.next_u64();
+            let w0 = self.rng.next_u64();
+            if leader {
+                u_sh.push(u0);
+                v_sh.push(v0);
+                w_sh.push(w0);
+            } else {
+                u_sh.push(u ^ u0);
+                v_sh.push(v ^ v0);
+                w_sh.push(w ^ w0);
+            }
+        }
+        (u_sh, v_sh, w_sh)
+    }
+
+    /// `n` random bits given BOTH as XOR-shares (u64-packed, 64 bits/word)
+    /// and as arithmetic shares (one ring element per bit) — the B2A
+    /// correlation.  Returns (packed_bin_share_words, arith_shares).
+    pub fn bit_pairs(&mut self, n: usize) -> (Vec<u64>, Vec<i64>) {
+        self.seq += 1;
+        let words = n.div_ceil(64);
+        let mut bin = vec![0u64; words];
+        let mut arith = Vec::with_capacity(n);
+        let leader = self.role == Role::ModelOwner;
+        for i in 0..n {
+            let bit = self.rng.next_u64() & 1;
+            let bin0 = self.rng.next_u64() & 1;
+            let ar0 = self.rng.next_i64();
+            let my_bin = if leader { bin0 } else { bit ^ bin0 };
+            bin[i / 64] |= my_bin << (i % 64);
+            arith.push(if leader { ar0 } else { (bit as i64).wrapping_sub(ar0) });
+        }
+        (bin, arith)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair(seed: u64) -> (Dealer, Dealer) {
+        (Dealer::new(seed, Role::ModelOwner), Dealer::new(seed, Role::DataOwner))
+    }
+
+    #[test]
+    fn triples_are_consistent() {
+        let (mut d0, mut d1) = pair(7);
+        let (a0, b0, c0) = d0.triples(100);
+        let (a1, b1, c1) = d1.triples(100);
+        for i in 0..100 {
+            let a = a0[i].wrapping_add(a1[i]);
+            let b = b0[i].wrapping_add(b1[i]);
+            let c = c0[i].wrapping_add(c1[i]);
+            assert_eq!(c, a.wrapping_mul(b), "triple {i}");
+        }
+    }
+
+    #[test]
+    fn matrix_triples_are_consistent() {
+        let (mut d0, mut d1) = pair(8);
+        let (a0, b0, c0) = d0.matrix_triple(3, 4, 5);
+        let (a1, b1, c1) = d1.matrix_triple(3, 4, 5);
+        let a = a0.add(&a1);
+        let b = b0.add(&b1);
+        let c = c0.add(&c1);
+        assert_eq!(c, a.matmul_raw(&b));
+    }
+
+    #[test]
+    fn bin_triples_are_consistent() {
+        let (mut d0, mut d1) = pair(9);
+        let (u0, v0, w0) = d0.bin_triples(50);
+        let (u1, v1, w1) = d1.bin_triples(50);
+        for i in 0..50 {
+            let u = u0[i] ^ u1[i];
+            let v = v0[i] ^ v1[i];
+            assert_eq!(w0[i] ^ w1[i], u & v);
+        }
+    }
+
+    #[test]
+    fn bit_pairs_are_consistent() {
+        let (mut d0, mut d1) = pair(10);
+        let (bin0, ar0) = d0.bit_pairs(130);
+        let (bin1, ar1) = d1.bit_pairs(130);
+        for i in 0..130 {
+            let bin_bit = ((bin0[i / 64] ^ bin1[i / 64]) >> (i % 64)) & 1;
+            let ar = ar0[i].wrapping_add(ar1[i]);
+            assert_eq!(ar, bin_bit as i64, "bit {i}");
+            assert!(ar == 0 || ar == 1);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Dealer::new(1, Role::ModelOwner);
+        let mut b = Dealer::new(2, Role::ModelOwner);
+        assert_ne!(a.triples(4).0, b.triples(4).0);
+    }
+}

@@ -1,0 +1,79 @@
+//! Two-party executor: spawn both parties on OS threads, wire their
+//! channels and dealers, run symmetric protocol closures, collect results
+//! and cost meters.
+
+use std::thread;
+
+use super::net::{chan_pair, CostMeter, Role};
+use super::proto::PartyCtx;
+
+/// Run the two parties and return both closure results.
+pub fn run_pair<R0, R1>(
+    dealer_seed: u64,
+    f0: impl FnOnce(&mut PartyCtx) -> R0 + Send + 'static,
+    f1: impl FnOnce(&mut PartyCtx) -> R1 + Send + 'static,
+) -> (R0, R1)
+where
+    R0: Send + 'static,
+    R1: Send + 'static,
+{
+    let ((r0, _), (r1, _)) = run_pair_metered(dealer_seed, f0, f1);
+    (r0, r1)
+}
+
+/// Like [`run_pair`] but also returns each party's final [`CostMeter`].
+pub fn run_pair_metered<R0, R1>(
+    dealer_seed: u64,
+    f0: impl FnOnce(&mut PartyCtx) -> R0 + Send + 'static,
+    f1: impl FnOnce(&mut PartyCtx) -> R1 + Send + 'static,
+) -> ((R0, CostMeter), (R1, CostMeter))
+where
+    R0: Send + 'static,
+    R1: Send + 'static,
+{
+    let (c0, c1) = chan_pair();
+    // shared preprocessing hub: correlated randomness is generated once
+    // and consumed by both parties (see dealer::Hub)
+    let hub = crate::mpc::dealer::Hub::new();
+    let hub1 = hub.clone();
+    let h1 = thread::Builder::new()
+        .name("data-owner".into())
+        .stack_size(32 * 1024 * 1024)
+        .spawn(move || {
+            let mut ctx = PartyCtx::new_with_hub(Role::DataOwner, c1, dealer_seed, hub1);
+            let r = f1(&mut ctx);
+            (r, ctx.chan.meter)
+        })
+        .expect("spawn data-owner");
+    let mut ctx0 = PartyCtx::new_with_hub(Role::ModelOwner, c0, dealer_seed, hub);
+    let r0 = f0(&mut ctx0);
+    let out1 = h1.join().expect("data-owner thread panicked");
+    ((r0, ctx0.chan.meter), out1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::proto::{open, recv_share, share_input};
+    use crate::tensor::TensorR;
+
+    #[test]
+    fn meters_are_collected() {
+        let x = TensorR::from_vec(vec![1, 2, 3], &[3]);
+        let ((_, m0), (_, m1)) = run_pair_metered(
+            1,
+            move |ctx| {
+                let sh = share_input(ctx, &x);
+                open(ctx, &sh);
+            },
+            move |ctx| {
+                let sh = recv_share(ctx, &[3]);
+                open(ctx, &sh);
+            },
+        );
+        assert!(m0.bytes > 0);
+        assert!(m1.bytes > 0);
+        assert_eq!(m0.rounds, 2); // input share + open
+        assert_eq!(m1.rounds, 1); // open only
+    }
+}

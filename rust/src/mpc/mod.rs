@@ -1,0 +1,16 @@
+//! The 2PC MPC substrate: additive secret sharing over Z_2^64 with
+//! fixed-point encoding, trusted-dealer Beaver triples, Kogge–Stone
+//! comparisons, Crypten-style nonlinear approximations, and the paper's
+//! MLP emulation fast path.  Parties run on two OS threads with metered
+//! channels; delays are simulated from the meters (DESIGN.md §3).
+
+pub mod cmp;
+pub mod dealer;
+pub mod engine;
+pub mod net;
+pub mod nonlin;
+pub mod proto;
+
+pub use engine::{run_pair, run_pair_metered};
+pub use net::{CostMeter, NetConfig, OpRecord, Role};
+pub use proto::{PartyCtx, Shared};

@@ -1,0 +1,179 @@
+//! Party-to-party transport + communication cost accounting.
+//!
+//! The two parties run on two OS threads connected by channels; every
+//! protocol message physically moves between them (no shared-state
+//! shortcuts on the data path), and the transport meters bytes / rounds /
+//! local compute per logical operation.  Delays are *simulated* from those
+//! meters against a WAN model (paper setup: 100 MB/s, 100 ms) — DESIGN.md §3
+//! explains why this substitution preserves the paper's Fig 6/7 numbers.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Instant;
+
+/// Which of the two computation parties we are.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    /// P0 — the model owner (leader: drives selection, owns weights).
+    ModelOwner = 0,
+    /// P1 — the data owner (owns the candidate datapoints).
+    DataOwner = 1,
+}
+
+impl Role {
+    pub fn index(self) -> usize {
+        self as usize
+    }
+    pub fn other(self) -> Role {
+        match self {
+            Role::ModelOwner => Role::DataOwner,
+            Role::DataOwner => Role::ModelOwner,
+        }
+    }
+}
+
+/// The WAN model used to convert metered traffic into simulated delay.
+#[derive(Clone, Copy, Debug)]
+pub struct NetConfig {
+    /// one-way payload bandwidth, bytes/second
+    pub bandwidth: f64,
+    /// one-way latency, seconds, paid once per communication round
+    pub latency: f64,
+}
+
+impl Default for NetConfig {
+    /// The paper's emulated WAN: 100 MB/s, 100 ms.
+    fn default() -> Self {
+        NetConfig { bandwidth: 100.0e6, latency: 0.100 }
+    }
+}
+
+/// One logical protocol operation's footprint (for the IO scheduler).
+#[derive(Clone, Debug)]
+pub struct OpRecord {
+    pub name: &'static str,
+    pub rounds: u64,
+    pub bytes: u64,
+    pub compute_s: f64,
+}
+
+/// Per-party meter. `bytes` counts bytes SENT by this party; protocol
+/// rounds are symmetric so either party's `rounds` is the protocol's.
+#[derive(Clone, Debug, Default)]
+pub struct CostMeter {
+    pub bytes: u64,
+    pub rounds: u64,
+    pub messages: u64,
+    pub compute_s: f64,
+    pub ops: Vec<OpRecord>,
+}
+
+impl CostMeter {
+    /// Simulated serial wall-clock under `net` (no overlap): every round
+    /// pays one latency; payload is pipelined at line rate.
+    pub fn serial_delay(&self, net: &NetConfig) -> f64 {
+        self.rounds as f64 * net.latency
+            + self.bytes as f64 / net.bandwidth
+            + self.compute_s
+    }
+
+    pub fn merge_op_into(&mut self, name: &'static str, before: (u64, u64, f64)) {
+        let (b0, r0, c0) = before;
+        self.ops.push(OpRecord {
+            name,
+            rounds: self.rounds - r0,
+            bytes: self.bytes - b0,
+            compute_s: self.compute_s - c0,
+        });
+    }
+
+    pub fn snapshot(&self) -> (u64, u64, f64) {
+        (self.bytes, self.rounds, self.compute_s)
+    }
+}
+
+/// Bidirectional channel to the peer, with metering.
+pub struct Chan {
+    pub tx: Sender<Vec<i64>>,
+    pub rx: Receiver<Vec<i64>>,
+    pub meter: CostMeter,
+}
+
+impl Chan {
+    /// Send our payload and receive the peer's — one communication round
+    /// (both directions fly concurrently, as in a real duplex link).
+    pub fn exchange(&mut self, data: Vec<i64>) -> Vec<i64> {
+        let n = data.len();
+        self.tx.send(data).expect("peer hung up");
+        self.meter.bytes += (n * 8) as u64;
+        self.meter.rounds += 1;
+        self.meter.messages += 1;
+        self.rx.recv().expect("peer hung up")
+    }
+
+    /// One-directional send (half a round; the matching `recv_only` on the
+    /// peer side completes it). Used for input sharing.
+    pub fn send_only(&mut self, data: Vec<i64>) {
+        let n = data.len();
+        self.tx.send(data).expect("peer hung up");
+        self.meter.bytes += (n * 8) as u64;
+        self.meter.rounds += 1;
+        self.meter.messages += 1;
+    }
+
+    pub fn recv_only(&mut self) -> Vec<i64> {
+        self.rx.recv().expect("peer hung up")
+    }
+
+    /// Time a block of *local* compute into the meter.
+    pub fn compute<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        self.meter.compute_s += t0.elapsed().as_secs_f64();
+        r
+    }
+}
+
+/// Build a connected channel pair (one per party).
+pub fn chan_pair() -> (Chan, Chan) {
+    let (tx0, rx1) = std::sync::mpsc::channel();
+    let (tx1, rx0) = std::sync::mpsc::channel();
+    (
+        Chan { tx: tx0, rx: rx0, meter: CostMeter::default() },
+        Chan { tx: tx1, rx: rx1, meter: CostMeter::default() },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exchange_moves_data_and_meters() {
+        let (mut c0, mut c1) = chan_pair();
+        let h = std::thread::spawn(move || {
+            let got = c1.exchange(vec![7, 8]);
+            (got, c1.meter.clone())
+        });
+        let got0 = c0.exchange(vec![1, 2, 3]);
+        let (got1, m1) = h.join().unwrap();
+        assert_eq!(got0, vec![7, 8]);
+        assert_eq!(got1, vec![1, 2, 3]);
+        assert_eq!(c0.meter.bytes, 24);
+        assert_eq!(m1.bytes, 16);
+        assert_eq!(c0.meter.rounds, 1);
+    }
+
+    #[test]
+    fn serial_delay_model() {
+        let m = CostMeter { bytes: 100_000_000, rounds: 10, messages: 10, compute_s: 1.0, ops: vec![] };
+        let net = NetConfig { bandwidth: 100.0e6, latency: 0.1 };
+        // 1s payload + 1s latency + 1s compute
+        assert!((m.serial_delay(&net) - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn role_other() {
+        assert_eq!(Role::ModelOwner.other(), Role::DataOwner);
+        assert_eq!(Role::DataOwner.other(), Role::ModelOwner);
+    }
+}

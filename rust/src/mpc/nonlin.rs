@@ -1,0 +1,513 @@
+//! Nonlinear operations over MPC.
+//!
+//! Two families:
+//!
+//!  * `exact_*` — Crypten-style iterative approximations (limit-exp,
+//!    Newton–Raphson reciprocal / rsqrt, iterative log, comparison-tree
+//!    max).  These are what Oracle / NoApprox / the Fig 2 cost breakdown
+//!    run, and they are exactly what makes Transformers over MPC slow:
+//!    every iteration is an interactive Beaver product.
+//!
+//!  * `mlp_*` — the paper's emulation: the entire nonlinearity collapses
+//!    into two PUBLIC-weight matmuls around one ReLU.  Public-weight
+//!    matmuls are communication-free; the only interaction is the ReLU's
+//!    comparison at the low hidden dimension d ≤ 16.
+//!
+//! Iteration counts follow Crypten's defaults (exp: 8 squarings,
+//! reciprocal: 10 NR steps, rsqrt: 10, log: 2 higher-order steps).
+
+use crate::fixed;
+use crate::tensor::TensorR;
+
+use super::cmp;
+use super::proto::{self, PartyCtx, Shared};
+
+/// Shares of a public real constant (leader holds it, peer holds zero).
+pub fn const_share(ctx: &PartyCtx, value: f32, shape: &[usize]) -> Shared {
+    let n: usize = shape.iter().product();
+    let v = if ctx.is_leader() { fixed::encode(value) } else { 0 };
+    Shared(TensorR::from_vec(vec![v; n], shape))
+}
+
+/// exp(x) ≈ (1 + x/2^k)^(2^k) with k = 8 — 8 interactive squarings.
+pub fn exact_exp(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+    ctx.op("exp", |ctx| {
+        const K: u32 = 8;
+        let scaled = proto::mul_public_fixed(x, 1.0 / (1u32 << K) as f32);
+        let mut y = proto::add_public(
+            ctx,
+            &scaled,
+            &TensorR::from_vec(
+                vec![fixed::encode(1.0); scaled.len()],
+                scaled.shape(),
+            ),
+        );
+        for _ in 0..K {
+            y = proto::mul(ctx, &y, &y);
+        }
+        y
+    })
+}
+
+/// 1/x for x > 0 ≈ Newton–Raphson with Crypten's exp-based init:
+/// y0 = 3·exp(0.5 − x) + 0.003.
+pub fn exact_reciprocal(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+    ctx.op("reciprocal", |ctx| {
+        let half_minus = {
+            let neg = Shared(x.0.neg());
+            proto::add_public(
+                ctx,
+                &neg,
+                &TensorR::from_vec(vec![fixed::encode(0.5); x.len()], x.shape()),
+            )
+        };
+        let e = exact_exp(ctx, &half_minus);
+        let mut y = proto::mul_public_fixed(&e, 3.0);
+        y = proto::add_public(
+            ctx,
+            &y,
+            &TensorR::from_vec(vec![fixed::encode(0.003); x.len()], x.shape()),
+        );
+        for _ in 0..10 {
+            // y ← y·(2 − x·y)
+            let xy = proto::mul(ctx, x, &y);
+            let two_minus = {
+                let neg = Shared(xy.0.neg());
+                proto::add_public(
+                    ctx,
+                    &neg,
+                    &TensorR::from_vec(vec![fixed::encode(2.0); x.len()], x.shape()),
+                )
+            };
+            y = proto::mul(ctx, &y, &two_minus);
+        }
+        y
+    })
+}
+
+/// 1/sqrt(x) for x > 0 — NR on y ← y·(3 − x·y²)/2 with exp init.
+pub fn exact_rsqrt(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+    ctx.op("rsqrt", |ctx| {
+        let half = proto::mul_public_fixed(x, 0.5);
+        let neg_half = Shared(half.0.neg());
+        let e = exact_exp(ctx, &neg_half);
+        let mut y = proto::mul_public_fixed(&e, 2.2);
+        y = proto::add_public(
+            ctx,
+            &y,
+            &TensorR::from_vec(vec![fixed::encode(0.2); x.len()], x.shape()),
+        );
+        for _ in 0..10 {
+            let y2 = proto::mul(ctx, &y, &y);
+            let xy2 = proto::mul(ctx, x, &y2);
+            let three_minus = {
+                let neg = Shared(xy2.0.neg());
+                proto::add_public(
+                    ctx,
+                    &neg,
+                    &TensorR::from_vec(vec![fixed::encode(3.0); x.len()], x.shape()),
+                )
+            };
+            let prod = proto::mul(ctx, &y, &three_minus);
+            y = proto::mul_public_fixed(&prod, 0.5);
+        }
+        y
+    })
+}
+
+/// ln(x) for x in (0, ~40) — iterative: y ← y + x·exp(−y) − 1 (3 rounds of
+/// exp + product), init y0 = x/31 − 1.59 (fit for the softmax-prob range).
+pub fn exact_log(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+    ctx.op("log", |ctx| {
+        let mut y = proto::mul_public_fixed(x, 1.0 / 31.0);
+        y = proto::add_public(
+            ctx,
+            &y,
+            &TensorR::from_vec(vec![fixed::encode(-1.59); x.len()], x.shape()),
+        );
+        for _ in 0..3 {
+            let neg_y = Shared(y.0.neg());
+            let e = exact_exp(ctx, &neg_y);
+            let xe = proto::mul(ctx, x, &e);
+            y = proto::add(&y, &xe);
+            y = proto::add_public(
+                ctx,
+                &y,
+                &TensorR::from_vec(vec![fixed::encode(-1.0); x.len()], x.shape()),
+            );
+        }
+        y
+    })
+}
+
+/// sigmoid(x) = 1/(1+exp(−x)) — exp + reciprocal composition.
+pub fn exact_sigmoid(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+    ctx.op("sigmoid", |ctx| {
+        let neg = Shared(x.0.neg());
+        let e = exact_exp(ctx, &neg);
+        let one_plus = proto::add_public(
+            ctx,
+            &e,
+            &TensorR::from_vec(vec![fixed::encode(1.0); x.len()], x.shape()),
+        );
+        exact_reciprocal(ctx, &one_plus)
+    })
+}
+
+/// GeLU(x) ≈ x·sigmoid(1.702x) (the standard MPC-friendly identity) —
+/// still an exp + NR-reciprocal pipeline, i.e. expensive.
+pub fn exact_gelu(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+    ctx.op("gelu", |ctx| {
+        let scaled = proto::mul_public_fixed(x, 1.702);
+        let s = exact_sigmoid(ctx, &scaled);
+        proto::mul(ctx, x, &s)
+    })
+}
+
+/// EXACT softmax over the last axis of a (rows, cols) shared tensor:
+/// max-tree (log2(cols) comparisons) → exp → sum → reciprocal → product.
+/// This is the paper's Fig 2 cost monster.
+pub fn exact_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Shared {
+    ctx.op("softmax", |ctx| {
+        let max = cmp::max_last(ctx, x, rows, cols); // (rows,1)
+        // broadcast-subtract the rowwise max
+        let mut cen = x.0.clone();
+        for r in 0..rows {
+            for c in 0..cols {
+                cen.data[r * cols + c] =
+                    cen.data[r * cols + c].wrapping_sub(max.0.data[r]);
+            }
+        }
+        let e = exact_exp(ctx, &Shared(cen));
+        // rowwise sum (local)
+        let mut sums = vec![0i64; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                sums[r] = sums[r].wrapping_add(e.0.data[r * cols + c]);
+            }
+        }
+        let inv = exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
+        // broadcast product
+        let mut bro = vec![0i64; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                bro[r * cols + c] = inv.0.data[r];
+            }
+        }
+        proto::mul(ctx, &e, &Shared(TensorR::from_vec(bro, &[rows, cols])))
+    })
+}
+
+/// Exact prediction entropy −Σ p·ln p over logits (rows, cols).
+pub fn exact_entropy(ctx: &mut PartyCtx, logits: &Shared, rows: usize, cols: usize) -> Shared {
+    ctx.op("entropy", |ctx| {
+        let p = exact_softmax(ctx, logits, rows, cols);
+        // clamp-free: probabilities from softmax are > 0 in fixed point
+        let logp = exact_log(ctx, &p);
+        let plogp = proto::mul(ctx, &p, &logp);
+        let mut sums = vec![0i64; rows];
+        for r in 0..rows {
+            for c in 0..cols {
+                sums[r] = sums[r].wrapping_sub(plogp.0.data[r * cols + c]);
+            }
+        }
+        Shared(TensorR::from_vec(sums, &[rows]))
+    })
+}
+
+/// LayerNorm with EXACT rsqrt (Oracle / NoAttnLN path). gamma/beta public.
+pub fn exact_layernorm(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    gamma: &TensorR,
+    beta: &TensorR,
+    rows: usize,
+    cols: usize,
+) -> Shared {
+    ctx.op("layernorm", |ctx| {
+        let (cen, var) = layernorm_moments(ctx, x, rows, cols);
+        let inv = exact_rsqrt(ctx, &var);
+        layernorm_affine(ctx, &cen, &inv, gamma, beta, rows, cols)
+    })
+}
+
+/// Shared helper: centered activations + variance (all linear / one
+/// Beaver square — cheap over MPC, per the paper kept exact).
+pub fn layernorm_moments(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    rows: usize,
+    cols: usize,
+) -> (Shared, Shared) {
+    let mean = Shared(x.0.clone().reshape(&[rows, cols]).mean_last()); // (rows,1)
+    let mut cen = x.0.clone();
+    for r in 0..rows {
+        for c in 0..cols {
+            cen.data[r * cols + c] =
+                cen.data[r * cols + c].wrapping_sub(mean.0.data[r]);
+        }
+    }
+    let cen = Shared(cen);
+    let sq = proto::mul(ctx, &cen, &cen);
+    let var = Shared(sq.0.clone().reshape(&[rows, cols]).mean_last());
+    let var = proto::add_public(
+        ctx,
+        &var,
+        &TensorR::from_vec(vec![fixed::encode(1e-5); rows], &[rows, 1]),
+    );
+    (cen, var)
+}
+
+/// (x−μ)·inv·gamma + beta with public affine params.
+pub fn layernorm_affine(
+    ctx: &mut PartyCtx,
+    cen: &Shared,
+    inv: &Shared,
+    gamma: &TensorR,
+    beta: &TensorR,
+    rows: usize,
+    cols: usize,
+) -> Shared {
+    let mut bro = vec![0i64; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            bro[r * cols + c] = inv.0.data[r];
+        }
+    }
+    let normed = proto::mul(ctx, cen, &Shared(TensorR::from_vec(bro, cen.shape())));
+    // public affine: elementwise gamma (scale) + beta (leader adds)
+    let mut data = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        for c in 0..cols {
+            let g = gamma.data[c];
+            let v = fixed::trunc(normed.0.data[r * cols + c].wrapping_mul(g));
+            data.push(v);
+        }
+    }
+    let mut out = Shared(TensorR::from_vec(data, cen.shape()));
+    if ctx.is_leader() {
+        for r in 0..rows {
+            for c in 0..cols {
+                out.0.data[r * cols + c] =
+                    out.0.data[r * cols + c].wrapping_add(beta.data[c]);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// The paper's MLP emulations: public weights → communication-free matmuls;
+// the ReLU is the only interactive step, at hidden dim d ≤ 16.
+// ---------------------------------------------------------------------------
+
+/// Weights of one emulation MLP (public — the proxy architecture is
+/// revealed, its weights are model-owner constants folded into the
+/// public-weight forward; see paper §4.1 privacy statement).
+#[derive(Clone, Debug)]
+pub struct MlpWeights {
+    pub w1: TensorR, // (d_in, d)
+    pub b1: TensorR, // (d,)
+    pub w2: TensorR, // (d, d_out)
+    pub b2: TensorR, // (d_out,)
+}
+
+/// y = ReLU(x·W1 + b1)·W2 + b2 over a shared (rows, d_in) input.
+pub fn mlp_forward(ctx: &mut PartyCtx, x: &Shared, w: &MlpWeights) -> Shared {
+    ctx.op("mlp_emul", |ctx| {
+        let h = proto::matmul_public(ctx, x, &w.w1);
+        let h = proto::add_public(ctx, &h, &broadcast_row(&w.b1, h.shape()));
+        let h = cmp::relu(ctx, &h);
+        let o = proto::matmul_public(ctx, &h, &w.w2);
+        proto::add_public(ctx, &o, &broadcast_row(&w.b2, o.shape()))
+    })
+}
+
+fn broadcast_row(row: &TensorR, shape: &[usize]) -> TensorR {
+    let cols = *shape.last().unwrap();
+    assert_eq!(row.len(), cols);
+    let rows: usize = shape.iter().product::<usize>() / cols;
+    let mut data = Vec::with_capacity(rows * cols);
+    for _ in 0..rows {
+        data.extend_from_slice(&row.data);
+    }
+    TensorR::from_vec(data, shape)
+}
+
+/// MLP-emulated LayerNorm: exact moments, MLP for the reciprocal-sqrt.
+pub fn mlp_layernorm(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    gamma: &TensorR,
+    beta: &TensorR,
+    w: &MlpWeights,
+    rows: usize,
+    cols: usize,
+) -> Shared {
+    ctx.op("mlp_layernorm", |ctx| {
+        let (cen, var) = layernorm_moments(ctx, x, rows, cols);
+        let inv = mlp_forward(ctx, &var, w); // (rows,1)
+        layernorm_affine(ctx, &cen, &inv, gamma, beta, rows, cols)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::engine::run_pair;
+    use crate::mpc::proto::{open, recv_share, share_input};
+    use crate::tensor::TensorF;
+
+    fn enc(v: Vec<f32>, shape: &[usize]) -> TensorR {
+        TensorR::from_f32(&TensorF::from_vec(v, shape))
+    }
+
+    fn both<F>(seed: u64, x: TensorR, f: F) -> TensorF
+    where
+        F: Fn(&mut PartyCtx, &Shared) -> Shared + Send + Clone + 'static,
+    {
+        let shape = x.shape.clone();
+        let f1 = f.clone();
+        let (got, _) = run_pair(
+            seed,
+            move |ctx| {
+                let xs = share_input(ctx, &x);
+                let z = f(ctx, &xs);
+                open(ctx, &z).to_f32()
+            },
+            move |ctx| {
+                let xs = recv_share(ctx, &shape);
+                let z = f1(ctx, &xs);
+                let _ = open(ctx, &z);
+            },
+        );
+        got
+    }
+
+    #[test]
+    fn exp_close_on_negative_domain() {
+        let vals = vec![-4.0f32, -2.0, -1.0, -0.5, 0.0, 0.5, 1.0];
+        let got = both(61, enc(vals.clone(), &[7]), |ctx, xs| exact_exp(ctx, xs));
+        for (g, v) in got.data.iter().zip(&vals) {
+            let e = v.exp();
+            assert!((g - e).abs() < 0.03 * e.max(0.05), "exp({v}) = {g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn reciprocal_close() {
+        let vals = vec![0.1f32, 0.5, 1.0, 2.0, 5.0, 20.0];
+        let got = both(62, enc(vals.clone(), &[6]), |ctx, xs| {
+            exact_reciprocal(ctx, xs)
+        });
+        for (g, v) in got.data.iter().zip(&vals) {
+            let e = 1.0 / v;
+            assert!((g - e).abs() < 0.02 * e.abs().max(0.05), "1/{v} = {g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn rsqrt_close() {
+        let vals = vec![0.25f32, 1.0, 4.0, 9.0];
+        let got = both(63, enc(vals.clone(), &[4]), |ctx, xs| exact_rsqrt(ctx, xs));
+        for (g, v) in got.data.iter().zip(&vals) {
+            let e = 1.0 / v.sqrt();
+            assert!((g - e).abs() < 0.05 * e.max(0.05), "rsqrt({v}) = {g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let vals = vec![0.5f32, 1.0, -0.5, 2.0, 0.0, -1.0, 1.5, 0.25];
+        let got = both(64, enc(vals, &[2, 4]), |ctx, xs| {
+            exact_softmax(ctx, xs, 2, 4)
+        });
+        for r in 0..2 {
+            let s: f32 = got.data[r * 4..(r + 1) * 4].iter().sum();
+            assert!((s - 1.0).abs() < 0.05, "row {r} sums to {s}");
+            for c in 0..4 {
+                assert!(got.data[r * 4 + c] >= -0.01);
+            }
+        }
+    }
+
+    #[test]
+    fn entropy_orders_confidence() {
+        // peaked logits → low entropy; flat logits → high entropy
+        let vals = vec![4.0f32, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0];
+        let got = both(65, enc(vals, &[2, 4]), |ctx, xs| {
+            exact_entropy(ctx, xs, 2, 4)
+        });
+        assert!(
+            got.data[0] + 0.2 < got.data[1],
+            "peaked {} !< flat {}",
+            got.data[0],
+            got.data[1]
+        );
+        // flat entropy ≈ ln 4
+        assert!((got.data[1] - (4f32).ln()).abs() < 0.25, "{}", got.data[1]);
+    }
+
+    #[test]
+    fn mlp_forward_matches_clear() {
+        let mut r = crate::util::Rng::new(8);
+        let (rows, din, d, dout) = (5, 6, 3, 6);
+        let xs: Vec<f32> = (0..rows * din).map(|_| r.uniform(-1.0, 1.0)).collect();
+        let w1: Vec<f32> = (0..din * d).map(|_| r.uniform(-1.0, 1.0)).collect();
+        let b1: Vec<f32> = (0..d).map(|_| r.uniform(-0.5, 0.5)).collect();
+        let w2: Vec<f32> = (0..d * dout).map(|_| r.uniform(-1.0, 1.0)).collect();
+        let b2: Vec<f32> = (0..dout).map(|_| r.uniform(-0.5, 0.5)).collect();
+        // clear reference
+        let mut expect = vec![0f32; rows * dout];
+        for i in 0..rows {
+            let mut h = vec![0f32; d];
+            for j in 0..d {
+                let mut acc = b1[j];
+                for k in 0..din {
+                    acc += xs[i * din + k] * w1[k * d + j];
+                }
+                h[j] = acc.max(0.0);
+            }
+            for j in 0..dout {
+                let mut acc = b2[j];
+                for k in 0..d {
+                    acc += h[k] * w2[k * dout + j];
+                }
+                expect[i * dout + j] = acc;
+            }
+        }
+        let w = MlpWeights {
+            w1: enc(w1, &[din, d]),
+            b1: enc(b1, &[d]),
+            w2: enc(w2, &[d, dout]),
+            b2: enc(b2, &[dout]),
+        };
+        let got = both(66, enc(xs, &[rows, din]), move |ctx, s| {
+            mlp_forward(ctx, s, &w)
+        });
+        for (g, e) in got.data.iter().zip(&expect) {
+            assert!((g - e).abs() < 0.02, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn exact_layernorm_matches_clear() {
+        let vals = vec![1.0f32, 2.0, 3.0, 4.0, -1.0, 0.0, 1.0, 2.0];
+        let gamma = enc(vec![1.0, 1.0, 1.0, 1.0], &[4]);
+        let beta = enc(vec![0.0, 0.0, 0.0, 0.0], &[4]);
+        let got = both(67, enc(vals.clone(), &[2, 4]), move |ctx, xs| {
+            exact_layernorm(ctx, xs, &gamma, &beta, 2, 4)
+        });
+        // reference
+        for r in 0..2 {
+            let row = &vals[r * 4..(r + 1) * 4];
+            let mu: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+            for c in 0..4 {
+                let e = (row[c] - mu) / (var + 1e-5).sqrt();
+                let g = got.data[r * 4 + c];
+                assert!((g - e).abs() < 0.08, "{g} vs {e}");
+            }
+        }
+    }
+}

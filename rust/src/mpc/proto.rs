@@ -1,0 +1,587 @@
+//! The arithmetic 2PC protocol layer: a party context plus the linear /
+//! multiplicative primitives over additively-shared fixed-point tensors.
+//!
+//! Everything here is symmetric SPMD code: BOTH parties execute the same
+//! function on their own `PartyCtx`; the only asymmetry is `Role`-gated
+//! (who adds public constants, who holds which dealer share).
+
+use crate::fixed;
+use crate::tensor::TensorR;
+use crate::util::Rng;
+
+use super::dealer::Dealer;
+use super::net::{Chan, Role};
+
+/// Per-party protocol context.
+pub struct PartyCtx {
+    pub role: Role,
+    pub chan: Chan,
+    pub dealer: Dealer,
+    /// private local randomness (input masking)
+    pub rng: Rng,
+}
+
+impl PartyCtx {
+    pub fn new(role: Role, chan: Chan, dealer_seed: u64) -> Self {
+        let rng = Rng::new(dealer_seed ^ (0x9e37 + role.index() as u64 * 77));
+        PartyCtx { role, chan, dealer: Dealer::new(dealer_seed, role), rng }
+    }
+
+    /// With a shared preprocessing hub (engine::run_pair wires this).
+    pub fn new_with_hub(
+        role: Role,
+        chan: Chan,
+        dealer_seed: u64,
+        hub: std::sync::Arc<super::dealer::Hub>,
+    ) -> Self {
+        let rng = Rng::new(dealer_seed ^ (0x9e37 + role.index() as u64 * 77));
+        PartyCtx {
+            role,
+            chan,
+            dealer: Dealer::new(dealer_seed, role).with_hub(hub),
+            rng,
+        }
+    }
+
+    pub fn is_leader(&self) -> bool {
+        self.role == Role::ModelOwner
+    }
+
+    /// Record the footprint of a logical op spanning `f`.
+    pub fn op<R>(&mut self, name: &'static str, f: impl FnOnce(&mut Self) -> R) -> R {
+        let before = self.chan.meter.snapshot();
+        let r = f(self);
+        self.chan.meter.merge_op_into(name, before);
+        r
+    }
+}
+
+/// This party's additive share of a secret tensor. The plaintext is
+/// share(P0) + share(P1) mod 2^64, interpreted as FRAC_BITS fixed point.
+#[derive(Clone, Debug)]
+pub struct Shared(pub TensorR);
+
+impl Shared {
+    pub fn shape(&self) -> &[usize] {
+        &self.0.shape
+    }
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Input sharing / reconstruction
+// ---------------------------------------------------------------------------
+
+/// Secret-share a tensor this party owns in cleartext: sample a mask,
+/// send it to the peer, keep x − mask. Peer calls [`recv_share`].
+pub fn share_input(ctx: &mut PartyCtx, clear: &TensorR) -> Shared {
+    let mask: Vec<i64> = (0..clear.len()).map(|_| ctx.rng.next_i64()).collect();
+    let my: Vec<i64> = clear
+        .data
+        .iter()
+        .zip(&mask)
+        .map(|(&x, &m)| x.wrapping_sub(m))
+        .collect();
+    ctx.chan.send_only(mask);
+    Shared(TensorR::from_vec(my, &clear.shape))
+}
+
+/// Receive our share of a tensor the peer is inputting.
+pub fn recv_share(ctx: &mut PartyCtx, shape: &[usize]) -> Shared {
+    let data = ctx.chan.recv_only();
+    Shared(TensorR::from_vec(data, shape))
+}
+
+/// Open (reconstruct) a shared tensor to both parties. One round.
+pub fn open(ctx: &mut PartyCtx, x: &Shared) -> TensorR {
+    let theirs = ctx.chan.exchange(x.0.data.clone());
+    let data = x
+        .0
+        .data
+        .iter()
+        .zip(&theirs)
+        .map(|(&a, &b)| a.wrapping_add(b))
+        .collect();
+    TensorR::from_vec(data, x.shape())
+}
+
+/// Open several shared tensors in a single round (batched / coalesced).
+pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> Vec<TensorR> {
+    let mut payload = Vec::with_capacity(xs.iter().map(|x| x.len()).sum());
+    for x in xs {
+        payload.extend_from_slice(&x.0.data);
+    }
+    let theirs = ctx.chan.exchange(payload);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut off = 0;
+    for x in xs {
+        let n = x.len();
+        let data = x.0.data
+            .iter()
+            .zip(&theirs[off..off + n])
+            .map(|(&a, &b)| a.wrapping_add(b))
+            .collect();
+        out.push(TensorR::from_vec(data, x.shape()));
+        off += n;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Linear ops (communication-free)
+// ---------------------------------------------------------------------------
+
+pub fn add(a: &Shared, b: &Shared) -> Shared {
+    Shared(a.0.add(&b.0))
+}
+
+pub fn sub(a: &Shared, b: &Shared) -> Shared {
+    Shared(a.0.sub(&b.0))
+}
+
+/// Add a public constant tensor (only the leader adds; shares stay valid).
+pub fn add_public(ctx: &PartyCtx, a: &Shared, c: &TensorR) -> Shared {
+    if ctx.is_leader() {
+        Shared(a.0.add(c))
+    } else {
+        a.clone()
+    }
+}
+
+/// Multiply by a public fixed-point constant (both parties scale, then
+/// local truncation restores the scale).
+pub fn mul_public_fixed(a: &Shared, c: f32) -> Shared {
+    let enc = fixed::encode(c);
+    Shared(a.0.scale_int(enc).trunc())
+}
+
+/// Local probabilistic truncation (Crypten-style 2PC trick): each party
+/// arithmetic-shifts its own share; P1 holds the correction so the result
+/// is exact up to ±1 LSB with overwhelming probability for |x| ≪ 2^62.
+pub fn trunc_local(ctx: &PartyCtx, a: &Shared) -> Shared {
+    match ctx.role {
+        Role::ModelOwner => Shared(a.0.trunc()),
+        Role::DataOwner => {
+            // shift the negated share and negate back: keeps the pair's sum
+            // within ±1 of the true truncation
+            let data = a
+                .0
+                .data
+                .iter()
+                .map(|&x| x.wrapping_neg().wrapping_shr(fixed::FRAC_BITS).wrapping_neg())
+                .collect();
+            Shared(TensorR::from_vec(data, a.shape()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Beaver multiplication
+// ---------------------------------------------------------------------------
+
+/// Elementwise product of two shared fixed-point tensors (Beaver, one
+/// opening round, then local truncation).
+pub fn mul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
+    let raw = mul_raw(ctx, x, y);
+    trunc_local(ctx, &raw)
+}
+
+/// Elementwise product WITHOUT the fixed-point re-scale — for integer
+/// (0/1) masks and for callers that fold several truncations into one.
+pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
+    assert_eq!(x.shape(), y.shape());
+    let n = x.len();
+    let (a, b, c) = ctx.chan.compute(|| ctx.dealer.triples(n));
+    // open (x−a, y−b) in one batched round
+    let mut payload = Vec::with_capacity(2 * n);
+    for i in 0..n {
+        payload.push(x.0.data[i].wrapping_sub(a[i]));
+    }
+    for i in 0..n {
+        payload.push(y.0.data[i].wrapping_sub(b[i]));
+    }
+    let theirs = ctx.chan.exchange(payload.clone());
+    let leader = ctx.is_leader();
+    let data = ctx.chan.compute(|| {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let eps = payload[i].wrapping_add(theirs[i]);
+            let del = payload[n + i].wrapping_add(theirs[n + i]);
+            // z = c + eps·b + del·a (+ eps·del, leader only)
+            let mut z = c[i]
+                .wrapping_add(eps.wrapping_mul(b[i]))
+                .wrapping_add(del.wrapping_mul(a[i]));
+            if leader {
+                z = z.wrapping_add(eps.wrapping_mul(del));
+            }
+            out.push(z);
+        }
+        out
+    });
+    Shared(TensorR::from_vec(data, x.shape()))
+}
+
+/// Shared (m,k) × shared (k,n) matrix product via one matrix Beaver
+/// triple: ONE opening round for the whole matmul, then local truncation.
+pub fn matmul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
+    let raw = matmul_raw(ctx, x, y);
+    trunc_local(ctx, &raw)
+}
+
+pub fn matmul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
+    assert_eq!(x.0.rank(), 2);
+    assert_eq!(y.0.rank(), 2);
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (k2, n) = (y.shape()[0], y.shape()[1]);
+    assert_eq!(k, k2);
+    let (a, b, c) = ctx.chan.compute(|| ctx.dealer.matrix_triple(m, k, n));
+    let mut payload = Vec::with_capacity(m * k + k * n);
+    payload.extend(x.0.data.iter().zip(&a.data).map(|(&p, &q)| p.wrapping_sub(q)));
+    payload.extend(y.0.data.iter().zip(&b.data).map(|(&p, &q)| p.wrapping_sub(q)));
+    let theirs = ctx.chan.exchange(payload.clone());
+    let leader = ctx.is_leader();
+    let out = ctx.chan.compute(|| {
+        let eps = TensorR::from_vec(
+            (0..m * k).map(|i| payload[i].wrapping_add(theirs[i])).collect(),
+            &[m, k],
+        );
+        let del = TensorR::from_vec(
+            (0..k * n)
+                .map(|i| payload[m * k + i].wrapping_add(theirs[m * k + i]))
+                .collect(),
+            &[k, n],
+        );
+        // Z = C + eps·B + A·del (+ eps·del, leader only); the leader folds
+        // its extra term into ONE matmul via (A+eps)·del (PERF §Perf)
+        let lhs = if leader { a.add(&eps) } else { a };
+        c.add(&eps.matmul_raw(&b)).add(&lhs.matmul_raw(&del))
+    });
+    Shared(out)
+}
+
+/// Shared × PUBLIC matrix product — no interaction at all: each party
+/// multiplies its share by the public matrix locally.
+pub fn matmul_public(ctx: &PartyCtx, x: &Shared, w: &TensorR) -> Shared {
+    let _ = ctx;
+    Shared(x.0.matmul_raw(w).trunc())
+}
+
+/// Batched shared×shared matmuls: every pair's (X−A, Y−B) openings fly in
+/// ONE communication round — the per-head attention products of a whole
+/// batch collapse from B·H rounds to 1 (paper §4.4 coalescing).
+pub fn matmul_batch(ctx: &mut PartyCtx, pairs: &[(&Shared, &Shared)]) -> Vec<Shared> {
+    if pairs.is_empty() {
+        return Vec::new();
+    }
+    let mut triples = Vec::with_capacity(pairs.len());
+    let mut payload: Vec<i64> = Vec::new();
+    for (x, y) in pairs {
+        let (m, k) = (x.shape()[0], x.shape()[1]);
+        let (k2, n) = (y.shape()[0], y.shape()[1]);
+        assert_eq!(k, k2);
+        let t = ctx.dealer.matrix_triple(m, k, n);
+        payload.extend(x.0.data.iter().zip(&t.0.data).map(|(&p, &q)| p.wrapping_sub(q)));
+        payload.extend(y.0.data.iter().zip(&t.1.data).map(|(&p, &q)| p.wrapping_sub(q)));
+        triples.push(t);
+    }
+    let theirs = ctx.chan.exchange(payload.clone());
+    let leader = ctx.is_leader();
+    let out = ctx.chan.compute(|| {
+        let mut out = Vec::with_capacity(pairs.len());
+        let mut off = 0;
+        for ((x, y), (a, b, c)) in pairs.iter().zip(&triples) {
+            let (m, k) = (x.shape()[0], x.shape()[1]);
+            let n = y.shape()[1];
+            let eps = TensorR::from_vec(
+                (0..m * k).map(|i| payload[off + i].wrapping_add(theirs[off + i])).collect(),
+                &[m, k],
+            );
+            off += m * k;
+            let del = TensorR::from_vec(
+                (0..k * n).map(|i| payload[off + i].wrapping_add(theirs[off + i])).collect(),
+                &[k, n],
+            );
+            off += k * n;
+            // leader folds eps·del into (A+eps)·del — one matmul saved
+            let lhs = if leader { a.add(&eps) } else { a.clone() };
+            let z = c.add(&eps.matmul_raw(b)).add(&lhs.matmul_raw(&del));
+            out.push(Shared(z.trunc()));
+        }
+        out
+    });
+    out
+}
+
+/// A secret weight matrix for weight-stationary inference: the masked
+/// delta W−B is opened once and cached; every subsequent activation
+/// matmul opens only X−A (half the bytes, still one round).
+pub struct SecretWeight {
+    /// this party's additive share of W (k,n)
+    pub share: TensorR,
+    key: u64,
+    delta: Option<TensorR>,
+}
+
+impl SecretWeight {
+    pub fn new(share: TensorR, key: u64) -> Self {
+        assert_eq!(share.rank(), 2);
+        SecretWeight { share, key, delta: None }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.share.shape
+    }
+}
+
+/// Shared activations (m,k) × secret weight (k,n) with cached W−B.
+pub fn matmul_weight(ctx: &mut PartyCtx, x: &Shared, w: &mut SecretWeight) -> Shared {
+    let (m, k) = (x.shape()[0], x.shape()[1]);
+    let (k2, n) = (w.shape()[0], w.shape()[1]);
+    assert_eq!(k, k2, "activation/weight inner dims");
+    let (a, b_share, c) =
+        ctx.chan.compute(|| ctx.dealer.matrix_triple_fixed_b(w.key, m, k, n));
+    let mut payload: Vec<i64> = Vec::with_capacity(m * k + k * n);
+    payload.extend(x.0.data.iter().zip(&a.data).map(|(&p, &q)| p.wrapping_sub(q)));
+    let first_use = w.delta.is_none();
+    if first_use {
+        payload.extend(
+            w.share.data.iter().zip(&b_share.data).map(|(&p, &q)| p.wrapping_sub(q)),
+        );
+    }
+    let theirs = ctx.chan.exchange(payload.clone());
+    let eps = TensorR::from_vec(
+        (0..m * k).map(|i| payload[i].wrapping_add(theirs[i])).collect(),
+        &[m, k],
+    );
+    if first_use {
+        let delta = TensorR::from_vec(
+            (0..k * n)
+                .map(|i| payload[m * k + i].wrapping_add(theirs[m * k + i]))
+                .collect(),
+            &[k, n],
+        );
+        w.delta = Some(delta);
+    }
+    let delta = w.delta.as_ref().unwrap();
+    let leader = ctx.is_leader();
+    let out = ctx.chan.compute(|| {
+        // Z = C + eps·B + (A [+ eps, leader])·delta — fused leader term
+        let lhs = if leader { a.add(&eps) } else { a };
+        c.add(&eps.matmul_raw(&b_share)).add(&lhs.matmul_raw(delta)).trunc()
+    });
+    Shared(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::engine::run_pair;
+    use crate::tensor::TensorF;
+
+    fn enc(v: Vec<f32>, shape: &[usize]) -> TensorR {
+        TensorR::from_f32(&TensorF::from_vec(v, shape))
+    }
+
+    #[test]
+    fn share_open_roundtrip() {
+        let x = enc(vec![1.5, -2.25, 0.0, 100.0], &[4]);
+        let (r0, r1) = run_pair(42, {
+            let x = x.clone();
+            move |ctx| {
+                let sh = share_input(ctx, &x);
+                open(ctx, &sh)
+            }
+        }, move |ctx| {
+            let sh = recv_share(ctx, &[4]);
+            open(ctx, &sh)
+        });
+        assert_eq!(r0, x);
+        assert_eq!(r1, x);
+    }
+
+    #[test]
+    fn beaver_mul_matches_clear() {
+        let x = enc(vec![1.5, -2.0, 3.25, 0.5], &[4]);
+        let y = enc(vec![2.0, 4.0, -1.0, -8.0], &[4]);
+        let expect = [3.0f32, -8.0, -3.25, -4.0];
+        let (got, _) = run_pair(
+            7,
+            {
+                let (x, y) = (x.clone(), y.clone());
+                move |ctx| {
+                    let xs = share_input(ctx, &x);
+                    let ys = share_input(ctx, &y);
+                    let z = mul(ctx, &xs, &ys);
+                    open(ctx, &z).to_f32()
+                }
+            },
+            move |ctx| {
+                let xs = recv_share(ctx, &[4]);
+                let ys = recv_share(ctx, &[4]);
+                let z = mul(ctx, &xs, &ys);
+                open(ctx, &z).to_f32()
+            },
+        );
+        for (g, e) in got.data.iter().zip(expect) {
+            assert!((g - e).abs() < 1e-2, "{g} vs {e}");
+        }
+    }
+
+    #[test]
+    fn beaver_matmul_matches_clear() {
+        let a = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let b = TensorF::from_vec(vec![1.0, -1.0, 0.5, 2.0, -0.5, 1.0], &[3, 2]);
+        let expect = a.matmul(&b);
+        let (ar, br) = (TensorR::from_f32(&a), TensorR::from_f32(&b));
+        let (got, _) = run_pair(
+            9,
+            {
+                let (ar, br) = (ar.clone(), br.clone());
+                move |ctx| {
+                    let xs = share_input(ctx, &ar);
+                    let ys = share_input(ctx, &br);
+                    let z = matmul(ctx, &xs, &ys);
+                    open(ctx, &z).to_f32()
+                }
+            },
+            move |ctx| {
+                let xs = recv_share(ctx, &[2, 3]);
+                let ys = recv_share(ctx, &[3, 2]);
+                let z = matmul(ctx, &xs, &ys);
+                open(ctx, &z).to_f32()
+            },
+        );
+        assert!(got.max_abs_diff(&expect) < 1e-2);
+    }
+
+    #[test]
+    fn matmul_is_one_round_plus_sharing() {
+        let a = TensorR::zeros(&[16, 16]);
+        let (rounds, _) = run_pair(
+            11,
+            {
+                let a = a.clone();
+                move |ctx| {
+                    let xs = share_input(ctx, &a);
+                    let ys = share_input(ctx, &a);
+                    let before = ctx.chan.meter.rounds;
+                    let _ = matmul(ctx, &xs, &ys);
+                    ctx.chan.meter.rounds - before
+                }
+            },
+            move |ctx| {
+                let xs = recv_share(ctx, &[16, 16]);
+                let ys = recv_share(ctx, &[16, 16]);
+                let _ = matmul(ctx, &xs, &ys);
+                0u64
+            },
+        );
+        assert_eq!(rounds, 1, "matrix beaver must cost exactly one round");
+    }
+
+    #[test]
+    fn matmul_weight_caches_delta() {
+        let x1 = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let x2 = TensorF::from_vec(vec![-1.0, 0.5, 2.0, -2.0], &[2, 2]);
+        let w = TensorF::from_vec(vec![0.5, 1.0, -1.0, 2.0], &[2, 2]);
+        let e1 = x1.matmul(&w);
+        let e2 = x2.matmul(&w);
+        let (xr1, xr2, wr) =
+            (TensorR::from_f32(&x1), TensorR::from_f32(&x2), TensorR::from_f32(&w));
+        let ((got, bytes_second), _) = run_pair(
+            17,
+            {
+                let (xr1, xr2, wr) = (xr1.clone(), xr2.clone(), wr.clone());
+                move |ctx| {
+                    let ws = share_input(ctx, &wr);
+                    let mut sw = SecretWeight::new(ws.0, 99);
+                    let a = share_input(ctx, &xr1);
+                    let b = share_input(ctx, &xr2);
+                    let z1 = matmul_weight(ctx, &a, &mut sw);
+                    let before = ctx.chan.meter.bytes;
+                    let z2 = matmul_weight(ctx, &b, &mut sw);
+                    let second_cost = ctx.chan.meter.bytes - before;
+                    (
+                        (open(ctx, &z1).to_f32(), open(ctx, &z2).to_f32()),
+                        second_cost,
+                    )
+                }
+            },
+            move |ctx| {
+                let ws = recv_share(ctx, &[2, 2]);
+                let mut sw = SecretWeight::new(ws.0, 99);
+                let a = recv_share(ctx, &[2, 2]);
+                let b = recv_share(ctx, &[2, 2]);
+                let z1 = matmul_weight(ctx, &a, &mut sw);
+                let z2 = matmul_weight(ctx, &b, &mut sw);
+                let _ = open(ctx, &z1);
+                let _ = open(ctx, &z2);
+            },
+        );
+        assert!(got.0.max_abs_diff(&e1) < 1e-2);
+        assert!(got.1.max_abs_diff(&e2) < 1e-2);
+        // second use must not re-open the weight delta: only X−A (2×2)
+        assert_eq!(bytes_second, 4 * 8);
+    }
+
+    #[test]
+    fn matmul_batch_is_one_round() {
+        let a = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        let b = TensorF::from_vec(vec![0.5, -1.0, 1.5, 2.0], &[2, 2]);
+        let expect = a.matmul(&b);
+        let (ar, br) = (TensorR::from_f32(&a), TensorR::from_f32(&b));
+        let ((got, rounds), _) = run_pair(
+            19,
+            {
+                let (ar, br) = (ar.clone(), br.clone());
+                move |ctx| {
+                    let xs = share_input(ctx, &ar);
+                    let ys = share_input(ctx, &br);
+                    let before = ctx.chan.meter.rounds;
+                    let zs = matmul_batch(ctx, &[(&xs, &ys), (&ys, &xs), (&xs, &xs)]);
+                    let r = ctx.chan.meter.rounds - before;
+                    (open(ctx, &zs[0]).to_f32(), r)
+                }
+            },
+            move |ctx| {
+                let xs = recv_share(ctx, &[2, 2]);
+                let ys = recv_share(ctx, &[2, 2]);
+                let zs = matmul_batch(ctx, &[(&xs, &ys), (&ys, &xs), (&xs, &xs)]);
+                let _ = open(ctx, &zs[0]);
+            },
+        );
+        assert!(got.max_abs_diff(&expect) < 1e-2);
+        assert_eq!(rounds, 1, "three matmuls, one round");
+    }
+
+    #[test]
+    fn trunc_error_at_most_one_lsb() {
+        let vals: Vec<f32> = vec![0.5, -0.5, 123.456, -99.875, 0.0009];
+        let x = enc(vals.clone(), &[5]);
+        let (got, _) = run_pair(
+            13,
+            {
+                let x = x.clone();
+                move |ctx| {
+                    let xs = share_input(ctx, &x);
+                    // multiply by 1.0 (encoded) then truncate
+                    let one = mul_public_fixed(&xs, 1.0);
+                    open(ctx, &one).to_f32()
+                }
+            },
+            move |ctx| {
+                let xs = recv_share(ctx, &[5]);
+                let one = mul_public_fixed(&xs, 1.0);
+                open(ctx, &one).to_f32()
+            },
+        );
+        for (g, e) in got.data.iter().zip(&vals) {
+            assert!((g - e).abs() < 2.0 / fixed::SCALE as f32, "{g} vs {e}");
+        }
+    }
+}

@@ -1,0 +1,115 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compile them once on the CPU PJRT client, and
+//! execute them from the rust hot path.  Python never runs here.
+//!
+//! Interchange is HLO TEXT (`HloModuleProto::from_text_file`) because the
+//! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids) — see /opt/xla-example/README.md.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::TensorF;
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: HashMap<PathBuf, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime { client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (once) and cache an HLO-text artifact.
+    pub fn load(&mut self, path: &Path) -> Result<()> {
+        if self.cache.contains_key(path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        self.cache.insert(path.to_path_buf(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact. Outputs are the flattened tuple elements
+    /// (aot.py lowers with return_tuple=True).
+    pub fn execute(&mut self, path: &Path, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(path)?;
+        let exe = self.cache.get(path).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("execute {path:?}"))?[0][0]
+            .to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+
+    pub fn loaded_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(t: &TensorF) -> Result<xla::Literal> {
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// Tokens as i32 literals of shape (batch, seq_len).
+pub fn lit_tokens(tokens: &[u32], batch: usize, seq_len: usize) -> Result<xla::Literal> {
+    assert_eq!(tokens.len(), batch * seq_len);
+    let data: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&[batch as i64, seq_len as i64])?)
+}
+
+pub fn lit_labels(labels: &[u32]) -> Result<xla::Literal> {
+    let data: Vec<i32> = labels.iter().map(|&l| l as i32).collect();
+    Ok(xla::Literal::vec1(&data).reshape(&[labels.len() as i64])?)
+}
+
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn lit_zeros_like(t: &TensorF) -> Result<xla::Literal> {
+    lit_f32(&TensorF::from_vec(vec![0.0; t.len()], &t.shape))
+}
+
+pub fn lit_to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
+        let l = lit_f32(&t).unwrap();
+        assert_eq!(lit_to_vec_f32(&l).unwrap(), t.data);
+    }
+
+    #[test]
+    fn tokens_literal_is_i32() {
+        let l = lit_tokens(&[1, 2, 3, 4], 2, 2).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+}

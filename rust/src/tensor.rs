@@ -1,0 +1,305 @@
+//! Minimal dense tensors: `TensorF` (f32, cleartext) and `TensorR`
+//! (i64 ring elements, MPC shares). Row-major, explicit shapes.
+//!
+//! Only the ops the coordinator's hot path needs are implemented; the
+//! heavyweight math (training, plaintext forwards) lives in AOT-compiled
+//! HLO, not here.
+
+use crate::fixed;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T> {
+    pub data: Vec<T>,
+    pub shape: Vec<usize>,
+}
+
+pub type TensorF = Tensor<f32>;
+pub type TensorR = Tensor<i64>;
+
+impl<T: Copy + Default> Tensor<T> {
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { data: vec![T::default(); shape.iter().product()], shape: shape.to_vec() }
+    }
+
+    pub fn from_vec(data: Vec<T>, shape: &[usize]) -> Self {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "shape {shape:?} does not match data len {}",
+            data.len()
+        );
+        Tensor { data, shape: shape.to_vec() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows × cols view of the last two dims (leading dims collapsed).
+    pub fn as_matrix_dims(&self) -> (usize, usize, usize) {
+        assert!(self.rank() >= 2);
+        let cols = self.shape[self.rank() - 1];
+        let rows = self.shape[self.rank() - 2];
+        let batch = self.len() / (rows * cols);
+        (batch, rows, cols)
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(self.len(), shape.iter().product::<usize>());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Rows `lo..hi` of a 2-D tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Self {
+        assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        Tensor::from_vec(self.data[lo * cols..hi * cols].to_vec(), &[hi - lo, cols])
+    }
+
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> Self {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![T::default(); r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::from_vec(out, &[c, r])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring (i64) ops — wrapping arithmetic, cache-blocked matmul
+// ---------------------------------------------------------------------------
+
+impl TensorR {
+    pub fn from_f32(xs: &TensorF) -> Self {
+        Tensor { data: fixed::encode_vec(&xs.data), shape: xs.shape.clone() }
+    }
+
+    pub fn to_f32(&self) -> TensorF {
+        Tensor { data: fixed::decode_vec(&self.data), shape: self.shape.clone() }
+    }
+
+    pub fn add(&self, other: &TensorR) -> TensorR {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a.wrapping_add(b))
+            .collect();
+        Tensor { data, shape: self.shape.clone() }
+    }
+
+    pub fn sub(&self, other: &TensorR) -> TensorR {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a.wrapping_sub(b))
+            .collect();
+        Tensor { data, shape: self.shape.clone() }
+    }
+
+    pub fn neg(&self) -> TensorR {
+        Tensor {
+            data: self.data.iter().map(|&a| a.wrapping_neg()).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    /// Elementwise raw (un-truncated) product.
+    pub fn mul_raw(&self, other: &TensorR) -> TensorR {
+        assert_eq!(self.shape, other.shape);
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| a.wrapping_mul(b))
+            .collect();
+        Tensor { data, shape: self.shape.clone() }
+    }
+
+    /// Multiply every element by a public ring scalar (no re-scale).
+    pub fn scale_int(&self, k: i64) -> TensorR {
+        Tensor {
+            data: self.data.iter().map(|&a| a.wrapping_mul(k)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    /// Arithmetic-shift every element right by FRAC_BITS (local trunc).
+    pub fn trunc(&self) -> TensorR {
+        Tensor {
+            data: self.data.iter().map(|&a| fixed::trunc(a)).collect(),
+            shape: self.shape.clone(),
+        }
+    }
+
+    /// Add a row vector to every row of a (…, cols) tensor.
+    pub fn add_row(&self, row: &TensorR) -> TensorR {
+        let cols = *self.shape.last().unwrap();
+        assert_eq!(row.len(), cols);
+        let mut data = self.data.clone();
+        for (i, v) in data.iter_mut().enumerate() {
+            *v = v.wrapping_add(row.data[i % cols]);
+        }
+        Tensor { data, shape: self.shape.clone() }
+    }
+
+    /// Raw matmul (no truncation): (m,k) × (k,n) → (m,n).
+    /// i64 wrapping with 64-block cache tiling — this is the MPC hot path.
+    pub fn matmul_raw(&self, other: &TensorR) -> TensorR {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let mut out = vec![0i64; m * n];
+        const BK: usize = 64;
+        for kk in (0..k).step_by(BK) {
+            let kend = (kk + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for p in kk..kend {
+                    let a = arow[p];
+                    if a == 0 {
+                        continue;
+                    }
+                    let brow = &other.data[p * n..(p + 1) * n];
+                    for j in 0..n {
+                        orow[j] = orow[j].wrapping_add(a.wrapping_mul(brow[j]));
+                    }
+                }
+            }
+        }
+        Tensor::from_vec(out, &[m, n])
+    }
+
+    /// Mean over the last axis (fixed-point): (..., c) → (..., 1), using the
+    /// public constant 1/c.
+    pub fn mean_last(&self) -> TensorR {
+        let c = *self.shape.last().unwrap();
+        let rows = self.len() / c;
+        let inv_c = fixed::encode(1.0 / c as f32);
+        // acc * inv_c carries scale 2^32 → truncate once
+        let data = (0..rows)
+            .map(|r| {
+                let mut acc = 0i64;
+                for j in 0..c {
+                    acc = acc.wrapping_add(self.data[r * c + j]);
+                }
+                fixed::trunc(acc.wrapping_mul(inv_c))
+            })
+            .collect();
+        let mut shape = self.shape.clone();
+        *shape.last_mut().unwrap() = 1;
+        Tensor { data, shape }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 ops (cleartext reference / data prep)
+// ---------------------------------------------------------------------------
+
+impl TensorF {
+    pub fn matmul(&self, other: &TensorF) -> TensorF {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2);
+        let mut out = vec![0f32; m * n];
+        for i in 0..m {
+            for p in 0..k {
+                let a = self.data[i * k + p];
+                if a == 0.0 {
+                    continue;
+                }
+                let brow = &other.data[p * n..(p + 1) * n];
+                for j in 0..n {
+                    out[i * n + j] += a * brow[j];
+                }
+            }
+        }
+        Tensor::from_vec(out, &[m, n])
+    }
+
+    pub fn max_abs_diff(&self, other: &TensorF) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_matches_f32() {
+        let mut r = Rng::new(5);
+        for _ in 0..10 {
+            let (m, k, n) = (1 + r.below(8), 1 + r.below(8), 1 + r.below(8));
+            let a = TensorF::from_vec(
+                (0..m * k).map(|_| r.uniform(-2.0, 2.0)).collect(),
+                &[m, k],
+            );
+            let b = TensorF::from_vec(
+                (0..k * n).map(|_| r.uniform(-2.0, 2.0)).collect(),
+                &[k, n],
+            );
+            let cf = a.matmul(&b);
+            let cr = TensorR::from_f32(&a).matmul_raw(&TensorR::from_f32(&b)).trunc();
+            let diff = cr.to_f32().max_abs_diff(&cf);
+            assert!(diff < 1e-2, "diff {diff}");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = TensorR::from_vec((0..12).collect(), &[3, 4]);
+        assert_eq!(t.transpose2().transpose2(), t);
+    }
+
+    #[test]
+    fn mean_last_matches() {
+        let t = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0, 10.0, 20.0, 30.0, 40.0], &[2, 4]);
+        let m = TensorR::from_f32(&t).mean_last().to_f32();
+        assert!((m.data[0] - 2.5).abs() < 1e-2);
+        assert!((m.data[1] - 25.0).abs() < 1e-2);
+    }
+
+    #[test]
+    fn add_row_broadcasts() {
+        let t = TensorR::from_vec(vec![0, 0, 0, 0], &[2, 2]);
+        let row = TensorR::from_vec(vec![5, 7], &[2]);
+        assert_eq!(t.add_row(&row).data, vec![5, 7, 5, 7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul inner dims")]
+    fn matmul_shape_mismatch_panics() {
+        let a = TensorR::zeros(&[2, 3]);
+        let b = TensorR::zeros(&[4, 2]);
+        let _ = a.matmul_raw(&b);
+    }
+}

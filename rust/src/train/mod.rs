@@ -1,0 +1,255 @@
+//! Rust-driven target finetuning over the AOT `train_step` / `eval` HLO —
+//! the end-to-end validation path: after selection, the target model is
+//! trained on the purchased points entirely from rust (PJRT), and the
+//! loss curve + test accuracy are what the paper's Tables 1/6/8 report.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+use crate::models::WeightFile;
+use crate::runtime::{
+    lit_f32, lit_labels, lit_scalar, lit_to_vec_f32, lit_tokens, lit_zeros_like,
+    Runtime,
+};
+use crate::util::Rng;
+
+pub const TRAIN_BATCH: usize = 32;
+pub const EVAL_BATCH: usize = 100;
+
+/// Adam training state held as PJRT literals (params / m / v in the
+/// canonical sorted-name order shared with aot.py).
+pub struct Trainer {
+    hlo: PathBuf,
+    pub names: Vec<String>,
+    params: Vec<xla::Literal>,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    step: f32,
+    pub seq_len: usize,
+}
+
+impl Trainer {
+    /// Initialize from the finetune-init weights (.sfw) + train_step HLO.
+    pub fn new(weights: &WeightFile, train_step_hlo: &Path, seq_len: usize) -> Result<Trainer> {
+        let names: Vec<String> =
+            weights.param_names().iter().map(|s| s.to_string()).collect();
+        let mut params = Vec::with_capacity(names.len());
+        let mut m = Vec::with_capacity(names.len());
+        let mut v = Vec::with_capacity(names.len());
+        for n in &names {
+            let t = weights.get(n)?;
+            params.push(lit_f32(t)?);
+            m.push(lit_zeros_like(t)?);
+            v.push(lit_zeros_like(t)?);
+        }
+        Ok(Trainer {
+            hlo: train_step_hlo.to_path_buf(),
+            names,
+            params,
+            m,
+            v,
+            step: 0.0,
+            seq_len,
+        })
+    }
+
+    /// One optimizer step on a (TRAIN_BATCH, seq_len) batch; returns loss.
+    pub fn step(&mut self, rt: &mut Runtime, tokens: &[u32], labels: &[u32]) -> Result<f32> {
+        if labels.len() != TRAIN_BATCH {
+            bail!("train_step is compiled for batch {TRAIN_BATCH}");
+        }
+        self.step += 1.0;
+        let p = self.names.len();
+        let mut args = Vec::with_capacity(3 * p + 3);
+        // order: params…, m…, v…, step, tokens, labels (aot.py signature)
+        args.extend(self.params.iter().map(clone_lit));
+        args.extend(self.m.iter().map(clone_lit));
+        args.extend(self.v.iter().map(clone_lit));
+        args.push(lit_scalar(self.step));
+        args.push(lit_tokens(tokens, TRAIN_BATCH, self.seq_len)?);
+        args.push(lit_labels(labels)?);
+        let mut out = rt.execute(&self.hlo, &args)?;
+        if out.len() != 3 * p + 1 {
+            bail!("train_step returned {} outputs, expected {}", out.len(), 3 * p + 1);
+        }
+        let loss = out.pop().unwrap().get_first_element::<f32>()?;
+        self.v = out.split_off(2 * p);
+        self.m = out.split_off(p);
+        self.params = out;
+        Ok(loss)
+    }
+
+    /// Train for `steps` minibatches sampled from (tokens, labels);
+    /// returns the loss curve.
+    pub fn train(
+        &mut self,
+        rt: &mut Runtime,
+        tokens: &[u32],
+        labels: &[u32],
+        steps: usize,
+        seed: u64,
+    ) -> Result<Vec<f32>> {
+        let n = labels.len();
+        if n == 0 {
+            bail!("empty training set");
+        }
+        let mut rng = Rng::new(seed ^ 0x7a17);
+        let mut curve = Vec::with_capacity(steps);
+        for _ in 0..steps {
+            let mut bt = Vec::with_capacity(TRAIN_BATCH * self.seq_len);
+            let mut bl = Vec::with_capacity(TRAIN_BATCH);
+            for _ in 0..TRAIN_BATCH {
+                let i = rng.below(n);
+                bt.extend_from_slice(&tokens[i * self.seq_len..(i + 1) * self.seq_len]);
+                bl.push(labels[i]);
+            }
+            curve.push(self.step(rt, &bt, &bl)?);
+        }
+        Ok(curve)
+    }
+
+    /// Test accuracy via the eval HLO (argmax over logits).
+    pub fn evaluate(
+        &self,
+        rt: &mut Runtime,
+        eval_hlo: &Path,
+        ds: &Dataset,
+    ) -> Result<f32> {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let p = self.names.len();
+        for start in (0..ds.n).step_by(EVAL_BATCH) {
+            let take = (ds.n - start).min(EVAL_BATCH);
+            let mut toks = Vec::with_capacity(EVAL_BATCH * self.seq_len);
+            for j in 0..EVAL_BATCH {
+                let i = if j < take { start + j } else { 0 };
+                toks.extend_from_slice(ds.example(i));
+            }
+            let mut args = Vec::with_capacity(p + 1);
+            args.extend(self.params.iter().map(clone_lit));
+            args.push(lit_tokens(&toks, EVAL_BATCH, self.seq_len)?);
+            let out = rt.execute(eval_hlo, &args)?;
+            let logits = lit_to_vec_f32(&out[0])?;
+            let n_classes = logits.len() / EVAL_BATCH;
+            for j in 0..take {
+                let row = &logits[j * n_classes..(j + 1) * n_classes];
+                let pred = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                if pred == ds.labels[start + j] as usize {
+                    correct += 1;
+                }
+                total += 1;
+            }
+        }
+        Ok(correct as f32 / total as f32)
+    }
+}
+
+fn clone_lit(l: &xla::Literal) -> xla::Literal {
+    // Literal has no Clone; round-trip through raw data
+    let shape = l.array_shape().expect("array literal");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match l.ty().expect("literal type") {
+        xla::ElementType::F32 => {
+            let v = l.to_vec::<f32>().unwrap();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+        xla::ElementType::S32 => {
+            let v = l.to_vec::<i32>().unwrap();
+            xla::Literal::vec1(&v).reshape(&dims).unwrap()
+        }
+        t => panic!("unsupported literal type {t:?}"),
+    }
+}
+
+/// Oracle selection signal: exact target-model entropies via PJRT
+/// (the cleartext counterpart of Oracle-over-MPC; same numbers, none of
+/// the WAN cost — used by the accuracy experiments).
+pub fn oracle_entropies(
+    rt: &mut Runtime,
+    entropy_hlo: &Path,
+    weights: &WeightFile,
+    ds: &Dataset,
+    candidates: &[usize],
+    fwd_batch: usize,
+) -> Result<Vec<f32>> {
+    let names = weights.param_names();
+    let mut params = Vec::with_capacity(names.len());
+    for n in &names {
+        params.push(lit_f32(weights.get(n)?)?);
+    }
+    let mut out = Vec::with_capacity(candidates.len());
+    for start in (0..candidates.len()).step_by(fwd_batch) {
+        let take = (candidates.len() - start).min(fwd_batch);
+        let mut toks = Vec::with_capacity(fwd_batch * ds.seq_len);
+        for j in 0..fwd_batch {
+            let i = candidates[if j < take { start + j } else { 0 }];
+            toks.extend_from_slice(ds.example(i));
+        }
+        let mut args: Vec<xla::Literal> = params.iter().map(clone_lit).collect();
+        args.push(lit_tokens(&toks, fwd_batch, ds.seq_len)?);
+        let res = rt.execute(entropy_hlo, &args)?;
+        let ent = lit_to_vec_f32(&res[0])?;
+        out.extend_from_slice(&ent[..take]);
+    }
+    Ok(out)
+}
+
+/// Proxy forward via the AOT pallas-path HLO — used to cross-check the
+/// MPC engine's numerics against the L2/L1 stack.
+pub fn proxy_entropies_clear(
+    rt: &mut Runtime,
+    proxy_hlo: &Path,
+    weights: &WeightFile,
+    ds: &Dataset,
+    candidates: &[usize],
+    fwd_batch: usize,
+) -> Result<Vec<f32>> {
+    let names = weights.param_names();
+    let mut params = Vec::with_capacity(names.len());
+    for n in &names {
+        params.push(lit_f32(weights.get(n)?)?);
+    }
+    let mut out = Vec::with_capacity(candidates.len());
+    for start in (0..candidates.len()).step_by(fwd_batch) {
+        let take = (candidates.len() - start).min(fwd_batch);
+        let mut toks = Vec::with_capacity(fwd_batch * ds.seq_len);
+        for j in 0..fwd_batch {
+            let i = candidates[if j < take { start + j } else { 0 }];
+            toks.extend_from_slice(ds.example(i));
+        }
+        let mut args: Vec<xla::Literal> = params.iter().map(clone_lit).collect();
+        args.push(lit_tokens(&toks, fwd_batch, ds.seq_len)?);
+        let res = rt.execute(proxy_hlo, &args)?;
+        // outputs: (logits, entropy)
+        let ent = lit_to_vec_f32(&res[1])?;
+        out.extend_from_slice(&ent[..take]);
+    }
+    Ok(out)
+}
+
+/// Top-k by cleartext scores (for Oracle / clear-path selection).
+pub fn top_k_clear(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut out = idx[..k.min(idx.len())].to_vec();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_clear_selects_largest() {
+        let s = vec![0.1, 0.9, 0.5, 0.7];
+        assert_eq!(top_k_clear(&s, 2), vec![1, 3]);
+    }
+}

@@ -1,0 +1,8 @@
+//! Shared utilities: deterministic PRNGs, a proptest-lite harness, and
+//! report/table writers.
+
+pub mod proptest_lite;
+pub mod report;
+pub mod rng;
+
+pub use rng::Rng;

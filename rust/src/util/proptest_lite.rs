@@ -1,0 +1,139 @@
+//! Minimal property-testing harness (the offline crate set has no
+//! `proptest`, so we grow our own).
+//!
+//! `check(seed, cases, gen, prop)` runs `prop` on `cases` inputs drawn by
+//! `gen`; on failure it performs greedy shrinking through the optional
+//! `shrink` hooks and panics with the minimal counterexample, pretty-printed
+//! via `Debug`.
+//!
+//! Used by the coordinator/MPC invariant suites (see rust/tests/).
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 64, seed: 0x5e1ec7f0, max_shrink: 200 }
+    }
+}
+
+/// Run `prop` over `cases` generated inputs; panic with a (shrunk)
+/// counterexample on the first failure.
+pub fn check_with<T, G, P, S>(cfg: Config, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink: repeatedly take the first failing candidate
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut budget = cfg.max_shrink;
+            'outer: while budget > 0 {
+                for cand in shrink(&best) {
+                    budget -= 1;
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}/{}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.cases, cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// `check_with` without shrinking.
+pub fn check<T, G, P>(cases: usize, seed: u64, gen: G, prop: P)
+where
+    T: Clone + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    check_with(
+        Config { cases, seed, ..Default::default() },
+        gen,
+        prop,
+        |_| Vec::new(),
+    );
+}
+
+/// Shrinker for a vec: halves, tail-drops and element-simplification.
+pub fn shrink_vec<T: Clone>(xs: &[T], simplify: impl Fn(&T) -> Option<T>)
+    -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    let n = xs.len();
+    if n > 0 {
+        out.push(xs[..n / 2].to_vec());
+        out.push(xs[n / 2..].to_vec());
+        out.push(xs[..n - 1].to_vec());
+    }
+    for i in 0..n.min(8) {
+        if let Some(s) = simplify(&xs[i]) {
+            let mut ys = xs.to_vec();
+            ys[i] = s;
+            out.push(ys);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(100, 1, |r| r.below(1000), |&x| {
+            if x < 1000 { Ok(()) } else { Err(format!("{x} out of range")) }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_reports() {
+        check(100, 2, |r| r.below(1000), |&x| {
+            if x < 990 { Ok(()) } else { Err("too big".into()) }
+        });
+    }
+
+    #[test]
+    fn shrinks_to_small_case() {
+        let result = std::panic::catch_unwind(|| {
+            check_with(
+                Config { cases: 50, seed: 3, max_shrink: 500 },
+                |r| (0..20).map(|_| r.below(100) as i64).collect::<Vec<i64>>(),
+                |xs| {
+                    if xs.iter().all(|&x| x < 90) {
+                        Ok(())
+                    } else {
+                        Err("contains >= 90".into())
+                    }
+                },
+                |xs| shrink_vec(xs, |&x| if x > 0 { Some(x / 2) } else { None }),
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // shrunk input should be much smaller than the original 20 elements
+        assert!(msg.contains("property failed"), "{msg}");
+    }
+}

@@ -1,0 +1,127 @@
+//! Cost-model validation: the measured-profile extrapolation (planner /
+//! benchkit) must track real full runs — this is what makes the Fig 6/7 /
+//! Table 3 delay benches trustworthy.
+
+use selectformer::benchkit::profile_deep_target;
+use selectformer::coordinator::planner::profile_phase;
+use selectformer::coordinator::testutil::{self, tiny_proxy_cfg};
+use selectformer::coordinator::{run_phase_mpc, SchedPolicy, SelectionOptions};
+use selectformer::data::{synth, SynthSpec};
+use selectformer::models::{ModelConfig, Variant, WeightFile};
+use selectformer::mpc::net::NetConfig;
+
+fn run_actual(cfg: &ModelConfig, n: usize, batch: usize) -> (u64, u64) {
+    let path = std::env::temp_dir()
+        .join("sf_costmodel")
+        .join(format!("{}_{}_{}.sfw", cfg.n_layers, cfg.variant_code, cfg.d_ff));
+    testutil::write_random_sfw(&path, cfg);
+    let wf = WeightFile::load(&path).unwrap();
+    let ds = synth(
+        &SynthSpec {
+            n_classes: cfg.n_classes,
+            seq_len: cfg.seq_len,
+            vocab: cfg.vocab,
+            ..Default::default()
+        },
+        n,
+        false,
+        5,
+    );
+    let opts = SelectionOptions { batch, ..Default::default() };
+    let out = run_phase_mpc(&wf, &ds, &(0..n).collect::<Vec<_>>(), 1, &opts).unwrap();
+    (out.meter_p0.bytes + out.meter_p1.bytes, out.meter_p0.rounds)
+}
+
+#[test]
+fn profile_bytes_extrapolate_exactly() {
+    // MPC traffic is deterministic and linear in batches: the 1→2 batch
+    // marginal must predict a 5-batch run to within the QuickSelect noise.
+    let cfg = tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8);
+    let batch = 8;
+    let profile = profile_phase(&cfg, batch).unwrap();
+    let (actual_bytes, _rounds) = run_actual(&cfg, 5 * batch, batch);
+    let predicted = profile.setup_bytes + 5 * profile.batch_bytes;
+    let rel = (predicted as f64 - actual_bytes as f64).abs() / actual_bytes as f64;
+    assert!(
+        rel < 0.05,
+        "bytes: predicted {predicted}, actual {actual_bytes} (rel {rel:.3})"
+    );
+}
+
+#[test]
+fn layer_scaling_matches_direct_measurement() {
+    // benchkit::profile_deep_target extrapolates deep targets from 1–2
+    // layer runs; check against a really-measured 3-layer model.
+    let mut cfg = tiny_proxy_cfg(3, 2, 2, 16, 64, 2, 8);
+    cfg.variant_code = 3; // exact
+    cfg.d_ff = 64;
+    let batch = 4;
+    let scaled = profile_deep_target(&cfg, batch).unwrap();
+    let direct = profile_phase(&cfg, batch).unwrap();
+    let rel = |a: u64, b: u64| (a as f64 - b as f64).abs() / (b.max(1) as f64);
+    assert!(
+        rel(scaled.batch_bytes, direct.batch_bytes) < 0.05,
+        "per-batch bytes: scaled {} vs direct {}",
+        scaled.batch_bytes,
+        direct.batch_bytes
+    );
+    assert!(
+        rel(scaled.batch_rounds, direct.batch_rounds) < 0.05,
+        "per-batch rounds: scaled {} vs direct {}",
+        scaled.batch_rounds,
+        direct.batch_rounds
+    );
+}
+
+#[test]
+fn mlp_variant_is_much_cheaper_than_exact() {
+    // the paper's core claim at the cost-model level: MLP emulation
+    // collapses both rounds and bytes vs exact nonlinearities
+    let batch = 4;
+    let mlp = profile_phase(&tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8), batch).unwrap();
+    let mut exact_cfg = tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8);
+    exact_cfg.variant_code = 3;
+    let exact = profile_phase(&exact_cfg, batch).unwrap();
+    assert!(
+        exact.batch_rounds > 3 * mlp.batch_rounds,
+        "exact {} rounds vs mlp {}",
+        exact.batch_rounds,
+        mlp.batch_rounds
+    );
+    assert!(
+        exact.batch_bytes > 2 * mlp.batch_bytes,
+        "exact {} bytes vs mlp {}",
+        exact.batch_bytes,
+        mlp.batch_bytes
+    );
+}
+
+#[test]
+fn estimates_scale_linearly_with_points() {
+    let cfg = tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8);
+    let profile = profile_phase(&cfg, 8).unwrap();
+    let net = NetConfig::default();
+    let d1 = profile.estimate(1_000, &net, SchedPolicy::Sequential);
+    let d10 = profile.estimate(10_000, &net, SchedPolicy::Sequential);
+    let ratio = d10 / d1;
+    assert!(
+        (8.0..12.0).contains(&ratio),
+        "10× points should be ≈10× delay, got {ratio:.2}"
+    );
+}
+
+#[test]
+fn policies_reduce_estimated_delay_in_order() {
+    let cfg = tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8);
+    let profile = profile_phase(&cfg, 8).unwrap();
+    let net = NetConfig::default();
+    let seq = profile.estimate(5_000, &net, SchedPolicy::Sequential);
+    let coal = profile.estimate(5_000, &net, SchedPolicy::Coalesced);
+    let ours = profile.estimate(5_000, &net, SchedPolicy::CoalescedOverlapped);
+    assert!(coal < seq);
+    assert!(ours <= coal);
+    // the paper's Fig 7 PMT→Ours step is 1.3–1.4×; ours on this workload
+    // should land in a sane 1.05–3× window
+    let step = coal / ours;
+    assert!((1.0..4.0).contains(&step), "overlap step {step:.2}");
+}

@@ -1,0 +1,101 @@
+//! Failure injection: the engine must fail loudly and safely — a
+//! disconnected peer, malformed artifacts, and API misuse all surface as
+//! errors/panics rather than silent corruption.
+
+use std::io::Write;
+
+use selectformer::coordinator::quickselect::top_k_indices;
+use selectformer::data::Dataset;
+use selectformer::models::WeightFile;
+use selectformer::mpc::engine::run_pair;
+use selectformer::mpc::net::chan_pair;
+use selectformer::mpc::proto::{recv_share, share_input, Shared};
+use selectformer::tensor::TensorR;
+
+#[test]
+fn peer_disconnect_panics_not_hangs() {
+    // P1 exits immediately; P0's exchange must panic ("peer hung up"),
+    // not deadlock.
+    let (mut c0, c1) = chan_pair();
+    drop(c1);
+    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        c0.exchange(vec![1, 2, 3]);
+    }));
+    assert!(result.is_err(), "must panic on disconnected peer");
+}
+
+#[test]
+fn mismatched_protocol_order_detected_by_shape() {
+    // P0 shares a [4] tensor, P1 expects [2,2]: same element count is
+    // indistinguishable (by design — shares are opaque), but a WRONG
+    // element count must panic in from_vec.
+    let result = std::panic::catch_unwind(|| {
+        run_pair(
+            1,
+            |ctx| {
+                let x = TensorR::from_vec(vec![1, 2, 3, 4], &[4]);
+                let _ = share_input(ctx, &x);
+            },
+            |ctx| {
+                let _ = recv_share(ctx, &[5]); // wrong size
+            },
+        );
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn quickselect_k_too_large_is_rejected() {
+    let result = std::panic::catch_unwind(|| {
+        run_pair(
+            2,
+            |ctx| {
+                let x = Shared(TensorR::from_vec(vec![1, 2, 3], &[3]));
+                let _ = top_k_indices(ctx, &x, 5);
+            },
+            |ctx| {
+                let x = Shared(TensorR::from_vec(vec![1, 2, 3], &[3]));
+                let _ = top_k_indices(ctx, &x, 5);
+            },
+        );
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn corrupt_sfw_is_an_error() {
+    let dir = std::env::temp_dir().join("sf_failure");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("corrupt.sfw");
+    let mut f = std::fs::File::create(&p).unwrap();
+    f.write_all(b"SFWT").unwrap();
+    f.write_all(&1u32.to_le_bytes()).unwrap();
+    f.write_all(&3u32.to_le_bytes()).unwrap(); // claims 3 tensors, has none
+    drop(f);
+    assert!(WeightFile::load(&p).is_err());
+
+    let p2 = dir.join("badmagic.sfw");
+    std::fs::write(&p2, b"XXXX0000").unwrap();
+    assert!(WeightFile::load(&p2).is_err());
+}
+
+#[test]
+fn corrupt_dataset_is_an_error() {
+    let dir = std::env::temp_dir().join("sf_failure");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.bin");
+    std::fs::write(&p, b"SFDS\x01\x00\x00\x00").unwrap(); // truncated header
+    assert!(Dataset::load(&p).is_err());
+    let p2 = dir.join("badmagic.bin");
+    std::fs::write(&p2, b"NOPE\x01\x00\x00\x00").unwrap();
+    assert!(Dataset::load(&p2).is_err());
+}
+
+#[test]
+fn missing_artifacts_surface_cleanly() {
+    use selectformer::exp::Cell;
+    let cell = Cell::new(std::path::Path::new("/nonexistent"), "x", "y");
+    assert!(!cell.exists());
+    assert!(cell.train_dataset().is_err());
+    assert!(cell.bootstrap_indices().is_err());
+}

@@ -1,0 +1,126 @@
+//! §5.4 "Crypten incurs minor accuracy loss" — cross-stack validation:
+//! the rust MPC engine (fixed-point, Beaver, MLP emulation) must agree
+//! with the plaintext L2/L1 stack (JAX+Pallas → HLO → PJRT) on the same
+//! proxy weights, and the entropy RANKING (what selection consumes) must
+//! survive the fixed-point round trip.
+//!
+//! These tests need `make artifacts`; they skip (pass vacuously, loudly)
+//! when the artifacts are absent so `cargo test` works on a fresh clone.
+
+use selectformer::coordinator::{run_phase_mpc, SelectionOptions};
+use selectformer::exp::Cell;
+use selectformer::models::WeightFile;
+use selectformer::runtime::Runtime;
+use selectformer::train::proxy_entropies_clear;
+
+fn cell() -> Option<Cell> {
+    let c = Cell::new(&Cell::default_root(), "distilbert_s", "sst2s");
+    if c.exists() && c.proxy_fwd_hlo(1).exists() {
+        Some(c)
+    } else {
+        eprintln!("SKIP: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn mpc_entropies_match_pjrt_clear_path() {
+    let Some(cell) = cell() else { return };
+    let ds = cell.train_dataset().unwrap();
+    let candidates: Vec<usize> = (0..64).collect();
+    let wf = WeightFile::load(&cell.proxy_phase(1)).unwrap();
+
+    // clear path: AOT HLO (pallas kernels inside) via PJRT
+    let mut rt = Runtime::new().unwrap();
+    let clear = proxy_entropies_clear(
+        &mut rt,
+        &cell.proxy_fwd_hlo(1),
+        &wf,
+        &ds,
+        &candidates,
+        64,
+    )
+    .unwrap();
+
+    // private path: the same forward over 2PC shares
+    let opts = SelectionOptions {
+        batch: 16,
+        reveal_entropies: true,
+        ..Default::default()
+    };
+    let out = run_phase_mpc(&wf, &ds, &candidates, 8, &opts).unwrap();
+    let mpc = out.entropies.unwrap();
+
+    assert_eq!(clear.len(), mpc.len());
+    let mut max_err = 0f32;
+    for (c, m) in clear.iter().zip(&mpc) {
+        max_err = max_err.max((c - m).abs());
+    }
+    // fixed-point (2^-16) + probabilistic truncation across a 1-layer
+    // proxy: small absolute error
+    assert!(max_err < 0.05, "max |clear − mpc| = {max_err}");
+
+    // ranking fidelity: Spearman-lite via top-16 overlap
+    let topk = |v: &[f32]| {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&a, &b| v[b].partial_cmp(&v[a]).unwrap());
+        idx[..16].to_vec()
+    };
+    let a = topk(&clear);
+    let b = topk(&mpc);
+    let overlap = a.iter().filter(|i| b.contains(i)).count();
+    assert!(overlap >= 13, "top-16 overlap only {overlap}/16");
+}
+
+#[test]
+fn phase2_proxy_also_matches() {
+    let Some(cell) = cell() else { return };
+    if !cell.proxy_fwd_hlo(2).exists() {
+        return;
+    }
+    let ds = cell.train_dataset().unwrap();
+    let candidates: Vec<usize> = (100..148).collect();
+    let wf = WeightFile::load(&cell.proxy_phase(2)).unwrap();
+    let mut rt = Runtime::new().unwrap();
+    let clear =
+        proxy_entropies_clear(&mut rt, &cell.proxy_fwd_hlo(2), &wf, &ds, &candidates, 64)
+            .unwrap();
+    let opts = SelectionOptions {
+        batch: 16,
+        reveal_entropies: true,
+        ..Default::default()
+    };
+    let out = run_phase_mpc(&wf, &ds, &candidates, 8, &opts).unwrap();
+    let mpc = out.entropies.unwrap();
+    let mut max_err = 0f32;
+    for (c, m) in clear.iter().zip(&mpc) {
+        max_err = max_err.max((c - m).abs());
+    }
+    // 3 layers of fixed point accumulate more error; ranking is the bar
+    assert!(max_err < 0.15, "max |clear − mpc| = {max_err}");
+}
+
+#[test]
+fn selection_and_training_compose() {
+    // mini Table-1 cell: MPC-select 100 points from 600 candidates, train
+    // 40 steps via the train_step HLO, evaluate — everything must compose
+    // and produce a sane accuracy.
+    let Some(cell) = cell() else { return };
+    let mut rt = Runtime::new().unwrap();
+    let opts = SelectionOptions { batch: 16, ..Default::default() };
+    let ds = cell.train_dataset().unwrap();
+    let candidates: Vec<usize> = (0..600).collect();
+    let wf = WeightFile::load(&cell.proxy_phase(1)).unwrap();
+    let out = run_phase_mpc(&wf, &ds, &candidates, 100, &opts).unwrap();
+    assert_eq!(out.survivors.len(), 100);
+    let purchase = selectformer::exp::Purchase {
+        indices: out.survivors,
+        outcome: None,
+        bootstrap: cell.bootstrap_indices().unwrap(),
+    };
+    let (curve, acc) =
+        selectformer::exp::train_and_eval(&cell, &mut rt, &purchase, 40, 7).unwrap();
+    assert_eq!(curve.len(), 40);
+    assert!(curve.iter().all(|l| l.is_finite()));
+    assert!((0.3..=1.0).contains(&acc), "accuracy {acc}");
+}

@@ -1,0 +1,259 @@
+//! Property-based invariants over the coordinator (proptest-lite):
+//! QuickSelect correctness vs brute force, schedule algebra, scheduling
+//! policy monotonicity, market partitioning, fixed-point error bounds.
+
+use selectformer::coordinator::iosched::{self, SchedPolicy};
+use selectformer::coordinator::market;
+use selectformer::coordinator::phase::{PhaseSchedule, ProxySpec};
+use selectformer::coordinator::quickselect::top_k_indices;
+use selectformer::fixed;
+use selectformer::mpc::engine::run_pair;
+use selectformer::mpc::net::{CostMeter, NetConfig, OpRecord};
+use selectformer::mpc::proto::{recv_share, share_input};
+use selectformer::tensor::{TensorF, TensorR};
+use selectformer::util::proptest_lite::{check, check_with, shrink_vec, Config};
+use selectformer::util::Rng;
+
+#[test]
+fn prop_quickselect_matches_bruteforce() {
+    check(
+        12,
+        0x15ee as u64,
+        |r| {
+            let n = 5 + r.below(60);
+            let k = 1 + r.below(n - 1);
+            let vals: Vec<f32> = (0..n).map(|_| r.uniform(-50.0, 50.0)).collect();
+            (vals, k)
+        },
+        |(vals, k)| {
+            let n = vals.len();
+            let x = TensorR::from_f32(&TensorF::from_vec(vals.clone(), &[n]));
+            let k = *k;
+            let ((got, _), got1) = run_pair(
+                0xcafe,
+                {
+                    let x = x.clone();
+                    move |ctx| {
+                        let sh = share_input(ctx, &x);
+                        top_k_indices(ctx, &sh, k)
+                    }
+                },
+                move |ctx| {
+                    let sh = recv_share(ctx, &[n]);
+                    top_k_indices(ctx, &sh, k).0
+                },
+            );
+            if got != got1 {
+                return Err(format!("parties disagree: {got:?} vs {got1:?}"));
+            }
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| vals[b].partial_cmp(&vals[a]).unwrap());
+            let mut want = idx[..k].to_vec();
+            want.sort_unstable();
+            if got != want {
+                return Err(format!("got {got:?}, want {want:?}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_schedule_survivors_monotone_and_budgeted() {
+    check(
+        200,
+        7,
+        |r| {
+            let phases = 1 + r.below(3);
+            let sels: Vec<f64> =
+                (0..phases).map(|_| 0.05 + 0.9 * r.f64()).collect();
+            let n = 100 + r.below(100_000);
+            (sels, n)
+        },
+        |(sels, n)| {
+            let proxies =
+                vec![ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 }; sels.len()];
+            let s = PhaseSchedule::new(proxies, sels.clone());
+            let counts = s.survivor_counts(*n);
+            let mut prev = *n;
+            for &c in &counts {
+                if c > prev {
+                    return Err(format!("survivors grew: {counts:?}"));
+                }
+                prev = c;
+            }
+            let expect = (*n as f64) * s.budget();
+            let last = *counts.last().unwrap() as f64;
+            if (last - expect).abs() > 2.0 + 0.02 * expect {
+                return Err(format!("final {last} vs budget {expect}"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_iosched_policies_ordered() {
+    // Ours ≤ Coalesced ≤ Sequential and Ours ≤ Overlapped ≤ Sequential
+    // for ANY op trace.
+    check_with(
+        Config { cases: 300, seed: 9, max_shrink: 100 },
+        |r| {
+            let n_ops = 1 + r.below(20);
+            (0..n_ops)
+                .map(|_| OpRecord {
+                    name: "op",
+                    rounds: 1 + r.below(50) as u64,
+                    bytes: r.below(50_000_000) as u64,
+                    compute_s: r.f64() * 2.0,
+                })
+                .collect::<Vec<_>>()
+        },
+        |ops| {
+            let p0 = CostMeter {
+                bytes: ops.iter().map(|o| o.bytes).sum(),
+                rounds: ops.iter().map(|o| o.rounds).sum(),
+                messages: 0,
+                compute_s: ops.iter().map(|o| o.compute_s).sum(),
+                ops: ops.clone(),
+            };
+            let net = NetConfig::default();
+            let seq = iosched::delay(&p0, &p0, &net, SchedPolicy::Sequential);
+            let coal = iosched::delay(&p0, &p0, &net, SchedPolicy::Coalesced);
+            let ovl = iosched::delay(&p0, &p0, &net, SchedPolicy::Overlapped);
+            let ours =
+                iosched::delay(&p0, &p0, &net, SchedPolicy::CoalescedOverlapped);
+            let eps = 1e-9;
+            if coal > seq + eps {
+                return Err(format!("coalesced {coal} > sequential {seq}"));
+            }
+            if ovl > seq + eps {
+                return Err(format!("overlapped {ovl} > sequential {seq}"));
+            }
+            if ours > coal + eps {
+                return Err(format!("ours {ours} > coalesced {coal}"));
+            }
+            Ok(())
+        },
+        |ops| shrink_vec(ops, |_| None),
+    );
+}
+
+#[test]
+fn prop_market_partition_is_exact() {
+    check(
+        300,
+        11,
+        |r| {
+            let n = 10 + r.below(5000);
+            let frac = 0.05 + 0.5 * r.f64();
+            let boot_frac = 0.05 + 0.5 * r.f64();
+            (n, frac, boot_frac)
+        },
+        |&(n, frac, boot_frac)| {
+            let b = market::Budget::from_fraction(n, frac, boot_frac);
+            let boot = market::bootstrap_purchase(n, &b, 3);
+            let cand = market::selection_candidates(n, &boot);
+            if boot.len() + cand.len() != n {
+                return Err("not a partition".into());
+            }
+            if b.bootstrap_points() + b.selection_points() != b.total {
+                return Err("budget split broken".into());
+            }
+            let mut all: Vec<usize> = boot.iter().chain(&cand).copied().collect();
+            all.sort_unstable();
+            all.dedup();
+            if all.len() != n {
+                return Err("overlap between bootstrap and candidates".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fixed_point_arithmetic_bounds() {
+    check(
+        2000,
+        13,
+        |r| (r.uniform(-500.0, 500.0), r.uniform(-500.0, 500.0)),
+        |&(a, b)| {
+            let (ea, eb) = (fixed::encode(a), fixed::encode(b));
+            let sum = fixed::decode(fixed::radd(ea, eb));
+            if (sum - (a + b)).abs() > 3e-4 {
+                return Err(format!("add: {sum} vs {}", a + b));
+            }
+            let prod = fixed::decode(fixed::rmul_fixed(ea, eb));
+            let tol = 1e-3 + (a.abs() + b.abs()) * 2.0 / fixed::SCALE as f32;
+            if (prod - a * b).abs() > tol {
+                return Err(format!("mul: {prod} vs {}", a * b));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_random_select_is_valid_sample() {
+    check(
+        200,
+        17,
+        |r| {
+            let n = 2 + r.below(2000);
+            let k = 1 + r.below(n);
+            let seed = r.next_u64();
+            (n, k, seed)
+        },
+        |&(n, k, seed)| {
+            let s = selectformer::coordinator::random_select(n, k, seed);
+            if s.len() != k {
+                return Err("wrong size".into());
+            }
+            if !s.windows(2).all(|w| w[0] < w[1]) {
+                return Err("not sorted/distinct".into());
+            }
+            if s.iter().any(|&i| i >= n) {
+                return Err("out of range".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_shares_leak_nothing_statistically() {
+    // A single share is uniform on the ring: its low bits look random
+    // regardless of the secret. Chi-square-lite over the low byte.
+    let mut rng = Rng::new(23);
+    for &secret in &[0.0f32, 1.0, -123.456, 1e4] {
+        let n = 4096;
+        let x = TensorR::from_f32(&TensorF::from_vec(vec![secret; n], &[n]));
+        let (hist, _) = run_pair(
+            rng.next_u64(),
+            {
+                let x = x.clone();
+                move |ctx| {
+                    let sh = share_input(ctx, &x);
+                    let mut hist = [0usize; 256];
+                    for &v in &sh.0.data {
+                        hist[(v & 0xff) as usize] += 1;
+                    }
+                    hist
+                }
+            },
+            move |ctx| {
+                let _ = recv_share(ctx, &[n]);
+            },
+        );
+        let expected = n as f64 / 256.0;
+        let chi2: f64 = hist
+            .iter()
+            .map(|&o| {
+                let d = o as f64 - expected;
+                d * d / expected
+            })
+            .sum();
+        // df=255; mean 255, sd ~22.6 — allow 6 sigma
+        assert!(chi2 < 255.0 + 6.0 * 22.6, "secret {secret}: chi2 {chi2}");
+    }
+}
