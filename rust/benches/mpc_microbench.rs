@@ -1,10 +1,17 @@
 //! MPC primitive microbenchmarks — the perf-pass instrument (EXPERIMENTS
 //! §Perf): wall-clock throughput + protocol cost of each 2PC primitive at
-//! the shapes the proxy forward actually uses.
+//! the shapes the proxy forward actually uses, plus the ring-GEMM thread
+//! ladder and the serial-vs-pipelined end-to-end phase, both persisted to
+//! results/BENCH_gemm.json / BENCH_e2e.json so the perf trajectory is
+//! diffable PR over PR.
 
 use std::time::Instant;
 
-use selectformer::benchkit::{banner, write_tsv};
+use selectformer::benchkit::{banner, write_bench_json, write_tsv, BenchRow};
+use selectformer::coordinator::{
+    multi_phase_select, testutil, PhaseSchedule, ProxySpec, SelectionOptions,
+};
+use selectformer::data::{synth, SynthSpec};
 use selectformer::mpc::cmp;
 use selectformer::mpc::engine::run_pair_metered;
 use selectformer::mpc::proto::{
@@ -65,8 +72,114 @@ fn elapsed_tuple(t: (f64, u64, u64)) -> (f64, u64, u64) {
     t
 }
 
+/// Ring-GEMM thread ladder at the acceptance shape (512×512×512): the
+/// seed's scalar kernel vs the packed kernel at 1/2/4/8 workers.
+fn bench_gemm() -> Vec<BenchRow> {
+    let (m, k, n) = (512usize, 512, 512);
+    let mut rng = Rng::new(42);
+    let a = TensorR::from_vec((0..m * k).map(|_| rng.next_i64()).collect(), &[m, k]);
+    let b = TensorR::from_vec((0..k * n).map(|_| rng.next_i64()).collect(), &[k, n]);
+    let time = |f: &dyn Fn() -> TensorR| -> f64 {
+        let _ = f(); // warm-up
+        let iters = 3;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            std::hint::black_box(f());
+        }
+        t0.elapsed().as_secs_f64() / iters as f64
+    };
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "ring GEMM 512×512×512 (i64 wrapping)",
+        &["kernel", "threads", "ms/op", "GMAC/s", "speedup vs seed"],
+    );
+    let macs = (m * k * n) as f64;
+    let t_ref = time(&|| a.matmul_raw_ref(&b));
+    rows.push(BenchRow::new("gemm_seed_scalar", "512x512x512", 1, t_ref * 1e9));
+    table.row(vec![
+        "seed scalar".into(),
+        "1".into(),
+        format!("{:.1}", t_ref * 1e3),
+        format!("{:.2}", macs / t_ref / 1e9),
+        "1.00×".into(),
+    ]);
+    for threads in [1usize, 2, 4, 8] {
+        let t = time(&|| a.matmul_raw_with_threads(&b, threads));
+        rows.push(BenchRow::new("gemm_packed", "512x512x512", threads, t * 1e9));
+        table.row(vec![
+            "packed".into(),
+            threads.to_string(),
+            format!("{:.1}", t * 1e3),
+            format!("{:.2}", macs / t / 1e9),
+            format!("{:.2}×", t_ref / t),
+        ]);
+    }
+    table.print();
+    rows
+}
+
+/// Measured end-to-end 2-phase selection over 256 candidates: the serial
+/// party pair vs the pipelined lane runtime (identical output, different
+/// wall-clock).
+fn bench_e2e() -> Vec<BenchRow> {
+    let dir = std::env::temp_dir().join("sf_bench_e2e");
+    let p1 = dir.join("phase1.sfw");
+    let p2 = dir.join("phase2.sfw");
+    testutil::write_random_proxy_sfw(&p1, 1, 1, 2, 16, 64, 2, 8);
+    testutil::write_random_proxy_sfw(&p2, 2, 2, 4, 16, 64, 2, 8);
+    let ds = synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        256,
+        false,
+        7,
+    );
+    let schedule = PhaseSchedule::new(
+        vec![
+            ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            ProxySpec { n_layers: 2, n_heads: 2, d_mlp: 4 },
+        ],
+        vec![0.5, 0.5],
+    );
+    let cands: Vec<usize> = (0..256).collect();
+    let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(4);
+    let run = |lanes: usize| {
+        let opts = SelectionOptions { batch: 16, lanes, ..Default::default() };
+        multi_phase_select(&[p1.as_path(), p2.as_path()], &schedule, &ds, cands.clone(), &opts)
+            .expect("selection")
+    };
+    let serial = run(1);
+    let piped = run(lanes);
+    assert_eq!(serial.selected, piped.selected, "pipelined must select identically");
+    let mut table = Table::new(
+        "2-phase selection, 256 candidates (tiny proxy)",
+        &["mode", "lanes", "wall", "speedup"],
+    );
+    let (ws, wp) = (serial.total_wall_s(), piped.total_wall_s());
+    table.row(vec![
+        "serial".into(),
+        "1".into(),
+        format!("{:.2} s", ws),
+        "1.00×".into(),
+    ]);
+    table.row(vec![
+        "pipelined".into(),
+        lanes.to_string(),
+        format!("{:.2} s", wp),
+        format!("{:.2}×", ws / wp),
+    ]);
+    table.print();
+    vec![
+        BenchRow::new("select_2phase_serial", "n=256,batch=16", 1, ws * 1e9),
+        BenchRow::new("select_2phase_pipelined", "n=256,batch=16", lanes, wp * 1e9),
+    ]
+}
+
 fn main() {
     banner("microbench", "2PC primitive throughput (local wall-clock, per call)");
+    let gemm_rows = bench_gemm();
+    write_bench_json("BENCH_gemm", &gemm_rows);
+    let e2e_rows = bench_e2e();
+    write_bench_json("BENCH_e2e", &e2e_rows);
     let mut t = Table::new(
         "MPC primitives",
         &["op", "shape", "latency", "throughput", "rounds", "bytes/call (p0)"],

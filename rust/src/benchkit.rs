@@ -108,3 +108,44 @@ pub fn write_tsv(name: &str, header: &[&str], rows: &[Vec<String>]) {
     let _ = std::fs::create_dir_all(dir);
     let _ = std::fs::write(dir.join(format!("{name}.tsv")), s);
 }
+
+/// One measured row of a perf-trajectory bench (results/BENCH_*.json) —
+/// the machine-diffable record subsequent PRs compare against.
+#[derive(Clone, Debug)]
+pub struct BenchRow {
+    pub op: String,
+    pub shape: String,
+    pub threads: usize,
+    pub ns_per_op: f64,
+}
+
+impl BenchRow {
+    pub fn new(op: &str, shape: &str, threads: usize, ns_per_op: f64) -> BenchRow {
+        BenchRow {
+            op: op.to_string(),
+            shape: shape.to_string(),
+            threads,
+            ns_per_op,
+        }
+    }
+}
+
+/// Write perf rows to results/<name>.json (hand-rolled JSON — the offline
+/// crate set has no serde; fields are flat strings/numbers).
+pub fn write_bench_json(name: &str, rows: &[BenchRow]) {
+    let mut s = String::from("[\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "  {{\"op\": \"{}\", \"shape\": \"{}\", \"threads\": {}, \"ns_per_op\": {:.1}}}{}\n",
+            r.op,
+            r.shape,
+            r.threads,
+            r.ns_per_op,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    let dir = std::path::Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join(format!("{name}.json")), s);
+}

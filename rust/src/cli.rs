@@ -3,7 +3,7 @@
 //! ```text
 //! selectformer info
 //! selectformer select  --target distilbert_s --bench sst2s [--budget 0.2]
-//!                      [--batch 16] [--policy ours|serial|coalesced]
+//!                      [--batch 16] [--lanes 4] [--policy ours|serial|coalesced]
 //!                      [--method ours|random|oracle|mpcformer|bolt|noattnsm|noattnln|noapprox]
 //! selectformer e2e     --target ... --bench ... [--budget 0.2] [--steps 300]
 //! selectformer train   --target ... --bench ... [--method ours|random|oracle] [--steps 300]
@@ -137,6 +137,7 @@ fn opts_from(args: &Args, approx: ApproxToggles) -> Result<SelectionOptions> {
         dealer_seed: 0x5e1ec7,
         approx,
         reveal_entropies: false,
+        lanes: args.usize_or("lanes", 1)?,
     })
 }
 

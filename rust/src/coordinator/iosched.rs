@@ -99,7 +99,7 @@ mod tests {
     use crate::mpc::net::OpRecord;
 
     fn meter(bytes: u64, rounds: u64, compute: f64, ops: Vec<OpRecord>) -> CostMeter {
-        CostMeter { bytes, rounds, messages: rounds, compute_s: compute, ops }
+        CostMeter { bytes, rounds, messages: rounds, compute_s: compute, ops, ..Default::default() }
     }
 
     #[test]

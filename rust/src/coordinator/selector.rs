@@ -5,22 +5,48 @@
 //! entropy share, then jointly run QuickSelect so only the top-α survive.
 //! Indices are public (paper: "the data indices are in the clear"); the
 //! entropy values stay secret-shared end-to-end.
+//!
+//! Execution comes in two shapes that produce BYTE-IDENTICAL selections:
+//!
+//!  * serial — one party pair walks the batches in order;
+//!  * pipelined (`SelectionOptions::lanes` > 1) — candidate batches fan
+//!    out over concurrent engine lanes sharing one dealer hub, then a
+//!    final pair runs QuickSelect on the gathered entropy shares.
+//!
+//! Identity holds because every batch derives its randomness streams from
+//! `(dealer_seed, batch index)` via `PartyCtx::reseed_for`, so a lane
+//! draws exactly the masks/triples the serial loop would have drawn — the
+//! probabilistic truncations (the only data-dependent noise) match bit
+//! for bit, and QuickSelect is an exact top-k.  What changes is measured
+//! wall-clock (`CostMeter::wall_s`): lanes overlap one batch's compute
+//! with another's communication on real OS threads.
 
+use std::ops::Range;
 use std::path::Path;
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
 use crate::data::Dataset;
 use crate::fixed;
-use crate::models::{embed_clear, ApproxToggles, ModelMpc, WeightFile};
-use crate::mpc::engine::run_pair_metered;
+use crate::models::{embed_clear, ApproxToggles, ModelConfig, ModelMpc, WeightFile};
+use crate::mpc::engine::{run_pair_metered, run_pair_pipelined, PartyFn};
 use crate::mpc::net::{CostMeter, NetConfig};
-use crate::mpc::proto::{recv_share, share_input, PartyCtx};
+use crate::mpc::proto::{recv_share, share_input, PartyCtx, Shared};
 use crate::tensor::{TensorF, TensorR};
 
 use super::iosched::{self, SchedPolicy};
 use super::phase::PhaseSchedule;
 use super::quickselect::{top_k_indices, SelectStats};
+
+/// Stream tag for the final QuickSelect stage (disjoint from batch tags).
+const QS_TAG: u64 = u64::MAX;
+
+/// Stream tag for candidate batch `b` — the canonical randomness position
+/// both the serial loop and any pipeline lane use for that batch.
+fn batch_tag(b: usize) -> u64 {
+    0x00b5_e000_0000_0000 | (b as u64 + 1)
+}
 
 /// Options for a selection session.
 #[derive(Clone, Copy, Debug)]
@@ -35,6 +61,9 @@ pub struct SelectionOptions {
     /// the phase outcome (breaks the privacy goal; used to cross-check the
     /// MPC numerics against the plaintext PJRT path).
     pub reveal_entropies: bool,
+    /// Concurrent MPC lanes for candidate-batch evaluation. 1 = serial;
+    /// >1 pipelines batches over engine lanes with identical output.
+    pub lanes: usize,
 }
 
 impl Default for SelectionOptions {
@@ -46,6 +75,7 @@ impl Default for SelectionOptions {
             dealer_seed: 0x5e1ec7,
             approx: ApproxToggles::OURS,
             reveal_entropies: false,
+            lanes: 1,
         }
     }
 }
@@ -66,6 +96,13 @@ pub struct PhaseOutcome {
     pub stats: SelectStats,
 }
 
+impl PhaseOutcome {
+    /// MEASURED wall-clock of the phase (max over the two parties).
+    pub fn wall_s(&self) -> f64 {
+        self.meter_p0.wall_s.max(self.meter_p1.wall_s)
+    }
+}
+
 /// Outcome of a full multi-phase selection.
 #[derive(Clone, Debug)]
 pub struct SelectionOutcome {
@@ -76,6 +113,10 @@ pub struct SelectionOutcome {
 impl SelectionOutcome {
     pub fn total_delay(&self) -> f64 {
         self.phases.iter().map(|p| p.sim_delay).sum()
+    }
+    /// Measured end-to-end wall-clock across phases.
+    pub fn total_wall_s(&self) -> f64 {
+        self.phases.iter().map(|p| p.wall_s()).sum()
     }
     pub fn total_bytes(&self) -> u64 {
         self.phases
@@ -88,11 +129,88 @@ impl SelectionOutcome {
     }
 }
 
+/// Everything one model-owner lane needs to evaluate a batch range.
+struct P0Lane {
+    wf: Arc<WeightFile>,
+    cfg: ModelConfig,
+    approx: ApproxToggles,
+    emb_tok: Arc<Vec<i64>>,
+    emb_pos: Arc<Vec<i64>>,
+    n: usize,
+    batch: usize,
+    seq_len: usize,
+    dm: usize,
+    range: Range<usize>,
+}
+
+/// Everything one data-owner lane needs to evaluate a batch range.
+struct P1Lane {
+    cand_tokens: Arc<Vec<u32>>,
+    cfg: ModelConfig,
+    approx: ApproxToggles,
+    n: usize,
+    batch: usize,
+    seq_len: usize,
+    dm: usize,
+    range: Range<usize>,
+}
+
+/// Model-owner side: session setup + entropy shares for a batch range.
+fn p0_eval_batches(ctx: &mut PartyCtx, lane: &P0Lane) -> Result<Vec<i64>> {
+    // release the embedding tables to the data owner (MPCFormer
+    // convention, DESIGN.md §3) — bytes metered
+    ctx.chan.send_only(lane.emb_tok.as_ref().clone());
+    ctx.chan.send_only(lane.emb_pos.as_ref().clone());
+    let mut model = ModelMpc::setup(ctx, lane.cfg, lane.approx, Some(&lane.wf))?;
+    let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
+    for b in lane.range.clone() {
+        ctx.reseed_for(batch_tag(b));
+        let rows = lane.batch * lane.seq_len;
+        let x = recv_share(ctx, &[rows, lane.dm]);
+        let (_logits, e) = model.forward(ctx, &x, lane.batch);
+        let take = (lane.n - b * lane.batch).min(lane.batch);
+        ent.extend_from_slice(&e.0.data[..take]);
+    }
+    Ok(ent)
+}
+
+/// Data-owner side: embed + share each batch, collect entropy shares.
+fn p1_eval_batches(ctx: &mut PartyCtx, lane: &P1Lane) -> Result<Vec<i64>> {
+    let tok_tbl = ctx.chan.recv_only();
+    let pos_tbl = ctx.chan.recv_only();
+    let vocab = tok_tbl.len() / lane.dm;
+    let emb_tok = TensorF::from_vec(fixed::decode_vec(&tok_tbl), &[vocab, lane.dm]);
+    let emb_pos =
+        TensorF::from_vec(fixed::decode_vec(&pos_tbl), &[lane.seq_len, lane.dm]);
+    let mut model = ModelMpc::setup(ctx, lane.cfg, lane.approx, None)?;
+    let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
+    for b in lane.range.clone() {
+        ctx.reseed_for(batch_tag(b));
+        // assemble a batch (pad the tail by repeating example 0)
+        let mut toks = Vec::with_capacity(lane.batch * lane.seq_len);
+        for j in 0..lane.batch {
+            let i = b * lane.batch + j;
+            let i = if i < lane.n { i } else { 0 };
+            toks.extend_from_slice(
+                &lane.cand_tokens[i * lane.seq_len..(i + 1) * lane.seq_len],
+            );
+        }
+        let acts = embed_clear(&toks, lane.batch, &emb_tok, &emb_pos);
+        let x = share_input(ctx, &TensorR::from_f32(&acts));
+        let (_logits, e) = model.forward(ctx, &x, lane.batch);
+        let take = (lane.n - b * lane.batch).min(lane.batch);
+        ent.extend_from_slice(&e.0.data[..take]);
+    }
+    Ok(ent)
+}
+
 /// Run ONE private selection phase over MPC.
 ///
 /// `weights` lives with the model owner; `dataset` with the data owner.
 /// Returns the indices (into `candidates`' index space, i.e. dataset
-/// indices) of the `keep` highest-entropy candidates.
+/// indices) of the `keep` highest-entropy candidates.  Dispatches to the
+/// serial or pipelined runtime on `opts.lanes`; both produce identical
+/// selections.
 pub fn run_phase_mpc(
     weights: &WeightFile,
     dataset: &Dataset,
@@ -104,93 +222,60 @@ pub fn run_phase_mpc(
     assert_eq!(cfg.seq_len, dataset.seq_len, "model/dataset seq_len");
     let n = candidates.len();
     assert!(keep <= n);
-    let batch = opts.batch;
-    let n_batches = n.div_ceil(batch);
-    let approx = opts.approx;
-    let seed = opts.dealer_seed;
-    let reveal = opts.reveal_entropies;
+    let n_batches = n.div_ceil(opts.batch);
+    let lanes = opts.lanes.clamp(1, n_batches.max(1));
 
     // ------- model-owner side state -------
-    let wf = weights.clone();
-    let emb_tok = wf.get("emb.tok")?.clone();
-    let emb_pos = wf.get("emb.pos")?.clone();
+    let wf = Arc::new(weights.clone());
+    let emb_tok = Arc::new(fixed::encode_vec(&wf.get("emb.tok")?.data));
+    let emb_pos = Arc::new(fixed::encode_vec(&wf.get("emb.pos")?.data));
     // ------- data-owner side state -------
-    let cand_tokens: Vec<u32> = {
+    let cand_tokens: Arc<Vec<u32>> = Arc::new({
         let mut t = Vec::with_capacity(n * dataset.seq_len);
         for &i in candidates {
             t.extend_from_slice(dataset.example(i));
         }
         t
-    };
+    });
     let seq_len = dataset.seq_len;
     let dm = cfg.d_model;
 
-    let ((r0, meter_p0), (_r1, meter_p1)) = run_pair_metered(
-        seed,
-        // ---------------- P0: model owner (leader) ----------------
-        move |ctx: &mut PartyCtx| -> Result<(Vec<usize>, SelectStats, Option<Vec<f32>>)> {
-            // release the embedding tables to the data owner (MPCFormer
-            // convention, DESIGN.md §3) — bytes metered
-            ctx.chan.send_only(fixed::encode_vec(&emb_tok.data));
-            ctx.chan.send_only(fixed::encode_vec(&emb_pos.data));
-            let mut model = ModelMpc::setup(ctx, cfg, approx, Some(&wf))?;
-            let mut ent_shares: Vec<i64> = Vec::with_capacity(n);
-            for b in 0..n_batches {
-                let rows = batch * seq_len;
-                let x = recv_share(ctx, &[rows, dm]);
-                let (_logits, ent) = model.forward(ctx, &x, batch);
-                let take = (n - b * batch).min(batch);
-                ent_shares.extend_from_slice(&ent.0.data[..take]);
-            }
-            let ent = crate::mpc::proto::Shared(TensorR::from_vec(
-                ent_shares,
-                &[n],
-            ));
-            let revealed = if reveal {
-                Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
-            } else {
-                None
-            };
-            let (idx, stats) = top_k_indices(ctx, &ent, keep);
-            Ok((idx, stats, revealed))
-        },
-        // ---------------- P1: data owner ----------------
-        move |ctx: &mut PartyCtx| -> Result<Vec<usize>> {
-            let tok_tbl = ctx.chan.recv_only();
-            let pos_tbl = ctx.chan.recv_only();
-            let vocab = tok_tbl.len() / dm;
-            let emb_tok = TensorF::from_vec(fixed::decode_vec(&tok_tbl), &[vocab, dm]);
-            let emb_pos = TensorF::from_vec(fixed::decode_vec(&pos_tbl), &[seq_len, dm]);
-            let mut model = ModelMpc::setup(ctx, cfg, approx, None)?;
-            let mut ent_shares: Vec<i64> = Vec::with_capacity(n);
-            for b in 0..n_batches {
-                // assemble a batch (pad the tail by repeating example 0)
-                let mut toks = Vec::with_capacity(batch * seq_len);
-                for j in 0..batch {
-                    let i = b * batch + j;
-                    let i = if i < n { i } else { 0 };
-                    toks.extend_from_slice(
-                        &cand_tokens[i * seq_len..(i + 1) * seq_len],
-                    );
-                }
-                let acts = embed_clear(&toks, batch, &emb_tok, &emb_pos);
-                let x = share_input(ctx, &TensorR::from_f32(&acts));
-                let (_logits, ent) = model.forward(ctx, &x, batch);
-                let take = (n - b * batch).min(batch);
-                ent_shares.extend_from_slice(&ent.0.data[..take]);
-            }
-            let ent = crate::mpc::proto::Shared(TensorR::from_vec(
-                ent_shares,
-                &[n],
-            ));
-            if reveal {
-                let _ = crate::mpc::proto::open(ctx, &ent);
-            }
-            Ok(top_k_indices(ctx, &ent, keep).0)
-        },
-    );
+    let p0_lane = |range: Range<usize>| P0Lane {
+        wf: wf.clone(),
+        cfg,
+        approx: opts.approx,
+        emb_tok: emb_tok.clone(),
+        emb_pos: emb_pos.clone(),
+        n,
+        batch: opts.batch,
+        seq_len,
+        dm,
+        range,
+    };
+    let p1_lane = |range: Range<usize>| P1Lane {
+        cand_tokens: cand_tokens.clone(),
+        cfg,
+        approx: opts.approx,
+        n,
+        batch: opts.batch,
+        seq_len,
+        dm,
+        range,
+    };
 
-    let (local_survivors, stats, entropies) = r0?;
+    let outcome = if lanes <= 1 {
+        run_phase_serial(
+            p0_lane(0..n_batches),
+            p1_lane(0..n_batches),
+            n,
+            keep,
+            opts,
+        )?
+    } else {
+        run_phase_pipelined(&p0_lane, &p1_lane, n, n_batches, lanes, keep, opts)?
+    };
+
+    let (local_survivors, stats, entropies, meter_p0, meter_p1) = outcome;
     let survivors: Vec<usize> =
         local_survivors.iter().map(|&j| candidates[j]).collect();
     let sim_delay = iosched::delay(&meter_p0, &meter_p1, &opts.net, opts.policy);
@@ -205,6 +290,132 @@ pub fn run_phase_mpc(
         meter_p1,
         stats,
     })
+}
+
+type PhaseRun =
+    (Vec<usize>, SelectStats, Option<Vec<f32>>, CostMeter, CostMeter);
+
+/// One party pair walks every batch, then QuickSelect — the serial shape.
+fn run_phase_serial(
+    p0: P0Lane,
+    p1: P1Lane,
+    n: usize,
+    keep: usize,
+    opts: &SelectionOptions,
+) -> Result<PhaseRun> {
+    let reveal = opts.reveal_entropies;
+    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered(
+        opts.dealer_seed,
+        move |ctx: &mut PartyCtx| -> Result<(Vec<usize>, SelectStats, Option<Vec<f32>>)> {
+            let ent_shares = p0_eval_batches(ctx, &p0)?;
+            ctx.reseed_for(QS_TAG);
+            let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
+            let revealed = if reveal {
+                Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
+            } else {
+                None
+            };
+            let (idx, stats) = top_k_indices(ctx, &ent, keep);
+            Ok((idx, stats, revealed))
+        },
+        move |ctx: &mut PartyCtx| -> Result<Vec<usize>> {
+            let ent_shares = p1_eval_batches(ctx, &p1)?;
+            ctx.reseed_for(QS_TAG);
+            let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
+            if reveal {
+                let _ = crate::mpc::proto::open(ctx, &ent);
+            }
+            Ok(top_k_indices(ctx, &ent, keep).0)
+        },
+    );
+    let _ = r1?;
+    let (idx, stats, revealed) = r0?;
+    Ok((idx, stats, revealed, meter_p0, meter_p1))
+}
+
+/// Candidate batches fan out over concurrent engine lanes (shared dealer
+/// hub), then one fresh pair runs QuickSelect on the gathered shares.
+///
+/// Tradeoff: every lane runs its own session setup (embedding-table
+/// release + weight sharing), so setup bytes scale with the lane count —
+/// metered honestly in the absorbed meters.  Batches dominate setup for
+/// any real candidate pool; sharing one setup across lanes needs a
+/// broadcast channel and is on the ROADMAP.
+fn run_phase_pipelined(
+    p0_lane: &dyn Fn(Range<usize>) -> P0Lane,
+    p1_lane: &dyn Fn(Range<usize>) -> P1Lane,
+    n: usize,
+    n_batches: usize,
+    lanes: usize,
+    keep: usize,
+    opts: &SelectionOptions,
+) -> Result<PhaseRun> {
+    let t0 = std::time::Instant::now();
+    let per = n_batches.div_ceil(lanes);
+    let mut lane_fns: Vec<(PartyFn<Result<Vec<i64>>>, PartyFn<Result<Vec<i64>>>)> =
+        Vec::with_capacity(lanes);
+    for lane in 0..lanes {
+        let lo = lane * per;
+        let hi = ((lane + 1) * per).min(n_batches);
+        if lo >= hi {
+            break;
+        }
+        let l0 = p0_lane(lo..hi);
+        let l1 = p1_lane(lo..hi);
+        let f0: PartyFn<Result<Vec<i64>>> =
+            Box::new(move |ctx: &mut PartyCtx| p0_eval_batches(ctx, &l0));
+        let f1: PartyFn<Result<Vec<i64>>> =
+            Box::new(move |ctx: &mut PartyCtx| p1_eval_batches(ctx, &l1));
+        lane_fns.push((f0, f1));
+    }
+    let lane_out = run_pair_pipelined(opts.dealer_seed, lane_fns);
+
+    let mut meter_p0 = CostMeter::default();
+    let mut meter_p1 = CostMeter::default();
+    let mut ent0: Vec<i64> = Vec::with_capacity(n);
+    let mut ent1: Vec<i64> = Vec::with_capacity(n);
+    for (lane, ((r0, m0), (r1, m1))) in lane_out.into_iter().enumerate() {
+        meter_p0.absorb(&m0);
+        meter_p1.absorb(&m1);
+        ent0.extend(r0.with_context(|| format!("pipeline lane {lane} (P0)"))?);
+        ent1.extend(r1.with_context(|| format!("pipeline lane {lane} (P1)"))?);
+    }
+    debug_assert_eq!(ent0.len(), n);
+    debug_assert_eq!(ent1.len(), n);
+
+    // final stage: QuickSelect over the gathered shares, fresh pair
+    let reveal = opts.reveal_entropies;
+    let ((qs0, qm0), (qs1, qm1)) = run_pair_metered(
+        opts.dealer_seed,
+        move |ctx: &mut PartyCtx| {
+            ctx.reseed_for(QS_TAG);
+            let ent = Shared(TensorR::from_vec(ent0, &[n]));
+            let revealed = if reveal {
+                Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
+            } else {
+                None
+            };
+            let (idx, stats) = top_k_indices(ctx, &ent, keep);
+            (idx, stats, revealed)
+        },
+        move |ctx: &mut PartyCtx| {
+            ctx.reseed_for(QS_TAG);
+            let ent = Shared(TensorR::from_vec(ent1, &[n]));
+            if reveal {
+                let _ = crate::mpc::proto::open(ctx, &ent);
+            }
+            top_k_indices(ctx, &ent, keep).0
+        },
+    );
+    let (idx, stats, revealed) = qs0;
+    assert_eq!(idx, qs1, "parties must agree on the selection");
+    meter_p0.absorb(&qm0);
+    meter_p1.absorb(&qm1);
+    // the lanes ran concurrently: measured wall is this whole section
+    let wall = t0.elapsed().as_secs_f64();
+    meter_p0.wall_s = wall;
+    meter_p1.wall_s = wall;
+    Ok((idx, stats, revealed, meter_p0, meter_p1))
 }
 
 /// Full multi-phase private selection from weight files on disk.
@@ -273,7 +484,31 @@ mod tests {
         assert_eq!(out.survivors.len(), 10);
         assert!(out.survivors.windows(2).all(|w| w[0] < w[1]));
         assert!(out.meter_p0.bytes > 0);
+        assert!(out.wall_s() > 0.0);
         assert!(out.sim_delay > 0.0);
         assert!(out.sim_delay <= out.serial_delay + 1e-9);
+    }
+
+    /// The tentpole invariant: the pipelined runtime is indistinguishable
+    /// from the serial one at the output level.
+    #[test]
+    fn pipelined_phase_selects_identically() {
+        let dir = std::env::temp_dir().join("sf_phase_pipe_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("p.sfw");
+        crate::coordinator::testutil::write_random_proxy_sfw(&path, 1, 1, 2, 16, 64, 2, 8);
+        let wf = WeightFile::load(&path).unwrap();
+        let ds = synth(
+            &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+            48,
+            false,
+            5,
+        );
+        let cands: Vec<usize> = (0..48).collect();
+        let serial = SelectionOptions { batch: 8, ..Default::default() };
+        let piped = SelectionOptions { batch: 8, lanes: 3, ..Default::default() };
+        let a = run_phase_mpc(&wf, &ds, &cands, 12, &serial).unwrap();
+        let b = run_phase_mpc(&wf, &ds, &cands, 12, &piped).unwrap();
+        assert_eq!(a.survivors, b.survivors, "serial vs pipelined selection");
     }
 }

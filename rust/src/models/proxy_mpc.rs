@@ -38,8 +38,9 @@ pub struct SecretLinear {
 
 impl SecretLinear {
     pub fn forward(&mut self, ctx: &mut PartyCtx, x: &Shared) -> Shared {
-        let y = matmul_weight(ctx, x, &mut self.w);
-        Shared(y.0.add_row(&self.b.0))
+        let mut y = matmul_weight(ctx, x, &mut self.w);
+        y.0.add_row_assign(&self.b.0);
+        y
     }
 }
 
@@ -358,6 +359,13 @@ fn forward_layer(
 }
 
 /// (x−μ)·inv·γ + β with SECRET γ/β (shared affine params).
+///
+/// Two sequential Beaver products on purpose: fusing them into one
+/// 3-factor opening (proto::mul3_raw) is one round cheaper but leaves a
+/// 2^(3·FRAC_BITS)-scale intermediate, and the local-truncation failure
+/// probability grows with operand magnitude (≈2^-13 per element at
+/// f=16) — enough to corrupt a few activations per phase.  Truncating
+/// after each product keeps magnitudes, and the failure bound, tiny.
 fn ln_affine_secret(
     ctx: &mut PartyCtx,
     cen: &Shared,
@@ -367,29 +375,19 @@ fn ln_affine_secret(
     rows: usize,
     cols: usize,
 ) -> Shared {
-    // broadcast inv over columns and gamma over rows, fold into one
-    // elementwise Beaver product each
-    let mut inv_b = Vec::with_capacity(rows * cols);
-    for r in 0..rows {
-        for _ in 0..cols {
-            inv_b.push(inv.0.data[r]);
-        }
-    }
-    let normed = proto::mul(
-        ctx,
-        cen,
-        &Shared(TensorR::from_vec(inv_b, cen.shape())),
-    );
-    let mut gamma_b = Vec::with_capacity(rows * cols);
-    for _ in 0..rows {
-        gamma_b.extend_from_slice(&gamma.0.data);
-    }
-    let scaled = proto::mul(
-        ctx,
-        &normed,
-        &Shared(TensorR::from_vec(gamma_b, cen.shape())),
-    );
-    Shared(scaled.0.add_row(&beta.0))
+    let _ = rows;
+    let inv_b = Shared(TensorR::from_vec(
+        nonlin::broadcast_col(&inv.0.data, cols),
+        cen.shape(),
+    ));
+    let normed = proto::mul(ctx, cen, &inv_b);
+    let gamma_b = Shared(TensorR::from_vec(
+        nonlin::tile_rows(&gamma.0.data, normed.len() / cols),
+        cen.shape(),
+    ));
+    let mut scaled = proto::mul(ctx, &normed, &gamma_b);
+    scaled.0.add_row_assign(&beta.0);
+    scaled
 }
 
 /// MPCFormer 2Quad: (x+5)² / Σ(x+5)².
@@ -404,20 +402,10 @@ fn quad_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
             ),
         );
         let sq = proto::mul(ctx, &shifted, &shifted);
-        let mut sums = vec![0i64; rows];
-        for r in 0..rows {
-            for c in 0..cols {
-                sums[r] = sums[r].wrapping_add(sq.0.data[r * cols + c]);
-            }
-        }
+        let sums = nonlin::row_sums(&sq.0.data, cols);
         let inv =
             nonlin::exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
-        let mut bro = Vec::with_capacity(rows * cols);
-        for r in 0..rows {
-            for _ in 0..cols {
-                bro.push(inv.0.data[r]);
-            }
-        }
+        let bro = nonlin::broadcast_col(&inv.0.data, cols);
         proto::mul(ctx, &sq, &Shared(TensorR::from_vec(bro, x.shape())))
     })
 }
@@ -428,12 +416,7 @@ fn poly_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
     ctx.op("poly_softmax", |ctx| {
         let max = cmp::max_last(ctx, x, rows, cols);
         let mut cen = x.0.clone();
-        for r in 0..rows {
-            for c in 0..cols {
-                cen.data[r * cols + c] =
-                    cen.data[r * cols + c].wrapping_sub(max.0.data[r]);
-            }
-        }
+        nonlin::sub_col_inplace(&mut cen.data, &max.0.data, cols);
         let xs = Shared(cen);
         // Bolt-style degree-64 limit polynomial: (1 + x/64)^64 via 6
         // interactive squarings — accurate across the post-max domain.
@@ -451,20 +434,10 @@ fn poly_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
         }
         // ReLU guards the clipped negative tail (Bolt's piecewise guard)
         let e = cmp::relu(ctx, &acc);
-        let mut sums = vec![0i64; rows];
-        for r in 0..rows {
-            for c in 0..cols {
-                sums[r] = sums[r].wrapping_add(e.0.data[r * cols + c]);
-            }
-        }
+        let sums = nonlin::row_sums(&e.0.data, cols);
         let inv =
             nonlin::exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
-        let mut bro = Vec::with_capacity(rows * cols);
-        for r in 0..rows {
-            for _ in 0..cols {
-                bro.push(inv.0.data[r]);
-            }
-        }
+        let bro = nonlin::broadcast_col(&inv.0.data, cols);
         proto::mul(ctx, &e, &Shared(TensorR::from_vec(bro, x.shape())))
     })
 }

@@ -75,21 +75,23 @@ fn bin_and2(
     let n = x.len();
     let (u1, v1, w1) = ctx.dealer.bin_triples(n);
     let (u2, v2, w2) = ctx.dealer.bin_triples(n);
-    // open (x^u1, y^v1, p^u2, q^v2) in one round
-    let mut payload: Vec<i64> = Vec::with_capacity(4 * n);
+    // open (x^u1, y^v1, p^u2, q^v2) in one round — payload ships by value,
+    // the masked words are rebuilt from x/u while the wire is in flight
+    let mut payload = ctx.arena.take(4 * n);
     payload.extend((0..n).map(|i| (x[i] ^ u1[i]) as i64));
     payload.extend((0..n).map(|i| (y[i] ^ v1[i]) as i64));
     payload.extend((0..n).map(|i| (p[i] ^ u2[i]) as i64));
     payload.extend((0..n).map(|i| (q[i] ^ v2[i]) as i64));
-    let theirs = ctx.chan.exchange(payload.clone());
+    ctx.chan.begin_exchange(payload);
+    let theirs = ctx.chan.finish_exchange();
     let leader = ctx.is_leader();
     let mut z1 = Vec::with_capacity(n);
     let mut z2 = Vec::with_capacity(n);
     for i in 0..n {
-        let dx = (payload[i] ^ theirs[i]) as u64;
-        let dy = (payload[n + i] ^ theirs[n + i]) as u64;
-        let dp = (payload[2 * n + i] ^ theirs[2 * n + i]) as u64;
-        let dq = (payload[3 * n + i] ^ theirs[3 * n + i]) as u64;
+        let dx = x[i] ^ u1[i] ^ theirs[i] as u64;
+        let dy = y[i] ^ v1[i] ^ theirs[n + i] as u64;
+        let dp = p[i] ^ u2[i] ^ theirs[2 * n + i] as u64;
+        let dq = q[i] ^ v2[i] ^ theirs[3 * n + i] as u64;
         let mut a = w1[i] ^ (dx & v1[i]) ^ (dy & u1[i]);
         let mut b = w2[i] ^ (dp & v2[i]) ^ (dq & u2[i]);
         if leader {
@@ -99,6 +101,7 @@ fn bin_and2(
         z1.push(a);
         z2.push(b);
     }
+    ctx.arena.put(theirs);
     (z1, z2)
 }
 
@@ -107,22 +110,25 @@ fn bin_and2(
 fn bin_and(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
     let n = x.len();
     let (u, v, w) = ctx.dealer.bin_triples(n);
-    let mut payload: Vec<i64> = Vec::with_capacity(2 * n);
+    let mut payload = ctx.arena.take(2 * n);
     payload.extend((0..n).map(|i| (x[i] ^ u[i]) as i64));
     payload.extend((0..n).map(|i| (y[i] ^ v[i]) as i64));
-    let theirs = ctx.chan.exchange(payload.clone());
+    ctx.chan.begin_exchange(payload);
+    let theirs = ctx.chan.finish_exchange();
     let leader = ctx.is_leader();
-    (0..n)
+    let out = (0..n)
         .map(|i| {
-            let dx = (payload[i] ^ theirs[i]) as u64;
-            let dy = (payload[n + i] ^ theirs[n + i]) as u64;
+            let dx = x[i] ^ u[i] ^ theirs[i] as u64;
+            let dy = y[i] ^ v[i] ^ theirs[n + i] as u64;
             let mut z = w[i] ^ (dx & v[i]) ^ (dy & u[i]);
             if leader {
                 z ^= dx & dy;
             }
             z
         })
-        .collect()
+        .collect();
+    ctx.arena.put(theirs);
+    out
 }
 
 /// LTZ: returns additive shares of the 0/1 indicator [x < 0].
@@ -157,20 +163,25 @@ fn ltz_inner(ctx: &mut PartyCtx, x: &Shared) -> Shared {
         let sum63 = ((p0[i] >> 63) ^ (g[i] >> 62)) & 1;
         msb_packed[i / 64] |= sum63 << (i % 64);
     }
-    // 3. B2A with dealer bit pairs
+    // 3. B2A with dealer bit pairs — masked words rebuilt after the send
+    //    (zero-copy, same discipline as the Beaver openings)
     let (r_bin, r_arith) = ctx.dealer.bit_pairs(n);
     let opened: Vec<i64> = {
-        let masked: Vec<i64> = msb_packed
+        let words = msb_packed.len();
+        let mut masked = ctx.arena.take(words);
+        masked.extend(
+            msb_packed.iter().zip(&r_bin).map(|(&m, &r)| (m ^ r) as i64),
+        );
+        ctx.chan.begin_exchange(masked);
+        let theirs = ctx.chan.finish_exchange();
+        let out = msb_packed
             .iter()
             .zip(&r_bin)
-            .map(|(&m, &r)| (m ^ r) as i64)
-            .collect();
-        let theirs = ctx.chan.exchange(masked.clone());
-        masked
-            .iter()
             .zip(&theirs)
-            .map(|(&a, &b)| a ^ b)
-            .collect()
+            .map(|((&m, &r), &t)| (m ^ r) as i64 ^ t)
+            .collect();
+        ctx.arena.put(theirs);
+        out
     };
     let leader = ctx.is_leader();
     let data: Vec<i64> = (0..n)

@@ -75,6 +75,10 @@ pub struct Dealer {
     fixed_b: HashMap<(u64, usize, usize), (TensorR, TensorR)>,
     hub: Option<Arc<Hub>>,
     seq: u64,
+    /// hub-key namespace for the current execution unit (see reseed_for);
+    /// mixed with `seq` so parked products from different units can't
+    /// structurally collide
+    seq_ns: u64,
 }
 
 impl Dealer {
@@ -86,6 +90,7 @@ impl Dealer {
             fixed_b: HashMap::new(),
             hub: None,
             seq: 0,
+            seq_ns: 0x5e7_0b00,
         }
     }
 
@@ -93,6 +98,30 @@ impl Dealer {
     pub fn with_hub(mut self, hub: Arc<Hub>) -> Self {
         self.hub = Some(hub);
         self
+    }
+
+    /// Re-derive the triple stream for a tagged execution unit (a candidate
+    /// batch, or the final QuickSelect stage).  Both parties calling this
+    /// with the same tag land on the same correlated stream REGARDLESS of
+    /// how much randomness was consumed before — the property that makes
+    /// the pipelined runtime bit-identical to the serial one: lane L
+    /// evaluating batch b draws exactly the triples the serial loop would
+    /// have drawn for batch b.
+    ///
+    /// The hub sequence counter restarts in a per-tag 64-bit-mixed
+    /// namespace, so parked C = A·B products from different execution
+    /// units key differently (collision would need a 64-bit coincidence,
+    /// not just a shared counter position).
+    ///
+    /// Weight-stationary fixed-B correlations are deliberately NOT
+    /// re-derived (they key off the session seed), so cached W−B deltas
+    /// stay valid across batches.
+    pub fn reseed_for(&mut self, tag: u64) {
+        let mut s = self.seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let mixed = crate::util::rng::splitmix64(&mut s);
+        self.rng = Rng::new(mixed ^ 0xdea1e4);
+        self.seq = 0;
+        self.seq_ns = crate::util::rng::splitmix64(&mut s);
     }
 
     /// `n` elementwise Beaver triples: returns this party's shares of
@@ -125,6 +154,36 @@ impl Dealer {
         (a_sh, b_sh, c_sh)
     }
 
+    /// `n` THREE-factor Beaver correlations: this party's shares of
+    /// (a, b, c, ab, ac, bc, abc) with fresh random a, b, c.  Lets a
+    /// product of three shared tensors open in ONE round (proto::mul3_raw;
+    /// see its docs for the fixed-point truncation caveat).
+    pub fn triples3(&mut self, n: usize) -> [Vec<i64>; 7] {
+        self.seq += 1;
+        let mut out: [Vec<i64>; 7] = std::array::from_fn(|_| Vec::with_capacity(n));
+        let leader = self.role == Role::ModelOwner;
+        for _ in 0..n {
+            let a = self.rng.next_i64();
+            let b = self.rng.next_i64();
+            let c = self.rng.next_i64();
+            let ab = a.wrapping_mul(b);
+            let vals = [
+                a,
+                b,
+                c,
+                ab,
+                a.wrapping_mul(c),
+                b.wrapping_mul(c),
+                ab.wrapping_mul(c),
+            ];
+            for (slot, &v) in out.iter_mut().zip(&vals) {
+                let r = self.rng.next_i64();
+                slot.push(if leader { r } else { v.wrapping_sub(r) });
+            }
+        }
+        out
+    }
+
     fn rand_tensor(&mut self, shape: &[usize]) -> TensorR {
         TensorR::from_vec(
             (0..shape.iter().product::<usize>())
@@ -135,14 +194,18 @@ impl Dealer {
     }
 
     /// The product C = A·B, shared opportunistically through the hub.
+    /// The hub key mixes the namespace and the sequence position, so both
+    /// parties (and every lane replaying the same tagged unit) agree on
+    /// the key while distinct units stay disjoint.
     fn product(&mut self, a: &TensorR, b: &TensorR) -> TensorR {
         self.seq += 1;
         if let Some(hub) = &self.hub {
-            if let Some(c) = hub.try_take(self.seq, self.role) {
+            let key = self.seq_ns ^ self.seq.wrapping_mul(0x9E3779B97F4A7C15);
+            if let Some(c) = hub.try_take(key, self.role) {
                 return (*c).clone();
             }
             let c = Arc::new(a.matmul_raw(b));
-            hub.park(self.seq, self.role, c.clone());
+            hub.park(key, self.role, c.clone());
             return (*c).clone();
         }
         a.matmul_raw(b)
@@ -332,5 +395,47 @@ mod tests {
         let mut a = Dealer::new(1, Role::ModelOwner);
         let mut b = Dealer::new(2, Role::ModelOwner);
         assert_ne!(a.triples(4).0, b.triples(4).0);
+    }
+
+    #[test]
+    fn triples3_are_consistent() {
+        let (mut d0, mut d1) = pair(12);
+        let t0 = d0.triples3(40);
+        let t1 = d1.triples3(40);
+        for i in 0..40 {
+            let v: Vec<i64> =
+                (0..7).map(|j| t0[j][i].wrapping_add(t1[j][i])).collect();
+            let (a, b, c) = (v[0], v[1], v[2]);
+            assert_eq!(v[3], a.wrapping_mul(b), "ab at {i}");
+            assert_eq!(v[4], a.wrapping_mul(c), "ac at {i}");
+            assert_eq!(v[5], b.wrapping_mul(c), "bc at {i}");
+            assert_eq!(v[6], a.wrapping_mul(b).wrapping_mul(c), "abc at {i}");
+        }
+    }
+
+    #[test]
+    fn reseed_is_position_independent_and_consistent() {
+        // two dealers that consumed different amounts of randomness land on
+        // the same stream after reseed_for(tag) — and stay pairwise
+        // consistent across roles
+        let (mut d0, mut d1) = pair(33);
+        let _ = d0.triples(17); // d0 drifts ahead
+        d0.reseed_for(5);
+        d1.reseed_for(5);
+        let (a0, b0, c0) = d0.triples(8);
+        let (a1, b1, c1) = d1.triples(8);
+        for i in 0..8 {
+            let a = a0[i].wrapping_add(a1[i]);
+            let b = b0[i].wrapping_add(b1[i]);
+            assert_eq!(c0[i].wrapping_add(c1[i]), a.wrapping_mul(b));
+        }
+        // different tags give different streams
+        let mut d2 = Dealer::new(33, Role::ModelOwner);
+        d2.reseed_for(6);
+        assert_ne!(d2.triples(4).0, {
+            let mut d3 = Dealer::new(33, Role::ModelOwner);
+            d3.reseed_for(5);
+            d3.triples(4).0
+        });
     }
 }

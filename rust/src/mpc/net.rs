@@ -64,6 +64,11 @@ pub struct CostMeter {
     pub rounds: u64,
     pub messages: u64,
     pub compute_s: f64,
+    /// MEASURED wall-clock of the session this meter belongs to, stamped
+    /// by the engine at teardown.  Unlike the simulated delays derived
+    /// from `bytes`/`rounds`, this is real elapsed time — the number the
+    /// pipelined runtime is judged on.
+    pub wall_s: f64,
     pub ops: Vec<OpRecord>,
 }
 
@@ -74,6 +79,17 @@ impl CostMeter {
         self.rounds as f64 * net.latency
             + self.bytes as f64 / net.bandwidth
             + self.compute_s
+    }
+
+    /// Fold another meter into this one (pipelined lanes sum their
+    /// traffic; wall-clock takes the max — lanes run concurrently).
+    pub fn absorb(&mut self, other: &CostMeter) {
+        self.bytes += other.bytes;
+        self.rounds += other.rounds;
+        self.messages += other.messages;
+        self.compute_s += other.compute_s;
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.ops.extend(other.ops.iter().cloned());
     }
 
     pub fn merge_op_into(&mut self, name: &'static str, before: (u64, u64, f64)) {
@@ -102,11 +118,25 @@ impl Chan {
     /// Send our payload and receive the peer's — one communication round
     /// (both directions fly concurrently, as in a real duplex link).
     pub fn exchange(&mut self, data: Vec<i64>) -> Vec<i64> {
+        self.begin_exchange(data);
+        self.finish_exchange()
+    }
+
+    /// Double-buffered exchange, half 1: ship our payload without blocking
+    /// on the peer's.  Local work issued between `begin_exchange` and
+    /// [`Chan::finish_exchange`] overlaps the wire time — the protocol
+    /// layer uses this to rebuild Beaver deltas while the opening is in
+    /// flight.
+    pub fn begin_exchange(&mut self, data: Vec<i64>) {
         let n = data.len();
         self.tx.send(data).expect("peer hung up");
         self.meter.bytes += (n * 8) as u64;
         self.meter.rounds += 1;
         self.meter.messages += 1;
+    }
+
+    /// Double-buffered exchange, half 2: block for the peer's payload.
+    pub fn finish_exchange(&mut self) -> Vec<i64> {
         self.rx.recv().expect("peer hung up")
     }
 
@@ -165,7 +195,13 @@ mod tests {
 
     #[test]
     fn serial_delay_model() {
-        let m = CostMeter { bytes: 100_000_000, rounds: 10, messages: 10, compute_s: 1.0, ops: vec![] };
+        let m = CostMeter {
+            bytes: 100_000_000,
+            rounds: 10,
+            messages: 10,
+            compute_s: 1.0,
+            ..Default::default()
+        };
         let net = NetConfig { bandwidth: 100.0e6, latency: 0.1 };
         // 1s payload + 1s latency + 1s compute
         assert!((m.serial_delay(&net) - 3.0).abs() < 1e-9);
@@ -175,5 +211,28 @@ mod tests {
     fn role_other() {
         assert_eq!(Role::ModelOwner.other(), Role::DataOwner);
         assert_eq!(Role::DataOwner.other(), Role::ModelOwner);
+    }
+
+    #[test]
+    fn split_exchange_overlaps_and_meters_once() {
+        let (mut c0, mut c1) = chan_pair();
+        let h = std::thread::spawn(move || c1.exchange(vec![9]));
+        c0.begin_exchange(vec![1, 2]);
+        // local work here would overlap the wire; then collect
+        let got = c0.finish_exchange();
+        assert_eq!(got, vec![9]);
+        assert_eq!(h.join().unwrap(), vec![1, 2]);
+        assert_eq!(c0.meter.rounds, 1);
+        assert_eq!(c0.meter.bytes, 16);
+    }
+
+    #[test]
+    fn absorb_sums_traffic_maxes_wall() {
+        let mut a = CostMeter { bytes: 10, rounds: 2, wall_s: 1.0, ..Default::default() };
+        let b = CostMeter { bytes: 5, rounds: 1, wall_s: 3.0, ..Default::default() };
+        a.absorb(&b);
+        assert_eq!(a.bytes, 15);
+        assert_eq!(a.rounds, 3);
+        assert!((a.wall_s - 3.0).abs() < 1e-12);
     }
 }

@@ -29,6 +29,40 @@ pub fn const_share(ctx: &PartyCtx, value: f32, shape: &[usize]) -> Shared {
     Shared(TensorR::from_vec(vec![v; n], shape))
 }
 
+/// Broadcast a per-row column vector (rows,1) across `cols` columns.
+pub(crate) fn broadcast_col(vals: &[i64], cols: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(vals.len() * cols);
+    for &v in vals {
+        out.extend(std::iter::repeat(v).take(cols));
+    }
+    out
+}
+
+/// Tile a row vector down `rows` rows.
+pub(crate) fn tile_rows(row: &[i64], rows: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(row.len() * rows);
+    for _ in 0..rows {
+        out.extend_from_slice(row);
+    }
+    out
+}
+
+/// Subtract a per-row value from every element of that row, in place.
+pub(crate) fn sub_col_inplace(data: &mut [i64], vals: &[i64], cols: usize) {
+    for (chunk, &m) in data.chunks_exact_mut(cols).zip(vals) {
+        for v in chunk.iter_mut() {
+            *v = v.wrapping_sub(m);
+        }
+    }
+}
+
+/// Rowwise wrapping sum of a (rows, cols) buffer.
+pub(crate) fn row_sums(data: &[i64], cols: usize) -> Vec<i64> {
+    data.chunks_exact(cols)
+        .map(|chunk| chunk.iter().fold(0i64, |acc, &v| acc.wrapping_add(v)))
+        .collect()
+}
+
 /// exp(x) ≈ (1 + x/2^k)^(2^k) with k = 8 — 8 interactive squarings.
 pub fn exact_exp(ctx: &mut PartyCtx, x: &Shared) -> Shared {
     ctx.op("exp", |ctx| {
@@ -172,28 +206,11 @@ pub fn exact_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -
         let max = cmp::max_last(ctx, x, rows, cols); // (rows,1)
         // broadcast-subtract the rowwise max
         let mut cen = x.0.clone();
-        for r in 0..rows {
-            for c in 0..cols {
-                cen.data[r * cols + c] =
-                    cen.data[r * cols + c].wrapping_sub(max.0.data[r]);
-            }
-        }
+        sub_col_inplace(&mut cen.data, &max.0.data, cols);
         let e = exact_exp(ctx, &Shared(cen));
-        // rowwise sum (local)
-        let mut sums = vec![0i64; rows];
-        for r in 0..rows {
-            for c in 0..cols {
-                sums[r] = sums[r].wrapping_add(e.0.data[r * cols + c]);
-            }
-        }
+        let sums = row_sums(&e.0.data, cols);
         let inv = exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
-        // broadcast product
-        let mut bro = vec![0i64; rows * cols];
-        for r in 0..rows {
-            for c in 0..cols {
-                bro[r * cols + c] = inv.0.data[r];
-            }
-        }
+        let bro = broadcast_col(&inv.0.data, cols);
         proto::mul(ctx, &e, &Shared(TensorR::from_vec(bro, &[rows, cols])))
     })
 }
@@ -205,12 +222,8 @@ pub fn exact_entropy(ctx: &mut PartyCtx, logits: &Shared, rows: usize, cols: usi
         // clamp-free: probabilities from softmax are > 0 in fixed point
         let logp = exact_log(ctx, &p);
         let plogp = proto::mul(ctx, &p, &logp);
-        let mut sums = vec![0i64; rows];
-        for r in 0..rows {
-            for c in 0..cols {
-                sums[r] = sums[r].wrapping_sub(plogp.0.data[r * cols + c]);
-            }
-        }
+        let sums: Vec<i64> =
+            row_sums(&plogp.0.data, cols).iter().map(|&v| v.wrapping_neg()).collect();
         Shared(TensorR::from_vec(sums, &[rows]))
     })
 }
@@ -241,12 +254,7 @@ pub fn layernorm_moments(
 ) -> (Shared, Shared) {
     let mean = Shared(x.0.clone().reshape(&[rows, cols]).mean_last()); // (rows,1)
     let mut cen = x.0.clone();
-    for r in 0..rows {
-        for c in 0..cols {
-            cen.data[r * cols + c] =
-                cen.data[r * cols + c].wrapping_sub(mean.0.data[r]);
-        }
-    }
+    sub_col_inplace(&mut cen.data, &mean.0.data, cols);
     let cen = Shared(cen);
     let sq = proto::mul(ctx, &cen, &cen);
     let var = Shared(sq.0.clone().reshape(&[rows, cols]).mean_last());
@@ -268,32 +276,24 @@ pub fn layernorm_affine(
     rows: usize,
     cols: usize,
 ) -> Shared {
-    let mut bro = vec![0i64; rows * cols];
-    for r in 0..rows {
-        for c in 0..cols {
-            bro[r * cols + c] = inv.0.data[r];
-        }
-    }
+    let _ = rows;
+    let bro = broadcast_col(&inv.0.data, cols);
     let normed = proto::mul(ctx, cen, &Shared(TensorR::from_vec(bro, cen.shape())));
     // public affine: elementwise gamma (scale) + beta (leader adds)
-    let mut data = Vec::with_capacity(rows * cols);
-    for r in 0..rows {
-        for c in 0..cols {
-            let g = gamma.data[c];
-            let v = fixed::trunc(normed.0.data[r * cols + c].wrapping_mul(g));
-            data.push(v);
-        }
+    let mut data = Vec::with_capacity(normed.len());
+    for chunk in normed.0.data.chunks_exact(cols) {
+        data.extend(
+            chunk
+                .iter()
+                .zip(&gamma.data)
+                .map(|(&v, &g)| fixed::trunc(v.wrapping_mul(g))),
+        );
     }
-    let mut out = Shared(TensorR::from_vec(data, cen.shape()));
+    let mut out = TensorR::from_vec(data, cen.shape());
     if ctx.is_leader() {
-        for r in 0..rows {
-            for c in 0..cols {
-                out.0.data[r * cols + c] =
-                    out.0.data[r * cols + c].wrapping_add(beta.data[c]);
-            }
-        }
+        out.add_row_assign(beta);
     }
-    out
+    Shared(out)
 }
 
 // ---------------------------------------------------------------------------

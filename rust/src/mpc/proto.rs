@@ -4,6 +4,13 @@
 //! Everything here is symmetric SPMD code: BOTH parties execute the same
 //! function on their own `PartyCtx`; the only asymmetry is `Role`-gated
 //! (who adds public constants, who holds which dealer share).
+//!
+//! Hot-path discipline: no `Vec` clone ships a payload.  Opening payloads
+//! are built in arena-recycled buffers, handed to the channel by value,
+//! and the masked differences the Beaver assembly needs are rebuilt in the
+//! gap between `begin_exchange` and `finish_exchange` — local compute
+//! overlapping the wire.  Received buffers are recycled into the arena, so
+//! a steady-state protocol loop allocates (almost) nothing.
 
 use crate::fixed;
 use crate::tensor::TensorR;
@@ -12,6 +19,33 @@ use crate::util::Rng;
 use super::dealer::Dealer;
 use super::net::{Chan, Role};
 
+/// Recycled `Vec<i64>` buffers for opening payloads — the cross-thread
+/// channels consume the vectors we send, but every exchange hands back the
+/// peer's buffer, so pressure on the allocator nets out to zero.
+#[derive(Default)]
+pub struct Arena {
+    free: Vec<Vec<i64>>,
+}
+
+impl Arena {
+    pub fn take(&mut self, cap: usize) -> Vec<i64> {
+        match self.free.pop() {
+            Some(mut v) => {
+                v.clear();
+                v.reserve(cap);
+                v
+            }
+            None => Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn put(&mut self, v: Vec<i64>) {
+        if self.free.len() < 32 {
+            self.free.push(v);
+        }
+    }
+}
+
 /// Per-party protocol context.
 pub struct PartyCtx {
     pub role: Role,
@@ -19,12 +53,23 @@ pub struct PartyCtx {
     pub dealer: Dealer,
     /// private local randomness (input masking)
     pub rng: Rng,
+    /// reusable payload buffers for the share hot path
+    pub arena: Arena,
+    /// session seed, kept for per-batch stream derivation
+    seed: u64,
 }
 
 impl PartyCtx {
     pub fn new(role: Role, chan: Chan, dealer_seed: u64) -> Self {
         let rng = Rng::new(dealer_seed ^ (0x9e37 + role.index() as u64 * 77));
-        PartyCtx { role, chan, dealer: Dealer::new(dealer_seed, role), rng }
+        PartyCtx {
+            role,
+            chan,
+            dealer: Dealer::new(dealer_seed, role),
+            rng,
+            arena: Arena::default(),
+            seed: dealer_seed,
+        }
     }
 
     /// With a shared preprocessing hub (engine::run_pair wires this).
@@ -40,11 +85,25 @@ impl PartyCtx {
             chan,
             dealer: Dealer::new(dealer_seed, role).with_hub(hub),
             rng,
+            arena: Arena::default(),
+            seed: dealer_seed,
         }
     }
 
     pub fn is_leader(&self) -> bool {
         self.role == Role::ModelOwner
+    }
+
+    /// Jump every local randomness stream (dealer + masking RNG) to the
+    /// canonical position for a tagged execution unit.  Both parties
+    /// calling this at the same protocol point is what makes the pipelined
+    /// lane runtime bit-identical to the serial batch loop — see
+    /// `Dealer::reseed_for`.
+    pub fn reseed_for(&mut self, tag: u64) {
+        self.dealer.reseed_for(tag);
+        let mut s = self.seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
+        let mixed = crate::util::rng::splitmix64(&mut s);
+        self.rng = Rng::new(mixed ^ (0x9e37 + self.role.index() as u64 * 77));
     }
 
     /// Record the footprint of a logical op spanning `f`.
@@ -98,21 +157,25 @@ pub fn recv_share(ctx: &mut PartyCtx, shape: &[usize]) -> Shared {
 }
 
 /// Open (reconstruct) a shared tensor to both parties. One round.
+/// The peer's buffer is reused as the result — no copy on either side.
 pub fn open(ctx: &mut PartyCtx, x: &Shared) -> TensorR {
-    let theirs = ctx.chan.exchange(x.0.data.clone());
-    let data = x
-        .0
-        .data
-        .iter()
-        .zip(&theirs)
-        .map(|(&a, &b)| a.wrapping_add(b))
-        .collect();
-    TensorR::from_vec(data, x.shape())
+    let mut payload = ctx.arena.take(x.len());
+    payload.extend_from_slice(&x.0.data);
+    let mut theirs = ctx.chan.exchange(payload);
+    for (v, &mine) in theirs.iter_mut().zip(&x.0.data) {
+        *v = v.wrapping_add(mine);
+    }
+    TensorR::from_vec(theirs, x.shape())
 }
 
-/// Open several shared tensors in a single round (batched / coalesced).
+/// Open several shared tensors in a single round (batched / coalesced):
+/// callers with independent openings stack them here so the whole set
+/// pays ONE latency.  (The nonlinear ops already open whole tensors per
+/// step — their rows are batched inside `open`/`exchange` — so this is
+/// for cross-op coalescing.)
 pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> Vec<TensorR> {
-    let mut payload = Vec::with_capacity(xs.iter().map(|x| x.len()).sum());
+    let total = xs.iter().map(|x| x.len()).sum();
+    let mut payload = ctx.arena.take(total);
     for x in xs {
         payload.extend_from_slice(&x.0.data);
     }
@@ -129,6 +192,7 @@ pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> Vec<TensorR> {
         out.push(TensorR::from_vec(data, x.shape()));
         off += n;
     }
+    ctx.arena.put(theirs);
     out
 }
 
@@ -164,18 +228,36 @@ pub fn mul_public_fixed(a: &Shared, c: f32) -> Shared {
 /// arithmetic-shifts its own share; P1 holds the correction so the result
 /// is exact up to ±1 LSB with overwhelming probability for |x| ≪ 2^62.
 pub fn trunc_local(ctx: &PartyCtx, a: &Shared) -> Shared {
+    let mut out = a.clone();
+    trunc_shift_local_mut(ctx, &mut out, fixed::FRAC_BITS);
+    out
+}
+
+/// In-place [`trunc_local`] for owned intermediates (no allocation).
+pub fn trunc_local_mut(ctx: &PartyCtx, a: &mut Shared) {
+    trunc_shift_local_mut(ctx, a, fixed::FRAC_BITS);
+}
+
+/// In-place DOUBLE truncation (rescale by 2^(2·FRAC_BITS)) — pairs with
+/// [`mul3_raw`], whose raw product carries three fixed-point scales.  The
+/// same ±1-LSB bound holds for |x| ≪ 2^62.
+pub fn trunc2_local_mut(ctx: &PartyCtx, a: &mut Shared) {
+    trunc_shift_local_mut(ctx, a, 2 * fixed::FRAC_BITS);
+}
+
+fn trunc_shift_local_mut(ctx: &PartyCtx, a: &mut Shared, bits: u32) {
     match ctx.role {
-        Role::ModelOwner => Shared(a.0.trunc()),
+        Role::ModelOwner => {
+            for v in a.0.data.iter_mut() {
+                *v = v.wrapping_shr(bits);
+            }
+        }
         Role::DataOwner => {
             // shift the negated share and negate back: keeps the pair's sum
             // within ±1 of the true truncation
-            let data = a
-                .0
-                .data
-                .iter()
-                .map(|&x| x.wrapping_neg().wrapping_shr(fixed::FRAC_BITS).wrapping_neg())
-                .collect();
-            Shared(TensorR::from_vec(data, a.shape()))
+            for v in a.0.data.iter_mut() {
+                *v = v.wrapping_neg().wrapping_shr(bits).wrapping_neg();
+            }
         }
     }
 }
@@ -187,50 +269,137 @@ pub fn trunc_local(ctx: &PartyCtx, a: &Shared) -> Shared {
 /// Elementwise product of two shared fixed-point tensors (Beaver, one
 /// opening round, then local truncation).
 pub fn mul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
-    let raw = mul_raw(ctx, x, y);
-    trunc_local(ctx, &raw)
+    let mut raw = mul_raw(ctx, x, y);
+    trunc_local_mut(ctx, &mut raw);
+    raw
 }
 
 /// Elementwise product WITHOUT the fixed-point re-scale — for integer
 /// (0/1) masks and for callers that fold several truncations into one.
+///
+/// Zero-copy: the payload buffer ships by value (no clone); the masked
+/// differences the assembly needs are rebuilt while the opening is in
+/// flight (`begin_exchange`/`finish_exchange`).
 pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
     assert_eq!(x.shape(), y.shape());
     let n = x.len();
     let (a, b, c) = ctx.chan.compute(|| ctx.dealer.triples(n));
     // open (x−a, y−b) in one batched round
-    let mut payload = Vec::with_capacity(2 * n);
+    let mut payload = ctx.arena.take(2 * n);
     for i in 0..n {
         payload.push(x.0.data[i].wrapping_sub(a[i]));
     }
     for i in 0..n {
         payload.push(y.0.data[i].wrapping_sub(b[i]));
     }
-    let theirs = ctx.chan.exchange(payload.clone());
+    ctx.chan.begin_exchange(payload);
+    // overlap the wire: rebuild our halves of the opened differences
+    let mut eps = ctx.arena.take(n);
+    let mut del = ctx.arena.take(n);
+    for i in 0..n {
+        eps.push(x.0.data[i].wrapping_sub(a[i]));
+        del.push(y.0.data[i].wrapping_sub(b[i]));
+    }
+    let theirs = ctx.chan.finish_exchange();
     let leader = ctx.is_leader();
     let data = ctx.chan.compute(|| {
         let mut out = Vec::with_capacity(n);
         for i in 0..n {
-            let eps = payload[i].wrapping_add(theirs[i]);
-            let del = payload[n + i].wrapping_add(theirs[n + i]);
-            // z = c + eps·b + del·a (+ eps·del, leader only)
+            let e = eps[i].wrapping_add(theirs[i]);
+            let d = del[i].wrapping_add(theirs[n + i]);
+            // z = c + e·b + d·a (+ e·d, leader only)
             let mut z = c[i]
-                .wrapping_add(eps.wrapping_mul(b[i]))
-                .wrapping_add(del.wrapping_mul(a[i]));
+                .wrapping_add(e.wrapping_mul(b[i]))
+                .wrapping_add(d.wrapping_mul(a[i]));
             if leader {
-                z = z.wrapping_add(eps.wrapping_mul(del));
+                z = z.wrapping_add(e.wrapping_mul(d));
             }
             out.push(z);
         }
         out
     });
+    ctx.arena.put(eps);
+    ctx.arena.put(del);
+    ctx.arena.put(theirs);
+    Shared(TensorR::from_vec(data, x.shape()))
+}
+
+/// Product of THREE shared tensors in ONE opening round via a 3-factor
+/// Beaver correlation (dealer::triples3).
+///
+/// With x = a+E, y = b+F, z = c+G (E, F, G opened):
+///   xyz = abc + ab·G + ac·F + bc·E + a·FG + b·EG + c·EF + EFG
+/// where every lowercase term is a dealer share and EFG is public
+/// (leader adds it).
+///
+/// NUMERICS CAVEAT: for fixed-point inputs the raw result carries scale
+/// 2^(3·FRAC_BITS); rescaling with [`trunc2_local_mut`] has a local-trunc
+/// failure probability that grows with the product's magnitude (≈2^-13
+/// per element for unit-scale operands at f=16), vs ≈2^-29 for the
+/// truncate-after-each-product path.  Use this for integer 0/1 masks
+/// (scale 1, no truncation) or operands known to be ≪ 1; keep sequential
+/// [`mul`]s for general fixed-point chains until a slack-bit trunc lands
+/// (see ROADMAP perf notes).
+pub fn mul3_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared, z: &Shared) -> Shared {
+    assert_eq!(x.shape(), y.shape());
+    assert_eq!(x.shape(), z.shape());
+    let n = x.len();
+    let t = ctx.chan.compute(|| ctx.dealer.triples3(n));
+    let [a, b, c, ab, ac, bc, abc] = t;
+    let mut payload = ctx.arena.take(3 * n);
+    for i in 0..n {
+        payload.push(x.0.data[i].wrapping_sub(a[i]));
+    }
+    for i in 0..n {
+        payload.push(y.0.data[i].wrapping_sub(b[i]));
+    }
+    for i in 0..n {
+        payload.push(z.0.data[i].wrapping_sub(c[i]));
+    }
+    ctx.chan.begin_exchange(payload);
+    let mut ex = ctx.arena.take(n);
+    let mut fy = ctx.arena.take(n);
+    let mut gz = ctx.arena.take(n);
+    for i in 0..n {
+        ex.push(x.0.data[i].wrapping_sub(a[i]));
+        fy.push(y.0.data[i].wrapping_sub(b[i]));
+        gz.push(z.0.data[i].wrapping_sub(c[i]));
+    }
+    let theirs = ctx.chan.finish_exchange();
+    let leader = ctx.is_leader();
+    let data = ctx.chan.compute(|| {
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let e = ex[i].wrapping_add(theirs[i]);
+            let f = fy[i].wrapping_add(theirs[n + i]);
+            let g = gz[i].wrapping_add(theirs[2 * n + i]);
+            let mut v = abc[i]
+                .wrapping_add(ab[i].wrapping_mul(g))
+                .wrapping_add(ac[i].wrapping_mul(f))
+                .wrapping_add(bc[i].wrapping_mul(e))
+                .wrapping_add(a[i].wrapping_mul(f.wrapping_mul(g)))
+                .wrapping_add(b[i].wrapping_mul(e.wrapping_mul(g)))
+                .wrapping_add(c[i].wrapping_mul(e.wrapping_mul(f)));
+            if leader {
+                v = v.wrapping_add(e.wrapping_mul(f).wrapping_mul(g));
+            }
+            out.push(v);
+        }
+        out
+    });
+    ctx.arena.put(ex);
+    ctx.arena.put(fy);
+    ctx.arena.put(gz);
+    ctx.arena.put(theirs);
     Shared(TensorR::from_vec(data, x.shape()))
 }
 
 /// Shared (m,k) × shared (k,n) matrix product via one matrix Beaver
 /// triple: ONE opening round for the whole matmul, then local truncation.
 pub fn matmul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
-    let raw = matmul_raw(ctx, x, y);
-    trunc_local(ctx, &raw)
+    let mut raw = matmul_raw(ctx, x, y);
+    trunc_local_mut(ctx, &mut raw);
+    raw
 }
 
 pub fn matmul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
@@ -240,27 +409,31 @@ pub fn matmul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
     let (k2, n) = (y.shape()[0], y.shape()[1]);
     assert_eq!(k, k2);
     let (a, b, c) = ctx.chan.compute(|| ctx.dealer.matrix_triple(m, k, n));
-    let mut payload = Vec::with_capacity(m * k + k * n);
+    let mut payload = ctx.arena.take(m * k + k * n);
     payload.extend(x.0.data.iter().zip(&a.data).map(|(&p, &q)| p.wrapping_sub(q)));
     payload.extend(y.0.data.iter().zip(&b.data).map(|(&p, &q)| p.wrapping_sub(q)));
-    let theirs = ctx.chan.exchange(payload.clone());
+    ctx.chan.begin_exchange(payload);
+    // overlap the wire: our halves of the opened eps/del matrices
+    let mut eps = x.0.sub(&a);
+    let mut del = y.0.sub(&b);
+    let theirs = ctx.chan.finish_exchange();
     let leader = ctx.is_leader();
     let out = ctx.chan.compute(|| {
-        let eps = TensorR::from_vec(
-            (0..m * k).map(|i| payload[i].wrapping_add(theirs[i])).collect(),
-            &[m, k],
-        );
-        let del = TensorR::from_vec(
-            (0..k * n)
-                .map(|i| payload[m * k + i].wrapping_add(theirs[m * k + i]))
-                .collect(),
-            &[k, n],
-        );
+        for (v, &t) in eps.data.iter_mut().zip(&theirs[..m * k]) {
+            *v = v.wrapping_add(t);
+        }
+        for (v, &t) in del.data.iter_mut().zip(&theirs[m * k..]) {
+            *v = v.wrapping_add(t);
+        }
         // Z = C + eps·B + A·del (+ eps·del, leader only); the leader folds
         // its extra term into ONE matmul via (A+eps)·del (PERF §Perf)
         let lhs = if leader { a.add(&eps) } else { a };
-        c.add(&eps.matmul_raw(&b)).add(&lhs.matmul_raw(&del))
+        let mut z = eps.matmul_raw(&b);
+        z.add_assign(&c);
+        z.add_assign(&lhs.matmul_raw(&del));
+        z
     });
+    ctx.arena.put(theirs);
     Shared(out)
 }
 
@@ -279,41 +452,51 @@ pub fn matmul_batch(ctx: &mut PartyCtx, pairs: &[(&Shared, &Shared)]) -> Vec<Sha
         return Vec::new();
     }
     let mut triples = Vec::with_capacity(pairs.len());
-    let mut payload: Vec<i64> = Vec::new();
+    let mut total = 0;
+    for (x, y) in pairs {
+        assert_eq!(x.shape()[1], y.shape()[0]);
+        total += x.len() + y.len();
+    }
+    let mut payload = ctx.arena.take(total);
     for (x, y) in pairs {
         let (m, k) = (x.shape()[0], x.shape()[1]);
-        let (k2, n) = (y.shape()[0], y.shape()[1]);
-        assert_eq!(k, k2);
+        let n = y.shape()[1];
         let t = ctx.dealer.matrix_triple(m, k, n);
         payload.extend(x.0.data.iter().zip(&t.0.data).map(|(&p, &q)| p.wrapping_sub(q)));
         payload.extend(y.0.data.iter().zip(&t.1.data).map(|(&p, &q)| p.wrapping_sub(q)));
         triples.push(t);
     }
-    let theirs = ctx.chan.exchange(payload.clone());
+    ctx.chan.begin_exchange(payload);
+    // overlap the wire: rebuild every pair's masked differences
+    let mut deltas: Vec<(TensorR, TensorR)> = Vec::with_capacity(pairs.len());
+    for ((x, y), (a, b, _)) in pairs.iter().zip(&triples) {
+        deltas.push((x.0.sub(a), y.0.sub(b)));
+    }
+    let theirs = ctx.chan.finish_exchange();
     let leader = ctx.is_leader();
     let out = ctx.chan.compute(|| {
         let mut out = Vec::with_capacity(pairs.len());
         let mut off = 0;
-        for ((x, y), (a, b, c)) in pairs.iter().zip(&triples) {
-            let (m, k) = (x.shape()[0], x.shape()[1]);
-            let n = y.shape()[1];
-            let eps = TensorR::from_vec(
-                (0..m * k).map(|i| payload[off + i].wrapping_add(theirs[off + i])).collect(),
-                &[m, k],
-            );
-            off += m * k;
-            let del = TensorR::from_vec(
-                (0..k * n).map(|i| payload[off + i].wrapping_add(theirs[off + i])).collect(),
-                &[k, n],
-            );
-            off += k * n;
+        for ((mut eps, mut del), (a, b, c)) in deltas.into_iter().zip(&triples) {
+            for (v, &t) in eps.data.iter_mut().zip(&theirs[off..off + eps.data.len()]) {
+                *v = v.wrapping_add(t);
+            }
+            off += eps.data.len();
+            for (v, &t) in del.data.iter_mut().zip(&theirs[off..off + del.data.len()]) {
+                *v = v.wrapping_add(t);
+            }
+            off += del.data.len();
             // leader folds eps·del into (A+eps)·del — one matmul saved
             let lhs = if leader { a.add(&eps) } else { a.clone() };
-            let z = c.add(&eps.matmul_raw(b)).add(&lhs.matmul_raw(&del));
-            out.push(Shared(z.trunc()));
+            let mut z = eps.matmul_raw(b);
+            z.add_assign(c);
+            z.add_assign(&lhs.matmul_raw(&del));
+            z.trunc_assign();
+            out.push(Shared(z));
         }
         out
     });
+    ctx.arena.put(theirs);
     out
 }
 
@@ -345,7 +528,7 @@ pub fn matmul_weight(ctx: &mut PartyCtx, x: &Shared, w: &mut SecretWeight) -> Sh
     assert_eq!(k, k2, "activation/weight inner dims");
     let (a, b_share, c) =
         ctx.chan.compute(|| ctx.dealer.matrix_triple_fixed_b(w.key, m, k, n));
-    let mut payload: Vec<i64> = Vec::with_capacity(m * k + k * n);
+    let mut payload = ctx.arena.take(m * k + k * n);
     payload.extend(x.0.data.iter().zip(&a.data).map(|(&p, &q)| p.wrapping_sub(q)));
     let first_use = w.delta.is_none();
     if first_use {
@@ -353,26 +536,37 @@ pub fn matmul_weight(ctx: &mut PartyCtx, x: &Shared, w: &mut SecretWeight) -> Sh
             w.share.data.iter().zip(&b_share.data).map(|(&p, &q)| p.wrapping_sub(q)),
         );
     }
-    let theirs = ctx.chan.exchange(payload.clone());
-    let eps = TensorR::from_vec(
-        (0..m * k).map(|i| payload[i].wrapping_add(theirs[i])).collect(),
-        &[m, k],
-    );
-    if first_use {
-        let delta = TensorR::from_vec(
-            (0..k * n)
-                .map(|i| payload[m * k + i].wrapping_add(theirs[m * k + i]))
-                .collect(),
-            &[k, n],
-        );
-        w.delta = Some(delta);
+    ctx.chan.begin_exchange(payload);
+    // overlap the wire: our half of the opened X−A (and W−B on first use)
+    let mut eps = x.0.sub(&a);
+    let mut delta_half = if first_use {
+        let mut d = w.share.clone();
+        d.sub_assign(&b_share);
+        Some(d)
+    } else {
+        None
+    };
+    let theirs = ctx.chan.finish_exchange();
+    for (v, &t) in eps.data.iter_mut().zip(&theirs[..m * k]) {
+        *v = v.wrapping_add(t);
     }
+    if let Some(mut d) = delta_half.take() {
+        for (v, &t) in d.data.iter_mut().zip(&theirs[m * k..]) {
+            *v = v.wrapping_add(t);
+        }
+        w.delta = Some(d);
+    }
+    ctx.arena.put(theirs);
     let delta = w.delta.as_ref().unwrap();
     let leader = ctx.is_leader();
     let out = ctx.chan.compute(|| {
         // Z = C + eps·B + (A [+ eps, leader])·delta — fused leader term
         let lhs = if leader { a.add(&eps) } else { a };
-        c.add(&eps.matmul_raw(&b_share)).add(&lhs.matmul_raw(delta)).trunc()
+        let mut z = eps.matmul_raw(&b_share);
+        z.add_assign(&c);
+        z.add_assign(&lhs.matmul_raw(delta));
+        z.trunc_assign();
+        z
     });
     Shared(out)
 }
@@ -557,6 +751,47 @@ mod tests {
         );
         assert!(got.max_abs_diff(&expect) < 1e-2);
         assert_eq!(rounds, 1, "three matmuls, one round");
+    }
+
+    #[test]
+    fn mul3_matches_clear_in_one_round() {
+        // integer (scale-1) inputs: the 3-factor correlation algebra is
+        // EXACT ring arithmetic — no truncation in the loop, no tolerance
+        let xv: Vec<i64> = vec![3, -2, 7, 0, 11, -5, 1, 9];
+        let yv: Vec<i64> = vec![5, 4, -3, 8, 2, -6, -1, 10];
+        let zv: Vec<i64> = vec![-7, 6, 2, 9, 0, 3, 12, -4];
+        let expect: Vec<i64> = (0..8)
+            .map(|i| xv[i].wrapping_mul(yv[i]).wrapping_mul(zv[i]))
+            .collect();
+        let (xe, ye, ze) = (
+            TensorR::from_vec(xv, &[8]),
+            TensorR::from_vec(yv, &[8]),
+            TensorR::from_vec(zv, &[8]),
+        );
+        let ((got, rounds), _) = run_pair(
+            23,
+            {
+                let (xe, ye, ze) = (xe.clone(), ye.clone(), ze.clone());
+                move |ctx| {
+                    let xs = share_input(ctx, &xe);
+                    let ys = share_input(ctx, &ye);
+                    let zs = share_input(ctx, &ze);
+                    let before = ctx.chan.meter.rounds;
+                    let p = mul3_raw(ctx, &xs, &ys, &zs);
+                    let r = ctx.chan.meter.rounds - before;
+                    (open(ctx, &p), r)
+                }
+            },
+            move |ctx| {
+                let xs = recv_share(ctx, &[8]);
+                let ys = recv_share(ctx, &[8]);
+                let zs = recv_share(ctx, &[8]);
+                let p = mul3_raw(ctx, &xs, &ys, &zs);
+                let _ = open(ctx, &p);
+            },
+        );
+        assert_eq!(rounds, 1, "three-factor product must open in one round");
+        assert_eq!(got.data, expect);
     }
 
     #[test]

@@ -4,8 +4,54 @@
 //! Only the ops the coordinator's hot path needs are implemented; the
 //! heavyweight math (training, plaintext forwards) lives in AOT-compiled
 //! HLO, not here.
+//!
+//! The ring matmul is the MPC engine's local-compute hot path (every
+//! Beaver matrix product runs it three times per party): it is a
+//! panel-packed, multithreaded tiled GEMM.  B is transpose-packed once so
+//! every output element is a pair of streaming reads, rows are fanned out
+//! over scoped threads, and accumulation happens in registers.  i64
+//! wrapping addition is exactly associative, so results are bit-identical
+//! for every thread count — the protocol stays deterministic.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::fixed;
+
+/// Global worker-thread count for the ring GEMM. 0 = auto (one per core).
+static GEMM_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+/// How many protocol threads may issue GEMMs concurrently right now
+/// (the pipelined engine registers its lanes here).  Auto mode divides
+/// the core budget by this so lanes don't oversubscribe the machine.
+static GEMM_SHARERS: AtomicUsize = AtomicUsize::new(1);
+
+/// Override the ring-GEMM worker count (0 restores auto).  Results are
+/// bit-identical for every setting; this only trades wall-clock.
+pub fn set_gemm_threads(n: usize) {
+    GEMM_THREADS.store(n, Ordering::Relaxed);
+}
+
+/// Declare how many threads are concurrently issuing GEMMs (≥1).  Purely
+/// a scheduling hint — never affects results.
+pub fn set_gemm_sharers(n: usize) {
+    GEMM_SHARERS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// Effective ring-GEMM worker count.
+pub fn gemm_threads() -> usize {
+    match GEMM_THREADS.load(Ordering::Relaxed) {
+        0 => {
+            let cores =
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            let sharers = GEMM_SHARERS.load(Ordering::Relaxed).max(1);
+            (cores / sharers).max(1)
+        }
+        n => n,
+    }
+}
+
+/// Below this m·k·n volume a parallel fan-out costs more than it saves.
+const GEMM_PAR_THRESHOLD: usize = 1 << 19;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Tensor<T> {
@@ -151,18 +197,68 @@ impl TensorR {
 
     /// Add a row vector to every row of a (…, cols) tensor.
     pub fn add_row(&self, row: &TensorR) -> TensorR {
+        let mut out = self.clone();
+        out.add_row_assign(row);
+        out
+    }
+
+    /// In-place [`TensorR::add_row`] — the modulo-free broadcast used on
+    /// every activation bias add.
+    pub fn add_row_assign(&mut self, row: &TensorR) {
         let cols = *self.shape.last().unwrap();
         assert_eq!(row.len(), cols);
-        let mut data = self.data.clone();
-        for (i, v) in data.iter_mut().enumerate() {
-            *v = v.wrapping_add(row.data[i % cols]);
+        for chunk in self.data.chunks_exact_mut(cols) {
+            for (v, &r) in chunk.iter_mut().zip(&row.data) {
+                *v = v.wrapping_add(r);
+            }
         }
-        Tensor { data, shape: self.shape.clone() }
+    }
+
+    /// In-place elementwise wrapping add.
+    pub fn add_assign(&mut self, other: &TensorR) {
+        assert_eq!(self.shape, other.shape);
+        for (v, &o) in self.data.iter_mut().zip(&other.data) {
+            *v = v.wrapping_add(o);
+        }
+    }
+
+    /// In-place elementwise wrapping subtract.
+    pub fn sub_assign(&mut self, other: &TensorR) {
+        assert_eq!(self.shape, other.shape);
+        for (v, &o) in self.data.iter_mut().zip(&other.data) {
+            *v = v.wrapping_sub(o);
+        }
+    }
+
+    /// In-place [`TensorR::trunc`].
+    pub fn trunc_assign(&mut self) {
+        for v in self.data.iter_mut() {
+            *v = fixed::trunc(*v);
+        }
     }
 
     /// Raw matmul (no truncation): (m,k) × (k,n) → (m,n).
-    /// i64 wrapping with 64-block cache tiling — this is the MPC hot path.
+    /// Panel-packed multithreaded i64 GEMM — this is the MPC hot path.
     pub fn matmul_raw(&self, other: &TensorR) -> TensorR {
+        self.matmul_raw_with_threads(other, gemm_threads())
+    }
+
+    /// [`TensorR::matmul_raw`] with an explicit worker count (bench/test
+    /// hook; bypasses the [`set_gemm_threads`] global).
+    pub fn matmul_raw_with_threads(&self, other: &TensorR, threads: usize) -> TensorR {
+        assert_eq!(self.rank(), 2);
+        assert_eq!(other.rank(), 2);
+        let (m, k) = (self.shape[0], self.shape[1]);
+        let (k2, n) = (other.shape[0], other.shape[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let out = gemm_i64(&self.data, &other.data, m, k, n, threads);
+        Tensor::from_vec(out, &[m, n])
+    }
+
+    /// The original single-threaded saxpy-form kernel, kept as the
+    /// reference for parity tests and the perf-trajectory baseline in
+    /// `mpc_microbench` (BENCH_gemm.json).
+    pub fn matmul_raw_ref(&self, other: &TensorR) -> TensorR {
         assert_eq!(self.rank(), 2);
         assert_eq!(other.rank(), 2);
         let (m, k) = (self.shape[0], self.shape[1]);
@@ -209,6 +305,86 @@ impl TensorR {
         let mut shape = self.shape.clone();
         *shape.last_mut().unwrap() = 1;
         Tensor { data, shape }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ring GEMM kernel
+// ---------------------------------------------------------------------------
+
+/// (m,k) × (k,n) wrapping-i64 product. B is transpose-packed into row-major
+/// B^T panels so the inner kernel is a register-accumulated dot product over
+/// two streaming reads; large problems fan rows out over scoped threads.
+fn gemm_i64(a: &[i64], b: &[i64], m: usize, k: usize, n: usize, threads: usize) -> Vec<i64> {
+    let mut out = vec![0i64; m * n];
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    // pack B^T: bt[j*k + p] = b[p*n + j]
+    let mut bt = vec![0i64; n * k];
+    for p in 0..k {
+        let brow = &b[p * n..(p + 1) * n];
+        for (j, &v) in brow.iter().enumerate() {
+            bt[j * k + p] = v;
+        }
+    }
+    let threads = threads.clamp(1, m);
+    if threads == 1 || m * k * n < GEMM_PAR_THRESHOLD {
+        gemm_rows(a, &bt, &mut out, k, n);
+        return out;
+    }
+    let rows_per = m.div_ceil(threads);
+    let bt_ref = &bt;
+    std::thread::scope(|s| {
+        for (a_chunk, o_chunk) in a.chunks(rows_per * k).zip(out.chunks_mut(rows_per * n)) {
+            s.spawn(move || gemm_rows(a_chunk, bt_ref, o_chunk, k, n));
+        }
+    });
+    out
+}
+
+/// Dot-product micro-kernel over packed B^T: two output columns at a time,
+/// each with split even/odd accumulators to break the multiply dependency
+/// chain.  The accumulation ORDER per output element is independent of the
+/// row partitioning, so threading never changes a single bit.
+fn gemm_rows(a: &[i64], bt: &[i64], out: &mut [i64], k: usize, n: usize) {
+    let rows = a.len() / k;
+    for i in 0..rows {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 2 <= n {
+            let b0 = &bt[j * k..(j + 1) * k];
+            let b1 = &bt[(j + 1) * k..(j + 2) * k];
+            let (mut acc00, mut acc01) = (0i64, 0i64);
+            let (mut acc10, mut acc11) = (0i64, 0i64);
+            let mut p = 0;
+            while p + 2 <= k {
+                let a0 = arow[p];
+                let a1 = arow[p + 1];
+                acc00 = acc00.wrapping_add(a0.wrapping_mul(b0[p]));
+                acc01 = acc01.wrapping_add(a1.wrapping_mul(b0[p + 1]));
+                acc10 = acc10.wrapping_add(a0.wrapping_mul(b1[p]));
+                acc11 = acc11.wrapping_add(a1.wrapping_mul(b1[p + 1]));
+                p += 2;
+            }
+            if p < k {
+                let av = arow[p];
+                acc00 = acc00.wrapping_add(av.wrapping_mul(b0[p]));
+                acc10 = acc10.wrapping_add(av.wrapping_mul(b1[p]));
+            }
+            orow[j] = acc00.wrapping_add(acc01);
+            orow[j + 1] = acc10.wrapping_add(acc11);
+            j += 2;
+        }
+        if j < n {
+            let b0 = &bt[j * k..(j + 1) * k];
+            let mut acc = 0i64;
+            for p in 0..k {
+                acc = acc.wrapping_add(arow[p].wrapping_mul(b0[p]));
+            }
+            orow[j] = acc;
+        }
     }
 }
 
@@ -301,5 +477,66 @@ mod tests {
         let a = TensorR::zeros(&[2, 3]);
         let b = TensorR::zeros(&[4, 2]);
         let _ = a.matmul_raw(&b);
+    }
+
+    fn random_ring(r: &mut Rng, shape: &[usize]) -> TensorR {
+        TensorR::from_vec(
+            (0..shape.iter().product::<usize>()).map(|_| r.next_i64()).collect(),
+            shape,
+        )
+    }
+
+    #[test]
+    fn packed_gemm_matches_reference_kernel() {
+        let mut r = Rng::new(11);
+        for _ in 0..20 {
+            let (m, k, n) = (1 + r.below(33), 1 + r.below(33), 1 + r.below(33));
+            let a = random_ring(&mut r, &[m, k]);
+            let b = random_ring(&mut r, &[k, n]);
+            assert_eq!(a.matmul_raw(&b), a.matmul_raw_ref(&b), "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_bit_identical_across_thread_counts() {
+        let mut r = Rng::new(13);
+        // big enough to cross the parallel threshold
+        let a = random_ring(&mut r, &[96, 96]);
+        let b = random_ring(&mut r, &[96, 96]);
+        let one = a.matmul_raw_with_threads(&b, 1);
+        for t in [2, 3, 5, 8] {
+            assert_eq!(a.matmul_raw_with_threads(&b, t), one, "threads={t}");
+        }
+        assert_eq!(a.matmul_raw_ref(&b), one);
+    }
+
+    #[test]
+    fn in_place_ops_match_functional() {
+        let mut r = Rng::new(17);
+        let a = random_ring(&mut r, &[5, 7]);
+        let b = random_ring(&mut r, &[5, 7]);
+        let row = random_ring(&mut r, &[7]);
+        let mut t = a.clone();
+        t.add_assign(&b);
+        assert_eq!(t, a.add(&b));
+        let mut t = a.clone();
+        t.sub_assign(&b);
+        assert_eq!(t, a.sub(&b));
+        let mut t = a.clone();
+        t.trunc_assign();
+        assert_eq!(t, a.trunc());
+        let mut t = a.clone();
+        t.add_row_assign(&row);
+        assert_eq!(t, a.add_row(&row));
+    }
+
+    #[test]
+    fn gemm_degenerate_shapes() {
+        let a = TensorR::from_vec(vec![1, 2, 3], &[1, 3]);
+        let b = TensorR::from_vec(vec![4, 5, 6], &[3, 1]);
+        assert_eq!(a.matmul_raw(&b).data, vec![32]);
+        let a = TensorR::from_vec(vec![2], &[1, 1]);
+        let b = TensorR::from_vec(vec![3, 4, 5], &[1, 3]);
+        assert_eq!(a.matmul_raw(&b).data, vec![6, 8, 10]);
     }
 }

@@ -1,0 +1,81 @@
+//! Parity + determinism for the parallel ring GEMM (proptest-lite):
+//! the packed multithreaded kernel must agree bit-for-bit with the seed
+//! scalar reference on randomized shapes, for every thread count.
+
+use selectformer::tensor::TensorR;
+use selectformer::util::proptest_lite::check;
+use selectformer::util::Rng;
+
+fn random_ring(r: &mut Rng, shape: &[usize]) -> TensorR {
+    TensorR::from_vec(
+        (0..shape.iter().product::<usize>()).map(|_| r.next_i64()).collect(),
+        shape,
+    )
+}
+
+#[test]
+fn prop_packed_gemm_matches_scalar_reference() {
+    check(
+        48,
+        0x6e44,
+        |r| {
+            let m = 1 + r.below(48);
+            let k = 1 + r.below(48);
+            let n = 1 + r.below(48);
+            (m, k, n, r.next_u64())
+        },
+        |&(m, k, n, seed)| {
+            let mut r = Rng::new(seed);
+            let a = random_ring(&mut r, &[m, k]);
+            let b = random_ring(&mut r, &[k, n]);
+            let want = a.matmul_raw_ref(&b);
+            for threads in [1usize, 2, 4] {
+                let got = a.matmul_raw_with_threads(&b, threads);
+                if got != want {
+                    return Err(format!(
+                        "{m}x{k}x{n} threads={threads}: packed kernel diverged"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_gemm_thread_count_never_changes_bits() {
+    // shapes above the parallel threshold, so threads really fan out
+    check(
+        6,
+        0x7e44,
+        |r| (64 + r.below(64), 64 + r.below(64), 64 + r.below(64), r.next_u64()),
+        |&(m, k, n, seed)| {
+            let mut r = Rng::new(seed);
+            let a = random_ring(&mut r, &[m, k]);
+            let b = random_ring(&mut r, &[k, n]);
+            let one = a.matmul_raw_with_threads(&b, 1);
+            for threads in [2usize, 3, 7, 16] {
+                if a.matmul_raw_with_threads(&b, threads) != one {
+                    return Err(format!("{m}x{k}x{n}: threads={threads} changed bits"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn fixed_point_matmul_still_decodes() {
+    // the packed kernel under the fixed-point encode/trunc/decode cycle
+    let mut r = Rng::new(9);
+    for _ in 0..5 {
+        let (m, k, n) = (1 + r.below(12), 1 + r.below(12), 1 + r.below(12));
+        let af: Vec<f32> = (0..m * k).map(|_| r.uniform(-2.0, 2.0)).collect();
+        let bf: Vec<f32> = (0..k * n).map(|_| r.uniform(-2.0, 2.0)).collect();
+        let a = selectformer::tensor::TensorF::from_vec(af, &[m, k]);
+        let b = selectformer::tensor::TensorF::from_vec(bf, &[k, n]);
+        let clear = a.matmul(&b);
+        let ring = TensorR::from_f32(&a).matmul_raw(&TensorR::from_f32(&b)).trunc();
+        assert!(ring.to_f32().max_abs_diff(&clear) < 1e-2);
+    }
+}

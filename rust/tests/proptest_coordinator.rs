@@ -116,6 +116,7 @@ fn prop_iosched_policies_ordered() {
                 messages: 0,
                 compute_s: ops.iter().map(|o| o.compute_s).sum(),
                 ops: ops.clone(),
+                ..Default::default()
             };
             let net = NetConfig::default();
             let seq = iosched::delay(&p0, &p0, &net, SchedPolicy::Sequential);

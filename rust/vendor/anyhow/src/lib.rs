@@ -1,0 +1,139 @@
+//! Minimal offline stand-in for the `anyhow` crate — exactly the API
+//! subset this repository uses (`Result`, `Error`, `Context`, `anyhow!`,
+//! `bail!`).  The build environment has no crates.io access, so the real
+//! crate is replaced by this ~100-line shim; swapping the path dependency
+//! back to the registry crate is a one-line Cargo.toml change.
+//!
+//! Semantics match anyhow where it matters here:
+//!  * `Error` does NOT implement `std::error::Error` (so the blanket
+//!    `From<E: Error>` conversion used by `?` stays coherent);
+//!  * `.context(..)` / `.with_context(..)` prepend to the message chain;
+//!  * one level of `source()` is folded into converted errors.
+
+use std::fmt;
+
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        match e.source() {
+            Some(s) => Error { msg: format!("{e}: {s}") },
+            None => Error { msg: e.to_string() },
+        }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error { msg: c.to_string() })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error { msg: f().to_string() })
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e: Result<()> = Err(Error::msg("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert!(Context::context(v, "missing").is_err());
+        assert_eq!(Context::context(Some(3u32), "missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn bail_formats() {
+        fn f(x: u32) -> Result<()> {
+            if x > 2 {
+                bail!("too big: {x}");
+            }
+            Ok(())
+        }
+        assert_eq!(f(5).unwrap_err().to_string(), "too big: 5");
+        assert!(f(1).is_ok());
+    }
+}

@@ -1,0 +1,110 @@
+//! Minimal offline stand-in for the `byteorder` crate — the read-side API
+//! subset the `.sfw` / `.bin` loaders use.  Bulk `*_into` reads go through
+//! one `read_exact` so loading stays fast behind a `BufReader`.
+
+use std::io::{self, Read};
+
+pub trait ByteOrder {
+    fn u32_from(b: [u8; 4]) -> u32;
+    fn u64_from(b: [u8; 8]) -> u64;
+    fn f32_from(b: [u8; 4]) -> f32;
+}
+
+pub enum LittleEndian {}
+
+impl ByteOrder for LittleEndian {
+    fn u32_from(b: [u8; 4]) -> u32 {
+        u32::from_le_bytes(b)
+    }
+    fn u64_from(b: [u8; 8]) -> u64 {
+        u64::from_le_bytes(b)
+    }
+    fn f32_from(b: [u8; 4]) -> f32 {
+        f32::from_le_bytes(b)
+    }
+}
+
+pub type LE = LittleEndian;
+
+pub trait ReadBytesExt: Read {
+    fn read_u8(&mut self) -> io::Result<u8> {
+        let mut b = [0u8; 1];
+        self.read_exact(&mut b)?;
+        Ok(b[0])
+    }
+
+    fn read_u32<B: ByteOrder>(&mut self) -> io::Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(&mut b)?;
+        Ok(B::u32_from(b))
+    }
+
+    fn read_u64<B: ByteOrder>(&mut self) -> io::Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(&mut b)?;
+        Ok(B::u64_from(b))
+    }
+
+    fn read_u32_into<B: ByteOrder>(&mut self, dst: &mut [u32]) -> io::Result<()> {
+        let mut buf = vec![0u8; dst.len() * 4];
+        self.read_exact(&mut buf)?;
+        for (i, v) in dst.iter_mut().enumerate() {
+            *v = B::u32_from([buf[4 * i], buf[4 * i + 1], buf[4 * i + 2], buf[4 * i + 3]]);
+        }
+        Ok(())
+    }
+
+    fn read_f32_into<B: ByteOrder>(&mut self, dst: &mut [f32]) -> io::Result<()> {
+        let mut buf = vec![0u8; dst.len() * 4];
+        self.read_exact(&mut buf)?;
+        for (i, v) in dst.iter_mut().enumerate() {
+            *v = B::f32_from([buf[4 * i], buf[4 * i + 1], buf[4 * i + 2], buf[4 * i + 3]]);
+        }
+        Ok(())
+    }
+}
+
+impl<R: Read + ?Sized> ReadBytesExt for R {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reads_little_endian() {
+        let bytes: Vec<u8> = vec![
+            7, // u8
+            0x01, 0x02, 0x03, 0x04, // u32 0x04030201
+            1, 0, 0, 0, 0, 0, 0, 0, // u64 1
+        ];
+        let mut r = &bytes[..];
+        assert_eq!(r.read_u8().unwrap(), 7);
+        assert_eq!(r.read_u32::<LittleEndian>().unwrap(), 0x0403_0201);
+        assert_eq!(r.read_u64::<LittleEndian>().unwrap(), 1);
+    }
+
+    #[test]
+    fn bulk_reads() {
+        let mut bytes = Vec::new();
+        for v in [1.5f32, -2.25, 0.0] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [3u32, 9] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut r = &bytes[..];
+        let mut f = [0f32; 3];
+        r.read_f32_into::<LittleEndian>(&mut f).unwrap();
+        assert_eq!(f, [1.5, -2.25, 0.0]);
+        let mut u = [0u32; 2];
+        r.read_u32_into::<LittleEndian>(&mut u).unwrap();
+        assert_eq!(u, [3, 9]);
+    }
+
+    #[test]
+    fn short_read_errors() {
+        let bytes = [1u8, 2];
+        let mut r = &bytes[..];
+        assert!(r.read_u32::<LittleEndian>().is_err());
+    }
+}

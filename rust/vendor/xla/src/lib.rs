@@ -1,0 +1,239 @@
+//! Offline stub of the `xla` crate — the exact API surface
+//! `src/runtime` / `src/train` use.
+//!
+//! The data side (`Literal`, shapes, element types) is implemented for
+//! real, so literal round-trips and their tests work.  The execution side
+//! (HLO parsing, PJRT compile/execute) returns a descriptive error: the
+//! build environment does not ship the native `xla_extension` library.
+//! Builds that do have it swap this path dependency for the real crate —
+//! no source changes needed.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn stub_err(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} requires the native XLA extension (this build vendors \
+         the offline stub; point Cargo at the real `xla` crate to enable PJRT)"
+    ))
+}
+
+// ---------------------------------------------------------------------------
+// Literals (implemented for real)
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+}
+
+#[doc(hidden)]
+#[derive(Clone, Debug)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Native element types a [`Literal`] can hold in this stub.
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn wrap(v: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(d: &Data) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::F32(v) => Ok(v.clone()),
+            Data::I32(_) => Err(Error("literal is S32, requested F32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<Self>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Result<Vec<Self>> {
+        match d {
+            Data::I32(v) => Ok(v.clone()),
+            Data::F32(_) => Err(Error("literal is F32, requested S32".into())),
+        }
+    }
+}
+
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { dims: vec![], data: T::wrap(vec![v]) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let numel: i64 = dims.iter().product();
+        if numel as usize != self.len() {
+            return Err(Error(format!(
+                "reshape {:?} incompatible with {} elements",
+                dims,
+                self.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("empty literal".into()))
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone() })
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+        })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(stub_err("tuple decomposition"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// HLO / PJRT (stubbed)
+// ---------------------------------------------------------------------------
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(stub_err("HLO parsing"))
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(stub_err("buffer readback"))
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(stub_err("execution"))
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub (no native XLA extension linked)".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(stub_err("compilation"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]).reshape(&[2, 2]).unwrap();
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(l.ty().unwrap(), ElementType::F32);
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_first_element() {
+        let l = Literal::scalar(7.5f32);
+        assert_eq!(l.get_first_element::<f32>().unwrap(), 7.5);
+    }
+
+    #[test]
+    fn bad_reshape_rejected() {
+        assert!(Literal::vec1(&[1i32, 2, 3]).reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn execution_paths_error_loudly() {
+        assert!(HloModuleProto::from_text_file("x").is_err());
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client.compile(&XlaComputation).is_err());
+    }
+}
