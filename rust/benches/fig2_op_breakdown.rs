@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         if matches!(
             op.name,
             "exp" | "reciprocal" | "rsqrt" | "ltz" | "relu" | "log" | "sigmoid"
-                | "layer"
+                | "layer" | "session_setup"
         ) {
             continue;
         }

@@ -119,8 +119,9 @@ fn bench_gemm() -> Vec<BenchRow> {
 }
 
 /// Measured end-to-end 2-phase selection over 256 candidates: the serial
-/// party pair vs the pipelined lane runtime (identical output, different
-/// wall-clock).
+/// party pair vs the pipelined lane runtime vs the overlapped multi-phase
+/// scheduler (identical output, different wall-clock), plus per-phase
+/// setup-vs-drain attribution and the broadcast-setup traffic evidence.
 fn bench_e2e() -> Vec<BenchRow> {
     let dir = std::env::temp_dir().join("sf_bench_e2e");
     let p1 = dir.join("phase1.sfw");
@@ -142,36 +143,94 @@ fn bench_e2e() -> Vec<BenchRow> {
     );
     let cands: Vec<usize> = (0..256).collect();
     let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(4);
-    let run = |lanes: usize| {
-        let opts = SelectionOptions { batch: 16, lanes, ..Default::default() };
+    let run = |lanes: usize, overlap: bool| {
+        let opts = SelectionOptions { batch: 16, lanes, overlap, ..Default::default() };
         multi_phase_select(&[p1.as_path(), p2.as_path()], &schedule, &ds, cands.clone(), &opts)
             .expect("selection")
     };
-    let serial = run(1);
-    let piped = run(lanes);
+    let serial = run(1, false);
+    let piped = run(lanes, false);
+    let overlapped = run(lanes, true);
     assert_eq!(serial.selected, piped.selected, "pipelined must select identically");
+    assert_eq!(serial.selected, overlapped.selected, "overlapped must select identically");
     let mut table = Table::new(
         "2-phase selection, 256 candidates (tiny proxy)",
-        &["mode", "lanes", "wall", "speedup"],
+        &["mode", "lanes", "wall", "speedup", "setup hidden"],
     );
-    let (ws, wp) = (serial.total_wall_s(), piped.total_wall_s());
+    let (ws, wp, wo) = (
+        serial.total_wall_s(),
+        piped.total_wall_s(),
+        overlapped.total_wall_s(),
+    );
     table.row(vec![
         "serial".into(),
         "1".into(),
         format!("{:.2} s", ws),
         "1.00×".into(),
+        "-".into(),
     ]);
     table.row(vec![
         "pipelined".into(),
         lanes.to_string(),
         format!("{:.2} s", wp),
         format!("{:.2}×", ws / wp),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "overlapped".into(),
+        lanes.to_string(),
+        format!("{:.2} s", wo),
+        format!("{:.2}×", ws / wo),
+        format!("{:.3} s", overlapped.overlapped_setup_wall_s()),
     ]);
     table.print();
-    vec![
+
+    // per-phase setup-vs-drain attribution + the broadcast-setup evidence:
+    // setup traffic is ONE session's bytes per phase, independent of the
+    // lane count (piped/overlapped pay it once, not per lane)
+    let mut attr = Table::new(
+        "per-phase setup vs drain (overlapped scheduler)",
+        &["phase", "setup wall", "drain wall", "setup bytes", "overlapped"],
+    );
+    for (i, p) in overlapped.phases.iter().enumerate() {
+        attr.row(vec![
+            format!("{}", i + 1),
+            format!("{:.3} s", p.setup_wall_s),
+            format!("{:.3} s", p.drain_wall_s),
+            fmt_bytes(p.setup_bytes),
+            if p.setup_overlapped { "yes (off critical path)" } else { "no" }.into(),
+        ]);
+    }
+    attr.print();
+    for (a, b) in piped.phases.iter().zip(&overlapped.phases) {
+        assert_eq!(
+            a.setup_bytes, b.setup_bytes,
+            "broadcast setup bytes must not depend on the schedule"
+        );
+    }
+    assert_eq!(
+        piped.total_bytes(),
+        serial.total_bytes(),
+        "lane fan-out must not multiply setup traffic"
+    );
+
+    let mut rows = vec![
         BenchRow::new("select_2phase_serial", "n=256,batch=16", 1, ws * 1e9),
         BenchRow::new("select_2phase_pipelined", "n=256,batch=16", lanes, wp * 1e9),
-    ]
+        BenchRow::new("select_2phase_overlapped", "n=256,batch=16", lanes, wo * 1e9),
+        BenchRow::new(
+            "select_2phase_setup_hidden",
+            "n=256,batch=16",
+            lanes,
+            overlapped.overlapped_setup_wall_s() * 1e9,
+        ),
+    ];
+    rows.extend(selectformer::benchkit::phase_breakdown_rows(
+        "select_2phase_overlapped",
+        &overlapped,
+        lanes,
+    ));
+    rows
 }
 
 fn main() {

@@ -10,7 +10,7 @@
 use anyhow::Result;
 
 use crate::coordinator::planner::{profile_phase, PhaseCostProfile};
-use crate::coordinator::SchedPolicy;
+use crate::coordinator::{SchedPolicy, SelectionOutcome};
 use crate::models::{ModelConfig, Variant};
 use crate::mpc::net::NetConfig;
 
@@ -128,6 +128,38 @@ impl BenchRow {
             ns_per_op,
         }
     }
+}
+
+/// Per-phase setup-vs-drain wall-clock attribution of a finished
+/// selection, as BENCH_e2e.json rows: one `…_setup_wall` and one
+/// `…_drain_wall` row per phase.  The shape string records the metered
+/// setup bytes (broadcast once per phase, lane-count-independent) and
+/// whether the setup ran hidden behind the previous phase's drain — the
+/// machine-diffable evidence for the overlapped scheduler's win.
+pub fn phase_breakdown_rows(
+    tag: &str,
+    outcome: &SelectionOutcome,
+    lanes: usize,
+) -> Vec<BenchRow> {
+    let mut rows = Vec::with_capacity(2 * outcome.phases.len());
+    for (i, p) in outcome.phases.iter().enumerate() {
+        rows.push(BenchRow::new(
+            &format!("{tag}_phase{i}_setup_wall"),
+            &format!(
+                "setup_bytes={},overlapped={}",
+                p.setup_bytes, p.setup_overlapped
+            ),
+            lanes,
+            p.setup_wall_s * 1e9,
+        ));
+        rows.push(BenchRow::new(
+            &format!("{tag}_phase{i}_drain_wall"),
+            &format!("survivors={}", p.survivors.len()),
+            lanes,
+            p.drain_wall_s * 1e9,
+        ));
+    }
+    rows
 }
 
 /// Write perf rows to results/<name>.json (hand-rolled JSON — the offline

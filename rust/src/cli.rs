@@ -3,7 +3,8 @@
 //! ```text
 //! selectformer info
 //! selectformer select  --target distilbert_s --bench sst2s [--budget 0.2]
-//!                      [--batch 16] [--lanes 4] [--policy ours|serial|coalesced]
+//!                      [--batch 16] [--lanes 4] [--overlap]
+//!                      [--policy ours|serial|coalesced]
 //!                      [--method ours|random|oracle|mpcformer|bolt|noattnsm|noattnln|noapprox]
 //! selectformer e2e     --target ... --bench ... [--budget 0.2] [--steps 300]
 //! selectformer train   --target ... --bench ... [--method ours|random|oracle] [--steps 300]
@@ -138,6 +139,10 @@ fn opts_from(args: &Args, approx: ApproxToggles) -> Result<SelectionOptions> {
         approx,
         reveal_entropies: false,
         lanes: args.usize_or("lanes", 1)?,
+        // stream phase i+1's session setup behind phase i's drain —
+        // byte-identical output (tests/multiphase_equiv.rs), less wall
+        overlap: args.has("overlap"),
+        capture_shares: false,
     })
 }
 
@@ -204,14 +209,24 @@ fn cmd_select(args: &Args) -> Result<()> {
     if let Some(outcome) = &purchase.outcome {
         let mut t = Table::new(
             "per-phase MPC cost",
-            &["phase", "survivors", "rounds", "bytes", "sim delay", "serial delay"],
+            &[
+                "phase", "survivors", "rounds", "bytes", "setup", "drain",
+                "sim delay", "serial delay",
+            ],
         );
         for (i, p) in outcome.phases.iter().enumerate() {
+            let setup = if p.setup_overlapped {
+                format!("{} (hidden)", fmt_duration(p.setup_wall_s))
+            } else {
+                fmt_duration(p.setup_wall_s)
+            };
             t.row(vec![
                 format!("{}", i + 1),
                 p.survivors.len().to_string(),
                 p.meter_p0.rounds.to_string(),
                 fmt_bytes(p.meter_p0.bytes + p.meter_p1.bytes),
+                setup,
+                fmt_duration(p.drain_wall_s),
                 fmt_duration(p.sim_delay),
                 fmt_duration(p.serial_delay),
             ]);

@@ -15,6 +15,7 @@ pub mod testutil;
 pub use iosched::SchedPolicy;
 pub use phase::{PhaseSchedule, ProxySpec};
 pub use selector::{
-    multi_phase_select, random_select, run_phase_mpc, SelectionOptions,
+    multi_phase_select, multi_phase_select_overlapped, random_select,
+    run_phase_mpc, run_phase_mpc_at, PhaseOutcome, SelectionOptions,
     SelectionOutcome,
 };

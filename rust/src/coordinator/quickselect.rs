@@ -18,30 +18,100 @@ pub struct SelectStats {
     pub partition_rounds: u64,
 }
 
-/// Indices (into `values`) of the k largest shared values.
+/// Incremental consumer of CONFIRMED survivors.
+///
+/// QuickSelect proves membership in the top-k set long before the run
+/// finishes: every partition step that lands at-or-under the remaining
+/// quota confirms its above-pivot block (and possibly the pivot) for
+/// good.  A sink receives each index the moment it is confirmed, so a
+/// multi-phase driver can overlap downstream work (next-phase token
+/// gather, session prefetch) with the QuickSelect tail instead of
+/// blocking on the final index set.
+///
+/// Confirmation order is a pure function of the shares and the dealer
+/// streams — deterministic, identical on both parties, and independent
+/// of how the caller drains the stream.
+pub trait SurvivorSink {
+    fn confirm(&mut self, idx: usize);
+}
+
+/// The barrier shape: collect confirmations into a vector.
+impl SurvivorSink for Vec<usize> {
+    fn confirm(&mut self, idx: usize) {
+        self.push(idx);
+    }
+}
+
+/// Sink that records confirmation order and (optionally) forwards each
+/// survivor over a channel — the overlapped driver's streaming hook.
+/// Send failures are ignored: a departed receiver just means nobody is
+/// prefetching.
+pub struct ChannelSink {
+    pub order: Vec<usize>,
+    pub tx: Option<std::sync::mpsc::Sender<usize>>,
+}
+
+impl ChannelSink {
+    /// A collecting sink with no downstream channel.
+    pub fn collector() -> ChannelSink {
+        ChannelSink { order: Vec::new(), tx: None }
+    }
+}
+
+impl SurvivorSink for ChannelSink {
+    fn confirm(&mut self, idx: usize) {
+        self.order.push(idx);
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(idx);
+        }
+    }
+}
+
+/// Indices (into `values`) of the k largest shared values, sorted.
 /// Both parties run this symmetrically and learn the same index set.
 pub fn top_k_indices(
     ctx: &mut PartyCtx,
     values: &Shared,
     k: usize,
 ) -> (Vec<usize>, SelectStats) {
+    let mut selected: Vec<usize> = Vec::with_capacity(k);
+    let stats = top_k_streamed(ctx, values, k, &mut selected);
+    selected.sort_unstable();
+    (selected, stats)
+}
+
+/// Streaming top-k: identical protocol to [`top_k_indices`] (same
+/// comparisons, same opened bits, same dealer randomness), but survivors
+/// are emitted through `sink` the moment they are confirmed instead of
+/// being returned as one final set.  The full emission is a permutation
+/// of the sorted result; any prefix of it is a subset of the final set.
+pub fn top_k_streamed(
+    ctx: &mut PartyCtx,
+    values: &Shared,
+    k: usize,
+    sink: &mut dyn SurvivorSink,
+) -> SelectStats {
     let n = values.len();
     assert!(k <= n, "k={k} > n={n}");
     let mut stats = SelectStats::default();
     if k == 0 {
-        return (Vec::new(), stats);
+        return stats;
     }
     if k == n {
-        return ((0..n).collect(), stats);
+        for i in 0..n {
+            sink.confirm(i);
+        }
+        return stats;
     }
     let mut pool: Vec<usize> = (0..n).collect();
-    let mut selected: Vec<usize> = Vec::with_capacity(k);
     let mut need = k;
     // both parties must pick the SAME pivot: derive from the dealer-shared
     // randomness (public coin)
     while need > 0 && !pool.is_empty() {
         if pool.len() == need {
-            selected.extend_from_slice(&pool);
+            for &i in &pool {
+                sink.confirm(i);
+            }
             break;
         }
         let coin = public_coin(ctx, pool.len());
@@ -74,13 +144,17 @@ pub fn top_k_indices(
         use std::cmp::Ordering;
         match above.len().cmp(&need) {
             Ordering::Equal => {
-                selected.extend_from_slice(&above);
+                for &i in &above {
+                    sink.confirm(i);
+                }
                 break;
             }
             Ordering::Less => {
                 // everything above the pivot survives, plus the pivot
-                selected.extend_from_slice(&above);
-                selected.push(pivot_idx);
+                for &i in &above {
+                    sink.confirm(i);
+                }
+                sink.confirm(pivot_idx);
                 need -= above.len() + 1;
                 pool = below;
                 if need == 0 {
@@ -92,8 +166,7 @@ pub fn top_k_indices(
             }
         }
     }
-    selected.sort_unstable();
-    (selected, stats)
+    stats
 }
 
 /// A public coin both parties derive identically from dealer randomness.
@@ -176,5 +249,40 @@ mod tests {
         let vals = vec![1.0f32, 2.0, 3.0];
         assert_eq!(run_topk(vals.clone(), 3).0, vec![0, 1, 2]);
         assert_eq!(run_topk(vals, 0).0, Vec::<usize>::new());
+    }
+
+    #[test]
+    fn streamed_confirmations_are_a_permutation_of_the_final_set() {
+        let vals = vec![0.1f32, 5.0, -3.0, 2.5, 2.4, 7.7, 0.0, -0.5, 9.1, 1.2];
+        let n = vals.len();
+        let k = 4;
+        let x = TensorR::from_f32(&TensorF::from_vec(vals.clone(), &[n]));
+        let ((order, via_chan), (order1, _)) = run_pair(
+            91,
+            {
+                let x = x.clone();
+                move |ctx| {
+                    let sh = share_input(ctx, &x);
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    let mut sink = ChannelSink { order: Vec::new(), tx: Some(tx) };
+                    let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+                    drop(sink.tx.take());
+                    let streamed: Vec<usize> = rx.try_iter().collect();
+                    (sink.order, streamed)
+                }
+            },
+            move |ctx| {
+                let sh = recv_share(ctx, &[n]);
+                let mut sink = ChannelSink::collector();
+                let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+                (sink.order, Vec::<usize>::new())
+            },
+        );
+        // channel carries exactly the confirmation order; parties agree
+        assert_eq!(order, via_chan);
+        assert_eq!(order, order1, "confirmation order must be symmetric");
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, brute_topk(&vals, k), "stream must be a permutation");
     }
 }

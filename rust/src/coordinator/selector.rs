@@ -6,47 +6,91 @@
 //! Indices are public (paper: "the data indices are in the clear"); the
 //! entropy values stay secret-shared end-to-end.
 //!
-//! Execution comes in two shapes that produce BYTE-IDENTICAL selections:
+//! Execution comes in three shapes that produce BYTE-IDENTICAL selections
+//! (same survivors, same opened scores, same entropy-share bytes):
 //!
-//!  * serial — one party pair walks the batches in order;
-//!  * pipelined (`SelectionOptions::lanes` > 1) — candidate batches fan
-//!    out over concurrent engine lanes sharing one dealer hub, then a
-//!    final pair runs QuickSelect on the gathered entropy shares.
+//!  * serial — one party pair walks the batches in order (the reference
+//!    oracle the equivalence suite judges everything against);
+//!  * pipelined (`SelectionOptions::lanes` > 1) — ONE broadcast session
+//!    setup ([`PhaseSession`]: weight sharing + embedding release + a
+//!    batched W−B delta pre-open) is cloned into concurrent engine lanes,
+//!    so setup traffic is paid once instead of per lane; a final pair
+//!    runs QuickSelect on the gathered entropy shares;
+//!  * overlapped (`SelectionOptions::overlap`) — phase i+1's session
+//!    setup runs on a background thread WHILE phase i's tail batches
+//!    drain, and phase i's QuickSelect streams confirmed survivors
+//!    ([`SurvivorSink`]) into the next phase's token prefetch.  The
+//!    barrier between phases collapses to the true data dependency:
+//!    phase i+1's first batch needs phase i's survivor set, nothing else.
 //!
-//! Identity holds because every batch derives its randomness streams from
-//! `(dealer_seed, batch index)` via `PartyCtx::reseed_for`, so a lane
-//! draws exactly the masks/triples the serial loop would have drawn — the
-//! probabilistic truncations (the only data-dependent noise) match bit
-//! for bit, and QuickSelect is an exact top-k.  What changes is measured
-//! wall-clock (`CostMeter::wall_s`): lanes overlap one batch's compute
-//! with another's communication on real OS threads.
+//! Identity holds because every execution unit derives its randomness
+//! streams from a `(phase, unit)` tag via `PartyCtx::reseed_for`
+//! ([`unit_tag`] / [`qs_tag`] / [`setup_tag`]): a lane draws exactly the
+//! masks/triples the serial loop would have drawn for that unit, the
+//! pre-opened weight deltas consume no stream randomness, and QuickSelect
+//! is an exact top-k.  What changes is measured wall-clock
+//! (`CostMeter::wall_s`) — and, newly attributed, how much of each
+//! phase's setup wall hides behind the previous phase's drain.
 
 use std::ops::Range;
 use std::path::Path;
+use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::thread;
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use crate::data::Dataset;
 use crate::fixed;
 use crate::models::{embed_clear, ApproxToggles, ModelConfig, ModelMpc, WeightFile};
-use crate::mpc::engine::{run_pair_metered, run_pair_pipelined, PartyFn};
+use crate::mpc::dealer::Hub;
+use crate::mpc::engine::{
+    run_pair_metered, run_pair_metered_hub, run_pair_pipelined_hub, PartyFn,
+};
 use crate::mpc::net::{CostMeter, NetConfig};
 use crate::mpc::proto::{recv_share, share_input, PartyCtx, Shared};
 use crate::tensor::{TensorF, TensorR};
 
 use super::iosched::{self, SchedPolicy};
 use super::phase::PhaseSchedule;
-use super::quickselect::{top_k_indices, SelectStats};
+use super::quickselect::{top_k_indices, top_k_streamed, ChannelSink, SelectStats};
 
-/// Stream tag for the final QuickSelect stage (disjoint from batch tags).
-const QS_TAG: u64 = u64::MAX;
+// ---------------------------------------------------------------------------
+// Randomness stream tags
+// ---------------------------------------------------------------------------
 
-/// Stream tag for candidate batch `b` — the canonical randomness position
-/// both the serial loop and any pipeline lane use for that batch.
-fn batch_tag(b: usize) -> u64 {
-    0x00b5_e000_0000_0000 | (b as u64 + 1)
+/// Mix a (kind, phase, unit) coordinate into one 64-bit stream tag.
+fn mix_tag(kind: u64, phase: u64, unit: u64) -> u64 {
+    let mut s = kind
+        ^ phase.wrapping_mul(0xA24B_AED4_963E_E407)
+        ^ unit.wrapping_mul(0x9FB2_1C65_1E98_DF25);
+    crate::util::rng::splitmix64(&mut s)
 }
+
+/// Stream tag for candidate batch `batch` of phase `phase` — the
+/// canonical randomness position every runtime (serial loop, pipeline
+/// lane, overlapped drain) uses for that batch.  Namespacing by BOTH
+/// coordinates keeps phases' streams disjoint and makes the schedule
+/// independent of drain order (tested in mpc::dealer).
+pub fn unit_tag(phase: usize, batch: usize) -> u64 {
+    mix_tag(0x00b5_e000, phase as u64, batch as u64)
+}
+
+/// Stream tag for phase `phase`'s QuickSelect stage.
+pub fn qs_tag(phase: usize) -> u64 {
+    mix_tag(0x0045_5e7e, phase as u64, u64::MAX)
+}
+
+/// Stream tag for phase `phase`'s session setup (weight sharing,
+/// embedding release, delta pre-open).
+pub fn setup_tag(phase: usize) -> u64 {
+    mix_tag(0x5e70_0a11, phase as u64, u64::MAX - 1)
+}
+
+// ---------------------------------------------------------------------------
+// Options / outcomes
+// ---------------------------------------------------------------------------
 
 /// Options for a selection session.
 #[derive(Clone, Copy, Debug)]
@@ -64,6 +108,15 @@ pub struct SelectionOptions {
     /// Concurrent MPC lanes for candidate-batch evaluation. 1 = serial;
     /// >1 pipelines batches over engine lanes with identical output.
     pub lanes: usize,
+    /// Overlap phase i+1's session setup with phase i's drain
+    /// (`multi_phase_select` dispatches to the streamed driver).  Output
+    /// is byte-identical to the barrier schedule; only wall-clock moves.
+    pub overlap: bool,
+    /// TEST ONLY: keep each party's raw entropy shares in the phase
+    /// outcome so equivalence suites can assert byte-identity across
+    /// runtimes.  No extra protocol traffic — the shares are copied
+    /// before QuickSelect consumes them.
+    pub capture_shares: bool,
 }
 
 impl Default for SelectionOptions {
@@ -76,6 +129,8 @@ impl Default for SelectionOptions {
             approx: ApproxToggles::OURS,
             reveal_entropies: false,
             lanes: 1,
+            overlap: false,
+            capture_shares: false,
         }
     }
 }
@@ -87,6 +142,8 @@ pub struct PhaseOutcome {
     pub survivors: Vec<usize>,
     /// opened entropies (only when `reveal_entropies`; validation only)
     pub entropies: Option<Vec<f32>>,
+    /// raw entropy shares (P0, P1) — only when `capture_shares`
+    pub ent_shares: Option<(Vec<i64>, Vec<i64>)>,
     /// simulated delay under the session's scheduling policy (seconds)
     pub sim_delay: f64,
     /// simulated delay if run fully serially (no batching/overlap)
@@ -94,6 +151,17 @@ pub struct PhaseOutcome {
     pub meter_p0: CostMeter,
     pub meter_p1: CostMeter,
     pub stats: SelectStats,
+    /// one-time session-setup traffic, both parties' bytes — broadcast
+    /// once per phase regardless of lane count
+    pub setup_bytes: u64,
+    /// measured wall-clock of the session setup (weight sharing +
+    /// embedding release + delta pre-open)
+    pub setup_wall_s: f64,
+    /// measured wall-clock of the drain (batch lanes + QuickSelect)
+    pub drain_wall_s: f64,
+    /// true when this phase's setup ran hidden behind the previous
+    /// phase's drain (so it does not count toward `wall_s`)
+    pub setup_overlapped: bool,
 }
 
 impl PhaseOutcome {
@@ -127,15 +195,29 @@ impl SelectionOutcome {
     pub fn total_rounds(&self) -> u64 {
         self.phases.iter().map(|p| p.meter_p0.rounds).sum()
     }
+    /// One-time session-setup traffic across phases (both parties).
+    pub fn total_setup_bytes(&self) -> u64 {
+        self.phases.iter().map(|p| p.setup_bytes).sum()
+    }
+    /// Setup wall-clock that ran hidden behind a previous phase's drain —
+    /// the measured win of the overlapped schedule.
+    pub fn overlapped_setup_wall_s(&self) -> f64 {
+        self.phases
+            .iter()
+            .filter(|p| p.setup_overlapped)
+            .map(|p| p.setup_wall_s)
+            .sum()
+    }
 }
 
-/// Everything one model-owner lane needs to evaluate a batch range.
-struct P0Lane {
-    wf: Arc<WeightFile>,
-    cfg: ModelConfig,
-    approx: ApproxToggles,
-    emb_tok: Arc<Vec<i64>>,
-    emb_pos: Arc<Vec<i64>>,
+// ---------------------------------------------------------------------------
+// Batch evaluation against a prepared model
+// ---------------------------------------------------------------------------
+
+/// The batch-grid coordinates one lane walks (shared by both parties).
+#[derive(Clone)]
+struct LaneCfg {
+    phase: usize,
     n: usize,
     batch: usize,
     seq_len: usize,
@@ -143,216 +225,216 @@ struct P0Lane {
     range: Range<usize>,
 }
 
-/// Everything one data-owner lane needs to evaluate a batch range.
-struct P1Lane {
-    cand_tokens: Arc<Vec<u32>>,
-    cfg: ModelConfig,
-    approx: ApproxToggles,
-    n: usize,
-    batch: usize,
-    seq_len: usize,
-    dm: usize,
-    range: Range<usize>,
-}
-
-/// Model-owner side: session setup + entropy shares for a batch range.
-fn p0_eval_batches(ctx: &mut PartyCtx, lane: &P0Lane) -> Result<Vec<i64>> {
-    // release the embedding tables to the data owner (MPCFormer
-    // convention, DESIGN.md §3) — bytes metered
-    ctx.chan.send_only(lane.emb_tok.as_ref().clone());
-    ctx.chan.send_only(lane.emb_pos.as_ref().clone());
-    let mut model = ModelMpc::setup(ctx, lane.cfg, lane.approx, Some(&lane.wf))?;
+/// Model-owner side: entropy shares for a batch range, against an
+/// already-set-up model (weights shared, deltas pre-opened or lazily
+/// opened — bit-identical either way).
+fn p0_eval_batches(ctx: &mut PartyCtx, model: &mut ModelMpc, lane: &LaneCfg) -> Vec<i64> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
-        ctx.reseed_for(batch_tag(b));
+        ctx.reseed_for(unit_tag(lane.phase, b));
         let rows = lane.batch * lane.seq_len;
         let x = recv_share(ctx, &[rows, lane.dm]);
         let (_logits, e) = model.forward(ctx, &x, lane.batch);
         let take = (lane.n - b * lane.batch).min(lane.batch);
         ent.extend_from_slice(&e.0.data[..take]);
     }
-    Ok(ent)
+    ent
 }
 
 /// Data-owner side: embed + share each batch, collect entropy shares.
-fn p1_eval_batches(ctx: &mut PartyCtx, lane: &P1Lane) -> Result<Vec<i64>> {
-    let tok_tbl = ctx.chan.recv_only();
-    let pos_tbl = ctx.chan.recv_only();
-    let vocab = tok_tbl.len() / lane.dm;
-    let emb_tok = TensorF::from_vec(fixed::decode_vec(&tok_tbl), &[vocab, lane.dm]);
-    let emb_pos =
-        TensorF::from_vec(fixed::decode_vec(&pos_tbl), &[lane.seq_len, lane.dm]);
-    let mut model = ModelMpc::setup(ctx, lane.cfg, lane.approx, None)?;
+fn p1_eval_batches(
+    ctx: &mut PartyCtx,
+    model: &mut ModelMpc,
+    cand_tokens: &[u32],
+    emb_tok: &TensorF,
+    emb_pos: &TensorF,
+    lane: &LaneCfg,
+) -> Vec<i64> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
-        ctx.reseed_for(batch_tag(b));
+        ctx.reseed_for(unit_tag(lane.phase, b));
         // assemble a batch (pad the tail by repeating example 0)
         let mut toks = Vec::with_capacity(lane.batch * lane.seq_len);
         for j in 0..lane.batch {
             let i = b * lane.batch + j;
             let i = if i < lane.n { i } else { 0 };
             toks.extend_from_slice(
-                &lane.cand_tokens[i * lane.seq_len..(i + 1) * lane.seq_len],
+                &cand_tokens[i * lane.seq_len..(i + 1) * lane.seq_len],
             );
         }
-        let acts = embed_clear(&toks, lane.batch, &emb_tok, &emb_pos);
+        let acts = embed_clear(&toks, lane.batch, emb_tok, emb_pos);
         let x = share_input(ctx, &TensorR::from_f32(&acts));
         let (_logits, e) = model.forward(ctx, &x, lane.batch);
         let take = (lane.n - b * lane.batch).min(lane.batch);
         ent.extend_from_slice(&e.0.data[..take]);
     }
-    Ok(ent)
+    ent
 }
 
-/// Run ONE private selection phase over MPC.
-///
-/// `weights` lives with the model owner; `dataset` with the data owner.
-/// Returns the indices (into `candidates`' index space, i.e. dataset
-/// indices) of the `keep` highest-entropy candidates.  Dispatches to the
-/// serial or pipelined runtime on `opts.lanes`; both produce identical
-/// selections.
-pub fn run_phase_mpc(
-    weights: &WeightFile,
-    dataset: &Dataset,
-    candidates: &[usize],
-    keep: usize,
-    opts: &SelectionOptions,
-) -> Result<PhaseOutcome> {
-    let cfg = weights.config()?;
-    assert_eq!(cfg.seq_len, dataset.seq_len, "model/dataset seq_len");
-    let n = candidates.len();
-    assert!(keep <= n);
-    let n_batches = n.div_ceil(opts.batch);
-    let lanes = opts.lanes.clamp(1, n_batches.max(1));
+// ---------------------------------------------------------------------------
+// Broadcast session setup
+// ---------------------------------------------------------------------------
 
-    // ------- model-owner side state -------
-    let wf = Arc::new(weights.clone());
-    let emb_tok = Arc::new(fixed::encode_vec(&wf.get("emb.tok")?.data));
-    let emb_pos = Arc::new(fixed::encode_vec(&wf.get("emb.pos")?.data));
-    // ------- data-owner side state -------
-    let cand_tokens: Arc<Vec<u32>> = Arc::new({
-        let mut t = Vec::with_capacity(n * dataset.seq_len);
-        for &i in candidates {
-            t.extend_from_slice(dataset.example(i));
-        }
-        t
-    });
-    let seq_len = dataset.seq_len;
+/// One phase's broadcast session: both parties' model halves (weights
+/// shared once, W−B deltas pre-opened in one batched round) plus the
+/// released embedding tables — built ONCE per phase and cloned into every
+/// pipeline lane, so session-setup traffic no longer scales with the lane
+/// count.  In the overlapped driver this is also the unit that runs on a
+/// background thread while the previous phase drains.
+pub struct PhaseSession {
+    cfg: ModelConfig,
+    phase: usize,
+    model_p0: ModelMpc,
+    model_p1: ModelMpc,
+    emb_tok: Arc<TensorF>,
+    emb_pos: Arc<TensorF>,
+    /// preprocessing hub shared by this phase's setup / lanes / QuickSelect
+    hub: Arc<Hub>,
+    /// the setup session's own traffic meters
+    pub meter_p0: CostMeter,
+    pub meter_p1: CostMeter,
+    /// measured wall-clock of the setup session
+    pub wall_s: f64,
+}
+
+impl PhaseSession {
+    /// Both parties' setup bytes — the per-phase broadcast cost.
+    pub fn setup_bytes(&self) -> u64 {
+        self.meter_p0.bytes + self.meter_p1.bytes
+    }
+}
+
+/// Model-owner half of a session setup: release the embedding tables and
+/// stream the weight shares.  Shared verbatim by the serial oracle and
+/// the broadcast session so the two paths cannot drift.
+fn p0_send_session(
+    ctx: &mut PartyCtx,
+    wf: &WeightFile,
+    cfg: ModelConfig,
+    approx: ApproxToggles,
+    emb_tok_enc: Vec<i64>,
+    emb_pos_enc: Vec<i64>,
+) -> Result<ModelMpc> {
+    ctx.chan.send_only(emb_tok_enc);
+    ctx.chan.send_only(emb_pos_enc);
+    ModelMpc::setup(ctx, cfg, approx, Some(wf))
+}
+
+/// Data-owner half of a session setup: receive + decode the released
+/// embedding tables, then build the model from received weight shares.
+fn p1_recv_session(
+    ctx: &mut PartyCtx,
+    cfg: ModelConfig,
+    approx: ApproxToggles,
+) -> Result<(ModelMpc, TensorF, TensorF)> {
+    let tok_tbl = ctx.chan.recv_only();
+    let pos_tbl = ctx.chan.recv_only();
     let dm = cfg.d_model;
+    let vocab = tok_tbl.len() / dm;
+    let emb_tok = TensorF::from_vec(fixed::decode_vec(&tok_tbl), &[vocab, dm]);
+    let emb_pos = TensorF::from_vec(fixed::decode_vec(&pos_tbl), &[cfg.seq_len, dm]);
+    let model = ModelMpc::setup(ctx, cfg, approx, None)?;
+    Ok((model, emb_tok, emb_pos))
+}
 
-    let p0_lane = |range: Range<usize>| P0Lane {
-        wf: wf.clone(),
+/// Run the one-time session setup for `phase`: embedding release, weight
+/// sharing and the batched delta pre-open, on a dedicated party pair with
+/// its randomness pinned to [`setup_tag`] (so the setup is identical no
+/// matter when — or overlapped with what — it executes).
+pub fn setup_phase_session(
+    weights: &WeightFile,
+    approx: ApproxToggles,
+    dealer_seed: u64,
+    phase: usize,
+) -> Result<PhaseSession> {
+    let cfg = weights.config()?;
+    let wf = Arc::new(weights.clone());
+    let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
+    let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
+    let hub = Hub::new();
+    let t0 = Instant::now();
+    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_hub(
+        hub.clone(),
+        dealer_seed,
+        {
+            let wf = wf.clone();
+            move |ctx: &mut PartyCtx| -> Result<ModelMpc> {
+                ctx.op("session_setup", |ctx| {
+                    ctx.reseed_for(setup_tag(phase));
+                    let mut model = p0_send_session(
+                        ctx,
+                        &wf,
+                        cfg,
+                        approx,
+                        emb_tok_enc,
+                        emb_pos_enc,
+                    )?;
+                    model.preopen_weight_deltas(ctx);
+                    Ok(model)
+                })
+            }
+        },
+        move |ctx: &mut PartyCtx| -> Result<(ModelMpc, TensorF, TensorF)> {
+            ctx.op("session_setup", |ctx| {
+                ctx.reseed_for(setup_tag(phase));
+                let (mut model, emb_tok, emb_pos) = p1_recv_session(ctx, cfg, approx)?;
+                model.preopen_weight_deltas(ctx);
+                Ok((model, emb_tok, emb_pos))
+            })
+        },
+    );
+    let model_p0 = r0?;
+    let (model_p1, emb_tok, emb_pos) = r1?;
+    Ok(PhaseSession {
         cfg,
-        approx: opts.approx,
-        emb_tok: emb_tok.clone(),
-        emb_pos: emb_pos.clone(),
-        n,
-        batch: opts.batch,
-        seq_len,
-        dm,
-        range,
-    };
-    let p1_lane = |range: Range<usize>| P1Lane {
-        cand_tokens: cand_tokens.clone(),
-        cfg,
-        approx: opts.approx,
-        n,
-        batch: opts.batch,
-        seq_len,
-        dm,
-        range,
-    };
-
-    let outcome = if lanes <= 1 {
-        run_phase_serial(
-            p0_lane(0..n_batches),
-            p1_lane(0..n_batches),
-            n,
-            keep,
-            opts,
-        )?
-    } else {
-        run_phase_pipelined(&p0_lane, &p1_lane, n, n_batches, lanes, keep, opts)?
-    };
-
-    let (local_survivors, stats, entropies, meter_p0, meter_p1) = outcome;
-    let survivors: Vec<usize> =
-        local_survivors.iter().map(|&j| candidates[j]).collect();
-    let sim_delay = iosched::delay(&meter_p0, &meter_p1, &opts.net, opts.policy);
-    let serial_delay =
-        iosched::delay(&meter_p0, &meter_p1, &opts.net, SchedPolicy::Sequential);
-    Ok(PhaseOutcome {
-        survivors,
-        entropies,
-        sim_delay,
-        serial_delay,
+        phase,
+        model_p0,
+        model_p1,
+        emb_tok: Arc::new(emb_tok),
+        emb_pos: Arc::new(emb_pos),
+        hub,
         meter_p0,
         meter_p1,
-        stats,
+        wall_s: t0.elapsed().as_secs_f64(),
     })
 }
 
-type PhaseRun =
-    (Vec<usize>, SelectStats, Option<Vec<f32>>, CostMeter, CostMeter);
+// ---------------------------------------------------------------------------
+// Phase drain (lanes + QuickSelect) against a prepared session
+// ---------------------------------------------------------------------------
 
-/// One party pair walks every batch, then QuickSelect — the serial shape.
-fn run_phase_serial(
-    p0: P0Lane,
-    p1: P1Lane,
-    n: usize,
-    keep: usize,
-    opts: &SelectionOptions,
-) -> Result<PhaseRun> {
-    let reveal = opts.reveal_entropies;
-    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered(
-        opts.dealer_seed,
-        move |ctx: &mut PartyCtx| -> Result<(Vec<usize>, SelectStats, Option<Vec<f32>>)> {
-            let ent_shares = p0_eval_batches(ctx, &p0)?;
-            ctx.reseed_for(QS_TAG);
-            let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
-            let revealed = if reveal {
-                Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
-            } else {
-                None
-            };
-            let (idx, stats) = top_k_indices(ctx, &ent, keep);
-            Ok((idx, stats, revealed))
-        },
-        move |ctx: &mut PartyCtx| -> Result<Vec<usize>> {
-            let ent_shares = p1_eval_batches(ctx, &p1)?;
-            ctx.reseed_for(QS_TAG);
-            let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
-            if reveal {
-                let _ = crate::mpc::proto::open(ctx, &ent);
-            }
-            Ok(top_k_indices(ctx, &ent, keep).0)
-        },
-    );
-    let _ = r1?;
-    let (idx, stats, revealed) = r0?;
-    Ok((idx, stats, revealed, meter_p0, meter_p1))
+/// What a finished drain hands back to the outcome assembler.
+struct DrainOut {
+    local: Vec<usize>,
+    stats: SelectStats,
+    revealed: Option<Vec<f32>>,
+    shares: Option<(Vec<i64>, Vec<i64>)>,
+    meter_p0: CostMeter,
+    meter_p1: CostMeter,
+    wall_s: f64,
 }
 
-/// Candidate batches fan out over concurrent engine lanes (shared dealer
-/// hub), then one fresh pair runs QuickSelect on the gathered shares.
-///
-/// Tradeoff: every lane runs its own session setup (embedding-table
-/// release + weight sharing), so setup bytes scale with the lane count —
-/// metered honestly in the absorbed meters.  Batches dominate setup for
-/// any real candidate pool; sharing one setup across lanes needs a
-/// broadcast channel and is on the ROADMAP.
-fn run_phase_pipelined(
-    p0_lane: &dyn Fn(Range<usize>) -> P0Lane,
-    p1_lane: &dyn Fn(Range<usize>) -> P1Lane,
+/// Evaluate every candidate batch over `lanes` concurrent engine lanes
+/// (each holding a clone of the session's models) and run QuickSelect on
+/// the gathered entropy shares.  When `stream` is given, P0's QuickSelect
+/// forwards each survivor the moment it is confirmed — the overlapped
+/// driver's prefetch hook.
+fn run_phase_drain(
+    session: &PhaseSession,
+    cand_tokens: Arc<Vec<u32>>,
     n: usize,
-    n_batches: usize,
-    lanes: usize,
     keep: usize,
     opts: &SelectionOptions,
-) -> Result<PhaseRun> {
-    let t0 = std::time::Instant::now();
+    stream: Option<Sender<usize>>,
+) -> Result<DrainOut> {
+    let phase = session.phase;
+    let n_batches = n.div_ceil(opts.batch);
+    let lanes = opts.lanes.clamp(1, n_batches.max(1));
     let per = n_batches.div_ceil(lanes);
-    let mut lane_fns: Vec<(PartyFn<Result<Vec<i64>>>, PartyFn<Result<Vec<i64>>>)> =
+    let emb_tok = session.emb_tok.clone(); // Arc bump, not a table copy
+    let emb_pos = session.emb_pos.clone();
+    let t0 = Instant::now();
+    let mut lane_fns: Vec<(PartyFn<Vec<i64>>, PartyFn<Vec<i64>>)> =
         Vec::with_capacity(lanes);
     for lane in 0..lanes {
         let lo = lane * per;
@@ -360,46 +442,68 @@ fn run_phase_pipelined(
         if lo >= hi {
             break;
         }
-        let l0 = p0_lane(lo..hi);
-        let l1 = p1_lane(lo..hi);
-        let f0: PartyFn<Result<Vec<i64>>> =
-            Box::new(move |ctx: &mut PartyCtx| p0_eval_batches(ctx, &l0));
-        let f1: PartyFn<Result<Vec<i64>>> =
-            Box::new(move |ctx: &mut PartyCtx| p1_eval_batches(ctx, &l1));
+        let lc = LaneCfg {
+            phase,
+            n,
+            batch: opts.batch,
+            seq_len: session.cfg.seq_len,
+            dm: session.cfg.d_model,
+            range: lo..hi,
+        };
+        let lc1 = lc.clone();
+        let mut m0 = session.model_p0.clone();
+        let mut m1 = session.model_p1.clone();
+        let (ct, et, ep) = (cand_tokens.clone(), emb_tok.clone(), emb_pos.clone());
+        let f0: PartyFn<Vec<i64>> =
+            Box::new(move |ctx: &mut PartyCtx| p0_eval_batches(ctx, &mut m0, &lc));
+        let f1: PartyFn<Vec<i64>> = Box::new(move |ctx: &mut PartyCtx| {
+            p1_eval_batches(ctx, &mut m1, &ct, &et, &ep, &lc1)
+        });
         lane_fns.push((f0, f1));
     }
-    let lane_out = run_pair_pipelined(opts.dealer_seed, lane_fns);
+    let lane_out =
+        run_pair_pipelined_hub(session.hub.clone(), opts.dealer_seed, lane_fns);
 
     let mut meter_p0 = CostMeter::default();
     let mut meter_p1 = CostMeter::default();
     let mut ent0: Vec<i64> = Vec::with_capacity(n);
     let mut ent1: Vec<i64> = Vec::with_capacity(n);
-    for (lane, ((r0, m0), (r1, m1))) in lane_out.into_iter().enumerate() {
+    for ((r0, m0), (r1, m1)) in lane_out {
         meter_p0.absorb(&m0);
         meter_p1.absorb(&m1);
-        ent0.extend(r0.with_context(|| format!("pipeline lane {lane} (P0)"))?);
-        ent1.extend(r1.with_context(|| format!("pipeline lane {lane} (P1)"))?);
+        ent0.extend(r0);
+        ent1.extend(r1);
     }
     debug_assert_eq!(ent0.len(), n);
     debug_assert_eq!(ent1.len(), n);
+    let shares = if opts.capture_shares {
+        Some((ent0.clone(), ent1.clone()))
+    } else {
+        None
+    };
 
-    // final stage: QuickSelect over the gathered shares, fresh pair
+    // final stage: QuickSelect over the gathered shares, fresh pair on the
+    // same hub; P0 streams confirmed survivors into `stream`
     let reveal = opts.reveal_entropies;
-    let ((qs0, qm0), (qs1, qm1)) = run_pair_metered(
+    let ((qs0, qm0), (qs1, qm1)) = run_pair_metered_hub(
+        session.hub.clone(),
         opts.dealer_seed,
         move |ctx: &mut PartyCtx| {
-            ctx.reseed_for(QS_TAG);
+            ctx.reseed_for(qs_tag(phase));
             let ent = Shared(TensorR::from_vec(ent0, &[n]));
             let revealed = if reveal {
                 Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
             } else {
                 None
             };
-            let (idx, stats) = top_k_indices(ctx, &ent, keep);
+            let mut sink = ChannelSink { order: Vec::with_capacity(keep), tx: stream };
+            let stats = top_k_streamed(ctx, &ent, keep, &mut sink);
+            let mut idx = sink.order;
+            idx.sort_unstable();
             (idx, stats, revealed)
         },
         move |ctx: &mut PartyCtx| {
-            ctx.reseed_for(QS_TAG);
+            ctx.reseed_for(qs_tag(phase));
             let ent = Shared(TensorR::from_vec(ent1, &[n]));
             if reveal {
                 let _ = crate::mpc::proto::open(ctx, &ent);
@@ -411,18 +515,266 @@ fn run_phase_pipelined(
     assert_eq!(idx, qs1, "parties must agree on the selection");
     meter_p0.absorb(&qm0);
     meter_p1.absorb(&qm1);
-    // the lanes ran concurrently: measured wall is this whole section
-    let wall = t0.elapsed().as_secs_f64();
+    Ok(DrainOut {
+        local: idx,
+        stats,
+        revealed,
+        shares,
+        meter_p0,
+        meter_p1,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// One phase, barrier shapes
+// ---------------------------------------------------------------------------
+
+/// Run ONE private selection phase over MPC (phase index 0 — see
+/// [`run_phase_mpc_at`] for a phase inside a multi-phase schedule).
+pub fn run_phase_mpc(
+    weights: &WeightFile,
+    dataset: &Dataset,
+    candidates: &[usize],
+    keep: usize,
+    opts: &SelectionOptions,
+) -> Result<PhaseOutcome> {
+    run_phase_mpc_at(weights, dataset, candidates, keep, opts, 0)
+}
+
+/// Run selection phase `phase` over MPC.
+///
+/// `weights` lives with the model owner; `dataset` with the data owner.
+/// Returns the indices (into `candidates`' index space, i.e. dataset
+/// indices) of the `keep` highest-entropy candidates.  Dispatches to the
+/// serial runtime (`lanes <= 1`, setup inline in the session — the
+/// reference oracle) or the broadcast-session pipelined runtime; both
+/// produce byte-identical selections.
+pub fn run_phase_mpc_at(
+    weights: &WeightFile,
+    dataset: &Dataset,
+    candidates: &[usize],
+    keep: usize,
+    opts: &SelectionOptions,
+    phase: usize,
+) -> Result<PhaseOutcome> {
+    let cfg = weights.config()?;
+    assert_eq!(cfg.seq_len, dataset.seq_len, "model/dataset seq_len");
+    let n = candidates.len();
+    assert!(keep <= n);
+    let n_batches = n.div_ceil(opts.batch);
+    let lanes = opts.lanes.clamp(1, n_batches.max(1));
+    let cand_tokens: Arc<Vec<u32>> = Arc::new(gather_tokens(dataset, candidates));
+
+    let body = if lanes <= 1 {
+        run_phase_serial(weights, cfg, cand_tokens, n, keep, opts, phase)?
+    } else {
+        let session =
+            setup_phase_session(weights, opts.approx, opts.dealer_seed, phase)?;
+        let drain = run_phase_drain(&session, cand_tokens, n, keep, opts, None)?;
+        assemble_session_body(session, drain, false, 0.0)
+    };
+    Ok(finish_outcome(body, candidates, opts))
+}
+
+/// A finished phase body, ready for survivor mapping + delay simulation.
+struct PhaseBody {
+    local: Vec<usize>,
+    stats: SelectStats,
+    revealed: Option<Vec<f32>>,
+    shares: Option<(Vec<i64>, Vec<i64>)>,
+    meter_p0: CostMeter,
+    meter_p1: CostMeter,
+    setup_bytes: u64,
+    setup_wall_s: f64,
+    drain_wall_s: f64,
+    setup_overlapped: bool,
+}
+
+/// Fold a session + its drain into a phase body.  `stall_s` is time spent
+/// waiting for an overlapped setup that outlived the previous drain — it
+/// counts toward the phase's critical path.
+fn assemble_session_body(
+    session: PhaseSession,
+    drain: DrainOut,
+    setup_overlapped: bool,
+    stall_s: f64,
+) -> PhaseBody {
+    let mut meter_p0 = drain.meter_p0;
+    let mut meter_p1 = drain.meter_p1;
+    meter_p0.absorb(&session.meter_p0);
+    meter_p1.absorb(&session.meter_p1);
+    // wall attribution: an overlapped setup is off the critical path —
+    // only the stall (if it outlived the previous drain) is paid
+    let wall = if setup_overlapped {
+        stall_s + drain.wall_s
+    } else {
+        session.wall_s + drain.wall_s
+    };
     meter_p0.wall_s = wall;
     meter_p1.wall_s = wall;
-    Ok((idx, stats, revealed, meter_p0, meter_p1))
+    PhaseBody {
+        local: drain.local,
+        stats: drain.stats,
+        revealed: drain.revealed,
+        shares: drain.shares,
+        meter_p0,
+        meter_p1,
+        setup_bytes: session.setup_bytes(),
+        setup_wall_s: session.wall_s,
+        drain_wall_s: drain.wall_s,
+        setup_overlapped,
+    }
 }
+
+fn finish_outcome(
+    body: PhaseBody,
+    candidates: &[usize],
+    opts: &SelectionOptions,
+) -> PhaseOutcome {
+    let survivors: Vec<usize> =
+        body.local.iter().map(|&j| candidates[j]).collect();
+    let sim_delay =
+        iosched::delay(&body.meter_p0, &body.meter_p1, &opts.net, opts.policy);
+    let serial_delay = iosched::delay(
+        &body.meter_p0,
+        &body.meter_p1,
+        &opts.net,
+        SchedPolicy::Sequential,
+    );
+    PhaseOutcome {
+        survivors,
+        entropies: body.revealed,
+        ent_shares: body.shares,
+        sim_delay,
+        serial_delay,
+        meter_p0: body.meter_p0,
+        meter_p1: body.meter_p1,
+        stats: body.stats,
+        setup_bytes: body.setup_bytes,
+        setup_wall_s: body.setup_wall_s,
+        drain_wall_s: body.drain_wall_s,
+        setup_overlapped: body.setup_overlapped,
+    }
+}
+
+/// One party pair walks setup + every batch + QuickSelect in a single
+/// session — the serial reference oracle.  Setup here is inline (no delta
+/// pre-open): the first use of each weight opens W−B in-band, which is
+/// value-identical to the broadcast pre-open (proto.rs test) and keeps
+/// this path structurally independent from the session runtime it judges.
+fn run_phase_serial(
+    weights: &WeightFile,
+    cfg: ModelConfig,
+    cand_tokens: Arc<Vec<u32>>,
+    n: usize,
+    keep: usize,
+    opts: &SelectionOptions,
+    phase: usize,
+) -> Result<PhaseBody> {
+    let wf = Arc::new(weights.clone());
+    let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
+    let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
+    let n_batches = n.div_ceil(opts.batch);
+    let lane = LaneCfg {
+        phase,
+        n,
+        batch: opts.batch,
+        seq_len: cfg.seq_len,
+        dm: cfg.d_model,
+        range: 0..n_batches,
+    };
+    let lane1 = lane.clone();
+    let approx = opts.approx;
+    let reveal = opts.reveal_entropies;
+    let capture = opts.capture_shares;
+    type P0Out = (Vec<usize>, SelectStats, Option<Vec<f32>>, Option<Vec<i64>>, u64, f64);
+    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered(
+        opts.dealer_seed,
+        move |ctx: &mut PartyCtx| -> Result<P0Out> {
+            let t0 = Instant::now();
+            let bytes0 = ctx.chan.meter.bytes;
+            let mut model = ctx.op("session_setup", |ctx| {
+                ctx.reseed_for(setup_tag(phase));
+                p0_send_session(ctx, &wf, cfg, approx, emb_tok_enc, emb_pos_enc)
+            })?;
+            let setup_bytes = ctx.chan.meter.bytes - bytes0;
+            let setup_wall = t0.elapsed().as_secs_f64();
+            let ent_shares = p0_eval_batches(ctx, &mut model, &lane);
+            ctx.reseed_for(qs_tag(phase));
+            let cap = if capture { Some(ent_shares.clone()) } else { None };
+            let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
+            let revealed = if reveal {
+                Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
+            } else {
+                None
+            };
+            let (idx, stats) = top_k_indices(ctx, &ent, keep);
+            Ok((idx, stats, revealed, cap, setup_bytes, setup_wall))
+        },
+        move |ctx: &mut PartyCtx| -> Result<(Vec<usize>, Option<Vec<i64>>)> {
+            let mut model = ctx.op("session_setup", |ctx| {
+                ctx.reseed_for(setup_tag(phase));
+                p1_recv_session(ctx, cfg, approx)
+            })?;
+            let ent_shares = p1_eval_batches(
+                ctx,
+                &mut model.0,
+                &cand_tokens,
+                &model.1,
+                &model.2,
+                &lane1,
+            );
+            ctx.reseed_for(qs_tag(phase));
+            let cap = if capture { Some(ent_shares.clone()) } else { None };
+            let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
+            if reveal {
+                let _ = crate::mpc::proto::open(ctx, &ent);
+            }
+            Ok((top_k_indices(ctx, &ent, keep).0, cap))
+        },
+    );
+    let (idx1, cap1) = r1?;
+    let (idx, stats, revealed, cap0, setup_bytes, setup_wall) = r0?;
+    assert_eq!(idx, idx1, "parties must agree on the selection");
+    let shares = match (cap0, cap1) {
+        (Some(a), Some(b)) => Some((a, b)),
+        _ => None,
+    };
+    let wall = meter_p0.wall_s.max(meter_p1.wall_s);
+    Ok(PhaseBody {
+        local: idx,
+        stats,
+        revealed,
+        shares,
+        meter_p0,
+        meter_p1,
+        setup_bytes,
+        setup_wall_s: setup_wall,
+        drain_wall_s: (wall - setup_wall).max(0.0),
+        setup_overlapped: false,
+    })
+}
+
+fn gather_tokens(dataset: &Dataset, candidates: &[usize]) -> Vec<u32> {
+    let mut t = Vec::with_capacity(candidates.len() * dataset.seq_len);
+    for &i in candidates {
+        t.extend_from_slice(dataset.example(i));
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Multi-phase drivers
+// ---------------------------------------------------------------------------
 
 /// Full multi-phase private selection from weight files on disk.
 ///
 /// `phase_weights[i]` is the phase-i proxy `.sfw`; candidates shrink by
 /// the schedule's selectivities. Returns dataset indices of the final
-/// purchase set.
+/// purchase set.  With `opts.overlap` the streamed driver runs phase
+/// i+1's setup behind phase i's drain (byte-identical output, tested in
+/// tests/multiphase_equiv.rs); otherwise phases run under a hard barrier.
 pub fn multi_phase_select(
     phase_weights: &[&Path],
     schedule: &PhaseSchedule,
@@ -431,14 +783,125 @@ pub fn multi_phase_select(
     opts: &SelectionOptions,
 ) -> Result<SelectionOutcome> {
     assert_eq!(phase_weights.len(), schedule.n_phases());
+    if opts.overlap {
+        return multi_phase_select_overlapped(
+            phase_weights,
+            schedule,
+            dataset,
+            initial_candidates,
+            opts,
+        );
+    }
     let counts = schedule.survivor_counts(initial_candidates.len());
     let mut candidates = initial_candidates;
     let mut phases = Vec::with_capacity(schedule.n_phases());
     for (i, (path, &keep)) in phase_weights.iter().zip(&counts).enumerate() {
         let weights = WeightFile::load(path)
             .with_context(|| format!("phase {i} weights {path:?}"))?;
-        let outcome = run_phase_mpc(&weights, dataset, &candidates, keep, opts)?;
+        let outcome = run_phase_mpc_at(&weights, dataset, &candidates, keep, opts, i)?;
         candidates = outcome.survivors.clone();
+        phases.push(outcome);
+    }
+    Ok(SelectionOutcome { selected: candidates, phases })
+}
+
+/// The streamed multi-phase driver: phase i+1's session setup (weight
+/// sharing + embedding release + delta pre-open) runs on a background
+/// thread WHILE phase i's batch lanes drain and its QuickSelect runs; the
+/// QuickSelect streams each confirmed survivor into a token-prefetch
+/// thread that assembles phase i+1's candidate buffer before the final
+/// index set is even known.  Every randomness stream is pinned to its
+/// `(phase, unit)` tag, so the output — survivors, opened scores, entropy
+/// share bytes — is identical to the barrier driver for any lane count.
+pub fn multi_phase_select_overlapped(
+    phase_weights: &[&Path],
+    schedule: &PhaseSchedule,
+    dataset: &Dataset,
+    initial_candidates: Vec<usize>,
+    opts: &SelectionOptions,
+) -> Result<SelectionOutcome> {
+    assert_eq!(phase_weights.len(), schedule.n_phases());
+    let n_phases = schedule.n_phases();
+    let counts = schedule.survivor_counts(initial_candidates.len());
+    let mut candidates = initial_candidates;
+    let mut cand_tokens: Arc<Vec<u32>> = Arc::new(gather_tokens(dataset, &candidates));
+    let mut phases = Vec::with_capacity(n_phases);
+    let mut prefetch: Option<thread::JoinHandle<Result<PhaseSession>>> = None;
+    for (i, &keep) in counts.iter().enumerate() {
+        // phase 0's setup runs in the foreground; later phases' setups were
+        // prefetched behind the previous drain — the stall (if the setup
+        // outlived the drain) is the only setup time left on the clock
+        let t_wait = Instant::now();
+        let session = match prefetch.take() {
+            Some(h) => h
+                .join()
+                .map_err(|_| anyhow!("phase {i} setup thread panicked"))??,
+            None => {
+                let weights = WeightFile::load(phase_weights[i])
+                    .with_context(|| format!("phase {i} weights {phase_weights:?}"))?;
+                setup_phase_session(&weights, opts.approx, opts.dealer_seed, i)?
+            }
+        };
+        let setup_overlapped = i > 0;
+        let stall_s = if setup_overlapped {
+            t_wait.elapsed().as_secs_f64()
+        } else {
+            0.0
+        };
+        assert_eq!(session.cfg.seq_len, dataset.seq_len, "model/dataset seq_len");
+        // kick off phase i+1's setup NOW — it overlaps this phase's drain
+        if i + 1 < n_phases {
+            let path = phase_weights[i + 1].to_path_buf();
+            let approx = opts.approx;
+            let seed = opts.dealer_seed;
+            let next = i + 1;
+            prefetch = Some(thread::spawn(move || {
+                let weights = WeightFile::load(&path)
+                    .with_context(|| format!("phase {next} weights {path:?}"))?;
+                setup_phase_session(&weights, approx, seed, next)
+            }));
+        }
+        // drain this phase; survivors stream into the next phase's token
+        // prefetch as QuickSelect confirms them
+        let n = candidates.len();
+        let (tx, rx) = std::sync::mpsc::channel::<usize>();
+        let (drain, streamed_rows) = thread::scope(|s| {
+            let cands: &[usize] = &candidates;
+            let ds = dataset;
+            let gather = s.spawn(move || {
+                let mut rows: Vec<(usize, Vec<u32>)> = Vec::with_capacity(keep);
+                while let Ok(j) = rx.recv() {
+                    let di = cands[j];
+                    rows.push((di, ds.example(di).to_vec()));
+                }
+                rows
+            });
+            let drain =
+                run_phase_drain(&session, cand_tokens.clone(), n, keep, opts, Some(tx));
+            let rows = gather.join().expect("survivor gather thread panicked");
+            (drain, rows)
+        });
+        let drain = drain?;
+        let body = assemble_session_body(session, drain, setup_overlapped, stall_s);
+        let outcome = finish_outcome(body, &candidates, opts);
+        candidates = outcome.survivors.clone();
+        // next phase's candidate buffer: streamed rows arrive in
+        // confirmation order — reassemble them in SURVIVOR order, exactly
+        // the gather the barrier driver performs (correct even for a
+        // caller-supplied unsorted candidate list)
+        if i + 1 < n_phases {
+            let mut by_idx: std::collections::HashMap<usize, Vec<u32>> =
+                streamed_rows.into_iter().collect();
+            let mut toks = Vec::with_capacity(candidates.len() * dataset.seq_len);
+            for &di in &candidates {
+                let row = by_idx
+                    .remove(&di)
+                    .expect("streamed rows must cover the survivor set");
+                toks.extend_from_slice(&row);
+            }
+            debug_assert!(by_idx.is_empty(), "stray streamed rows");
+            cand_tokens = Arc::new(toks);
+        }
         phases.push(outcome);
     }
     Ok(SelectionOutcome { selected: candidates, phases })
@@ -485,12 +948,17 @@ mod tests {
         assert!(out.survivors.windows(2).all(|w| w[0] < w[1]));
         assert!(out.meter_p0.bytes > 0);
         assert!(out.wall_s() > 0.0);
+        assert!(out.setup_bytes > 0, "setup traffic must be attributed");
+        assert!(out.setup_wall_s > 0.0);
+        assert!(out.drain_wall_s >= 0.0);
+        assert!(!out.setup_overlapped);
         assert!(out.sim_delay > 0.0);
         assert!(out.sim_delay <= out.serial_delay + 1e-9);
     }
 
     /// The tentpole invariant: the pipelined runtime is indistinguishable
-    /// from the serial one at the output level.
+    /// from the serial one at the output level — including the raw
+    /// entropy-share bytes, now that lanes share one broadcast setup.
     #[test]
     fn pipelined_phase_selects_identically() {
         let dir = std::env::temp_dir().join("sf_phase_pipe_test");
@@ -505,10 +973,63 @@ mod tests {
             5,
         );
         let cands: Vec<usize> = (0..48).collect();
-        let serial = SelectionOptions { batch: 8, ..Default::default() };
-        let piped = SelectionOptions { batch: 8, lanes: 3, ..Default::default() };
+        let serial =
+            SelectionOptions { batch: 8, capture_shares: true, ..Default::default() };
+        let piped = SelectionOptions {
+            batch: 8,
+            lanes: 3,
+            capture_shares: true,
+            ..Default::default()
+        };
         let a = run_phase_mpc(&wf, &ds, &cands, 12, &serial).unwrap();
         let b = run_phase_mpc(&wf, &ds, &cands, 12, &piped).unwrap();
         assert_eq!(a.survivors, b.survivors, "serial vs pipelined selection");
+        assert_eq!(a.ent_shares, b.ent_shares, "entropy shares must be byte-identical");
+    }
+
+    /// Overlapped phases must be output-identical to the barrier driver —
+    /// the small in-crate version of tests/multiphase_equiv.rs.
+    #[test]
+    fn overlapped_multiphase_matches_barrier() {
+        let dir = std::env::temp_dir().join("sf_phase_overlap_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("p1.sfw");
+        let p2 = dir.join("p2.sfw");
+        crate::coordinator::testutil::write_random_proxy_sfw(&p1, 1, 1, 2, 16, 64, 2, 8);
+        crate::coordinator::testutil::write_random_proxy_sfw(&p2, 2, 2, 4, 16, 64, 2, 8);
+        let ds = synth(
+            &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+            32,
+            false,
+            5,
+        );
+        let schedule = PhaseSchedule::new(
+            vec![
+                crate::coordinator::ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+                crate::coordinator::ProxySpec { n_layers: 2, n_heads: 2, d_mlp: 4 },
+            ],
+            vec![0.5, 0.5],
+        );
+        let cands: Vec<usize> = (0..32).collect();
+        let paths = [p1.as_path(), p2.as_path()];
+        let run = |overlap: bool, lanes: usize| {
+            let opts = SelectionOptions {
+                batch: 8,
+                lanes,
+                overlap,
+                capture_shares: true,
+                ..Default::default()
+            };
+            multi_phase_select(&paths, &schedule, &ds, cands.clone(), &opts).unwrap()
+        };
+        let barrier = run(false, 1);
+        let overlapped = run(true, 2);
+        assert_eq!(barrier.selected, overlapped.selected);
+        for (a, b) in barrier.phases.iter().zip(&overlapped.phases) {
+            assert_eq!(a.survivors, b.survivors);
+            assert_eq!(a.ent_shares, b.ent_shares, "share bytes must match");
+        }
+        assert!(overlapped.phases[1].setup_overlapped);
+        assert!(!overlapped.phases[0].setup_overlapped);
     }
 }

@@ -31,6 +31,7 @@ use super::config::{ApproxToggles, ModelConfig, Variant};
 use super::weights::WeightFile;
 
 /// A secret linear layer (weight-stationary Beaver).
+#[derive(Clone)]
 pub struct SecretLinear {
     pub w: SecretWeight,
     pub b: Shared,
@@ -45,6 +46,7 @@ impl SecretLinear {
 }
 
 /// A secret emulation MLP (linear → ReLU → linear).
+#[derive(Clone)]
 pub struct SecretMlp {
     pub l1: SecretLinear,
     pub l2: SecretLinear,
@@ -58,6 +60,7 @@ impl SecretMlp {
     }
 }
 
+#[derive(Clone)]
 struct LayerMpc {
     wq: SecretLinear,
     wk: SecretLinear,
@@ -74,6 +77,11 @@ struct LayerMpc {
 }
 
 /// One party's half of a model session: secret weight shares + config.
+///
+/// Clone duplicates the shares (and any pre-opened weight deltas) so ONE
+/// broadcast session setup can fan out to every pipeline lane — see
+/// [`ModelMpc::preopen_weight_deltas`].
+#[derive(Clone)]
 pub struct ModelMpc {
     pub cfg: ModelConfig,
     pub approx: ApproxToggles,
@@ -256,6 +264,63 @@ impl ModelMpc {
     /// Fresh Beaver keys for a new session (avoids cross-session reuse).
     pub fn key_space(&self) -> u64 {
         self.key_counter
+    }
+
+    /// Every secret weight the forward pass will ACTUALLY use, in a
+    /// deterministic structural order (both parties build identical
+    /// models with identical toggles, so both walk the same order —
+    /// required by the batched delta pre-open).  Emulator MLPs disabled
+    /// by the variant/ablation toggles are excluded: the lazy first-use
+    /// path never opens their deltas, and the pre-open must stay
+    /// byte-equivalent to it for every configuration, not just OURS.
+    fn weights_mut(&mut self) -> Vec<&mut SecretWeight> {
+        let mlp = self.cfg.variant() == Variant::Mlp;
+        let use_sm = mlp && self.approx.softmax;
+        let use_ln = mlp && self.approx.layernorm;
+        let use_se = mlp && self.approx.entropy;
+        let mut out = Vec::new();
+        for l in self.layers.iter_mut() {
+            out.push(&mut l.wq.w);
+            out.push(&mut l.wk.w);
+            out.push(&mut l.wv.w);
+            out.push(&mut l.wo.w);
+            if use_sm {
+                if let Some(m) = l.mlp_sm.as_mut() {
+                    out.push(&mut m.l1.w);
+                    out.push(&mut m.l2.w);
+                }
+            }
+            if use_ln {
+                if let Some(m) = l.mlp_ln.as_mut() {
+                    out.push(&mut m.l1.w);
+                    out.push(&mut m.l2.w);
+                }
+            }
+            if let Some((f1, f2)) = l.ffn.as_mut() {
+                out.push(&mut f1.w);
+                out.push(&mut f2.w);
+            }
+        }
+        out.push(&mut self.cls.w);
+        if use_se {
+            if let Some(m) = self.mlp_se.as_mut() {
+                out.push(&mut m.l1.w);
+                out.push(&mut m.l2.w);
+            }
+        }
+        out
+    }
+
+    /// Pre-open every weight's masked delta W−B in ONE batched exchange —
+    /// the broadcast half of a session setup.  After this, the model (and
+    /// any clone of it handed to a pipeline lane) never re-opens weight
+    /// deltas: each `matmul_weight` ships only X−A, so lanes share one
+    /// setup's traffic instead of paying it per lane.  Value-transparent:
+    /// pre-opening consumes no stream randomness, so batch shares are
+    /// bit-identical to the lazy first-use path (tested in proto.rs).
+    pub fn preopen_weight_deltas(&mut self, ctx: &mut PartyCtx) {
+        let mut ws = self.weights_mut();
+        proto::preopen_weight_deltas(ctx, &mut ws);
     }
 }
 

@@ -257,6 +257,16 @@ impl Dealer {
         }
     }
 
+    /// This party's share of the fixed per-weight mask B — derived purely
+    /// from `(seed, key)`, consuming NO stream randomness and independent
+    /// of any [`reseed_for`](Dealer::reseed_for) position.  The broadcast
+    /// session setup uses it to pre-open W−B deltas once for all lanes
+    /// (`proto::preopen_weight_deltas`); a lane dealer later re-derives
+    /// the identical B for its `matrix_triple_fixed_b` calls.
+    pub fn fixed_b_share(&mut self, key: u64, k: usize, n: usize) -> TensorR {
+        self.fixed_b_for(key, k, n).1
+    }
+
     /// The per-weight fixed mask B and this party's share of it (cached).
     fn fixed_b_for(&mut self, key: u64, k: usize, n: usize) -> (TensorR, TensorR) {
         let seed = self.seed;
@@ -437,5 +447,54 @@ mod tests {
             d3.reseed_for(5);
             d3.triples(4).0
         });
+    }
+
+    #[test]
+    fn phase_batch_tags_are_disjoint_and_drain_order_free() {
+        use crate::coordinator::selector::{qs_tag, setup_tag, unit_tag};
+
+        // disjoint streams: the same batch index in different phases, and
+        // swapped (phase, batch) coordinates, must not share randomness
+        let draw = |tag: u64| {
+            let mut d = Dealer::new(44, Role::ModelOwner);
+            d.reseed_for(tag);
+            d.triples(6).0
+        };
+        assert_ne!(draw(unit_tag(0, 3)), draw(unit_tag(1, 3)), "phase ns");
+        assert_ne!(draw(unit_tag(1, 2)), draw(unit_tag(2, 1)), "swap ns");
+        assert_ne!(draw(unit_tag(0, 0)), draw(qs_tag(0)), "qs ns");
+        assert_ne!(draw(unit_tag(0, 0)), draw(setup_tag(0)), "setup ns");
+        assert_ne!(draw(qs_tag(0)), draw(qs_tag(1)), "qs phase ns");
+        assert_ne!(draw(setup_tag(0)), draw(setup_tag(1)), "setup phase ns");
+
+        // drain-order permutation stability: a dealer visiting the tagged
+        // units in ANY order draws the same per-tag stream
+        let mut canonical = std::collections::HashMap::new();
+        let mut a = Dealer::new(44, Role::ModelOwner);
+        for b in [0usize, 1, 2, 3] {
+            a.reseed_for(unit_tag(1, b));
+            canonical.insert(b, a.triples(6));
+        }
+        let mut d = Dealer::new(44, Role::ModelOwner);
+        for b in [3usize, 1, 0, 2] {
+            d.reseed_for(unit_tag(1, b));
+            assert_eq!(&d.triples(6), canonical.get(&b).unwrap(), "batch {b}");
+        }
+
+        // pairwise consistency survives drain-order permutation across
+        // ROLES too: the data owner drains other units first, then lands
+        // on the model owner's tag — the triples still multiply
+        let (mut d0, mut d1) = pair(55);
+        d0.reseed_for(unit_tag(2, 7));
+        let (a0, b0, c0) = d0.triples(8);
+        d1.reseed_for(unit_tag(2, 9));
+        let _ = d1.triples(3); // drift on a different unit
+        d1.reseed_for(unit_tag(2, 7));
+        let (a1, b1, c1) = d1.triples(8);
+        for i in 0..8 {
+            let a = a0[i].wrapping_add(a1[i]);
+            let b = b0[i].wrapping_add(b1[i]);
+            assert_eq!(c0[i].wrapping_add(c1[i]), a.wrapping_mul(b), "triple {i}");
+        }
     }
 }

@@ -16,9 +16,11 @@
 //! Every meter is stamped with the session's measured `wall_s` at
 //! teardown.
 
+use std::sync::Arc;
 use std::thread;
 use std::time::Instant;
 
+use super::dealer::Hub;
 use super::net::{chan_pair, CostMeter, Role};
 use super::proto::PartyCtx;
 
@@ -46,10 +48,27 @@ where
     R0: Send + 'static,
     R1: Send + 'static,
 {
-    let (c0, c1) = chan_pair();
     // shared preprocessing hub: correlated randomness is generated once
     // and consumed by both parties (see dealer::Hub)
-    let hub = crate::mpc::dealer::Hub::new();
+    run_pair_metered_hub(Hub::new(), dealer_seed, f0, f1)
+}
+
+/// [`run_pair_metered`] against a caller-provided preprocessing [`Hub`] —
+/// the selector threads ONE hub through a phase's setup session, batch
+/// lanes and QuickSelect stage so parked C = A·B products survive stage
+/// boundaries.  The hub is value-transparent: it only elides duplicate
+/// preprocessing compute, never changes a share.
+pub fn run_pair_metered_hub<R0, R1>(
+    hub: Arc<Hub>,
+    dealer_seed: u64,
+    f0: impl FnOnce(&mut PartyCtx) -> R0 + Send + 'static,
+    f1: impl FnOnce(&mut PartyCtx) -> R1 + Send + 'static,
+) -> ((R0, CostMeter), (R1, CostMeter))
+where
+    R0: Send + 'static,
+    R1: Send + 'static,
+{
+    let (c0, c1) = chan_pair();
     let hub1 = hub.clone();
     let h1 = thread::Builder::new()
         .name("data-owner".into())
@@ -87,7 +106,20 @@ where
     R0: Send + 'static,
     R1: Send + 'static,
 {
-    let hub = crate::mpc::dealer::Hub::new();
+    run_pair_pipelined_hub(Hub::new(), dealer_seed, lanes)
+}
+
+/// [`run_pair_pipelined`] against a caller-provided [`Hub`] (see
+/// [`run_pair_metered_hub`] for why a phase shares one hub end to end).
+pub fn run_pair_pipelined_hub<R0, R1>(
+    hub: Arc<Hub>,
+    dealer_seed: u64,
+    lanes: Vec<(PartyFn<R0>, PartyFn<R1>)>,
+) -> Vec<((R0, CostMeter), (R1, CostMeter))>
+where
+    R0: Send + 'static,
+    R1: Send + 'static,
+{
     // all 2·N party threads issue GEMMs concurrently: split the core
     // budget between them instead of oversubscribing (hint only)
     crate::tensor::set_gemm_sharers(2 * lanes.len());

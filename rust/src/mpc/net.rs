@@ -105,6 +105,18 @@ impl CostMeter {
     pub fn snapshot(&self) -> (u64, u64, f64) {
         (self.bytes, self.rounds, self.compute_s)
     }
+
+    /// Bytes attributed to ops named `name` — the setup-vs-drain split:
+    /// sessions tag their one-time work (`"session_setup"`) so benches
+    /// and tests can show setup traffic is broadcast once, not per lane.
+    pub fn bytes_for(&self, name: &str) -> u64 {
+        self.ops.iter().filter(|o| o.name == name).map(|o| o.bytes).sum()
+    }
+
+    /// Rounds attributed to ops named `name`.
+    pub fn rounds_for(&self, name: &str) -> u64 {
+        self.ops.iter().filter(|o| o.name == name).map(|o| o.rounds).sum()
+    }
 }
 
 /// Bidirectional channel to the peer, with metering.
@@ -224,6 +236,22 @@ mod tests {
         assert_eq!(h.join().unwrap(), vec![1, 2]);
         assert_eq!(c0.meter.rounds, 1);
         assert_eq!(c0.meter.bytes, 16);
+    }
+
+    #[test]
+    fn op_attribution_sums_by_name() {
+        let m = CostMeter {
+            ops: vec![
+                OpRecord { name: "session_setup", rounds: 3, bytes: 100, compute_s: 0.0 },
+                OpRecord { name: "layer", rounds: 5, bytes: 40, compute_s: 0.0 },
+                OpRecord { name: "session_setup", rounds: 1, bytes: 7, compute_s: 0.0 },
+            ],
+            ..Default::default()
+        };
+        assert_eq!(m.bytes_for("session_setup"), 107);
+        assert_eq!(m.rounds_for("session_setup"), 4);
+        assert_eq!(m.bytes_for("layer"), 40);
+        assert_eq!(m.bytes_for("missing"), 0);
     }
 
     #[test]

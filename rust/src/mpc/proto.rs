@@ -503,6 +503,12 @@ pub fn matmul_batch(ctx: &mut PartyCtx, pairs: &[(&Shared, &Shared)]) -> Vec<Sha
 /// A secret weight matrix for weight-stationary inference: the masked
 /// delta W−B is opened once and cached; every subsequent activation
 /// matmul opens only X−A (half the bytes, still one round).
+///
+/// Clone is cheap relative to a session (share + cached delta copy) and
+/// is what lets ONE broadcast session setup fan out to many pipeline
+/// lanes: warm the delta once ([`preopen_weight_deltas`]), clone the
+/// weight into each lane, and no lane ever re-opens W−B.
+#[derive(Clone)]
 pub struct SecretWeight {
     /// this party's additive share of W (k,n)
     pub share: TensorR,
@@ -519,6 +525,67 @@ impl SecretWeight {
     pub fn shape(&self) -> &[usize] {
         &self.share.shape
     }
+
+    /// Whether the masked delta W−B has been opened yet.
+    pub fn delta_is_open(&self) -> bool {
+        self.delta.is_some()
+    }
+}
+
+/// Open the masked deltas W−B for every not-yet-warm weight in ONE
+/// batched exchange round — the broadcast half of a session setup.
+///
+/// The per-weight mask B is the dealer's seed-keyed fixed-B correlation
+/// ([`Dealer::fixed_b_share`](super::dealer::Dealer::fixed_b_share)), so
+/// pre-opening here consumes NO stream randomness: a lane that later
+/// runs `matmul_weight` draws exactly the triples it would have drawn had
+/// it opened the delta itself — only the wire payload (and its bytes)
+/// moves from the first batch into the setup session.  Both parties must
+/// pass the weights in the same order (structural model order does this).
+pub fn preopen_weight_deltas(ctx: &mut PartyCtx, weights: &mut [&mut SecretWeight]) {
+    let pending: Vec<usize> = weights
+        .iter()
+        .enumerate()
+        .filter(|(_, w)| w.delta.is_none())
+        .map(|(i, _)| i)
+        .collect();
+    if pending.is_empty() {
+        return;
+    }
+    let total: usize = pending.iter().map(|&i| weights[i].share.len()).sum();
+    let mut payload = ctx.arena.take(total);
+    let mut b_shares: Vec<TensorR> = Vec::with_capacity(pending.len());
+    for &i in &pending {
+        let (k, n) = (weights[i].share.shape[0], weights[i].share.shape[1]);
+        let key = weights[i].key;
+        let b_share = ctx.chan.compute(|| ctx.dealer.fixed_b_share(key, k, n));
+        payload.extend(
+            weights[i]
+                .share
+                .data
+                .iter()
+                .zip(&b_share.data)
+                .map(|(&p, &q)| p.wrapping_sub(q)),
+        );
+        b_shares.push(b_share);
+    }
+    ctx.chan.begin_exchange(payload);
+    // overlap the wire: our halves of the opened deltas
+    let mut halves: Vec<TensorR> = Vec::with_capacity(pending.len());
+    for (&i, b_share) in pending.iter().zip(&b_shares) {
+        halves.push(weights[i].share.sub(b_share));
+    }
+    let theirs = ctx.chan.finish_exchange();
+    let mut off = 0;
+    for (&i, mut half) in pending.iter().zip(halves) {
+        let n = half.data.len();
+        for (v, &t) in half.data.iter_mut().zip(&theirs[off..off + n]) {
+            *v = v.wrapping_add(t);
+        }
+        off += n;
+        weights[i].delta = Some(half);
+    }
+    ctx.arena.put(theirs);
 }
 
 /// Shared activations (m,k) × secret weight (k,n) with cached W−B.
@@ -721,6 +788,55 @@ mod tests {
         assert!(got.1.max_abs_diff(&e2) < 1e-2);
         // second use must not re-open the weight delta: only X−A (2×2)
         assert_eq!(bytes_second, 4 * 8);
+    }
+
+    #[test]
+    fn preopened_delta_matches_lazy_first_use_bit_for_bit() {
+        // the broadcast session setup pre-opens W−B; a lane that then runs
+        // matmul_weight must produce the SAME share it would have produced
+        // opening the delta lazily — and pay only X−A bytes on batch 0
+        let x = TensorR::from_f32(&TensorF::from_vec(
+            vec![1.0, 2.0, 3.0, 4.0],
+            &[2, 2],
+        ));
+        let w = TensorR::from_f32(&TensorF::from_vec(
+            vec![0.5, 1.0, -1.0, 2.0],
+            &[2, 2],
+        ));
+        let party0 = |warm: bool| {
+            let (x, w) = (x.clone(), w.clone());
+            move |ctx: &mut PartyCtx| {
+                let ws = share_input(ctx, &w);
+                let mut sw = SecretWeight::new(ws.0, 7);
+                if warm {
+                    preopen_weight_deltas(ctx, &mut [&mut sw]);
+                    assert!(sw.delta_is_open());
+                }
+                let a = share_input(ctx, &x);
+                let before = ctx.chan.meter.bytes;
+                let z = matmul_weight(ctx, &a, &mut sw);
+                (z.0.data.clone(), ctx.chan.meter.bytes - before)
+            }
+        };
+        let party1 = |warm: bool| {
+            move |ctx: &mut PartyCtx| {
+                let ws = recv_share(ctx, &[2, 2]);
+                let mut sw = SecretWeight::new(ws.0, 7);
+                if warm {
+                    preopen_weight_deltas(ctx, &mut [&mut sw]);
+                }
+                let a = recv_share(ctx, &[2, 2]);
+                let z = matmul_weight(ctx, &a, &mut sw);
+                z.0.data.clone()
+            }
+        };
+        let (lazy0, lazy1) = run_pair(31, party0(false), party1(false));
+        let (warm0, warm1) = run_pair(31, party0(true), party1(true));
+        assert_eq!(lazy0.0, warm0.0, "P0 share must be identical");
+        assert_eq!(lazy1, warm1, "P1 share must be identical");
+        // lazy batch 0 ships X−A and W−B; warm batch 0 ships only X−A
+        assert_eq!(lazy0.1, 8 * 8);
+        assert_eq!(warm0.1, 4 * 8);
     }
 
     #[test]

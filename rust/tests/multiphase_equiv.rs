@@ -1,0 +1,173 @@
+//! Cross-phase equivalence suite: the streamed multi-phase scheduler
+//! (`SelectionOptions::overlap` — phase i+1 setup behind phase i drain,
+//! survivor streaming out of QuickSelect, one broadcast session setup per
+//! phase) must be BYTE-IDENTICAL to the barrier reference:
+//!
+//!  * identical survivor sets, per phase and end to end;
+//!  * identical opened entropy scores (`reveal_entropies`);
+//!  * byte-identical entropy SHARES on both parties (`capture_shares`);
+//!
+//! for 2-phase and 3-phase schedules over 256 candidates, across lane
+//! counts — the property that makes overlap safe to ship: reordering
+//! secret-shared computation may move wall-clock, never a bit.
+//!
+//! CI runs this suite in a matrix over `SF_EQUIV_LANES` ∈ {1, 4} and two
+//! `SF_EQUIV_SEED`s; unset (local `cargo test`) it sweeps lanes {1, 2, 4}
+//! at the default dealer seed.
+
+use std::path::{Path, PathBuf};
+
+use selectformer::coordinator::{
+    multi_phase_select, testutil, PhaseSchedule, ProxySpec, SelectionOptions,
+    SelectionOutcome,
+};
+use selectformer::data::{synth, Dataset, SynthSpec};
+
+fn lanes_under_test() -> Vec<usize> {
+    match std::env::var("SF_EQUIV_LANES") {
+        Ok(v) => vec![v.parse().expect("SF_EQUIV_LANES must be a lane count")],
+        Err(_) => vec![1, 2, 4],
+    }
+}
+
+fn seed_under_test() -> u64 {
+    std::env::var("SF_EQUIV_SEED")
+        .ok()
+        .map(|v| v.parse().expect("SF_EQUIV_SEED must be a u64"))
+        .unwrap_or(0x5e1ec7)
+}
+
+fn run(
+    paths: &[&Path],
+    schedule: &PhaseSchedule,
+    ds: &Dataset,
+    cands: &[usize],
+    lanes: usize,
+    overlap: bool,
+    seed: u64,
+) -> SelectionOutcome {
+    let opts = SelectionOptions {
+        batch: 16,
+        lanes,
+        overlap,
+        dealer_seed: seed,
+        reveal_entropies: true,
+        capture_shares: true,
+        ..Default::default()
+    };
+    multi_phase_select(paths, schedule, ds, cands.to_vec(), &opts).unwrap()
+}
+
+/// Every observable of `got` must match the reference bit for bit.
+fn assert_byte_identical(tag: &str, reference: &SelectionOutcome, got: &SelectionOutcome) {
+    assert_eq!(reference.selected, got.selected, "{tag}: final selection");
+    assert_eq!(reference.phases.len(), got.phases.len(), "{tag}: phase count");
+    for (p, (a, b)) in reference.phases.iter().zip(&got.phases).enumerate() {
+        assert_eq!(a.survivors, b.survivors, "{tag}: phase {p} survivors");
+        let (ea, eb) = (a.entropies.as_ref().unwrap(), b.entropies.as_ref().unwrap());
+        assert_eq!(ea, eb, "{tag}: phase {p} opened scores");
+        let (sa, sb) = (a.ent_shares.as_ref().unwrap(), b.ent_shares.as_ref().unwrap());
+        assert_eq!(sa.0, sb.0, "{tag}: phase {p} P0 entropy shares");
+        assert_eq!(sa.1, sb.1, "{tag}: phase {p} P1 entropy shares");
+    }
+}
+
+fn phase_files(dir: &str, specs: &[(usize, usize, usize)]) -> Vec<PathBuf> {
+    let dir = std::env::temp_dir().join(dir);
+    specs
+        .iter()
+        .enumerate()
+        .map(|(i, &(l, w, d))| {
+            let p = dir.join(format!("phase{i}.sfw"));
+            testutil::write_random_proxy_sfw(&p, l, w, d, 16, 64, 2, 8);
+            p
+        })
+        .collect()
+}
+
+#[test]
+fn two_phase_overlapped_is_byte_identical_to_barrier() {
+    let files = phase_files("sf_multiphase_equiv2", &[(1, 1, 2), (2, 2, 4)]);
+    let paths: Vec<&Path> = files.iter().map(|p| p.as_path()).collect();
+    let schedule = PhaseSchedule::new(
+        vec![
+            ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            ProxySpec { n_layers: 2, n_heads: 2, d_mlp: 4 },
+        ],
+        vec![0.5, 0.5],
+    );
+    let n = 256;
+    let ds = synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        n,
+        false,
+        11,
+    );
+    let cands: Vec<usize> = (0..n).collect();
+    let seed = seed_under_test();
+
+    // the reference oracle: barrier schedule, serial in-session setup
+    let reference = run(&paths, &schedule, &ds, &cands, 1, false, seed);
+    assert_eq!(reference.phases[0].survivors.len(), 128);
+    assert_eq!(reference.selected.len(), 64);
+
+    // barrier with broadcast-setup lanes must already be byte-identical
+    let piped = run(&paths, &schedule, &ds, &cands, 4, false, seed);
+    assert_byte_identical("barrier lanes=4", &reference, &piped);
+
+    // the tentpole: overlapped schedule, across lane counts
+    for lanes in lanes_under_test() {
+        let overlapped = run(&paths, &schedule, &ds, &cands, lanes, true, seed);
+        assert_byte_identical(&format!("overlap lanes={lanes}"), &reference, &overlapped);
+        // the overlap actually happened: phase 1's setup ran behind
+        // phase 0's drain and is off the critical path
+        assert!(overlapped.phases[1].setup_overlapped, "lanes={lanes}");
+        assert!(!overlapped.phases[0].setup_overlapped, "lanes={lanes}");
+        assert!(overlapped.overlapped_setup_wall_s() > 0.0, "lanes={lanes}");
+        // broadcast setup: one session's traffic per phase, independent of
+        // the lane count — identical to the serial reference's setup bytes
+        // (the W−B delta pre-open moves bytes from batch 0 into setup, so
+        // overlapped setup ≥ serial-attributed setup; totals stay equal)
+        assert_eq!(
+            overlapped.total_bytes(),
+            reference.total_bytes(),
+            "lanes={lanes}: total traffic must not scale with lanes"
+        );
+    }
+}
+
+#[test]
+fn three_phase_overlapped_is_byte_identical_to_barrier() {
+    let files =
+        phase_files("sf_multiphase_equiv3", &[(1, 1, 2), (1, 2, 2), (2, 2, 4)]);
+    let paths: Vec<&Path> = files.iter().map(|p| p.as_path()).collect();
+    let schedule = PhaseSchedule::new(
+        vec![
+            ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            ProxySpec { n_layers: 1, n_heads: 2, d_mlp: 2 },
+            ProxySpec { n_layers: 2, n_heads: 2, d_mlp: 4 },
+        ],
+        vec![0.5, 0.5, 0.5],
+    );
+    let n = 256;
+    let ds = synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        n,
+        false,
+        13,
+    );
+    let cands: Vec<usize> = (0..n).collect();
+    let seed = seed_under_test();
+
+    let reference = run(&paths, &schedule, &ds, &cands, 1, false, seed);
+    assert_eq!(reference.selected.len(), 32);
+
+    for lanes in lanes_under_test() {
+        let overlapped = run(&paths, &schedule, &ds, &cands, lanes, true, seed);
+        assert_byte_identical(&format!("3-phase overlap lanes={lanes}"), &reference, &overlapped);
+        // every non-first phase's setup overlapped the previous drain
+        assert!(!overlapped.phases[0].setup_overlapped);
+        assert!(overlapped.phases[1].setup_overlapped);
+        assert!(overlapped.phases[2].setup_overlapped);
+    }
+}

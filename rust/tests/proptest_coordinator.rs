@@ -5,7 +5,9 @@
 use selectformer::coordinator::iosched::{self, SchedPolicy};
 use selectformer::coordinator::market;
 use selectformer::coordinator::phase::{PhaseSchedule, ProxySpec};
-use selectformer::coordinator::quickselect::top_k_indices;
+use selectformer::coordinator::quickselect::{
+    top_k_indices, top_k_streamed, ChannelSink,
+};
 use selectformer::fixed;
 use selectformer::mpc::engine::run_pair;
 use selectformer::mpc::net::{CostMeter, NetConfig, OpRecord};
@@ -55,6 +57,123 @@ fn prop_quickselect_matches_bruteforce() {
             }
             Ok(())
         },
+    );
+}
+
+/// Run the streamed and barrier QuickSelect shapes over MPC on the same
+/// values/seed; returns (confirmation order, sorted barrier result).
+fn stream_vs_barrier(vals: &[f32], k: usize, seed: u64) -> (Vec<usize>, Vec<usize>) {
+    let n = vals.len();
+    let x = TensorR::from_f32(&TensorF::from_vec(vals.to_vec(), &[n]));
+    let (order, order1) = run_pair(
+        seed,
+        {
+            let x = x.clone();
+            move |ctx| {
+                let sh = share_input(ctx, &x);
+                let mut sink = ChannelSink::collector();
+                let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+                sink.order
+            }
+        },
+        move |ctx| {
+            let sh = recv_share(ctx, &[n]);
+            let mut sink = ChannelSink::collector();
+            let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+            sink.order
+        },
+    );
+    assert_eq!(order, order1, "parties must emit the same confirmation order");
+    let (barrier, _) = run_pair(
+        seed,
+        {
+            let x = x.clone();
+            move |ctx| {
+                let sh = share_input(ctx, &x);
+                top_k_indices(ctx, &sh, k)
+            }
+        },
+        move |ctx| {
+            let sh = recv_share(ctx, &[n]);
+            top_k_indices(ctx, &sh, k).0
+        },
+    );
+    (order, barrier.0)
+}
+
+/// The streamed emission is a permutation-stable prefix of the barrier
+/// result: sorted(emissions) == barrier set, no index is emitted twice,
+/// and every emitted index already belongs to a valid top-k by VALUE (so
+/// any prefix of the stream is safe for a downstream consumer to act on).
+fn check_stream_prefix(vals: &[f32], k: usize, seed: u64) -> Result<(), String> {
+    let (order, barrier) = stream_vs_barrier(vals, k, seed);
+    if order.len() != k {
+        return Err(format!("emitted {} of k={k}", order.len()));
+    }
+    let mut sorted = order.clone();
+    sorted.sort_unstable();
+    let mut dedup = sorted.clone();
+    dedup.dedup();
+    if dedup.len() != sorted.len() {
+        return Err(format!("duplicate confirmations: {order:?}"));
+    }
+    if sorted != barrier {
+        return Err(format!("stream {sorted:?} != barrier {barrier:?}"));
+    }
+    if k == 0 {
+        return Ok(());
+    }
+    // value-validity of every prefix element, on the exact encodings the
+    // protocol compares (ties resolved by value, not index)
+    let enc: Vec<i64> = vals.iter().map(|&v| fixed::encode(v)).collect();
+    let mut desc = enc.clone();
+    desc.sort_unstable_by(|a, b| b.cmp(a));
+    let kth = desc[k - 1];
+    for &i in &order {
+        if enc[i] < kth {
+            return Err(format!("idx {i} (enc {}) below kth {kth}", enc[i]));
+        }
+    }
+    // determinism: a second run must reproduce the exact emission order
+    let (order2, _) = stream_vs_barrier(vals, k, seed);
+    if order2 != order {
+        return Err("confirmation order is not deterministic".into());
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_streamed_quickselect_edges_and_prefix_stability() {
+    // edge cases the streaming refactor must not disturb: k = 0, k = n,
+    // all-tied scores, duplicate scores straddling the pivot boundary
+    let edge_cases: Vec<(Vec<f32>, usize)> = vec![
+        (vec![1.0, 2.0, 3.0, 4.0], 0),                       // k = 0
+        (vec![1.0, 2.0, 3.0, 4.0], 4),                       // k = n
+        (vec![7.5; 9], 4),                                   // all tied
+        (vec![5.0, 5.0, 3.0, 3.0, 3.0, 1.0], 4),             // ties straddle
+        (vec![2.0, 2.0, 2.0, 2.0, 1.0, 1.0, 1.0, 1.0], 4),   // block tie at cut
+        (vec![-1.0, -1.0, -1.0, 0.0], 1),                    // negative ties
+    ];
+    for (i, (vals, k)) in edge_cases.iter().enumerate() {
+        if let Err(e) = check_stream_prefix(vals, *k, 0x5eed + i as u64) {
+            panic!("edge case {i} (k={k}, vals {vals:?}): {e}");
+        }
+    }
+    // randomized sweep with heavy duplication so pivots frequently land
+    // inside tied runs
+    check(
+        10,
+        0xbeef,
+        |r| {
+            let n = 6 + r.below(40);
+            let k = r.below(n + 1);
+            let vals: Vec<f32> = (0..n)
+                .map(|_| (r.below(5) as f32) - 2.0) // values in {-2..2}, many ties
+                .collect();
+            let seed = r.next_u64();
+            (vals, k, seed)
+        },
+        |(vals, k, seed)| check_stream_prefix(vals, *k, *seed),
     );
 }
 
