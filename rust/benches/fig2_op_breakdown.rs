@@ -11,9 +11,9 @@ use std::collections::BTreeMap;
 
 use selectformer::benchkit::{banner, write_tsv};
 use selectformer::coordinator::testutil;
-use selectformer::coordinator::SelectionOptions;
+use selectformer::coordinator::{RuntimeProfile, SelectionJob};
 use selectformer::data::{synth, SynthSpec};
-use selectformer::models::{ModelConfig, Variant, WeightFile};
+use selectformer::models::{ModelConfig, Variant};
 use selectformer::mpc::net::NetConfig;
 use selectformer::util::report::{fmt_bytes, fmt_duration, Table};
 
@@ -26,7 +26,6 @@ fn main() -> anyhow::Result<()> {
     let batch = 5;
     let path = std::env::temp_dir().join("sf_bench").join("fig2.sfw");
     testutil::write_random_sfw(&path, &cfg);
-    let wf = WeightFile::load(&path)?;
     let ds = synth(
         &SynthSpec {
             n_classes: cfg.n_classes,
@@ -38,15 +37,13 @@ fn main() -> anyhow::Result<()> {
         false,
         3,
     );
-    let opts = SelectionOptions { batch, ..Default::default() };
     let t0 = std::time::Instant::now();
-    let out = selectformer::coordinator::run_phase_mpc(
-        &wf,
-        &ds,
-        &(0..batch).collect::<Vec<_>>(),
-        1,
-        &opts,
-    )?;
+    let outcome = SelectionJob::builder([path.as_path()], &ds)
+        .keep_counts(vec![1])
+        .runtime(RuntimeProfile { batch, ..Default::default() })
+        .build()?
+        .run()?;
+    let out = &outcome.phases[0];
     eprintln!("(measured in {:.1}s wall)", t0.elapsed().as_secs_f64());
 
     // group the op trace into the paper's categories; nested primitive

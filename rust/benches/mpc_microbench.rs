@@ -9,7 +9,7 @@ use std::time::Instant;
 
 use selectformer::benchkit::{banner, write_bench_json, write_tsv, BenchRow};
 use selectformer::coordinator::{
-    multi_phase_select, testutil, PhaseSchedule, ProxySpec, SelectionOptions,
+    testutil, PhaseSchedule, ProxySpec, RuntimeProfile, SelectionJob,
 };
 use selectformer::data::{synth, SynthSpec};
 use selectformer::mpc::cmp;
@@ -144,8 +144,13 @@ fn bench_e2e() -> Vec<BenchRow> {
     let cands: Vec<usize> = (0..256).collect();
     let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(4);
     let run = |lanes: usize, overlap: bool| {
-        let opts = SelectionOptions { batch: 16, lanes, overlap, ..Default::default() };
-        multi_phase_select(&[p1.as_path(), p2.as_path()], &schedule, &ds, cands.clone(), &opts)
+        SelectionJob::builder([p1.as_path(), p2.as_path()], &ds)
+            .candidates(cands.clone())
+            .schedule(schedule.clone())
+            .runtime(RuntimeProfile { batch: 16, lanes, overlap, ..Default::default() })
+            .build()
+            .expect("job config")
+            .run()
             .expect("selection")
     };
     let serial = run(1, false);

@@ -9,7 +9,7 @@
 //!     cargo run --release --example market_selection
 
 use selectformer::coordinator::market::{self, Budget, Transaction};
-use selectformer::coordinator::{multi_phase_select, SelectionOptions};
+use selectformer::coordinator::{PhaseSchedule, ProxySpec, SelectionJob};
 use selectformer::exp::Cell;
 use selectformer::models::WeightFile;
 use selectformer::util::report::{fmt_bytes, fmt_duration};
@@ -20,7 +20,7 @@ fn main() -> anyhow::Result<()> {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
     let ds = cell.train_dataset()?;
-    let budget = Budget::from_fraction(ds.n, 0.20, 0.25);
+    let budget = Budget::try_from_fraction(ds.n, 0.20, 0.25)?;
     println!("== stage 1 (clear): bootstrap purchase ==");
     println!("corpus: {} unlabeled points; budget: {} points total", ds.n, budget.total);
     let bootstrap = cell.bootstrap_indices()?;
@@ -28,13 +28,19 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n== stage 2 (MPC): two-phase private selection ==");
     let candidates = market::selection_candidates(ds.n, &bootstrap);
-    let keep = budget.total - bootstrap.len();
+    let keep = budget.total.saturating_sub(bootstrap.len());
+    anyhow::ensure!(
+        keep > 0 && !candidates.is_empty(),
+        "bootstrap sample ({} pts) exhausts the {}-pt budget — raise --budget",
+        bootstrap.len(),
+        budget.total
+    );
     let frac = keep as f64 / candidates.len() as f64;
     let mid = (1.5 * frac).min(1.0);
-    let schedule = selectformer::coordinator::PhaseSchedule::new(
+    let schedule = PhaseSchedule::new(
         vec![
-            selectformer::coordinator::ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
-            selectformer::coordinator::ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 },
+            ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 },
         ],
         vec![mid, frac / mid],
     );
@@ -42,14 +48,11 @@ fn main() -> anyhow::Result<()> {
     let p2 = cell.proxy_phase(2);
     let wf1 = WeightFile::load(&p1)?;
     println!("phase 1 proxy: {:?}", wf1.config()?);
-    let opts = SelectionOptions { batch: 16, ..Default::default() };
-    let outcome = multi_phase_select(
-        &[p1.as_path(), p2.as_path()],
-        &schedule,
-        &ds,
-        candidates,
-        &opts,
-    )?;
+    let outcome = SelectionJob::builder([p1, p2], &ds)
+        .candidates(candidates)
+        .schedule(schedule)
+        .build()?
+        .run()?;
     for (i, p) in outcome.phases.iter().enumerate() {
         println!(
             "  phase {}: {} survivors, {} exchanged, simulated delay {}",

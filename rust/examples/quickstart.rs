@@ -1,11 +1,14 @@
 //! Quickstart: the SelectFormer pipeline in ~60 lines, no artifacts
 //! needed — synthesizes an imbalanced dataset and a random proxy, then
-//! runs one private selection phase over real 2PC and prints what each
-//! side learned.
+//! runs one private selection phase over real 2PC through the
+//! `SelectionJob` API, watching live progress events, and prints what
+//! each side learned.
 //!
 //!     cargo run --release --example quickstart
 
-use selectformer::coordinator::{run_phase_mpc, testutil, SelectionOptions};
+use std::sync::atomic::Ordering;
+
+use selectformer::coordinator::{testutil, EventCounters, SelectionJob};
 use selectformer::data::{synth, SynthSpec};
 use selectformer::models::WeightFile;
 use selectformer::util::report::{fmt_bytes, fmt_duration};
@@ -27,10 +30,16 @@ fn main() -> anyhow::Result<()> {
     let proxy = WeightFile::load(&proxy_path)?;
     println!("model owner: proxy {:?}", proxy.config()?);
 
-    // Jointly select the 80 highest-entropy points over MPC.
-    let opts = SelectionOptions { batch: 16, ..Default::default() };
-    let candidates: Vec<usize> = (0..ds.n).collect();
-    let out = run_phase_mpc(&proxy, &ds, &candidates, 80, &opts)?;
+    // Jointly select the 80 highest-entropy points over MPC.  The typed
+    // builder validates everything up front; the observer receives every
+    // phase, batch and survivor confirmation live.
+    let counters = EventCounters::new();
+    let outcome = SelectionJob::builder([proxy], &ds)
+        .keep_counts(vec![80])
+        .observer(counters.clone())
+        .build()?
+        .run()?;
+    let out = &outcome.phases[0];
 
     println!("\nselected {} indices (first 10): {:?}",
              out.survivors.len(), &out.survivors[..10]);
@@ -39,6 +48,9 @@ fn main() -> anyhow::Result<()> {
              fmt_bytes(out.meter_p0.bytes + out.meter_p1.bytes));
     println!("simulated WAN delay: {} (serial: {})",
              fmt_duration(out.sim_delay), fmt_duration(out.serial_delay));
+    println!("observed live: {} batches evaluated, {} survivors streamed",
+             counters.batches.load(Ordering::Relaxed),
+             counters.survivors.load(Ordering::Relaxed));
     println!("\nwhat was revealed: the index set above and comparison outcomes —");
     println!("never the entropies, the datapoints, or the proxy weights.");
     Ok(())

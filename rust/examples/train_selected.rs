@@ -12,8 +12,9 @@
 //!
 //!     cargo run --release --example train_selected [-- <steps>]
 
-use selectformer::coordinator::SelectionOptions;
+use selectformer::coordinator::RuntimeProfile;
 use selectformer::exp::{self, Cell, Method};
+use selectformer::models::ApproxToggles;
 use selectformer::runtime::Runtime;
 use selectformer::util::report::fmt_duration;
 
@@ -27,13 +28,14 @@ fn main() -> anyhow::Result<()> {
         anyhow::bail!("artifacts missing — run `make artifacts` first");
     }
     let mut rt = Runtime::new()?;
-    let opts = SelectionOptions { batch: 16, ..Default::default() };
+    let profile = RuntimeProfile::default();
+    let approx = ApproxToggles::OURS;
     println!("== end-to-end: {}/{} @ 20% budget, {steps} train steps ==",
              cell.target, cell.bench);
 
     // --- Ours: private 2-phase selection over MPC ---
     let t0 = std::time::Instant::now();
-    let ours = exp::select(&cell, Method::Ours, 0.2, &opts, None)?;
+    let ours = exp::select(&cell, Method::Ours, 0.2, &profile, approx, None)?;
     let sim = ours.outcome.as_ref().unwrap().total_delay();
     println!("[ours] selected {} pts in {:.0}s wall / {} simulated WAN",
              ours.indices.len(), t0.elapsed().as_secs_f64(), fmt_duration(sim));
@@ -46,13 +48,13 @@ fn main() -> anyhow::Result<()> {
     println!("[ours] test accuracy: {:.2}%", acc_ours * 100.0);
 
     // --- Random baseline ---
-    let random = exp::select(&cell, Method::Random, 0.2, &opts, None)?;
+    let random = exp::select(&cell, Method::Random, 0.2, &profile, approx, None)?;
     let (_c, acc_rand) = exp::train_and_eval(&cell, &mut rt, &random, steps, 11)?;
     println!("[random] test accuracy: {:.2}%  (ours {:+.2} pts)",
              acc_rand * 100.0, (acc_ours - acc_rand) * 100.0);
 
     // --- Oracle (gold): select by target-model entropy ---
-    let oracle = exp::select(&cell, Method::Oracle, 0.2, &opts, Some(&mut rt))?;
+    let oracle = exp::select(&cell, Method::Oracle, 0.2, &profile, approx, Some(&mut rt))?;
     let (_c, acc_orac) = exp::train_and_eval(&cell, &mut rt, &oracle, steps, 11)?;
     println!("[oracle] test accuracy: {:.2}%  (ours {:+.2} pts)",
              acc_orac * 100.0, (acc_ours - acc_orac) * 100.0);

@@ -3,7 +3,7 @@
 //! ```text
 //! selectformer info
 //! selectformer select  --target distilbert_s --bench sst2s [--budget 0.2]
-//!                      [--batch 16] [--lanes 4] [--overlap]
+//!                      [--batch 16] [--lanes 4] [--overlap] [--progress]
 //!                      [--policy ours|serial|coalesced]
 //!                      [--method ours|random|oracle|mpcformer|bolt|noattnsm|noattnln|noapprox]
 //! selectformer e2e     --target ... --bench ... [--budget 0.2] [--steps 300]
@@ -12,13 +12,22 @@
 //! selectformer plan    --target ... --bench ... [--budget 0.2]
 //! selectformer bench   <table1|table2|table3acc|table4|table6|fig5> [--quick]
 //! ```
+//!
+//! Each command declares its flag set; unknown flags are rejected with the
+//! known list instead of being silently accepted, and value flags consume
+//! their argument verbatim (so `--budget -0.2` parses as the number -0.2
+//! and then fails range validation, rather than being misread as a
+//! boolean flag followed by a stray positional).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
-use crate::coordinator::{planner, SchedPolicy, SelectionOptions};
+use crate::coordinator::{
+    planner, JobObserver, RuntimeProfile, SchedPolicy, StderrProgress,
+};
 use crate::exp::{self, Cell, Method};
 use crate::models::{ApproxToggles, WeightFile};
 use crate::mpc::net::NetConfig;
@@ -26,6 +35,53 @@ use crate::runtime::Runtime;
 use crate::util::report::{fmt_bytes, fmt_duration, Table};
 
 pub mod bench_acc;
+
+/// Flags a command accepts: value flags consume the next argument,
+/// boolean flags never do.
+struct CmdSpec {
+    value: &'static [&'static str],
+    boolean: &'static [&'static str],
+}
+
+fn cmd_spec(command: &str) -> Result<CmdSpec> {
+    Ok(match command {
+        "info" => CmdSpec { value: &["artifacts"], boolean: &[] },
+        "select" => CmdSpec {
+            value: &[
+                "artifacts", "target", "bench", "budget", "batch", "lanes",
+                "policy", "method", "out", "bandwidth-mbs", "latency-ms",
+            ],
+            boolean: &["overlap", "progress"],
+        },
+        "e2e" => CmdSpec {
+            value: &[
+                "artifacts", "target", "bench", "budget", "steps", "batch",
+                "lanes", "policy", "bandwidth-mbs", "latency-ms",
+            ],
+            boolean: &["overlap"],
+        },
+        "train" => CmdSpec {
+            value: &[
+                "artifacts", "target", "bench", "budget", "steps", "method",
+                "batch", "lanes", "policy", "bandwidth-mbs", "latency-ms",
+            ],
+            boolean: &["overlap"],
+        },
+        "appraise" => CmdSpec {
+            value: &[
+                "artifacts", "target", "bench", "budget", "threshold", "batch",
+                "lanes", "policy", "bandwidth-mbs", "latency-ms",
+            ],
+            boolean: &["overlap"],
+        },
+        "plan" => CmdSpec {
+            value: &["artifacts", "target", "bench", "budget", "batch"],
+            boolean: &[],
+        },
+        "bench" => CmdSpec { value: &["artifacts", "steps"], boolean: &["quick"] },
+        other => bail!("unknown command `{other}` (try `selectformer info`)"),
+    })
+}
 
 pub struct Args {
     pub command: String,
@@ -39,17 +95,42 @@ impl Args {
             bail!("usage: selectformer <command> [--flag value]…  (try `selectformer info`)");
         }
         let command = argv[0].clone();
+        let spec = cmd_spec(&command)?;
         let mut flags = HashMap::new();
         let mut positional = Vec::new();
         let mut i = 1;
         while i < argv.len() {
             if let Some(name) = argv[i].strip_prefix("--") {
-                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
-                    flags.insert(name.to_string(), argv[i + 1].clone());
-                    i += 2;
-                } else {
+                if spec.boolean.contains(&name) {
                     flags.insert(name.to_string(), "true".to_string());
                     i += 1;
+                } else if spec.value.contains(&name) {
+                    let Some(value) = argv.get(i + 1) else {
+                        bail!("flag --{name} requires a value");
+                    };
+                    // a following flag means the value is missing; negative
+                    // numbers ("-0.2") are values, not flags
+                    if value.starts_with("--") {
+                        bail!("flag --{name} requires a value (got `{value}`)");
+                    }
+                    flags.insert(name.to_string(), value.clone());
+                    i += 2;
+                } else {
+                    let mut known: Vec<&str> = spec
+                        .value
+                        .iter()
+                        .chain(spec.boolean.iter())
+                        .copied()
+                        .collect();
+                    known.sort_unstable();
+                    bail!(
+                        "unknown flag --{name} for `{command}` (known flags: {})",
+                        known
+                            .iter()
+                            .map(|f| format!("--{f}"))
+                            .collect::<Vec<_>>()
+                            .join(", ")
+                    );
                 }
             } else {
                 positional.push(argv[i].clone());
@@ -127,23 +208,30 @@ fn cell_from(args: &Args) -> Result<Cell> {
     Ok(cell)
 }
 
-fn opts_from(args: &Args, approx: ApproxToggles) -> Result<SelectionOptions> {
-    Ok(SelectionOptions {
+/// The execution profile a command's flags describe — feeds
+/// `SelectionJob` via `exp::select`.
+fn profile_from(args: &Args) -> Result<RuntimeProfile> {
+    Ok(RuntimeProfile {
         batch: args.usize_or("batch", 16)?,
-        net: NetConfig {
-            bandwidth: args.f64_or("bandwidth-mbs", 100.0)? * 1e6,
-            latency: args.f64_or("latency-ms", 100.0)? / 1e3,
-        },
-        policy: policy_from(&args.get_or("policy", "ours"))?,
-        dealer_seed: 0x5e1ec7,
-        approx,
-        reveal_entropies: false,
         lanes: args.usize_or("lanes", 1)?,
         // stream phase i+1's session setup behind phase i's drain —
         // byte-identical output (tests/multiphase_equiv.rs), less wall
         overlap: args.has("overlap"),
-        capture_shares: false,
+        policy: policy_from(&args.get_or("policy", "ours"))?,
+        net: NetConfig {
+            bandwidth: args.f64_or("bandwidth-mbs", 100.0)? * 1e6,
+            latency: args.f64_or("latency-ms", 100.0)? / 1e3,
+        },
     })
+}
+
+fn budget_from(args: &Args) -> Result<f64> {
+    let budget = args.f64_or("budget", 0.2)?;
+    ensure!(
+        budget.is_finite() && budget > 0.0 && budget <= 1.0,
+        "--budget {budget} outside (0, 1]"
+    );
+    Ok(budget)
 }
 
 pub fn run(argv: &[String]) -> Result<()> {
@@ -188,9 +276,14 @@ fn cmd_info(args: &Args) -> Result<()> {
 
 fn cmd_select(args: &Args) -> Result<()> {
     let cell = cell_from(args)?;
-    let budget = args.f64_or("budget", 0.2)?;
+    let budget = budget_from(args)?;
     let (method, approx) = method_from(&args.get_or("method", "ours"))?;
-    let opts = opts_from(args, approx)?;
+    let profile = profile_from(args)?;
+    let observer: Option<Arc<dyn JobObserver>> = if args.has("progress") {
+        Some(Arc::new(StderrProgress))
+    } else {
+        None
+    };
     let mut rt;
     let rt_opt = if method == Method::Oracle {
         rt = Runtime::new()?;
@@ -199,7 +292,8 @@ fn cmd_select(args: &Args) -> Result<()> {
         None
     };
     let t0 = std::time::Instant::now();
-    let purchase = exp::select(&cell, method, budget, &opts, rt_opt)?;
+    let purchase =
+        exp::select_with(&cell, method, budget, &profile, approx, observer, rt_opt)?;
     println!(
         "selected {} points (+{} bootstrap) in {:.1}s wall",
         purchase.indices.len(),
@@ -249,13 +343,14 @@ fn cmd_select(args: &Args) -> Result<()> {
 
 fn cmd_e2e(args: &Args) -> Result<()> {
     let cell = cell_from(args)?;
-    let budget = args.f64_or("budget", 0.2)?;
+    let budget = budget_from(args)?;
     let steps = args.usize_or("steps", 150)?;
-    let opts = opts_from(args, ApproxToggles::OURS)?;
+    let profile = profile_from(args)?;
     let mut rt = Runtime::new()?;
     println!("== e2e: {}/{} budget {:.0}% ==", cell.target, cell.bench, budget * 100.0);
 
-    let ours = exp::select(&cell, Method::Ours, budget, &opts, None)?;
+    let ours =
+        exp::select(&cell, Method::Ours, budget, &profile, ApproxToggles::OURS, None)?;
     let delay = ours.outcome.as_ref().unwrap().total_delay();
     println!(
         "[select/ours] {} points, simulated MPC delay {}",
@@ -266,12 +361,20 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     print_curve("ours", &curve);
     println!("[train/ours] test accuracy {:.2}%", acc * 100.0);
 
-    let random = exp::select(&cell, Method::Random, budget, &opts, None)?;
+    let random =
+        exp::select(&cell, Method::Random, budget, &profile, ApproxToggles::OURS, None)?;
     let (_c, acc_r) = exp::train_and_eval(&cell, &mut rt, &random, steps, 11)?;
     println!("[train/random] test accuracy {:.2}%  (ours {:+.2})", acc_r * 100.0,
              (acc - acc_r) * 100.0);
 
-    let oracle = exp::select(&cell, Method::Oracle, budget, &opts, Some(&mut rt))?;
+    let oracle = exp::select(
+        &cell,
+        Method::Oracle,
+        budget,
+        &profile,
+        ApproxToggles::OURS,
+        Some(&mut rt),
+    )?;
     let (_c, acc_o) = exp::train_and_eval(&cell, &mut rt, &oracle, steps, 11)?;
     println!("[train/oracle] test accuracy {:.2}%  (ours {:+.2})", acc_o * 100.0,
              (acc - acc_o) * 100.0);
@@ -292,16 +395,16 @@ fn print_curve(tag: &str, curve: &[f32]) {
 
 fn cmd_train(args: &Args) -> Result<()> {
     let cell = cell_from(args)?;
-    let budget = args.f64_or("budget", 0.2)?;
+    let budget = budget_from(args)?;
     let steps = args.usize_or("steps", 150)?;
     let (method, approx) = method_from(&args.get_or("method", "ours"))?;
-    let opts = opts_from(args, approx)?;
+    let profile = profile_from(args)?;
     let mut rt = Runtime::new()?;
     let needs_rt = method == Method::Oracle;
     let purchase = if needs_rt {
-        exp::select(&cell, method, budget, &opts, Some(&mut rt))?
+        exp::select(&cell, method, budget, &profile, approx, Some(&mut rt))?
     } else {
-        exp::select(&cell, method, budget, &opts, None)?
+        exp::select(&cell, method, budget, &profile, approx, None)?
     };
     let (curve, acc) = exp::train_and_eval(&cell, &mut rt, &purchase, steps, 11)?;
     print_curve(&method.label(), &curve);
@@ -316,14 +419,15 @@ fn cmd_appraise(args: &Args) -> Result<()> {
     use crate::tensor::{TensorF, TensorR};
 
     let cell = cell_from(args)?;
-    let budget = args.f64_or("budget", 0.2)?;
+    let budget = budget_from(args)?;
     let threshold = args.f64_or("threshold", 0.3)? as f32;
-    let opts = opts_from(args, ApproxToggles::OURS)?;
+    let profile = profile_from(args)?;
     let mut rt = Runtime::new()?;
     // appraisal = average entropy of the selected set under the TARGET
     // model (computed over MPC on the already-shared entropies; here we
     // regenerate them via the oracle path then appraise over MPC)
-    let purchase = exp::select(&cell, Method::Ours, budget, &opts, None)?;
+    let purchase =
+        exp::select(&cell, Method::Ours, budget, &profile, ApproxToggles::OURS, None)?;
     let ds = cell.train_dataset()?;
     let weights = WeightFile::load(&cell.target_init())?;
     let ent = crate::train::oracle_entropies(
@@ -365,7 +469,7 @@ fn cmd_appraise(args: &Args) -> Result<()> {
 
 fn cmd_plan(args: &Args) -> Result<()> {
     let cell = cell_from(args)?;
-    let budget = args.f64_or("budget", 0.2)?;
+    let budget = budget_from(args)?;
     let batch = args.usize_or("batch", 8)?;
     let wf = WeightFile::load(&cell.proxy_phase(2))?;
     let base = wf.config()?;
@@ -397,17 +501,48 @@ fn cmd_plan(args: &Args) -> Result<()> {
 mod tests {
     use super::*;
 
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
     #[test]
     fn args_parse_flags_and_positional() {
-        let argv: Vec<String> = ["bench", "table1", "--quick", "--budget", "0.3"]
-            .iter()
-            .map(|s| s.to_string())
-            .collect();
-        let a = Args::parse(&argv).unwrap();
+        let a = Args::parse(&argv(&["bench", "table1", "--quick", "--steps", "120"]))
+            .unwrap();
         assert_eq!(a.command, "bench");
         assert_eq!(a.positional, vec!["table1"]);
         assert!(a.has("quick"));
-        assert_eq!(a.f64_or("budget", 0.2).unwrap(), 0.3);
+        assert_eq!(a.usize_or("steps", 150).unwrap(), 120);
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_per_command() {
+        let err = Args::parse(&argv(&["select", "--bogus", "1"])).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unknown flag --bogus"), "{msg}");
+        assert!(msg.contains("--budget"), "should list known flags: {msg}");
+        // --quick belongs to `bench`, not `select`
+        assert!(Args::parse(&argv(&["select", "--quick"])).is_err());
+        // unknown command
+        assert!(Args::parse(&argv(&["frobnicate"])).is_err());
+    }
+
+    #[test]
+    fn value_flags_take_negative_numbers_and_require_values() {
+        let a = Args::parse(&argv(&["select", "--budget", "-0.2"])).unwrap();
+        assert_eq!(a.f64_or("budget", 0.2).unwrap(), -0.2);
+        assert!(budget_from(&a).is_err(), "range check rejects -0.2");
+        // a value flag at end of line is an error…
+        assert!(Args::parse(&argv(&["select", "--budget"])).is_err());
+        // …and so is one followed by another flag
+        assert!(Args::parse(&argv(&["select", "--budget", "--overlap"])).is_err());
+    }
+
+    #[test]
+    fn boolean_flags_do_not_eat_positionals() {
+        let a = Args::parse(&argv(&["bench", "--quick", "table1"])).unwrap();
+        assert!(a.has("quick"));
+        assert_eq!(a.positional, vec!["table1"]);
     }
 
     #[test]
@@ -421,5 +556,19 @@ mod tests {
         assert_eq!(method_from("ours").unwrap().0, Method::Ours);
         assert_eq!(method_from("bolt").unwrap().0, Method::Variant("bolt"));
         assert!(method_from("nope").is_err());
+    }
+
+    #[test]
+    fn profile_from_flags() {
+        let a = Args::parse(&argv(&[
+            "select", "--batch", "8", "--lanes", "4", "--overlap", "--policy",
+            "serial",
+        ]))
+        .unwrap();
+        let p = profile_from(&a).unwrap();
+        assert_eq!(p.batch, 8);
+        assert_eq!(p.lanes, 4);
+        assert!(p.overlap);
+        assert_eq!(p.policy, SchedPolicy::Sequential);
     }
 }

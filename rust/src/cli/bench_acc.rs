@@ -11,7 +11,9 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::coordinator::{multi_phase_select, PhaseSchedule, ProxySpec, SelectionOptions};
+use crate::coordinator::{
+    ModelSource, PhaseSchedule, ProxySpec, RuntimeProfile, SelectionJob,
+};
 use crate::exp::{self, Cell, Method};
 use crate::models::ApproxToggles;
 use crate::runtime::Runtime;
@@ -49,11 +51,11 @@ fn accuracy_for(
     budget: f64,
     steps: usize,
 ) -> Result<f32> {
-    let opts = SelectionOptions { batch: 16, approx, ..Default::default() };
+    let profile = RuntimeProfile::default();
     let purchase = if method == Method::Oracle {
-        exp::select(cell, method, budget, &opts, Some(rt))?
+        exp::select(cell, method, budget, &profile, approx, Some(rt))?
     } else {
-        exp::select(cell, method, budget, &opts, None)?
+        exp::select(cell, method, budget, &profile, approx, None)?
     };
     let (_curve, acc) = exp::train_and_eval(cell, rt, &purchase, steps, 11)?;
     Ok(acc)
@@ -238,12 +240,12 @@ pub fn schedule_accuracy(
     let p2 = cell.proxy_phase(2);
     let spec1 = ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 };
     let spec2 = ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 };
-    let (paths, schedule): (Vec<&Path>, PhaseSchedule) = match phases {
-        1 => (vec![&p2], PhaseSchedule::new(vec![spec2], vec![frac])),
+    let (models, schedule): (Vec<ModelSource>, PhaseSchedule) = match phases {
+        1 => (vec![p2.into()], PhaseSchedule::new(vec![spec2], vec![frac])),
         2 => {
             let mid = (1.5 * frac).min(1.0);
             (
-                vec![&p1, &p2],
+                vec![p1.into(), p2.into()],
                 PhaseSchedule::new(vec![spec1, spec2], vec![mid, frac / mid]),
             )
         }
@@ -251,7 +253,7 @@ pub fn schedule_accuracy(
             let s1 = (2.5 * frac).min(1.0);
             let s2 = ((1.5 * frac) / s1).min(1.0);
             (
-                vec![&p1, &p1, &p2],
+                vec![(&p1).into(), p1.into(), p2.into()],
                 PhaseSchedule::new(
                     vec![spec1, spec1, spec2],
                     vec![s1, s2, frac / (s1 * s2)],
@@ -259,8 +261,11 @@ pub fn schedule_accuracy(
             )
         }
     };
-    let opts = SelectionOptions { batch: 16, ..Default::default() };
-    let outcome = multi_phase_select(&paths, &schedule, &ds, candidates, &opts)?;
+    let outcome = SelectionJob::builder(models, &ds)
+        .candidates(candidates)
+        .schedule(schedule)
+        .build()?
+        .run()?;
     let purchase = exp::Purchase {
         indices: outcome.selected.clone(),
         outcome: Some(outcome),

@@ -1,0 +1,749 @@
+//! `SelectionJob` — the one typed, validated, observable entry point for
+//! private selection.
+//!
+//! The paper's pipeline (bootstrap purchase → multi-phase MPC selection →
+//! transaction, Fig 1) used to be reachable only through a sprawl of free
+//! functions driven by a flat options struct.  A job replaces that with a
+//! builder over typed sub-configs:
+//!
+//!  * [`RuntimeProfile`] — how to execute (batch size, pipeline lanes,
+//!    setup/drain overlap, IO-scheduling policy, WAN model);
+//!  * [`PrivacyMode`] — what may leave the MPC boundary.  Production mode
+//!    has no knobs at all; the test-only backdoors (`reveal_entropies`,
+//!    `capture_shares`) live behind a `#[doc(hidden)]` Debug variant, so
+//!    they can no longer be switched on by a stray field;
+//!  * [`PhaseSchedule`] — the proxy ladder and its selectivities (or
+//!    exact [`keep_counts`](SelectionJobBuilder::keep_counts)).
+//!
+//! `build()` validates everything up front (lanes ≥ 1, budget ∈ (0, 1],
+//! schedule/model-count consistency, candidate bounds); [`SelectionJob::run`]
+//! is then the SINGLE driver: one parameterized loop that dispatches
+//! internally to the serial oracle, the broadcast-session pipelined
+//! runtime, or the overlapped scheduler — the paths that previously lived
+//! in duplicated `multi_phase_select` / `multi_phase_select_overlapped`
+//! bodies.  Jobs emit typed [`JobEvent`]s through a [`JobObserver`], and
+//! many jobs can run concurrently under a
+//! [`SelectionService`](super::service::SelectionService) with per-job
+//! randomness namespacing (proven byte-identical to isolated runs in
+//! tests/service_equiv.rs).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::models::{ApproxToggles, WeightFile};
+use crate::mpc::dealer::Hub;
+use crate::mpc::net::NetConfig;
+
+use super::iosched::SchedPolicy;
+use super::observe::{JobEvent, JobObserver, PhaseObs};
+use super::phase::PhaseSchedule;
+use super::selector::{
+    self, PhaseOutcome, PhaseSession, SelectionOptions, SelectionOutcome,
+};
+
+// ---------------------------------------------------------------------------
+// Typed sub-configs
+// ---------------------------------------------------------------------------
+
+/// Where one phase's proxy weights come from.
+#[derive(Clone, Debug)]
+pub enum ModelSource {
+    /// Lazily loaded from an `.sfw` file — the production shape; the
+    /// overlapped scheduler loads the NEXT phase's file on a background
+    /// thread while the current phase drains.
+    File(PathBuf),
+    /// Already-loaded weights (planners, tests, single-phase callers).
+    Loaded(Arc<WeightFile>),
+}
+
+impl ModelSource {
+    fn load(&self, phase: usize) -> Result<Arc<WeightFile>> {
+        match self {
+            ModelSource::File(p) => WeightFile::load(p)
+                .map(Arc::new)
+                .with_context(|| format!("phase {phase} weights {p:?}")),
+            ModelSource::Loaded(wf) => Ok(wf.clone()),
+        }
+    }
+}
+
+impl From<&Path> for ModelSource {
+    fn from(p: &Path) -> Self {
+        ModelSource::File(p.to_path_buf())
+    }
+}
+
+impl From<PathBuf> for ModelSource {
+    fn from(p: PathBuf) -> Self {
+        ModelSource::File(p)
+    }
+}
+
+impl From<&PathBuf> for ModelSource {
+    fn from(p: &PathBuf) -> Self {
+        ModelSource::File(p.clone())
+    }
+}
+
+impl From<WeightFile> for ModelSource {
+    fn from(wf: WeightFile) -> Self {
+        ModelSource::Loaded(Arc::new(wf))
+    }
+}
+
+impl From<&WeightFile> for ModelSource {
+    fn from(wf: &WeightFile) -> Self {
+        ModelSource::Loaded(Arc::new(wf.clone()))
+    }
+}
+
+impl From<Arc<WeightFile>> for ModelSource {
+    fn from(wf: Arc<WeightFile>) -> Self {
+        ModelSource::Loaded(wf)
+    }
+}
+
+/// How a job executes: the performance knobs, none of which may change a
+/// byte of the selection (enforced by the equivalence suites).
+#[derive(Clone, Copy, Debug)]
+pub struct RuntimeProfile {
+    /// Candidates per MPC forward batch.
+    pub batch: usize,
+    /// Concurrent MPC lanes for candidate-batch evaluation. 1 = serial.
+    pub lanes: usize,
+    /// Run phase i+1's session setup behind phase i's drain and stream
+    /// confirmed survivors into the next phase's token prefetch.
+    pub overlap: bool,
+    /// IO-scheduling policy for the simulated WAN delay attribution.
+    pub policy: SchedPolicy,
+    /// WAN model used for the simulated delay attribution.
+    pub net: NetConfig,
+}
+
+impl Default for RuntimeProfile {
+    fn default() -> Self {
+        RuntimeProfile {
+            batch: 16,
+            lanes: 1,
+            overlap: false,
+            policy: SchedPolicy::CoalescedOverlapped,
+            net: NetConfig::default(),
+        }
+    }
+}
+
+/// What may leave the MPC boundary during a job.
+///
+/// [`Production`](PrivacyMode::Production) is the paper's contract:
+/// entropies stay secret-shared end to end; only survivor indices and
+/// QuickSelect's partition bits are revealed.  The test backdoors needed
+/// by the numerics cross-checks and the byte-identity suites live behind
+/// the hidden Debug variant — production call sites cannot flip them by
+/// accident because the variant does not appear in the documented API.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PrivacyMode {
+    /// No opening beyond the declared leakage.
+    #[default]
+    Production,
+    /// TEST/VALIDATION ONLY — opens entropies and/or copies raw entropy
+    /// shares into the phase outcomes.
+    #[doc(hidden)]
+    Debug { reveal_entropies: bool, capture_shares: bool },
+}
+
+impl PrivacyMode {
+    pub(crate) fn reveal_entropies(self) -> bool {
+        matches!(self, PrivacyMode::Debug { reveal_entropies: true, .. })
+    }
+
+    pub(crate) fn capture_shares(self) -> bool {
+        matches!(self, PrivacyMode::Debug { capture_shares: true, .. })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Builder for a [`SelectionJob`]; start from [`SelectionJob::builder`].
+pub struct SelectionJobBuilder<'a> {
+    models: Vec<ModelSource>,
+    dataset: &'a Dataset,
+    candidates: Option<Vec<usize>>,
+    schedule: Option<PhaseSchedule>,
+    keep_counts: Option<Vec<usize>>,
+    runtime: RuntimeProfile,
+    privacy: PrivacyMode,
+    approx: ApproxToggles,
+    dealer_seed: u64,
+    job_tag: u64,
+    observer: Option<Arc<dyn JobObserver>>,
+}
+
+impl<'a> SelectionJobBuilder<'a> {
+    /// Candidate dataset indices to select from (default: the whole
+    /// dataset).  Indices must be in range and distinct; order is
+    /// preserved.
+    pub fn candidates(mut self, candidates: Vec<usize>) -> Self {
+        self.candidates = Some(candidates);
+        self
+    }
+
+    /// The multi-phase schedule (one proxy spec + selectivity per phase).
+    pub fn schedule(mut self, schedule: PhaseSchedule) -> Self {
+        self.schedule = Some(schedule);
+        self
+    }
+
+    /// Exact survivor counts per phase, overriding the schedule's
+    /// selectivity-derived rounding — the form single-phase callers and
+    /// the planner use ("keep exactly k of n").
+    pub fn keep_counts(mut self, counts: Vec<usize>) -> Self {
+        self.keep_counts = Some(counts);
+        self
+    }
+
+    /// Execution profile (batch/lanes/overlap/policy/net).
+    pub fn runtime(mut self, profile: RuntimeProfile) -> Self {
+        self.runtime = profile;
+        self
+    }
+
+    /// Privacy mode (default: [`PrivacyMode::Production`]).
+    pub fn privacy(mut self, mode: PrivacyMode) -> Self {
+        self.privacy = mode;
+        self
+    }
+
+    /// Ablation toggles (Table 2); default OURS.
+    pub fn approx(mut self, approx: ApproxToggles) -> Self {
+        self.approx = approx;
+        self
+    }
+
+    /// Dealer seed for the correlated-randomness streams.
+    pub fn dealer_seed(mut self, seed: u64) -> Self {
+        self.dealer_seed = seed;
+        self
+    }
+
+    /// Randomness namespace for this job (default 0 — the classic
+    /// streams).  Jobs running concurrently under one
+    /// [`SelectionService`](super::service::SelectionService) should carry
+    /// distinct tags; a job's output depends only on its own tag, so the
+    /// same `(seed, tag)` job run alone reproduces the service run
+    /// byte for byte.
+    pub fn job_tag(mut self, tag: u64) -> Self {
+        self.job_tag = tag;
+        self
+    }
+
+    /// Attach a progress observer (see [`JobEvent`]).
+    pub fn observer(mut self, observer: Arc<dyn JobObserver>) -> Self {
+        self.observer = Some(observer);
+        self
+    }
+
+    /// Validate the configuration and produce a runnable job.
+    pub fn build(self) -> Result<SelectionJob<'a>> {
+        ensure!(!self.models.is_empty(), "a selection job needs >= 1 phase model");
+        ensure!(
+            self.runtime.lanes >= 1,
+            "RuntimeProfile.lanes must be >= 1 (got {})",
+            self.runtime.lanes
+        );
+        ensure!(
+            self.runtime.batch >= 1,
+            "RuntimeProfile.batch must be >= 1 (got {})",
+            self.runtime.batch
+        );
+        ensure!(
+            self.runtime.net.bandwidth > 0.0 && self.runtime.net.latency >= 0.0,
+            "RuntimeProfile.net must have positive bandwidth and non-negative latency"
+        );
+        let candidates = match self.candidates {
+            Some(c) => c,
+            None => (0..self.dataset.n).collect(),
+        };
+        ensure!(!candidates.is_empty(), "a selection job needs >= 1 candidate");
+        if let Some(&bad) = candidates.iter().find(|&&i| i >= self.dataset.n) {
+            anyhow::bail!(
+                "candidate index {bad} out of range (dataset has {} points)",
+                self.dataset.n
+            );
+        }
+        let mut uniq = std::collections::HashSet::with_capacity(candidates.len());
+        if let Some(&dup) = candidates.iter().find(|&&i| !uniq.insert(i)) {
+            anyhow::bail!("candidate index {dup} appears more than once");
+        }
+        let n_phases = self.models.len();
+        if let Some(s) = &self.schedule {
+            s.validate()?;
+            ensure!(
+                s.n_phases() == n_phases,
+                "schedule has {} phases but {} phase models were given",
+                s.n_phases(),
+                n_phases
+            );
+        }
+        let counts = match (&self.schedule, &self.keep_counts) {
+            (_, Some(k)) => {
+                ensure!(
+                    k.len() == n_phases,
+                    "keep_counts has {} entries but the job has {} phases",
+                    k.len(),
+                    n_phases
+                );
+                let mut pool = candidates.len();
+                for (i, &keep) in k.iter().enumerate() {
+                    ensure!(
+                        keep <= pool,
+                        "keep_counts[{i}] = {keep} exceeds the {pool} candidates \
+                         reaching phase {i}"
+                    );
+                    pool = keep;
+                }
+                k.clone()
+            }
+            (Some(s), None) => s.survivor_counts(candidates.len()),
+            (None, None) => anyhow::bail!(
+                "a selection job needs .schedule(...) or .keep_counts(...)"
+            ),
+        };
+        Ok(SelectionJob {
+            models: self.models,
+            dataset: self.dataset,
+            candidates,
+            schedule: self.schedule,
+            counts,
+            profile: self.runtime,
+            privacy: self.privacy,
+            approx: self.approx,
+            dealer_seed: self.dealer_seed,
+            job_tag: self.job_tag,
+            observer: self.observer,
+            hub: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The job
+// ---------------------------------------------------------------------------
+
+/// A validated private-selection job: N proxy phases over one candidate
+/// pool, ready to [`run`](SelectionJob::run).
+pub struct SelectionJob<'a> {
+    models: Vec<ModelSource>,
+    dataset: &'a Dataset,
+    candidates: Vec<usize>,
+    schedule: Option<PhaseSchedule>,
+    counts: Vec<usize>,
+    profile: RuntimeProfile,
+    privacy: PrivacyMode,
+    approx: ApproxToggles,
+    dealer_seed: u64,
+    job_tag: u64,
+    observer: Option<Arc<dyn JobObserver>>,
+    /// Shared preprocessing hub, set by the service; `None` = one fresh
+    /// hub per phase (the standalone shape).
+    pub(crate) hub: Option<Arc<Hub>>,
+}
+
+impl<'a> SelectionJob<'a> {
+    /// Start building a job: `models` are the per-phase proxy weights
+    /// (paths or loaded [`WeightFile`]s), `dataset` is the data owner's
+    /// candidate corpus.
+    pub fn builder<M, I>(models: I, dataset: &'a Dataset) -> SelectionJobBuilder<'a>
+    where
+        I: IntoIterator<Item = M>,
+        M: Into<ModelSource>,
+    {
+        SelectionJobBuilder {
+            models: models.into_iter().map(Into::into).collect(),
+            dataset,
+            candidates: None,
+            schedule: None,
+            keep_counts: None,
+            runtime: RuntimeProfile::default(),
+            privacy: PrivacyMode::default(),
+            approx: ApproxToggles::OURS,
+            dealer_seed: 0x5e1ec7,
+            job_tag: 0,
+            observer: None,
+        }
+    }
+
+    pub fn n_phases(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// The resolved per-phase survivor counts.
+    pub fn survivor_counts(&self) -> &[usize] {
+        &self.counts
+    }
+
+    pub fn dealer_seed(&self) -> u64 {
+        self.dealer_seed
+    }
+
+    pub fn job_tag(&self) -> u64 {
+        self.job_tag
+    }
+
+    pub fn schedule(&self) -> Option<&PhaseSchedule> {
+        self.schedule.as_ref()
+    }
+
+    /// The internal execution carrier for the selector machinery.
+    fn exec_opts(&self) -> SelectionOptions {
+        SelectionOptions {
+            batch: self.profile.batch,
+            net: self.profile.net,
+            policy: self.profile.policy,
+            dealer_seed: self.dealer_seed,
+            approx: self.approx,
+            reveal_entropies: self.privacy.reveal_entropies(),
+            lanes: self.profile.lanes,
+            overlap: self.profile.overlap,
+            capture_shares: self.privacy.capture_shares(),
+            job_tag: self.job_tag,
+        }
+    }
+
+    /// The hub a phase session runs on: the service's shared hub, or a
+    /// fresh one per phase (both value-transparent).
+    fn phase_hub(&self) -> Arc<Hub> {
+        self.hub.clone().unwrap_or_else(Hub::new)
+    }
+
+    fn emit(&self, event: &JobEvent<'_>) {
+        if let Some(o) = &self.observer {
+            o.on_event(event);
+        }
+    }
+
+    /// Run the job to completion — THE multi-phase driver.
+    ///
+    /// One parameterized loop covers every execution shape:
+    ///
+    ///  * `lanes <= 1`, no overlap — the serial reference oracle (inline
+    ///    session setup, the path every equivalence suite judges against);
+    ///  * `lanes > 1` — one broadcast session setup per phase, cloned into
+    ///    concurrent engine lanes;
+    ///  * `overlap` — phase i+1's setup (file load + weight sharing +
+    ///    delta pre-open) runs on a background thread while phase i
+    ///    drains, and QuickSelect streams survivors into the next phase's
+    ///    token prefetch.
+    ///
+    /// All shapes produce byte-identical selections (survivors, opened
+    /// scores, entropy shares) — only wall-clock moves.
+    pub fn run(&self) -> Result<SelectionOutcome> {
+        let opts = self.exec_opts();
+        let n_phases = self.counts.len();
+        let overlap = self.profile.overlap;
+        let mut candidates = self.candidates.clone();
+        let mut cand_tokens: Arc<Vec<u32>> =
+            Arc::new(selector::gather_tokens(self.dataset, &candidates));
+        let mut phases: Vec<PhaseOutcome> = Vec::with_capacity(n_phases);
+        let mut prefetch: Option<thread::JoinHandle<Result<PhaseSession>>> = None;
+        for (i, &keep) in self.counts.iter().enumerate() {
+            let n = candidates.len();
+            ensure!(keep <= n, "phase {i}: keep {keep} exceeds {n} candidates");
+            self.emit(&JobEvent::PhaseStarted { phase: i, n_candidates: n, keep });
+            let obs = self.observer.as_ref().map(|o| PhaseObs {
+                obs: o.clone(),
+                cands: Arc::new(candidates.clone()),
+                phase: i,
+            });
+            let n_batches = n.div_ceil(opts.batch);
+            let eff_lanes = opts.lanes.clamp(1, n_batches.max(1));
+            let (body, streamed) = if !overlap && eff_lanes <= 1 {
+                // barrier + serial: the reference oracle, setup inline
+                let weights = self.models[i].load(i)?;
+                let cfg = weights.config()?;
+                ensure!(
+                    cfg.seq_len == self.dataset.seq_len,
+                    "phase {i}: model seq_len {} != dataset seq_len {}",
+                    cfg.seq_len,
+                    self.dataset.seq_len
+                );
+                let body = selector::run_phase_serial(
+                    weights,
+                    cfg,
+                    cand_tokens.clone(),
+                    n,
+                    keep,
+                    &opts,
+                    i,
+                    obs,
+                )?;
+                (body, None)
+            } else {
+                // broadcast-session path; with overlap the session was
+                // prefetched behind the previous phase's drain, and only
+                // the stall (if it outlived the drain) stays on the clock
+                let t_wait = Instant::now();
+                let session = match prefetch.take() {
+                    Some(h) => h
+                        .join()
+                        .map_err(|_| anyhow!("phase {i} setup thread panicked"))??,
+                    None => {
+                        let weights = self.models[i].load(i)?;
+                        selector::setup_phase_session_on(
+                            self.phase_hub(),
+                            weights,
+                            opts.approx,
+                            opts.dealer_seed,
+                            i,
+                            opts.job_tag,
+                        )?
+                    }
+                };
+                let setup_overlapped = overlap && i > 0;
+                let stall_s = if setup_overlapped {
+                    t_wait.elapsed().as_secs_f64()
+                } else {
+                    0.0
+                };
+                ensure!(
+                    session.seq_len() == self.dataset.seq_len,
+                    "phase {i}: model seq_len {} != dataset seq_len {}",
+                    session.seq_len(),
+                    self.dataset.seq_len
+                );
+                // kick off phase i+1's setup NOW — it overlaps this drain
+                if overlap && i + 1 < n_phases {
+                    let src = self.models[i + 1].clone();
+                    let hub = self.phase_hub();
+                    let (approx, seed, job) =
+                        (opts.approx, opts.dealer_seed, opts.job_tag);
+                    let next = i + 1;
+                    prefetch = Some(thread::spawn(move || {
+                        let weights = src.load(next)?;
+                        selector::setup_phase_session_on(
+                            hub, weights, approx, seed, next, job,
+                        )
+                    }));
+                }
+                // with a next phase to feed, stream survivors into its
+                // token gather as QuickSelect confirms them
+                let (drain, rows) = if overlap && i + 1 < n_phases {
+                    let (tx, rx) = mpsc::channel::<usize>();
+                    let (drain, rows) = thread::scope(|s| {
+                        let cands: &[usize] = &candidates;
+                        let ds = self.dataset;
+                        let gather = s.spawn(move || {
+                            let mut rows: Vec<(usize, Vec<u32>)> =
+                                Vec::with_capacity(keep);
+                            while let Ok(j) = rx.recv() {
+                                let di = cands[j];
+                                rows.push((di, ds.example(di).to_vec()));
+                            }
+                            rows
+                        });
+                        let drain = selector::run_phase_drain(
+                            &session,
+                            cand_tokens.clone(),
+                            n,
+                            keep,
+                            &opts,
+                            Some(tx),
+                            obs,
+                        );
+                        let rows =
+                            gather.join().expect("survivor gather thread panicked");
+                        (drain, rows)
+                    });
+                    (drain, Some(rows))
+                } else {
+                    let drain = selector::run_phase_drain(
+                        &session,
+                        cand_tokens.clone(),
+                        n,
+                        keep,
+                        &opts,
+                        None,
+                        obs,
+                    );
+                    (drain, None)
+                };
+                let drain = match drain {
+                    Ok(d) => d,
+                    Err(e) => {
+                        join_pending(&mut prefetch);
+                        return Err(e);
+                    }
+                };
+                let body = selector::assemble_session_body(
+                    session,
+                    drain,
+                    setup_overlapped,
+                    stall_s,
+                );
+                (body, rows)
+            };
+            let outcome = selector::finish_outcome(body, &candidates, &opts);
+            candidates = outcome.survivors.clone();
+            self.emit(&JobEvent::PhaseFinished { phase: i, outcome: &outcome });
+            if i + 1 < n_phases {
+                cand_tokens = match streamed {
+                    // streamed rows arrive in confirmation order —
+                    // reassemble in SURVIVOR order, exactly the gather the
+                    // barrier path performs (correct even for a
+                    // caller-supplied unsorted candidate list)
+                    Some(rows) => {
+                        let mut by_idx: HashMap<usize, Vec<u32>> =
+                            rows.into_iter().collect();
+                        let mut toks =
+                            Vec::with_capacity(candidates.len() * self.dataset.seq_len);
+                        for &di in &candidates {
+                            let row = by_idx
+                                .remove(&di)
+                                .expect("streamed rows must cover the survivor set");
+                            toks.extend_from_slice(&row);
+                        }
+                        debug_assert!(by_idx.is_empty(), "stray streamed rows");
+                        Arc::new(toks)
+                    }
+                    None => Arc::new(selector::gather_tokens(self.dataset, &candidates)),
+                };
+            }
+            phases.push(outcome);
+        }
+        Ok(SelectionOutcome { selected: candidates, phases })
+    }
+}
+
+/// Join a still-pending prefetched session setup before propagating an
+/// error, so a failed drain cannot leave a detached setup thread running
+/// MPC against a (possibly service-shared) hub after `run()` returns.
+fn join_pending(prefetch: &mut Option<thread::JoinHandle<Result<PhaseSession>>>) {
+    if let Some(h) = prefetch.take() {
+        let _ = h.join();
+    }
+}
+
+/// Bridge for the `#[deprecated]` free-function shims: build + run a job
+/// from the legacy flat-options surface, preserving its exact behavior.
+pub(crate) fn run_legacy(
+    phase_weights: &[&Path],
+    schedule: &PhaseSchedule,
+    dataset: &Dataset,
+    initial_candidates: Vec<usize>,
+    opts: &SelectionOptions,
+    force_overlap: bool,
+) -> Result<SelectionOutcome> {
+    let mut builder = SelectionJob::builder(phase_weights.iter().copied(), dataset)
+        .candidates(initial_candidates)
+        .schedule(schedule.clone())
+        .runtime(RuntimeProfile {
+            batch: opts.batch,
+            lanes: opts.lanes,
+            overlap: opts.overlap || force_overlap,
+            policy: opts.policy,
+            net: opts.net,
+        })
+        .approx(opts.approx)
+        .dealer_seed(opts.dealer_seed)
+        .job_tag(opts.job_tag);
+    if opts.reveal_entropies || opts.capture_shares {
+        builder = builder.privacy(PrivacyMode::Debug {
+            reveal_entropies: opts.reveal_entropies,
+            capture_shares: opts.capture_shares,
+        });
+    }
+    builder.build()?.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{synth, SynthSpec};
+
+    fn tiny_ds(n: usize) -> Dataset {
+        synth(&SynthSpec { seq_len: 16, vocab: 64, ..Default::default() }, n, false, 5)
+    }
+
+    #[test]
+    fn build_rejects_bad_configs() {
+        let ds = tiny_ds(32);
+        let p = std::env::temp_dir().join("sf_job_build").join("p.sfw");
+        crate::coordinator::testutil::write_random_proxy_sfw(&p, 1, 1, 2, 16, 64, 2, 8);
+
+        // no schedule and no keep counts
+        assert!(SelectionJob::builder([p.as_path()], &ds).build().is_err());
+        // zero lanes
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .keep_counts(vec![4])
+            .runtime(RuntimeProfile { lanes: 0, ..Default::default() })
+            .build()
+            .is_err());
+        // zero batch
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .keep_counts(vec![4])
+            .runtime(RuntimeProfile { batch: 0, ..Default::default() })
+            .build()
+            .is_err());
+        // keep exceeds pool
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .keep_counts(vec![33])
+            .build()
+            .is_err());
+        // candidate out of range
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .candidates(vec![0, 99])
+            .keep_counts(vec![1])
+            .build()
+            .is_err());
+        // duplicate candidate (would break the streamed token reassembly)
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .candidates(vec![3, 5, 3])
+            .keep_counts(vec![1])
+            .build()
+            .is_err());
+        // schedule length mismatch
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .schedule(PhaseSchedule::default_two_phase(false, 2, 0.25))
+            .build()
+            .is_err());
+        // invalid selectivity smuggled past PhaseSchedule::new's assert
+        let bad = PhaseSchedule {
+            proxies: vec![crate::coordinator::ProxySpec {
+                n_layers: 1,
+                n_heads: 1,
+                d_mlp: 2,
+            }],
+            selectivities: vec![1.5],
+        };
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .schedule(bad)
+            .build()
+            .is_err());
+        // a valid config builds
+        let job = SelectionJob::builder([p.as_path()], &ds)
+            .keep_counts(vec![4])
+            .build()
+            .unwrap();
+        assert_eq!(job.n_phases(), 1);
+        assert_eq!(job.survivor_counts(), &[4]);
+    }
+
+    #[test]
+    fn missing_weight_file_is_a_clean_error() {
+        let ds = tiny_ds(8);
+        let gone = std::env::temp_dir().join("sf_job_missing").join("nope.sfw");
+        let job = SelectionJob::builder([gone.as_path()], &ds)
+            .keep_counts(vec![2])
+            .build()
+            .unwrap();
+        let err = job.run().unwrap_err();
+        assert!(format!("{err:#}").contains("phase 0"), "{err:#}");
+    }
+}

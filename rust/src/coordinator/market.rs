@@ -2,6 +2,8 @@
 //! clear/MPC/clear stages of Fig 1 — pre-selection bootstrap purchase,
 //! private multi-phase selection, final transaction.
 
+use anyhow::{ensure, Result};
+
 use crate::util::Rng;
 
 /// Purchase budget, expressed in datapoints.
@@ -14,19 +16,56 @@ pub struct Budget {
 }
 
 impl Budget {
+    /// Build a budget from dataset fractions, CLAMPING both into their
+    /// valid ranges (`fraction` → [0, 1], `bootstrap_fraction` → [0, 1];
+    /// NaN → 0).  Rounding or an oversized bootstrap can otherwise make
+    /// `bootstrap_points() > total` and underflow
+    /// [`selection_points`](Budget::selection_points) — see
+    /// [`try_from_fraction`](Budget::try_from_fraction) for the rejecting
+    /// form.
     pub fn from_fraction(n_dataset: usize, fraction: f64, bootstrap_fraction: f64) -> Self {
+        let clamp01 = |x: f64| if x.is_finite() { x.clamp(0.0, 1.0) } else { 0.0 };
         Budget {
-            total: ((n_dataset as f64) * fraction).round() as usize,
-            bootstrap_fraction,
+            total: ((n_dataset as f64) * clamp01(fraction)).round() as usize,
+            bootstrap_fraction: clamp01(bootstrap_fraction),
         }
     }
 
-    pub fn bootstrap_points(&self) -> usize {
-        ((self.total as f64) * self.bootstrap_fraction).round() as usize
+    /// Like [`from_fraction`](Budget::from_fraction) but REJECTS
+    /// out-of-range fractions instead of clamping them — the form CLI /
+    /// config paths should use so a typo'd `--budget -0.2` fails loudly.
+    pub fn try_from_fraction(
+        n_dataset: usize,
+        fraction: f64,
+        bootstrap_fraction: f64,
+    ) -> Result<Self> {
+        ensure!(
+            fraction.is_finite() && fraction > 0.0 && fraction <= 1.0,
+            "budget fraction {fraction} outside (0, 1]"
+        );
+        ensure!(
+            bootstrap_fraction.is_finite()
+                && (0.0..=1.0).contains(&bootstrap_fraction),
+            "bootstrap fraction {bootstrap_fraction} outside [0, 1]"
+        );
+        Ok(Budget {
+            total: ((n_dataset as f64) * fraction).round() as usize,
+            bootstrap_fraction,
+        })
     }
 
+    /// Bootstrap points, never exceeding `total` (rounding of
+    /// `total * bootstrap_fraction` could otherwise overshoot by one).
+    pub fn bootstrap_points(&self) -> usize {
+        (((self.total as f64) * self.bootstrap_fraction).round() as usize)
+            .min(self.total)
+    }
+
+    /// Points left for the MPC selection phases after the bootstrap —
+    /// saturating, so a maxed-out bootstrap yields 0 instead of an
+    /// underflow panic.
     pub fn selection_points(&self) -> usize {
-        self.total - self.bootstrap_points()
+        self.total.saturating_sub(self.bootstrap_points())
     }
 }
 
@@ -93,6 +132,34 @@ mod tests {
         assert_eq!(b.total, 200);
         assert_eq!(b.bootstrap_points(), 50);
         assert_eq!(b.selection_points(), 150);
+    }
+
+    #[test]
+    fn budget_never_underflows() {
+        // oversized bootstrap fraction: clamped, selection saturates at 0
+        let b = Budget::from_fraction(1000, 0.2, 1.7);
+        assert_eq!(b.bootstrap_fraction, 1.0);
+        assert_eq!(b.bootstrap_points(), b.total);
+        assert_eq!(b.selection_points(), 0);
+        // even a hand-built budget with a bad fraction cannot panic
+        let ugly = Budget { total: 10, bootstrap_fraction: 3.0 };
+        assert_eq!(ugly.bootstrap_points(), 10);
+        assert_eq!(ugly.selection_points(), 0);
+        // negative / NaN fractions clamp to zero
+        let z = Budget::from_fraction(1000, -0.2, f64::NAN);
+        assert_eq!(z.total, 0);
+        assert_eq!(z.selection_points(), 0);
+    }
+
+    #[test]
+    fn try_from_fraction_rejects_bad_inputs() {
+        assert!(Budget::try_from_fraction(100, 0.2, 0.25).is_ok());
+        assert!(Budget::try_from_fraction(100, -0.2, 0.25).is_err());
+        assert!(Budget::try_from_fraction(100, 1.2, 0.25).is_err());
+        assert!(Budget::try_from_fraction(100, 0.0, 0.25).is_err());
+        assert!(Budget::try_from_fraction(100, 0.2, -0.1).is_err());
+        assert!(Budget::try_from_fraction(100, 0.2, 1.1).is_err());
+        assert!(Budget::try_from_fraction(100, f64::NAN, 0.25).is_err());
     }
 
     #[test]

@@ -2,20 +2,66 @@
 //! private selection (§4.1), QuickSelect over secret comparisons, offline
 //! schedule planning (§4.2), IO scheduling (§4.4), appraisal and the
 //! data-market workflow (Fig 1).
+//!
+//! ## Entry point: [`SelectionJob`]
+//!
+//! All private selection goes through one typed, validated, observable
+//! driver:
+//!
+//! ```no_run
+//! use selectformer::coordinator::{PhaseSchedule, RuntimeProfile, SelectionJob};
+//! # fn main() -> anyhow::Result<()> {
+//! # let dataset = selectformer::data::synth(&Default::default(), 64, false, 1);
+//! # let (p1, p2) = (std::path::PathBuf::from("p1.sfw"), std::path::PathBuf::from("p2.sfw"));
+//! let outcome = SelectionJob::builder([p1, p2], &dataset)
+//!     .schedule(PhaseSchedule::default_two_phase(false, 4, 0.2))
+//!     .runtime(RuntimeProfile { lanes: 4, overlap: true, ..Default::default() })
+//!     .build()?
+//!     .run()?;
+//! println!("selected {} points", outcome.selected.len());
+//! # Ok(()) }
+//! ```
+//!
+//! * [`job`] — the `SelectionJob` builder: typed sub-configs
+//!   ([`RuntimeProfile`], [`PrivacyMode`], [`PhaseSchedule`]), build-time
+//!   validation, and the single multi-phase driver that dispatches to the
+//!   serial / pipelined / overlapped runtimes (all byte-identical).
+//! * [`observe`] — typed progress events ([`JobEvent`]) delivered through
+//!   a [`JobObserver`] while a job runs: phase boundaries, per-batch
+//!   metered traffic, and survivors the moment QuickSelect confirms them.
+//! * [`service`] — [`SelectionService`]: a worker pool + shared dealer hub
+//!   running many jobs concurrently, each byte-identical to running alone
+//!   (per-job `(job, phase, batch)` randomness namespacing).
+//! * [`selector`] — the shared phase machinery (broadcast sessions, lane
+//!   drains, the serial oracle) and the `#[deprecated]` free-function
+//!   shims of the pre-job API (`multi_phase_select`, `run_phase_mpc`, …);
+//!   see the README migration table.
+//! * [`market`], [`appraise`] — the clear stages of Fig 1 around the MPC
+//!   selection; [`planner`], [`iosched`], [`phase`], [`quickselect`] — the
+//!   schedule search, delay model, schedules and secret top-k.
 
 pub mod appraise;
 pub mod iosched;
+pub mod job;
 pub mod market;
+pub mod observe;
 pub mod phase;
 pub mod planner;
 pub mod quickselect;
 pub mod selector;
+pub mod service;
 pub mod testutil;
 
 pub use iosched::SchedPolicy;
-pub use phase::{PhaseSchedule, ProxySpec};
-pub use selector::{
-    multi_phase_select, multi_phase_select_overlapped, random_select,
-    run_phase_mpc, run_phase_mpc_at, PhaseOutcome, SelectionOptions,
-    SelectionOutcome,
+pub use job::{
+    ModelSource, PrivacyMode, RuntimeProfile, SelectionJob, SelectionJobBuilder,
 };
+pub use observe::{EventCounters, JobEvent, JobObserver, StderrProgress};
+pub use phase::{PhaseSchedule, ProxySpec};
+#[allow(deprecated)]
+pub use selector::{
+    multi_phase_select, multi_phase_select_overlapped, run_phase_mpc,
+    run_phase_mpc_at,
+};
+pub use selector::{random_select, PhaseOutcome, SelectionOptions, SelectionOutcome};
+pub use service::SelectionService;

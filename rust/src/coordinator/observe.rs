@@ -1,0 +1,180 @@
+//! Typed progress events for selection jobs.
+//!
+//! A [`SelectionJob`](super::job::SelectionJob) emits [`JobEvent`]s through
+//! a caller-supplied [`JobObserver`] while it runs: phase boundaries, every
+//! candidate batch's metered traffic, and each survivor the moment
+//! QuickSelect confirms it (layered on the [`SurvivorSink`] streaming
+//! machinery — the same hook the overlapped scheduler uses for its token
+//! prefetch).  Observation is strictly read-only: events are emitted from
+//! the party threads AFTER the protocol work they describe, so attaching an
+//! observer never changes a byte of the selection (asserted in
+//! tests/service_equiv.rs).
+//!
+//! Events may arrive from concurrent lane threads (and, under
+//! [`SelectionService`](super::service::SelectionService), from concurrent
+//! jobs), hence the `Send + Sync` bound; implementations must do their own
+//! ordering if they need any.
+//!
+//! [`SurvivorSink`]: super::quickselect::SurvivorSink
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::selector::PhaseOutcome;
+
+/// One observable step of a running selection job.
+#[derive(Debug)]
+pub enum JobEvent<'a> {
+    /// Phase `phase` is starting over `n_candidates` survivors of the
+    /// previous phase; `keep` of them will survive this one.
+    PhaseStarted { phase: usize, n_candidates: usize, keep: usize },
+    /// Candidate batch `batch` of phase `phase` finished its MPC forward;
+    /// `bytes` / `rounds` are the model owner's metered cost for exactly
+    /// this batch.  Batches from different lanes may report out of order.
+    BatchCompleted { phase: usize, batch: usize, bytes: u64, rounds: u64 },
+    /// QuickSelect proved dataset index `index` is in phase `phase`'s
+    /// top-k — emitted the moment the partition confirms it, long before
+    /// the full survivor set is known.
+    SurvivorConfirmed { phase: usize, index: usize },
+    /// Phase `phase` is done; the full outcome (survivors, meters, setup
+    /// vs drain attribution) is borrowed for the duration of the call.
+    PhaseFinished { phase: usize, outcome: &'a PhaseOutcome },
+}
+
+/// Receiver of [`JobEvent`]s.  Called from the job's party/lane threads;
+/// keep implementations cheap and non-blocking — the protocol thread
+/// waits for `on_event` to return.
+pub trait JobObserver: Send + Sync {
+    fn on_event(&self, event: &JobEvent<'_>);
+}
+
+/// Observer handle threaded through one phase's drain: the observer plus
+/// the phase's candidate map (local index → dataset index) and the phase
+/// number, so emission sites deep in the selector don't need the driver's
+/// context.
+#[derive(Clone)]
+pub(crate) struct PhaseObs {
+    pub(crate) obs: Arc<dyn JobObserver>,
+    pub(crate) cands: Arc<Vec<usize>>,
+    pub(crate) phase: usize,
+}
+
+impl PhaseObs {
+    pub(crate) fn emit(&self, event: &JobEvent<'_>) {
+        self.obs.on_event(event);
+    }
+}
+
+/// Thread-safe counting observer — the test/CLI workhorse: tallies events
+/// without recording payloads.
+#[derive(Debug, Default)]
+pub struct EventCounters {
+    pub phases_started: AtomicU64,
+    pub phases_finished: AtomicU64,
+    pub batches: AtomicU64,
+    pub batch_bytes: AtomicU64,
+    pub batch_rounds: AtomicU64,
+    pub survivors: AtomicU64,
+}
+
+impl EventCounters {
+    pub fn new() -> Arc<EventCounters> {
+        Arc::new(EventCounters::default())
+    }
+}
+
+impl JobObserver for EventCounters {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        match event {
+            JobEvent::PhaseStarted { .. } => {
+                self.phases_started.fetch_add(1, Ordering::Relaxed);
+            }
+            JobEvent::BatchCompleted { bytes, rounds, .. } => {
+                self.batches.fetch_add(1, Ordering::Relaxed);
+                self.batch_bytes.fetch_add(*bytes, Ordering::Relaxed);
+                self.batch_rounds.fetch_add(*rounds, Ordering::Relaxed);
+            }
+            JobEvent::SurvivorConfirmed { .. } => {
+                self.survivors.fetch_add(1, Ordering::Relaxed);
+            }
+            JobEvent::PhaseFinished { .. } => {
+                self.phases_finished.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+/// Observer that narrates phase progress to stderr (CLI `--progress`).
+/// Per-survivor events are deliberately not printed — at production pool
+/// sizes they would drown the log; batches give enough of a pulse.
+pub struct StderrProgress;
+
+impl JobObserver for StderrProgress {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        match event {
+            JobEvent::PhaseStarted { phase, n_candidates, keep } => {
+                eprintln!(
+                    "[phase {}] start: {} candidates -> keep {}",
+                    phase + 1,
+                    n_candidates,
+                    keep
+                );
+            }
+            JobEvent::BatchCompleted { phase, batch, bytes, rounds } => {
+                eprintln!(
+                    "[phase {}] batch {} done ({} B, {} rounds)",
+                    phase + 1,
+                    batch,
+                    bytes,
+                    rounds
+                );
+            }
+            JobEvent::SurvivorConfirmed { .. } => {}
+            JobEvent::PhaseFinished { phase, outcome } => {
+                eprintln!(
+                    "[phase {}] done: {} survivors, {:.2}s wall ({} rounds)",
+                    phase + 1,
+                    outcome.survivors.len(),
+                    outcome.wall_s(),
+                    outcome.meter_p0.rounds
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_tally_events() {
+        let c = EventCounters::default();
+        c.on_event(&JobEvent::PhaseStarted { phase: 0, n_candidates: 10, keep: 4 });
+        c.on_event(&JobEvent::BatchCompleted { phase: 0, batch: 0, bytes: 7, rounds: 2 });
+        c.on_event(&JobEvent::BatchCompleted { phase: 0, batch: 1, bytes: 5, rounds: 3 });
+        c.on_event(&JobEvent::SurvivorConfirmed { phase: 0, index: 3 });
+        c.on_event(&JobEvent::SurvivorConfirmed { phase: 0, index: 9 });
+        let out = crate::coordinator::selector::PhaseOutcome {
+            survivors: vec![3, 9],
+            entropies: None,
+            ent_shares: None,
+            sim_delay: 0.0,
+            serial_delay: 0.0,
+            meter_p0: Default::default(),
+            meter_p1: Default::default(),
+            stats: Default::default(),
+            setup_bytes: 0,
+            setup_wall_s: 0.0,
+            drain_wall_s: 0.0,
+            setup_overlapped: false,
+        };
+        c.on_event(&JobEvent::PhaseFinished { phase: 0, outcome: &out });
+        assert_eq!(c.phases_started.load(Ordering::Relaxed), 1);
+        assert_eq!(c.batches.load(Ordering::Relaxed), 2);
+        assert_eq!(c.batch_bytes.load(Ordering::Relaxed), 12);
+        assert_eq!(c.batch_rounds.load(Ordering::Relaxed), 5);
+        assert_eq!(c.survivors.load(Ordering::Relaxed), 2);
+        assert_eq!(c.phases_finished.load(Ordering::Relaxed), 1);
+    }
+}

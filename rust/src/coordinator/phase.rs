@@ -1,5 +1,7 @@
 //! Phase schedules: ⟨l, w, d⟩ per phase plus selectivities (paper §4.1).
 
+use anyhow::{ensure, Result};
+
 /// One phase's proxy shape.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ProxySpec {
@@ -35,6 +37,29 @@ impl PhaseSchedule {
 
     pub fn budget(&self) -> f64 {
         self.selectivities.iter().product()
+    }
+
+    /// Non-panicking consistency check (the fields are public, so a
+    /// schedule can be assembled without [`PhaseSchedule::new`]'s
+    /// asserts): one selectivity per proxy, each in (0, 1], and therefore
+    /// a total budget in (0, 1].  `SelectionJob::build` calls this.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(!self.proxies.is_empty(), "a schedule needs >= 1 phase");
+        ensure!(
+            self.proxies.len() == self.selectivities.len(),
+            "{} proxies but {} selectivities",
+            self.proxies.len(),
+            self.selectivities.len()
+        );
+        for (i, &a) in self.selectivities.iter().enumerate() {
+            ensure!(
+                a.is_finite() && a > 0.0 && a <= 1.0,
+                "selectivity[{i}] = {a} outside (0, 1]"
+            );
+        }
+        let b = self.budget();
+        ensure!(b > 0.0 && b <= 1.0, "schedule budget {b} outside (0, 1]");
+        Ok(())
     }
 
     /// Survivor counts for an initial pool of n candidates.
@@ -102,6 +127,25 @@ mod tests {
         assert_eq!(s.proxies[0].n_layers, 1);
         let cv = PhaseSchedule::default_two_phase(true, 4, 0.2);
         assert_eq!(cv.proxies[0].n_layers, 3);
+    }
+
+    #[test]
+    fn validate_catches_hand_rolled_inconsistency() {
+        let ok = PhaseSchedule::default_two_phase(false, 4, 0.2);
+        assert!(ok.validate().is_ok());
+        let bad = PhaseSchedule {
+            proxies: vec![ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 }],
+            selectivities: vec![1.5],
+        };
+        assert!(bad.validate().is_err());
+        let mismatched = PhaseSchedule {
+            proxies: vec![ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 }],
+            selectivities: vec![0.5, 0.5],
+        };
+        assert!(mismatched.validate().is_err());
+        assert!(PhaseSchedule { proxies: vec![], selectivities: vec![] }
+            .validate()
+            .is_err());
     }
 
     #[test]

@@ -17,8 +17,9 @@ use crate::models::{ModelConfig, Variant};
 use crate::mpc::net::NetConfig;
 
 use super::iosched::SchedPolicy;
+use super::job::{RuntimeProfile, SelectionJob};
 use super::phase::{PhaseSchedule, ProxySpec};
-use super::selector::{run_phase_mpc, SelectionOptions};
+use super::selector::PhaseOutcome;
 use super::testutil;
 
 /// Measured per-phase cost profile at a given model shape + batch size.
@@ -95,11 +96,17 @@ pub fn profile_phase(cfg: &ModelConfig, batch: usize) -> Result<PhaseCostProfile
         false,
         7,
     );
-    let opts = SelectionOptions { batch, ..Default::default() };
-    let one: Vec<usize> = (0..batch).collect();
-    let two: Vec<usize> = (0..2 * batch).collect();
-    let o1 = run_phase_mpc(&wf, &ds, &one, 1, &opts)?;
-    let o2 = run_phase_mpc(&wf, &ds, &two, 1, &opts)?;
+    let measure = |n_cands: usize| -> Result<PhaseOutcome> {
+        let outcome = SelectionJob::builder([&wf], &ds)
+            .candidates((0..n_cands).collect())
+            .keep_counts(vec![1])
+            .runtime(RuntimeProfile { batch, ..Default::default() })
+            .build()?
+            .run()?;
+        Ok(outcome.phases.into_iter().next().expect("single-phase job"))
+    };
+    let o1 = measure(batch)?;
+    let o2 = measure(2 * batch)?;
     let b1 = o1.meter_p0.bytes + o1.meter_p1.bytes;
     let b2 = o2.meter_p0.bytes + o2.meter_p1.bytes;
     let r1 = o1.meter_p0.rounds;
@@ -213,17 +220,20 @@ mod tests {
         let dir = std::env::temp_dir().join("sf_planner_check");
         let path = dir.join("p.sfw");
         testutil::write_random_sfw(&path, &cfg);
-        let wf = crate::models::WeightFile::load(&path).unwrap();
         let ds = synth(
             &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
             4 * batch,
             false,
             9,
         );
-        let opts = SelectionOptions { batch, ..Default::default() };
-        let out = run_phase_mpc(&wf, &ds, &(0..4 * batch).collect::<Vec<_>>(), 4, &opts)
+        let out = SelectionJob::builder([path.as_path()], &ds)
+            .keep_counts(vec![4])
+            .runtime(RuntimeProfile { batch, ..Default::default() })
+            .build()
+            .unwrap()
+            .run()
             .unwrap();
-        let actual = out.serial_delay;
+        let actual = out.phases[0].serial_delay;
         let ratio = est / actual;
         assert!(
             (0.6..1.6).contains(&ratio),
@@ -239,6 +249,86 @@ mod tests {
         assert!(grid.iter().any(|s| s.n_phases() == 3));
         for s in &grid {
             assert!((s.budget() - 0.2).abs() < 1e-6, "budget broken: {s:?}");
+        }
+    }
+
+    #[test]
+    fn grid_is_nonempty_and_valid_for_both_modalities() {
+        for (cv, budget) in [(false, 0.2), (true, 0.2), (false, 0.4), (true, 0.3)] {
+            let grid = schedule_grid(cv, 4, budget);
+            assert!(!grid.is_empty(), "cv={cv} budget={budget}");
+            for s in &grid {
+                s.validate().expect("grid schedules must validate");
+                assert!(
+                    (s.budget() - budget).abs() < 1e-6,
+                    "cv={cv}: schedule budget {} != {budget}",
+                    s.budget()
+                );
+                // CV phase-1 proxies are 3-layer, NLP ones 1-layer (§5.1)
+                if s.n_phases() > 1 {
+                    assert_eq!(s.proxies[0].n_layers, if cv { 3 } else { 1 });
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn estimates_are_monotone_in_n_points() {
+        // a synthetic measured profile — estimate() must be non-decreasing
+        // in the candidate count under every scheduling policy
+        let profile = PhaseCostProfile {
+            cfg: tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8),
+            batch: 8,
+            setup_bytes: 50_000,
+            setup_rounds: 4,
+            batch_bytes: 120_000,
+            batch_rounds: 60,
+            batch_compute_s: 0.004,
+        };
+        let net = NetConfig::default();
+        for policy in [
+            SchedPolicy::Sequential,
+            SchedPolicy::Coalesced,
+            SchedPolicy::Overlapped,
+            SchedPolicy::CoalescedOverlapped,
+        ] {
+            let mut prev = 0.0;
+            for n in [8usize, 16, 64, 256, 1024, 4096] {
+                let est = profile.estimate(n, &net, policy);
+                assert!(est.is_finite() && est > 0.0, "{policy:?} n={n}");
+                assert!(
+                    est + 1e-9 >= prev,
+                    "{policy:?}: estimate({n}) = {est} < previous {prev}"
+                );
+                prev = est;
+            }
+        }
+    }
+
+    #[test]
+    fn plan_returns_the_cheapest_grid_schedule_at_the_budget() {
+        let base = tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8);
+        let net = NetConfig::default();
+        let budget = 0.2;
+        let (best, cost) = plan(&base, false, 2000, budget, 8, &net).unwrap();
+        assert!((best.budget() - budget).abs() < 1e-6, "plan must hit the budget");
+        assert!(cost.is_finite() && cost > 0.0);
+        // the returned cost is the grid minimum: no grid schedule beats it
+        for sched in schedule_grid(false, base.n_heads, budget) {
+            let c = estimate_schedule(
+                &base,
+                &sched,
+                2000,
+                8,
+                &net,
+                SchedPolicy::CoalescedOverlapped,
+            )
+            .unwrap();
+            assert!(
+                cost <= c + 1e-9,
+                "plan cost {cost} beaten by {:?} at {c}",
+                sched.proxies.iter().map(|p| p.tag()).collect::<Vec<_>>()
+            );
         }
     }
 

@@ -24,22 +24,35 @@
 //!    phase i+1's first batch needs phase i's survivor set, nothing else.
 //!
 //! Identity holds because every execution unit derives its randomness
-//! streams from a `(phase, unit)` tag via `PartyCtx::reseed_for`
-//! ([`unit_tag`] / [`qs_tag`] / [`setup_tag`]): a lane draws exactly the
+//! streams from a `(job, phase, unit)` tag via `PartyCtx::reseed_for`
+//! ([`unit_tag`] / [`qs_tag`] / [`setup_tag`], wrapped in
+//! [`namespace_tag`] for multi-job services): a lane draws exactly the
 //! masks/triples the serial loop would have drawn for that unit, the
 //! pre-opened weight deltas consume no stream randomness, and QuickSelect
 //! is an exact top-k.  What changes is measured wall-clock
 //! (`CostMeter::wall_s`) — and, newly attributed, how much of each
 //! phase's setup wall hides behind the previous phase's drain.
+//!
+//! ## Entry points
+//!
+//! The PUBLIC driver is [`SelectionJob`](super::job::SelectionJob):
+//! `SelectionJob::builder(models, dataset) … .build()?.run()` — one typed,
+//! validated, observable path that dispatches internally to every runtime
+//! shape above.  The free functions of earlier revisions
+//! ([`multi_phase_select`], [`multi_phase_select_overlapped`],
+//! [`run_phase_mpc`], [`run_phase_mpc_at`]) remain as thin `#[deprecated]`
+//! shims over the same machinery so existing callers keep their exact
+//! behavior during the migration; this module otherwise holds the shared
+//! phase machinery (sessions, drains, the serial oracle) the job driver
+//! composes.
 
 use std::ops::Range;
 use std::path::Path;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
-use std::thread;
 use std::time::Instant;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{ensure, Result};
 
 use crate::data::Dataset;
 use crate::fixed;
@@ -53,8 +66,11 @@ use crate::mpc::proto::{recv_share, share_input, PartyCtx, Shared};
 use crate::tensor::{TensorF, TensorR};
 
 use super::iosched::{self, SchedPolicy};
+use super::observe::{JobEvent, PhaseObs};
 use super::phase::PhaseSchedule;
-use super::quickselect::{top_k_indices, top_k_streamed, ChannelSink, SelectStats};
+use super::quickselect::{
+    top_k_indices, top_k_streamed, ChannelSink, SelectStats, SurvivorSink,
+};
 
 // ---------------------------------------------------------------------------
 // Randomness stream tags
@@ -88,11 +104,34 @@ pub fn setup_tag(phase: usize) -> u64 {
     mix_tag(0x5e70_0a11, phase as u64, u64::MAX - 1)
 }
 
+/// Re-namespace a stream tag for job `job` — the third coordinate of the
+/// `(job, phase, unit)` randomness scheme that lets a
+/// [`SelectionService`](super::service::SelectionService) run many jobs
+/// over one shared dealer hub with fully disjoint streams and hub keys.
+/// `job == 0` (the default, and every pre-job caller) is the identity, so
+/// single-job selections are bit-for-bit what they always were.
+pub fn namespace_tag(job: u64, tag: u64) -> u64 {
+    if job == 0 {
+        return tag;
+    }
+    let mut s = tag ^ job.wrapping_mul(0xD6E8_FEB8_6659_FD93);
+    crate::util::rng::splitmix64(&mut s)
+}
+
 // ---------------------------------------------------------------------------
 // Options / outcomes
 // ---------------------------------------------------------------------------
 
-/// Options for a selection session.
+/// Flat options for a selection session — the LEGACY knob bag.
+///
+/// New code should not build one of these: use
+/// [`SelectionJob::builder`](super::job::SelectionJob::builder), whose
+/// typed sub-configs ([`RuntimeProfile`](super::job::RuntimeProfile),
+/// [`PrivacyMode`](super::job::PrivacyMode)) validate at build time and
+/// keep the test-only privacy backdoors (`reveal_entropies`,
+/// `capture_shares`) out of the production surface.  This struct remains
+/// as the internal execution carrier and as the parameter type of the
+/// `#[deprecated]` shim functions.
 #[derive(Clone, Copy, Debug)]
 pub struct SelectionOptions {
     pub batch: usize,
@@ -117,6 +156,9 @@ pub struct SelectionOptions {
     /// runtimes.  No extra protocol traffic — the shares are copied
     /// before QuickSelect consumes them.
     pub capture_shares: bool,
+    /// Randomness namespace for multi-job services (see [`namespace_tag`]);
+    /// 0 = the classic single-job streams.
+    pub job_tag: u64,
 }
 
 impl Default for SelectionOptions {
@@ -131,6 +173,7 @@ impl Default for SelectionOptions {
             lanes: 1,
             overlap: false,
             capture_shares: false,
+            job_tag: 0,
         }
     }
 }
@@ -217,6 +260,7 @@ impl SelectionOutcome {
 /// The batch-grid coordinates one lane walks (shared by both parties).
 #[derive(Clone)]
 struct LaneCfg {
+    job: u64,
     phase: usize,
     n: usize,
     batch: usize,
@@ -225,18 +269,56 @@ struct LaneCfg {
     range: Range<usize>,
 }
 
+/// A [`ChannelSink`] that additionally reports each confirmed survivor to
+/// a job observer, mapped from local candidate position to dataset index.
+/// Pure observation: the inner sink's protocol-visible behavior (order
+/// recording, channel forwarding) is untouched.
+struct ObservedSink {
+    inner: ChannelSink,
+    obs: Option<PhaseObs>,
+}
+
+impl SurvivorSink for ObservedSink {
+    fn confirm(&mut self, idx: usize) {
+        self.inner.confirm(idx);
+        if let Some(po) = &self.obs {
+            po.emit(&JobEvent::SurvivorConfirmed {
+                phase: po.phase,
+                index: po.cands[idx],
+            });
+        }
+    }
+}
+
 /// Model-owner side: entropy shares for a batch range, against an
 /// already-set-up model (weights shared, deltas pre-opened or lazily
-/// opened — bit-identical either way).
-fn p0_eval_batches(ctx: &mut PartyCtx, model: &mut ModelMpc, lane: &LaneCfg) -> Vec<i64> {
+/// opened — bit-identical either way).  Emits one `BatchCompleted` event
+/// per batch with the model owner's metered traffic for exactly that
+/// batch.
+fn p0_eval_batches(
+    ctx: &mut PartyCtx,
+    model: &mut ModelMpc,
+    lane: &LaneCfg,
+    obs: &Option<PhaseObs>,
+) -> Vec<i64> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
-        ctx.reseed_for(unit_tag(lane.phase, b));
+        ctx.reseed_for(namespace_tag(lane.job, unit_tag(lane.phase, b)));
+        let bytes0 = ctx.chan.meter.bytes;
+        let rounds0 = ctx.chan.meter.rounds;
         let rows = lane.batch * lane.seq_len;
         let x = recv_share(ctx, &[rows, lane.dm]);
         let (_logits, e) = model.forward(ctx, &x, lane.batch);
         let take = (lane.n - b * lane.batch).min(lane.batch);
         ent.extend_from_slice(&e.0.data[..take]);
+        if let Some(po) = obs {
+            po.emit(&JobEvent::BatchCompleted {
+                phase: lane.phase,
+                batch: b,
+                bytes: ctx.chan.meter.bytes - bytes0,
+                rounds: ctx.chan.meter.rounds - rounds0,
+            });
+        }
     }
     ent
 }
@@ -252,7 +334,7 @@ fn p1_eval_batches(
 ) -> Vec<i64> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
-        ctx.reseed_for(unit_tag(lane.phase, b));
+        ctx.reseed_for(namespace_tag(lane.job, unit_tag(lane.phase, b)));
         // assemble a batch (pad the tail by repeating example 0)
         let mut toks = Vec::with_capacity(lane.batch * lane.seq_len);
         for j in 0..lane.batch {
@@ -302,6 +384,11 @@ impl PhaseSession {
     pub fn setup_bytes(&self) -> u64 {
         self.meter_p0.bytes + self.meter_p1.bytes
     }
+
+    /// The proxy's sequence length (for dataset-compatibility checks).
+    pub fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
 }
 
 /// Model-owner half of a session setup: release the embedding tables and
@@ -347,11 +434,34 @@ pub fn setup_phase_session(
     dealer_seed: u64,
     phase: usize,
 ) -> Result<PhaseSession> {
-    let cfg = weights.config()?;
-    let wf = Arc::new(weights.clone());
+    setup_phase_session_on(
+        Hub::new(),
+        Arc::new(weights.clone()),
+        approx,
+        dealer_seed,
+        phase,
+        0,
+    )
+}
+
+/// [`setup_phase_session`] against a caller-provided preprocessing hub and
+/// a job randomness namespace — the [`SelectionService`] form: concurrent
+/// jobs share one hub, and `job` keeps their streams (and parked-product
+/// keys) disjoint.  The hub is value-transparent, so the session is
+/// byte-identical whichever hub it runs on.
+///
+/// [`SelectionService`]: super::service::SelectionService
+pub(crate) fn setup_phase_session_on(
+    hub: Arc<Hub>,
+    wf: Arc<WeightFile>,
+    approx: ApproxToggles,
+    dealer_seed: u64,
+    phase: usize,
+    job: u64,
+) -> Result<PhaseSession> {
+    let cfg = wf.config()?;
     let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
     let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
-    let hub = Hub::new();
     let t0 = Instant::now();
     let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_hub(
         hub.clone(),
@@ -360,7 +470,7 @@ pub fn setup_phase_session(
             let wf = wf.clone();
             move |ctx: &mut PartyCtx| -> Result<ModelMpc> {
                 ctx.op("session_setup", |ctx| {
-                    ctx.reseed_for(setup_tag(phase));
+                    ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                     let mut model = p0_send_session(
                         ctx,
                         &wf,
@@ -376,7 +486,7 @@ pub fn setup_phase_session(
         },
         move |ctx: &mut PartyCtx| -> Result<(ModelMpc, TensorF, TensorF)> {
             ctx.op("session_setup", |ctx| {
-                ctx.reseed_for(setup_tag(phase));
+                ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                 let (mut model, emb_tok, emb_pos) = p1_recv_session(ctx, cfg, approx)?;
                 model.preopen_weight_deltas(ctx);
                 Ok((model, emb_tok, emb_pos))
@@ -404,7 +514,7 @@ pub fn setup_phase_session(
 // ---------------------------------------------------------------------------
 
 /// What a finished drain hands back to the outcome assembler.
-struct DrainOut {
+pub(crate) struct DrainOut {
     local: Vec<usize>,
     stats: SelectStats,
     revealed: Option<Vec<f32>>,
@@ -418,16 +528,19 @@ struct DrainOut {
 /// (each holding a clone of the session's models) and run QuickSelect on
 /// the gathered entropy shares.  When `stream` is given, P0's QuickSelect
 /// forwards each survivor the moment it is confirmed — the overlapped
-/// driver's prefetch hook.
-fn run_phase_drain(
+/// driver's prefetch hook.  `obs` receives `BatchCompleted` /
+/// `SurvivorConfirmed` events live (possibly interleaved across lanes).
+pub(crate) fn run_phase_drain(
     session: &PhaseSession,
     cand_tokens: Arc<Vec<u32>>,
     n: usize,
     keep: usize,
     opts: &SelectionOptions,
     stream: Option<Sender<usize>>,
+    obs: Option<PhaseObs>,
 ) -> Result<DrainOut> {
     let phase = session.phase;
+    let job = opts.job_tag;
     let n_batches = n.div_ceil(opts.batch);
     let lanes = opts.lanes.clamp(1, n_batches.max(1));
     let per = n_batches.div_ceil(lanes);
@@ -443,6 +556,7 @@ fn run_phase_drain(
             break;
         }
         let lc = LaneCfg {
+            job,
             phase,
             n,
             batch: opts.batch,
@@ -454,8 +568,10 @@ fn run_phase_drain(
         let mut m0 = session.model_p0.clone();
         let mut m1 = session.model_p1.clone();
         let (ct, et, ep) = (cand_tokens.clone(), emb_tok.clone(), emb_pos.clone());
-        let f0: PartyFn<Vec<i64>> =
-            Box::new(move |ctx: &mut PartyCtx| p0_eval_batches(ctx, &mut m0, &lc));
+        let obs_l = obs.clone();
+        let f0: PartyFn<Vec<i64>> = Box::new(move |ctx: &mut PartyCtx| {
+            p0_eval_batches(ctx, &mut m0, &lc, &obs_l)
+        });
         let f1: PartyFn<Vec<i64>> = Box::new(move |ctx: &mut PartyCtx| {
             p1_eval_batches(ctx, &mut m1, &ct, &et, &ep, &lc1)
         });
@@ -489,21 +605,24 @@ fn run_phase_drain(
         session.hub.clone(),
         opts.dealer_seed,
         move |ctx: &mut PartyCtx| {
-            ctx.reseed_for(qs_tag(phase));
+            ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent0, &[n]));
             let revealed = if reveal {
                 Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
             } else {
                 None
             };
-            let mut sink = ChannelSink { order: Vec::with_capacity(keep), tx: stream };
+            let mut sink = ObservedSink {
+                inner: ChannelSink { order: Vec::with_capacity(keep), tx: stream },
+                obs,
+            };
             let stats = top_k_streamed(ctx, &ent, keep, &mut sink);
-            let mut idx = sink.order;
+            let mut idx = sink.inner.order;
             idx.sort_unstable();
             (idx, stats, revealed)
         },
         move |ctx: &mut PartyCtx| {
-            ctx.reseed_for(qs_tag(phase));
+            ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent1, &[n]));
             if reveal {
                 let _ = crate::mpc::proto::open(ctx, &ent);
@@ -532,6 +651,11 @@ fn run_phase_drain(
 
 /// Run ONE private selection phase over MPC (phase index 0 — see
 /// [`run_phase_mpc_at`] for a phase inside a multi-phase schedule).
+#[deprecated(
+    since = "0.2.0",
+    note = "build a single-phase coordinator::SelectionJob instead \
+            (builder(...).keep_counts(vec![k]).build()?.run())"
+)]
 pub fn run_phase_mpc(
     weights: &WeightFile,
     dataset: &Dataset,
@@ -539,17 +663,15 @@ pub fn run_phase_mpc(
     keep: usize,
     opts: &SelectionOptions,
 ) -> Result<PhaseOutcome> {
-    run_phase_mpc_at(weights, dataset, candidates, keep, opts, 0)
+    run_phase_at(weights, dataset, candidates, keep, opts, 0)
 }
 
 /// Run selection phase `phase` over MPC.
-///
-/// `weights` lives with the model owner; `dataset` with the data owner.
-/// Returns the indices (into `candidates`' index space, i.e. dataset
-/// indices) of the `keep` highest-entropy candidates.  Dispatches to the
-/// serial runtime (`lanes <= 1`, setup inline in the session — the
-/// reference oracle) or the broadcast-session pipelined runtime; both
-/// produce byte-identical selections.
+#[deprecated(
+    since = "0.2.0",
+    note = "build a coordinator::SelectionJob instead; the phase index is \
+            the position in the job's schedule"
+)]
 pub fn run_phase_mpc_at(
     weights: &WeightFile,
     dataset: &Dataset,
@@ -558,27 +680,58 @@ pub fn run_phase_mpc_at(
     opts: &SelectionOptions,
     phase: usize,
 ) -> Result<PhaseOutcome> {
+    run_phase_at(weights, dataset, candidates, keep, opts, phase)
+}
+
+/// One selection phase over MPC — the shared barrier executor.
+///
+/// `weights` lives with the model owner; `dataset` with the data owner.
+/// Returns the indices (into `candidates`' index space, i.e. dataset
+/// indices) of the `keep` highest-entropy candidates.  Dispatches to the
+/// serial runtime (`lanes <= 1`, setup inline in the session — the
+/// reference oracle) or the broadcast-session pipelined runtime; both
+/// produce byte-identical selections.
+pub(crate) fn run_phase_at(
+    weights: &WeightFile,
+    dataset: &Dataset,
+    candidates: &[usize],
+    keep: usize,
+    opts: &SelectionOptions,
+    phase: usize,
+) -> Result<PhaseOutcome> {
     let cfg = weights.config()?;
-    assert_eq!(cfg.seq_len, dataset.seq_len, "model/dataset seq_len");
+    ensure!(
+        cfg.seq_len == dataset.seq_len,
+        "model seq_len {} != dataset seq_len {}",
+        cfg.seq_len,
+        dataset.seq_len
+    );
     let n = candidates.len();
-    assert!(keep <= n);
+    ensure!(keep <= n, "keep {keep} exceeds {n} candidates");
     let n_batches = n.div_ceil(opts.batch);
     let lanes = opts.lanes.clamp(1, n_batches.max(1));
     let cand_tokens: Arc<Vec<u32>> = Arc::new(gather_tokens(dataset, candidates));
+    let wf = Arc::new(weights.clone());
 
     let body = if lanes <= 1 {
-        run_phase_serial(weights, cfg, cand_tokens, n, keep, opts, phase)?
+        run_phase_serial(wf, cfg, cand_tokens, n, keep, opts, phase, None)?
     } else {
-        let session =
-            setup_phase_session(weights, opts.approx, opts.dealer_seed, phase)?;
-        let drain = run_phase_drain(&session, cand_tokens, n, keep, opts, None)?;
+        let session = setup_phase_session_on(
+            Hub::new(),
+            wf,
+            opts.approx,
+            opts.dealer_seed,
+            phase,
+            opts.job_tag,
+        )?;
+        let drain = run_phase_drain(&session, cand_tokens, n, keep, opts, None, None)?;
         assemble_session_body(session, drain, false, 0.0)
     };
     Ok(finish_outcome(body, candidates, opts))
 }
 
 /// A finished phase body, ready for survivor mapping + delay simulation.
-struct PhaseBody {
+pub(crate) struct PhaseBody {
     local: Vec<usize>,
     stats: SelectStats,
     revealed: Option<Vec<f32>>,
@@ -594,7 +747,7 @@ struct PhaseBody {
 /// Fold a session + its drain into a phase body.  `stall_s` is time spent
 /// waiting for an overlapped setup that outlived the previous drain — it
 /// counts toward the phase's critical path.
-fn assemble_session_body(
+pub(crate) fn assemble_session_body(
     session: PhaseSession,
     drain: DrainOut,
     setup_overlapped: bool,
@@ -627,7 +780,7 @@ fn assemble_session_body(
     }
 }
 
-fn finish_outcome(
+pub(crate) fn finish_outcome(
     body: PhaseBody,
     candidates: &[usize],
     opts: &SelectionOptions,
@@ -663,20 +816,23 @@ fn finish_outcome(
 /// pre-open): the first use of each weight opens W−B in-band, which is
 /// value-identical to the broadcast pre-open (proto.rs test) and keeps
 /// this path structurally independent from the session runtime it judges.
-fn run_phase_serial(
-    weights: &WeightFile,
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_phase_serial(
+    wf: Arc<WeightFile>,
     cfg: ModelConfig,
     cand_tokens: Arc<Vec<u32>>,
     n: usize,
     keep: usize,
     opts: &SelectionOptions,
     phase: usize,
+    obs: Option<PhaseObs>,
 ) -> Result<PhaseBody> {
-    let wf = Arc::new(weights.clone());
     let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
     let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
     let n_batches = n.div_ceil(opts.batch);
+    let job = opts.job_tag;
     let lane = LaneCfg {
+        job,
         phase,
         n,
         batch: opts.batch,
@@ -695,13 +851,13 @@ fn run_phase_serial(
             let t0 = Instant::now();
             let bytes0 = ctx.chan.meter.bytes;
             let mut model = ctx.op("session_setup", |ctx| {
-                ctx.reseed_for(setup_tag(phase));
+                ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                 p0_send_session(ctx, &wf, cfg, approx, emb_tok_enc, emb_pos_enc)
             })?;
             let setup_bytes = ctx.chan.meter.bytes - bytes0;
             let setup_wall = t0.elapsed().as_secs_f64();
-            let ent_shares = p0_eval_batches(ctx, &mut model, &lane);
-            ctx.reseed_for(qs_tag(phase));
+            let ent_shares = p0_eval_batches(ctx, &mut model, &lane, &obs);
+            ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             let revealed = if reveal {
@@ -709,12 +865,17 @@ fn run_phase_serial(
             } else {
                 None
             };
-            let (idx, stats) = top_k_indices(ctx, &ent, keep);
+            // the exact protocol of `top_k_indices`, via the streaming form
+            // so confirmed survivors reach the observer live
+            let mut sink = ObservedSink { inner: ChannelSink::collector(), obs };
+            let stats = top_k_streamed(ctx, &ent, keep, &mut sink);
+            let mut idx = sink.inner.order;
+            idx.sort_unstable();
             Ok((idx, stats, revealed, cap, setup_bytes, setup_wall))
         },
         move |ctx: &mut PartyCtx| -> Result<(Vec<usize>, Option<Vec<i64>>)> {
             let mut model = ctx.op("session_setup", |ctx| {
-                ctx.reseed_for(setup_tag(phase));
+                ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                 p1_recv_session(ctx, cfg, approx)
             })?;
             let ent_shares = p1_eval_batches(
@@ -725,7 +886,7 @@ fn run_phase_serial(
                 &model.2,
                 &lane1,
             );
-            ctx.reseed_for(qs_tag(phase));
+            ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             if reveal {
@@ -756,7 +917,7 @@ fn run_phase_serial(
     })
 }
 
-fn gather_tokens(dataset: &Dataset, candidates: &[usize]) -> Vec<u32> {
+pub(crate) fn gather_tokens(dataset: &Dataset, candidates: &[usize]) -> Vec<u32> {
     let mut t = Vec::with_capacity(candidates.len() * dataset.seq_len);
     for &i in candidates {
         t.extend_from_slice(dataset.example(i));
@@ -775,6 +936,11 @@ fn gather_tokens(dataset: &Dataset, candidates: &[usize]) -> Vec<u32> {
 /// purchase set.  With `opts.overlap` the streamed driver runs phase
 /// i+1's setup behind phase i's drain (byte-identical output, tested in
 /// tests/multiphase_equiv.rs); otherwise phases run under a hard barrier.
+#[deprecated(
+    since = "0.2.0",
+    note = "use coordinator::SelectionJob::builder(paths, dataset)\
+            .schedule(...).build()?.run() — see the README migration table"
+)]
 pub fn multi_phase_select(
     phase_weights: &[&Path],
     schedule: &PhaseSchedule,
@@ -782,37 +948,17 @@ pub fn multi_phase_select(
     initial_candidates: Vec<usize>,
     opts: &SelectionOptions,
 ) -> Result<SelectionOutcome> {
-    assert_eq!(phase_weights.len(), schedule.n_phases());
-    if opts.overlap {
-        return multi_phase_select_overlapped(
-            phase_weights,
-            schedule,
-            dataset,
-            initial_candidates,
-            opts,
-        );
-    }
-    let counts = schedule.survivor_counts(initial_candidates.len());
-    let mut candidates = initial_candidates;
-    let mut phases = Vec::with_capacity(schedule.n_phases());
-    for (i, (path, &keep)) in phase_weights.iter().zip(&counts).enumerate() {
-        let weights = WeightFile::load(path)
-            .with_context(|| format!("phase {i} weights {path:?}"))?;
-        let outcome = run_phase_mpc_at(&weights, dataset, &candidates, keep, opts, i)?;
-        candidates = outcome.survivors.clone();
-        phases.push(outcome);
-    }
-    Ok(SelectionOutcome { selected: candidates, phases })
+    super::job::run_legacy(phase_weights, schedule, dataset, initial_candidates, opts, false)
 }
 
-/// The streamed multi-phase driver: phase i+1's session setup (weight
-/// sharing + embedding release + delta pre-open) runs on a background
-/// thread WHILE phase i's batch lanes drain and its QuickSelect runs; the
-/// QuickSelect streams each confirmed survivor into a token-prefetch
-/// thread that assembles phase i+1's candidate buffer before the final
-/// index set is even known.  Every randomness stream is pinned to its
-/// `(phase, unit)` tag, so the output — survivors, opened scores, entropy
-/// share bytes — is identical to the barrier driver for any lane count.
+/// The streamed multi-phase driver: phase i+1's session setup runs behind
+/// phase i's drain and QuickSelect streams survivors into the next
+/// phase's token prefetch.  Byte-identical to the barrier driver.
+#[deprecated(
+    since = "0.2.0",
+    note = "use coordinator::SelectionJob with RuntimeProfile { overlap: \
+            true, .. } — see the README migration table"
+)]
 pub fn multi_phase_select_overlapped(
     phase_weights: &[&Path],
     schedule: &PhaseSchedule,
@@ -820,91 +966,7 @@ pub fn multi_phase_select_overlapped(
     initial_candidates: Vec<usize>,
     opts: &SelectionOptions,
 ) -> Result<SelectionOutcome> {
-    assert_eq!(phase_weights.len(), schedule.n_phases());
-    let n_phases = schedule.n_phases();
-    let counts = schedule.survivor_counts(initial_candidates.len());
-    let mut candidates = initial_candidates;
-    let mut cand_tokens: Arc<Vec<u32>> = Arc::new(gather_tokens(dataset, &candidates));
-    let mut phases = Vec::with_capacity(n_phases);
-    let mut prefetch: Option<thread::JoinHandle<Result<PhaseSession>>> = None;
-    for (i, &keep) in counts.iter().enumerate() {
-        // phase 0's setup runs in the foreground; later phases' setups were
-        // prefetched behind the previous drain — the stall (if the setup
-        // outlived the drain) is the only setup time left on the clock
-        let t_wait = Instant::now();
-        let session = match prefetch.take() {
-            Some(h) => h
-                .join()
-                .map_err(|_| anyhow!("phase {i} setup thread panicked"))??,
-            None => {
-                let weights = WeightFile::load(phase_weights[i])
-                    .with_context(|| format!("phase {i} weights {phase_weights:?}"))?;
-                setup_phase_session(&weights, opts.approx, opts.dealer_seed, i)?
-            }
-        };
-        let setup_overlapped = i > 0;
-        let stall_s = if setup_overlapped {
-            t_wait.elapsed().as_secs_f64()
-        } else {
-            0.0
-        };
-        assert_eq!(session.cfg.seq_len, dataset.seq_len, "model/dataset seq_len");
-        // kick off phase i+1's setup NOW — it overlaps this phase's drain
-        if i + 1 < n_phases {
-            let path = phase_weights[i + 1].to_path_buf();
-            let approx = opts.approx;
-            let seed = opts.dealer_seed;
-            let next = i + 1;
-            prefetch = Some(thread::spawn(move || {
-                let weights = WeightFile::load(&path)
-                    .with_context(|| format!("phase {next} weights {path:?}"))?;
-                setup_phase_session(&weights, approx, seed, next)
-            }));
-        }
-        // drain this phase; survivors stream into the next phase's token
-        // prefetch as QuickSelect confirms them
-        let n = candidates.len();
-        let (tx, rx) = std::sync::mpsc::channel::<usize>();
-        let (drain, streamed_rows) = thread::scope(|s| {
-            let cands: &[usize] = &candidates;
-            let ds = dataset;
-            let gather = s.spawn(move || {
-                let mut rows: Vec<(usize, Vec<u32>)> = Vec::with_capacity(keep);
-                while let Ok(j) = rx.recv() {
-                    let di = cands[j];
-                    rows.push((di, ds.example(di).to_vec()));
-                }
-                rows
-            });
-            let drain =
-                run_phase_drain(&session, cand_tokens.clone(), n, keep, opts, Some(tx));
-            let rows = gather.join().expect("survivor gather thread panicked");
-            (drain, rows)
-        });
-        let drain = drain?;
-        let body = assemble_session_body(session, drain, setup_overlapped, stall_s);
-        let outcome = finish_outcome(body, &candidates, opts);
-        candidates = outcome.survivors.clone();
-        // next phase's candidate buffer: streamed rows arrive in
-        // confirmation order — reassemble them in SURVIVOR order, exactly
-        // the gather the barrier driver performs (correct even for a
-        // caller-supplied unsorted candidate list)
-        if i + 1 < n_phases {
-            let mut by_idx: std::collections::HashMap<usize, Vec<u32>> =
-                streamed_rows.into_iter().collect();
-            let mut toks = Vec::with_capacity(candidates.len() * dataset.seq_len);
-            for &di in &candidates {
-                let row = by_idx
-                    .remove(&di)
-                    .expect("streamed rows must cover the survivor set");
-                toks.extend_from_slice(&row);
-            }
-            debug_assert!(by_idx.is_empty(), "stray streamed rows");
-            cand_tokens = Arc::new(toks);
-        }
-        phases.push(outcome);
-    }
-    Ok(SelectionOutcome { selected: candidates, phases })
+    super::job::run_legacy(phase_weights, schedule, dataset, initial_candidates, opts, true)
 }
 
 /// Random selection baseline (zero MPC cost).
@@ -917,6 +979,7 @@ pub fn random_select(n: usize, k: usize, seed: u64) -> Vec<usize> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::job::{PrivacyMode, RuntimeProfile, SelectionJob};
     use crate::data::{synth, SynthSpec};
 
     #[test]
@@ -924,6 +987,19 @@ mod tests {
         let s = random_select(100, 20, 7);
         assert_eq!(s.len(), 20);
         assert!(s.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn namespace_tag_is_identity_for_job_zero_and_disjoint_otherwise() {
+        let t = unit_tag(1, 3);
+        assert_eq!(namespace_tag(0, t), t, "job 0 must keep legacy streams");
+        assert_ne!(namespace_tag(1, t), t);
+        assert_ne!(namespace_tag(1, t), namespace_tag(2, t), "jobs disjoint");
+        assert_ne!(
+            namespace_tag(1, unit_tag(0, 0)),
+            namespace_tag(1, unit_tag(0, 1)),
+            "units stay disjoint within a job"
+        );
     }
 
     /// End-to-end phase over a tiny random-weight proxy: checks plumbing,
@@ -934,16 +1010,21 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("p.sfw");
         crate::coordinator::testutil::write_random_proxy_sfw(&path, 1, 1, 2, 16, 64, 2, 8);
-        let wf = WeightFile::load(&path).unwrap();
         let ds = synth(
             &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
             40,
             false,
             5,
         );
-        let opts = SelectionOptions { batch: 8, ..Default::default() };
-        let out =
-            run_phase_mpc(&wf, &ds, &(0..40).collect::<Vec<_>>(), 10, &opts).unwrap();
+        let outcome = SelectionJob::builder([path.as_path()], &ds)
+            .keep_counts(vec![10])
+            .runtime(RuntimeProfile { batch: 8, ..Default::default() })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let out = &outcome.phases[0];
+        assert_eq!(outcome.selected, out.survivors);
         assert_eq!(out.survivors.len(), 10);
         assert!(out.survivors.windows(2).all(|w| w[0] < w[1]));
         assert!(out.meter_p0.bytes > 0);
@@ -965,7 +1046,6 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("p.sfw");
         crate::coordinator::testutil::write_random_proxy_sfw(&path, 1, 1, 2, 16, 64, 2, 8);
-        let wf = WeightFile::load(&path).unwrap();
         let ds = synth(
             &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
             48,
@@ -973,24 +1053,34 @@ mod tests {
             5,
         );
         let cands: Vec<usize> = (0..48).collect();
-        let serial =
-            SelectionOptions { batch: 8, capture_shares: true, ..Default::default() };
-        let piped = SelectionOptions {
-            batch: 8,
-            lanes: 3,
-            capture_shares: true,
-            ..Default::default()
+        let run = |lanes: usize| {
+            SelectionJob::builder([path.as_path()], &ds)
+                .candidates(cands.clone())
+                .keep_counts(vec![12])
+                .runtime(RuntimeProfile { batch: 8, lanes, ..Default::default() })
+                .privacy(PrivacyMode::Debug {
+                    reveal_entropies: false,
+                    capture_shares: true,
+                })
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
         };
-        let a = run_phase_mpc(&wf, &ds, &cands, 12, &serial).unwrap();
-        let b = run_phase_mpc(&wf, &ds, &cands, 12, &piped).unwrap();
-        assert_eq!(a.survivors, b.survivors, "serial vs pipelined selection");
-        assert_eq!(a.ent_shares, b.ent_shares, "entropy shares must be byte-identical");
+        let a = run(1);
+        let b = run(3);
+        assert_eq!(a.selected, b.selected, "serial vs pipelined selection");
+        assert_eq!(
+            a.phases[0].ent_shares, b.phases[0].ent_shares,
+            "entropy shares must be byte-identical"
+        );
     }
 
-    /// Overlapped phases must be output-identical to the barrier driver —
-    /// the small in-crate version of tests/multiphase_equiv.rs.
+    /// The deprecated free-function shims must pin the exact legacy
+    /// behavior: overlapped output identical to barrier, same surface.
     #[test]
-    fn overlapped_multiphase_matches_barrier() {
+    #[allow(deprecated)]
+    fn legacy_shims_still_select_and_overlap_identically() {
         let dir = std::env::temp_dir().join("sf_phase_overlap_test");
         std::fs::create_dir_all(&dir).unwrap();
         let p1 = dir.join("p1.sfw");
@@ -1031,5 +1121,11 @@ mod tests {
         }
         assert!(overlapped.phases[1].setup_overlapped);
         assert!(!overlapped.phases[0].setup_overlapped);
+
+        // the single-phase shim keeps working too
+        let wf = WeightFile::load(&p1).unwrap();
+        let opts = SelectionOptions { batch: 8, ..Default::default() };
+        let one = run_phase_mpc(&wf, &ds, &cands, 10, &opts).unwrap();
+        assert_eq!(one.survivors.len(), 10);
     }
 }

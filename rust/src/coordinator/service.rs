@@ -1,0 +1,132 @@
+//! `SelectionService` — run many independent [`SelectionJob`]s
+//! concurrently over one shared preprocessing hub.
+//!
+//! The ROADMAP north star is a production service handling many
+//! concurrent selections.  The service owns:
+//!
+//!  * a shared dealer [`Hub`]: the opportunistic C = A·B product cache is
+//!    value-transparent, and per-job randomness namespacing
+//!    ([`namespace_tag`](super::selector::namespace_tag), keyed by each
+//!    job's `job_tag`) keeps every job's streams AND parked-product keys
+//!    disjoint, so jobs can share preprocessing compute without sharing a
+//!    single bit of protocol state;
+//!  * a worker pool: `workers` OS threads claim queued jobs in submission
+//!    order and run each to completion (every job internally spawns its
+//!    own party/lane threads, so `workers` bounds the number of
+//!    *selections* in flight, not the number of threads).
+//!
+//! The contract, enforced by tests/service_equiv.rs: a job's outcome —
+//! survivors, opened scores, entropy shares, per-job meter bytes and
+//! rounds — is byte-identical to running that same job alone.
+//!
+//! Jobs that share a `(dealer_seed, job_tag)` pair would collide in the
+//! shared hub's key space (identical streams, potentially different
+//! models), so only the FIRST job ever submitted with a given pair uses
+//! the shared hub; repeats — in the same `run_all` call or any later one
+//! (hub parking is best-effort, so a run can leave unclaimed products
+//! behind) — are given private hubs.  A safe fallback, not an error,
+//! because hub choice is invisible in the output.
+
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use anyhow::Result;
+
+use crate::mpc::dealer::Hub;
+
+use super::job::SelectionJob;
+use super::selector::SelectionOutcome;
+
+pub struct SelectionService {
+    hub: Arc<Hub>,
+    workers: usize,
+    /// every `(dealer_seed, job_tag)` that has ever been granted the
+    /// shared hub — lives as long as the hub it guards
+    seen: Mutex<HashSet<(u64, u64)>>,
+}
+
+impl SelectionService {
+    /// A service running at most `workers` jobs concurrently (min 1).
+    pub fn new(workers: usize) -> SelectionService {
+        SelectionService {
+            hub: Hub::new(),
+            workers: workers.max(1),
+            seen: Mutex::new(HashSet::new()),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The service's shared preprocessing hub.
+    pub fn hub(&self) -> Arc<Hub> {
+        self.hub.clone()
+    }
+
+    /// Run every job to completion over the worker pool and return their
+    /// results in submission order.  Jobs are independent: one job's
+    /// failure (e.g. a missing weight file) does not affect the others.
+    pub fn run_all<'a>(
+        &self,
+        jobs: Vec<SelectionJob<'a>>,
+    ) -> Vec<Result<SelectionOutcome>> {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let mut seen = self.seen.lock().unwrap();
+        let slots: Vec<Mutex<Option<SelectionJob<'a>>>> = jobs
+            .into_iter()
+            .map(|mut job| {
+                let unique = seen.insert((job.dealer_seed(), job.job_tag()));
+                job.hub = Some(if unique { self.hub.clone() } else { Hub::new() });
+                Mutex::new(Some(job))
+            })
+            .collect();
+        drop(seen);
+        let results: Vec<Mutex<Option<Result<SelectionOutcome>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let next = AtomicUsize::new(0);
+        let workers = self.workers.min(n);
+        thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let job = slots[i]
+                        .lock()
+                        .unwrap()
+                        .take()
+                        .expect("job slot claimed twice");
+                    let outcome = job.run();
+                    *results[i].lock().unwrap() = Some(outcome);
+                });
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("worker pool finished every claimed job")
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_and_worker_floor() {
+        let svc = SelectionService::new(0);
+        assert_eq!(svc.workers(), 1);
+        assert!(svc.run_all(Vec::new()).is_empty());
+    }
+}

@@ -4,16 +4,17 @@
 //! target on the purchase, evaluate.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{
     market::{self, Budget},
-    multi_phase_select, random_select, PhaseSchedule, SelectionOptions,
-    SelectionOutcome,
+    random_select, JobObserver, ModelSource, PhaseSchedule, RuntimeProfile,
+    SelectionJob, SelectionOutcome,
 };
 use crate::data::{self, Dataset};
-use crate::models::WeightFile;
+use crate::models::{ApproxToggles, WeightFile};
 use crate::runtime::Runtime;
 use crate::train::{self, Trainer};
 
@@ -138,14 +139,48 @@ pub fn select(
     cell: &Cell,
     method: Method,
     budget: f64,
-    opts: &SelectionOptions,
+    profile: &RuntimeProfile,
+    approx: ApproxToggles,
+    rt: Option<&mut Runtime>,
+) -> Result<Purchase> {
+    select_with(cell, method, budget, profile, approx, None, rt)
+}
+
+/// [`select`] with an optional progress observer attached to the MPC
+/// selection job (CLI `--progress`).
+pub fn select_with(
+    cell: &Cell,
+    method: Method,
+    budget: f64,
+    profile: &RuntimeProfile,
+    approx: ApproxToggles,
+    observer: Option<Arc<dyn JobObserver>>,
     rt: Option<&mut Runtime>,
 ) -> Result<Purchase> {
     let ds = cell.train_dataset()?;
     let bootstrap = cell.bootstrap_indices()?;
-    let b = Budget::from_fraction(ds.n, budget, bootstrap.len() as f64 / (budget * ds.n as f64));
+    // the artifact bootstrap may exceed a small budget; from_fraction
+    // clamps so selection_points saturates at 0 instead of underflowing
+    let b = Budget::from_fraction(
+        ds.n,
+        budget,
+        bootstrap.len() as f64 / (budget * ds.n as f64).max(1.0),
+    );
     let candidates = market::selection_candidates(ds.n, &bootstrap);
     let keep = b.selection_points().min(candidates.len());
+    let run_job = |models: Vec<ModelSource>,
+                   schedule: PhaseSchedule|
+     -> Result<SelectionOutcome> {
+        let mut builder = SelectionJob::builder(models, &ds)
+            .candidates(candidates.clone())
+            .schedule(schedule)
+            .runtime(*profile)
+            .approx(approx);
+        if let Some(obs) = observer.clone() {
+            builder = builder.observer(obs);
+        }
+        builder.build()?.run()
+    };
     match method {
         Method::Random => {
             let picked = random_select(candidates.len(), keep, 0xabcd ^ ds.n as u64);
@@ -169,14 +204,11 @@ pub fn select(
         }
         Method::Ours => {
             let schedule = default_schedule_for(cell, budget, &bootstrap, ds.n)?;
-            let p1 = cell.proxy_phase(1);
-            let p2 = cell.proxy_phase(2);
-            let paths: Vec<&Path> = match schedule.n_phases() {
-                1 => vec![&p2],
-                _ => vec![&p1, &p2],
+            let models: Vec<ModelSource> = match schedule.n_phases() {
+                1 => vec![cell.proxy_phase(2).into()],
+                _ => vec![cell.proxy_phase(1).into(), cell.proxy_phase(2).into()],
             };
-            let outcome =
-                multi_phase_select(&paths, &schedule, &ds, candidates, opts)?;
+            let outcome = run_job(models, schedule)?;
             Ok(Purchase {
                 indices: outcome.selected.clone(),
                 outcome: Some(outcome),
@@ -194,13 +226,7 @@ pub fn select(
                 vec![crate::coordinator::ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 }],
                 vec![frac.clamp(1e-6, 1.0)],
             );
-            let outcome = multi_phase_select(
-                &[path.as_path()],
-                &schedule,
-                &ds,
-                candidates,
-                opts,
-            )?;
+            let outcome = run_job(vec![path.into()], schedule)?;
             Ok(Purchase {
                 indices: outcome.selected.clone(),
                 outcome: Some(outcome),

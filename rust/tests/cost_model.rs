@@ -5,9 +5,9 @@
 use selectformer::benchkit::profile_deep_target;
 use selectformer::coordinator::planner::profile_phase;
 use selectformer::coordinator::testutil::{self, tiny_proxy_cfg};
-use selectformer::coordinator::{run_phase_mpc, SchedPolicy, SelectionOptions};
+use selectformer::coordinator::{RuntimeProfile, SchedPolicy, SelectionJob};
 use selectformer::data::{synth, SynthSpec};
-use selectformer::models::{ModelConfig, Variant, WeightFile};
+use selectformer::models::ModelConfig;
 use selectformer::mpc::net::NetConfig;
 
 fn run_actual(cfg: &ModelConfig, n: usize, batch: usize) -> (u64, u64) {
@@ -15,7 +15,6 @@ fn run_actual(cfg: &ModelConfig, n: usize, batch: usize) -> (u64, u64) {
         .join("sf_costmodel")
         .join(format!("{}_{}_{}.sfw", cfg.n_layers, cfg.variant_code, cfg.d_ff));
     testutil::write_random_sfw(&path, cfg);
-    let wf = WeightFile::load(&path).unwrap();
     let ds = synth(
         &SynthSpec {
             n_classes: cfg.n_classes,
@@ -27,8 +26,14 @@ fn run_actual(cfg: &ModelConfig, n: usize, batch: usize) -> (u64, u64) {
         false,
         5,
     );
-    let opts = SelectionOptions { batch, ..Default::default() };
-    let out = run_phase_mpc(&wf, &ds, &(0..n).collect::<Vec<_>>(), 1, &opts).unwrap();
+    let outcome = SelectionJob::builder([path.as_path()], &ds)
+        .keep_counts(vec![1])
+        .runtime(RuntimeProfile { batch, ..Default::default() })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    let out = &outcome.phases[0];
     (out.meter_p0.bytes + out.meter_p1.bytes, out.meter_p0.rounds)
 }
 

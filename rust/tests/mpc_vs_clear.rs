@@ -7,11 +7,42 @@
 //! These tests need `make artifacts`; they skip (pass vacuously, loudly)
 //! when the artifacts are absent so `cargo test` works on a fresh clone.
 
-use selectformer::coordinator::{run_phase_mpc, SelectionOptions};
+use selectformer::coordinator::{PrivacyMode, RuntimeProfile, SelectionJob};
+use selectformer::data::Dataset;
 use selectformer::exp::Cell;
 use selectformer::models::WeightFile;
 use selectformer::runtime::Runtime;
 use selectformer::train::proxy_entropies_clear;
+
+/// One single-phase selection via the job API, returning the phase
+/// outcome (with entropies opened when `reveal` — validation only).
+fn select_phase(
+    wf: &WeightFile,
+    ds: &Dataset,
+    candidates: &[usize],
+    keep: usize,
+    reveal: bool,
+) -> selectformer::coordinator::PhaseOutcome {
+    let mut builder = SelectionJob::builder([wf], ds)
+        .candidates(candidates.to_vec())
+        .keep_counts(vec![keep]);
+    if reveal {
+        builder = builder.privacy(PrivacyMode::Debug {
+            reveal_entropies: true,
+            capture_shares: false,
+        });
+    }
+    builder
+        .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+        .build()
+        .unwrap()
+        .run()
+        .unwrap()
+        .phases
+        .into_iter()
+        .next()
+        .expect("single-phase job")
+}
 
 fn cell() -> Option<Cell> {
     let c = Cell::new(&Cell::default_root(), "distilbert_s", "sst2s");
@@ -43,12 +74,7 @@ fn mpc_entropies_match_pjrt_clear_path() {
     .unwrap();
 
     // private path: the same forward over 2PC shares
-    let opts = SelectionOptions {
-        batch: 16,
-        reveal_entropies: true,
-        ..Default::default()
-    };
-    let out = run_phase_mpc(&wf, &ds, &candidates, 8, &opts).unwrap();
+    let out = select_phase(&wf, &ds, &candidates, 8, true);
     let mpc = out.entropies.unwrap();
 
     assert_eq!(clear.len(), mpc.len());
@@ -85,12 +111,7 @@ fn phase2_proxy_also_matches() {
     let clear =
         proxy_entropies_clear(&mut rt, &cell.proxy_fwd_hlo(2), &wf, &ds, &candidates, 64)
             .unwrap();
-    let opts = SelectionOptions {
-        batch: 16,
-        reveal_entropies: true,
-        ..Default::default()
-    };
-    let out = run_phase_mpc(&wf, &ds, &candidates, 8, &opts).unwrap();
+    let out = select_phase(&wf, &ds, &candidates, 8, true);
     let mpc = out.entropies.unwrap();
     let mut max_err = 0f32;
     for (c, m) in clear.iter().zip(&mpc) {
@@ -107,11 +128,10 @@ fn selection_and_training_compose() {
     // and produce a sane accuracy.
     let Some(cell) = cell() else { return };
     let mut rt = Runtime::new().unwrap();
-    let opts = SelectionOptions { batch: 16, ..Default::default() };
     let ds = cell.train_dataset().unwrap();
     let candidates: Vec<usize> = (0..600).collect();
     let wf = WeightFile::load(&cell.proxy_phase(1)).unwrap();
-    let out = run_phase_mpc(&wf, &ds, &candidates, 100, &opts).unwrap();
+    let out = select_phase(&wf, &ds, &candidates, 100, false);
     assert_eq!(out.survivors.len(), 100);
     let purchase = selectformer::exp::Purchase {
         indices: out.survivors,

@@ -1,5 +1,5 @@
 //! Cross-phase equivalence suite: the streamed multi-phase scheduler
-//! (`SelectionOptions::overlap` — phase i+1 setup behind phase i drain,
+//! (`RuntimeProfile::overlap` — phase i+1 setup behind phase i drain,
 //! survivor streaming out of QuickSelect, one broadcast session setup per
 //! phase) must be BYTE-IDENTICAL to the barrier reference:
 //!
@@ -18,7 +18,7 @@
 use std::path::{Path, PathBuf};
 
 use selectformer::coordinator::{
-    multi_phase_select, testutil, PhaseSchedule, ProxySpec, SelectionOptions,
+    testutil, PhaseSchedule, PrivacyMode, ProxySpec, RuntimeProfile, SelectionJob,
     SelectionOutcome,
 };
 use selectformer::data::{synth, Dataset, SynthSpec};
@@ -46,16 +46,16 @@ fn run(
     overlap: bool,
     seed: u64,
 ) -> SelectionOutcome {
-    let opts = SelectionOptions {
-        batch: 16,
-        lanes,
-        overlap,
-        dealer_seed: seed,
-        reveal_entropies: true,
-        capture_shares: true,
-        ..Default::default()
-    };
-    multi_phase_select(paths, schedule, ds, cands.to_vec(), &opts).unwrap()
+    SelectionJob::builder(paths.iter().copied(), ds)
+        .candidates(cands.to_vec())
+        .schedule(schedule.clone())
+        .runtime(RuntimeProfile { batch: 16, lanes, overlap, ..Default::default() })
+        .dealer_seed(seed)
+        .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true })
+        .build()
+        .expect("job config must validate")
+        .run()
+        .unwrap()
 }
 
 /// Every observable of `got` must match the reference bit for bit.

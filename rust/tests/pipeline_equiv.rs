@@ -18,7 +18,7 @@
 //! must not race a concurrent comparison.
 
 use selectformer::coordinator::{
-    multi_phase_select, testutil, PhaseSchedule, ProxySpec, SelectionOptions,
+    testutil, PhaseSchedule, ProxySpec, RuntimeProfile, SelectionJob,
 };
 use selectformer::data::{synth, SynthSpec};
 use selectformer::tensor::set_gemm_threads;
@@ -48,8 +48,14 @@ fn two_phase_pipelined_selection_is_identical_and_traffic_equal() {
     let paths = [p1.as_path(), p2.as_path()];
 
     let run = |lanes: usize| {
-        let opts = SelectionOptions { batch: 16, lanes, ..Default::default() };
-        multi_phase_select(&paths, &schedule, &ds, cands.clone(), &opts).unwrap()
+        SelectionJob::builder(paths, &ds)
+            .candidates(cands.clone())
+            .schedule(schedule.clone())
+            .runtime(RuntimeProfile { batch: 16, lanes, ..Default::default() })
+            .build()
+            .unwrap()
+            .run()
+            .unwrap()
     };
 
     let serial = run(1);

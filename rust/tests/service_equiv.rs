@@ -1,0 +1,221 @@
+//! SelectionService equivalence suite — the tentpole acceptance bar:
+//!
+//! N independent jobs run CONCURRENTLY over one shared dealer hub must be
+//! BYTE-IDENTICAL to the same jobs run serially in isolation —
+//!
+//!  * identical survivors (per phase and end to end);
+//!  * identical opened entropy scores and raw entropy shares;
+//!  * identical per-job meter bytes and rounds;
+//!
+//! across a matrix of lanes × overlap, heterogeneous schedules (1- and
+//! 2-phase), distinct datasets and dealer seeds, plus a deliberately
+//! DUPLICATED `(dealer_seed, job_tag)` pair (the service must isolate its
+//! hub rather than cross-contaminate).  Also proves observers are pure:
+//! attaching one changes event counters, never an output byte.
+//!
+//! Like multiphase_equiv, the suite honors the CI matrix: `SF_EQUIV_LANES`
+//! pins the lane count (unset: sweep {1, 2}) and `SF_EQUIV_SEED` salts
+//! every job's dealer seed, so each matrix cell checks a distinct point.
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use selectformer::coordinator::{
+    testutil, EventCounters, PhaseSchedule, PrivacyMode, ProxySpec,
+    RuntimeProfile, SelectionJob, SelectionOutcome, SelectionService,
+};
+use selectformer::data::{synth, Dataset, SynthSpec};
+
+struct JobSpec {
+    proxies: Vec<PathBuf>,
+    schedule: PhaseSchedule,
+    dataset: Dataset,
+    n_cands: usize,
+    dealer_seed: u64,
+    job_tag: u64,
+}
+
+/// Dealer-seed salt from the CI matrix (0 locally).  XORing every job's
+/// seed with the same salt preserves the deliberate twin/duplicate
+/// structure below while making each matrix cell a distinct run.
+fn seed_salt() -> u64 {
+    std::env::var("SF_EQUIV_SEED")
+        .ok()
+        .map(|v| v.parse().expect("SF_EQUIV_SEED must be a u64"))
+        .unwrap_or(0)
+}
+
+/// (lanes, overlap) combinations: pinned by `SF_EQUIV_LANES` in CI,
+/// a small sweep locally.
+fn lane_overlap_matrix() -> Vec<(usize, bool)> {
+    match std::env::var("SF_EQUIV_LANES") {
+        Ok(v) => {
+            let l = v.parse().expect("SF_EQUIV_LANES must be a lane count");
+            vec![(l, false), (l, true)]
+        }
+        Err(_) => vec![(1, false), (2, false), (1, true), (2, true)],
+    }
+}
+
+fn specs() -> Vec<JobSpec> {
+    let salt = seed_salt();
+    let dir = std::env::temp_dir().join("sf_service_equiv");
+    let mk = |name: &str, shapes: &[(usize, usize, usize)]| -> Vec<PathBuf> {
+        shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(l, w, d))| {
+                let p = dir.join(format!("{name}{i}.sfw"));
+                testutil::write_random_proxy_sfw(&p, l, w, d, 16, 64, 2, 8);
+                p
+            })
+            .collect()
+    };
+    let two_phase = PhaseSchedule::new(
+        vec![
+            ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            ProxySpec { n_layers: 1, n_heads: 2, d_mlp: 2 },
+        ],
+        vec![0.5, 0.5],
+    );
+    let one_phase = PhaseSchedule::new(
+        vec![ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 }],
+        vec![0.25],
+    );
+    let ds = |n: usize, seed: u64| {
+        synth(&SynthSpec { seq_len: 16, vocab: 64, ..Default::default() }, n, false, seed)
+    };
+    vec![
+        // job 0: 2-phase, default seed
+        JobSpec {
+            proxies: mk("a", &[(1, 1, 2), (1, 2, 2)]),
+            schedule: two_phase.clone(),
+            dataset: ds(96, 11),
+            n_cands: 96,
+            dealer_seed: 0x5e1ec7 ^ salt,
+            job_tag: 1,
+        },
+        // job 1: single-phase, different corpus + seed
+        JobSpec {
+            proxies: mk("b", &[(1, 2, 2)]),
+            schedule: one_phase,
+            dataset: ds(80, 12),
+            n_cands: 80,
+            dealer_seed: 0xfeed ^ salt,
+            job_tag: 2,
+        },
+        // job 2: SAME (seed, tag) as job 0 and same proxies/corpus shape —
+        // the duplicate the service must quarantine onto a private hub
+        JobSpec {
+            proxies: mk("a", &[(1, 1, 2), (1, 2, 2)]),
+            schedule: two_phase,
+            dataset: ds(96, 11),
+            n_cands: 96,
+            dealer_seed: 0x5e1ec7 ^ salt,
+            job_tag: 1,
+        },
+    ]
+}
+
+fn build_job<'a>(
+    spec: &'a JobSpec,
+    lanes: usize,
+    overlap: bool,
+    observer: Option<Arc<EventCounters>>,
+) -> SelectionJob<'a> {
+    let mut b = SelectionJob::builder(spec.proxies.iter(), &spec.dataset)
+        .candidates((0..spec.n_cands).collect())
+        .schedule(spec.schedule.clone())
+        .runtime(RuntimeProfile { batch: 16, lanes, overlap, ..Default::default() })
+        .dealer_seed(spec.dealer_seed)
+        .job_tag(spec.job_tag)
+        .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true });
+    if let Some(obs) = observer {
+        b = b.observer(obs);
+    }
+    b.build().expect("job spec must validate")
+}
+
+fn assert_identical(tag: &str, alone: &SelectionOutcome, svc: &SelectionOutcome) {
+    assert_eq!(alone.selected, svc.selected, "{tag}: final selection");
+    assert_eq!(alone.phases.len(), svc.phases.len(), "{tag}: phase count");
+    for (p, (a, b)) in alone.phases.iter().zip(&svc.phases).enumerate() {
+        assert_eq!(a.survivors, b.survivors, "{tag}: phase {p} survivors");
+        assert_eq!(
+            a.entropies, b.entropies,
+            "{tag}: phase {p} opened entropy scores"
+        );
+        assert_eq!(a.ent_shares, b.ent_shares, "{tag}: phase {p} entropy shares");
+        assert_eq!(
+            a.meter_p0.bytes, b.meter_p0.bytes,
+            "{tag}: phase {p} P0 bytes"
+        );
+        assert_eq!(
+            a.meter_p1.bytes, b.meter_p1.bytes,
+            "{tag}: phase {p} P1 bytes"
+        );
+        assert_eq!(
+            a.meter_p0.rounds, b.meter_p0.rounds,
+            "{tag}: phase {p} rounds"
+        );
+        assert_eq!(a.setup_bytes, b.setup_bytes, "{tag}: phase {p} setup bytes");
+    }
+}
+
+#[test]
+fn concurrent_jobs_are_byte_identical_to_isolated_runs() {
+    let specs = specs();
+    for (lanes, overlap) in lane_overlap_matrix() {
+        let tag = format!("lanes={lanes} overlap={overlap}");
+        // reference: every job alone, fresh hubs, no service
+        let alone: Vec<SelectionOutcome> = specs
+            .iter()
+            .map(|s| build_job(s, lanes, overlap, None).run().unwrap())
+            .collect();
+        // the same jobs concurrently over the shared-hub worker pool
+        let service = SelectionService::new(specs.len());
+        let jobs: Vec<SelectionJob> =
+            specs.iter().map(|s| build_job(s, lanes, overlap, None)).collect();
+        let together = service.run_all(jobs);
+        assert_eq!(together.len(), specs.len());
+        for (i, (a, t)) in alone.iter().zip(&together).enumerate() {
+            let t = t.as_ref().unwrap_or_else(|e| panic!("{tag}: job {i}: {e:#}"));
+            assert_identical(&format!("{tag} job {i}"), a, t);
+        }
+        // jobs 0 and 2 are identical twins by construction — they must
+        // agree with each other too (the duplicate-hub quarantine path)
+        assert_eq!(together[0].as_ref().unwrap().selected,
+                   together[2].as_ref().unwrap().selected,
+                   "{tag}: twin jobs must agree");
+    }
+}
+
+#[test]
+fn observers_see_events_but_never_change_output() {
+    let specs = specs();
+    let spec = &specs[0];
+    let plain = build_job(spec, 2, true, None).run().unwrap();
+    let counters = EventCounters::new();
+    let observed = build_job(spec, 2, true, Some(counters.clone())).run().unwrap();
+    assert_identical("observed-vs-plain", &plain, &observed);
+
+    let n_phases = spec.schedule.n_phases() as u64;
+    assert_eq!(counters.phases_started.load(Ordering::Relaxed), n_phases);
+    assert_eq!(counters.phases_finished.load(Ordering::Relaxed), n_phases);
+    // every candidate batch reports once: phase 0 evaluates 96 candidates
+    // (6 batches of 16), phase 1 the 48 survivors (3 batches)
+    assert_eq!(counters.batches.load(Ordering::Relaxed), 6 + 3);
+    assert!(counters.batch_bytes.load(Ordering::Relaxed) > 0);
+    // every confirmed survivor streams out exactly once: 48 + 24
+    assert_eq!(counters.survivors.load(Ordering::Relaxed), 48 + 24);
+
+    // and the observed job still matches the no-observer service run
+    let service = SelectionService::new(2);
+    let jobs = vec![
+        build_job(spec, 2, true, Some(EventCounters::new())),
+        build_job(&specs[1], 1, false, None),
+    ];
+    let out = service.run_all(jobs);
+    assert_identical("service+observer", &plain, out[0].as_ref().unwrap());
+}

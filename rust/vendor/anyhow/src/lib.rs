@@ -1,6 +1,6 @@
 //! Minimal offline stand-in for the `anyhow` crate — exactly the API
 //! subset this repository uses (`Result`, `Error`, `Context`, `anyhow!`,
-//! `bail!`).  The build environment has no crates.io access, so the real
+//! `bail!`, `ensure!`).  The build environment has no crates.io access, so the real
 //! crate is replaced by this ~100-line shim; swapping the path dependency
 //! back to the registry crate is a one-line Cargo.toml change.
 //!
@@ -97,6 +97,24 @@ macro_rules! bail {
     };
 }
 
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +141,18 @@ mod tests {
         let v: Option<u32> = None;
         assert!(Context::context(v, "missing").is_err());
         assert_eq!(Context::context(Some(3u32), "missing").unwrap(), 3);
+    }
+
+    #[test]
+    fn ensure_guards() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x <= 2, "too big: {x}");
+            ensure!(x > 0);
+            Ok(x)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(5).unwrap_err().to_string(), "too big: 5");
+        assert!(f(0).unwrap_err().to_string().contains("x > 0"));
     }
 
     #[test]
