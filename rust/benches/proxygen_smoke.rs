@@ -1,0 +1,142 @@
+//! Proxygen smoke gate: distill a tiny proxy ladder in-process, ASSERT
+//! the fit-quality thresholds (per-module RMSE + bootstrap
+//! entropy-ranking overlap), and persist the machine-diffable report to
+//! results/BENCH_proxy.json — uploaded by CI alongside BENCH_e2e.json so
+//! the distillation quality trajectory is tracked run over run.
+//!
+//!     cargo bench --bench proxygen_smoke
+
+use selectformer::coordinator::testutil::{self, SfwStyle};
+use selectformer::coordinator::ProxySpec;
+use selectformer::data::{synth, SynthSpec};
+use selectformer::models::{ModelConfig, WeightFile};
+use selectformer::proxygen::{self, DistillConfig};
+use selectformer::util::report::Table;
+use selectformer::util::Rng;
+
+// Acceptance thresholds (empirical ceilings sit far below these):
+//  - softmax substitute: outputs in [0, 1], bring-up rmse ~0.01
+//  - rsqrt substitute: doubly standardized fit, worst layer ~0.08
+//  - entropy head (refit on real logits): bring-up ~0.05-0.15
+//  - bootstrap top-k overlap: the §4.2 selection-fidelity bar
+const SM_RMSE_MAX: f32 = 0.08;
+const LN_RMSE_MAX: f32 = 0.40;
+const SE_RMSE_MAX: f32 = 0.30;
+const BOOT_OVERLAP_MIN: f32 = 0.80;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let dir = std::env::temp_dir().join("sf_proxygen_smoke");
+    let target_path = dir.join("target.sfw");
+    let tcfg = ModelConfig {
+        n_layers: 2,
+        n_heads: 2,
+        d_model: 32,
+        d_head: 8,
+        d_mlp: 4,
+        seq_len: 16,
+        vocab: 64,
+        n_classes: 3,
+        variant_code: 3,
+        d_ff: 64,
+        attn_scale_dim: 8,
+    };
+    testutil::write_random_sfw_styled(
+        &target_path,
+        &tcfg,
+        SfwStyle { cls_std: 1.0, ffn_w2_std: 0.02, seed: 31, ..Default::default() },
+    );
+    let target = WeightFile::load(&target_path).unwrap();
+    let ds = synth(
+        &SynthSpec { n_classes: 3, seq_len: 16, vocab: 64, ..Default::default() },
+        160,
+        false,
+        13,
+    );
+    let bootstrap = {
+        let mut idx = Rng::new(29).choose(ds.n, 96);
+        idx.sort_unstable();
+        idx
+    };
+    let specs = vec![
+        ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 4 },
+        ProxySpec { n_layers: 2, n_heads: 2, d_mlp: 16 },
+    ];
+    let out = proxygen::distill_proxies(
+        &target,
+        &ds,
+        &bootstrap,
+        &specs,
+        &DistillConfig::default(),
+    )
+    .expect("distillation must succeed");
+    let reports: Vec<_> = out.iter().map(|(_, r)| r.clone()).collect();
+
+    let mut table = Table::new(
+        "proxygen smoke (quantized fits)",
+        &["phase", "spec", "module", "rmse", "gate"],
+    );
+    let mut failures: Vec<String> = Vec::new();
+    for r in &reports {
+        for m in &r.modules {
+            let gate = if m.module.contains("mlp_sm") {
+                SM_RMSE_MAX
+            } else if m.module.contains("mlp_ln") {
+                LN_RMSE_MAX
+            } else {
+                SE_RMSE_MAX
+            };
+            table.row(vec![
+                (r.phase + 1).to_string(),
+                r.spec.tag(),
+                m.module.clone(),
+                format!("{:.4}", m.rmse),
+                format!("< {gate}"),
+            ]);
+            // explicit NaN check: a diverged fit must FAIL the gate, not
+            // sail through because every NaN comparison is false
+            if m.rmse.is_nan() || m.rmse >= gate {
+                failures.push(format!(
+                    "phase {} {}: rmse {:.4} not < {gate}",
+                    r.phase + 1,
+                    m.module,
+                    m.rmse
+                ));
+            }
+        }
+        if r.boot_overlap.is_nan() || r.boot_overlap < BOOT_OVERLAP_MIN {
+            failures.push(format!(
+                "phase {}: bootstrap top-{} overlap {:.3} < {BOOT_OVERLAP_MIN}",
+                r.phase + 1,
+                r.boot_k,
+                r.boot_overlap
+            ));
+        }
+        println!(
+            "phase {} ({}): boot top-{} overlap {:.1}% (head corr {:.3}, {} attempt(s))",
+            r.phase + 1,
+            r.spec.tag(),
+            r.boot_k,
+            r.boot_overlap * 100.0,
+            r.head_corr,
+            r.attempts
+        );
+    }
+    table.print();
+    proxygen::write_proxy_bench_json(
+        std::path::Path::new("results/BENCH_proxy.json"),
+        &reports,
+    )
+    .expect("persist BENCH_proxy.json");
+    println!(
+        "results/BENCH_proxy.json written ({} phases, {:.1}s wall)",
+        reports.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    assert!(
+        failures.is_empty(),
+        "proxygen smoke gates failed:\n  {}",
+        failures.join("\n  ")
+    );
+    println!("all proxygen smoke gates passed");
+}

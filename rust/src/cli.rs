@@ -11,6 +11,10 @@
 //! selectformer appraise --target ... --bench ... [--threshold 0.5]
 //! selectformer plan    --target ... --bench ... [--budget 0.2]
 //! selectformer bench   <table1|table2|table3acc|table4|table6|fig5> [--quick]
+//! selectformer proxygen --target <cell|target.sfw> [--bench sst2s]
+//!                      [--data corpus.bin | --synth 256] [--boot 64]
+//!                      [--specs "1:1:2,3:4:16"] [--steps 600] [--quick]
+//!                      [--seed N] [--out proxies/]
 //! ```
 //!
 //! Each command declares its flag set; unknown flags are rejected with the
@@ -79,6 +83,13 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             boolean: &[],
         },
         "bench" => CmdSpec { value: &["artifacts", "steps"], boolean: &["quick"] },
+        "proxygen" => CmdSpec {
+            value: &[
+                "artifacts", "target", "bench", "data", "synth", "boot", "specs",
+                "steps", "seed", "out",
+            ],
+            boolean: &["quick"],
+        },
         other => bail!("unknown command `{other}` (try `selectformer info`)"),
     })
 }
@@ -244,8 +255,188 @@ pub fn run(argv: &[String]) -> Result<()> {
         "appraise" => cmd_appraise(&args),
         "plan" => cmd_plan(&args),
         "bench" => bench_acc::run(&args),
+        "proxygen" => cmd_proxygen(&args),
         other => bail!("unknown command `{other}` (try `selectformer info`)"),
     }
+}
+
+/// Parse a `--specs "l:w:d,l:w:d"` ladder.
+fn specs_from(arg: &str) -> Result<Vec<crate::coordinator::ProxySpec>> {
+    let mut specs = Vec::new();
+    for part in arg.split(',') {
+        let dims: Vec<&str> = part.trim().split(':').collect();
+        ensure!(
+            dims.len() == 3,
+            "--specs entries are l:w:d triples (got `{part}`)"
+        );
+        let parse = |s: &str| -> Result<usize> {
+            s.parse().with_context(|| format!("--specs component `{s}`"))
+        };
+        specs.push(crate::coordinator::ProxySpec {
+            n_layers: parse(dims[0])?,
+            n_heads: parse(dims[1])?,
+            d_mlp: parse(dims[2])?,
+        });
+    }
+    ensure!(!specs.is_empty(), "--specs must name >= 1 phase");
+    Ok(specs)
+}
+
+/// `selectformer proxygen` — distill substitute-MLP proxies natively
+/// (no Python/JAX artifact build).  Two modes:
+///
+///   * cell mode: `--target distilbert_s --bench sst2s` distills into the
+///     cell's `proxy_rs_phase{i}.sfw` from its `target_init.sfw`;
+///   * path mode: `--target path/to/target.sfw` with `--data corpus.bin`
+///     (or `--synth N` for a generated corpus) writes `proxy_phase{i}.sfw`
+///     under `--out` (default `proxies/`).
+///
+/// Fit reports are printed and persisted to `results/BENCH_proxy.json`.
+fn cmd_proxygen(args: &Args) -> Result<()> {
+    use crate::data::{self, SynthSpec};
+    use crate::proxygen::{self, DistillConfig};
+
+    let mut cfg = if args.has("quick") {
+        DistillConfig::quick()
+    } else {
+        DistillConfig::default()
+    };
+    cfg.seed = args.usize_or("seed", cfg.seed as usize)? as u64;
+    if let Some(steps) = args.get("steps") {
+        cfg.mlp_steps = steps.parse().with_context(|| format!("--steps {steps}"))?;
+    }
+
+    let cell_mode = args.has("bench");
+    if cell_mode {
+        // cell mode derives corpus/bootstrap/output from the cell layout;
+        // reject the path-mode flags instead of silently ignoring them
+        for flag in ["out", "data", "synth", "boot"] {
+            ensure!(
+                !args.has(flag),
+                "--{flag} does not apply in cell mode (drop it, or drop --bench \
+                 and pass --target as a .sfw path)"
+            );
+        }
+        let cell = cell_from(args)?;
+        let wf = WeightFile::load(&cell.target_init())?;
+        let base = wf.config()?;
+        let specs = match args.get("specs") {
+            Some(s) => specs_from(s)?,
+            None => {
+                let is_cv = cell.bench.starts_with("cifar");
+                let mut proxies = crate::coordinator::PhaseSchedule::default_two_phase(
+                    is_cv,
+                    base.n_heads,
+                    0.2,
+                )
+                .proxies;
+                // the paper default assumes >= 3 target layers; clamp for
+                // shallower targets (path mode does the same below)
+                for p in proxies.iter_mut() {
+                    p.n_layers = p.n_layers.min(base.n_layers);
+                }
+                proxies
+            }
+        };
+        let schedule = crate::coordinator::PhaseSchedule::new(
+            specs.clone(),
+            vec![1.0; specs.len()],
+        );
+        let reports = exp::distill_cell(&cell, &schedule, &cfg)?;
+        print_proxygen_reports(&reports);
+        for (i, _) in reports.iter().enumerate() {
+            println!("wrote {:?}", cell.rust_proxy_phase(i + 1));
+        }
+        proxygen::write_proxy_bench_json(
+            std::path::Path::new("results/BENCH_proxy.json"),
+            &reports,
+        )?;
+        return Ok(());
+    }
+
+    let target_path = args.get("target").context(
+        "--target required (a target .sfw path, or a cell name with --bench)",
+    )?;
+    let target = WeightFile::load(std::path::Path::new(target_path))?;
+    let tcfg = target.config()?;
+    let ds = match (args.get("data"), args.get("synth")) {
+        (Some(_), Some(_)) => {
+            bail!("--data and --synth are mutually exclusive — pick one corpus")
+        }
+        (Some(p), None) => crate::data::Dataset::load(std::path::Path::new(p))?,
+        (None, Some(n)) => {
+            let n: usize = n.parse().with_context(|| format!("--synth {n}"))?;
+            data::synth(
+                &SynthSpec {
+                    n_classes: tcfg.n_classes,
+                    seq_len: tcfg.seq_len,
+                    vocab: tcfg.vocab,
+                    ..Default::default()
+                },
+                n,
+                false,
+                cfg.seed ^ 0xda7a,
+            )
+        }
+        (None, None) => bail!("proxygen needs --data <corpus.bin> or --synth <n>"),
+    };
+    let boot_n = args.usize_or("boot", (ds.n / 4).clamp(8, 128).min(ds.n))?;
+    ensure!(
+        boot_n >= 8 && boot_n <= ds.n,
+        "bootstrap size {boot_n} outside [8, {}] — calibration needs >= 8 \
+         points and the corpus has {}",
+        ds.n,
+        ds.n
+    );
+    let bootstrap = crate::coordinator::market::bootstrap_purchase(
+        ds.n,
+        &crate::coordinator::market::Budget {
+            total: boot_n,
+            bootstrap_fraction: 1.0,
+        },
+        cfg.seed,
+    );
+    let default_specs = format!(
+        "1:1:2,{}:{}:16",
+        tcfg.n_layers.min(3),
+        tcfg.n_heads
+    );
+    let specs = specs_from(&args.get_or("specs", &default_specs))?;
+    let reports_wf =
+        proxygen::distill_proxies(&target, &ds, &bootstrap, &specs, &cfg)?;
+    let out_dir = std::path::PathBuf::from(args.get_or("out", "proxies"));
+    let mut reports = Vec::with_capacity(reports_wf.len());
+    for (i, (wf, report)) in reports_wf.into_iter().enumerate() {
+        let path = out_dir.join(format!("proxy_phase{}.sfw", i + 1));
+        wf.save(&path)?;
+        println!("wrote {path:?}");
+        reports.push(report);
+    }
+    print_proxygen_reports(&reports);
+    proxygen::write_proxy_bench_json(
+        std::path::Path::new("results/BENCH_proxy.json"),
+        &reports,
+    )?;
+    println!("fit report persisted to results/BENCH_proxy.json");
+    Ok(())
+}
+
+fn print_proxygen_reports(reports: &[crate::proxygen::ProxyFitReport]) {
+    let mut t = Table::new(
+        "proxy fit (quantized weights)",
+        &["phase", "spec", "worst rmse", "head corr", "boot overlap", "attempts"],
+    );
+    for r in reports {
+        t.row(vec![
+            (r.phase + 1).to_string(),
+            r.spec.tag(),
+            format!("{:.4}", r.worst_rmse()),
+            format!("{:.3}", r.head_corr),
+            format!("{:.0}% (top-{})", r.boot_overlap * 100.0, r.boot_k),
+            r.attempts.to_string(),
+        ]);
+    }
+    t.print();
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
@@ -543,6 +734,19 @@ mod tests {
         let a = Args::parse(&argv(&["bench", "--quick", "table1"])).unwrap();
         assert!(a.has("quick"));
         assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn proxygen_specs_parse() {
+        let s = specs_from("1:1:2, 3:4:16").unwrap();
+        assert_eq!(s.len(), 2);
+        assert_eq!(
+            s[1],
+            crate::coordinator::ProxySpec { n_layers: 3, n_heads: 4, d_mlp: 16 }
+        );
+        assert!(specs_from("1:2").is_err());
+        assert!(specs_from("a:b:c").is_err());
+        assert!(specs_from("").is_err());
     }
 
     #[test]

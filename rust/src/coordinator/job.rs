@@ -13,7 +13,12 @@
 //!    `capture_shares`) live behind a `#[doc(hidden)]` Debug variant, so
 //!    they can no longer be switched on by a stray field;
 //!  * [`PhaseSchedule`] — the proxy ladder and its selectivities (or
-//!    exact [`keep_counts`](SelectionJobBuilder::keep_counts)).
+//!    exact [`keep_counts`](SelectionJobBuilder::keep_counts));
+//!  * [`CalibrationSpec`] — optional in-process proxy generation: give
+//!    the builder ONE model (the clear target) plus a bootstrap sample,
+//!    and [`run`](SelectionJob::run) distills each phase's ⟨l, w, d⟩
+//!    proxy natively (`crate::proxygen`) before the MPC phases start —
+//!    no Python/JAX artifact build in the loop.
 //!
 //! `build()` validates everything up front (lanes ≥ 1, budget ∈ (0, 1],
 //! schedule/model-count consistency, candidate bounds); [`SelectionJob::run`]
@@ -39,6 +44,7 @@ use crate::data::Dataset;
 use crate::models::{ApproxToggles, WeightFile};
 use crate::mpc::dealer::Hub;
 use crate::mpc::net::NetConfig;
+use crate::proxygen::{self, DistillConfig, ProxyFitReport};
 
 use super::iosched::SchedPolicy;
 use super::observe::{JobEvent, JobObserver, PhaseObs};
@@ -167,6 +173,44 @@ impl PrivacyMode {
     }
 }
 
+/// In-process proxy calibration (the paper's §4.2 build stage, in Rust).
+///
+/// A calibrated job is built from ONE model — the clear TARGET — instead
+/// of per-phase proxy files: `run()` first distills a proxy for each
+/// phase of the schedule over the bootstrap sample (teacher forward +
+/// substitute-MLP training + pruning + head refit + fixed-point
+/// emission), then feeds the emitted weights to the MPC phases exactly
+/// as if they had been loaded from disk.  Calibration is model-owner
+/// compute in the clear on data she already purchased (Fig 1 stage 1);
+/// nothing of it crosses the MPC boundary except the proxies themselves,
+/// which are secret-shared like any other phase model.
+///
+/// Fit quality surfaces as [`JobEvent::PhaseCalibrated`] events and,
+/// when [`bench_json`](CalibrationSpec::bench_json) is set, persists in
+/// the `results/BENCH_proxy.json` row format.
+#[derive(Clone, Debug)]
+pub struct CalibrationSpec {
+    /// Bootstrap sample indices (must be distinct, in range, and — when
+    /// explicit candidates are given — disjoint from them; the default
+    /// candidate pool becomes "everything except the bootstrap").
+    pub bootstrap: Vec<usize>,
+    /// Distillation hyperparameters (steps, seeds, retry policy).
+    pub config: DistillConfig,
+    /// Persist the fit reports to this path when set.
+    pub bench_json: Option<PathBuf>,
+}
+
+impl CalibrationSpec {
+    /// Calibrate over `bootstrap` with default hyperparameters.
+    pub fn new(bootstrap: Vec<usize>) -> CalibrationSpec {
+        CalibrationSpec {
+            bootstrap,
+            config: DistillConfig::default(),
+            bench_json: None,
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Builder
 // ---------------------------------------------------------------------------
@@ -184,6 +228,7 @@ pub struct SelectionJobBuilder<'a> {
     dealer_seed: u64,
     job_tag: u64,
     observer: Option<Arc<dyn JobObserver>>,
+    calibration: Option<CalibrationSpec>,
 }
 
 impl<'a> SelectionJobBuilder<'a> {
@@ -250,6 +295,18 @@ impl<'a> SelectionJobBuilder<'a> {
         self
     }
 
+    /// Calibrate in-process: treat the builder's single model as the
+    /// clear TARGET and distill each phase's proxy from it (over
+    /// `spec.bootstrap`) before the MPC phases run.  Requires a
+    /// [`schedule`](Self::schedule) — its [`ProxySpec`]s are the shapes
+    /// distilled.
+    ///
+    /// [`ProxySpec`]: super::phase::ProxySpec
+    pub fn calibrate(mut self, spec: CalibrationSpec) -> Self {
+        self.calibration = Some(spec);
+        self
+    }
+
     /// Validate the configuration and produce a runnable job.
     pub fn build(self) -> Result<SelectionJob<'a>> {
         ensure!(!self.models.is_empty(), "a selection job needs >= 1 phase model");
@@ -267,9 +324,43 @@ impl<'a> SelectionJobBuilder<'a> {
             self.runtime.net.bandwidth > 0.0 && self.runtime.net.latency >= 0.0,
             "RuntimeProfile.net must have positive bandwidth and non-negative latency"
         );
+        // calibration: one model (the target), proxy shapes from the schedule
+        let boot_set: Option<std::collections::HashSet<usize>> =
+            if let Some(cal) = &self.calibration {
+                ensure!(
+                    self.models.len() == 1,
+                    "a calibrated job takes exactly ONE model (the clear target); \
+                     got {}",
+                    self.models.len()
+                );
+                ensure!(
+                    self.schedule.is_some(),
+                    "a calibrated job needs .schedule(...) — its ProxySpecs are \
+                     the shapes distilled"
+                );
+                ensure!(!cal.bootstrap.is_empty(), "calibration bootstrap is empty");
+                let mut boot =
+                    std::collections::HashSet::with_capacity(cal.bootstrap.len());
+                for &b in &cal.bootstrap {
+                    ensure!(
+                        b < self.dataset.n,
+                        "bootstrap index {b} out of range (dataset has {} points)",
+                        self.dataset.n
+                    );
+                    ensure!(boot.insert(b), "bootstrap index {b} appears more than once");
+                }
+                Some(boot)
+            } else {
+                None
+            };
         let candidates = match self.candidates {
             Some(c) => c,
-            None => (0..self.dataset.n).collect(),
+            // calibrated jobs select from everything NOT already bought
+            // as bootstrap; plain jobs from the whole dataset
+            None => match &boot_set {
+                Some(boot) => (0..self.dataset.n).filter(|i| !boot.contains(i)).collect(),
+                None => (0..self.dataset.n).collect(),
+            },
         };
         ensure!(!candidates.is_empty(), "a selection job needs >= 1 candidate");
         if let Some(&bad) = candidates.iter().find(|&&i| i >= self.dataset.n) {
@@ -282,7 +373,18 @@ impl<'a> SelectionJobBuilder<'a> {
         if let Some(&dup) = candidates.iter().find(|&&i| !uniq.insert(i)) {
             anyhow::bail!("candidate index {dup} appears more than once");
         }
-        let n_phases = self.models.len();
+        if let Some(boot) = &boot_set {
+            if let Some(&clash) = candidates.iter().find(|i| boot.contains(*i)) {
+                anyhow::bail!(
+                    "candidate index {clash} is also in the calibration bootstrap \
+                     (the bootstrap is already purchased — exclude it)"
+                );
+            }
+        }
+        let n_phases = match (&self.calibration, &self.schedule) {
+            (Some(_), Some(s)) => s.n_phases(),
+            _ => self.models.len(),
+        };
         if let Some(s) = &self.schedule {
             s.validate()?;
             ensure!(
@@ -328,6 +430,7 @@ impl<'a> SelectionJobBuilder<'a> {
             dealer_seed: self.dealer_seed,
             job_tag: self.job_tag,
             observer: self.observer,
+            calibration: self.calibration,
             hub: None,
         })
     }
@@ -351,6 +454,7 @@ pub struct SelectionJob<'a> {
     dealer_seed: u64,
     job_tag: u64,
     observer: Option<Arc<dyn JobObserver>>,
+    calibration: Option<CalibrationSpec>,
     /// Shared preprocessing hub, set by the service; `None` = one fresh
     /// hub per phase (the standalone shape).
     pub(crate) hub: Option<Arc<Hub>>,
@@ -377,6 +481,7 @@ impl<'a> SelectionJob<'a> {
             dealer_seed: 0x5e1ec7,
             job_tag: 0,
             observer: None,
+            calibration: None,
         }
     }
 
@@ -429,6 +534,37 @@ impl<'a> SelectionJob<'a> {
         }
     }
 
+    /// The phase models a run executes: the builder's models verbatim,
+    /// or — for a calibrated job — freshly distilled proxies, one per
+    /// schedule phase.  Emits `PhaseCalibrated` events and persists the
+    /// fit reports when the spec asks for it.
+    fn calibrated_models(&self) -> Result<Vec<ModelSource>> {
+        let Some(cal) = &self.calibration else {
+            return Ok(self.models.clone());
+        };
+        let target = self.models[0].load(0).context("calibration target")?;
+        let schedule = self.schedule.as_ref().expect("validated at build time");
+        let distilled = proxygen::distill_proxies(
+            &target,
+            self.dataset,
+            &cal.bootstrap,
+            &schedule.proxies,
+            &cal.config,
+        )?;
+        let reports: Vec<ProxyFitReport> =
+            distilled.iter().map(|(_, r)| r.clone()).collect();
+        if let Some(path) = &cal.bench_json {
+            proxygen::write_proxy_bench_json(path, &reports)?;
+        }
+        for r in &reports {
+            self.emit(&JobEvent::PhaseCalibrated { phase: r.phase, fit: r });
+        }
+        Ok(distilled
+            .into_iter()
+            .map(|(wf, _)| ModelSource::Loaded(Arc::new(wf)))
+            .collect())
+    }
+
     /// Run the job to completion — THE multi-phase driver.
     ///
     /// One parameterized loop covers every execution shape:
@@ -444,7 +580,15 @@ impl<'a> SelectionJob<'a> {
     ///
     /// All shapes produce byte-identical selections (survivors, opened
     /// scores, entropy shares) — only wall-clock moves.
+    ///
+    /// A [calibrated](SelectionJobBuilder::calibrate) job first distills
+    /// the per-phase proxies from the target in the clear — emitting a
+    /// [`JobEvent::PhaseCalibrated`] per phase — and then runs the MPC
+    /// phases on the emitted weights.  Distillation is deterministic in
+    /// the calibration seed, so every runtime shape sees identical
+    /// proxies and the byte-identity guarantee carries over unchanged.
     pub fn run(&self) -> Result<SelectionOutcome> {
+        let models = self.calibrated_models()?;
         let opts = self.exec_opts();
         let n_phases = self.counts.len();
         let overlap = self.profile.overlap;
@@ -466,7 +610,7 @@ impl<'a> SelectionJob<'a> {
             let eff_lanes = opts.lanes.clamp(1, n_batches.max(1));
             let (body, streamed) = if !overlap && eff_lanes <= 1 {
                 // barrier + serial: the reference oracle, setup inline
-                let weights = self.models[i].load(i)?;
+                let weights = models[i].load(i)?;
                 let cfg = weights.config()?;
                 ensure!(
                     cfg.seq_len == self.dataset.seq_len,
@@ -495,7 +639,7 @@ impl<'a> SelectionJob<'a> {
                         .join()
                         .map_err(|_| anyhow!("phase {i} setup thread panicked"))??,
                     None => {
-                        let weights = self.models[i].load(i)?;
+                        let weights = models[i].load(i)?;
                         selector::setup_phase_session_on(
                             self.phase_hub(),
                             weights,
@@ -520,7 +664,7 @@ impl<'a> SelectionJob<'a> {
                 );
                 // kick off phase i+1's setup NOW — it overlaps this drain
                 if overlap && i + 1 < n_phases {
-                    let src = self.models[i + 1].clone();
+                    let src = models[i + 1].clone();
                     let hub = self.phase_hub();
                     let (approx, seed, job) =
                         (opts.approx, opts.dealer_seed, opts.job_tag);
@@ -713,6 +857,45 @@ mod tests {
             .schedule(PhaseSchedule::default_two_phase(false, 2, 0.25))
             .build()
             .is_err());
+        // calibration without a schedule
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .calibrate(CalibrationSpec::new(vec![0, 1, 2]))
+            .keep_counts(vec![4])
+            .build()
+            .is_err());
+        // calibration with two models (which one is the target?)
+        assert!(SelectionJob::builder([p.as_path(), p.as_path()], &ds)
+            .schedule(PhaseSchedule::default_two_phase(false, 1, 0.25))
+            .calibrate(CalibrationSpec::new(vec![0, 1, 2]))
+            .build()
+            .is_err());
+        // bootstrap index out of range / duplicated
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .schedule(PhaseSchedule::default_two_phase(false, 1, 0.25))
+            .calibrate(CalibrationSpec::new(vec![0, 99]))
+            .build()
+            .is_err());
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .schedule(PhaseSchedule::default_two_phase(false, 1, 0.25))
+            .calibrate(CalibrationSpec::new(vec![3, 3]))
+            .build()
+            .is_err());
+        // candidates overlapping the bootstrap are rejected; the default
+        // pool excludes the bootstrap automatically
+        assert!(SelectionJob::builder([p.as_path()], &ds)
+            .schedule(PhaseSchedule::default_two_phase(false, 1, 0.25))
+            .calibrate(CalibrationSpec::new(vec![0, 1]))
+            .candidates(vec![1, 2, 3])
+            .build()
+            .is_err());
+        let job = SelectionJob::builder([p.as_path()], &ds)
+            .schedule(PhaseSchedule::default_two_phase(false, 1, 0.25))
+            .calibrate(CalibrationSpec::new(vec![0, 1, 2, 3]))
+            .build()
+            .unwrap();
+        assert_eq!(job.n_phases(), 2, "phase count comes from the schedule");
+        // 32 points − 4 bootstrap = 28 candidates
+        assert_eq!(job.survivor_counts()[1], (28f64 * 0.25).round() as usize);
         // invalid selectivity smuggled past PhaseSchedule::new's assert
         let bad = PhaseSchedule {
             proxies: vec![crate::coordinator::ProxySpec {

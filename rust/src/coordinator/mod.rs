@@ -54,7 +54,8 @@ pub mod testutil;
 
 pub use iosched::SchedPolicy;
 pub use job::{
-    ModelSource, PrivacyMode, RuntimeProfile, SelectionJob, SelectionJobBuilder,
+    CalibrationSpec, ModelSource, PrivacyMode, RuntimeProfile, SelectionJob,
+    SelectionJobBuilder,
 };
 pub use observe::{EventCounters, JobEvent, JobObserver, StderrProgress};
 pub use phase::{PhaseSchedule, ProxySpec};

@@ -20,11 +20,17 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::proxygen::ProxyFitReport;
+
 use super::selector::PhaseOutcome;
 
 /// One observable step of a running selection job.
 #[derive(Debug)]
 pub enum JobEvent<'a> {
+    /// A calibrated job distilled phase `phase`'s proxy in-process before
+    /// any MPC ran; `fit` carries the per-module RMSEs and the bootstrap
+    /// ranking overlap measured on the emitted (quantized) weights.
+    PhaseCalibrated { phase: usize, fit: &'a ProxyFitReport },
     /// Phase `phase` is starting over `n_candidates` survivors of the
     /// previous phase; `keep` of them will survive this one.
     PhaseStarted { phase: usize, n_candidates: usize, keep: usize },
@@ -69,6 +75,7 @@ impl PhaseObs {
 /// without recording payloads.
 #[derive(Debug, Default)]
 pub struct EventCounters {
+    pub calibrations: AtomicU64,
     pub phases_started: AtomicU64,
     pub phases_finished: AtomicU64,
     pub batches: AtomicU64,
@@ -86,6 +93,9 @@ impl EventCounters {
 impl JobObserver for EventCounters {
     fn on_event(&self, event: &JobEvent<'_>) {
         match event {
+            JobEvent::PhaseCalibrated { .. } => {
+                self.calibrations.fetch_add(1, Ordering::Relaxed);
+            }
             JobEvent::PhaseStarted { .. } => {
                 self.phases_started.fetch_add(1, Ordering::Relaxed);
             }
@@ -112,6 +122,19 @@ pub struct StderrProgress;
 impl JobObserver for StderrProgress {
     fn on_event(&self, event: &JobEvent<'_>) {
         match event {
+            JobEvent::PhaseCalibrated { phase, fit } => {
+                eprintln!(
+                    "[calibrate] phase {}: {} distilled (worst module rmse {:.4}, \
+                     boot top-{} overlap {:.0}%, {} attempt{})",
+                    phase + 1,
+                    fit.spec.tag(),
+                    fit.worst_rmse(),
+                    fit.boot_k,
+                    fit.boot_overlap * 100.0,
+                    fit.attempts,
+                    if fit.attempts == 1 { "" } else { "s" }
+                );
+            }
             JobEvent::PhaseStarted { phase, n_candidates, keep } => {
                 eprintln!(
                     "[phase {}] start: {} candidates -> keep {}",
@@ -150,6 +173,16 @@ mod tests {
     #[test]
     fn counters_tally_events() {
         let c = EventCounters::default();
+        let fit = crate::proxygen::ProxyFitReport {
+            phase: 0,
+            spec: crate::coordinator::ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            modules: vec![],
+            head_corr: 1.0,
+            boot_overlap: 1.0,
+            boot_k: 4,
+            attempts: 1,
+        };
+        c.on_event(&JobEvent::PhaseCalibrated { phase: 0, fit: &fit });
         c.on_event(&JobEvent::PhaseStarted { phase: 0, n_candidates: 10, keep: 4 });
         c.on_event(&JobEvent::BatchCompleted { phase: 0, batch: 0, bytes: 7, rounds: 2 });
         c.on_event(&JobEvent::BatchCompleted { phase: 0, batch: 1, bytes: 5, rounds: 3 });
@@ -170,6 +203,7 @@ mod tests {
             setup_overlapped: false,
         };
         c.on_event(&JobEvent::PhaseFinished { phase: 0, outcome: &out });
+        assert_eq!(c.calibrations.load(Ordering::Relaxed), 1);
         assert_eq!(c.phases_started.load(Ordering::Relaxed), 1);
         assert_eq!(c.batches.load(Ordering::Relaxed), 2);
         assert_eq!(c.batch_bytes.load(Ordering::Relaxed), 12);

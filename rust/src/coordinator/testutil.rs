@@ -22,10 +22,34 @@ fn put_tensor(out: &mut Vec<u8>, name: &str, shape: &[usize], data: &[f32]) {
     }
 }
 
+/// Weight-scale knobs for [`write_random_sfw_styled`].  The proxygen
+/// tests shape targets whose entropy signal is strong (`cls_std` ≈ 1)
+/// and whose FFN perturbation is mild (`ffn_w2_std` small) — the regime
+/// where head-only in-vivo distillation recovers the ranking.
+#[derive(Clone, Copy, Debug)]
+pub struct SfwStyle {
+    pub emb_std: f32,
+    pub attn_std: f32,
+    pub ffn_w2_std: f32,
+    pub cls_std: f32,
+    pub seed: u64,
+}
+
+impl Default for SfwStyle {
+    fn default() -> Self {
+        SfwStyle { emb_std: 0.05, attn_std: 0.08, ffn_w2_std: 0.08, cls_std: 0.1, seed: 0 }
+    }
+}
+
 /// Write a random `.sfw` matching `cfg` (FFN tensors iff `cfg.d_ff > 0`,
 /// emulation MLPs iff `cfg.d_ff == 0`).
 pub fn write_random_sfw(path: &Path, cfg: &ModelConfig) {
-    let mut rng = Rng::new(0xbadc0de ^ cfg.n_layers as u64);
+    write_random_sfw_styled(path, cfg, SfwStyle::default());
+}
+
+/// [`write_random_sfw`] with explicit weight scales.
+pub fn write_random_sfw_styled(path: &Path, cfg: &ModelConfig, style: SfwStyle) {
+    let mut rng = Rng::new(0xbadc0de ^ cfg.n_layers as u64 ^ style.seed);
     let dm = cfg.d_model;
     let aw = cfg.attn_width();
     let (s, d, c) = (cfg.seq_len, cfg.d_mlp.max(1), cfg.n_classes);
@@ -36,22 +60,22 @@ pub fn write_random_sfw(path: &Path, cfg: &ModelConfig) {
         let data = (0..n).map(|_| rng.normal() * std).collect();
         ts.push((name, shape, data));
     }
-    push(&mut tensors, &mut rng, "emb.tok".into(), vec![cfg.vocab, dm], 0.05);
-    push(&mut tensors, &mut rng, "emb.pos".into(), vec![s, dm], 0.05);
+    push(&mut tensors, &mut rng, "emb.tok".into(), vec![cfg.vocab, dm], style.emb_std);
+    push(&mut tensors, &mut rng, "emb.pos".into(), vec![s, dm], style.emb_std);
     for i in 0..cfg.n_layers {
         let p = |t: &str| format!("layer{i}.{t}");
         for (w, b, wi, wo) in
             [("wq", "bq", dm, aw), ("wk", "bk", dm, aw), ("wv", "bv", dm, aw), ("wo", "bo", aw, dm)]
         {
-            push(&mut tensors, &mut rng, p(w), vec![wi, wo], 0.08);
+            push(&mut tensors, &mut rng, p(w), vec![wi, wo], style.attn_std);
             push(&mut tensors, &mut rng, p(b), vec![wo], 0.01);
         }
         tensors.push((p("ln1.gamma"), vec![dm], vec![1.0; dm]));
         tensors.push((p("ln1.beta"), vec![dm], vec![0.0; dm]));
         if cfg.d_ff > 0 {
-            push(&mut tensors, &mut rng, p("ffn.w1"), vec![dm, cfg.d_ff], 0.08);
+            push(&mut tensors, &mut rng, p("ffn.w1"), vec![dm, cfg.d_ff], style.attn_std);
             push(&mut tensors, &mut rng, p("ffn.b1"), vec![cfg.d_ff], 0.01);
-            push(&mut tensors, &mut rng, p("ffn.w2"), vec![cfg.d_ff, dm], 0.08);
+            push(&mut tensors, &mut rng, p("ffn.w2"), vec![cfg.d_ff, dm], style.ffn_w2_std);
             push(&mut tensors, &mut rng, p("ffn.b2"), vec![dm], 0.01);
             tensors.push((p("ln2.gamma"), vec![dm], vec![1.0; dm]));
             tensors.push((p("ln2.beta"), vec![dm], vec![0.0; dm]));
@@ -66,7 +90,7 @@ pub fn write_random_sfw(path: &Path, cfg: &ModelConfig) {
             push(&mut tensors, &mut rng, p("mlp_ln.b2"), vec![1], 0.01);
         }
     }
-    push(&mut tensors, &mut rng, "cls.w".into(), vec![dm, c], 0.1);
+    push(&mut tensors, &mut rng, "cls.w".into(), vec![dm, c], style.cls_std);
     push(&mut tensors, &mut rng, "cls.b".into(), vec![c], 0.01);
     if cfg.d_ff == 0 {
         push(&mut tensors, &mut rng, "mlp_se.w1".into(), vec![c, d], 0.2);

@@ -54,6 +54,14 @@ impl Cell {
         self.dir().join(format!("proxy_phase{i}.sfw"))
     }
 
+    /// Where [`distill_cell`] writes the IN-RUST distilled proxy for
+    /// phase `i` (1-based, mirroring [`proxy_phase`](Cell::proxy_phase));
+    /// kept distinct from the Python-built artifact so the two
+    /// generations can be compared side by side.
+    pub fn rust_proxy_phase(&self, i: usize) -> PathBuf {
+        self.dir().join(format!("proxy_rs_phase{i}.sfw"))
+    }
+
     pub fn proxy_variant(&self, tag: &str) -> PathBuf {
         self.dir().join(format!("proxy_{tag}.sfw"))
     }
@@ -269,6 +277,29 @@ fn default_schedule_for(
     ))
 }
 
+/// Distill a cell's phase proxies IN RUST from its `target_init.sfw`
+/// over its bootstrap sample — the artifact-free path onto a fresh
+/// dataset: after this, `SelectionJob` can run on
+/// [`Cell::rust_proxy_phase`] files with no Python/JAX build in the
+/// loop.  Returns the per-phase fit reports.
+pub fn distill_cell(
+    cell: &Cell,
+    schedule: &crate::coordinator::PhaseSchedule,
+    cfg: &crate::proxygen::DistillConfig,
+) -> Result<Vec<crate::proxygen::ProxyFitReport>> {
+    let target = WeightFile::load(&cell.target_init())?;
+    let ds = cell.train_dataset()?;
+    let bootstrap = cell.bootstrap_indices()?;
+    let distilled =
+        crate::proxygen::distill_proxies(&target, &ds, &bootstrap, &schedule.proxies, cfg)?;
+    let mut reports = Vec::with_capacity(distilled.len());
+    for (i, (wf, report)) in distilled.into_iter().enumerate() {
+        wf.save(&cell.rust_proxy_phase(i + 1))?;
+        reports.push(report);
+    }
+    Ok(reports)
+}
+
 /// Train the target on a purchase (bootstrap ∪ selected) and return
 /// (loss curve, test accuracy).
 pub fn train_and_eval(
@@ -324,6 +355,10 @@ mod tests {
             .to_string_lossy()
             .ends_with("hlo/bert_s_sst2s_train_step_b32.hlo.txt"));
         assert!(c.proxy_phase(2).to_string_lossy().ends_with("proxy_phase2.sfw"));
+        assert!(c
+            .rust_proxy_phase(1)
+            .to_string_lossy()
+            .ends_with("proxy_rs_phase1.sfw"));
     }
 
     #[test]

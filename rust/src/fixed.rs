@@ -15,9 +15,29 @@ pub const FRAC_BITS: u32 = 16;
 pub const SCALE: f64 = (1u64 << FRAC_BITS) as f64;
 
 /// Encode a real into the ring (round-to-nearest).
+///
+/// The `as i64` cast SATURATES (Rust float→int casts clamp to the target
+/// range), so an extreme magnitude pins to ±i64::MAX instead of wrapping
+/// to the opposite sign — see [`encode_clamped`] for the bounded form the
+/// weight-quantization path uses.
 #[inline]
 pub fn encode(x: f32) -> i64 {
     (x as f64 * SCALE).round() as i64
+}
+
+/// Quantize a trained weight: clamp into [−max_abs, max_abs], then encode.
+///
+/// Distilled MLP weights can carry large magnitudes (the MLP_ln input
+/// standardization folds a 1/σ rescale into W1), and a weight outside the
+/// fixed-point comfort zone must CLAMP to the boundary, not wrap around
+/// the ring and flip sign.  NaN quantizes to 0.
+#[inline]
+pub fn encode_clamped(x: f32, max_abs: f32) -> i64 {
+    debug_assert!(max_abs > 0.0);
+    if x.is_nan() {
+        return 0;
+    }
+    encode(x.clamp(-max_abs, max_abs))
 }
 
 /// Decode a ring element back to a real.
@@ -114,6 +134,25 @@ mod tests {
         let a = i64::MAX - 3;
         let b = 1000;
         assert_eq!(rsub(radd(a, b), b), a);
+    }
+
+    #[test]
+    fn encode_saturates_instead_of_wrapping() {
+        // 1e19 · 2^16 ≫ i64::MAX: the cast saturates, so the decoded value
+        // stays a huge POSITIVE number instead of wrapping negative.
+        assert_eq!(encode(1e19), i64::MAX);
+        assert_eq!(encode(-1e19), i64::MIN);
+        assert!(decode(encode(1e19)) > 0.0);
+        assert!(decode(encode(-1e19)) < 0.0);
+    }
+
+    #[test]
+    fn encode_clamped_bounds_and_nan() {
+        assert_eq!(encode_clamped(1e30, 4096.0), encode(4096.0));
+        assert_eq!(encode_clamped(-1e30, 4096.0), encode(-4096.0));
+        assert_eq!(encode_clamped(f32::NAN, 4096.0), 0);
+        assert_eq!(encode_clamped(1.5, 4096.0), encode(1.5));
+        assert_eq!(encode_clamped(f32::INFINITY, 2.0), encode(2.0));
     }
 
     #[test]

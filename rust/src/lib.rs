@@ -9,6 +9,8 @@
 //! * [`models`] — proxy/target transformers over MPC + `.sfw` weights.
 //! * [`coordinator`] — multi-phase selection, QuickSelect over secret
 //!   comparisons, schedule planning, IO scheduling, appraisal.
+//! * [`proxygen`] — in-Rust proxy distillation (§4.2/§4.3): activation
+//!   statistics, substitute-MLP training, pruning, fixed-point emission.
 //! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts.
 //! * [`train`] — rust-driven target finetuning over `train_step` HLO.
 //! * [`data`] — synthetic benchmark loader/generator.
@@ -20,6 +22,7 @@ pub mod exp;
 pub mod data;
 pub mod fixed;
 pub mod models;
+pub mod proxygen;
 pub mod runtime;
 pub mod train;
 pub mod mpc;

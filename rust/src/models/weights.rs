@@ -1,10 +1,15 @@
-//! `.sfw` weight file loader (layout documented in
+//! `.sfw` weight file loader AND writer (layout documented in
 //! python/selectformer/export.py and DESIGN.md §6), plus the `meta.*`
 //! self-description convention that carries the model config.
+//!
+//! [`WeightFile::save`] makes the format symmetric: the in-Rust proxy
+//! generator (`crate::proxygen`) emits distilled proxies through the same
+//! writer the Python export path uses, so `ModelMpc` loads them
+//! unchanged.
 
 use std::collections::BTreeMap;
 use std::fs::File;
-use std::io::{BufReader, Read};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -59,6 +64,40 @@ impl WeightFile {
             tensors.insert(name, TensorF::from_vec(data, &shape));
         }
         Ok(WeightFile { tensors })
+    }
+
+    /// Write the `.sfw` layout [`load`](WeightFile::load) reads: magic,
+    /// version 1, then each tensor as (name, dtype f32, rank, dims, data)
+    /// in the map's sorted-name order.  `meta.*` scalars (shape `[1]`)
+    /// are written rank-0, matching the Python exporter; `load` re-reads
+    /// them as `[1]`, so save→load round-trips params, meta, and the
+    /// derived [`config`](WeightFile::config) exactly.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("create {parent:?}"))?;
+        }
+        let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        w.write_all(&1u32.to_le_bytes())?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            w.write_all(&(name.len() as u32).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&[0u8])?; // dtype f32
+            let scalar = name.starts_with("meta.") && t.shape == [1];
+            let shape: &[usize] = if scalar { &[] } else { &t.shape };
+            w.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for &d in shape {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in &t.data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        w.flush()?;
+        Ok(())
     }
 
     pub fn get(&self, name: &str) -> Result<&TensorF> {
@@ -161,5 +200,37 @@ mod tests {
     #[test]
     fn missing_file_errors() {
         assert!(WeightFile::load(Path::new("/nonexistent/x.sfw")).is_err());
+    }
+
+    /// save→load must preserve every tensor, the meta scalars, and the
+    /// config derived from them — the contract the in-Rust proxy
+    /// generator's emit path relies on.
+    #[test]
+    fn save_load_roundtrip_preserves_params_meta_and_config() {
+        let dir = std::env::temp_dir().join("sfw_save_test");
+        let src = dir.join("src.sfw");
+        crate::coordinator::testutil::write_random_proxy_sfw(&src, 2, 2, 4, 16, 64, 3, 8);
+        let wf = WeightFile::load(&src).unwrap();
+
+        let copy = dir.join("copy.sfw");
+        wf.save(&copy).unwrap();
+        let back = WeightFile::load(&copy).unwrap();
+
+        assert_eq!(wf.tensors.len(), back.tensors.len());
+        for (name, t) in &wf.tensors {
+            let b = back.get(name).unwrap();
+            assert_eq!(&t.shape, &b.shape, "{name}: shape");
+            assert_eq!(&t.data, &b.data, "{name}: data must be bit-exact");
+        }
+        assert_eq!(wf.param_names(), back.param_names());
+        assert_eq!(wf.config().unwrap(), back.config().unwrap());
+        // byte-level: rewriting the reloaded file reproduces the bytes
+        let again = dir.join("again.sfw");
+        back.save(&again).unwrap();
+        assert_eq!(
+            std::fs::read(&copy).unwrap(),
+            std::fs::read(&again).unwrap(),
+            "writer must be deterministic"
+        );
     }
 }

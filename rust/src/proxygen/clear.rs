@@ -1,0 +1,520 @@
+//! Cleartext f32 forwards of the target and proxy transformers — the
+//! model-owner-side compute of the distillation pipeline (§4.2): the
+//! teacher signal (logits + exact entropies) and the per-module
+//! activation statistics come from the target forward over the bootstrap
+//! sample; the assembled proxy's trunk features and fit metrics come from
+//! the proxy forward, which mirrors `models::proxy_mpc` operation for
+//! operation (MLP_sm on flattened score rows, MLP_ln on the variance
+//! shifted by the LN epsilon, MLP_se on the logits) so that what the
+//! generator measures in the clear is what the MPC engine will execute.
+//!
+//! [`oracle_entropies_clear`] doubles as the PJRT-free counterpart of
+//! `train::oracle_entropies` — same numbers as Oracle-over-MPC, none of
+//! the WAN cost and no native XLA dependency.
+
+use anyhow::{ensure, Result};
+
+use crate::data::Dataset;
+use crate::models::{ModelConfig, WeightFile};
+
+use super::mlp::{linear_forward, Linear, Mlp};
+
+/// The LayerNorm epsilon shared with `mpc::nonlin::layernorm_moments` —
+/// the MPC path folds it into the variance BEFORE the reciprocal-sqrt, so
+/// the substitute MLP_ln is trained on (and fed) `var + LN_EPS`.
+pub const LN_EPS: f32 = 1e-5;
+
+/// ⟨μ, σ⟩ of the inputs to each nonlinear module of the target over the
+/// bootstrap sample (paper §4.2: the Gaussians behind S_sm / S_ln / S_se).
+#[derive(Clone, Debug)]
+pub struct ModuleStats {
+    /// per layer: scaled attention-score entries
+    pub sm: Vec<(f32, f32)>,
+    /// per layer: LayerNorm variance + LN_EPS (the MLP_ln input)
+    pub ln: Vec<(f32, f32)>,
+    /// logits entries
+    pub se: (f32, f32),
+}
+
+/// Teacher signal + module statistics from one clear target pass.
+pub struct TargetOut {
+    /// (n, n_classes) row-major
+    pub logits: Vec<f32>,
+    /// exact prediction entropies, one per example
+    pub entropies: Vec<f32>,
+    pub stats: ModuleStats,
+}
+
+fn mean_std(xs: &[f32]) -> (f32, f32) {
+    let n = xs.len().max(1) as f32;
+    let mu = xs.iter().sum::<f32>() / n;
+    let var = xs.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / n;
+    (mu, var.sqrt())
+}
+
+/// Numerically stable softmax over one row, in place.
+pub(crate) fn softmax_row(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0f32;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Exact −Σ p·ln p per row of a (rows, cols) logit buffer.
+pub fn entropy_rows(logits: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let mut p = logits[r * cols..(r + 1) * cols].to_vec();
+        softmax_row(&mut p);
+        out.push(
+            -p.iter()
+                .map(|&v| if v > 0.0 { v * v.ln() } else { 0.0 })
+                .sum::<f32>(),
+        );
+    }
+    out
+}
+
+fn gelu_sig(x: f32) -> f32 {
+    // x·sigmoid(1.702x) — the same MPC-friendly identity exact_gelu uses,
+    // so the clear oracle matches the Oracle-over-MPC numerics.
+    x / (1.0 + (-1.702 * x).exp())
+}
+
+/// tokens (n, s) → embedded activations (n·s, dm).
+fn embed(
+    toks: &[u32],
+    n: usize,
+    emb_tok: &[f32],
+    emb_pos: &[f32],
+    s: usize,
+    dm: usize,
+) -> Vec<f32> {
+    let mut x = Vec::with_capacity(n * s * dm);
+    for b in 0..n {
+        for t in 0..s {
+            let tok = toks[b * s + t] as usize;
+            let tr = &emb_tok[tok * dm..(tok + 1) * dm];
+            let pr = &emb_pos[t * dm..(t + 1) * dm];
+            x.extend(tr.iter().zip(pr).map(|(a, b)| a + b));
+        }
+    }
+    x
+}
+
+/// All (n·h·s, s) scaled score rows in (example, head, row) order — the
+/// flattening `proxy_mpc::forward_layer` uses for the batched MLP_sm.
+fn scores_flat(
+    q: &[f32],
+    k: &[f32],
+    n: usize,
+    s: usize,
+    h: usize,
+    dh: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let aw = h * dh;
+    let mut flat = Vec::with_capacity(n * h * s * s);
+    for b in 0..n {
+        for head in 0..h {
+            for t in 0..s {
+                let qrow = &q[(b * s + t) * aw + head * dh..][..dh];
+                for u in 0..s {
+                    let krow = &k[(b * s + u) * aw + head * dh..][..dh];
+                    let dot: f32 = qrow.iter().zip(krow).map(|(a, b)| a * b).sum();
+                    flat.push(dot * scale);
+                }
+            }
+        }
+    }
+    flat
+}
+
+/// probs (n·h·s, s) × V → merged (n·s, h·dh).
+fn attend(probs: &[f32], v: &[f32], n: usize, s: usize, h: usize, dh: usize) -> Vec<f32> {
+    let aw = h * dh;
+    let mut merged = vec![0f32; n * s * aw];
+    for b in 0..n {
+        for head in 0..h {
+            let block = &probs[(b * h + head) * s * s..][..s * s];
+            for t in 0..s {
+                let out = &mut merged[(b * s + t) * aw + head * dh..][..dh];
+                for u in 0..s {
+                    let p = block[t * s + u];
+                    if p == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v[(b * s + u) * aw + head * dh..][..dh];
+                    for (o, &vv) in out.iter_mut().zip(vrow) {
+                        *o += p * vv;
+                    }
+                }
+            }
+        }
+    }
+    merged
+}
+
+/// Per-row (mean, var + LN_EPS) of a (rows, dm) buffer.
+fn moments(x: &[f32], rows: usize, dm: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut mus = Vec::with_capacity(rows);
+    let mut us = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &x[r * dm..(r + 1) * dm];
+        let mu = row.iter().sum::<f32>() / dm as f32;
+        let var = row.iter().map(|&v| (v - mu) * (v - mu)).sum::<f32>() / dm as f32;
+        mus.push(mu);
+        us.push(var + LN_EPS);
+    }
+    (mus, us)
+}
+
+/// (x − μ)·inv·γ + β applied in place.
+fn ln_apply(x: &mut [f32], mus: &[f32], invs: &[f32], gamma: &[f32], beta: &[f32], dm: usize) {
+    for (r, row) in x.chunks_exact_mut(dm).enumerate() {
+        let (mu, inv) = (mus[r], invs[r]);
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mu) * inv * gamma[j] + beta[j];
+        }
+    }
+}
+
+fn pool(x: &[f32], n: usize, s: usize, dm: usize) -> Vec<f32> {
+    let mut pooled = vec![0f32; n * dm];
+    for b in 0..n {
+        for t in 0..s {
+            let row = &x[(b * s + t) * dm..(b * s + t + 1) * dm];
+            for (p, &v) in pooled[b * dm..(b + 1) * dm].iter_mut().zip(row) {
+                *p += v;
+            }
+        }
+    }
+    for p in pooled.iter_mut() {
+        *p /= s as f32;
+    }
+    pooled
+}
+
+/// Clear forward of a FULL target (d_ff > 0) over `n` examples, recording
+/// the ⟨μ, σ⟩ statistics the regression-set samplers consume.
+pub fn target_forward(wf: &WeightFile, toks: &[u32], n: usize) -> Result<TargetOut> {
+    let cfg = wf.config()?;
+    ensure!(cfg.d_ff > 0, "target_forward needs a full target (d_ff > 0)");
+    let (s, dm) = (cfg.seq_len, cfg.d_model);
+    ensure!(toks.len() == n * s, "tokens must be (n, seq_len)");
+    let (h, dh) = (cfg.n_heads, cfg.d_head);
+    let aw = cfg.attn_width();
+    let scale = 1.0 / (cfg.attn_scale_dim.max(1) as f32).sqrt();
+    let rows = n * s;
+    let mut x = embed(
+        toks,
+        n,
+        &wf.get("emb.tok")?.data,
+        &wf.get("emb.pos")?.data,
+        s,
+        dm,
+    );
+    let mut sm_stats = Vec::with_capacity(cfg.n_layers);
+    let mut ln_stats = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let p = |t: &str| format!("layer{i}.{t}");
+        let lin = |w: &str, b: &str, x: &[f32], di: usize, do_: usize| -> Result<Vec<f32>> {
+            Ok(linear_forward(
+                x,
+                &wf.get(&p(w))?.data,
+                &wf.get(&p(b))?.data,
+                rows,
+                di,
+                do_,
+            ))
+        };
+        let q = lin("wq", "bq", &x, dm, aw)?;
+        let k = lin("wk", "bk", &x, dm, aw)?;
+        let v = lin("wv", "bv", &x, dm, aw)?;
+        let mut flat = scores_flat(&q, &k, n, s, h, dh, scale);
+        sm_stats.push(mean_std(&flat));
+        for row in flat.chunks_exact_mut(s) {
+            softmax_row(row);
+        }
+        let merged = attend(&flat, &v, n, s, h, dh);
+        let mut res = lin("wo", "bo", &merged, aw, dm)?;
+        for (r, &xv) in res.iter_mut().zip(&x) {
+            *r += xv;
+        }
+        let (mus, us) = moments(&res, rows, dm);
+        ln_stats.push(mean_std(&us));
+        let invs: Vec<f32> = us.iter().map(|&u| 1.0 / u.sqrt()).collect();
+        ln_apply(
+            &mut res,
+            &mus,
+            &invs,
+            &wf.get(&p("ln1.gamma"))?.data,
+            &wf.get(&p("ln1.beta"))?.data,
+            dm,
+        );
+        x = res;
+        // FFN + second LayerNorm (targets only)
+        let mut hid = lin("ffn.w1", "ffn.b1", &x, dm, cfg.d_ff)?;
+        for v in hid.iter_mut() {
+            *v = gelu_sig(*v);
+        }
+        let mut res2 = lin("ffn.w2", "ffn.b2", &hid, cfg.d_ff, dm)?;
+        for (r, &xv) in res2.iter_mut().zip(&x) {
+            *r += xv;
+        }
+        let (mus, us) = moments(&res2, rows, dm);
+        let invs: Vec<f32> = us.iter().map(|&u| 1.0 / u.sqrt()).collect();
+        ln_apply(
+            &mut res2,
+            &mus,
+            &invs,
+            &wf.get(&p("ln2.gamma"))?.data,
+            &wf.get(&p("ln2.beta"))?.data,
+            dm,
+        );
+        x = res2;
+    }
+    let pooled = pool(&x, n, s, dm);
+    let logits = linear_forward(
+        &pooled,
+        &wf.get("cls.w")?.data,
+        &wf.get("cls.b")?.data,
+        n,
+        dm,
+        cfg.n_classes,
+    );
+    let se = mean_std(&logits);
+    let entropies = entropy_rows(&logits, n, cfg.n_classes);
+    Ok(TargetOut {
+        logits,
+        entropies,
+        stats: ModuleStats { sm: sm_stats, ln: ln_stats, se },
+    })
+}
+
+/// Exact target entropies for dataset indices — the cleartext oracle
+/// (`train::oracle_entropies` without the PJRT/XLA dependency).
+pub fn oracle_entropies_clear(
+    wf: &WeightFile,
+    ds: &Dataset,
+    indices: &[usize],
+) -> Result<Vec<f32>> {
+    let toks = gather_tokens(ds, indices);
+    Ok(target_forward(wf, &toks, indices.len())?.entropies)
+}
+
+/// Flatten dataset rows for an index set — the selector's gather,
+/// reused so the distillation path can never drift from the token
+/// layout the MPC phases consume.
+pub(crate) use crate::coordinator::selector::gather_tokens;
+
+// ---------------------------------------------------------------------------
+// Proxy (MLP-substitute) clear forward
+// ---------------------------------------------------------------------------
+
+/// One pruned proxy layer: sliced attention + the substitute MLPs.
+#[derive(Clone, Debug)]
+pub(crate) struct ProxyLayer {
+    pub wq: Vec<f32>,
+    pub bq: Vec<f32>,
+    pub wk: Vec<f32>,
+    pub bk: Vec<f32>,
+    pub wv: Vec<f32>,
+    pub bv: Vec<f32>,
+    pub wo: Vec<f32>,
+    pub bo: Vec<f32>,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub mlp_sm: Mlp,
+    pub mlp_ln: Mlp,
+}
+
+/// An assembled ⟨l, w, d⟩ proxy in f32 — the unit the generator trains,
+/// evaluates, and finally quantizes into a [`WeightFile`].
+#[derive(Clone, Debug)]
+pub(crate) struct ProxyParts {
+    pub cfg: ModelConfig,
+    pub emb_tok: Vec<f32>,
+    pub emb_pos: Vec<f32>,
+    pub layers: Vec<ProxyLayer>,
+    pub cls: Linear,
+    pub mlp_se: Mlp,
+}
+
+impl ProxyParts {
+    /// Trunk forward to mean-pooled features (n, d_model) — mirrors
+    /// `proxy_mpc` (MLP_sm over flattened score rows, MLP_ln over
+    /// var + LN_EPS, secret-affine LN with the stored γ/β).
+    pub fn pooled(&self, toks: &[u32], n: usize) -> Vec<f32> {
+        let cfg = &self.cfg;
+        let (s, dm) = (cfg.seq_len, cfg.d_model);
+        assert_eq!(toks.len(), n * s, "tokens must be (n, seq_len)");
+        let (h, dh) = (cfg.n_heads, cfg.d_head);
+        let aw = h * dh;
+        let scale = 1.0 / (cfg.attn_scale_dim.max(1) as f32).sqrt();
+        let rows = n * s;
+        let mut x = embed(toks, n, &self.emb_tok, &self.emb_pos, s, dm);
+        for layer in &self.layers {
+            let q = linear_forward(&x, &layer.wq, &layer.bq, rows, dm, aw);
+            let k = linear_forward(&x, &layer.wk, &layer.bk, rows, dm, aw);
+            let v = linear_forward(&x, &layer.wv, &layer.bv, rows, dm, aw);
+            let flat = scores_flat(&q, &k, n, s, h, dh, scale);
+            let probs = layer.mlp_sm.forward(&flat, n * h * s);
+            let merged = attend(&probs, &v, n, s, h, dh);
+            let mut res = linear_forward(&merged, &layer.wo, &layer.bo, rows, aw, dm);
+            for (r, &xv) in res.iter_mut().zip(&x) {
+                *r += xv;
+            }
+            let (mus, us) = moments(&res, rows, dm);
+            let invs = layer.mlp_ln.forward(&us, rows);
+            ln_apply(&mut res, &mus, &invs, &layer.gamma, &layer.beta, dm);
+            x = res;
+        }
+        pool(&x, n, s, dm)
+    }
+
+    /// pooled → classifier logits (n, n_classes).
+    pub fn logits(&self, toks: &[u32], n: usize) -> Vec<f32> {
+        let pooled = self.pooled(toks, n);
+        self.cls.forward(&pooled, n)
+    }
+
+    /// The proxy's selection signal: MLP_se over the logits, one value
+    /// per example.
+    pub fn entropies(&self, toks: &[u32], n: usize) -> Vec<f32> {
+        self.mlp_se.forward(&self.logits(toks, n), n)
+    }
+
+    /// Reload an emitted proxy `.sfw` into the clear-eval form — used by
+    /// the fit reports so quality is measured on the QUANTIZED weights
+    /// the MPC engine will actually run.
+    pub fn from_weightfile(wf: &WeightFile) -> Result<ProxyParts> {
+        let cfg = wf.config()?;
+        ensure!(cfg.d_ff == 0, "proxy weight files carry no FFN");
+        let d = cfg.d_mlp;
+        let (s, c) = (cfg.seq_len, cfg.n_classes);
+        let mlp = |w1: &str, b1: &str, w2: &str, b2: &str, d_in: usize, d_out: usize| -> Result<Mlp> {
+            Ok(Mlp {
+                d_in,
+                d_hidden: d,
+                d_out,
+                w1: wf.get(w1)?.data.clone(),
+                b1: wf.get(b1)?.data.clone(),
+                w2: wf.get(w2)?.data.clone(),
+                b2: wf.get(b2)?.data.clone(),
+            })
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let p = |t: &str| format!("layer{i}.{t}");
+            layers.push(ProxyLayer {
+                wq: wf.get(&p("wq"))?.data.clone(),
+                bq: wf.get(&p("bq"))?.data.clone(),
+                wk: wf.get(&p("wk"))?.data.clone(),
+                bk: wf.get(&p("bk"))?.data.clone(),
+                wv: wf.get(&p("wv"))?.data.clone(),
+                bv: wf.get(&p("bv"))?.data.clone(),
+                wo: wf.get(&p("wo"))?.data.clone(),
+                bo: wf.get(&p("bo"))?.data.clone(),
+                gamma: wf.get(&p("ln1.gamma"))?.data.clone(),
+                beta: wf.get(&p("ln1.beta"))?.data.clone(),
+                mlp_sm: mlp(&p("mlp_sm.w1"), &p("mlp_sm.b1"), &p("mlp_sm.w2"), &p("mlp_sm.b2"), s, s)?,
+                mlp_ln: mlp(&p("mlp_ln.w1"), &p("mlp_ln.b1"), &p("mlp_ln.w2"), &p("mlp_ln.b2"), 1, 1)?,
+            });
+        }
+        Ok(ProxyParts {
+            cfg,
+            emb_tok: wf.get("emb.tok")?.data.clone(),
+            emb_pos: wf.get("emb.pos")?.data.clone(),
+            layers,
+            cls: Linear {
+                d_in: cfg.d_model,
+                d_out: c,
+                w: wf.get("cls.w")?.data.clone(),
+                b: wf.get("cls.b")?.data.clone(),
+            },
+            mlp_se: mlp("mlp_se.w1", "mlp_se.b1", "mlp_se.w2", "mlp_se.b2", c, 1)?,
+        })
+    }
+}
+
+/// Clear selection signal of a distilled proxy `.sfw` for dataset
+/// indices — the PJRT-free counterpart of `train::proxy_entropies_clear`.
+pub fn proxy_entropies_clear(
+    wf: &WeightFile,
+    ds: &Dataset,
+    indices: &[usize],
+) -> Result<Vec<f32>> {
+    let parts = ProxyParts::from_weightfile(wf)?;
+    ensure!(
+        parts.cfg.seq_len == ds.seq_len,
+        "proxy seq_len {} != dataset seq_len {}",
+        parts.cfg.seq_len,
+        ds.seq_len
+    );
+    let toks = gather_tokens(ds, indices);
+    Ok(parts.entropies(&toks, indices.len()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::testutil;
+    use crate::models::ModelConfig;
+
+    #[test]
+    fn entropy_rows_orders_confidence() {
+        // peaked row → low entropy, flat row → ln(4)
+        let logits = vec![4.0, 0.0, 0.0, 0.0, 1.0, 1.0, 1.0, 1.0];
+        let e = entropy_rows(&logits, 2, 4);
+        assert!(e[0] < e[1]);
+        assert!((e[1] - (4f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn target_forward_runs_and_collects_stats() {
+        let dir = std::env::temp_dir().join("sf_proxygen_clear");
+        let path = dir.join("t.sfw");
+        let cfg = ModelConfig {
+            n_layers: 2,
+            n_heads: 2,
+            d_model: 16,
+            d_head: 8,
+            d_mlp: 4,
+            seq_len: 8,
+            vocab: 32,
+            n_classes: 3,
+            variant_code: 3,
+            d_ff: 32,
+            attn_scale_dim: 8,
+        };
+        testutil::write_random_sfw(&path, &cfg);
+        let wf = WeightFile::load(&path).unwrap();
+        let toks: Vec<u32> = (0..4 * 8).map(|i| (i % 32) as u32).collect();
+        let out = target_forward(&wf, &toks, 4).unwrap();
+        assert_eq!(out.logits.len(), 4 * 3);
+        assert_eq!(out.entropies.len(), 4);
+        assert_eq!(out.stats.sm.len(), 2);
+        assert_eq!(out.stats.ln.len(), 2);
+        assert!(out.stats.ln.iter().all(|&(mu, sd)| mu > 0.0 && sd >= 0.0));
+        assert!(out.entropies.iter().all(|&e| (0.0..=(3f32).ln() + 0.01).contains(&e)));
+    }
+
+    #[test]
+    fn proxy_parts_roundtrip_from_random_sfw() {
+        let dir = std::env::temp_dir().join("sf_proxygen_clear");
+        let path = dir.join("p.sfw");
+        testutil::write_random_proxy_sfw(&path, 1, 1, 2, 8, 32, 2, 4);
+        let wf = WeightFile::load(&path).unwrap();
+        let parts = ProxyParts::from_weightfile(&wf).unwrap();
+        let toks: Vec<u32> = (0..3 * 8).map(|i| (i % 32) as u32).collect();
+        let e = parts.entropies(&toks, 3);
+        assert_eq!(e.len(), 3);
+        assert!(e.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,281 @@
+//! §4.2 pruning + fixed-point emission: initialize a ⟨l, w, d⟩ proxy
+//! from the target's bottom layers (first `w` heads of each attention —
+//! column slices of Wq/Wk/Wv, row slice of Wo — FFN dropped, substitute
+//! MLPs inserted), quantize every parameter onto the 2^-FRAC_BITS grid
+//! the MPC engine computes on, and assemble the self-describing
+//! [`WeightFile`] that `ModelMpc::setup` loads unchanged.
+//!
+//! Quantization happens BEFORE the fit report is computed, so reported
+//! quality reflects the weights that will actually run over MPC.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use crate::coordinator::phase::ProxySpec;
+use crate::fixed;
+use crate::models::{ModelConfig, WeightFile};
+use crate::tensor::TensorF;
+
+use super::clear::{ProxyLayer, ProxyParts};
+use super::mlp::{Linear, Mlp};
+
+/// Clamp bound for emitted weights: ±2^20 leaves ~2^27 of pre-truncation
+/// headroom against unit-scale activations in the ring (64 − 16 fraction
+/// bits − 20 − 1 sign), while comfortably covering the 1/σ factors the
+/// MLP_ln standardization folds into W1.
+pub const MAX_WEIGHT_ABS: f32 = (1u64 << 20) as f32;
+
+/// Round one value onto the fixed-point grid, clamping extremes (never
+/// wrapping) — [`fixed::encode_clamped`] composed with [`fixed::decode`].
+pub fn quantize(x: f32) -> f32 {
+    fixed::decode(fixed::encode_clamped(x, MAX_WEIGHT_ABS))
+}
+
+fn quantize_slice(xs: &mut [f32]) {
+    for v in xs.iter_mut() {
+        *v = quantize(*v);
+    }
+}
+
+/// Quantize one substitute MLP in place — called by the fit stage
+/// BEFORE the held-out RMSE is measured, so every reported module fit
+/// reflects the weights that will actually run over MPC.
+pub(crate) fn quantize_mlp(m: &mut Mlp) {
+    quantize_slice(&mut m.w1);
+    quantize_slice(&mut m.b1);
+    quantize_slice(&mut m.w2);
+    quantize_slice(&mut m.b2);
+}
+
+/// Quantize every parameter of an assembled proxy in place.
+pub(crate) fn quantize_parts(parts: &mut ProxyParts) {
+    quantize_slice(&mut parts.emb_tok);
+    quantize_slice(&mut parts.emb_pos);
+    for layer in parts.layers.iter_mut() {
+        quantize_slice(&mut layer.wq);
+        quantize_slice(&mut layer.bq);
+        quantize_slice(&mut layer.wk);
+        quantize_slice(&mut layer.bk);
+        quantize_slice(&mut layer.wv);
+        quantize_slice(&mut layer.bv);
+        quantize_slice(&mut layer.wo);
+        quantize_slice(&mut layer.bo);
+        quantize_slice(&mut layer.gamma);
+        quantize_slice(&mut layer.beta);
+        quantize_mlp(&mut layer.mlp_sm);
+        quantize_mlp(&mut layer.mlp_ln);
+    }
+    quantize_slice(&mut parts.cls.w);
+    quantize_slice(&mut parts.cls.b);
+    quantize_mlp(&mut parts.mlp_se);
+}
+
+/// Slice the first `keep` columns out of a (rows, cols) matrix.
+fn slice_cols(m: &[f32], rows: usize, cols: usize, keep: usize) -> Vec<f32> {
+    let mut out = Vec::with_capacity(rows * keep);
+    for r in 0..rows {
+        out.extend_from_slice(&m[r * cols..r * cols + keep]);
+    }
+    out
+}
+
+/// Initialize a ⟨l, w, d⟩ proxy from the target's weights and the
+/// ex-vivo substitute MLPs (one sm/ln pair per kept layer).
+pub(crate) fn prune_to_proxy(
+    target: &WeightFile,
+    tcfg: &ModelConfig,
+    spec: &ProxySpec,
+    mlps_sm: Vec<Mlp>,
+    mlps_ln: Vec<Mlp>,
+    mlp_se: Mlp,
+) -> Result<ProxyParts> {
+    ensure!(
+        spec.n_layers >= 1 && spec.n_layers <= tcfg.n_layers,
+        "proxy depth {} outside the target's {} layers",
+        spec.n_layers,
+        tcfg.n_layers
+    );
+    ensure!(
+        spec.n_heads >= 1 && spec.n_heads <= tcfg.n_heads,
+        "proxy width {} outside the target's {} heads",
+        spec.n_heads,
+        tcfg.n_heads
+    );
+    ensure!(spec.d_mlp >= 1, "proxy d_mlp must be >= 1");
+    ensure!(mlps_sm.len() == spec.n_layers && mlps_ln.len() == spec.n_layers);
+    let (dm, dh) = (tcfg.d_model, tcfg.d_head);
+    let aw_t = tcfg.attn_width();
+    let keep = spec.n_heads * dh;
+    let mut layers = Vec::with_capacity(spec.n_layers);
+    for (i, (mlp_sm, mlp_ln)) in mlps_sm.into_iter().zip(mlps_ln).enumerate() {
+        let p = |t: &str| format!("layer{i}.{t}");
+        layers.push(ProxyLayer {
+            wq: slice_cols(&target.get(&p("wq"))?.data, dm, aw_t, keep),
+            bq: target.get(&p("bq"))?.data[..keep].to_vec(),
+            wk: slice_cols(&target.get(&p("wk"))?.data, dm, aw_t, keep),
+            bk: target.get(&p("bk"))?.data[..keep].to_vec(),
+            wv: slice_cols(&target.get(&p("wv"))?.data, dm, aw_t, keep),
+            bv: target.get(&p("bv"))?.data[..keep].to_vec(),
+            wo: target.get(&p("wo"))?.data[..keep * dm].to_vec(),
+            bo: target.get(&p("bo"))?.data.clone(),
+            gamma: target.get(&p("ln1.gamma"))?.data.clone(),
+            beta: target.get(&p("ln1.beta"))?.data.clone(),
+            mlp_sm,
+            mlp_ln,
+        });
+    }
+    let cfg = ModelConfig {
+        n_layers: spec.n_layers,
+        n_heads: spec.n_heads,
+        d_mlp: spec.d_mlp,
+        d_ff: 0,
+        variant_code: 0, // Variant::Mlp
+        attn_scale_dim: tcfg.d_head,
+        ..*tcfg
+    };
+    Ok(ProxyParts {
+        cfg,
+        emb_tok: target.get("emb.tok")?.data.clone(),
+        emb_pos: target.get("emb.pos")?.data.clone(),
+        layers,
+        cls: Linear {
+            d_in: dm,
+            d_out: tcfg.n_classes,
+            w: target.get("cls.w")?.data.clone(),
+            b: target.get("cls.b")?.data.clone(),
+        },
+        mlp_se,
+    })
+}
+
+/// Assemble the `.sfw` tensor map (layout of `testutil::write_random_sfw`
+/// / the Python exporter) from quantized proxy parts.
+pub(crate) fn parts_to_weightfile(parts: &ProxyParts) -> WeightFile {
+    let cfg = &parts.cfg;
+    let (dm, d, s, c) = (cfg.d_model, cfg.d_mlp, cfg.seq_len, cfg.n_classes);
+    let keep = cfg.attn_width();
+    let mut tensors: BTreeMap<String, TensorF> = BTreeMap::new();
+    let mut put = |name: String, shape: &[usize], data: Vec<f32>| {
+        tensors.insert(name, TensorF::from_vec(data, shape));
+    };
+    put("emb.tok".into(), &[cfg.vocab, dm], parts.emb_tok.clone());
+    put("emb.pos".into(), &[s, dm], parts.emb_pos.clone());
+    for (i, l) in parts.layers.iter().enumerate() {
+        let p = |t: &str| format!("layer{i}.{t}");
+        put(p("wq"), &[dm, keep], l.wq.clone());
+        put(p("bq"), &[keep], l.bq.clone());
+        put(p("wk"), &[dm, keep], l.wk.clone());
+        put(p("bk"), &[keep], l.bk.clone());
+        put(p("wv"), &[dm, keep], l.wv.clone());
+        put(p("bv"), &[keep], l.bv.clone());
+        put(p("wo"), &[keep, dm], l.wo.clone());
+        put(p("bo"), &[dm], l.bo.clone());
+        put(p("ln1.gamma"), &[dm], l.gamma.clone());
+        put(p("ln1.beta"), &[dm], l.beta.clone());
+        put(p("mlp_sm.w1"), &[s, d], l.mlp_sm.w1.clone());
+        put(p("mlp_sm.b1"), &[d], l.mlp_sm.b1.clone());
+        put(p("mlp_sm.w2"), &[d, s], l.mlp_sm.w2.clone());
+        put(p("mlp_sm.b2"), &[s], l.mlp_sm.b2.clone());
+        put(p("mlp_ln.w1"), &[1, d], l.mlp_ln.w1.clone());
+        put(p("mlp_ln.b1"), &[d], l.mlp_ln.b1.clone());
+        put(p("mlp_ln.w2"), &[d, 1], l.mlp_ln.w2.clone());
+        put(p("mlp_ln.b2"), &[1], l.mlp_ln.b2.clone());
+    }
+    put("cls.w".into(), &[dm, c], parts.cls.w.clone());
+    put("cls.b".into(), &[c], parts.cls.b.clone());
+    put("mlp_se.w1".into(), &[c, d], parts.mlp_se.w1.clone());
+    put("mlp_se.b1".into(), &[d], parts.mlp_se.b1.clone());
+    put("mlp_se.w2".into(), &[d, 1], parts.mlp_se.w2.clone());
+    put("mlp_se.b2".into(), &[1], parts.mlp_se.b2.clone());
+    for (key, val) in [
+        ("n_layers", cfg.n_layers as f32),
+        ("n_heads", cfg.n_heads as f32),
+        ("d_model", dm as f32),
+        ("d_mlp", d as f32),
+        ("seq_len", s as f32),
+        ("vocab", cfg.vocab as f32),
+        ("n_classes", c as f32),
+        ("variant", cfg.variant_code as f32),
+        ("d_head", cfg.d_head as f32),
+    ] {
+        put(format!("meta.{key}"), &[1], vec![val]);
+    }
+    WeightFile { tensors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::SCALE;
+
+    #[test]
+    fn quantize_is_idempotent_and_clamps() {
+        for x in [0.0f32, 1.5, -3.25, 0.7071, 12345.678] {
+            let q = quantize(x);
+            assert!((q - x).abs() <= 1.0 / SCALE as f32 + x.abs() * 2e-7, "{x} -> {q}");
+            assert_eq!(quantize(q), q, "idempotent at {x}");
+        }
+        assert_eq!(quantize(1e30), quantize(MAX_WEIGHT_ABS));
+        assert_eq!(quantize(-1e30), quantize(-MAX_WEIGHT_ABS));
+        assert!(quantize(1e30) > 0.0, "clamp, never wrap");
+        assert_eq!(quantize(f32::NAN), 0.0);
+    }
+
+    #[test]
+    fn pruned_proxy_emits_a_loadable_sfw() {
+        use crate::coordinator::testutil;
+        use crate::util::Rng;
+        let dir = std::env::temp_dir().join("sf_proxygen_emit");
+        let tp = dir.join("target.sfw");
+        let tcfg = ModelConfig {
+            n_layers: 2,
+            n_heads: 2,
+            d_model: 16,
+            d_head: 8,
+            d_mlp: 4,
+            seq_len: 8,
+            vocab: 32,
+            n_classes: 3,
+            variant_code: 3,
+            d_ff: 32,
+            attn_scale_dim: 8,
+        };
+        testutil::write_random_sfw(&tp, &tcfg);
+        let target = WeightFile::load(&tp).unwrap();
+        let spec = ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 4 };
+        let mut rng = Rng::new(23);
+        let sm = vec![Mlp::init(&mut rng, 8, 4, 8)];
+        let ln = vec![Mlp::init(&mut rng, 1, 4, 1)];
+        let se = Mlp::init(&mut rng, 3, 4, 1);
+        let mut parts = prune_to_proxy(&target, &tcfg, &spec, sm, ln, se).unwrap();
+        quantize_parts(&mut parts);
+        let wf = parts_to_weightfile(&parts);
+        let out = dir.join("proxy.sfw");
+        wf.save(&out).unwrap();
+        let back = WeightFile::load(&out).unwrap();
+        let cfg = back.config().unwrap();
+        assert_eq!(cfg.n_layers, 1);
+        assert_eq!(cfg.n_heads, 1);
+        assert_eq!(cfg.d_mlp, 4);
+        assert_eq!(cfg.d_ff, 0, "FFN must be dropped");
+        assert_eq!(cfg.d_head, 8, "pruned width keeps the target head dim");
+        assert_eq!(cfg.attn_scale_dim, 8);
+        // sliced shapes
+        assert_eq!(back.get("layer0.wq").unwrap().shape, vec![16, 8]);
+        assert_eq!(back.get("layer0.wo").unwrap().shape, vec![8, 16]);
+        assert!(back.tensors.get("layer0.ffn.w1").is_none());
+        // sliced VALUES: wq column slice of the target's first 8 columns
+        let twq = &target.get("layer0.wq").unwrap().data;
+        let pwq = &back.get("layer0.wq").unwrap().data;
+        for r in 0..16 {
+            for j in 0..8 {
+                assert_eq!(pwq[r * 8 + j], quantize(twq[r * 16 + j]));
+            }
+        }
+        // the proxy loads back into clear-eval parts
+        let parts2 = super::super::clear::ProxyParts::from_weightfile(&back).unwrap();
+        let toks: Vec<u32> = (0..2 * 8).map(|i| (i % 32) as u32).collect();
+        assert_eq!(parts2.entropies(&toks, 2).len(), 2);
+    }
+}

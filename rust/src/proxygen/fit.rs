@@ -1,0 +1,300 @@
+//! §4.3 substitute-module fitting: synthesize the S_sm / S_ln / S_se
+//! regression sets from the collected ⟨μ, σ⟩ Gaussians and fit the
+//! 2-layer ReLU MLPs onto them.
+//!
+//! Conditioning matters more than capacity at these sizes.  MLP_ln's
+//! target 1/√u spans orders of magnitude when the variance is small (an
+//! early layer over 0.05-scale embeddings sees u ≈ 5e-3, i.e. targets
+//! around 15), so the regression runs in DOUBLY standardized coordinates
+//! — input z = (u−μ)/σ and output (y−μ_y)/σ_y — and both affine maps are
+//! folded back into W1/b1/W2/b2 afterwards, leaving a drop-in MLP that
+//! consumes the raw `var + LN_EPS` the MPC layernorm produces.  Without
+//! the output fold the fit error exceeds the cross-token spread of 1/√u
+//! and the proxy's ranking signal drowns (measured during bring-up: rmse
+//! 2e-2 vs spread 8e-3; standardized, 1e-4).
+
+use crate::util::Rng;
+
+use super::clear::{entropy_rows, softmax_row};
+use super::emit::quantize_mlp;
+use super::mlp::{fit_mlp, train_mlp, Mlp};
+
+/// Fit MLP_sm for one layer: score rows ~ N(μ,σ)^s → softmax(row).
+/// Returns the QUANTIZED MLP and its RMSE on a fresh held-out sample
+/// (measured after quantization — what will actually run over MPC).
+pub fn train_mlp_sm(
+    rng: &mut Rng,
+    (mu, sigma): (f32, f32),
+    seq_len: usize,
+    d_hidden: usize,
+    steps: usize,
+    batch: usize,
+) -> (Mlp, f32) {
+    let sigma = sigma.max(1e-3);
+    let sample = |r: &mut Rng, n: usize| -> (Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..n * seq_len).map(|_| mu + sigma * r.normal()).collect();
+        let mut y = x.clone();
+        for row in y.chunks_exact_mut(seq_len) {
+            softmax_row(row);
+        }
+        (x, y)
+    };
+    let mut mlp = Mlp::init(rng, seq_len, d_hidden, seq_len);
+    train_mlp(&mut mlp, rng, steps, 2e-3, 0.0, |r| {
+        let (x, y) = sample(r, batch);
+        (x, y, batch)
+    });
+    quantize_mlp(&mut mlp);
+    let (hx, hy) = sample(rng, 1024);
+    let rmse = mlp.rmse(&hx, &hy, 1024);
+    (mlp, rmse)
+}
+
+/// Fit MLP_ln for one layer: u = var + LN_EPS ~ clipped N(μ, 1.5σ) →
+/// 1/√u, trained doubly standardized with both affine maps folded into
+/// the weights (see module docs).  Returns the MLP and held-out RMSE.
+pub fn train_mlp_ln(
+    rng: &mut Rng,
+    (mu, sigma): (f32, f32),
+    d_hidden: usize,
+    steps: usize,
+) -> (Mlp, f32) {
+    let sigma = sigma.max(1e-4 * mu.max(1e-6));
+    // real variances sit within ~2σ of μ; clipping there keeps the 1/√u
+    // blow-up out of the regression target
+    let floor = (mu - 2.0 * sigma).max(0.05 * mu).max(1e-6);
+    let sample_u = |r: &mut Rng, n: usize| -> Vec<f32> {
+        (0..n)
+            .map(|_| (mu + 1.5 * sigma * r.normal()).max(floor))
+            .collect()
+    };
+    // output standardization constants from a reference sample
+    let ys: Vec<f32> = sample_u(rng, 4096).iter().map(|&u| 1.0 / u.sqrt()).collect();
+    let y_mu = ys.iter().sum::<f32>() / ys.len() as f32;
+    let y_sig = (ys.iter().map(|&v| (v - y_mu) * (v - y_mu)).sum::<f32>()
+        / ys.len() as f32)
+        .sqrt()
+        .max(1e-6);
+    let mut mlp = Mlp::init(rng, 1, d_hidden, 1);
+    train_mlp(&mut mlp, rng, steps, 1e-2, 0.0, |r| {
+        let u = sample_u(r, 1024);
+        let z: Vec<f32> = u.iter().map(|&v| (v - mu) / sigma).collect();
+        let y: Vec<f32> = u.iter().map(|&v| (1.0 / v.sqrt() - y_mu) / y_sig).collect();
+        (z, y, 1024)
+    });
+    // fold input standardization: z = (u − μ)/σ  →  consume raw u
+    let shift = mu / sigma;
+    for j in 0..mlp.d_hidden {
+        mlp.b1[j] -= shift * mlp.w1[j];
+    }
+    for w in mlp.w1.iter_mut() {
+        *w /= sigma;
+    }
+    // fold output de-standardization: y = σ_y·ŷ + μ_y
+    for w in mlp.w2.iter_mut() {
+        *w *= y_sig;
+    }
+    for b in mlp.b2.iter_mut() {
+        *b = *b * y_sig + y_mu;
+    }
+    quantize_mlp(&mut mlp);
+    let hu = sample_u(rng, 4096);
+    let hy: Vec<f32> = hu.iter().map(|&u| 1.0 / u.sqrt()).collect();
+    let rmse = mlp.rmse(&hu, &hy, 4096);
+    (mlp, rmse)
+}
+
+/// Fit MLP_se ex vivo: logits ~ N(μ,σ)^C → entropy(softmax(logits)).
+/// The head is re-aligned to the trunk's ACTUAL logits afterwards
+/// ([`fit_entropy_head`]); this gives it a well-oriented starting point.
+pub fn train_mlp_se(
+    rng: &mut Rng,
+    (mu, sigma): (f32, f32),
+    n_classes: usize,
+    d_hidden: usize,
+    steps: usize,
+    batch: usize,
+) -> (Mlp, f32) {
+    let sigma = sigma.max(1e-3);
+    let sample = |r: &mut Rng, n: usize| -> (Vec<f32>, Vec<f32>) {
+        let x: Vec<f32> = (0..n * n_classes).map(|_| mu + sigma * r.normal()).collect();
+        let y = entropy_rows(&x, n, n_classes);
+        (x, y)
+    };
+    let mut mlp = Mlp::init(rng, n_classes, d_hidden, 1);
+    train_mlp(&mut mlp, rng, steps, 2e-3, 0.0, |r| {
+        let (x, y) = sample(r, batch);
+        (x, y, batch)
+    });
+    quantize_mlp(&mut mlp);
+    let (hx, hy) = sample(rng, 1024);
+    let rmse = mlp.rmse(&hx, &hy, 1024);
+    (mlp, rmse)
+}
+
+/// Pearson correlation of two equal-length signals (0 when degenerate).
+pub(crate) fn pearson(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len() as f32;
+    if a.len() < 2 {
+        return 0.0;
+    }
+    let ma = a.iter().sum::<f32>() / n;
+    let mb = b.iter().sum::<f32>() / n;
+    let mut cov = 0f32;
+    let mut va = 0f32;
+    let mut vb = 0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        cov += (x - ma) * (y - mb);
+        va += (x - ma) * (x - ma);
+        vb += (y - mb) * (y - mb);
+    }
+    if va < 1e-12 || vb < 1e-12 {
+        return 0.0;
+    }
+    cov / (va.sqrt() * vb.sqrt())
+}
+
+/// Closed-form entropy head: entropy ≈ ln C − a·Σ relu(±(l₀ − l_j)).
+/// Guarantees the right ORIENTATION (high logit spread → low entropy),
+/// which tiny hidden widths sometimes miss when fit from a cold start.
+pub fn analytic_entropy_head(n_classes: usize, d_hidden: usize) -> Mlp {
+    assert!(n_classes >= 2, "entropy needs >= 2 classes");
+    let c = n_classes;
+    let mut w1 = vec![0f32; c * d_hidden];
+    for h in 0..d_hidden {
+        let j = 1 + (h / 2) % (c - 1).max(1);
+        let sign = if h % 2 == 0 { 1.0 } else { -1.0 };
+        w1[h] = sign; // row 0, col h
+        w1[j * d_hidden + h] = -sign;
+    }
+    Mlp {
+        d_in: c,
+        d_hidden,
+        d_out: 1,
+        w1,
+        b1: vec![0.0; d_hidden],
+        w2: vec![-0.35; d_hidden],
+        b2: vec![(c as f32).ln()],
+    }
+}
+
+/// Re-align the entropy head to the trunk's actual bootstrap logits,
+/// regressing straight onto the TEACHER's exact entropies (the
+/// selection signal being distilled).  A head whose RANKING is inverted
+/// poisons maximum-entropy selection far worse than any magnitude error,
+/// so a fit with correlation < 0.5 restarts from the analytic
+/// construction and the better of the two is kept.  Returns the
+/// QUANTIZED head, its RMSE on the fit set, and the achieved
+/// correlation (both measured after quantization).
+pub fn fit_entropy_head(
+    mut head: Mlp,
+    logits: &[f32],
+    target_ent: &[f32],
+    rows: usize,
+    steps: usize,
+    lr: f32,
+) -> (Mlp, f32, f32) {
+    let corr_of = |m: &Mlp| -> f32 {
+        let pred = m.forward(logits, rows);
+        pearson(&pred, target_ent)
+    };
+    fit_mlp(&mut head, logits, target_ent, rows, steps, lr);
+    if corr_of(&head) < 0.5 {
+        let mut retry = analytic_entropy_head(head.d_in, head.d_hidden);
+        fit_mlp(&mut retry, logits, target_ent, rows, steps, lr);
+        if corr_of(&retry) > corr_of(&head) {
+            head = retry;
+        }
+    }
+    quantize_mlp(&mut head);
+    let corr = corr_of(&head);
+    let rmse = head.rmse(logits, target_ent, rows);
+    (head, rmse, corr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sm_substitute_approximates_softmax() {
+        let mut rng = Rng::new(11);
+        let (mlp, rmse) = train_mlp_sm(&mut rng, (0.0, 0.8), 8, 16, 400, 256);
+        assert!(rmse < 0.05, "sm rmse {rmse}");
+        // rows roughly sum to one
+        let x: Vec<f32> = (0..8).map(|_| rng.uniform(-1.5, 1.5)).collect();
+        let y = mlp.forward(&x, 1);
+        let s: f32 = y.iter().sum();
+        assert!((s - 1.0).abs() < 0.2, "row sum {s}");
+    }
+
+    #[test]
+    fn ln_substitute_tracks_rsqrt_even_at_small_variance() {
+        let mut rng = Rng::new(13);
+        // the hard regime: u ≈ 5e-3 → 1/√u ≈ 14, spread ~2
+        let (mlp, rmse) = train_mlp_ln(&mut rng, (5e-3, 1.2e-3), 16, 800);
+        assert!(rmse < 0.3, "ln rmse {rmse} (targets ≈ 14)");
+        let u = [4e-3f32, 5e-3, 6.5e-3];
+        let y = mlp.forward(&u, 3);
+        for (&uu, &yy) in u.iter().zip(&y) {
+            let t = 1.0 / uu.sqrt();
+            assert!((yy - t).abs() / t < 0.05, "1/sqrt({uu}) = {yy} vs {t}");
+        }
+    }
+
+    #[test]
+    fn se_substitute_orders_entropy() {
+        let mut rng = Rng::new(17);
+        let (mlp, rmse) = train_mlp_se(&mut rng, (0.0, 1.0), 3, 16, 600, 256);
+        assert!(rmse < 0.3, "se rmse {rmse}");
+        let peaked = [3.0f32, -1.0, -1.0];
+        let flat = [0.1f32, 0.0, -0.1];
+        let ep = mlp.forward(&peaked, 1)[0];
+        let ef = mlp.forward(&flat, 1)[0];
+        assert!(ep < ef, "peaked {ep} !< flat {ef}");
+    }
+
+    #[test]
+    fn analytic_head_is_oriented() {
+        let head = analytic_entropy_head(3, 8);
+        let peaked = [4.0f32, 0.0, 0.0];
+        let flat = [0.0f32, 0.0, 0.0];
+        let ep = head.forward(&peaked, 1)[0];
+        let ef = head.forward(&flat, 1)[0];
+        assert!(ep < ef);
+        assert!((ef - (3f32).ln()).abs() < 1e-5);
+    }
+
+    #[test]
+    fn entropy_head_refit_recovers_orientation() {
+        let mut rng = Rng::new(19);
+        // logits with strongly varying spread → entropies with real range
+        let rows = 96;
+        let mut logits = Vec::with_capacity(rows * 3);
+        for i in 0..rows {
+            let spread = 0.1 + 3.0 * (i as f32 / rows as f32);
+            logits.extend([spread, -spread * 0.5, rng.uniform(-0.2, 0.2)]);
+        }
+        let ent = entropy_rows(&logits, rows, 3);
+        // start from a DELIBERATELY inverted head
+        let mut bad = analytic_entropy_head(3, 8);
+        for w in bad.w2.iter_mut() {
+            *w = -*w;
+        }
+        let (fitted, rmse, corr) = fit_entropy_head(bad, &logits, &ent, rows, 600, 5e-3);
+        assert!(corr > 0.9, "corr {corr}");
+        assert!(rmse < 0.15, "rmse {rmse}");
+        let _ = fitted;
+    }
+
+    #[test]
+    fn pearson_basics() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let b = [2.0f32, 4.0, 6.0, 8.0];
+        assert!((pearson(&a, &b) - 1.0).abs() < 1e-6);
+        let c = [8.0f32, 6.0, 4.0, 2.0];
+        assert!((pearson(&a, &c) + 1.0).abs() < 1e-6);
+        assert_eq!(pearson(&a, &[1.0, 1.0, 1.0, 1.0]), 0.0);
+    }
+}

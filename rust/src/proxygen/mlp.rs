@@ -1,0 +1,384 @@
+//! Hand-rolled training for the substitute modules: a 2-layer ReLU MLP
+//! (linear → ReLU → linear) and a bare linear layer, both fit by Adam on
+//! an MSE objective with a MANUAL backward pass — no autodiff dependency,
+//! per the paper's observation that the substitutes are small enough to
+//! train ex vivo in seconds.
+//!
+//! The backward of `y = relu(x·W1 + b1)·W2 + b2` under `L = mean((y−t)²)`:
+//!
+//! ```text
+//!   dY  = 2(y − t)/numel        dW2 = Hᵀ·dY        db2 = Σ_rows dY
+//!   dH  = dY·W2ᵀ ⊙ [H_pre > 0]  dW1 = Xᵀ·dH        db1 = Σ_rows dH
+//! ```
+//!
+//! All math is plain f32 on row-major slices; everything is deterministic
+//! given the caller's [`Rng`].
+
+use crate::util::Rng;
+
+/// y = x·W + b: (rows, d_in) → (rows, d_out), row-major, accumulated in f32.
+pub(crate) fn linear_forward(
+    x: &[f32],
+    w: &[f32],
+    b: &[f32],
+    rows: usize,
+    d_in: usize,
+    d_out: usize,
+) -> Vec<f32> {
+    let mut y = vec![0f32; rows * d_out];
+    for r in 0..rows {
+        let xr = &x[r * d_in..(r + 1) * d_in];
+        let yr = &mut y[r * d_out..(r + 1) * d_out];
+        yr.copy_from_slice(b);
+        for (p, &xv) in xr.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w[p * d_out..(p + 1) * d_out];
+            for (yv, &wv) in yr.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+/// Aᵀ·B for A (rows, m), B (rows, n) → (m, n) — the weight-gradient shape.
+fn matmul_tn(a: &[f32], b: &[f32], rows: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; m * n];
+    for r in 0..rows {
+        let ar = &a[r * m..(r + 1) * m];
+        let br = &b[r * n..(r + 1) * n];
+        for (i, &av) in ar.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (ov, &bv) in orow.iter_mut().zip(br) {
+                *ov += av * bv;
+            }
+        }
+    }
+    out
+}
+
+/// A·Bᵀ for A (rows, n), B (m, n) → (rows, m) — the input-gradient shape.
+fn matmul_nt(a: &[f32], b: &[f32], rows: usize, n: usize, m: usize) -> Vec<f32> {
+    let mut out = vec![0f32; rows * m];
+    for r in 0..rows {
+        let ar = &a[r * n..(r + 1) * n];
+        let orow = &mut out[r * m..(r + 1) * m];
+        for (i, ov) in orow.iter_mut().enumerate() {
+            let brow = &b[i * n..(i + 1) * n];
+            let mut acc = 0f32;
+            for (&av, &bv) in ar.iter().zip(brow) {
+                acc += av * bv;
+            }
+            *ov = acc;
+        }
+    }
+    out
+}
+
+fn colsum(a: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0f32; n];
+    for r in 0..rows {
+        for (ov, &av) in out.iter_mut().zip(&a[r * n..(r + 1) * n]) {
+            *ov += av;
+        }
+    }
+    out
+}
+
+/// Adam state for one flat parameter vector (β₁ 0.9, β₂ 0.999, ε 1e-8).
+struct Adam {
+    m: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl Adam {
+    fn new(n: usize) -> Adam {
+        Adam { m: vec![0.0; n], v: vec![0.0; n] }
+    }
+
+    /// One update; `t` is the 1-based step for bias correction.
+    fn step(&mut self, p: &mut [f32], g: &[f32], lr: f32, t: i32) {
+        const B1: f32 = 0.9;
+        const B2: f32 = 0.999;
+        const EPS: f32 = 1e-8;
+        let c1 = 1.0 - B1.powi(t);
+        let c2 = 1.0 - B2.powi(t);
+        for i in 0..p.len() {
+            self.m[i] = B1 * self.m[i] + (1.0 - B1) * g[i];
+            self.v[i] = B2 * self.v[i] + (1.0 - B2) * g[i] * g[i];
+            p[i] -= lr * (self.m[i] / c1) / ((self.v[i] / c2).sqrt() + EPS);
+        }
+    }
+}
+
+/// A 2-layer ReLU MLP in f32 — the trainable form of the paper's
+/// substitute modules (MLP_sm / MLP_ln / MLP_se) before quantization.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub d_in: usize,
+    pub d_hidden: usize,
+    pub d_out: usize,
+    /// (d_in, d_hidden) row-major
+    pub w1: Vec<f32>,
+    pub b1: Vec<f32>,
+    /// (d_hidden, d_out) row-major
+    pub w2: Vec<f32>,
+    pub b2: Vec<f32>,
+}
+
+impl Mlp {
+    /// He-style init: W ~ N(0, √(2/fan_in)), biases zero.
+    pub fn init(rng: &mut Rng, d_in: usize, d_hidden: usize, d_out: usize) -> Mlp {
+        let s1 = (2.0 / d_in as f32).sqrt();
+        let s2 = (2.0 / d_hidden as f32).sqrt();
+        Mlp {
+            d_in,
+            d_hidden,
+            d_out,
+            w1: (0..d_in * d_hidden).map(|_| rng.normal() * s1).collect(),
+            b1: vec![0.0; d_hidden],
+            w2: (0..d_hidden * d_out).map(|_| rng.normal() * s2).collect(),
+            b2: vec![0.0; d_out],
+        }
+    }
+
+    /// relu(x·W1 + b1)·W2 + b2 over (rows, d_in) → (rows, d_out).
+    pub fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        let mut h = linear_forward(x, &self.w1, &self.b1, rows, self.d_in, self.d_hidden);
+        for v in h.iter_mut() {
+            *v = v.max(0.0);
+        }
+        linear_forward(&h, &self.w2, &self.b2, rows, self.d_hidden, self.d_out)
+    }
+
+    /// √mean((forward(x) − y)²) — the fit-quality metric of the reports.
+    pub fn rmse(&self, x: &[f32], y: &[f32], rows: usize) -> f32 {
+        let p = self.forward(x, rows);
+        debug_assert_eq!(p.len(), y.len());
+        let mse: f32 = p
+            .iter()
+            .zip(y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / p.len() as f32;
+        mse.sqrt()
+    }
+}
+
+/// Train `mlp` for `steps` Adam updates on minibatches drawn from
+/// `make_batch(rng) -> (x, y, rows)`; `wd` is decoupled L2 on the weight
+/// matrices (biases are not decayed).  Returns the final minibatch loss.
+pub fn train_mlp<F>(
+    mlp: &mut Mlp,
+    rng: &mut Rng,
+    steps: usize,
+    lr: f32,
+    wd: f32,
+    mut make_batch: F,
+) -> f32
+where
+    F: FnMut(&mut Rng) -> (Vec<f32>, Vec<f32>, usize),
+{
+    let (din, dh, dout) = (mlp.d_in, mlp.d_hidden, mlp.d_out);
+    let mut a_w1 = Adam::new(din * dh);
+    let mut a_b1 = Adam::new(dh);
+    let mut a_w2 = Adam::new(dh * dout);
+    let mut a_b2 = Adam::new(dout);
+    let mut loss = 0f32;
+    for t in 1..=steps as i32 {
+        let (x, y, rows) = make_batch(rng);
+        debug_assert_eq!(x.len(), rows * din);
+        debug_assert_eq!(y.len(), rows * dout);
+        let hp = linear_forward(&x, &mlp.w1, &mlp.b1, rows, din, dh);
+        let h: Vec<f32> = hp.iter().map(|&v| v.max(0.0)).collect();
+        let yy = linear_forward(&h, &mlp.w2, &mlp.b2, rows, dh, dout);
+        let inv = 2.0 / (rows * dout) as f32;
+        let dy: Vec<f32> = yy.iter().zip(&y).map(|(a, b)| inv * (a - b)).collect();
+        loss = yy
+            .iter()
+            .zip(&y)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            / (rows * dout) as f32;
+        let mut gw2 = matmul_tn(&h, &dy, rows, dh, dout);
+        let gb2 = colsum(&dy, rows, dout);
+        let mut dh_grad = matmul_nt(&dy, &mlp.w2, rows, dout, dh);
+        for (g, &pre) in dh_grad.iter_mut().zip(&hp) {
+            if pre <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        let mut gw1 = matmul_tn(&x, &dh_grad, rows, din, dh);
+        let gb1 = colsum(&dh_grad, rows, dh);
+        if wd > 0.0 {
+            for (g, &p) in gw1.iter_mut().zip(&mlp.w1) {
+                *g += wd * p;
+            }
+            for (g, &p) in gw2.iter_mut().zip(&mlp.w2) {
+                *g += wd * p;
+            }
+        }
+        a_w1.step(&mut mlp.w1, &gw1, lr, t);
+        a_b1.step(&mut mlp.b1, &gb1, lr, t);
+        a_w2.step(&mut mlp.w2, &gw2, lr, t);
+        a_b2.step(&mut mlp.b2, &gb2, lr, t);
+    }
+    loss
+}
+
+/// A linear layer y = x·W + b — the proxy classifier head during the
+/// head-only in-vivo refit (§4.2's distillation restricted to the layers
+/// our manual backward covers).
+#[derive(Clone, Debug)]
+pub struct Linear {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// (d_in, d_out) row-major
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl Linear {
+    pub fn forward(&self, x: &[f32], rows: usize) -> Vec<f32> {
+        linear_forward(x, &self.w, &self.b, rows, self.d_in, self.d_out)
+    }
+}
+
+/// Full-batch Adam fit of a linear layer onto fixed (x, y) pairs with
+/// decoupled weight decay — the head refit is a small dense regression,
+/// so there is no need to minibatch.
+pub fn fit_linear(
+    lin: &mut Linear,
+    x: &[f32],
+    y: &[f32],
+    rows: usize,
+    steps: usize,
+    lr: f32,
+    wd: f32,
+) {
+    let (din, dout) = (lin.d_in, lin.d_out);
+    debug_assert_eq!(x.len(), rows * din);
+    debug_assert_eq!(y.len(), rows * dout);
+    let mut a_w = Adam::new(din * dout);
+    let mut a_b = Adam::new(dout);
+    for t in 1..=steps as i32 {
+        let yy = lin.forward(x, rows);
+        let inv = 2.0 / (rows * dout) as f32;
+        let dy: Vec<f32> = yy.iter().zip(y).map(|(a, b)| inv * (a - b)).collect();
+        let mut gw = matmul_tn(x, &dy, rows, din, dout);
+        let gb = colsum(&dy, rows, dout);
+        if wd > 0.0 {
+            for (g, &p) in gw.iter_mut().zip(&lin.w) {
+                *g += wd * p;
+            }
+        }
+        a_w.step(&mut lin.w, &gw, lr, t);
+        a_b.step(&mut lin.b, &gb, lr, t);
+    }
+}
+
+/// Full-batch variant of [`train_mlp`] on fixed pairs (the entropy-head
+/// refit trains on the trunk's actual bootstrap logits, not a sampler).
+pub fn fit_mlp(mlp: &mut Mlp, x: &[f32], y: &[f32], rows: usize, steps: usize, lr: f32) -> f32 {
+    let xc = x.to_vec();
+    let yc = y.to_vec();
+    train_mlp(mlp, &mut Rng::new(0), steps, lr, 0.0, move |_| {
+        (xc.clone(), yc.clone(), rows)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_learns_a_simple_function() {
+        // y = relu(x) is exactly representable; Adam must drive MSE ~0
+        let mut rng = Rng::new(3);
+        let mut mlp = Mlp::init(&mut rng, 1, 4, 1);
+        train_mlp(&mut mlp, &mut rng, 400, 1e-2, 0.0, |r| {
+            let x: Vec<f32> = (0..64).map(|_| r.uniform(-2.0, 2.0)).collect();
+            let y: Vec<f32> = x.iter().map(|&v| v.max(0.0)).collect();
+            (x, y, 64)
+        });
+        let x: Vec<f32> = vec![-1.5, -0.3, 0.2, 1.7];
+        let y: Vec<f32> = x.iter().map(|&v| v.max(0.0)).collect();
+        let rmse = mlp.rmse(&x, &y, 4);
+        assert!(rmse < 0.05, "rmse {rmse}");
+    }
+
+    #[test]
+    fn linear_fit_recovers_coefficients() {
+        let mut rng = Rng::new(5);
+        // y = 2x0 − x1 + 0.5
+        let rows = 128;
+        let x: Vec<f32> = (0..rows * 2).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f32> = x
+            .chunks(2)
+            .map(|c| 2.0 * c[0] - c[1] + 0.5)
+            .collect();
+        let mut lin = Linear { d_in: 2, d_out: 1, w: vec![0.0; 2], b: vec![0.0] };
+        fit_linear(&mut lin, &x, &y, rows, 800, 5e-2, 0.0);
+        assert!((lin.w[0] - 2.0).abs() < 0.05, "{:?}", lin.w);
+        assert!((lin.w[1] + 1.0).abs() < 0.05, "{:?}", lin.w);
+        assert!((lin.b[0] - 0.5).abs() < 0.05, "{:?}", lin.b);
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // one training step's analytic gradient vs central differences
+        let mut rng = Rng::new(7);
+        let mut mlp = Mlp::init(&mut rng, 3, 4, 2);
+        let rows = 5;
+        let x: Vec<f32> = (0..rows * 3).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let y: Vec<f32> = (0..rows * 2).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        // keep every pre-activation away from the ReLU kink so the ±ε
+        // probes stay on one side (central differences are meaningless
+        // across the kink)
+        loop {
+            let hp = linear_forward(&x, &mlp.w1, &mlp.b1, rows, 3, 4);
+            if hp.iter().all(|&v| v.abs() > 0.02) {
+                break;
+            }
+            for b in mlp.b1.iter_mut() {
+                *b += 0.0371;
+            }
+        }
+        let loss = |m: &Mlp| -> f32 {
+            let p = m.forward(&x, rows);
+            p.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum::<f32>()
+                / (rows * 2) as f32
+        };
+        // analytic: replicate train_mlp's backward for w1[k]
+        let hp = linear_forward(&x, &mlp.w1, &mlp.b1, rows, 3, 4);
+        let h: Vec<f32> = hp.iter().map(|&v| v.max(0.0)).collect();
+        let yy = linear_forward(&h, &mlp.w2, &mlp.b2, rows, 4, 2);
+        let inv = 2.0 / (rows * 2) as f32;
+        let dy: Vec<f32> = yy.iter().zip(&y).map(|(a, b)| inv * (a - b)).collect();
+        let mut dh = matmul_nt(&dy, &mlp.w2, rows, 2, 4);
+        for (g, &pre) in dh.iter_mut().zip(&hp) {
+            if pre <= 0.0 {
+                *g = 0.0;
+            }
+        }
+        let gw1 = matmul_tn(&x, &dh, rows, 3, 4);
+        let eps = 1e-3f32;
+        for k in [0usize, 5, 11] {
+            let mut up = mlp.clone();
+            up.w1[k] += eps;
+            let mut dn = mlp.clone();
+            dn.w1[k] -= eps;
+            let fd = (loss(&up) - loss(&dn)) / (2.0 * eps);
+            assert!(
+                (fd - gw1[k]).abs() < 2e-3,
+                "w1[{k}]: fd {fd} vs analytic {}",
+                gw1[k]
+            );
+        }
+    }
+}

@@ -1,0 +1,432 @@
+//! In-Rust proxy generation — the paper's §4.2/§4.3 distillation stage,
+//! natively: emulate the target's high-dimensional nonlinear operators
+//! with low-dimension MLPs trained on a small bootstrap sample, so the
+//! system can calibrate, select, and appraise in ONE binary with no
+//! Python/JAX artifact build.
+//!
+//! Pipeline (all model-owner side, in the clear, on data she already
+//! purchased — the bootstrap sample of Fig 1 stage 1):
+//!
+//!  1. [`clear::target_forward`] — forward S_boot through the clear
+//!     target, recording teacher logits/entropies and per-module ⟨μ, σ⟩
+//!     activation statistics ([`ModuleStats`]).
+//!  2. [`fit`] — synthesize the S_sm / S_ln / S_se regression sets from
+//!     those Gaussians and fit the 2-layer ReLU substitutes with a
+//!     hand-rolled Adam (manual backward — no autodiff dependency).
+//!  3. [`emit::prune_to_proxy`] — initialize each phase's ⟨l, w, d⟩
+//!     proxy from the target's bottom `l` layers and first `w` heads,
+//!     FFN dropped, substitutes inserted.
+//!  4. Head-only in-vivo refit: the classifier head is distilled onto
+//!     the teacher's logits and the entropy head onto the teacher's
+//!     exact entropies, both over the assembled trunk's REAL bootstrap
+//!     activations.  (The Python pipeline additionally finetunes the
+//!     whole trunk by autodiff; here distillation is restricted to the
+//!     layers the manual backward covers — linear + ReLU — which the
+//!     fit reports quantify.)
+//!  5. [`emit`] — quantize onto the 2^-16 fixed-point grid (clamping,
+//!     never wrapping) and assemble the `.sfw` [`WeightFile`] that
+//!     `ModelMpc` loads unchanged.
+//!
+//! Fit quality is measured on the QUANTIZED proxy: per-module RMSE plus
+//! the top-k entropy-ranking overlap against the teacher on the
+//! bootstrap sample.  A weak fit (overlap below
+//! [`DistillConfig::accept_boot_overlap`]) retries from a fresh seed —
+//! calibration-time model selection on data the model owner already
+//! holds.  Reports surface as [`JobEvent::PhaseCalibrated`] during a
+//! calibrated [`SelectionJob`] and persist to `results/BENCH_proxy.json`.
+//!
+//! [`JobEvent::PhaseCalibrated`]: crate::coordinator::JobEvent
+//! [`SelectionJob`]: crate::coordinator::SelectionJob
+
+pub mod clear;
+pub mod emit;
+pub mod fit;
+pub mod mlp;
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::phase::ProxySpec;
+use crate::data::Dataset;
+use crate::models::WeightFile;
+use crate::util::rng::splitmix64;
+use crate::util::Rng;
+
+pub use clear::{
+    entropy_rows, oracle_entropies_clear, proxy_entropies_clear, target_forward,
+    ModuleStats, TargetOut,
+};
+pub use emit::{quantize, MAX_WEIGHT_ABS};
+pub use fit::{analytic_entropy_head, fit_entropy_head, train_mlp_ln, train_mlp_se, train_mlp_sm};
+pub use mlp::{fit_linear, fit_mlp, train_mlp, Linear, Mlp};
+
+/// Hyperparameters of one distillation run.  The defaults are the
+/// bring-up-validated recipe; [`DistillConfig::quick`] trades fit
+/// quality for speed (examples, smoke benches).
+#[derive(Clone, Copy, Debug)]
+pub struct DistillConfig {
+    /// Base seed; every (phase, attempt) derives an independent stream.
+    pub seed: u64,
+    /// Adam steps for each MLP_sm (batch [`batch`](DistillConfig::batch)).
+    pub mlp_steps: usize,
+    /// Adam steps for each MLP_ln (batch 1024, doubly standardized).
+    pub ln_steps: usize,
+    /// Adam steps for the ex-vivo MLP_se.
+    pub se_steps: usize,
+    /// Full-batch Adam steps for the classifier-head refit.
+    pub head_steps: usize,
+    /// Full-batch Adam steps for the entropy-head refit.
+    pub se_refit_steps: usize,
+    /// Minibatch rows for the sampled regression sets (S_sm / S_se).
+    pub batch: usize,
+    /// Re-distill from a fresh seed up to this many times when the
+    /// bootstrap ranking overlap lands below the acceptance bar.
+    pub retries: usize,
+    /// Bootstrap top-k overlap at which a fit is accepted outright.
+    pub accept_boot_overlap: f32,
+}
+
+impl Default for DistillConfig {
+    fn default() -> Self {
+        DistillConfig {
+            seed: 0x9e0c5,
+            mlp_steps: 600,
+            ln_steps: 800,
+            se_steps: 400,
+            head_steps: 800,
+            se_refit_steps: 1200,
+            batch: 512,
+            retries: 2,
+            accept_boot_overlap: 0.85,
+        }
+    }
+}
+
+impl DistillConfig {
+    /// Reduced-step preset for examples and smoke benches.
+    pub fn quick() -> Self {
+        DistillConfig {
+            mlp_steps: 300,
+            ln_steps: 500,
+            se_steps: 250,
+            head_steps: 400,
+            se_refit_steps: 600,
+            batch: 256,
+            retries: 1,
+            ..Default::default()
+        }
+    }
+}
+
+/// One substitute module's held-out fit error.
+#[derive(Clone, Debug)]
+pub struct ModuleFit {
+    /// e.g. `layer0.mlp_sm`, `layer1.mlp_ln`, `mlp_se`
+    pub module: String,
+    pub rmse: f32,
+}
+
+/// Fit-quality report for one distilled phase proxy, measured on the
+/// quantized weights that will actually run over MPC.
+#[derive(Clone, Debug)]
+pub struct ProxyFitReport {
+    /// Position in the phase schedule (0-based).
+    pub phase: usize,
+    pub spec: ProxySpec,
+    /// Per-module held-out RMSE (sm/ln per layer + the refit entropy head).
+    pub modules: Vec<ModuleFit>,
+    /// Pearson correlation of the refit entropy head against the
+    /// teacher's exact entropies on the bootstrap sample.
+    pub head_corr: f32,
+    /// Top-k entropy-ranking overlap vs the teacher on the bootstrap
+    /// sample (k = [`boot_k`](ProxyFitReport::boot_k)), in [0, 1].
+    pub boot_overlap: f32,
+    pub boot_k: usize,
+    /// Distillation attempts consumed (1 = first fit accepted).
+    pub attempts: usize,
+}
+
+impl ProxyFitReport {
+    /// The largest per-module RMSE — the smoke-test gate.
+    pub fn worst_rmse(&self) -> f32 {
+        self.modules.iter().map(|m| m.rmse).fold(0.0, f32::max)
+    }
+}
+
+/// |top-k(a) ∩ top-k(b)| / k — the ranking-fidelity metric the paper's
+/// selection quality rests on (ties broken by total order, stable for
+/// the deterministic pipeline).
+pub fn top_k_overlap(a: &[f32], b: &[f32], k: usize) -> f32 {
+    assert_eq!(a.len(), b.len());
+    let k = k.min(a.len());
+    if k == 0 {
+        return 1.0;
+    }
+    let top = |v: &[f32]| -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..v.len()).collect();
+        idx.sort_by(|&x, &y| v[y].total_cmp(&v[x]));
+        idx.truncate(k);
+        idx
+    };
+    let ta = top(a);
+    let tb: std::collections::HashSet<usize> = top(b).into_iter().collect();
+    ta.iter().filter(|i| tb.contains(i)).count() as f32 / k as f32
+}
+
+/// Distill one proxy per spec from `target` over the bootstrap sample.
+///
+/// Returns, per phase, the emitted (quantized, loadable) [`WeightFile`]
+/// and its [`ProxyFitReport`].  Deterministic in `cfg.seed`.
+pub fn distill_proxies(
+    target: &WeightFile,
+    ds: &Dataset,
+    bootstrap: &[usize],
+    specs: &[ProxySpec],
+    cfg: &DistillConfig,
+) -> Result<Vec<(WeightFile, ProxyFitReport)>> {
+    let tcfg = target.config().context("target weight file config")?;
+    ensure!(tcfg.d_ff > 0, "distillation needs a FULL target (d_ff > 0)");
+    ensure!(
+        tcfg.seq_len == ds.seq_len,
+        "target seq_len {} != dataset seq_len {}",
+        tcfg.seq_len,
+        ds.seq_len
+    );
+    ensure!(!specs.is_empty(), "need >= 1 proxy spec");
+    ensure!(bootstrap.len() >= 8, "bootstrap sample too small to calibrate on");
+    let mut uniq = std::collections::HashSet::with_capacity(bootstrap.len());
+    for &b in bootstrap {
+        ensure!(b < ds.n, "bootstrap index {b} out of range ({} points)", ds.n);
+        ensure!(uniq.insert(b), "bootstrap index {b} appears more than once");
+    }
+    let nb = bootstrap.len();
+    let boot_toks = clear::gather_tokens(ds, bootstrap);
+    // stage 1: teacher signal + module statistics (one clear pass, shared
+    // by every phase and every retry)
+    let teacher = target_forward(target, &boot_toks, nb)?;
+    let boot_k = (nb / 4).max(1);
+
+    let mut out = Vec::with_capacity(specs.len());
+    for (pi, spec) in specs.iter().enumerate() {
+        ensure!(
+            spec.n_layers <= teacher.stats.sm.len(),
+            "phase {pi}: proxy depth {} exceeds the target's {} layers",
+            spec.n_layers,
+            teacher.stats.sm.len()
+        );
+        let mut best: Option<(WeightFile, ProxyFitReport)> = None;
+        let mut attempts = 0;
+        for attempt in 0..=cfg.retries {
+            let mut s = cfg.seed
+                ^ (pi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ ((attempt as u64 + 1) << 48);
+            let mut rng = Rng::new(splitmix64(&mut s));
+            let (wf, mut report) =
+                distill_one(target, &tcfg, spec, &teacher, &boot_toks, nb, boot_k, cfg, &mut rng)?;
+            attempts = attempt + 1;
+            report.phase = pi;
+            let accept = report.boot_overlap >= cfg.accept_boot_overlap;
+            let better = best
+                .as_ref()
+                .map(|(_, b)| report.boot_overlap > b.boot_overlap)
+                .unwrap_or(true);
+            if better {
+                best = Some((wf, report));
+            }
+            if accept {
+                break;
+            }
+        }
+        let mut chosen = best.expect("at least one attempt ran");
+        // attempts CONSUMED, not the winning attempt's ordinal — a later
+        // retry may have scored worse than the kept fit
+        chosen.1.attempts = attempts;
+        out.push(chosen);
+    }
+    Ok(out)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn distill_one(
+    target: &WeightFile,
+    tcfg: &crate::models::ModelConfig,
+    spec: &ProxySpec,
+    teacher: &TargetOut,
+    boot_toks: &[u32],
+    nb: usize,
+    boot_k: usize,
+    cfg: &DistillConfig,
+    rng: &mut Rng,
+) -> Result<(WeightFile, ProxyFitReport)> {
+    // stage 2: ex-vivo substitutes from the synthesized regression sets
+    let mut modules = Vec::with_capacity(2 * spec.n_layers + 1);
+    let mut mlps_sm = Vec::with_capacity(spec.n_layers);
+    let mut mlps_ln = Vec::with_capacity(spec.n_layers);
+    for i in 0..spec.n_layers {
+        let (sm, rmse) = train_mlp_sm(
+            rng,
+            teacher.stats.sm[i],
+            tcfg.seq_len,
+            spec.d_mlp,
+            cfg.mlp_steps,
+            cfg.batch,
+        );
+        modules.push(ModuleFit { module: format!("layer{i}.mlp_sm"), rmse });
+        mlps_sm.push(sm);
+        let (ln, rmse) = train_mlp_ln(rng, teacher.stats.ln[i], spec.d_mlp, cfg.ln_steps);
+        modules.push(ModuleFit { module: format!("layer{i}.mlp_ln"), rmse });
+        mlps_ln.push(ln);
+    }
+    let (se0, _) = train_mlp_se(
+        rng,
+        teacher.stats.se,
+        tcfg.n_classes,
+        spec.d_mlp,
+        cfg.se_steps,
+        cfg.batch,
+    );
+    // stage 3: prune + assemble
+    let mut parts = emit::prune_to_proxy(target, tcfg, spec, mlps_sm, mlps_ln, se0)?;
+    // stage 4: head-only in-vivo refit on the trunk's real activations
+    let pooled = parts.pooled(boot_toks, nb);
+    fit_linear(
+        &mut parts.cls,
+        &pooled,
+        &teacher.logits,
+        nb,
+        cfg.head_steps,
+        1e-2,
+        1e-3,
+    );
+    let proxy_logits = parts.cls.forward(&pooled, nb);
+    let (se, se_rmse, head_corr) = fit_entropy_head(
+        parts.mlp_se.clone(),
+        &proxy_logits,
+        &teacher.entropies,
+        nb,
+        cfg.se_refit_steps,
+        5e-3,
+    );
+    parts.mlp_se = se;
+    modules.push(ModuleFit { module: "mlp_se".into(), rmse: se_rmse });
+    // stage 5: quantize + emit, then measure on the emitted weights
+    emit::quantize_parts(&mut parts);
+    let wf = emit::parts_to_weightfile(&parts);
+    let proxy_ent = parts.entropies(boot_toks, nb);
+    let boot_overlap = top_k_overlap(&proxy_ent, &teacher.entropies, boot_k);
+    Ok((
+        wf,
+        ProxyFitReport {
+            phase: 0,
+            spec: *spec,
+            modules,
+            head_corr,
+            boot_overlap,
+            boot_k,
+            attempts: 1,
+        },
+    ))
+}
+
+/// One float as a JSON value: non-finite metrics (a diverged fit) must
+/// render as `null`, not the illegal bare tokens `NaN`/`inf`.
+fn json_num(v: f32) -> String {
+    if v.is_finite() {
+        format!("{v:.6}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Persist fit reports as `results/BENCH_proxy.json`-style rows
+/// (hand-rolled JSON — the offline crate set has no serde).
+pub fn write_proxy_bench_json(path: &Path, reports: &[ProxyFitReport]) -> Result<()> {
+    let mut s = String::from("[\n");
+    let mut rows: Vec<String> = Vec::new();
+    for r in reports {
+        let spec = r.spec.tag();
+        for m in &r.modules {
+            rows.push(format!(
+                "  {{\"phase\": {}, \"spec\": \"{}\", \"module\": \"{}\", \"metric\": \"rmse\", \"value\": {}}}",
+                r.phase, spec, m.module, json_num(m.rmse)
+            ));
+        }
+        rows.push(format!(
+            "  {{\"phase\": {}, \"spec\": \"{}\", \"module\": \"cls\", \"metric\": \"head_corr\", \"value\": {}}}",
+            r.phase, spec, json_num(r.head_corr)
+        ));
+        rows.push(format!(
+            "  {{\"phase\": {}, \"spec\": \"{}\", \"module\": \"ranking\", \"metric\": \"boot_top{}_overlap\", \"value\": {}}}",
+            r.phase, spec, r.boot_k, json_num(r.boot_overlap)
+        ));
+        rows.push(format!(
+            "  {{\"phase\": {}, \"spec\": \"{}\", \"module\": \"ranking\", \"metric\": \"attempts\", \"value\": {}}}",
+            r.phase, spec, r.attempts
+        ));
+    }
+    s.push_str(&rows.join(",\n"));
+    s.push_str("\n]\n");
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, s).with_context(|| format!("write {path:?}"))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_overlap_counts_intersections() {
+        let a = [0.9f32, 0.1, 0.8, 0.2, 0.7];
+        let b = [0.9f32, 0.8, 0.1, 0.2, 0.7]; // top-3 of a {0,2,4}, of b {0,1,4}
+        assert!((top_k_overlap(&a, &b, 3) - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(top_k_overlap(&a, &a, 5), 1.0);
+        assert_eq!(top_k_overlap(&a, &b, 0), 1.0);
+    }
+
+    #[test]
+    fn bench_json_is_wellformed() {
+        let dir = std::env::temp_dir().join("sf_proxygen_json");
+        let path = dir.join("BENCH_proxy.json");
+        let report = ProxyFitReport {
+            phase: 0,
+            spec: ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 4 },
+            modules: vec![ModuleFit { module: "layer0.mlp_sm".into(), rmse: 0.01 }],
+            head_corr: 0.97,
+            boot_overlap: 0.9,
+            boot_k: 16,
+            attempts: 1,
+        };
+        write_proxy_bench_json(&path, &[report]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("[\n"));
+        assert!(body.trim_end().ends_with(']'));
+        assert!(body.contains("\"metric\": \"rmse\""));
+        assert!(body.contains("boot_top16_overlap"));
+        // every row is a complete object and the array has no trailing comma
+        assert_eq!(body.matches('{').count(), body.matches('}').count());
+        assert!(!body.contains(",\n]"));
+    }
+
+    #[test]
+    fn bench_json_renders_non_finite_metrics_as_null() {
+        let dir = std::env::temp_dir().join("sf_proxygen_json");
+        let path = dir.join("BENCH_proxy_nan.json");
+        let report = ProxyFitReport {
+            phase: 0,
+            spec: ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 4 },
+            modules: vec![ModuleFit { module: "layer0.mlp_sm".into(), rmse: f32::NAN }],
+            head_corr: f32::INFINITY,
+            boot_overlap: 0.5,
+            boot_k: 8,
+            attempts: 3,
+        };
+        write_proxy_bench_json(&path, &[report]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"value\": null"));
+        assert!(!body.contains("NaN") && !body.contains("inf"), "{body}");
+    }
+}

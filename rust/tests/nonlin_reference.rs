@@ -1,0 +1,174 @@
+//! Direct numerics coverage for the two MPC primitives the selection
+//! signal rests on — `exact_entropy` (the Oracle/NoApprox path) and
+//! `mlp_forward` (the paper's public-weight substitute evaluation) —
+//! against clear f32 references on RANDOM inputs with explicit tolerance
+//! bounds.  Until now these were only exercised indirectly through the
+//! selection-equivalence suites; a regression in either would have shown
+//! up as a mysterious ranking drift instead of a pointwise error.
+//!
+//! Tolerance rationale:
+//!  * entropy — Crypten-style iterative exp/log; on logits in [−2, 2]
+//!    each probability carries ~2-3% relative error (exp + NR
+//!    reciprocal) and each p·ln p term inherits ~δp·(|ln p| + 1), so
+//!    the row sum stays under ~0.15 absolute for ≤ 6 classes;
+//!  * mlp_forward — two fixed-point matmuls (error ~d_in·2^-16) plus one
+//!    probabilistic truncation per product: < 0.03 absolute at unit
+//!    scale with d_in ≤ 16.
+
+use selectformer::mpc::engine::run_pair;
+use selectformer::mpc::nonlin::{self, MlpWeights};
+use selectformer::mpc::proto::{open, recv_share, share_input, PartyCtx, Shared};
+use selectformer::proxygen::{entropy_rows, Mlp};
+use selectformer::tensor::{TensorF, TensorR};
+use selectformer::util::proptest_lite::check;
+use selectformer::util::Rng;
+
+fn both<F>(seed: u64, x: TensorR, f: F) -> TensorF
+where
+    F: Fn(&mut PartyCtx, &Shared) -> Shared + Send + Clone + 'static,
+{
+    let shape = x.shape.clone();
+    let f1 = f.clone();
+    let (got, _) = run_pair(
+        seed,
+        move |ctx| {
+            let xs = share_input(ctx, &x);
+            let z = f(ctx, &xs);
+            open(ctx, &z).to_f32()
+        },
+        move |ctx| {
+            let xs = recv_share(ctx, &shape);
+            let z = f1(ctx, &xs);
+            let _ = open(ctx, &z);
+        },
+    );
+    got
+}
+
+const ENTROPY_TOL: f32 = 0.15;
+const MLP_TOL: f32 = 0.03;
+
+#[test]
+fn exact_entropy_matches_f32_reference_on_random_logits() {
+    check(
+        12,
+        0xe27,
+        |r| {
+            let rows = 2 + r.below(5);
+            let cols = 3 + r.below(4);
+            let logits: Vec<f32> =
+                (0..rows * cols).map(|_| r.uniform(-2.0, 2.0)).collect();
+            (rows, cols, logits)
+        },
+        |(rows, cols, logits)| {
+            let (rows, cols) = (*rows, *cols);
+            let expect = entropy_rows(logits, rows, cols);
+            let x = TensorR::from_f32(&TensorF::from_vec(
+                logits.clone(),
+                &[rows, cols],
+            ));
+            let got = both(0x5eed ^ rows as u64, x, move |ctx, xs| {
+                nonlin::exact_entropy(ctx, xs, rows, cols)
+            });
+            for (i, (g, e)) in got.data.iter().zip(&expect).enumerate() {
+                let err = (g - e).abs();
+                if err > ENTROPY_TOL {
+                    return Err(format!(
+                        "row {i}: mpc {g} vs clear {e} (|err| {err} > {ENTROPY_TOL})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn mlp_forward_matches_f32_reference_on_random_mlps() {
+    check(
+        10,
+        0x31f,
+        |r| {
+            let rows = 1 + r.below(6);
+            let d_in = 1 + r.below(16);
+            let d_hidden = 1 + r.below(16);
+            let d_out = 1 + r.below(8);
+            let mut mk = |n: usize, lo: f32, hi: f32| -> Vec<f32> {
+                (0..n).map(|_| r.uniform(lo, hi)).collect()
+            };
+            let x = mk(rows * d_in, -1.0, 1.0);
+            let mlp = Mlp {
+                d_in,
+                d_hidden,
+                d_out,
+                w1: mk(d_in * d_hidden, -1.0, 1.0),
+                b1: mk(d_hidden, -0.5, 0.5),
+                w2: mk(d_hidden * d_out, -1.0, 1.0),
+                b2: mk(d_out, -0.5, 0.5),
+            };
+            (rows, x, mlp)
+        },
+        |(rows, x, mlp)| {
+            let rows = *rows;
+            // f32 reference from the proxygen trainer's forward
+            let expect = mlp.forward(x, rows);
+            let enc = |v: &[f32], shape: &[usize]| {
+                TensorR::from_f32(&TensorF::from_vec(v.to_vec(), shape))
+            };
+            let w = MlpWeights {
+                w1: enc(&mlp.w1, &[mlp.d_in, mlp.d_hidden]),
+                b1: enc(&mlp.b1, &[mlp.d_hidden]),
+                w2: enc(&mlp.w2, &[mlp.d_hidden, mlp.d_out]),
+                b2: enc(&mlp.b2, &[mlp.d_out]),
+            };
+            let xs = enc(x, &[rows, mlp.d_in]);
+            let got = both(0xa11 ^ rows as u64, xs, move |ctx, s| {
+                nonlin::mlp_forward(ctx, s, &w)
+            });
+            for (i, (g, e)) in got.data.iter().zip(&expect).enumerate() {
+                let err = (g - e).abs();
+                if err > MLP_TOL {
+                    return Err(format!(
+                        "elem {i}: mpc {g} vs clear {e} (|err| {err} > {MLP_TOL})"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The substitute path end to end: a TRAINED entropy-emulation MLP
+/// evaluated over MPC ranks random logits like its clear form.
+#[test]
+fn trained_entropy_mlp_over_mpc_tracks_clear() {
+    let mut rng = Rng::new(0x7ea);
+    let (mlp, rmse) =
+        selectformer::proxygen::train_mlp_se(&mut rng, (0.0, 1.0), 4, 16, 600, 256);
+    assert!(rmse < 0.3, "ex-vivo se rmse {rmse}");
+    let rows = 24;
+    let logits: Vec<f32> = (0..rows * 4).map(|_| rng.uniform(-2.0, 2.0)).collect();
+    let clear = mlp.forward(&logits, rows);
+    let enc = |v: &[f32], shape: &[usize]| {
+        TensorR::from_f32(&TensorF::from_vec(v.to_vec(), shape))
+    };
+    let w = MlpWeights {
+        w1: enc(&mlp.w1, &[4, 16]),
+        b1: enc(&mlp.b1, &[16]),
+        w2: enc(&mlp.w2, &[16, 1]),
+        b2: enc(&mlp.b2, &[1]),
+    };
+    let xs = enc(&logits, &[rows, 4]);
+    let got = both(0xbee, xs, move |ctx, s| nonlin::mlp_forward(ctx, s, &w));
+    let max_err = got
+        .data
+        .iter()
+        .zip(&clear)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0f32, f32::max);
+    assert!(max_err < MLP_TOL, "max |mpc − clear| = {max_err}");
+    // and the RANKING the selector consumes survives the fixed point
+    // (a 6/8 floor tolerates ties within the ~0.03 fixed-point slack)
+    let overlap = selectformer::proxygen::top_k_overlap(&got.data, &clear, 8);
+    assert!(overlap >= 0.75, "top-8 overlap {overlap}");
+}

@@ -1,0 +1,151 @@
+//! Property tests for the fixed-point quantize/dequantize path the proxy
+//! generator emits weights through: `fixed::encode_clamped` → `.sfw` →
+//! `fixed::encode` inside the MPC engine.  The invariants:
+//!
+//!  * round-trip: decode(encode_clamped(x, M)) is within one grid step
+//!    (+ f32 representation slack) of clamp(x, ±M);
+//!  * extremes CLAMP — the sign is preserved, the magnitude pins to the
+//!    bound; nothing wraps around the ring and flips sign;
+//!  * idempotence: a quantized value re-quantizes to itself bit for bit
+//!    (what makes the emitted `.sfw` stable under re-encoding);
+//!  * trained-MLP weights survive the trip with ≤ one grid step of error
+//!    per parameter.
+
+use selectformer::fixed::{decode, encode, encode_clamped, SCALE};
+use selectformer::proxygen::{self, Mlp};
+use selectformer::util::proptest_lite::{check, check_with, shrink_vec, Config};
+use selectformer::util::Rng;
+
+const MAX_ABS: f32 = proxygen::MAX_WEIGHT_ABS;
+
+/// Log-uniform magnitudes from 1e-6 up to far beyond the clamp bound,
+/// both signs, with occasional exact zeros — the distribution trained
+/// weights + adversarial extremes actually span.
+fn gen_value(r: &mut Rng) -> f32 {
+    if r.below(16) == 0 {
+        return 0.0;
+    }
+    let exp = r.uniform(-6.0, 9.0); // 1e-6 ..= 1e9
+    let mag = 10f32.powf(exp);
+    if r.below(2) == 0 {
+        mag
+    } else {
+        -mag
+    }
+}
+
+#[test]
+fn quantize_roundtrip_is_within_one_grid_step_of_the_clamp() {
+    check(256, 0xf1de, gen_value, |&x| {
+        let q = encode_clamped(x, MAX_ABS);
+        let back = decode(q);
+        let clamped = x.clamp(-MAX_ABS, MAX_ABS);
+        // one grid step + f32 representation error at the value's scale
+        let tol = 1.0 / SCALE as f32 + clamped.abs() * 2e-7;
+        if (back - clamped).abs() > tol {
+            return Err(format!(
+                "decode(encode_clamped({x})) = {back}, want ≈ {clamped} (tol {tol})"
+            ));
+        }
+        if x != 0.0 && clamped != 0.0 && back.signum() != clamped.signum() && back != 0.0 {
+            return Err(format!("sign flipped: {x} -> {back}"));
+        }
+        // idempotence on the emitted value
+        if encode_clamped(back, MAX_ABS) != q {
+            return Err(format!("not idempotent at {x}: {q} vs re-encode"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn extreme_magnitudes_clamp_never_wrap() {
+    check(128, 0xc1a4, |r| gen_value(r) * 1e6, |&x| {
+        if x.abs() <= MAX_ABS {
+            return Ok(());
+        }
+        let q = encode_clamped(x, MAX_ABS);
+        let bound = encode(MAX_ABS * x.signum());
+        if q != bound {
+            return Err(format!("{x} quantized to {q}, want the bound {bound}"));
+        }
+        // the UNCLAMPED encode must saturate, not wrap, per fixed.rs docs
+        let raw = encode(x);
+        if (x > 0.0) != (raw > 0) {
+            return Err(format!("raw encode wrapped: encode({x}) = {raw}"));
+        }
+        Ok(())
+    });
+}
+
+/// Quantizing a genuinely TRAINED substitute MLP (the artifact the
+/// generator ships) keeps every parameter within one grid step and its
+/// predictions within the accumulated grid error — with shrinking down
+/// to the offending parameter set when it fails.
+#[test]
+fn trained_mlp_weights_roundtrip_through_the_grid() {
+    let mut rng = Rng::new(0x90d);
+    // an MLP_ln-style fit whose folded W1 carries LARGE magnitudes (1/σ)
+    let (mlp, _) = proxygen::train_mlp_ln(&mut rng, (5e-3, 1.2e-3), 8, 400);
+    let params: Vec<f32> = mlp
+        .w1
+        .iter()
+        .chain(&mlp.b1)
+        .chain(&mlp.w2)
+        .chain(&mlp.b2)
+        .copied()
+        .collect();
+    assert!(
+        params.iter().any(|p| p.abs() > 100.0),
+        "the ln fold should produce large weights (got max {})",
+        params.iter().fold(0f32, |a, &b| a.max(b.abs()))
+    );
+    check_with(
+        Config { cases: 32, seed: 0x90d1, ..Default::default() },
+        |r| {
+            // perturbed copies of the trained parameter vector
+            params
+                .iter()
+                .map(|&p| p * r.uniform(0.5, 2.0))
+                .collect::<Vec<f32>>()
+        },
+        |ps| {
+            for &p in ps {
+                let q = decode(encode_clamped(p, MAX_ABS));
+                let clamped = p.clamp(-MAX_ABS, MAX_ABS);
+                let tol = 1.0 / SCALE as f32 + clamped.abs() * 2e-7;
+                if (q - clamped).abs() > tol {
+                    return Err(format!("param {p} -> {q} (tol {tol})"));
+                }
+            }
+            Ok(())
+        },
+        |ps| shrink_vec(ps, |&p| if p.abs() > 1.0 { Some(p / 2.0) } else { None }),
+    );
+    // functional: quantized net ≈ trained net on in-range inputs
+    let mut q = Mlp {
+        d_in: mlp.d_in,
+        d_hidden: mlp.d_hidden,
+        d_out: mlp.d_out,
+        w1: mlp.w1.iter().map(|&v| proxygen::quantize(v)).collect(),
+        b1: mlp.b1.iter().map(|&v| proxygen::quantize(v)).collect(),
+        w2: mlp.w2.iter().map(|&v| proxygen::quantize(v)).collect(),
+        b2: mlp.b2.iter().map(|&v| proxygen::quantize(v)).collect(),
+    };
+    let xs: Vec<f32> = (0..64).map(|i| 3e-3 + 5e-5 * i as f32).collect();
+    let a = mlp.forward(&xs, 64);
+    let b = q.forward(&xs, 64);
+    let max_err = a
+        .iter()
+        .zip(&b)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0f32, f32::max);
+    // per-param error 2^-16 scaled by the ~1e3 ln weights → ~0.03 bound
+    assert!(max_err < 0.05, "quantization moved predictions by {max_err}");
+    // quantization is a fixed point: re-quantizing changes nothing
+    let w1_before = q.w1.clone();
+    for v in q.w1.iter_mut() {
+        *v = proxygen::quantize(*v);
+    }
+    assert_eq!(w1_before, q.w1);
+}
