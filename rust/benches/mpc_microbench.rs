@@ -5,11 +5,13 @@
 //! results/BENCH_gemm.json / BENCH_e2e.json so the perf trajectory is
 //! diffable PR over PR.
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use selectformer::benchkit::{banner, write_bench_json, write_tsv, BenchRow};
 use selectformer::coordinator::{
     testutil, PhaseSchedule, ProxySpec, RuntimeProfile, SelectionJob,
+    SelectionService,
 };
 use selectformer::data::{synth, SynthSpec};
 use selectformer::mpc::cmp;
@@ -238,11 +240,91 @@ fn bench_e2e() -> Vec<BenchRow> {
     rows
 }
 
+/// Queue-scheduling overhead of the async service front end: a burst of
+/// tiny single-phase jobs through a depth-4 queue at workers {1, 2, 4} —
+/// jobs/sec plus submit→done latency percentiles (measured from BEFORE
+/// the blocking submit, so queue wait is included), persisted into
+/// results/BENCH_e2e.json so the daemon's dispatch cost is tracked run
+/// over run.
+fn bench_queue() -> Vec<BenchRow> {
+    const JOBS: usize = 12;
+    let dir = std::env::temp_dir().join("sf_bench_queue");
+    let proxy = dir.join("proxy.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+    let ds = Arc::new(synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        64,
+        false,
+        9,
+    ));
+    let mut rows = Vec::new();
+    let mut table = Table::new(
+        "service queue (12 tiny jobs, queue depth 4)",
+        &["workers", "jobs/s", "p50 submit→done", "p95 submit→done"],
+    );
+    for workers in [1usize, 2, 4] {
+        let service = SelectionService::with_queue(workers, 4);
+        let t0 = Instant::now();
+        let mut waiters = Vec::with_capacity(JOBS);
+        for j in 0..JOBS {
+            let job = SelectionJob::builder_shared([proxy.as_path()], ds.clone())
+                .keep_counts(vec![16])
+                .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+                .job_tag(j as u64 + 1)
+                .build()
+                .expect("queue bench job");
+            let submitted = Instant::now();
+            let handle = service.submit(job).expect("submit");
+            waiters.push(std::thread::spawn(move || {
+                handle.wait().expect("queue bench outcome");
+                submitted.elapsed().as_secs_f64()
+            }));
+        }
+        let mut latency: Vec<f64> = waiters
+            .into_iter()
+            .map(|w| w.join().expect("latency waiter"))
+            .collect();
+        let total = t0.elapsed().as_secs_f64();
+        service.shutdown();
+        latency.sort_by(|a, b| a.total_cmp(b));
+        let pct =
+            |q: f64| latency[((latency.len() - 1) as f64 * q).round() as usize];
+        table.row(vec![
+            workers.to_string(),
+            format!("{:.1}", JOBS as f64 / total),
+            format!("{:.0} ms", pct(0.5) * 1e3),
+            format!("{:.0} ms", pct(0.95) * 1e3),
+        ]);
+        let shape = "jobs=12,queue=4";
+        rows.push(BenchRow::new(
+            "service_queue_throughput",
+            shape,
+            workers,
+            total / JOBS as f64 * 1e9,
+        ));
+        rows.push(BenchRow::new(
+            "service_queue_latency_p50",
+            shape,
+            workers,
+            pct(0.5) * 1e9,
+        ));
+        rows.push(BenchRow::new(
+            "service_queue_latency_p95",
+            shape,
+            workers,
+            pct(0.95) * 1e9,
+        ));
+    }
+    table.print();
+    rows
+}
+
 fn main() {
     banner("microbench", "2PC primitive throughput (local wall-clock, per call)");
     let gemm_rows = bench_gemm();
     write_bench_json("BENCH_gemm", &gemm_rows);
-    let e2e_rows = bench_e2e();
+    let mut e2e_rows = bench_e2e();
+    e2e_rows.extend(bench_queue());
     write_bench_json("BENCH_e2e", &e2e_rows);
     let mut t = Table::new(
         "MPC primitives",

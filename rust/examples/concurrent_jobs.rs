@@ -1,31 +1,35 @@
-//! Many selections, one service: run several independent private
-//! selections concurrently over a shared dealer hub and verify each is
-//! byte-identical to running alone.  Standalone (no artifacts needed).
+//! Many selections, one service: submit several independent private
+//! selections to the queue daemon, let them run concurrently over a
+//! shared dealer hub, and verify each is byte-identical to running
+//! alone.  Standalone (no artifacts needed).
 //!
 //! This is the ROADMAP's production shape in miniature: a
-//! `SelectionService` owns a worker pool; every `SelectionJob` carries a
-//! distinct `job_tag`, so the `(job, phase, batch)` randomness
-//! namespacing keeps all streams disjoint while the jobs share
-//! preprocessing compute.
+//! `SelectionService` owns a persistent worker pool behind a bounded
+//! queue; every `SelectionJob` carries a distinct `job_tag`, so the
+//! `(job, phase, batch)` randomness namespacing keeps all streams
+//! disjoint while the jobs share preprocessing compute.  (For the full
+//! queue lifecycle — backpressure, cancellation, shutdown — see the
+//! `job_queue` example.)
 //!
 //!     cargo run --release --example concurrent_jobs
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use selectformer::coordinator::{
-    testutil, RuntimeProfile, SelectionJob, SelectionService,
+    testutil, JobHandle, RuntimeProfile, SelectionJob, SelectionService,
 };
 use selectformer::data::{synth, Dataset, SynthSpec};
 use selectformer::util::report::fmt_bytes;
 
-fn job<'a>(
-    ds: &'a Dataset,
+fn job(
+    ds: &Arc<Dataset>,
     proxy: &std::path::Path,
     keep: usize,
     tag: u64,
     lanes: usize,
-) -> anyhow::Result<SelectionJob<'a>> {
-    SelectionJob::builder([proxy], ds)
+) -> anyhow::Result<SelectionJob<'static>> {
+    SelectionJob::builder_shared([proxy], ds.clone())
         .keep_counts(vec![keep])
         .runtime(RuntimeProfile { batch: 16, lanes, ..Default::default() })
         .job_tag(tag)
@@ -45,14 +49,14 @@ fn main() -> anyhow::Result<()> {
             p
         })
         .collect();
-    let datasets: Vec<Dataset> = (0..3)
+    let datasets: Vec<Arc<Dataset>> = (0..3)
         .map(|i| {
-            synth(
+            Arc::new(synth(
                 &SynthSpec { seq_len: 16, vocab: 96, ..Default::default() },
                 96 + 32 * i,
                 false,
                 7 + i as u64,
-            )
+            ))
         })
         .collect();
 
@@ -65,20 +69,25 @@ fn main() -> anyhow::Result<()> {
     }
     let t_alone = t0.elapsed().as_secs_f64();
 
-    // The same three jobs, concurrently on a 3-worker service.
+    // The same three jobs, submitted together to a 3-worker service.
     let service = SelectionService::new(3);
-    let jobs: Vec<SelectionJob> = datasets
+    let t1 = Instant::now();
+    let handles: Vec<JobHandle> = datasets
         .iter()
         .enumerate()
-        .map(|(i, ds)| job(ds, &proxies[i], 24, (i + 1) as u64, 2))
+        .map(|(i, ds)| {
+            let j = job(ds, &proxies[i], 24, (i + 1) as u64, 2)?;
+            service.submit(j).map_err(anyhow::Error::new)
+        })
         .collect::<anyhow::Result<_>>()?;
-    let t1 = Instant::now();
-    let together = service.run_all(jobs);
+    let together: Vec<_> = handles
+        .iter()
+        .map(|h| h.wait())
+        .collect::<anyhow::Result<_>>()?;
     let t_together = t1.elapsed().as_secs_f64();
 
     println!("3 independent selections, alone vs concurrent:");
     for (i, (a, t)) in alone.iter().zip(&together).enumerate() {
-        let t = t.as_ref().expect("job failed");
         assert_eq!(a.selected, t.selected, "job {i}: selections must match");
         assert_eq!(a.total_bytes(), t.total_bytes(), "job {i}: traffic must match");
         println!(
@@ -94,5 +103,6 @@ fn main() -> anyhow::Result<()> {
         t_alone / t_together.max(1e-9)
     );
     println!("byte-identity held: concurrency moved wall-clock, not one bit of output.");
+    service.shutdown();
     Ok(())
 }

@@ -1,0 +1,111 @@
+//! The async job queue end to end: submit a burst of selections over a
+//! deliberately small bounded queue (watching `try_submit` report
+//! backpressure), cancel one job cooperatively, drain the rest, and shut
+//! the service down.  Standalone (no artifacts needed).
+//!
+//! This is the ROADMAP's production front end in miniature: a
+//! `SelectionService` owns a persistent worker pool and a bounded queue;
+//! each `submit` returns a typed `JobHandle` exposing status / poll /
+//! wait / events / cancel, and a cancelled job resolves to an error
+//! rooted in `Cancelled` while the pool keeps serving.
+//!
+//!     cargo run --release --example job_queue
+
+use std::sync::Arc;
+
+use selectformer::coordinator::{
+    testutil, Cancelled, JobStatus, RuntimeProfile, SelectionJob,
+    SelectionService, SubmitError,
+};
+use selectformer::data::{synth, SynthSpec};
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join("sf_job_queue");
+    let proxy = dir.join("proxy.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 96, 2, 8);
+    let ds = Arc::new(synth(
+        &SynthSpec { seq_len: 16, vocab: 96, ..Default::default() },
+        128,
+        false,
+        3,
+    ));
+    let job = |tag: u64| -> anyhow::Result<SelectionJob<'static>> {
+        SelectionJob::builder_shared([proxy.as_path()], ds.clone())
+            .keep_counts(vec![32])
+            .runtime(RuntimeProfile { batch: 16, lanes: 2, ..Default::default() })
+            .job_tag(tag)
+            .build()
+    };
+
+    // 2 workers over a depth-2 queue: a burst of 6 jobs MUST overflow it.
+    let service = SelectionService::with_queue(2, 2);
+    println!(
+        "service: {} workers, queue depth {}",
+        service.workers(),
+        service.queue_capacity()
+    );
+    let mut handles = Vec::new();
+    let mut backpressured = 0;
+    for tag in 1..=6u64 {
+        match service.try_submit(job(tag)?) {
+            Ok(handle) => {
+                println!("job {tag}: accepted as #{}", handle.id());
+                handles.push(handle);
+            }
+            Err(SubmitError::QueueFull(returned)) => {
+                // backpressure: the job rides back — hand it to the
+                // blocking submit, which parks until a slot frees
+                backpressured += 1;
+                println!("job {tag}: queue full — blocking until a slot frees");
+                let handle = service
+                    .submit(*returned)
+                    .map_err(anyhow::Error::new)?;
+                println!("job {tag}: accepted as #{}", handle.id());
+                handles.push(handle);
+            }
+            Err(e) => return Err(anyhow::Error::new(e)),
+        }
+    }
+    assert!(backpressured > 0, "a 6-job burst must overflow a depth-2 queue");
+
+    // cancel the last-submitted job: deepest in the queue, so this
+    // exercises the cancel-while-queued (or earliest-checkpoint) path
+    let victim = handles.last().expect("submitted six jobs");
+    victim.cancel();
+    println!("job #{}: cancellation requested", victim.id());
+
+    let mut done = 0;
+    let mut cancelled = 0;
+    for handle in &handles {
+        match handle.wait() {
+            Ok(outcome) => {
+                done += 1;
+                println!(
+                    "job #{}: done — {} survivors of {}",
+                    handle.id(),
+                    outcome.selected.len(),
+                    ds.n
+                );
+            }
+            Err(e) if e.is::<Cancelled>() => {
+                cancelled += 1;
+                assert_eq!(handle.status(), JobStatus::Cancelled);
+                println!("job #{}: cancelled cleanly", handle.id());
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    println!("burst drained: {done} done, {cancelled} cancelled");
+
+    // the pool outlived the cancellation: one more job runs clean
+    let after = service.submit(job(7)?).map_err(anyhow::Error::new)?;
+    let outcome = after.wait()?;
+    println!(
+        "post-cancel job #{}: {} survivors — service still healthy",
+        after.id(),
+        outcome.selected.len()
+    );
+    service.shutdown();
+    println!("queue drained, workers joined — clean shutdown.");
+    Ok(())
+}

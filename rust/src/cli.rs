@@ -15,7 +15,24 @@
 //!                      [--data corpus.bin | --synth 256] [--boot 64]
 //!                      [--specs "1:1:2,3:4:16"] [--steps 600] [--quick]
 //!                      [--seed N] [--out proxies/]
+//! selectformer serve   --jobs <manifest> [--workers 2] [--queue 4]
+//!                      [--progress]
 //! ```
+//!
+//! `serve` runs the async job-queue daemon over a manifest: one job per
+//! line, `key=value` fields —
+//!
+//! ```text
+//! # proxies=<p1.sfw[;p2.sfw…]>  data=<corpus.bin>|synth=<n>
+//! #   keep=<k1[;k2…]>  [tag=N] [seed=N] [lanes=N] [batch=N] [overlap]
+//! proxies=p1.sfw;p2.sfw data=corpus.bin keep=64;16 tag=1 lanes=2 overlap
+//! proxies=tiny.sfw synth=256 keep=32 tag=2
+//! ```
+//!
+//! Jobs are submitted in manifest order against the bounded queue
+//! (blocking submit = natural backpressure) and each job's lifecycle is
+//! streamed as `[job N]` status lines (`--progress` adds per-batch
+//! lines).
 //!
 //! Each command declares its flag set; unknown flags are rejected with the
 //! known list instead of being silently accepted, and value flags consume
@@ -89,6 +106,10 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
                 "steps", "seed", "out",
             ],
             boolean: &["quick"],
+        },
+        "serve" => CmdSpec {
+            value: &["jobs", "workers", "queue"],
+            boolean: &["progress"],
         },
         other => bail!("unknown command `{other}` (try `selectformer info`)"),
     })
@@ -256,6 +277,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "plan" => cmd_plan(&args),
         "bench" => bench_acc::run(&args),
         "proxygen" => cmd_proxygen(&args),
+        "serve" => cmd_serve(&args),
         other => bail!("unknown command `{other}` (try `selectformer info`)"),
     }
 }
@@ -418,6 +440,211 @@ fn cmd_proxygen(args: &Args) -> Result<()> {
         &reports,
     )?;
     println!("fit report persisted to results/BENCH_proxy.json");
+    Ok(())
+}
+
+/// Parse one manifest line into a `'static` job the queue can own.
+fn serve_job_from(line: &str) -> Result<crate::coordinator::SelectionJob<'static>> {
+    use crate::coordinator::SelectionJob;
+    use crate::data::{self, SynthSpec};
+
+    let mut proxies: Vec<PathBuf> = Vec::new();
+    let mut data: Option<PathBuf> = None;
+    let mut synth_n: Option<usize> = None;
+    let mut keep: Vec<usize> = Vec::new();
+    let mut tag = 0u64;
+    let mut seed = 0x5e1ec7u64;
+    let mut profile = RuntimeProfile::default();
+    for field in line.split_whitespace() {
+        let parse_usize = |v: &str| -> Result<usize> {
+            v.parse().with_context(|| format!("manifest field `{field}`"))
+        };
+        match field.split_once('=') {
+            Some(("proxies", v)) => {
+                proxies = v.split(';').map(PathBuf::from).collect();
+            }
+            Some(("data", v)) => data = Some(PathBuf::from(v)),
+            Some(("synth", v)) => synth_n = Some(parse_usize(v)?),
+            Some(("keep", v)) => {
+                keep = v
+                    .split(';')
+                    .map(parse_usize)
+                    .collect::<Result<Vec<usize>>>()?;
+            }
+            Some(("tag", v)) => tag = parse_usize(v)? as u64,
+            Some(("seed", v)) => seed = parse_usize(v)? as u64,
+            Some(("lanes", v)) => profile.lanes = parse_usize(v)?,
+            Some(("batch", v)) => profile.batch = parse_usize(v)?,
+            None if field == "overlap" => profile.overlap = true,
+            _ => bail!(
+                "unknown manifest field `{field}` (known: proxies= data= \
+                 synth= keep= tag= seed= lanes= batch= overlap)"
+            ),
+        }
+    }
+    ensure!(!proxies.is_empty(), "manifest job needs proxies=<a.sfw[;b.sfw…]>");
+    ensure!(!keep.is_empty(), "manifest job needs keep=<k[;k…]>");
+    ensure!(
+        keep.len() == proxies.len(),
+        "keep has {} entries for {} proxy phases",
+        keep.len(),
+        proxies.len()
+    );
+    let ds = match (data, synth_n) {
+        (Some(_), Some(_)) => {
+            bail!("data= and synth= are mutually exclusive — pick one corpus")
+        }
+        (Some(p), None) => crate::data::Dataset::load(&p)?,
+        (None, Some(n)) => {
+            // shape the synthetic corpus to the first proxy's geometry
+            let cfg = WeightFile::load(&proxies[0])?.config()?;
+            data::synth(
+                &SynthSpec {
+                    n_classes: cfg.n_classes,
+                    seq_len: cfg.seq_len,
+                    vocab: cfg.vocab,
+                    ..Default::default()
+                },
+                n,
+                false,
+                seed ^ 0xda7a,
+            )
+        }
+        (None, None) => bail!("manifest job needs data=<corpus.bin> or synth=<n>"),
+    };
+    SelectionJob::builder_shared(proxies, Arc::new(ds))
+        .keep_counts(keep)
+        .runtime(profile)
+        .dealer_seed(seed)
+        .job_tag(tag)
+        .build()
+}
+
+/// `selectformer serve` — the async job-queue daemon: submit every
+/// manifest job against a bounded queue (blocking submit = backpressure),
+/// stream per-job status lines from each job's event channel, drain, and
+/// shut the pool down.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::coordinator::{JobUpdate, SelectionService};
+
+    let manifest = args.get("jobs").context("--jobs <manifest> required")?;
+    let workers = args.usize_or("workers", 2)?;
+    let queue = args.usize_or("queue", workers.max(1) * 2)?;
+    let progress = args.has("progress");
+    let text = std::fs::read_to_string(manifest)
+        .with_context(|| format!("manifest {manifest}"))?;
+    // parse the WHOLE manifest up front: a malformed line aborts before
+    // any job is submitted or status-printer thread spawned
+    let mut jobs = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let job = serve_job_from(line)
+            .with_context(|| format!("{manifest}:{}: `{line}`", lineno + 1))?;
+        jobs.push((lineno + 1, job));
+    }
+    ensure!(!jobs.is_empty(), "manifest {manifest} has no jobs");
+    let service = SelectionService::with_queue(workers, queue);
+    println!(
+        "serving {manifest} on {} workers (queue depth {})",
+        service.workers(),
+        service.queue_capacity()
+    );
+    let mut printers = Vec::new();
+    for (lineno, job) in jobs {
+        // blocking submit: the bounded queue is the admission throttle
+        let handle = match service.submit(job) {
+            Ok(handle) => handle,
+            Err(e) => {
+                // unreachable in practice (nothing shuts this service
+                // down mid-loop), but resolve cleanly: tear the service
+                // down so every printer's job resolves, join them, THEN
+                // surface the error — no detached printers left behind
+                drop(service);
+                for printer in printers {
+                    let _ = printer.join();
+                }
+                bail!("{manifest}:{lineno}: submit failed: {e}");
+            }
+        };
+        let id = handle.id();
+        println!("[job {id}] queued ({manifest}:{lineno})");
+        let events = handle.events();
+        // each printer resolves to whether its job succeeded, so the
+        // command's exit status can reflect the batch
+        printers.push(std::thread::spawn(move || -> bool {
+            for update in events {
+                match update {
+                    JobUpdate::PhaseCalibrated { phase, worst_rmse, .. } => {
+                        println!(
+                            "[job {id}] phase {} calibrated (worst rmse {:.4})",
+                            phase + 1,
+                            worst_rmse
+                        );
+                    }
+                    JobUpdate::PhaseStarted { phase, n_candidates, keep } => {
+                        println!(
+                            "[job {id}] phase {}: {} candidates -> keep {}",
+                            phase + 1,
+                            n_candidates,
+                            keep
+                        );
+                    }
+                    JobUpdate::BatchCompleted { phase, batch, bytes, .. } => {
+                        if progress {
+                            println!(
+                                "[job {id}] phase {} batch {} done ({})",
+                                phase + 1,
+                                batch,
+                                fmt_bytes(bytes)
+                            );
+                        }
+                    }
+                    JobUpdate::SurvivorConfirmed { .. } => {}
+                    JobUpdate::PhaseFinished { phase, survivors, bytes, .. } => {
+                        println!(
+                            "[job {id}] phase {} done: {} survivors ({} moved)",
+                            phase + 1,
+                            survivors,
+                            fmt_bytes(bytes)
+                        );
+                    }
+                    JobUpdate::Cancelled => {
+                        println!("[job {id}] cancelled");
+                    }
+                }
+            }
+            match handle.wait() {
+                Ok(outcome) => {
+                    println!(
+                        "[job {id}] done: {} selected, {} total, {}",
+                        outcome.selected.len(),
+                        fmt_bytes(outcome.total_bytes()),
+                        fmt_duration(outcome.total_wall_s())
+                    );
+                    true
+                }
+                Err(e) => {
+                    println!("[job {id}] failed: {e:#}");
+                    false
+                }
+            }
+        }));
+    }
+    let mut failed = 0usize;
+    for printer in printers {
+        if !printer.join().expect("status printer panicked") {
+            failed += 1;
+        }
+    }
+    service.shutdown();
+    ensure!(
+        failed == 0,
+        "{failed} job(s) failed or were cancelled — see the [job N] lines above"
+    );
+    println!("all jobs resolved; service shut down");
     Ok(())
 }
 
@@ -734,6 +961,43 @@ mod tests {
         let a = Args::parse(&argv(&["bench", "--quick", "table1"])).unwrap();
         assert!(a.has("quick"));
         assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn serve_manifest_lines_parse() {
+        let dir = std::env::temp_dir().join("sf_cli_serve");
+        let p = dir.join("p.sfw");
+        crate::coordinator::testutil::write_random_proxy_sfw(&p, 1, 1, 2, 16, 64, 2, 8);
+        let line = format!(
+            "proxies={} synth=64 keep=8 tag=3 seed=77 lanes=2 batch=8 overlap",
+            p.display()
+        );
+        let job = serve_job_from(&line).unwrap();
+        assert_eq!(job.n_phases(), 1);
+        assert_eq!(job.survivor_counts(), &[8]);
+        assert_eq!(job.job_tag(), 3);
+        assert_eq!(job.dealer_seed(), 77);
+        // malformed lines are rejected with a reason
+        assert!(serve_job_from("proxies=a.sfw keep=4").is_err(), "no corpus");
+        assert!(serve_job_from("synth=64 keep=4").is_err(), "no proxies");
+        assert!(serve_job_from("bogus=1").is_err(), "unknown field");
+        assert!(
+            serve_job_from(&format!("proxies={} synth=64 keep=8;4", p.display()))
+                .is_err(),
+            "keep arity must match the proxy ladder"
+        );
+        assert!(
+            serve_job_from(&format!(
+                "proxies={} data=x.bin synth=64 keep=8",
+                p.display()
+            ))
+            .is_err(),
+            "data= and synth= are mutually exclusive"
+        );
+        // the serve command knows its flag set
+        assert!(Args::parse(&argv(&["serve", "--jobs", "m.txt", "--workers", "2"]))
+            .is_ok());
+        assert!(Args::parse(&argv(&["serve", "--bogus", "x"])).is_err());
     }
 
     #[test]

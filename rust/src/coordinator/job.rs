@@ -33,7 +33,9 @@
 //! tests/service_equiv.rs).
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::Instant;
@@ -47,11 +49,82 @@ use crate::mpc::net::NetConfig;
 use crate::proxygen::{self, DistillConfig, ProxyFitReport};
 
 use super::iosched::SchedPolicy;
-use super::observe::{JobEvent, JobObserver, PhaseObs};
+use super::observe::{FanoutObserver, JobEvent, JobObserver, PhaseObs};
 use super::phase::PhaseSchedule;
 use super::selector::{
-    self, PhaseOutcome, PhaseSession, SelectionOptions, SelectionOutcome,
+    self, CancelGate, PhaseOutcome, PhaseSession, SelectionOptions,
+    SelectionOutcome,
 };
+
+// ---------------------------------------------------------------------------
+// Cooperative cancellation
+// ---------------------------------------------------------------------------
+
+/// Cooperative cancellation signal for a running [`SelectionJob`].
+///
+/// Clone the token, hand one copy to the job
+/// ([`cancel_token`](SelectionJobBuilder::cancel_token)) and keep the
+/// other; [`cancel`](CancelToken::cancel) asks the job to stop at its
+/// next checkpoint — a candidate-batch boundary, the entry to a phase's
+/// QuickSelect stage, or a phase boundary.  Cancellation is cooperative
+/// and never tears mid-protocol: both MPC parties agree on the exact unit
+/// that stops (see `CancelGate` in the selector), prefetched overlap
+/// setup is joined, and a service-shared dealer hub is left exactly as
+/// healthy as before the job started.  A cancelled run resolves to an
+/// error whose root cause is [`Cancelled`].
+///
+/// Under a [`SelectionService`](super::service::SelectionService) the
+/// token is managed for you:
+/// [`JobHandle::cancel`](super::service::JobHandle::cancel) trips it.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// Request cancellation (idempotent, returns immediately — the job
+    /// stops at its next cooperative checkpoint).
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// Marker error a cancelled [`SelectionJob`] resolves to: test with
+/// `err.is::<Cancelled>()` on the `anyhow::Error` returned by
+/// [`SelectionJob::run`] /
+/// [`JobHandle::wait`](super::service::JobHandle::wait).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cancelled;
+
+impl fmt::Display for Cancelled {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "selection job cancelled")
+    }
+}
+
+impl std::error::Error for Cancelled {}
+
+/// Dataset access for a job: borrowed for the classic in-scope callers,
+/// reference-counted for `'static` jobs a queue service can own.
+enum DataSource<'a> {
+    Borrowed(&'a Dataset),
+    Shared(Arc<Dataset>),
+}
+
+impl DataSource<'_> {
+    fn get(&self) -> &Dataset {
+        match self {
+            DataSource::Borrowed(ds) => ds,
+            DataSource::Shared(ds) => ds,
+        }
+    }
+}
 
 // ---------------------------------------------------------------------------
 // Typed sub-configs
@@ -215,10 +288,12 @@ impl CalibrationSpec {
 // Builder
 // ---------------------------------------------------------------------------
 
-/// Builder for a [`SelectionJob`]; start from [`SelectionJob::builder`].
+/// Builder for a [`SelectionJob`]; start from [`SelectionJob::builder`]
+/// (borrowed dataset) or [`SelectionJob::builder_shared`] (`Arc` dataset,
+/// producing a `'static` job a queue service can own).
 pub struct SelectionJobBuilder<'a> {
     models: Vec<ModelSource>,
-    dataset: &'a Dataset,
+    dataset: DataSource<'a>,
     candidates: Option<Vec<usize>>,
     schedule: Option<PhaseSchedule>,
     keep_counts: Option<Vec<usize>>,
@@ -229,6 +304,7 @@ pub struct SelectionJobBuilder<'a> {
     job_tag: u64,
     observer: Option<Arc<dyn JobObserver>>,
     calibration: Option<CalibrationSpec>,
+    cancel: Option<CancelToken>,
 }
 
 impl<'a> SelectionJobBuilder<'a> {
@@ -295,6 +371,16 @@ impl<'a> SelectionJobBuilder<'a> {
         self
     }
 
+    /// Attach a cooperative [`CancelToken`]: keep a clone and call
+    /// [`cancel`](CancelToken::cancel) to make a running
+    /// [`run`](SelectionJob::run) stop at its next checkpoint (batch
+    /// boundary, QuickSelect entry, or phase boundary) and resolve to an
+    /// error rooted in [`Cancelled`].
+    pub fn cancel_token(mut self, token: CancelToken) -> Self {
+        self.cancel = Some(token);
+        self
+    }
+
     /// Calibrate in-process: treat the builder's single model as the
     /// clear TARGET and distill each phase's proxy from it (over
     /// `spec.bootstrap`) before the MPC phases run.  Requires a
@@ -309,6 +395,7 @@ impl<'a> SelectionJobBuilder<'a> {
 
     /// Validate the configuration and produce a runnable job.
     pub fn build(self) -> Result<SelectionJob<'a>> {
+        let n_points = self.dataset.get().n;
         ensure!(!self.models.is_empty(), "a selection job needs >= 1 phase model");
         ensure!(
             self.runtime.lanes >= 1,
@@ -343,9 +430,9 @@ impl<'a> SelectionJobBuilder<'a> {
                     std::collections::HashSet::with_capacity(cal.bootstrap.len());
                 for &b in &cal.bootstrap {
                     ensure!(
-                        b < self.dataset.n,
-                        "bootstrap index {b} out of range (dataset has {} points)",
-                        self.dataset.n
+                        b < n_points,
+                        "bootstrap index {b} out of range (dataset has \
+                         {n_points} points)"
                     );
                     ensure!(boot.insert(b), "bootstrap index {b} appears more than once");
                 }
@@ -358,15 +445,14 @@ impl<'a> SelectionJobBuilder<'a> {
             // calibrated jobs select from everything NOT already bought
             // as bootstrap; plain jobs from the whole dataset
             None => match &boot_set {
-                Some(boot) => (0..self.dataset.n).filter(|i| !boot.contains(i)).collect(),
-                None => (0..self.dataset.n).collect(),
+                Some(boot) => (0..n_points).filter(|i| !boot.contains(i)).collect(),
+                None => (0..n_points).collect(),
             },
         };
         ensure!(!candidates.is_empty(), "a selection job needs >= 1 candidate");
-        if let Some(&bad) = candidates.iter().find(|&&i| i >= self.dataset.n) {
+        if let Some(&bad) = candidates.iter().find(|&&i| i >= n_points) {
             anyhow::bail!(
-                "candidate index {bad} out of range (dataset has {} points)",
-                self.dataset.n
+                "candidate index {bad} out of range (dataset has {n_points} points)"
             );
         }
         let mut uniq = std::collections::HashSet::with_capacity(candidates.len());
@@ -431,6 +517,7 @@ impl<'a> SelectionJobBuilder<'a> {
             job_tag: self.job_tag,
             observer: self.observer,
             calibration: self.calibration,
+            cancel: self.cancel,
             hub: None,
         })
     }
@@ -444,7 +531,7 @@ impl<'a> SelectionJobBuilder<'a> {
 /// pool, ready to [`run`](SelectionJob::run).
 pub struct SelectionJob<'a> {
     models: Vec<ModelSource>,
-    dataset: &'a Dataset,
+    dataset: DataSource<'a>,
     candidates: Vec<usize>,
     schedule: Option<PhaseSchedule>,
     counts: Vec<usize>,
@@ -455,6 +542,7 @@ pub struct SelectionJob<'a> {
     job_tag: u64,
     observer: Option<Arc<dyn JobObserver>>,
     calibration: Option<CalibrationSpec>,
+    cancel: Option<CancelToken>,
     /// Shared preprocessing hub, set by the service; `None` = one fresh
     /// hub per phase (the standalone shape).
     pub(crate) hub: Option<Arc<Hub>>,
@@ -465,6 +553,31 @@ impl<'a> SelectionJob<'a> {
     /// (paths or loaded [`WeightFile`]s), `dataset` is the data owner's
     /// candidate corpus.
     pub fn builder<M, I>(models: I, dataset: &'a Dataset) -> SelectionJobBuilder<'a>
+    where
+        I: IntoIterator<Item = M>,
+        M: Into<ModelSource>,
+    {
+        SelectionJob::builder_on(models, DataSource::Borrowed(dataset))
+    }
+
+    /// Like [`builder`](Self::builder), but over a reference-counted
+    /// dataset, producing a `'static` job — the form a
+    /// [`SelectionService`](super::service::SelectionService) queue can
+    /// own beyond the caller's stack frame
+    /// ([`submit`](super::service::SelectionService::submit) requires
+    /// `SelectionJob<'static>`).
+    pub fn builder_shared<M, I>(
+        models: I,
+        dataset: Arc<Dataset>,
+    ) -> SelectionJobBuilder<'static>
+    where
+        I: IntoIterator<Item = M>,
+        M: Into<ModelSource>,
+    {
+        SelectionJob::builder_on(models, DataSource::Shared(dataset))
+    }
+
+    fn builder_on<M, I>(models: I, dataset: DataSource<'_>) -> SelectionJobBuilder<'_>
     where
         I: IntoIterator<Item = M>,
         M: Into<ModelSource>,
@@ -482,6 +595,7 @@ impl<'a> SelectionJob<'a> {
             job_tag: 0,
             observer: None,
             calibration: None,
+            cancel: None,
         }
     }
 
@@ -506,6 +620,41 @@ impl<'a> SelectionJob<'a> {
         self.schedule.as_ref()
     }
 
+    /// True when the job distills its proxies in-process before MPC.
+    pub(crate) fn has_calibration(&self) -> bool {
+        self.calibration.is_some()
+    }
+
+    /// The job's cancel token, installing a fresh one if absent — the
+    /// service calls this at submit time so the returned `JobHandle` can
+    /// cancel a job whose builder never attached a token.
+    pub(crate) fn ensure_cancel_token(&mut self) -> CancelToken {
+        if let Some(tok) = &self.cancel {
+            return tok.clone();
+        }
+        let tok = CancelToken::new();
+        self.cancel = Some(tok.clone());
+        tok
+    }
+
+    /// Layer `extra` on top of the job's own observer (both keep firing)
+    /// — how the service attaches its status tracker and event channel
+    /// without displacing a caller-supplied observer.
+    pub(crate) fn chain_observer(&mut self, extra: Arc<dyn JobObserver>) {
+        self.observer = Some(match self.observer.take() {
+            Some(prev) => Arc::new(FanoutObserver(vec![prev, extra])),
+            None => extra,
+        });
+    }
+
+    /// Err(rooted in [`Cancelled`]) once the job's token has tripped.
+    fn check_cancel(&self) -> Result<()> {
+        match &self.cancel {
+            Some(tok) if tok.is_cancelled() => Err(Cancelled.into()),
+            _ => Ok(()),
+        }
+    }
+
     /// The internal execution carrier for the selector machinery.
     fn exec_opts(&self) -> SelectionOptions {
         SelectionOptions {
@@ -528,7 +677,10 @@ impl<'a> SelectionJob<'a> {
         self.hub.clone().unwrap_or_else(Hub::new)
     }
 
-    fn emit(&self, event: &JobEvent<'_>) {
+    /// Emit an event to the job's observer chain (no-op when unobserved).
+    /// `pub(crate)` so the service can emit the terminal
+    /// [`JobEvent::Cancelled`] after a worker resolves the job.
+    pub(crate) fn emit(&self, event: &JobEvent<'_>) {
         if let Some(o) = &self.observer {
             o.on_event(event);
         }
@@ -546,7 +698,7 @@ impl<'a> SelectionJob<'a> {
         let schedule = self.schedule.as_ref().expect("validated at build time");
         let distilled = proxygen::distill_proxies(
             &target,
-            self.dataset,
+            self.dataset.get(),
             &cal.bootstrap,
             &schedule.proxies,
             &cal.config,
@@ -587,17 +739,44 @@ impl<'a> SelectionJob<'a> {
     /// phases on the emitted weights.  Distillation is deterministic in
     /// the calibration seed, so every runtime shape sees identical
     /// proxies and the byte-identity guarantee carries over unchanged.
+    ///
+    /// A job built with a [`cancel_token`](SelectionJobBuilder::cancel_token)
+    /// checks it cooperatively — before calibration, at every candidate
+    /// batch boundary, at each QuickSelect entry, and between phases —
+    /// and resolves to an error rooted in [`Cancelled`], with any
+    /// prefetched overlap setup joined before returning.  A cancelled run
+    /// emits the terminal [`JobEvent::Cancelled`] to the observer chain
+    /// (its last event) before returning.  Granularity caveat: in-process
+    /// calibration is currently ONE unit — a cancel landing while a
+    /// calibrated job distills its proxies takes effect only once
+    /// distillation completes (checkpoints inside the Adam loops are a
+    /// recorded follow-up, see ROADMAP).
     pub fn run(&self) -> Result<SelectionOutcome> {
+        let result = self.run_inner();
+        if let Err(e) = &result {
+            if e.is::<Cancelled>() {
+                self.emit(&JobEvent::Cancelled);
+            }
+        }
+        result
+    }
+
+    fn run_inner(&self) -> Result<SelectionOutcome> {
+        let ds = self.dataset.get();
+        self.check_cancel()?;
         let models = self.calibrated_models()?;
         let opts = self.exec_opts();
         let n_phases = self.counts.len();
         let overlap = self.profile.overlap;
         let mut candidates = self.candidates.clone();
         let mut cand_tokens: Arc<Vec<u32>> =
-            Arc::new(selector::gather_tokens(self.dataset, &candidates));
+            Arc::new(selector::gather_tokens(ds, &candidates));
         let mut phases: Vec<PhaseOutcome> = Vec::with_capacity(n_phases);
-        let mut prefetch: Option<thread::JoinHandle<Result<PhaseSession>>> = None;
+        let mut prefetch = Prefetch(None);
         for (i, &keep) in self.counts.iter().enumerate() {
+            // phase-boundary checkpoint; the Prefetch guard joins any
+            // pending setup before an early return propagates
+            self.check_cancel()?;
             let n = candidates.len();
             ensure!(keep <= n, "phase {i}: keep {keep} exceeds {n} candidates");
             self.emit(&JobEvent::PhaseStarted { phase: i, n_candidates: n, keep });
@@ -608,15 +787,16 @@ impl<'a> SelectionJob<'a> {
             });
             let n_batches = n.div_ceil(opts.batch);
             let eff_lanes = opts.lanes.clamp(1, n_batches.max(1));
+            let gate = CancelGate::new(self.cancel.clone(), n_batches);
             let (body, streamed) = if !overlap && eff_lanes <= 1 {
                 // barrier + serial: the reference oracle, setup inline
                 let weights = models[i].load(i)?;
                 let cfg = weights.config()?;
                 ensure!(
-                    cfg.seq_len == self.dataset.seq_len,
+                    cfg.seq_len == ds.seq_len,
                     "phase {i}: model seq_len {} != dataset seq_len {}",
                     cfg.seq_len,
-                    self.dataset.seq_len
+                    ds.seq_len
                 );
                 let body = selector::run_phase_serial(
                     weights,
@@ -627,6 +807,7 @@ impl<'a> SelectionJob<'a> {
                     &opts,
                     i,
                     obs,
+                    gate,
                 )?;
                 (body, None)
             } else {
@@ -657,10 +838,10 @@ impl<'a> SelectionJob<'a> {
                     0.0
                 };
                 ensure!(
-                    session.seq_len() == self.dataset.seq_len,
+                    session.seq_len() == ds.seq_len,
                     "phase {i}: model seq_len {} != dataset seq_len {}",
                     session.seq_len(),
-                    self.dataset.seq_len
+                    ds.seq_len
                 );
                 // kick off phase i+1's setup NOW — it overlaps this drain
                 if overlap && i + 1 < n_phases {
@@ -669,7 +850,7 @@ impl<'a> SelectionJob<'a> {
                     let (approx, seed, job) =
                         (opts.approx, opts.dealer_seed, opts.job_tag);
                     let next = i + 1;
-                    prefetch = Some(thread::spawn(move || {
+                    prefetch.0 = Some(thread::spawn(move || {
                         let weights = src.load(next)?;
                         selector::setup_phase_session_on(
                             hub, weights, approx, seed, next, job,
@@ -682,7 +863,6 @@ impl<'a> SelectionJob<'a> {
                     let (tx, rx) = mpsc::channel::<usize>();
                     let (drain, rows) = thread::scope(|s| {
                         let cands: &[usize] = &candidates;
-                        let ds = self.dataset;
                         let gather = s.spawn(move || {
                             let mut rows: Vec<(usize, Vec<u32>)> =
                                 Vec::with_capacity(keep);
@@ -700,6 +880,7 @@ impl<'a> SelectionJob<'a> {
                             &opts,
                             Some(tx),
                             obs,
+                            gate,
                         );
                         let rows =
                             gather.join().expect("survivor gather thread panicked");
@@ -715,16 +896,13 @@ impl<'a> SelectionJob<'a> {
                         &opts,
                         None,
                         obs,
+                        gate,
                     );
                     (drain, None)
                 };
-                let drain = match drain {
-                    Ok(d) => d,
-                    Err(e) => {
-                        join_pending(&mut prefetch);
-                        return Err(e);
-                    }
-                };
+                // on Err the Prefetch guard joins any pending setup, so
+                // no detached thread outlives the run
+                let drain = drain?;
                 let body = selector::assemble_session_body(
                     session,
                     drain,
@@ -746,7 +924,7 @@ impl<'a> SelectionJob<'a> {
                         let mut by_idx: HashMap<usize, Vec<u32>> =
                             rows.into_iter().collect();
                         let mut toks =
-                            Vec::with_capacity(candidates.len() * self.dataset.seq_len);
+                            Vec::with_capacity(candidates.len() * ds.seq_len);
                         for &di in &candidates {
                             let row = by_idx
                                 .remove(&di)
@@ -756,7 +934,7 @@ impl<'a> SelectionJob<'a> {
                         debug_assert!(by_idx.is_empty(), "stray streamed rows");
                         Arc::new(toks)
                     }
-                    None => Arc::new(selector::gather_tokens(self.dataset, &candidates)),
+                    None => Arc::new(selector::gather_tokens(ds, &candidates)),
                 };
             }
             phases.push(outcome);
@@ -765,12 +943,25 @@ impl<'a> SelectionJob<'a> {
     }
 }
 
-/// Join a still-pending prefetched session setup before propagating an
-/// error, so a failed drain cannot leave a detached setup thread running
-/// MPC against a (possibly service-shared) hub after `run()` returns.
-fn join_pending(prefetch: &mut Option<thread::JoinHandle<Result<PhaseSession>>>) {
-    if let Some(h) = prefetch.take() {
-        let _ = h.join();
+/// Holder for the overlapped scheduler's in-flight phase-setup thread.
+/// Joining on drop guarantees no setup thread outlives `run()` — it
+/// keeps running MPC against a (possibly service-shared) hub otherwise —
+/// on EVERY exit path: normal completion, error propagation, and panic
+/// unwinding (live under the service's per-job `catch_unwind`
+/// containment, where a panicking observer aborts the drain mid-phase).
+struct Prefetch(Option<thread::JoinHandle<Result<PhaseSession>>>);
+
+impl Prefetch {
+    fn take(&mut self) -> Option<thread::JoinHandle<Result<PhaseSession>>> {
+        self.0.take()
+    }
+}
+
+impl Drop for Prefetch {
+    fn drop(&mut self) {
+        if let Some(pending) = self.0.take() {
+            let _ = pending.join();
+        }
     }
 }
 

@@ -28,10 +28,15 @@
 //!   serial / pipelined / overlapped runtimes (all byte-identical).
 //! * [`observe`] — typed progress events ([`JobEvent`]) delivered through
 //!   a [`JobObserver`] while a job runs: phase boundaries, per-batch
-//!   metered traffic, and survivors the moment QuickSelect confirms them.
-//! * [`service`] — [`SelectionService`]: a worker pool + shared dealer hub
-//!   running many jobs concurrently, each byte-identical to running alone
-//!   (per-job `(job, phase, batch)` randomness namespacing).
+//!   metered traffic, and survivors the moment QuickSelect confirms them;
+//!   [`ChannelObserver`] turns the stream into owned [`JobUpdate`]s on an
+//!   `mpsc` receiver.
+//! * [`service`] — [`SelectionService`]: the async job-queue daemon — a
+//!   bounded queue with backpressure ([`SubmitError::QueueFull`]), a
+//!   persistent worker pool over a shared dealer hub, and per-job
+//!   [`JobHandle`]s (status / poll / wait / events / cooperative
+//!   [`CancelToken`] cancellation), every job byte-identical to running
+//!   alone (per-job `(job, phase, batch)` randomness namespacing).
 //! * [`selector`] — the shared phase machinery (broadcast sessions, lane
 //!   drains, the serial oracle) and the `#[deprecated]` free-function
 //!   shims of the pre-job API (`multi_phase_select`, `run_phase_mpc`, …);
@@ -54,10 +59,13 @@ pub mod testutil;
 
 pub use iosched::SchedPolicy;
 pub use job::{
-    CalibrationSpec, ModelSource, PrivacyMode, RuntimeProfile, SelectionJob,
-    SelectionJobBuilder,
+    CalibrationSpec, CancelToken, Cancelled, ModelSource, PrivacyMode,
+    RuntimeProfile, SelectionJob, SelectionJobBuilder,
 };
-pub use observe::{EventCounters, JobEvent, JobObserver, StderrProgress};
+pub use observe::{
+    ChannelObserver, EventCounters, FanoutObserver, JobEvent, JobObserver,
+    JobUpdate, StderrProgress,
+};
 pub use phase::{PhaseSchedule, ProxySpec};
 #[allow(deprecated)]
 pub use selector::{
@@ -65,4 +73,4 @@ pub use selector::{
     run_phase_mpc_at,
 };
 pub use selector::{random_select, PhaseOutcome, SelectionOptions, SelectionOutcome};
-pub use service::SelectionService;
+pub use service::{JobHandle, JobStatus, SelectionService, SubmitError};

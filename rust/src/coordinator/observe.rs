@@ -18,7 +18,7 @@
 //! [`SurvivorSink`]: super::quickselect::SurvivorSink
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::proxygen::ProxyFitReport;
 
@@ -45,6 +45,72 @@ pub enum JobEvent<'a> {
     /// Phase `phase` is done; the full outcome (survivors, meters, setup
     /// vs drain attribution) is borrowed for the duration of the call.
     PhaseFinished { phase: usize, outcome: &'a PhaseOutcome },
+    /// The job observed its [`CancelToken`](super::job::CancelToken) and
+    /// stopped at the next cooperative checkpoint (a batch boundary, the
+    /// QuickSelect stage, or a phase boundary).  Terminal: no further
+    /// events follow, and the job resolves to
+    /// [`Cancelled`](super::job::Cancelled).
+    Cancelled,
+}
+
+/// Owned snapshot of a [`JobEvent`] — what a channel can carry across
+/// threads after the borrowed event's backing storage is gone.  This is
+/// the item type of the receiver returned by
+/// [`JobHandle::events`](super::service::JobHandle::events); the borrowed
+/// payloads collapse to their headline numbers.
+#[derive(Clone, Debug, PartialEq)]
+pub enum JobUpdate {
+    /// See [`JobEvent::PhaseCalibrated`]; `worst_rmse`/`boot_overlap`
+    /// summarize the borrowed fit report.
+    PhaseCalibrated { phase: usize, worst_rmse: f32, boot_overlap: f32 },
+    /// See [`JobEvent::PhaseStarted`].
+    PhaseStarted { phase: usize, n_candidates: usize, keep: usize },
+    /// See [`JobEvent::BatchCompleted`].
+    BatchCompleted { phase: usize, batch: usize, bytes: u64, rounds: u64 },
+    /// See [`JobEvent::SurvivorConfirmed`].
+    SurvivorConfirmed { phase: usize, index: usize },
+    /// See [`JobEvent::PhaseFinished`]; `bytes` is both parties' metered
+    /// traffic for the phase, `rounds` the model owner's round count.
+    PhaseFinished { phase: usize, survivors: usize, bytes: u64, rounds: u64 },
+    /// See [`JobEvent::Cancelled`].
+    Cancelled,
+}
+
+impl From<&JobEvent<'_>> for JobUpdate {
+    fn from(event: &JobEvent<'_>) -> JobUpdate {
+        match event {
+            JobEvent::PhaseCalibrated { phase, fit } => JobUpdate::PhaseCalibrated {
+                phase: *phase,
+                worst_rmse: fit.worst_rmse(),
+                boot_overlap: fit.boot_overlap,
+            },
+            JobEvent::PhaseStarted { phase, n_candidates, keep } => {
+                JobUpdate::PhaseStarted {
+                    phase: *phase,
+                    n_candidates: *n_candidates,
+                    keep: *keep,
+                }
+            }
+            JobEvent::BatchCompleted { phase, batch, bytes, rounds } => {
+                JobUpdate::BatchCompleted {
+                    phase: *phase,
+                    batch: *batch,
+                    bytes: *bytes,
+                    rounds: *rounds,
+                }
+            }
+            JobEvent::SurvivorConfirmed { phase, index } => {
+                JobUpdate::SurvivorConfirmed { phase: *phase, index: *index }
+            }
+            JobEvent::PhaseFinished { phase, outcome } => JobUpdate::PhaseFinished {
+                phase: *phase,
+                survivors: outcome.survivors.len(),
+                bytes: outcome.meter_p0.bytes + outcome.meter_p1.bytes,
+                rounds: outcome.meter_p0.rounds,
+            },
+            JobEvent::Cancelled => JobUpdate::Cancelled,
+        }
+    }
 }
 
 /// Receiver of [`JobEvent`]s.  Called from the job's party/lane threads;
@@ -71,6 +137,74 @@ impl PhaseObs {
     }
 }
 
+/// Broadcast each event to several observers, in registration order —
+/// how a [`SelectionService`](super::service::SelectionService) layers
+/// its status tracking and per-job event channel on top of whatever
+/// observer the job was built with.
+pub struct FanoutObserver(pub Vec<Arc<dyn JobObserver>>);
+
+impl JobObserver for FanoutObserver {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        for obs in &self.0 {
+            obs.on_event(event);
+        }
+    }
+}
+
+/// Channel-backed observer: converts each event to an owned [`JobUpdate`]
+/// and forwards it to an `mpsc` receiver.
+///
+/// The outgoing channel is attachable after the fact
+/// ([`subscribe`](ChannelObserver::subscribe)): an unconnected observer
+/// drops events instead of buffering them, so a job nobody listens to
+/// never accumulates updates.  A send to a dropped receiver detaches the
+/// channel — observation must never disturb (or leak from) the protocol
+/// threads emitting the events.
+pub struct ChannelObserver {
+    tx: Mutex<Option<mpsc::Sender<JobUpdate>>>,
+}
+
+impl ChannelObserver {
+    /// An observer with no receiver yet; events are dropped until
+    /// [`subscribe`](ChannelObserver::subscribe) connects one.
+    pub fn unconnected() -> Arc<ChannelObserver> {
+        Arc::new(ChannelObserver { tx: Mutex::new(None) })
+    }
+
+    /// An observer already connected to the returned receiver.
+    pub fn pair() -> (Arc<ChannelObserver>, mpsc::Receiver<JobUpdate>) {
+        let obs = ChannelObserver::unconnected();
+        let rx = obs.subscribe();
+        (obs, rx)
+    }
+
+    /// Connect (or replace) the outgoing channel and return its receiver.
+    /// Events emitted before the call are not replayed.
+    pub fn subscribe(&self) -> mpsc::Receiver<JobUpdate> {
+        let (tx, rx) = mpsc::channel();
+        *self.tx.lock().unwrap() = Some(tx);
+        rx
+    }
+
+    /// Drop the outgoing sender, terminating the receiver's (blocking)
+    /// iteration — emitted by the service when a job resolves, so
+    /// `for update in handle.events()` loops end.
+    pub fn disconnect(&self) {
+        *self.tx.lock().unwrap() = None;
+    }
+}
+
+impl JobObserver for ChannelObserver {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        let mut tx = self.tx.lock().unwrap();
+        if let Some(sender) = &*tx {
+            if sender.send(JobUpdate::from(event)).is_err() {
+                *tx = None; // receiver gone — stop converting events
+            }
+        }
+    }
+}
+
 /// Thread-safe counting observer — the test/CLI workhorse: tallies events
 /// without recording payloads.
 #[derive(Debug, Default)]
@@ -82,6 +216,7 @@ pub struct EventCounters {
     pub batch_bytes: AtomicU64,
     pub batch_rounds: AtomicU64,
     pub survivors: AtomicU64,
+    pub cancellations: AtomicU64,
 }
 
 impl EventCounters {
@@ -109,6 +244,9 @@ impl JobObserver for EventCounters {
             }
             JobEvent::PhaseFinished { .. } => {
                 self.phases_finished.fetch_add(1, Ordering::Relaxed);
+            }
+            JobEvent::Cancelled => {
+                self.cancellations.fetch_add(1, Ordering::Relaxed);
             }
         }
     }
@@ -162,6 +300,9 @@ impl JobObserver for StderrProgress {
                     outcome.meter_p0.rounds
                 );
             }
+            JobEvent::Cancelled => {
+                eprintln!("[cancelled] job stopped at a cooperative checkpoint");
+            }
         }
     }
 }
@@ -203,6 +344,7 @@ mod tests {
             setup_overlapped: false,
         };
         c.on_event(&JobEvent::PhaseFinished { phase: 0, outcome: &out });
+        c.on_event(&JobEvent::Cancelled);
         assert_eq!(c.calibrations.load(Ordering::Relaxed), 1);
         assert_eq!(c.phases_started.load(Ordering::Relaxed), 1);
         assert_eq!(c.batches.load(Ordering::Relaxed), 2);
@@ -210,5 +352,54 @@ mod tests {
         assert_eq!(c.batch_rounds.load(Ordering::Relaxed), 5);
         assert_eq!(c.survivors.load(Ordering::Relaxed), 2);
         assert_eq!(c.phases_finished.load(Ordering::Relaxed), 1);
+        assert_eq!(c.cancellations.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn channel_observer_forwards_owned_updates() {
+        let (obs, rx) = ChannelObserver::pair();
+        obs.on_event(&JobEvent::PhaseStarted { phase: 1, n_candidates: 8, keep: 2 });
+        obs.on_event(&JobEvent::BatchCompleted {
+            phase: 1,
+            batch: 0,
+            bytes: 9,
+            rounds: 4,
+        });
+        obs.on_event(&JobEvent::Cancelled);
+        assert_eq!(
+            rx.try_recv().unwrap(),
+            JobUpdate::PhaseStarted { phase: 1, n_candidates: 8, keep: 2 }
+        );
+        assert_eq!(
+            rx.try_recv().unwrap(),
+            JobUpdate::BatchCompleted { phase: 1, batch: 0, bytes: 9, rounds: 4 }
+        );
+        assert_eq!(rx.try_recv().unwrap(), JobUpdate::Cancelled);
+        // dropping the receiver detaches the channel instead of erroring
+        drop(rx);
+        obs.on_event(&JobEvent::Cancelled);
+        assert!(obs.tx.lock().unwrap().is_none(), "sender must detach");
+
+        // an unconnected observer drops events until subscribed
+        let lone = ChannelObserver::unconnected();
+        lone.on_event(&JobEvent::Cancelled);
+        let rx = lone.subscribe();
+        lone.on_event(&JobEvent::SurvivorConfirmed { phase: 0, index: 7 });
+        assert_eq!(
+            rx.try_recv().unwrap(),
+            JobUpdate::SurvivorConfirmed { phase: 0, index: 7 },
+            "pre-subscription events are not replayed"
+        );
+        assert!(rx.try_recv().is_err());
+    }
+
+    #[test]
+    fn fanout_reaches_every_observer() {
+        let a = EventCounters::new();
+        let b = EventCounters::new();
+        let fan = FanoutObserver(vec![a.clone(), b.clone()]);
+        fan.on_event(&JobEvent::SurvivorConfirmed { phase: 0, index: 1 });
+        assert_eq!(a.survivors.load(Ordering::Relaxed), 1);
+        assert_eq!(b.survivors.load(Ordering::Relaxed), 1);
     }
 }

@@ -48,6 +48,7 @@
 
 use std::ops::Range;
 use std::path::Path;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
 use std::time::Instant;
@@ -116,6 +117,88 @@ pub fn namespace_tag(job: u64, tag: u64) -> u64 {
     }
     let mut s = tag ^ job.wrapping_mul(0xD6E8_FEB8_6659_FD93);
     crate::util::rng::splitmix64(&mut s)
+}
+
+// ---------------------------------------------------------------------------
+// Cooperative cancellation gate
+// ---------------------------------------------------------------------------
+
+/// Cancellation checkpoints for one phase's protocol work, shared by both
+/// MPC parties of every lane.
+///
+/// The hard part of cancelling a two-party protocol is that BOTH parties
+/// must stop at the same point: if one party reads the token a moment
+/// later than its peer, it walks into an exchange the peer abandoned and
+/// deadlocks (or panics on a dead channel).  The gate solves this with a
+/// per-unit verdict latch: slot `b` guards candidate batch `b`, the final
+/// slot guards the QuickSelect stage, and each party calls
+/// [`checkpoint`](CancelGate::checkpoint) immediately BEFORE starting a
+/// unit.  The first party to reach a slot reads the token and latches the
+/// verdict (run / stop); the second party reuses the latched verdict, so
+/// the pair always agrees on exactly which unit — if any — the protocol
+/// stops at.  Units before the latched cut are completed normally, which
+/// is what keeps a service-shared dealer hub healthy: a cancelled job
+/// leaves no half-exchanged state behind.
+///
+/// A gate built without a token (`CancelGate::new(None, _)`) is inert:
+/// `checkpoint` is a single `Option` test, so the un-cancellable hot path
+/// pays nothing.
+pub(crate) struct CancelGate {
+    token: Option<super::job::CancelToken>,
+    /// one per candidate batch + one for QuickSelect;
+    /// 0 = undecided, 1 = run, 2 = stop — written once, via CAS
+    verdicts: Vec<AtomicU8>,
+}
+
+impl CancelGate {
+    /// A gate over `n_batches` batch slots plus the QuickSelect slot.
+    pub(crate) fn new(
+        token: Option<super::job::CancelToken>,
+        n_batches: usize,
+    ) -> Arc<CancelGate> {
+        let verdicts = match token {
+            Some(_) => (0..=n_batches).map(|_| AtomicU8::new(0)).collect(),
+            None => Vec::new(),
+        };
+        Arc::new(CancelGate { token, verdicts })
+    }
+
+    /// An inert gate for paths without cancellation (legacy shims).
+    pub(crate) fn none() -> Arc<CancelGate> {
+        CancelGate::new(None, 0)
+    }
+
+    /// The slot index guarding the QuickSelect stage.
+    pub(crate) fn qs_slot(&self) -> usize {
+        self.verdicts.len().saturating_sub(1)
+    }
+
+    /// Latch (or read) the verdict for unit `slot`; Err rooted in
+    /// [`Cancelled`](super::job::Cancelled) when the unit must not run.
+    pub(crate) fn checkpoint(&self, slot: usize) -> Result<()> {
+        let Some(token) = &self.token else { return Ok(()) };
+        let cell = &self.verdicts[slot];
+        let verdict = match cell.load(Ordering::Acquire) {
+            0 => {
+                let want: u8 = if token.is_cancelled() { 2 } else { 1 };
+                match cell.compare_exchange(
+                    0,
+                    want,
+                    Ordering::AcqRel,
+                    Ordering::Acquire,
+                ) {
+                    Ok(_) => want,
+                    Err(latched) => latched,
+                }
+            }
+            latched => latched,
+        };
+        if verdict == 2 {
+            Err(super::job::Cancelled.into())
+        } else {
+            Ok(())
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -267,6 +350,8 @@ struct LaneCfg {
     seq_len: usize,
     dm: usize,
     range: Range<usize>,
+    /// cooperative-cancellation checkpoints, one per batch slot
+    gate: Arc<CancelGate>,
 }
 
 /// A [`ChannelSink`] that additionally reports each confirmed survivor to
@@ -300,9 +385,10 @@ fn p0_eval_batches(
     model: &mut ModelMpc,
     lane: &LaneCfg,
     obs: &Option<PhaseObs>,
-) -> Vec<i64> {
+) -> Result<Vec<i64>> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
+        lane.gate.checkpoint(b)?;
         ctx.reseed_for(namespace_tag(lane.job, unit_tag(lane.phase, b)));
         let bytes0 = ctx.chan.meter.bytes;
         let rounds0 = ctx.chan.meter.rounds;
@@ -320,7 +406,7 @@ fn p0_eval_batches(
             });
         }
     }
-    ent
+    Ok(ent)
 }
 
 /// Data-owner side: embed + share each batch, collect entropy shares.
@@ -331,9 +417,10 @@ fn p1_eval_batches(
     emb_tok: &TensorF,
     emb_pos: &TensorF,
     lane: &LaneCfg,
-) -> Vec<i64> {
+) -> Result<Vec<i64>> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
+        lane.gate.checkpoint(b)?;
         ctx.reseed_for(namespace_tag(lane.job, unit_tag(lane.phase, b)));
         // assemble a batch (pad the tail by repeating example 0)
         let mut toks = Vec::with_capacity(lane.batch * lane.seq_len);
@@ -350,7 +437,7 @@ fn p1_eval_batches(
         let take = (lane.n - b * lane.batch).min(lane.batch);
         ent.extend_from_slice(&e.0.data[..take]);
     }
-    ent
+    Ok(ent)
 }
 
 // ---------------------------------------------------------------------------
@@ -530,6 +617,11 @@ pub(crate) struct DrainOut {
 /// forwards each survivor the moment it is confirmed — the overlapped
 /// driver's prefetch hook.  `obs` receives `BatchCompleted` /
 /// `SurvivorConfirmed` events live (possibly interleaved across lanes).
+/// `gate` carries the phase's cancellation checkpoints: every lane stops
+/// at its latched batch boundary and the QuickSelect stage refuses to
+/// start once the verdict is stop (the whole drain then resolves to an
+/// error rooted in `Cancelled`, with every lane thread already joined).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn run_phase_drain(
     session: &PhaseSession,
     cand_tokens: Arc<Vec<u32>>,
@@ -538,6 +630,7 @@ pub(crate) fn run_phase_drain(
     opts: &SelectionOptions,
     stream: Option<Sender<usize>>,
     obs: Option<PhaseObs>,
+    gate: Arc<CancelGate>,
 ) -> Result<DrainOut> {
     let phase = session.phase;
     let job = opts.job_tag;
@@ -547,8 +640,10 @@ pub(crate) fn run_phase_drain(
     let emb_tok = session.emb_tok.clone(); // Arc bump, not a table copy
     let emb_pos = session.emb_pos.clone();
     let t0 = Instant::now();
-    let mut lane_fns: Vec<(PartyFn<Vec<i64>>, PartyFn<Vec<i64>>)> =
-        Vec::with_capacity(lanes);
+    // a lane party yields its entropy shares, or the Cancelled error it
+    // stopped on at a latched batch boundary
+    type LaneFn = PartyFn<Result<Vec<i64>>>;
+    let mut lane_fns: Vec<(LaneFn, LaneFn)> = Vec::with_capacity(lanes);
     for lane in 0..lanes {
         let lo = lane * per;
         let hi = ((lane + 1) * per).min(n_batches);
@@ -563,16 +658,17 @@ pub(crate) fn run_phase_drain(
             seq_len: session.cfg.seq_len,
             dm: session.cfg.d_model,
             range: lo..hi,
+            gate: gate.clone(),
         };
         let lc1 = lc.clone();
         let mut m0 = session.model_p0.clone();
         let mut m1 = session.model_p1.clone();
         let (ct, et, ep) = (cand_tokens.clone(), emb_tok.clone(), emb_pos.clone());
         let obs_l = obs.clone();
-        let f0: PartyFn<Vec<i64>> = Box::new(move |ctx: &mut PartyCtx| {
+        let f0: LaneFn = Box::new(move |ctx: &mut PartyCtx| {
             p0_eval_batches(ctx, &mut m0, &lc, &obs_l)
         });
-        let f1: PartyFn<Vec<i64>> = Box::new(move |ctx: &mut PartyCtx| {
+        let f1: LaneFn = Box::new(move |ctx: &mut PartyCtx| {
             p1_eval_batches(ctx, &mut m1, &ct, &et, &ep, &lc1)
         });
         lane_fns.push((f0, f1));
@@ -585,10 +681,12 @@ pub(crate) fn run_phase_drain(
     let mut ent0: Vec<i64> = Vec::with_capacity(n);
     let mut ent1: Vec<i64> = Vec::with_capacity(n);
     for ((r0, m0), (r1, m1)) in lane_out {
+        // every lane thread is already joined; a cancelled lane simply
+        // surfaces its error here after the others wound down
         meter_p0.absorb(&m0);
         meter_p1.absorb(&m1);
-        ent0.extend(r0);
-        ent1.extend(r1);
+        ent0.extend(r0?);
+        ent1.extend(r1?);
     }
     debug_assert_eq!(ent0.len(), n);
     debug_assert_eq!(ent1.len(), n);
@@ -601,10 +699,14 @@ pub(crate) fn run_phase_drain(
     // final stage: QuickSelect over the gathered shares, fresh pair on the
     // same hub; P0 streams confirmed survivors into `stream`
     let reveal = opts.reveal_entropies;
+    let qs_slot = gate.qs_slot();
+    let gate1 = gate.clone();
+    type QsOut = (Vec<usize>, SelectStats, Option<Vec<f32>>);
     let ((qs0, qm0), (qs1, qm1)) = run_pair_metered_hub(
         session.hub.clone(),
         opts.dealer_seed,
-        move |ctx: &mut PartyCtx| {
+        move |ctx: &mut PartyCtx| -> Result<QsOut> {
+            gate.checkpoint(qs_slot)?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent0, &[n]));
             let revealed = if reveal {
@@ -619,19 +721,20 @@ pub(crate) fn run_phase_drain(
             let stats = top_k_streamed(ctx, &ent, keep, &mut sink);
             let mut idx = sink.inner.order;
             idx.sort_unstable();
-            (idx, stats, revealed)
+            Ok((idx, stats, revealed))
         },
-        move |ctx: &mut PartyCtx| {
+        move |ctx: &mut PartyCtx| -> Result<Vec<usize>> {
+            gate1.checkpoint(qs_slot)?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent1, &[n]));
             if reveal {
                 let _ = crate::mpc::proto::open(ctx, &ent);
             }
-            top_k_indices(ctx, &ent, keep).0
+            Ok(top_k_indices(ctx, &ent, keep).0)
         },
     );
-    let (idx, stats, revealed) = qs0;
-    assert_eq!(idx, qs1, "parties must agree on the selection");
+    let (idx, stats, revealed) = qs0?;
+    assert_eq!(idx, qs1?, "parties must agree on the selection");
     meter_p0.absorb(&qm0);
     meter_p1.absorb(&qm1);
     Ok(DrainOut {
@@ -714,7 +817,17 @@ pub(crate) fn run_phase_at(
     let wf = Arc::new(weights.clone());
 
     let body = if lanes <= 1 {
-        run_phase_serial(wf, cfg, cand_tokens, n, keep, opts, phase, None)?
+        run_phase_serial(
+            wf,
+            cfg,
+            cand_tokens,
+            n,
+            keep,
+            opts,
+            phase,
+            None,
+            CancelGate::none(),
+        )?
     } else {
         let session = setup_phase_session_on(
             Hub::new(),
@@ -724,7 +837,16 @@ pub(crate) fn run_phase_at(
             phase,
             opts.job_tag,
         )?;
-        let drain = run_phase_drain(&session, cand_tokens, n, keep, opts, None, None)?;
+        let drain = run_phase_drain(
+            &session,
+            cand_tokens,
+            n,
+            keep,
+            opts,
+            None,
+            None,
+            CancelGate::none(),
+        )?;
         assemble_session_body(session, drain, false, 0.0)
     };
     Ok(finish_outcome(body, candidates, opts))
@@ -826,6 +948,7 @@ pub(crate) fn run_phase_serial(
     opts: &SelectionOptions,
     phase: usize,
     obs: Option<PhaseObs>,
+    gate: Arc<CancelGate>,
 ) -> Result<PhaseBody> {
     let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
     let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
@@ -839,6 +962,7 @@ pub(crate) fn run_phase_serial(
         seq_len: cfg.seq_len,
         dm: cfg.d_model,
         range: 0..n_batches,
+        gate,
     };
     let lane1 = lane.clone();
     let approx = opts.approx;
@@ -856,7 +980,8 @@ pub(crate) fn run_phase_serial(
             })?;
             let setup_bytes = ctx.chan.meter.bytes - bytes0;
             let setup_wall = t0.elapsed().as_secs_f64();
-            let ent_shares = p0_eval_batches(ctx, &mut model, &lane, &obs);
+            let ent_shares = p0_eval_batches(ctx, &mut model, &lane, &obs)?;
+            lane.gate.checkpoint(lane.gate.qs_slot())?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
@@ -885,7 +1010,8 @@ pub(crate) fn run_phase_serial(
                 &model.1,
                 &model.2,
                 &lane1,
-            );
+            )?;
+            lane1.gate.checkpoint(lane1.gate.qs_slot())?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));

@@ -1,119 +1,700 @@
-//! `SelectionService` — run many independent [`SelectionJob`]s
-//! concurrently over one shared preprocessing hub.
+//! `SelectionService` — a long-lived async job-queue daemon running many
+//! independent [`SelectionJob`]s over one shared preprocessing hub.
 //!
-//! The ROADMAP north star is a production service handling many
-//! concurrent selections.  The service owns:
+//! The ROADMAP north star is a production service absorbing heavy
+//! concurrent selection traffic.  This module is its front end:
 //!
-//!  * a shared dealer [`Hub`]: the opportunistic C = A·B product cache is
-//!    value-transparent, and per-job randomness namespacing
-//!    ([`namespace_tag`](super::selector::namespace_tag), keyed by each
-//!    job's `job_tag`) keeps every job's streams AND parked-product keys
-//!    disjoint, so jobs can share preprocessing compute without sharing a
-//!    single bit of protocol state;
-//!  * a worker pool: `workers` OS threads claim queued jobs in submission
-//!    order and run each to completion (every job internally spawns its
-//!    own party/lane threads, so `workers` bounds the number of
-//!    *selections* in flight, not the number of threads).
+//!  * [`submit`](SelectionService::submit) /
+//!    [`try_submit`](SelectionService::try_submit) enqueue a
+//!    `SelectionJob<'static>` onto a BOUNDED queue — `try_submit` returns
+//!    [`SubmitError::QueueFull`] for backpressure, `submit` blocks until a
+//!    slot frees — and hand back a typed [`JobHandle`];
+//!  * a persistent worker pool (`workers` OS threads, alive for the
+//!    service's lifetime) claims queued jobs in submission order and runs
+//!    each to completion.  Every job internally spawns its own party/lane
+//!    threads, so `workers` bounds the number of *selections* in flight,
+//!    not the number of threads.  A panicking job is contained
+//!    (`catch_unwind`): its handle resolves `Err` and the pool keeps
+//!    serving;
+//!  * the [`JobHandle`] exposes [`status`](JobHandle::status) (a
+//!    [`JobStatus`] snapshot: Queued / Calibrating / Running{phase,
+//!    batches} / Done / Failed / Cancelled), [`poll`](JobHandle::poll),
+//!    [`wait`](JobHandle::wait), [`events`](JobHandle::events) (a
+//!    per-job [`JobUpdate`] receiver layered on the job's
+//!    [`JobObserver`] chain) and [`cancel`](JobHandle::cancel)
+//!    (cooperative, via the job's
+//!    [`CancelToken`](super::job::CancelToken));
+//!  * [`drain`](SelectionService::drain) blocks until the service is
+//!    completely idle (no queued or running job);
+//!    [`shutdown`](SelectionService::shutdown) (also performed on drop)
+//!    stops intake, resolves still-queued jobs as cancelled, finishes
+//!    in-flight jobs and joins the pool.
 //!
-//! The contract, enforced by tests/service_equiv.rs: a job's outcome —
-//! survivors, opened scores, entropy shares, per-job meter bytes and
-//! rounds — is byte-identical to running that same job alone.
+//! The byte-identity contract is unchanged from the batch-era service and
+//! enforced by tests/service_equiv.rs: a job's outcome — survivors,
+//! opened scores, entropy shares, per-job meter bytes and rounds — is
+//! identical to running that same job alone, for any workers × queue-depth
+//! shape, before and after cancellations.
 //!
-//! Jobs that share a `(dealer_seed, job_tag)` pair would collide in the
-//! shared hub's key space (identical streams, potentially different
-//! models), so only the FIRST job ever submitted with a given pair uses
-//! the shared hub; repeats — in the same `run_all` call or any later one
-//! (hub parking is best-effort, so a run can leave unclaimed products
-//! behind) — are given private hubs.  A safe fallback, not an error,
-//! because hub choice is invisible in the output.
+//! ## Hub sharing and the grant set
+//!
+//! The shared dealer [`Hub`]'s C = A·B product cache is value-transparent,
+//! and per-job randomness namespacing
+//! ([`namespace_tag`](super::selector::namespace_tag), keyed by each job's
+//! `job_tag`) keeps every job's streams AND parked-product keys disjoint.
+//! Jobs REPEATING a `(dealer_seed, job_tag)` pair would collide in the
+//! hub's key space, so only the first job with a given pair is granted the
+//! shared hub; repeats run on private hubs (a safe fallback, not an error
+//! — hub choice is invisible in the output).  Unlike the batch-era
+//! service, the grant set cannot grow without bound in a daemon: it is
+//! capped at [`SEEN_CAP`] pairs (overflow falls back to private hubs), and
+//! whenever the service goes idle — no queued or running job — the hub and
+//! the grant set guarding it are garbage-collected together, so leftover
+//! parked products and their bookkeeping are reclaimed.
+//!
+//! ```no_run
+//! use selectformer::coordinator::{JobStatus, SelectionJob, SelectionService};
+//! # fn main() -> anyhow::Result<()> {
+//! # let dataset = std::sync::Arc::new(selectformer::data::synth(&Default::default(), 64, false, 1));
+//! # let proxy = std::path::PathBuf::from("p.sfw");
+//! let service = SelectionService::with_queue(4, 8); // 4 workers, 8 queued
+//! let job = SelectionJob::builder_shared([proxy], dataset)
+//!     .keep_counts(vec![16])
+//!     .build()?;
+//! let handle = service.submit(job).map_err(anyhow::Error::new)?;
+//! handle.cancel(); // cooperative — or: handle.wait()?
+//! assert!(matches!(
+//!     handle.status(),
+//!     JobStatus::Queued | JobStatus::Running { .. } | JobStatus::Cancelled
+//! ));
+//! # Ok(()) }
+//! ```
 
-use std::collections::HashSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::collections::{HashSet, VecDeque};
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::mpc::dealer::Hub;
 
-use super::job::SelectionJob;
+use super::job::{CancelToken, Cancelled, SelectionJob};
+use super::observe::{
+    ChannelObserver, FanoutObserver, JobEvent, JobObserver, JobUpdate,
+};
 use super::selector::SelectionOutcome;
 
-pub struct SelectionService {
+/// Ceiling on retained `(dealer_seed, job_tag)` shared-hub grants; pairs
+/// beyond it run on private hubs until the next idle garbage collection.
+pub const SEEN_CAP: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Job lifecycle
+// ---------------------------------------------------------------------------
+
+/// Where a submitted job is in its lifecycle (snapshot via
+/// [`JobHandle::status`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobStatus {
+    /// In the bounded queue, not yet claimed by a worker.
+    Queued,
+    /// Claimed; distilling per-phase proxies in-process before any MPC
+    /// (only jobs built with
+    /// [`calibrate`](super::job::SelectionJobBuilder::calibrate)).
+    Calibrating,
+    /// Claimed; MPC phase `phase` is running and `batches` of its
+    /// candidate batches have completed so far.
+    Running { phase: usize, batches: usize },
+    /// Finished; the outcome is (or was) available via `poll`/`wait`.
+    Done,
+    /// Finished with an error (including a contained per-job panic).
+    Failed,
+    /// Stopped at a cooperative checkpoint — or resolved unstarted —
+    /// after [`JobHandle::cancel`] / a tripped
+    /// [`CancelToken`](super::job::CancelToken).
+    Cancelled,
+}
+
+impl JobStatus {
+    /// Queued / Calibrating / Running — the job still owes a result.
+    pub fn is_pending(self) -> bool {
+        matches!(
+            self,
+            JobStatus::Queued | JobStatus::Calibrating | JobStatus::Running { .. }
+        )
+    }
+}
+
+/// Why [`submit`](SelectionService::submit) /
+/// [`try_submit`](SelectionService::try_submit) refused a job.  The job
+/// rides back inside the error (boxed) so the caller can retry it —
+/// backpressure is advisory, never lossy.
+pub enum SubmitError {
+    /// The bounded queue is at capacity (only `try_submit` returns this;
+    /// `submit` blocks instead).
+    QueueFull(Box<SelectionJob<'static>>),
+    /// [`shutdown`](SelectionService::shutdown) has begun; the service no
+    /// longer accepts work.
+    ShuttingDown(Box<SelectionJob<'static>>),
+}
+
+impl SubmitError {
+    /// Recover the job for a retry (or for submission elsewhere).
+    pub fn into_job(self) -> SelectionJob<'static> {
+        match self {
+            SubmitError::QueueFull(job) | SubmitError::ShuttingDown(job) => *job,
+        }
+    }
+}
+
+impl fmt::Debug for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // manual impl: the returned SelectionJob has no (useful) Debug
+        match self {
+            SubmitError::QueueFull(_) => f.write_str("SubmitError::QueueFull(..)"),
+            SubmitError::ShuttingDown(_) => {
+                f.write_str("SubmitError::ShuttingDown(..)")
+            }
+        }
+    }
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::QueueFull(_) => {
+                f.write_str("selection queue full (backpressure) — retry later")
+            }
+            SubmitError::ShuttingDown(_) => {
+                f.write_str("selection service is shutting down")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// State a handle and the worker that runs its job agree through.
+struct JobShared {
+    id: u64,
+    cancel: CancelToken,
+    events: Arc<ChannelObserver>,
+    cell: Mutex<JobCell>,
+    done: Condvar,
+}
+
+struct JobCell {
+    status: JobStatus,
+    /// `Some` once terminal; taken (once) by `poll`/`wait`
+    result: Option<Result<SelectionOutcome>>,
+}
+
+impl JobShared {
+    /// Store the terminal result, set the matching status, close the
+    /// event channel (ending `events()` iterations), wake waiters.
+    fn finish(&self, result: Result<SelectionOutcome>) {
+        let status = match &result {
+            Ok(_) => JobStatus::Done,
+            Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
+            Err(_) => JobStatus::Failed,
+        };
+        let mut cell = self.cell.lock().unwrap();
+        cell.status = status;
+        cell.result = Some(result);
+        // under the cell lock: serializes against JobHandle::events(), so
+        // a subscriber either sees a live channel that WILL be closed
+        // here, or observes the terminal status and gets a closed one
+        self.events.disconnect();
+        drop(cell);
+        self.done.notify_all();
+    }
+}
+
+/// Internal observer keeping a handle's [`JobStatus`] current while the
+/// job's phases run.
+struct StatusTracker(Arc<JobShared>);
+
+impl JobObserver for StatusTracker {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        let mut cell = self.0.cell.lock().unwrap();
+        match event {
+            JobEvent::PhaseStarted { phase, .. } => {
+                cell.status = JobStatus::Running { phase: *phase, batches: 0 };
+            }
+            JobEvent::BatchCompleted { phase, .. } => {
+                cell.status = match cell.status {
+                    JobStatus::Running { phase: p, batches } if p == *phase => {
+                        JobStatus::Running { phase: p, batches: batches + 1 }
+                    }
+                    // batches can outrun PhaseStarted across lane threads
+                    _ => JobStatus::Running { phase: *phase, batches: 1 },
+                };
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Typed handle to one submitted job — the caller's side of the queue.
+///
+/// Obtained from [`SelectionService::submit`] / `try_submit`; remains
+/// valid after the service shuts down (any outstanding job resolves, so
+/// `wait` never dangles).
+pub struct JobHandle {
+    shared: Arc<JobShared>,
+    /// backlink for cancel-while-queued: lets `cancel()` pull the job out
+    /// of the queue immediately instead of waiting for a worker claim
+    service: std::sync::Weak<Inner>,
+}
+
+impl JobHandle {
+    /// Service-assigned id, unique per service (also the submission
+    /// order: lower ids were submitted earlier).
+    pub fn id(&self) -> u64 {
+        self.shared.id
+    }
+
+    /// A point-in-time [`JobStatus`] snapshot (non-blocking).
+    pub fn status(&self) -> JobStatus {
+        self.shared.cell.lock().unwrap().status
+    }
+
+    /// Request cooperative cancellation.  A still-QUEUED job is pulled
+    /// out of the queue and resolved immediately (freeing its bounded
+    /// queue slot for waiting submitters); a running job stops at its
+    /// next checkpoint (batch boundary, QuickSelect entry, phase
+    /// boundary).  Returns immediately; observe the effect via
+    /// `status`/`wait`.  A job that already finished is unaffected.
+    pub fn cancel(&self) {
+        self.shared.cancel.cancel();
+        // fast path: if the job is still in the queue, resolve it NOW —
+        // it will never run, so it must not hold a slot (or make wait()
+        // pend on an unrelated in-flight job)
+        let Some(inner) = self.service.upgrade() else { return };
+        let removed = {
+            let mut state = inner.state.lock().unwrap();
+            let pos = state
+                .queue
+                .iter()
+                .position(|(_, shared)| Arc::ptr_eq(shared, &self.shared));
+            let removed = pos.and_then(|p| state.queue.remove(p));
+            if removed.is_some() {
+                // count the job as momentarily ACTIVE while we resolve it
+                // below: the idle edge (drain() wakeups, hub GC) must not
+                // fire — from this thread or an independently finishing
+                // worker — while the handle is still pending
+                state.active += 1;
+            }
+            removed
+        };
+        if let Some((job, shared)) = removed {
+            // resolve outside the state lock — finish() takes per-job
+            // locks and the Cancelled event runs observer code
+            emit_cancelled_contained(&job);
+            shared.finish(Err(Cancelled.into()));
+            let mut state = inner.state.lock().unwrap();
+            state.active -= 1;
+            inner.space.notify_one();
+            gc_if_idle(&mut state, &inner);
+        }
+    }
+
+    /// Non-blocking result fetch: `None` while the job is still pending,
+    /// `Some(outcome)` once it resolved.  The result is handed out once —
+    /// after a `Some` (or a successful [`wait`](JobHandle::wait)), later
+    /// calls return `None` and [`status`](JobHandle::status) carries the
+    /// terminal state.
+    pub fn poll(&self) -> Option<Result<SelectionOutcome>> {
+        let mut cell = self.shared.cell.lock().unwrap();
+        if cell.status.is_pending() {
+            return None;
+        }
+        cell.result.take()
+    }
+
+    /// Block until the job resolves and return its outcome: the selection
+    /// on success, the job's error on failure (rooted in
+    /// [`Cancelled`](super::job::Cancelled) for a cancelled job).  The
+    /// result is handed out once; a second `wait` (or a `wait` after a
+    /// successful [`poll`](JobHandle::poll)) reports it already claimed.
+    pub fn wait(&self) -> Result<SelectionOutcome> {
+        let mut cell = self.shared.cell.lock().unwrap();
+        while cell.status.is_pending() {
+            cell = self.shared.done.wait(cell).unwrap();
+        }
+        match cell.result.take() {
+            Some(result) => result,
+            None => Err(anyhow!(
+                "job {}: result already claimed by an earlier wait/poll",
+                self.shared.id
+            )),
+        }
+    }
+
+    /// Live progress feed: a receiver of owned [`JobUpdate`]s converted
+    /// from the job's [`JobEvent`] stream (ending with
+    /// [`JobUpdate::Cancelled`] for a cancelled job).  The channel closes
+    /// when the job resolves, so blocking iteration terminates.  Events
+    /// emitted before the call are not replayed — subscribe while the job
+    /// is still queued to see everything; drop the receiver to
+    /// unsubscribe.  Single-subscriber: each call REPLACES the previous
+    /// subscription, closing the earlier receiver mid-stream — fan out
+    /// from one receiver if several components need the feed.
+    pub fn events(&self) -> mpsc::Receiver<JobUpdate> {
+        let cell = self.shared.cell.lock().unwrap();
+        if cell.status.is_pending() {
+            // under the cell lock: JobShared::finish cannot slip between
+            // the status check and the subscription
+            self.shared.events.subscribe()
+        } else {
+            // already terminal: a pre-closed channel, so iteration ends
+            let (_tx, rx) = mpsc::channel();
+            rx
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The service
+// ---------------------------------------------------------------------------
+
+struct State {
+    queue: VecDeque<(SelectionJob<'static>, Arc<JobShared>)>,
+    /// jobs claimed by a worker and not yet resolved
+    active: usize,
+    shutdown: bool,
+    next_id: u64,
+    /// the current shared preprocessing hub (swapped at idle GC)
     hub: Arc<Hub>,
-    workers: usize,
-    /// every `(dealer_seed, job_tag)` that has ever been granted the
-    /// shared hub — lives as long as the hub it guards
-    seen: Mutex<HashSet<(u64, u64)>>,
+    /// `(dealer_seed, job_tag)` pairs granted the CURRENT hub — lives
+    /// exactly as long as the hub it guards
+    seen: HashSet<(u64, u64)>,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    /// workers park here waiting for queued jobs
+    work: Condvar,
+    /// blocked `submit` callers park here waiting for queue space
+    space: Condvar,
+    /// `drain` callers park here waiting for the all-idle edge
+    idle: Condvar,
+    queue_cap: usize,
+    n_workers: usize,
+}
+
+/// The job-queue selection daemon (see the module docs for the model).
+pub struct SelectionService {
+    inner: Arc<Inner>,
+    workers: Vec<thread::JoinHandle<()>>,
 }
 
 impl SelectionService {
-    /// A service running at most `workers` jobs concurrently (min 1).
+    /// A service running at most `workers` jobs concurrently (min 1),
+    /// with a default queue depth of 2×`workers`.
     pub fn new(workers: usize) -> SelectionService {
-        SelectionService {
-            hub: Hub::new(),
-            workers: workers.max(1),
-            seen: Mutex::new(HashSet::new()),
-        }
+        let workers = workers.max(1);
+        SelectionService::with_queue(workers, 2 * workers)
+    }
+
+    /// A service with an explicit bounded-queue depth (min 1).  The depth
+    /// counts jobs WAITING for a worker; claimed jobs free their slot, so
+    /// up to `workers + queue_cap` jobs can be in the system at once.
+    pub fn with_queue(workers: usize, queue_cap: usize) -> SelectionService {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                queue: VecDeque::new(),
+                active: 0,
+                shutdown: false,
+                next_id: 0,
+                hub: Hub::new(),
+                seen: HashSet::new(),
+            }),
+            work: Condvar::new(),
+            space: Condvar::new(),
+            idle: Condvar::new(),
+            queue_cap: queue_cap.max(1),
+            n_workers: workers.max(1),
+        });
+        let workers = (0..inner.n_workers)
+            .map(|w| {
+                let inner = inner.clone();
+                thread::Builder::new()
+                    .name(format!("sf-worker{w}"))
+                    .spawn(move || worker_loop(&inner))
+                    .expect("spawn selection worker")
+            })
+            .collect();
+        SelectionService { inner, workers }
     }
 
     pub fn workers(&self) -> usize {
-        self.workers
+        self.inner.n_workers
     }
 
-    /// The service's shared preprocessing hub.
+    pub fn queue_capacity(&self) -> usize {
+        self.inner.queue_cap
+    }
+
+    /// The service's CURRENT shared preprocessing hub (idle garbage
+    /// collection swaps in a fresh one).
     pub fn hub(&self) -> Arc<Hub> {
-        self.hub.clone()
+        self.inner.state.lock().unwrap().hub.clone()
     }
 
-    /// Run every job to completion over the worker pool and return their
-    /// results in submission order.  Jobs are independent: one job's
-    /// failure (e.g. a missing weight file) does not affect the others.
-    pub fn run_all<'a>(
+    /// Enqueue a job, BLOCKING while the bounded queue is full; returns
+    /// the job's [`JobHandle`].  Fails only when the service is shutting
+    /// down (the job rides back in the error).
+    pub fn submit(
         &self,
-        jobs: Vec<SelectionJob<'a>>,
-    ) -> Vec<Result<SelectionOutcome>> {
-        let n = jobs.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let mut seen = self.seen.lock().unwrap();
-        let slots: Vec<Mutex<Option<SelectionJob<'a>>>> = jobs
-            .into_iter()
-            .map(|mut job| {
-                let unique = seen.insert((job.dealer_seed(), job.job_tag()));
-                job.hub = Some(if unique { self.hub.clone() } else { Hub::new() });
-                Mutex::new(Some(job))
-            })
-            .collect();
-        drop(seen);
-        let results: Vec<Mutex<Option<Result<SelectionOutcome>>>> =
-            (0..n).map(|_| Mutex::new(None)).collect();
-        let next = AtomicUsize::new(0);
-        let workers = self.workers.min(n);
-        thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= n {
-                        break;
-                    }
-                    let job = slots[i]
-                        .lock()
-                        .unwrap()
-                        .take()
-                        .expect("job slot claimed twice");
-                    let outcome = job.run();
-                    *results[i].lock().unwrap() = Some(outcome);
-                });
+        job: SelectionJob<'static>,
+    ) -> Result<JobHandle, SubmitError> {
+        let mut state = self.inner.state.lock().unwrap();
+        loop {
+            if state.shutdown {
+                return Err(SubmitError::ShuttingDown(Box::new(job)));
             }
+            if state.queue.len() < self.inner.queue_cap {
+                return Ok(self.enqueue(state, job));
+            }
+            state = self.inner.space.wait(state).unwrap();
+        }
+    }
+
+    /// Non-blocking [`submit`](SelectionService::submit):
+    /// [`SubmitError::QueueFull`] is the backpressure signal, with the
+    /// job returned for a later retry.
+    pub fn try_submit(
+        &self,
+        job: SelectionJob<'static>,
+    ) -> Result<JobHandle, SubmitError> {
+        let state = self.inner.state.lock().unwrap();
+        if state.shutdown {
+            return Err(SubmitError::ShuttingDown(Box::new(job)));
+        }
+        if state.queue.len() >= self.inner.queue_cap {
+            return Err(SubmitError::QueueFull(Box::new(job)));
+        }
+        Ok(self.enqueue(state, job))
+    }
+
+    fn enqueue(
+        &self,
+        mut state: MutexGuard<'_, State>,
+        mut job: SelectionJob<'static>,
+    ) -> JobHandle {
+        let id = state.next_id;
+        state.next_id += 1;
+        let events = ChannelObserver::unconnected();
+        let shared = Arc::new(JobShared {
+            id,
+            cancel: job.ensure_cancel_token(),
+            events: events.clone(),
+            cell: Mutex::new(JobCell { status: JobStatus::Queued, result: None }),
+            done: Condvar::new(),
         });
-        results
+        job.chain_observer(Arc::new(FanoutObserver(vec![
+            Arc::new(StatusTracker(shared.clone())),
+            events,
+        ])));
+        state.queue.push_back((job, shared.clone()));
+        drop(state);
+        self.inner.work.notify_one();
+        JobHandle { shared, service: Arc::downgrade(&self.inner) }
+    }
+
+    /// Block until the service is completely idle — no queued and no
+    /// running job.  The service keeps accepting new work meanwhile (a
+    /// quiesce point, not a stop), which also means concurrent
+    /// submitters postpone the idle edge: to drain just your own jobs
+    /// under concurrent traffic, `wait()` on their handles instead.
+    pub fn drain(&self) {
+        let mut state = self.inner.state.lock().unwrap();
+        while state.active > 0 || !state.queue.is_empty() {
+            state = self.inner.idle.wait(state).unwrap();
+        }
+    }
+
+    /// Graceful stop: refuse new submissions, resolve still-queued jobs
+    /// as cancelled (their handles observe [`JobStatus::Cancelled`]),
+    /// let in-flight jobs finish, and join the worker pool.  Dropping the
+    /// service performs the same teardown.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        let unstarted: Vec<(SelectionJob<'static>, Arc<JobShared>)> = {
+            let mut state = self.inner.state.lock().unwrap();
+            state.shutdown = true;
+            let unstarted: Vec<_> = state.queue.drain(..).collect();
+            // keep the drained jobs counted as active until they are
+            // resolved below, so a worker finishing meanwhile cannot hit
+            // the idle edge (waking drain()ers) with handles still pending
+            state.active += unstarted.len();
+            self.inner.work.notify_all();
+            self.inner.space.notify_all();
+            unstarted
+        };
+        // resolve outside the state lock: finish() takes per-job locks and
+        // emits observer events
+        let n_unstarted = unstarted.len();
+        for (job, shared) in unstarted {
+            shared.cancel.cancel();
+            emit_cancelled_contained(&job);
+            shared.finish(Err(Cancelled.into()));
+        }
+        {
+            let mut state = self.inner.state.lock().unwrap();
+            state.active -= n_unstarted;
+            gc_if_idle(&mut state, &self.inner);
+        }
+        for worker in self.workers.drain(..) {
+            let _ = worker.join();
+        }
+    }
+}
+
+impl Drop for SelectionService {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// Hub grant at claim time: the first job with a given `(dealer_seed,
+/// job_tag)` pair since the last idle GC gets the shared hub; repeats
+/// (`insert` returns false) — and, once [`SEEN_CAP`] is reached, all new
+/// pairs — are quarantined onto private hubs.  Value-transparent either
+/// way.
+fn grant_hub(state: &mut State, job: &SelectionJob<'static>) -> Arc<Hub> {
+    let pair = (job.dealer_seed(), job.job_tag());
+    if state.seen.len() < SEEN_CAP && state.seen.insert(pair) {
+        state.hub.clone()
+    } else {
+        Hub::new()
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    loop {
+        // claim the next job (or exit once shut down and drained); a job
+        // already cancelled while queued gets NO hub grant — it will
+        // never run, so its (seed, tag) pair must stay grantable
+        let (mut job, shared, hub) = {
+            let mut state = inner.state.lock().unwrap();
+            loop {
+                if let Some((job, shared)) = state.queue.pop_front() {
+                    state.active += 1;
+                    let hub = if shared.cancel.is_cancelled() {
+                        None
+                    } else {
+                        Some(grant_hub(&mut state, &job))
+                    };
+                    inner.space.notify_one();
+                    break (job, shared, hub);
+                }
+                if state.shutdown {
+                    return;
+                }
+                state = inner.work.wait(state).unwrap();
+            }
+        };
+
+        let result = match hub {
+            None => {
+                // cancelled while queued: resolve without running.  The
+                // job never runs, so emit its terminal event here (a run
+                // job emits Cancelled itself, inside run()).
+                emit_cancelled_contained(&job);
+                Err(anyhow::Error::new(Cancelled))
+            }
+            Some(hub) => {
+                shared.cell.lock().unwrap().status = if job.has_calibration() {
+                    JobStatus::Calibrating
+                } else {
+                    JobStatus::Running { phase: 0, batches: 0 }
+                };
+                job.hub = Some(hub);
+                // per-job panic containment: a panicking job must not
+                // poison the pool — its handle resolves Err and the
+                // worker lives on
+                match catch_unwind(AssertUnwindSafe(|| job.run())) {
+                    Ok(result) => result,
+                    Err(payload) => Err(anyhow!(
+                        "selection job panicked: {}",
+                        panic_msg(&payload)
+                    )),
+                }
+            }
+        };
+        shared.finish(result);
+        drop(job); // release models/dataset before touching service state
+
+        let mut state = inner.state.lock().unwrap();
+        state.active -= 1;
+        gc_if_idle(&mut state, inner);
+    }
+}
+
+/// Emit the terminal [`JobEvent::Cancelled`] with panic containment: the
+/// observer chain is user code, and a terminal emission must never kill
+/// a worker thread, escape into `shutdown()`/`Drop` (aborting mid-unwind),
+/// or keep the job's handle from resolving.  Run jobs get the same
+/// protection from the worker's `catch_unwind` around `run()`.
+fn emit_cancelled_contained(job: &SelectionJob<'_>) {
+    let _ = catch_unwind(AssertUnwindSafe(|| job.emit(&JobEvent::Cancelled)));
+}
+
+/// Maintain the idle-edge invariant (shared by the worker loop and
+/// cancel-while-queued): with no queued or running job, nothing can
+/// reference the shared hub — swap it and the grant set guarding it out
+/// together, and wake `drain()` waiters.
+fn gc_if_idle(state: &mut State, inner: &Inner) {
+    if state.active == 0 && state.queue.is_empty() {
+        state.hub = Hub::new();
+        state.seen.clear();
+        inner.idle.notify_all();
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_msg(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Deprecated batch shim
+// ---------------------------------------------------------------------------
+
+impl SelectionService {
+    /// Run every job to completion and return their results in
+    /// submission order — the batch-era API, now a thin shim over the
+    /// queue: a `submit` loop followed by `wait`s (byte-identical to the
+    /// historical behavior; proven in tests/service_equiv.rs).
+    #[deprecated(
+        since = "0.5.0",
+        note = "use submit()/try_submit() + JobHandle::wait() — see the \
+                README queue-lifecycle example"
+    )]
+    pub fn run_all(
+        &self,
+        jobs: Vec<SelectionJob<'static>>,
+    ) -> Vec<Result<SelectionOutcome>> {
+        let handles: Vec<Result<JobHandle, SubmitError>> =
+            jobs.into_iter().map(|job| self.submit(job)).collect();
+        handles
             .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .unwrap()
-                    .expect("worker pool finished every claimed job")
+            .map(|handle| match handle {
+                Ok(handle) => handle.wait(),
+                Err(e) => Err(anyhow!("submit failed: {e}")),
             })
             .collect()
     }
@@ -122,11 +703,159 @@ impl SelectionService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::job::RuntimeProfile;
+    use crate::coordinator::testutil;
+    use crate::data::{synth, Dataset, SynthSpec};
+
+    fn tiny_setup(tag: &str) -> (std::path::PathBuf, Arc<Dataset>) {
+        let dir = std::env::temp_dir().join("sf_service_unit").join(tag);
+        let proxy = dir.join("p.sfw");
+        testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+        let ds = Arc::new(synth(
+            &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+            48,
+            false,
+            5,
+        ));
+        (proxy, ds)
+    }
+
+    fn tiny_job(
+        proxy: &std::path::Path,
+        ds: &Arc<Dataset>,
+        tag: u64,
+    ) -> SelectionJob<'static> {
+        SelectionJob::builder_shared([proxy], ds.clone())
+            .keep_counts(vec![12])
+            .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+            .job_tag(tag)
+            .build()
+            .expect("tiny job must validate")
+    }
 
     #[test]
-    fn empty_and_worker_floor() {
+    fn floors_and_accessors() {
         let svc = SelectionService::new(0);
         assert_eq!(svc.workers(), 1);
-        assert!(svc.run_all(Vec::new()).is_empty());
+        assert_eq!(svc.queue_capacity(), 2);
+        let svc = SelectionService::with_queue(3, 0);
+        assert_eq!(svc.workers(), 3);
+        assert_eq!(svc.queue_capacity(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submit_wait_poll_lifecycle() {
+        let (proxy, ds) = tiny_setup("lifecycle");
+        let svc = SelectionService::with_queue(1, 2);
+        let h = svc.submit(tiny_job(&proxy, &ds, 1)).expect("submit");
+        assert_eq!(h.id(), 0);
+        let out = h.wait().expect("job outcome");
+        assert_eq!(out.selected.len(), 12);
+        assert_eq!(h.status(), JobStatus::Done);
+        // result is handed out exactly once
+        assert!(h.poll().is_none());
+        assert!(h.wait().unwrap_err().to_string().contains("already claimed"));
+        // poll path on a second job
+        let h2 = svc.submit(tiny_job(&proxy, &ds, 2)).expect("submit");
+        svc.drain();
+        let polled = h2.poll().expect("resolved after drain").expect("ok");
+        assert_eq!(polled.selected.len(), 12);
+        svc.drain(); // idle drain returns immediately
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_cancels_queued_jobs_and_rejects_new_ones() {
+        let (proxy, ds) = tiny_setup("shutdown");
+        let svc = SelectionService::with_queue(1, 8);
+        let handles: Vec<JobHandle> = (0..4)
+            .map(|i| svc.submit(tiny_job(&proxy, &ds, i + 1)).expect("submit"))
+            .collect();
+        svc.shutdown();
+        let mut done = 0;
+        let mut cancelled = 0;
+        for h in &handles {
+            match h.wait() {
+                Ok(_) => {
+                    assert_eq!(h.status(), JobStatus::Done);
+                    done += 1;
+                }
+                Err(e) => {
+                    assert!(e.is::<Cancelled>(), "{e:#}");
+                    assert_eq!(h.status(), JobStatus::Cancelled);
+                    cancelled += 1;
+                }
+            }
+        }
+        assert_eq!(done + cancelled, 4);
+        assert!(cancelled >= 2, "1-worker pool cannot have started >2 of 4");
+        // a fresh service still rejects after shutdown begins
+        let svc = SelectionService::new(1);
+        let job = tiny_job(&proxy, &ds, 9);
+        svc.inner.state.lock().unwrap().shutdown = true;
+        let err = svc.try_submit(job).unwrap_err();
+        assert!(matches!(err, SubmitError::ShuttingDown(_)), "{err}");
+        let _ = err.into_job(); // job rides back out
+        // undo the flag so drop's shutdown path joins the workers cleanly
+        svc.inner.state.lock().unwrap().shutdown = false;
+    }
+
+    #[test]
+    fn cancel_while_queued_resolves_immediately() {
+        let (proxy, ds) = tiny_setup("queued_cancel");
+        let svc = SelectionService::with_queue(1, 4);
+        let first = svc.submit(tiny_job(&proxy, &ds, 1)).expect("submit");
+        let victim = svc.submit(tiny_job(&proxy, &ds, 2)).expect("submit");
+        victim.cancel();
+        // a queued victim resolves right away — its wait() must not pend
+        // on the unrelated in-flight job, and its slot frees immediately
+        let err = victim.wait().unwrap_err();
+        assert!(err.is::<Cancelled>(), "{err:#}");
+        assert_eq!(victim.status(), JobStatus::Cancelled);
+        assert!(first.wait().is_ok());
+        // the pool survived the cancellation
+        let after = svc.submit(tiny_job(&proxy, &ds, 3)).expect("submit");
+        assert_eq!(after.wait().expect("clean job").selected.len(), 12);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn events_channel_streams_updates() {
+        let (proxy, ds) = tiny_setup("events");
+        let svc = SelectionService::with_queue(1, 2);
+        // deterministic capture: attach our own channel observer at BUILD
+        // time, so no event can slip out before a post-submit subscription
+        let (chan, updates_rx) = ChannelObserver::pair();
+        let job = SelectionJob::builder_shared([proxy.as_path()], ds.clone())
+            .keep_counts(vec![12])
+            .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+            .job_tag(1)
+            .observer(chan)
+            .build()
+            .expect("job must validate");
+        // 48 candidates / batch 16 = 3 batches, then 12 survivors
+        let h = svc.submit(job).expect("submit");
+        // the handle-side feed must terminate when the job resolves, even
+        // if subscribed at an arbitrary point of the job's life
+        let handle_events = h.events();
+        h.wait().expect("job outcome");
+        for _ in handle_events {} // closed at resolution — must not hang
+        let updates: Vec<JobUpdate> = updates_rx.try_iter().collect();
+        let batches = updates
+            .iter()
+            .filter(|u| matches!(u, JobUpdate::BatchCompleted { .. }))
+            .count();
+        let finishes = updates
+            .iter()
+            .filter(|u| matches!(u, JobUpdate::PhaseFinished { .. }))
+            .count();
+        assert_eq!(batches, 3, "every batch reports exactly once");
+        assert_eq!(finishes, 1);
+        assert!(matches!(
+            updates.last(),
+            Some(JobUpdate::PhaseFinished { survivors: 12, .. })
+        ));
+        svc.shutdown();
     }
 }

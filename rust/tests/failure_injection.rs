@@ -1,11 +1,17 @@
 //! Failure injection: the engine must fail loudly and safely — a
-//! disconnected peer, malformed artifacts, and API misuse all surface as
-//! errors/panics rather than silent corruption.
+//! disconnected peer, malformed artifacts, API misuse, and a panicking
+//! job inside the queue service all surface as errors/panics rather than
+//! silent corruption (and a per-job panic must never poison the pool).
 
 use std::io::Write;
+use std::sync::Arc;
 
 use selectformer::coordinator::quickselect::top_k_indices;
-use selectformer::data::Dataset;
+use selectformer::coordinator::{
+    testutil, JobEvent, JobObserver, JobStatus, RuntimeProfile, SelectionJob,
+    SelectionService,
+};
+use selectformer::data::{synth, Dataset, SynthSpec};
 use selectformer::models::WeightFile;
 use selectformer::mpc::engine::run_pair;
 use selectformer::mpc::net::chan_pair;
@@ -89,6 +95,59 @@ fn corrupt_dataset_is_an_error() {
     let p2 = dir.join("badmagic.bin");
     std::fs::write(&p2, b"NOPE\x01\x00\x00\x00").unwrap();
     assert!(Dataset::load(&p2).is_err());
+}
+
+/// Observer that detonates on the first completed batch — making the
+/// job's protocol thread panic mid-selection, the worst-behaved "user
+/// code inside the service" we can simulate.
+struct PanicOnFirstBatch;
+
+impl JobObserver for PanicOnFirstBatch {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        if matches!(event, JobEvent::BatchCompleted { .. }) {
+            panic!("observer bomb: injected mid-phase panic");
+        }
+    }
+}
+
+#[test]
+fn panicking_job_is_contained_per_job() {
+    let dir = std::env::temp_dir().join("sf_failure_panic");
+    let proxy = dir.join("p.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+    let ds = Arc::new(synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        48,
+        false,
+        5,
+    ));
+    let job = |tag: u64, bomb: bool| -> SelectionJob<'static> {
+        let mut builder = SelectionJob::builder_shared([proxy.as_path()], ds.clone())
+            .keep_counts(vec![12])
+            .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+            .job_tag(tag);
+        if bomb {
+            builder = builder.observer(Arc::new(PanicOnFirstBatch));
+        }
+        builder.build().expect("job must validate")
+    };
+
+    let service = SelectionService::with_queue(1, 2);
+    let bombed = service.submit(job(1, true)).expect("submit bombed job");
+    let err = bombed.wait().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("panicked"),
+        "panic must surface as the job's error: {err:#}"
+    );
+    assert_eq!(bombed.status(), JobStatus::Failed);
+
+    // the pool kept serving: a clean job on the SAME service (and worker)
+    // still runs to completion
+    let clean = service.submit(job(2, false)).expect("submit clean job");
+    let outcome = clean.wait().expect("pool must survive a per-job panic");
+    assert_eq!(outcome.selected.len(), 12);
+    assert_eq!(clean.status(), JobStatus::Done);
+    service.shutdown();
 }
 
 #[test]

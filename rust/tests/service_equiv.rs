@@ -1,36 +1,45 @@
 //! SelectionService equivalence suite — the tentpole acceptance bar:
 //!
-//! N independent jobs run CONCURRENTLY over one shared dealer hub must be
-//! BYTE-IDENTICAL to the same jobs run serially in isolation —
+//! N independent jobs SUBMITTED to the queue daemon and running
+//! concurrently over one shared dealer hub must be BYTE-IDENTICAL to the
+//! same jobs run serially in isolation —
 //!
 //!  * identical survivors (per phase and end to end);
 //!  * identical opened entropy scores and raw entropy shares;
 //!  * identical per-job meter bytes and rounds;
 //!
-//! across a matrix of lanes × overlap, heterogeneous schedules (1- and
-//! 2-phase), distinct datasets and dealer seeds, plus a deliberately
-//! DUPLICATED `(dealer_seed, job_tag)` pair (the service must isolate its
-//! hub rather than cross-contaminate).  Also proves observers are pure:
-//! attaching one changes event counters, never an output byte.
+//! across a matrix of lanes × overlap × workers × queue-depth,
+//! heterogeneous schedules (1- and 2-phase), distinct datasets and dealer
+//! seeds, plus a deliberately DUPLICATED `(dealer_seed, job_tag)` pair
+//! (the service must isolate its hub rather than cross-contaminate).
+//! Cancellation must be inert too: a job cancelled mid-phase leaves the
+//! service able to reproduce a never-cancelled isolated run byte for
+//! byte.  Also proves observers are pure (attaching one changes event
+//! counters, never an output byte) and that the `#[deprecated]` `run_all`
+//! shim reproduces the batch-era behavior exactly.
 //!
 //! Like multiphase_equiv, the suite honors the CI matrix: `SF_EQUIV_LANES`
 //! pins the lane count (unset: sweep {1, 2}) and `SF_EQUIV_SEED` salts
-//! every job's dealer seed, so each matrix cell checks a distinct point.
+//! every job's dealer seed; `SF_QUEUE_WORKERS` / `SF_QUEUE_DEPTH` pin the
+//! service's worker count and queue depth (the service_queue stress rows),
+//! so each matrix cell checks a distinct point.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
 use selectformer::coordinator::{
-    testutil, EventCounters, PhaseSchedule, PrivacyMode, ProxySpec,
-    RuntimeProfile, SelectionJob, SelectionOutcome, SelectionService,
+    testutil, CancelToken, Cancelled, ChannelObserver, EventCounters,
+    FanoutObserver, JobEvent, JobHandle, JobObserver, JobStatus, JobUpdate,
+    PhaseSchedule, PrivacyMode, ProxySpec, RuntimeProfile, SelectionJob,
+    SelectionJobBuilder, SelectionOutcome, SelectionService, SubmitError,
 };
 use selectformer::data::{synth, Dataset, SynthSpec};
 
 struct JobSpec {
     proxies: Vec<PathBuf>,
     schedule: PhaseSchedule,
-    dataset: Dataset,
+    dataset: Arc<Dataset>,
     n_cands: usize,
     dealer_seed: u64,
     job_tag: u64,
@@ -56,6 +65,21 @@ fn lane_overlap_matrix() -> Vec<(usize, bool)> {
         }
         Err(_) => vec![(1, false), (2, false), (1, true), (2, true)],
     }
+}
+
+/// Service shape for the queue stress rows: `SF_QUEUE_WORKERS` /
+/// `SF_QUEUE_DEPTH` pin the worker count and bounded-queue depth
+/// (defaults: one worker per job, depth 2 — small enough that blocking
+/// submits actually engage the backpressure path).
+fn queue_shape(default_workers: usize) -> (usize, usize) {
+    let get = |key: &str, default: usize| -> usize {
+        std::env::var(key)
+            .ok()
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("{key} must be a count")))
+            .unwrap_or(default)
+            .max(1)
+    };
+    (get("SF_QUEUE_WORKERS", default_workers), get("SF_QUEUE_DEPTH", 2))
 }
 
 fn specs() -> Vec<JobSpec> {
@@ -84,7 +108,12 @@ fn specs() -> Vec<JobSpec> {
         vec![0.25],
     );
     let ds = |n: usize, seed: u64| {
-        synth(&SynthSpec { seq_len: 16, vocab: 64, ..Default::default() }, n, false, seed)
+        Arc::new(synth(
+            &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+            n,
+            false,
+            seed,
+        ))
     };
     vec![
         // job 0: 2-phase, default seed
@@ -118,23 +147,33 @@ fn specs() -> Vec<JobSpec> {
     ]
 }
 
-fn build_job<'a>(
-    spec: &'a JobSpec,
+/// The spec's job as a `'static` builder (shared dataset) — callers chain
+/// observers / cancel tokens before building.
+fn job_builder(
+    spec: &JobSpec,
     lanes: usize,
     overlap: bool,
-    observer: Option<Arc<EventCounters>>,
-) -> SelectionJob<'a> {
-    let mut b = SelectionJob::builder(spec.proxies.iter(), &spec.dataset)
+) -> SelectionJobBuilder<'static> {
+    SelectionJob::builder_shared(spec.proxies.iter(), spec.dataset.clone())
         .candidates((0..spec.n_cands).collect())
         .schedule(spec.schedule.clone())
         .runtime(RuntimeProfile { batch: 16, lanes, overlap, ..Default::default() })
         .dealer_seed(spec.dealer_seed)
         .job_tag(spec.job_tag)
-        .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true });
+        .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true })
+}
+
+fn build_job(
+    spec: &JobSpec,
+    lanes: usize,
+    overlap: bool,
+    observer: Option<Arc<EventCounters>>,
+) -> SelectionJob<'static> {
+    let mut builder = job_builder(spec, lanes, overlap);
     if let Some(obs) = observer {
-        b = b.observer(obs);
+        builder = builder.observer(obs);
     }
-    b.build().expect("job spec must validate")
+    builder.build().expect("job spec must validate")
 }
 
 fn assert_identical(tag: &str, alone: &SelectionOutcome, svc: &SelectionOutcome) {
@@ -164,30 +203,50 @@ fn assert_identical(tag: &str, alone: &SelectionOutcome, svc: &SelectionOutcome)
 }
 
 #[test]
-fn concurrent_jobs_are_byte_identical_to_isolated_runs() {
+fn queued_concurrent_jobs_are_byte_identical_to_isolated_runs() {
     let specs = specs();
+    let (workers, depth) = queue_shape(specs.len());
     for (lanes, overlap) in lane_overlap_matrix() {
-        let tag = format!("lanes={lanes} overlap={overlap}");
+        let tag = format!(
+            "lanes={lanes} overlap={overlap} workers={workers} depth={depth}"
+        );
         // reference: every job alone, fresh hubs, no service
         let alone: Vec<SelectionOutcome> = specs
             .iter()
             .map(|s| build_job(s, lanes, overlap, None).run().unwrap())
             .collect();
-        // the same jobs concurrently over the shared-hub worker pool
-        let service = SelectionService::new(specs.len());
-        let jobs: Vec<SelectionJob> =
-            specs.iter().map(|s| build_job(s, lanes, overlap, None)).collect();
-        let together = service.run_all(jobs);
-        assert_eq!(together.len(), specs.len());
+        // the same jobs through the bounded queue onto the worker pool
+        let service = SelectionService::with_queue(workers, depth);
+        let handles: Vec<JobHandle> = specs
+            .iter()
+            .map(|s| {
+                service
+                    .submit(build_job(s, lanes, overlap, None))
+                    .unwrap_or_else(|e| panic!("{tag}: submit: {e}"))
+            })
+            .collect();
+        let together: Vec<SelectionOutcome> = handles
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                h.wait().unwrap_or_else(|e| panic!("{tag}: job {i}: {e:#}"))
+            })
+            .collect();
+        for (i, h) in handles.iter().enumerate() {
+            assert_eq!(h.status(), JobStatus::Done, "{tag}: job {i} status");
+            assert_eq!(h.id(), i as u64, "{tag}: ids follow submission order");
+        }
         for (i, (a, t)) in alone.iter().zip(&together).enumerate() {
-            let t = t.as_ref().unwrap_or_else(|e| panic!("{tag}: job {i}: {e:#}"));
             assert_identical(&format!("{tag} job {i}"), a, t);
         }
         // jobs 0 and 2 are identical twins by construction — they must
         // agree with each other too (the duplicate-hub quarantine path)
-        assert_eq!(together[0].as_ref().unwrap().selected,
-                   together[2].as_ref().unwrap().selected,
-                   "{tag}: twin jobs must agree");
+        assert_eq!(
+            together[0].selected, together[2].selected,
+            "{tag}: twin jobs must agree"
+        );
+        service.drain(); // everything resolved: returns immediately
+        service.shutdown();
     }
 }
 
@@ -209,13 +268,130 @@ fn observers_see_events_but_never_change_output() {
     assert!(counters.batch_bytes.load(Ordering::Relaxed) > 0);
     // every confirmed survivor streams out exactly once: 48 + 24
     assert_eq!(counters.survivors.load(Ordering::Relaxed), 48 + 24);
+    assert_eq!(counters.cancellations.load(Ordering::Relaxed), 0);
 
-    // and the observed job still matches the no-observer service run
-    let service = SelectionService::new(2);
-    let jobs = vec![
-        build_job(spec, 2, true, Some(EventCounters::new())),
-        build_job(&specs[1], 1, false, None),
-    ];
-    let out = service.run_all(jobs);
-    assert_identical("service+observer", &plain, out[0].as_ref().unwrap());
+    // and an observed queued job still matches the no-observer run
+    let service = SelectionService::with_queue(2, 4);
+    let h0 = service
+        .submit(build_job(spec, 2, true, Some(EventCounters::new())))
+        .expect("submit observed job");
+    let h1 = service
+        .submit(build_job(&specs[1], 1, false, None))
+        .expect("submit second job");
+    assert_identical("service+observer", &plain, &h0.wait().unwrap());
+    assert!(h1.wait().is_ok());
+    service.shutdown();
+}
+
+/// Trips a cancel token the moment the first candidate batch completes —
+/// a deterministic way to land a cancellation mid-phase.
+struct CancelOnFirstBatch(CancelToken);
+
+impl JobObserver for CancelOnFirstBatch {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        if matches!(event, JobEvent::BatchCompleted { .. }) {
+            self.0.cancel();
+        }
+    }
+}
+
+#[test]
+fn cancellation_mid_phase_leaves_the_service_uncontaminated() {
+    let specs = specs();
+    let spec = &specs[0]; // 2-phase, 96 candidates = 6 batches in phase 0
+    let reference = build_job(spec, 1, false, None).run().unwrap();
+    let service = SelectionService::with_queue(1, 4);
+
+    // victim: same (seed, tag) as the reference job, cancelled after its
+    // first completed batch — mid-phase 0, well before QuickSelect.  The
+    // event channel is attached at BUILD time so the capture is
+    // deterministic (no race with the worker claiming the job).
+    let token = CancelToken::new();
+    let (chan, events) = ChannelObserver::pair();
+    let victim = job_builder(spec, 1, false)
+        .observer(Arc::new(FanoutObserver(vec![
+            Arc::new(CancelOnFirstBatch(token.clone())),
+            chan,
+        ])))
+        .cancel_token(token)
+        .build()
+        .expect("victim job must validate");
+    let victim = service.submit(victim).expect("submit victim");
+    let err = victim.wait().unwrap_err();
+    assert!(err.is::<Cancelled>(), "victim must resolve cancelled: {err:#}");
+    assert_eq!(victim.status(), JobStatus::Cancelled);
+    // the terminal Cancelled event is emitted before the job resolves,
+    // so after wait() it is already buffered
+    let updates: Vec<JobUpdate> = events.try_iter().collect();
+    assert_eq!(
+        updates.last(),
+        Some(&JobUpdate::Cancelled),
+        "the event stream must end with the terminal Cancelled update"
+    );
+
+    // rerunning the IDENTICAL job on the same service must reproduce the
+    // never-cancelled isolated run byte for byte — the shared hub was not
+    // contaminated by the aborted streams
+    let rerun = service
+        .submit(build_job(spec, 1, false, None))
+        .expect("submit rerun")
+        .wait()
+        .expect("rerun must succeed");
+    assert_identical("post-cancel rerun", &reference, &rerun);
+
+    // and an unrelated pipelined/overlapped job stays byte-identical too
+    let other_alone = build_job(&specs[1], 2, true, None).run().unwrap();
+    let other = service
+        .submit(build_job(&specs[1], 2, true, None))
+        .expect("submit other")
+        .wait()
+        .expect("other job must succeed");
+    assert_identical("post-cancel other job", &other_alone, &other);
+    service.shutdown();
+}
+
+#[test]
+fn backpressure_and_run_all_shim_are_exact() {
+    let specs = specs();
+    let alone: Vec<SelectionOutcome> = specs
+        .iter()
+        .map(|s| build_job(s, 1, false, None).run().unwrap())
+        .collect();
+
+    // depth-1 queue on a single worker: once a job is running and one is
+    // queued, try_submit must report QueueFull and hand the job back
+    let service = SelectionService::with_queue(1, 1);
+    let h0 = service
+        .submit(build_job(&specs[0], 1, false, None))
+        .expect("submit job 0");
+    // blocking submit returns once job 0 is claimed and the slot frees
+    let h1 = service
+        .submit(build_job(&specs[1], 1, false, None))
+        .expect("submit job 1");
+    let recovered = match service.try_submit(build_job(&specs[2], 1, false, None)) {
+        Err(SubmitError::QueueFull(job)) => *job,
+        Ok(_) => panic!("depth-1 queue with a busy worker cannot accept more"),
+        Err(e) => panic!("unexpected submit error: {e}"),
+    };
+    let h2 = service.submit(recovered).expect("resubmit recovered job");
+    for (i, (h, a)) in [&h0, &h1, &h2].into_iter().zip(&alone).enumerate() {
+        assert_identical(&format!("backpressure job {i}"), a, &h.wait().unwrap());
+    }
+
+    // the deprecated batch shim (submit loop + waits) must reproduce the
+    // batch-era results exactly, in submission order
+    let alone_pipelined: Vec<SelectionOutcome> = specs
+        .iter()
+        .map(|s| build_job(s, 2, true, None).run().unwrap())
+        .collect();
+    #[allow(deprecated)]
+    let legacy = service.run_all(
+        specs.iter().map(|s| build_job(s, 2, true, None)).collect(),
+    );
+    assert_eq!(legacy.len(), specs.len());
+    for (i, (a, t)) in alone_pipelined.iter().zip(&legacy).enumerate() {
+        let t = t.as_ref().unwrap_or_else(|e| panic!("run_all job {i}: {e:#}"));
+        assert_identical(&format!("run_all job {i}"), a, t);
+    }
+    service.shutdown();
 }

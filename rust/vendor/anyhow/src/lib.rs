@@ -1,28 +1,64 @@
 //! Minimal offline stand-in for the `anyhow` crate — exactly the API
 //! subset this repository uses (`Result`, `Error`, `Context`, `anyhow!`,
-//! `bail!`, `ensure!`).  The build environment has no crates.io access, so the real
-//! crate is replaced by this ~100-line shim; swapping the path dependency
-//! back to the registry crate is a one-line Cargo.toml change.
+//! `bail!`, `ensure!`, `Error::new`/`is`/`downcast_ref`).  The build
+//! environment has no crates.io access, so the real crate is replaced by
+//! this small shim; swapping the path dependency back to the registry
+//! crate is a one-line Cargo.toml change.
 //!
 //! Semantics match anyhow where it matters here:
 //!  * `Error` does NOT implement `std::error::Error` (so the blanket
 //!    `From<E: Error>` conversion used by `?` stays coherent);
 //!  * `.context(..)` / `.with_context(..)` prepend to the message chain;
-//!  * one level of `source()` is folded into converted errors.
+//!  * one level of `source()` is folded into converted errors;
+//!  * a typed error converted via `?` / `Error::new` is PRESERVED as the
+//!    root cause, so `is::<E>()` / `downcast_ref::<E>()` recover it even
+//!    after `.context(..)` calls (the stub keeps exactly one typed root
+//!    where real anyhow keeps the full chain — the subset the marker
+//!    errors like `coordinator::Cancelled` need).
 
 use std::fmt;
 
 pub struct Error {
     msg: String,
+    root: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
     pub fn msg<M: fmt::Display>(m: M) -> Error {
-        Error { msg: m.to_string() }
+        Error { msg: m.to_string(), root: None }
+    }
+
+    /// Wrap a typed error, preserving it for [`is`](Error::is) /
+    /// [`downcast_ref`](Error::downcast_ref).
+    pub fn new<E>(e: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        let msg = match e.source() {
+            Some(s) => format!("{e}: {s}"),
+            None => e.to_string(),
+        };
+        Error { msg, root: Some(Box::new(e)) }
     }
 
     pub fn context<C: fmt::Display>(self, c: C) -> Error {
-        Error { msg: format!("{c}: {}", self.msg) }
+        Error { msg: format!("{c}: {}", self.msg), root: self.root }
+    }
+
+    /// True when the preserved root cause is an `E`.
+    pub fn is<E>(&self) -> bool
+    where
+        E: std::error::Error + 'static,
+    {
+        self.downcast_ref::<E>().is_some()
+    }
+
+    /// The preserved root cause, if it is an `E`.
+    pub fn downcast_ref<E>(&self) -> Option<&E>
+    where
+        E: std::error::Error + 'static,
+    {
+        self.root.as_deref().and_then(|root| root.downcast_ref::<E>())
     }
 }
 
@@ -43,10 +79,7 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        match e.source() {
-            Some(s) => Error { msg: format!("{e}: {s}") },
-            None => Error { msg: e.to_string() },
-        }
+        Error::new(e)
     }
 }
 
@@ -57,23 +90,40 @@ pub trait Context<T> {
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
 }
 
-impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+// Two disjoint Result impls — the same shape real anyhow uses: a blanket
+// over typed std errors plus a concrete impl for our own Error (coherent
+// because Error deliberately does NOT implement std::error::Error).  Both
+// preserve the typed root through the context chain.
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
     fn context<C: fmt::Display>(self, c: C) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{c}: {e}") })
+        self.map_err(|e| Error::new(e).context(c))
     }
 
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
-        self.map_err(|e| Error { msg: format!("{}: {e}", f()) })
+        self.map_err(|e| Error::new(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Result<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
     }
 }
 
 impl<T> Context<T> for Option<T> {
     fn context<C: fmt::Display>(self, c: C) -> Result<T> {
-        self.ok_or_else(|| Error { msg: c.to_string() })
+        self.ok_or_else(|| Error::msg(c.to_string()))
     }
 
     fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
-        self.ok_or_else(|| Error { msg: f().to_string() })
+        self.ok_or_else(|| Error::msg(f().to_string()))
     }
 }
 
@@ -153,6 +203,42 @@ mod tests {
         assert_eq!(f(2).unwrap(), 2);
         assert_eq!(f(5).unwrap_err().to_string(), "too big: 5");
         assert!(f(0).unwrap_err().to_string().contains("x > 0"));
+    }
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    struct Marker;
+
+    impl fmt::Display for Marker {
+        fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+            f.write_str("marker error")
+        }
+    }
+
+    impl std::error::Error for Marker {}
+
+    #[test]
+    fn typed_root_survives_conversion_and_context() {
+        let e: Error = Marker.into();
+        assert!(e.is::<Marker>());
+        assert_eq!(e.downcast_ref::<Marker>(), Some(&Marker));
+        assert_eq!(e.to_string(), "marker error");
+        // Error::context keeps the root; the message chain still prepends
+        let e = e.context("outer");
+        assert!(e.is::<Marker>());
+        assert_eq!(e.to_string(), "outer: marker error");
+        // and ? conversion inside a function preserves it too
+        fn inner() -> Result<()> {
+            Err(Marker)?
+        }
+        assert!(inner().unwrap_err().is::<Marker>());
+        // BOTH Result context adapters keep the root as well: the typed-
+        // std-error blanket and the anyhow::Error passthrough
+        let via_std: Result<()> = Err::<(), Marker>(Marker).context("layer 1");
+        let via_any = via_std.with_context(|| "layer 2").unwrap_err();
+        assert!(via_any.is::<Marker>());
+        assert_eq!(via_any.to_string(), "layer 2: layer 1: marker error");
+        // a plain message error has no typed root
+        assert!(!Error::msg("free-form").is::<Marker>());
     }
 
     #[test]
