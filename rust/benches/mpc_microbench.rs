@@ -25,7 +25,10 @@ use selectformer::util::Rng;
 
 fn bench_op<F>(name: &'static str, iters: usize, shape: &[usize], f: F) -> Vec<String>
 where
-    F: Fn(&mut PartyCtx, &Shared) -> Shared + Send + Clone + 'static,
+    F: Fn(&mut PartyCtx, &Shared) -> selectformer::mpc::NetResult<Shared>
+        + Send
+        + Clone
+        + 'static,
 {
     let n: usize = shape.iter().product();
     let mut rng = Rng::new(7);
@@ -38,12 +41,12 @@ where
         {
             let x = x.clone();
             move |ctx| {
-                let xs = share_input(ctx, &x);
+                let xs = share_input(ctx, &x).unwrap();
                 let b0 = ctx.chan.meter.bytes;
                 let r0 = ctx.chan.meter.rounds;
                 let t0 = Instant::now();
                 for _ in 0..iters {
-                    let _ = f(ctx, &xs);
+                    f(ctx, &xs).unwrap();
                 }
                 (
                     t0.elapsed().as_secs_f64() / iters as f64,
@@ -53,9 +56,9 @@ where
             }
         },
         move |ctx| {
-            let xs = recv_share(ctx, &shape0);
+            let xs = recv_share(ctx, &shape0).unwrap();
             for _ in 0..iters {
-                let _ = f1(ctx, &xs);
+                f1(ctx, &xs).unwrap();
             }
         },
     );
@@ -319,12 +322,97 @@ fn bench_queue() -> Vec<BenchRow> {
     rows
 }
 
+/// Fault-tolerance overhead — what PR 6's recovery machinery costs:
+///
+///  * `retry_overhead` — extra wall-clock of a job whose transport dies
+///    at wire message 4 and is re-run from scratch by the service, vs an
+///    undisturbed run of the same job (crash-and-rerun recovery price);
+///  * `journal_replay_ms` — replaying a 64-job `serve --journal` WAL
+///    (half finished, half in flight) on daemon restart.
+fn bench_faults() -> Vec<BenchRow> {
+    use selectformer::coordinator::JobJournal;
+    use selectformer::mpc::{FaultMode, FaultPlan, FaultPolicy, RetryPolicy, Role};
+    use std::time::Duration;
+
+    let dir = std::env::temp_dir().join("sf_bench_faults");
+    let proxy = dir.join("proxy.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+    let ds = Arc::new(synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        64,
+        false,
+        9,
+    ));
+    let timed = |faults: FaultPolicy| -> f64 {
+        let job = SelectionJob::builder_shared([proxy.as_path()], ds.clone())
+            .keep_counts(vec![16])
+            .runtime(RuntimeProfile { batch: 16, faults, ..Default::default() })
+            .job_tag(1)
+            .build()
+            .expect("fault bench job");
+        let service = SelectionService::with_queue(1, 1);
+        let t0 = Instant::now();
+        let handle = service.submit(job).expect("submit");
+        handle.wait().expect("fault bench outcome");
+        let wall = t0.elapsed().as_secs_f64();
+        service.shutdown();
+        wall
+    };
+    let clean = timed(FaultPolicy::default());
+    let recovered = timed(FaultPolicy {
+        recv_timeout: Some(Duration::from_secs(10)),
+        retry: RetryPolicy { max_attempts: 2, backoff: Duration::from_millis(1) },
+        inject: Some(FaultPlan::new(Role::ModelOwner, FaultMode::KillAt { msg: 4 })),
+    });
+    let overhead = (recovered - clean).max(0.0);
+
+    let wal = dir.join("bench.wal");
+    let _ = std::fs::remove_file(&wal);
+    {
+        let (journal, _) = JobJournal::open(&wal).expect("bench wal");
+        for i in 0..64u64 {
+            let id = journal
+                .record_submit(&format!("proxies=p.sfw synth=64 keep=16 tag={i}"))
+                .expect("submit record");
+            journal.record_start(id).expect("start record");
+            if i % 2 == 0 {
+                journal.record_done(id, "ok").expect("done record");
+            }
+        }
+    }
+    let t0 = Instant::now();
+    let (_journal, pending) = JobJournal::open(&wal).expect("bench wal replay");
+    let replay = t0.elapsed().as_secs_f64();
+    assert_eq!(pending.len(), 32, "half the journaled jobs are unfinished");
+
+    let mut table = Table::new(
+        "fault tolerance (tiny 1-phase job, 64 candidates)",
+        &["metric", "wall"],
+    );
+    table.row(vec!["undisturbed job".into(), format!("{:.0} ms", clean * 1e3)]);
+    table.row(vec![
+        "kill@msg4 + retry".into(),
+        format!("{:.0} ms", recovered * 1e3),
+    ]);
+    table.row(vec!["retry overhead".into(), format!("{:.0} ms", overhead * 1e3)]);
+    table.row(vec![
+        "journal replay (64 jobs)".into(),
+        format!("{:.2} ms", replay * 1e3),
+    ]);
+    table.print();
+    vec![
+        BenchRow::new("retry_overhead", "kill@4,n=64,batch=16", 1, overhead * 1e9),
+        BenchRow::new("journal_replay_ms", "jobs=64,half_done", 1, replay * 1e9),
+    ]
+}
+
 fn main() {
     banner("microbench", "2PC primitive throughput (local wall-clock, per call)");
     let gemm_rows = bench_gemm();
     write_bench_json("BENCH_gemm", &gemm_rows);
     let mut e2e_rows = bench_e2e();
     e2e_rows.extend(bench_queue());
+    e2e_rows.extend(bench_faults());
     write_bench_json("BENCH_e2e", &e2e_rows);
     let mut t = Table::new(
         "MPC primitives",

@@ -28,16 +28,16 @@ fn main() {
         {
             let x = x.clone();
             move |ctx| {
-                let sh = share_input(ctx, &x);
-                let avg = appraise::appraise_average(ctx, &sh);
-                let bit = appraise::appraise_threshold(ctx, &sh, threshold);
+                let sh = share_input(ctx, &x).unwrap();
+                let avg = appraise::appraise_average(ctx, &sh).unwrap();
+                let bit = appraise::appraise_threshold(ctx, &sh, threshold).unwrap();
                 (avg, bit)
             }
         },
         move |ctx| {
-            let sh = recv_share(ctx, &[n]);
-            let _ = appraise::appraise_average(ctx, &sh);
-            let _ = appraise::appraise_threshold(ctx, &sh, threshold);
+            let sh = recv_share(ctx, &[n]).unwrap();
+            appraise::appraise_average(ctx, &sh).unwrap();
+            appraise::appraise_threshold(ctx, &sh, threshold).unwrap();
         },
     );
     let (avg, above) = got;

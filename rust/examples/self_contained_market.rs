@@ -120,17 +120,17 @@ fn main() -> anyhow::Result<()> {
         {
             let x = x.clone();
             move |ctx| {
-                let sh = share_input(ctx, &x);
+                let sh = share_input(ctx, &x).unwrap();
                 (
-                    appraise::appraise_average(ctx, &sh),
-                    appraise::appraise_threshold(ctx, &sh, 0.4),
+                    appraise::appraise_average(ctx, &sh).unwrap(),
+                    appraise::appraise_threshold(ctx, &sh, 0.4).unwrap(),
                 )
             }
         },
         move |ctx| {
-            let sh = recv_share(ctx, &[n]);
-            let _ = appraise::appraise_average(ctx, &sh);
-            let _ = appraise::appraise_threshold(ctx, &sh, 0.4);
+            let sh = recv_share(ctx, &[n]).unwrap();
+            appraise::appraise_average(ctx, &sh).unwrap();
+            appraise::appraise_threshold(ctx, &sh, 0.4).unwrap();
         },
     );
     println!("appraisal over {n} selected points:");

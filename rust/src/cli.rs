@@ -16,7 +16,7 @@
 //!                      [--specs "1:1:2,3:4:16"] [--steps 600] [--quick]
 //!                      [--seed N] [--out proxies/]
 //! selectformer serve   --jobs <manifest> [--workers 2] [--queue 4]
-//!                      [--progress]
+//!                      [--progress] [--journal jobs.wal]
 //! ```
 //!
 //! `serve` runs the async job-queue daemon over a manifest: one job per
@@ -108,7 +108,7 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             boolean: &["quick"],
         },
         "serve" => CmdSpec {
-            value: &["jobs", "workers", "queue"],
+            value: &["jobs", "workers", "queue", "journal"],
             boolean: &["progress"],
         },
         other => bail!("unknown command `{other}` (try `selectformer info`)"),
@@ -254,6 +254,7 @@ fn profile_from(args: &Args) -> Result<RuntimeProfile> {
             bandwidth: args.f64_or("bandwidth-mbs", 100.0)? * 1e6,
             latency: args.f64_or("latency-ms", 100.0)? / 1e3,
         },
+        faults: Default::default(),
     })
 }
 
@@ -524,36 +525,102 @@ fn serve_job_from(line: &str) -> Result<crate::coordinator::SelectionJob<'static
 /// manifest job against a bounded queue (blocking submit = backpressure),
 /// stream per-job status lines from each job's event channel, drain, and
 /// shut the pool down.
+///
+/// With `--journal <path>` the queue is crash-safe: every manifest is
+/// logged to the WAL before it enters the queue, starts and terminal
+/// outcomes are stamped as they happen, and a restarted daemon replays
+/// the file — finished jobs are never re-run, unfinished ones are
+/// resubmitted first (previously in-flight ones stamped as retries).
 fn cmd_serve(args: &Args) -> Result<()> {
-    use crate::coordinator::{JobUpdate, SelectionService};
+    use crate::coordinator::{Cancelled, JobJournal, JobUpdate, SelectionService};
+    use std::sync::mpsc::RecvTimeoutError;
+    use std::time::Duration;
 
-    let manifest = args.get("jobs").context("--jobs <manifest> required")?;
+    /// No event for this long ⇒ the printer checks whether the job is
+    /// merely slow or wedged and says so (`JobHandle::wait_for` below
+    /// gives the same periodic check during final resolution).
+    const STALL_WARN: Duration = Duration::from_secs(30);
+
     let workers = args.usize_or("workers", 2)?;
     let queue = args.usize_or("queue", workers.max(1) * 2)?;
     let progress = args.has("progress");
-    let text = std::fs::read_to_string(manifest)
-        .with_context(|| format!("manifest {manifest}"))?;
-    // parse the WHOLE manifest up front: a malformed line aborts before
-    // any job is submitted or status-printer thread spawned
-    let mut jobs = Vec::new();
-    for (lineno, line) in text.lines().enumerate() {
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
+
+    // journal replay first: unfinished jobs from a previous incarnation
+    // run before anything new, in their original submission order
+    let journal = match args.get("journal") {
+        Some(path) => {
+            let (journal, pending) = JobJournal::open(std::path::Path::new(path))?;
+            if !pending.is_empty() {
+                println!(
+                    "journal {path}: {} unfinished job(s) to replay",
+                    pending.len()
+                );
+            }
+            Some((Arc::new(journal), pending))
         }
-        let job = serve_job_from(line)
-            .with_context(|| format!("{manifest}:{}: `{line}`", lineno + 1))?;
-        jobs.push((lineno + 1, job));
+        None => None,
+    };
+    // (label, manifest line, journal id, was_inflight)
+    let mut entries: Vec<(String, String, Option<u64>, bool)> = Vec::new();
+    if let Some((_, pending)) = &journal {
+        for p in pending {
+            entries.push((
+                format!("journal job {}", p.id),
+                p.manifest.clone(),
+                Some(p.id),
+                p.was_inflight,
+            ));
+        }
     }
-    ensure!(!jobs.is_empty(), "manifest {manifest} has no jobs");
+    if let Some(manifest) = args.get("jobs") {
+        let text = std::fs::read_to_string(manifest)
+            .with_context(|| format!("manifest {manifest}"))?;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            entries.push((
+                format!("{manifest}:{}", lineno + 1),
+                line.to_string(),
+                None,
+                false,
+            ));
+        }
+    } else {
+        ensure!(
+            args.has("journal"),
+            "--jobs <manifest> required (or --journal with unfinished jobs)"
+        );
+    }
+    ensure!(
+        !entries.is_empty(),
+        "nothing to run: no manifest lines and no unfinished journaled jobs"
+    );
+    // parse EVERY line up front: a malformed line aborts before any job
+    // is submitted, journaled, or status-printer thread spawned
+    let mut jobs = Vec::new();
+    for (label, line, jid, was_inflight) in entries {
+        let job = serve_job_from(&line)
+            .with_context(|| format!("{label}: `{line}`"))?;
+        jobs.push((label, line, jid, was_inflight, job));
+    }
+    let journal = journal.map(|(journal, _)| journal);
     let service = SelectionService::with_queue(workers, queue);
     println!(
-        "serving {manifest} on {} workers (queue depth {})",
+        "serving {} job(s) on {} workers (queue depth {})",
+        jobs.len(),
         service.workers(),
         service.queue_capacity()
     );
     let mut printers = Vec::new();
-    for (lineno, job) in jobs {
+    for (label, line, jid, was_inflight, job) in jobs {
+        // WAL invariant: new submissions hit the journal BEFORE the
+        // queue, so a crash can over-report pending work, never lose it
+        let jid = match (&journal, jid) {
+            (Some(journal), None) => Some(journal.record_submit(&line)?),
+            (_, jid) => jid,
+        };
         // blocking submit: the bounded queue is the admission throttle
         let handle = match service.submit(job) {
             Ok(handle) => handle,
@@ -566,16 +633,51 @@ fn cmd_serve(args: &Args) -> Result<()> {
                 for printer in printers {
                     let _ = printer.join();
                 }
-                bail!("{manifest}:{lineno}: submit failed: {e}");
+                bail!("{label}: submit failed: {e}");
             }
         };
         let id = handle.id();
-        println!("[job {id}] queued ({manifest}:{lineno})");
+        if was_inflight {
+            if let (Some(journal), Some(jid)) = (&journal, jid) {
+                journal.record_retry(jid)?;
+            }
+            println!("[job {id}] resubmitted {label} (was in flight — retrying)");
+        } else {
+            println!("[job {id}] queued ({label})");
+        }
         let events = handle.events();
+        let journal = journal.clone();
         // each printer resolves to whether its job succeeded, so the
         // command's exit status can reflect the batch
         printers.push(std::thread::spawn(move || -> bool {
-            for update in events {
+            let mut started = false;
+            loop {
+                let update = match events.recv_timeout(STALL_WARN) {
+                    Ok(update) => update,
+                    Err(RecvTimeoutError::Timeout) => {
+                        let status = handle.status();
+                        if status.is_terminal() {
+                            break;
+                        }
+                        println!(
+                            "[job {id}] no event for {}s (status {status:?}) — \
+                             possible stall",
+                            STALL_WARN.as_secs()
+                        );
+                        continue;
+                    }
+                    Err(RecvTimeoutError::Disconnected) => break,
+                };
+                if !started {
+                    started = true;
+                    // first event = a worker claimed the job; stamp it so
+                    // a crash from here on replays as a retry
+                    if let (Some(journal), Some(jid)) = (&journal, jid) {
+                        if let Err(e) = journal.record_start(jid) {
+                            println!("[job {id}] journal start stamp failed: {e:#}");
+                        }
+                    }
+                }
                 match update {
                     JobUpdate::PhaseCalibrated { phase, worst_rmse, .. } => {
                         println!(
@@ -611,12 +713,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
                             fmt_bytes(bytes)
                         );
                     }
+                    JobUpdate::Retrying { attempt } => {
+                        println!(
+                            "[job {id}] transport fault — rerunning from scratch \
+                             (attempt {attempt})"
+                        );
+                    }
                     JobUpdate::Cancelled => {
                         println!("[job {id}] cancelled");
                     }
                 }
             }
-            match handle.wait() {
+            // resolve through wait_for so a wedged resolution still
+            // produces periodic signs of life instead of silence
+            let result = loop {
+                match handle.wait_for(STALL_WARN) {
+                    Some(result) => break result,
+                    None => println!(
+                        "[job {id}] still {:?} — waiting",
+                        handle.status()
+                    ),
+                }
+            };
+            let (ok, outcome_tag) = match result {
                 Ok(outcome) => {
                     println!(
                         "[job {id}] done: {} selected, {} total, {}",
@@ -624,13 +743,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
                         fmt_bytes(outcome.total_bytes()),
                         fmt_duration(outcome.total_wall_s())
                     );
-                    true
+                    (true, "ok")
+                }
+                Err(e) if e.is::<Cancelled>() => {
+                    println!("[job {id}] cancelled: {e:#}");
+                    (false, "cancelled")
                 }
                 Err(e) => {
                     println!("[job {id}] failed: {e:#}");
-                    false
+                    (false, "failed")
+                }
+            };
+            if let (Some(journal), Some(jid)) = (&journal, jid) {
+                if let Err(e) = journal.record_done(jid, outcome_tag) {
+                    println!("[job {id}] journal done stamp failed: {e:#}");
                 }
             }
+            ok
         }));
     }
     let mut failed = 0usize;
@@ -858,24 +987,27 @@ fn cmd_appraise(args: &Args) -> Result<()> {
     )?;
     let n = ent.len();
     let x = TensorR::from_f32(&TensorF::from_vec(ent, &[n]));
-    let ((avg, above), _) = run_pair(
+    let (r0, r1) = run_pair(
         3,
         {
             let x = x.clone();
-            move |ctx| {
-                let sh = share_input(ctx, &x);
-                (
-                    appraise::appraise_average(ctx, &sh),
-                    appraise::appraise_threshold(ctx, &sh, threshold),
-                )
+            move |ctx| -> crate::mpc::NetResult<(f32, bool)> {
+                let sh = share_input(ctx, &x)?;
+                Ok((
+                    appraise::appraise_average(ctx, &sh)?,
+                    appraise::appraise_threshold(ctx, &sh, threshold)?,
+                ))
             }
         },
-        move |ctx| {
-            let sh = recv_share(ctx, &[n]);
-            let _ = appraise::appraise_average(ctx, &sh);
-            let _ = appraise::appraise_threshold(ctx, &sh, threshold);
+        move |ctx| -> crate::mpc::NetResult<()> {
+            let sh = recv_share(ctx, &[n])?;
+            appraise::appraise_average(ctx, &sh)?;
+            appraise::appraise_threshold(ctx, &sh, threshold)?;
+            Ok(())
         },
     );
+    r1?;
+    let (avg, above) = r0?;
     println!("appraisal over {} selected points:", n);
     println!("  average prediction entropy: {avg:.4}");
     println!(

@@ -5,11 +5,12 @@
 
 use crate::fixed;
 use crate::mpc::cmp;
+use crate::mpc::net::NetResult;
 use crate::mpc::proto::{open, PartyCtx, Shared};
 use crate::tensor::TensorR;
 
 /// Average of shared entropies, revealed in the clear.
-pub fn appraise_average(ctx: &mut PartyCtx, entropies: &Shared) -> f32 {
+pub fn appraise_average(ctx: &mut PartyCtx, entropies: &Shared) -> NetResult<f32> {
     let n = entropies.len();
     let mut acc = 0i64;
     for &v in &entropies.0.data {
@@ -17,12 +18,16 @@ pub fn appraise_average(ctx: &mut PartyCtx, entropies: &Shared) -> f32 {
     }
     let inv_n = fixed::encode(1.0 / n as f32);
     let avg_share = fixed::trunc(acc.wrapping_mul(inv_n));
-    let opened = open(ctx, &Shared(TensorR::from_vec(vec![avg_share], &[1])));
-    fixed::decode(opened.data[0])
+    let opened = open(ctx, &Shared(TensorR::from_vec(vec![avg_share], &[1])))?;
+    Ok(fixed::decode(opened.data[0]))
 }
 
 /// Threshold appraisal: reveal ONLY whether avg entropy > threshold.
-pub fn appraise_threshold(ctx: &mut PartyCtx, entropies: &Shared, threshold: f32) -> bool {
+pub fn appraise_threshold(
+    ctx: &mut PartyCtx,
+    entropies: &Shared,
+    threshold: f32,
+) -> NetResult<bool> {
     let n = entropies.len();
     let mut acc = 0i64;
     for &v in &entropies.0.data {
@@ -32,8 +37,8 @@ pub fn appraise_threshold(ctx: &mut PartyCtx, entropies: &Shared, threshold: f32
     let avg_share = fixed::trunc(acc.wrapping_mul(inv_n));
     let avg = Shared(TensorR::from_vec(vec![avg_share], &[1]));
     let thr = crate::mpc::nonlin::const_share(ctx, threshold, &[1]);
-    let gt = cmp::gt(ctx, &avg, &thr);
-    open(ctx, &gt).data[0] == 1
+    let gt = cmp::gt(ctx, &avg, &thr)?;
+    Ok(open(ctx, &gt)?.data[0] == 1)
 }
 
 #[cfg(test)]
@@ -52,13 +57,13 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let sh = share_input(ctx, &x);
-                    appraise_average(ctx, &sh)
+                    let sh = share_input(ctx, &x).unwrap();
+                    appraise_average(ctx, &sh).unwrap()
                 }
             },
             move |ctx| {
-                let sh = recv_share(ctx, &[4]);
-                appraise_average(ctx, &sh)
+                let sh = recv_share(ctx, &[4]).unwrap();
+                appraise_average(ctx, &sh).unwrap()
             },
         );
         assert!((avg - 0.5).abs() < 1e-2, "{avg}");
@@ -74,13 +79,13 @@ mod tests {
                 {
                     let x = x.clone();
                     move |ctx| {
-                        let sh = share_input(ctx, &x);
-                        appraise_threshold(ctx, &sh, thr)
+                        let sh = share_input(ctx, &x).unwrap();
+                        appraise_threshold(ctx, &sh, thr).unwrap()
                     }
                 },
                 move |ctx| {
-                    let sh = recv_share(ctx, &[4]);
-                    appraise_threshold(ctx, &sh, thr)
+                    let sh = recv_share(ctx, &[4]).unwrap();
+                    appraise_threshold(ctx, &sh, thr).unwrap()
                 },
             );
             assert_eq!(got, expect, "thr={thr}");

@@ -45,6 +45,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 use crate::data::Dataset;
 use crate::models::{ApproxToggles, WeightFile};
 use crate::mpc::dealer::Hub;
+use crate::mpc::faults::FaultPolicy;
 use crate::mpc::net::NetConfig;
 use crate::proxygen::{self, DistillConfig, ProxyFitReport};
 
@@ -190,7 +191,7 @@ impl From<Arc<WeightFile>> for ModelSource {
 
 /// How a job executes: the performance knobs, none of which may change a
 /// byte of the selection (enforced by the equivalence suites).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct RuntimeProfile {
     /// Candidates per MPC forward batch.
     pub batch: usize,
@@ -203,6 +204,14 @@ pub struct RuntimeProfile {
     pub policy: SchedPolicy,
     /// WAN model used for the simulated delay attribution.
     pub net: NetConfig,
+    /// Transport fault handling: per-recv deadline, retry policy for
+    /// net-failed jobs (honored by the
+    /// [`SelectionService`](super::service::SelectionService) worker
+    /// loop), and the test-only deterministic fault injector.  Like every
+    /// other profile knob it may not change a byte of the selection — a
+    /// retried job reruns from scratch on fresh sessions and must be
+    /// byte-identical to an undisturbed run (tests/fault_injection.rs).
+    pub faults: FaultPolicy,
 }
 
 impl Default for RuntimeProfile {
@@ -213,6 +222,7 @@ impl Default for RuntimeProfile {
             overlap: false,
             policy: SchedPolicy::CoalescedOverlapped,
             net: NetConfig::default(),
+            faults: FaultPolicy::default(),
         }
     }
 }
@@ -625,6 +635,12 @@ impl<'a> SelectionJob<'a> {
         self.calibration.is_some()
     }
 
+    /// The job's transport fault policy (the service worker loop reads
+    /// the retry knobs from here).
+    pub(crate) fn fault_policy(&self) -> &FaultPolicy {
+        &self.profile.faults
+    }
+
     /// The job's cancel token, installing a fresh one if absent — the
     /// service calls this at submit time so the returned `JobHandle` can
     /// cancel a job whose builder never attached a token.
@@ -668,6 +684,7 @@ impl<'a> SelectionJob<'a> {
             overlap: self.profile.overlap,
             capture_shares: self.privacy.capture_shares(),
             job_tag: self.job_tag,
+            faults: self.profile.faults.clone(),
         }
     }
 
@@ -696,12 +713,14 @@ impl<'a> SelectionJob<'a> {
         };
         let target = self.models[0].load(0).context("calibration target")?;
         let schedule = self.schedule.as_ref().expect("validated at build time");
-        let distilled = proxygen::distill_proxies(
+        let stop = || self.check_cancel();
+        let distilled = proxygen::distill_proxies_gated(
             &target,
             self.dataset.get(),
             &cal.bootstrap,
             &schedule.proxies,
             &cal.config,
+            Some(&stop),
         )?;
         let reports: Vec<ProxyFitReport> =
             distilled.iter().map(|(_, r)| r.clone()).collect();
@@ -746,11 +765,10 @@ impl<'a> SelectionJob<'a> {
     /// and resolves to an error rooted in [`Cancelled`], with any
     /// prefetched overlap setup joined before returning.  A cancelled run
     /// emits the terminal [`JobEvent::Cancelled`] to the observer chain
-    /// (its last event) before returning.  Granularity caveat: in-process
-    /// calibration is currently ONE unit — a cancel landing while a
-    /// calibrated job distills its proxies takes effect only once
-    /// distillation completes (checkpoints inside the Adam loops are a
-    /// recorded follow-up, see ROADMAP).
+    /// (its last event) before returning.  Calibration is cancellable
+    /// too: the distiller checks the token between module fits and
+    /// between Adam epochs, so cancel latency during proxy generation is
+    /// bounded by one training epoch.
     pub fn run(&self) -> Result<SelectionOutcome> {
         let result = self.run_inner();
         if let Err(e) = &result {
@@ -828,6 +846,7 @@ impl<'a> SelectionJob<'a> {
                             opts.dealer_seed,
                             i,
                             opts.job_tag,
+                            &opts.faults,
                         )?
                     }
                 };
@@ -849,11 +868,12 @@ impl<'a> SelectionJob<'a> {
                     let hub = self.phase_hub();
                     let (approx, seed, job) =
                         (opts.approx, opts.dealer_seed, opts.job_tag);
+                    let faults = opts.faults.clone();
                     let next = i + 1;
                     prefetch.0 = Some(thread::spawn(move || {
                         let weights = src.load(next)?;
                         selector::setup_phase_session_on(
-                            hub, weights, approx, seed, next, job,
+                            hub, weights, approx, seed, next, job, &faults,
                         )
                     }));
                 }
@@ -984,6 +1004,7 @@ pub(crate) fn run_legacy(
             overlap: opts.overlap || force_overlap,
             policy: opts.policy,
             net: opts.net,
+            faults: opts.faults.clone(),
         })
         .approx(opts.approx)
         .dealer_seed(opts.dealer_seed)

@@ -1,0 +1,249 @@
+//! Crash-safe job journal — the write-ahead log behind
+//! `selectformer serve --journal <path>`.
+//!
+//! The journal is a line-oriented WAL of the daemon's queue: every
+//! submitted manifest is logged BEFORE the job enters the service, every
+//! start and terminal outcome is stamped as it happens, and a restarted
+//! daemon replays the file to find the jobs that never finished.  Replay
+//! distinguishes jobs that were merely queued from jobs a worker had
+//! already claimed ([`PendingJob::was_inflight`]) so the new daemon can
+//! surface the resubmission as a retry.
+//!
+//! Record grammar (one record per line, fields space-separated; the
+//! manifest is the line's tail and may itself contain spaces):
+//!
+//! ```text
+//! submit <id> <manifest…>     the job exists; <id> is journal-scoped
+//! start  <id>                 a worker claimed the job
+//! retry  <id>                 a restarted daemon resubmitted an
+//!                             in-flight job from a previous incarnation
+//! done   <id> <ok|failed|cancelled>   terminal — exactly once per job
+//! ```
+//!
+//! Every append is flushed and fsync'd before the mutating action it
+//! describes proceeds, so the journal never UNDER-reports: a crash can
+//! leave a job submitted-but-done-in-reality (it will be re-run — the
+//! reason selections must be deterministic), never done-but-lost.  A torn
+//! final line (crash mid-append) is ignored on replay.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{ensure, Context, Result};
+
+/// One journaled job a restarted daemon still owes a terminal stamp.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PendingJob {
+    /// Journal-scoped id (monotonic across daemon incarnations).
+    pub id: u64,
+    /// The manifest line the job was submitted with, verbatim.
+    pub manifest: String,
+    /// A worker had claimed the job before the previous daemon died —
+    /// the resubmission is a retry, not a first run.
+    pub was_inflight: bool,
+}
+
+/// Append handle to the WAL; see the module docs for the record grammar.
+pub struct JobJournal {
+    path: PathBuf,
+    file: Mutex<File>,
+    next_id: Mutex<u64>,
+}
+
+impl JobJournal {
+    /// Open `path` (creating it if absent), replay every intact record,
+    /// and return the journal plus the jobs with no terminal stamp — in
+    /// submission order, previously in-flight ones flagged.
+    pub fn open(path: &Path) -> Result<(JobJournal, Vec<PendingJob>)> {
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("journal dir {parent:?}"))?;
+            }
+        }
+        let text = match std::fs::read_to_string(path) {
+            Ok(text) => text,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => String::new(),
+            Err(e) => return Err(e).with_context(|| format!("journal {path:?}")),
+        };
+        // replay: submission order preserved, torn/unknown lines skipped
+        // (a crash mid-append legitimately tears the final line)
+        let mut order: Vec<u64> = Vec::new();
+        let mut jobs: HashMap<u64, PendingJob> = HashMap::new();
+        let mut finished: HashMap<u64, &str> = HashMap::new();
+        let mut next_id = 0u64;
+        for line in text.lines() {
+            let mut it = line.splitn(3, ' ');
+            let (verb, id) = (it.next().unwrap_or(""), it.next().unwrap_or(""));
+            let Ok(id) = id.parse::<u64>() else { continue };
+            match verb {
+                "submit" => {
+                    let Some(manifest) = it.next() else { continue };
+                    if jobs
+                        .insert(
+                            id,
+                            PendingJob {
+                                id,
+                                manifest: manifest.to_string(),
+                                was_inflight: false,
+                            },
+                        )
+                        .is_none()
+                    {
+                        order.push(id);
+                    }
+                    next_id = next_id.max(id + 1);
+                }
+                "start" | "retry" => {
+                    if let Some(job) = jobs.get_mut(&id) {
+                        job.was_inflight = true;
+                    }
+                }
+                "done" => {
+                    finished.insert(id, it.next().unwrap_or("ok"));
+                }
+                _ => {}
+            }
+        }
+        let pending: Vec<PendingJob> = order
+            .iter()
+            .filter(|id| !finished.contains_key(id))
+            .map(|id| jobs[id].clone())
+            .collect();
+        let file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("journal {path:?}"))?;
+        Ok((
+            JobJournal {
+                path: path.to_path_buf(),
+                file: Mutex::new(file),
+                next_id: Mutex::new(next_id),
+            },
+            pending,
+        ))
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn append(&self, record: String) -> Result<()> {
+        debug_assert!(record.ends_with('\n') && record[..record.len() - 1].lines().count() <= 1);
+        let file = self.file.lock().unwrap();
+        (&*file)
+            .write_all(record.as_bytes())
+            .and_then(|()| file.sync_data())
+            .with_context(|| format!("journal append {:?}", self.path))
+    }
+
+    /// Log a newly submitted manifest; returns its fresh journal id.
+    /// Call BEFORE handing the job to the service — under-reporting is
+    /// the one failure the WAL may not have.
+    pub fn record_submit(&self, manifest: &str) -> Result<u64> {
+        let manifest = manifest.trim();
+        ensure!(
+            !manifest.is_empty() && !manifest.contains('\n'),
+            "journal manifests are single non-empty lines"
+        );
+        let id = {
+            let mut next = self.next_id.lock().unwrap();
+            let id = *next;
+            *next += 1;
+            id
+        };
+        self.append(format!("submit {id} {manifest}\n"))?;
+        Ok(id)
+    }
+
+    /// Stamp that a worker claimed job `id` (its first event arrived).
+    pub fn record_start(&self, id: u64) -> Result<()> {
+        self.append(format!("start {id}\n"))
+    }
+
+    /// Stamp that a restarted daemon resubmitted previously in-flight
+    /// job `id`.
+    pub fn record_retry(&self, id: u64) -> Result<()> {
+        self.append(format!("retry {id}\n"))
+    }
+
+    /// Stamp job `id` terminal; `outcome` is `ok` / `failed` /
+    /// `cancelled`.  After this the job is never replayed again.
+    pub fn record_done(&self, id: u64, outcome: &str) -> Result<()> {
+        debug_assert!(matches!(outcome, "ok" | "failed" | "cancelled"));
+        self.append(format!("done {id} {outcome}\n"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("sf_journal_unit").join(tag);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.join("jobs.wal")
+    }
+
+    #[test]
+    fn replay_separates_finished_inflight_and_queued() {
+        let path = tmp("replay");
+        let (j, pending) = JobJournal::open(&path).unwrap();
+        assert!(pending.is_empty(), "fresh journal has no pending jobs");
+        let a = j.record_submit("proxies=a.sfw synth=64 keep=8").unwrap();
+        let b = j.record_submit("proxies=b.sfw synth=64 keep=8 tag=1").unwrap();
+        let c = j.record_submit("proxies=c.sfw synth=64 keep=8 tag=2").unwrap();
+        assert_eq!((a, b, c), (0, 1, 2));
+        j.record_start(a).unwrap();
+        j.record_done(a, "ok").unwrap();
+        j.record_start(b).unwrap(); // in-flight at "crash"
+        drop(j);
+
+        let (j2, pending) = JobJournal::open(&path).unwrap();
+        assert_eq!(pending.len(), 2);
+        assert_eq!(pending[0].id, b);
+        assert!(pending[0].was_inflight, "b was claimed before the crash");
+        assert_eq!(pending[0].manifest, "proxies=b.sfw synth=64 keep=8 tag=1");
+        assert_eq!(pending[1].id, c);
+        assert!(!pending[1].was_inflight, "c was still queued");
+        // ids keep advancing across incarnations — never reused
+        let d = j2.record_submit("proxies=d.sfw synth=64 keep=8").unwrap();
+        assert_eq!(d, 3);
+        j2.record_retry(b).unwrap();
+        j2.record_done(b, "ok").unwrap();
+        j2.record_done(c, "cancelled").unwrap();
+        j2.record_done(d, "failed").unwrap();
+        drop(j2);
+        let (_, pending) = JobJournal::open(&path).unwrap();
+        assert!(pending.is_empty(), "everything terminal ⇒ nothing replays");
+    }
+
+    #[test]
+    fn torn_tail_and_junk_lines_are_ignored() {
+        let path = tmp("torn");
+        let (j, _) = JobJournal::open(&path).unwrap();
+        let a = j.record_submit("proxies=a.sfw synth=64 keep=8").unwrap();
+        drop(j);
+        // a crash mid-append tears the final line; garbage must not abort
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("not-a-record\nsubmit not-a-number x\ndone ");
+        std::fs::write(&path, text).unwrap();
+        let (j2, pending) = JobJournal::open(&path).unwrap();
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].id, a);
+        assert!(!pending[0].was_inflight);
+        assert_eq!(j2.record_submit("proxies=b.sfw synth=64 keep=8").unwrap(), a + 1);
+    }
+
+    #[test]
+    fn submit_rejects_multiline_manifests() {
+        let path = tmp("reject");
+        let (j, _) = JobJournal::open(&path).unwrap();
+        assert!(j.record_submit("").is_err());
+        assert!(j.record_submit("a\nb").is_err());
+    }
+}

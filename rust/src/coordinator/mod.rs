@@ -48,6 +48,7 @@
 pub mod appraise;
 pub mod iosched;
 pub mod job;
+pub mod journal;
 pub mod market;
 pub mod observe;
 pub mod phase;
@@ -62,6 +63,7 @@ pub use job::{
     CalibrationSpec, CancelToken, Cancelled, ModelSource, PrivacyMode,
     RuntimeProfile, SelectionJob, SelectionJobBuilder,
 };
+pub use journal::{JobJournal, PendingJob};
 pub use observe::{
     ChannelObserver, EventCounters, FanoutObserver, JobEvent, JobObserver,
     JobUpdate, StderrProgress,

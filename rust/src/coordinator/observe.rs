@@ -45,6 +45,12 @@ pub enum JobEvent<'a> {
     /// Phase `phase` is done; the full outcome (survivors, meters, setup
     /// vs drain attribution) is borrowed for the duration of the call.
     PhaseFinished { phase: usize, outcome: &'a PhaseOutcome },
+    /// A transport fault (a [`NetError`](crate::mpc::NetError)-rooted
+    /// failure) aborted the job's previous attempt and the service is
+    /// about to rerun it from scratch; `attempt` is the 1-based ordinal
+    /// of the attempt starting next.  The rerun is byte-identical to an
+    /// undisturbed run, so earlier per-batch events may repeat.
+    Retrying { attempt: u32 },
     /// The job observed its [`CancelToken`](super::job::CancelToken) and
     /// stopped at the next cooperative checkpoint (a batch boundary, the
     /// QuickSelect stage, or a phase boundary).  Terminal: no further
@@ -72,6 +78,8 @@ pub enum JobUpdate {
     /// See [`JobEvent::PhaseFinished`]; `bytes` is both parties' metered
     /// traffic for the phase, `rounds` the model owner's round count.
     PhaseFinished { phase: usize, survivors: usize, bytes: u64, rounds: u64 },
+    /// See [`JobEvent::Retrying`].
+    Retrying { attempt: u32 },
     /// See [`JobEvent::Cancelled`].
     Cancelled,
 }
@@ -108,6 +116,9 @@ impl From<&JobEvent<'_>> for JobUpdate {
                 bytes: outcome.meter_p0.bytes + outcome.meter_p1.bytes,
                 rounds: outcome.meter_p0.rounds,
             },
+            JobEvent::Retrying { attempt } => {
+                JobUpdate::Retrying { attempt: *attempt }
+            }
             JobEvent::Cancelled => JobUpdate::Cancelled,
         }
     }
@@ -216,6 +227,7 @@ pub struct EventCounters {
     pub batch_bytes: AtomicU64,
     pub batch_rounds: AtomicU64,
     pub survivors: AtomicU64,
+    pub retries: AtomicU64,
     pub cancellations: AtomicU64,
 }
 
@@ -244,6 +256,9 @@ impl JobObserver for EventCounters {
             }
             JobEvent::PhaseFinished { .. } => {
                 self.phases_finished.fetch_add(1, Ordering::Relaxed);
+            }
+            JobEvent::Retrying { .. } => {
+                self.retries.fetch_add(1, Ordering::Relaxed);
             }
             JobEvent::Cancelled => {
                 self.cancellations.fetch_add(1, Ordering::Relaxed);
@@ -298,6 +313,12 @@ impl JobObserver for StderrProgress {
                     outcome.survivors.len(),
                     outcome.wall_s(),
                     outcome.meter_p0.rounds
+                );
+            }
+            JobEvent::Retrying { attempt } => {
+                eprintln!(
+                    "[retry] transport fault — rerunning from scratch \
+                     (attempt {attempt})"
                 );
             }
             JobEvent::Cancelled => {

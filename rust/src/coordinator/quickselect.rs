@@ -7,9 +7,14 @@
 //! — i.e. the *rank order* around pivots, exactly the leakage the paper
 //! declares.  Entropy values themselves never leave their shares.
 
+use anyhow::Result;
+
 use crate::mpc::cmp;
+use crate::mpc::net::NetResult;
 use crate::mpc::proto::{open, PartyCtx, Shared};
 use crate::tensor::TensorR;
+
+use super::selector::CancelGate;
 
 /// Statistics of one top-k run (for the cost model / tests).
 #[derive(Clone, Copy, Debug, Default)]
@@ -73,11 +78,11 @@ pub fn top_k_indices(
     ctx: &mut PartyCtx,
     values: &Shared,
     k: usize,
-) -> (Vec<usize>, SelectStats) {
+) -> Result<(Vec<usize>, SelectStats)> {
     let mut selected: Vec<usize> = Vec::with_capacity(k);
-    let stats = top_k_streamed(ctx, values, k, &mut selected);
+    let stats = top_k_streamed(ctx, values, k, &mut selected)?;
     selected.sort_unstable();
-    (selected, stats)
+    Ok((selected, stats))
 }
 
 /// Streaming top-k: identical protocol to [`top_k_indices`] (same
@@ -90,31 +95,51 @@ pub fn top_k_streamed(
     values: &Shared,
     k: usize,
     sink: &mut dyn SurvivorSink,
-) -> SelectStats {
+) -> Result<SelectStats> {
+    top_k_streamed_gated(ctx, values, k, sink, None)
+}
+
+/// [`top_k_streamed`] with a cooperative-cancellation gate: both parties
+/// call [`CancelGate::checkpoint_qs_round`] at the top of every partition
+/// round, so a cancelled job stops at a round boundary BOTH parties agree
+/// on (cancel latency is bounded by one partition — tested in
+/// selector.rs).  `gate: None` is the inert fast path.
+pub(crate) fn top_k_streamed_gated(
+    ctx: &mut PartyCtx,
+    values: &Shared,
+    k: usize,
+    sink: &mut dyn SurvivorSink,
+    gate: Option<&CancelGate>,
+) -> Result<SelectStats> {
     let n = values.len();
     assert!(k <= n, "k={k} > n={n}");
     let mut stats = SelectStats::default();
     if k == 0 {
-        return stats;
+        return Ok(stats);
     }
     if k == n {
         for i in 0..n {
             sink.confirm(i);
         }
-        return stats;
+        return Ok(stats);
     }
     let mut pool: Vec<usize> = (0..n).collect();
     let mut need = k;
+    let mut round = 0usize;
     // both parties must pick the SAME pivot: derive from the dealer-shared
     // randomness (public coin)
     while need > 0 && !pool.is_empty() {
+        if let Some(g) = gate {
+            g.checkpoint_qs_round(round)?;
+        }
+        round += 1;
         if pool.len() == need {
             for &i in &pool {
                 sink.confirm(i);
             }
             break;
         }
-        let coin = public_coin(ctx, pool.len());
+        let coin = public_coin(ctx, pool.len())?;
         let pivot_idx = pool[coin];
         let rest: Vec<usize> =
             pool.iter().copied().filter(|&i| i != pivot_idx).collect();
@@ -127,9 +152,9 @@ pub fn top_k_streamed(
         ));
         let b = Shared(TensorR::from_vec(vec![pivot_share; m], &[m]));
         let gt_bits = ctx.op("qs_partition", |ctx| {
-            let g = cmp::gt(ctx, &a, &b);
+            let g = cmp::gt(ctx, &a, &b)?;
             open(ctx, &g) // reveal ONLY the outcome bits
-        });
+        })?;
         stats.comparisons += m as u64;
         stats.partition_rounds += 1;
         let mut above = Vec::new();
@@ -166,19 +191,19 @@ pub fn top_k_streamed(
             }
         }
     }
-    stats
+    Ok(stats)
 }
 
 /// A public coin both parties derive identically from dealer randomness.
-fn public_coin(ctx: &mut PartyCtx, n: usize) -> usize {
+fn public_coin(ctx: &mut PartyCtx, n: usize) -> NetResult<usize> {
     // dealer streams are synchronized; draw one triple element as the coin
     let (a, _, _) = ctx.dealer.triples(1);
     // the SHARE differs per party, but a0+a1 is common — open it cheaply
     let opened = open(
         ctx,
         &Shared(TensorR::from_vec(vec![a[0]], &[1])),
-    );
-    (opened.data[0] as u64 % n as u64) as usize
+    )?;
+    Ok((opened.data[0] as u64 % n as u64) as usize)
 }
 
 #[cfg(test)]
@@ -197,13 +222,13 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let sh = share_input(ctx, &x);
-                    top_k_indices(ctx, &sh, k)
+                    let sh = share_input(ctx, &x).unwrap();
+                    top_k_indices(ctx, &sh, k).unwrap()
                 }
             },
             move |ctx| {
-                let sh = recv_share(ctx, &[n]);
-                top_k_indices(ctx, &sh, k)
+                let sh = recv_share(ctx, &[n]).unwrap();
+                top_k_indices(ctx, &sh, k).unwrap()
             },
         );
         assert_eq!(idx, idx1, "parties must agree on the selection");
@@ -262,19 +287,19 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let sh = share_input(ctx, &x);
+                    let sh = share_input(ctx, &x).unwrap();
                     let (tx, rx) = std::sync::mpsc::channel();
                     let mut sink = ChannelSink { order: Vec::new(), tx: Some(tx) };
-                    let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+                    let _ = top_k_streamed(ctx, &sh, k, &mut sink).unwrap();
                     drop(sink.tx.take());
                     let streamed: Vec<usize> = rx.try_iter().collect();
                     (sink.order, streamed)
                 }
             },
             move |ctx| {
-                let sh = recv_share(ctx, &[n]);
+                let sh = recv_share(ctx, &[n]).unwrap();
                 let mut sink = ChannelSink::collector();
-                let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+                let _ = top_k_streamed(ctx, &sh, k, &mut sink).unwrap();
                 (sink.order, Vec::<usize>::new())
             },
         );

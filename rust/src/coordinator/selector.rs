@@ -60,8 +60,10 @@ use crate::fixed;
 use crate::models::{embed_clear, ApproxToggles, ModelConfig, ModelMpc, WeightFile};
 use crate::mpc::dealer::Hub;
 use crate::mpc::engine::{
-    run_pair_metered, run_pair_metered_hub, run_pair_pipelined_hub, PartyFn,
+    run_pair_metered_cfg, run_pair_metered_hub_cfg, run_pair_pipelined_hub_cfg,
+    PartyFn,
 };
+use crate::mpc::faults::FaultPolicy;
 use crate::mpc::net::{CostMeter, NetConfig};
 use crate::mpc::proto::{recv_share, share_input, PartyCtx, Shared};
 use crate::tensor::{TensorF, TensorR};
@@ -70,7 +72,7 @@ use super::iosched::{self, SchedPolicy};
 use super::observe::{JobEvent, PhaseObs};
 use super::phase::PhaseSchedule;
 use super::quickselect::{
-    top_k_indices, top_k_streamed, ChannelSink, SelectStats, SurvivorSink,
+    top_k_streamed_gated, ChannelSink, SelectStats, SurvivorSink,
 };
 
 // ---------------------------------------------------------------------------
@@ -148,7 +150,16 @@ pub(crate) struct CancelGate {
     /// one per candidate batch + one for QuickSelect;
     /// 0 = undecided, 1 = run, 2 = stop — written once, via CAS
     verdicts: Vec<AtomicU8>,
+    /// per-partition-round latches INSIDE the QuickSelect stage, so a
+    /// cancel lands within one partition round instead of waiting out the
+    /// whole top-k; rounds past the slot capacity run to completion
+    /// (QuickSelect does O(log n) expected rounds, far under the cap)
+    qs_rounds: Vec<AtomicU8>,
 }
+
+/// Latched QS partition rounds per gate; a cancel arriving later than
+/// this many rounds rides the run to completion.
+const QS_ROUND_SLOTS: usize = 64;
 
 impl CancelGate {
     /// A gate over `n_batches` batch slots plus the QuickSelect slot.
@@ -156,11 +167,14 @@ impl CancelGate {
         token: Option<super::job::CancelToken>,
         n_batches: usize,
     ) -> Arc<CancelGate> {
-        let verdicts = match token {
-            Some(_) => (0..=n_batches).map(|_| AtomicU8::new(0)).collect(),
-            None => Vec::new(),
+        let (verdicts, qs_rounds) = match token {
+            Some(_) => (
+                (0..=n_batches).map(|_| AtomicU8::new(0)).collect(),
+                (0..QS_ROUND_SLOTS).map(|_| AtomicU8::new(0)).collect(),
+            ),
+            None => (Vec::new(), Vec::new()),
         };
-        Arc::new(CancelGate { token, verdicts })
+        Arc::new(CancelGate { token, verdicts, qs_rounds })
     }
 
     /// An inert gate for paths without cancellation (legacy shims).
@@ -177,7 +191,21 @@ impl CancelGate {
     /// [`Cancelled`](super::job::Cancelled) when the unit must not run.
     pub(crate) fn checkpoint(&self, slot: usize) -> Result<()> {
         let Some(token) = &self.token else { return Ok(()) };
-        let cell = &self.verdicts[slot];
+        self.latch(token, &self.verdicts[slot])
+    }
+
+    /// Latch (or read) the verdict for QuickSelect partition round
+    /// `round` — called by BOTH parties at the top of each round, so the
+    /// pair stops (if at all) at the same round boundary.
+    pub(crate) fn checkpoint_qs_round(&self, round: usize) -> Result<()> {
+        let Some(token) = &self.token else { return Ok(()) };
+        match self.qs_rounds.get(round) {
+            Some(cell) => self.latch(token, cell),
+            None => Ok(()), // past capacity: ride to completion
+        }
+    }
+
+    fn latch(&self, token: &super::job::CancelToken, cell: &AtomicU8) -> Result<()> {
         let verdict = match cell.load(Ordering::Acquire) {
             0 => {
                 let want: u8 = if token.is_cancelled() { 2 } else { 1 };
@@ -215,7 +243,7 @@ impl CancelGate {
 /// `capture_shares`) out of the production surface.  This struct remains
 /// as the internal execution carrier and as the parameter type of the
 /// `#[deprecated]` shim functions.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SelectionOptions {
     pub batch: usize,
     pub net: NetConfig,
@@ -242,6 +270,9 @@ pub struct SelectionOptions {
     /// Randomness namespace for multi-job services (see [`namespace_tag`]);
     /// 0 = the classic single-job streams.
     pub job_tag: u64,
+    /// Transport fault handling: per-recv deadlines, retry policy and the
+    /// test-only deterministic injector (see [`FaultPolicy`]).
+    pub faults: FaultPolicy,
 }
 
 impl Default for SelectionOptions {
@@ -257,6 +288,7 @@ impl Default for SelectionOptions {
             overlap: false,
             capture_shares: false,
             job_tag: 0,
+            faults: FaultPolicy::default(),
         }
     }
 }
@@ -393,8 +425,8 @@ fn p0_eval_batches(
         let bytes0 = ctx.chan.meter.bytes;
         let rounds0 = ctx.chan.meter.rounds;
         let rows = lane.batch * lane.seq_len;
-        let x = recv_share(ctx, &[rows, lane.dm]);
-        let (_logits, e) = model.forward(ctx, &x, lane.batch);
+        let x = recv_share(ctx, &[rows, lane.dm])?;
+        let (_logits, e) = model.forward(ctx, &x, lane.batch)?;
         let take = (lane.n - b * lane.batch).min(lane.batch);
         ent.extend_from_slice(&e.0.data[..take]);
         if let Some(po) = obs {
@@ -432,8 +464,8 @@ fn p1_eval_batches(
             );
         }
         let acts = embed_clear(&toks, lane.batch, emb_tok, emb_pos);
-        let x = share_input(ctx, &TensorR::from_f32(&acts));
-        let (_logits, e) = model.forward(ctx, &x, lane.batch);
+        let x = share_input(ctx, &TensorR::from_f32(&acts))?;
+        let (_logits, e) = model.forward(ctx, &x, lane.batch)?;
         let take = (lane.n - b * lane.batch).min(lane.batch);
         ent.extend_from_slice(&e.0.data[..take]);
     }
@@ -489,8 +521,8 @@ fn p0_send_session(
     emb_tok_enc: Vec<i64>,
     emb_pos_enc: Vec<i64>,
 ) -> Result<ModelMpc> {
-    ctx.chan.send_only(emb_tok_enc);
-    ctx.chan.send_only(emb_pos_enc);
+    ctx.chan.send_only(emb_tok_enc)?;
+    ctx.chan.send_only(emb_pos_enc)?;
     ModelMpc::setup(ctx, cfg, approx, Some(wf))
 }
 
@@ -501,8 +533,8 @@ fn p1_recv_session(
     cfg: ModelConfig,
     approx: ApproxToggles,
 ) -> Result<(ModelMpc, TensorF, TensorF)> {
-    let tok_tbl = ctx.chan.recv_only();
-    let pos_tbl = ctx.chan.recv_only();
+    let tok_tbl = ctx.chan.recv_only()?;
+    let pos_tbl = ctx.chan.recv_only()?;
     let dm = cfg.d_model;
     let vocab = tok_tbl.len() / dm;
     let emb_tok = TensorF::from_vec(fixed::decode_vec(&tok_tbl), &[vocab, dm]);
@@ -528,6 +560,7 @@ pub fn setup_phase_session(
         dealer_seed,
         phase,
         0,
+        &FaultPolicy::default(),
     )
 }
 
@@ -545,14 +578,16 @@ pub(crate) fn setup_phase_session_on(
     dealer_seed: u64,
     phase: usize,
     job: u64,
+    faults: &FaultPolicy,
 ) -> Result<PhaseSession> {
     let cfg = wf.config()?;
     let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
     let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
     let t0 = Instant::now();
-    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_hub(
+    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_hub_cfg(
         hub.clone(),
         dealer_seed,
+        faults,
         {
             let wf = wf.clone();
             move |ctx: &mut PartyCtx| -> Result<ModelMpc> {
@@ -566,7 +601,7 @@ pub(crate) fn setup_phase_session_on(
                         emb_tok_enc,
                         emb_pos_enc,
                     )?;
-                    model.preopen_weight_deltas(ctx);
+                    model.preopen_weight_deltas(ctx)?;
                     Ok(model)
                 })
             }
@@ -575,7 +610,7 @@ pub(crate) fn setup_phase_session_on(
             ctx.op("session_setup", |ctx| {
                 ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                 let (mut model, emb_tok, emb_pos) = p1_recv_session(ctx, cfg, approx)?;
-                model.preopen_weight_deltas(ctx);
+                model.preopen_weight_deltas(ctx)?;
                 Ok((model, emb_tok, emb_pos))
             })
         },
@@ -673,8 +708,12 @@ pub(crate) fn run_phase_drain(
         });
         lane_fns.push((f0, f1));
     }
-    let lane_out =
-        run_pair_pipelined_hub(session.hub.clone(), opts.dealer_seed, lane_fns);
+    let lane_out = run_pair_pipelined_hub_cfg(
+        session.hub.clone(),
+        opts.dealer_seed,
+        &opts.faults,
+        lane_fns,
+    );
 
     let mut meter_p0 = CostMeter::default();
     let mut meter_p1 = CostMeter::default();
@@ -702,15 +741,16 @@ pub(crate) fn run_phase_drain(
     let qs_slot = gate.qs_slot();
     let gate1 = gate.clone();
     type QsOut = (Vec<usize>, SelectStats, Option<Vec<f32>>);
-    let ((qs0, qm0), (qs1, qm1)) = run_pair_metered_hub(
+    let ((qs0, qm0), (qs1, qm1)) = run_pair_metered_hub_cfg(
         session.hub.clone(),
         opts.dealer_seed,
+        &opts.faults,
         move |ctx: &mut PartyCtx| -> Result<QsOut> {
             gate.checkpoint(qs_slot)?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent0, &[n]));
             let revealed = if reveal {
-                Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
+                Some(crate::mpc::proto::open(ctx, &ent)?.to_f32().data)
             } else {
                 None
             };
@@ -718,7 +758,8 @@ pub(crate) fn run_phase_drain(
                 inner: ChannelSink { order: Vec::with_capacity(keep), tx: stream },
                 obs,
             };
-            let stats = top_k_streamed(ctx, &ent, keep, &mut sink);
+            let stats =
+                top_k_streamed_gated(ctx, &ent, keep, &mut sink, Some(&*gate))?;
             let mut idx = sink.inner.order;
             idx.sort_unstable();
             Ok((idx, stats, revealed))
@@ -728,9 +769,12 @@ pub(crate) fn run_phase_drain(
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent1, &[n]));
             if reveal {
-                let _ = crate::mpc::proto::open(ctx, &ent);
+                let _ = crate::mpc::proto::open(ctx, &ent)?;
             }
-            Ok(top_k_indices(ctx, &ent, keep).0)
+            let mut sel: Vec<usize> = Vec::with_capacity(keep);
+            top_k_streamed_gated(ctx, &ent, keep, &mut sel, Some(&*gate1))?;
+            sel.sort_unstable();
+            Ok(sel)
         },
     );
     let (idx, stats, revealed) = qs0?;
@@ -836,6 +880,7 @@ pub(crate) fn run_phase_at(
             opts.dealer_seed,
             phase,
             opts.job_tag,
+            &opts.faults,
         )?;
         let drain = run_phase_drain(
             &session,
@@ -969,8 +1014,10 @@ pub(crate) fn run_phase_serial(
     let reveal = opts.reveal_entropies;
     let capture = opts.capture_shares;
     type P0Out = (Vec<usize>, SelectStats, Option<Vec<f32>>, Option<Vec<i64>>, u64, f64);
-    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered(
+    let faults = opts.faults.clone();
+    let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_cfg(
         opts.dealer_seed,
+        &faults,
         move |ctx: &mut PartyCtx| -> Result<P0Out> {
             let t0 = Instant::now();
             let bytes0 = ctx.chan.meter.bytes;
@@ -986,14 +1033,15 @@ pub(crate) fn run_phase_serial(
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             let revealed = if reveal {
-                Some(crate::mpc::proto::open(ctx, &ent).to_f32().data)
+                Some(crate::mpc::proto::open(ctx, &ent)?.to_f32().data)
             } else {
                 None
             };
             // the exact protocol of `top_k_indices`, via the streaming form
             // so confirmed survivors reach the observer live
             let mut sink = ObservedSink { inner: ChannelSink::collector(), obs };
-            let stats = top_k_streamed(ctx, &ent, keep, &mut sink);
+            let stats =
+                top_k_streamed_gated(ctx, &ent, keep, &mut sink, Some(&*lane.gate))?;
             let mut idx = sink.inner.order;
             idx.sort_unstable();
             Ok((idx, stats, revealed, cap, setup_bytes, setup_wall))
@@ -1016,9 +1064,12 @@ pub(crate) fn run_phase_serial(
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             if reveal {
-                let _ = crate::mpc::proto::open(ctx, &ent);
+                let _ = crate::mpc::proto::open(ctx, &ent)?;
             }
-            Ok((top_k_indices(ctx, &ent, keep).0, cap))
+            let mut sel: Vec<usize> = Vec::with_capacity(keep);
+            top_k_streamed_gated(ctx, &ent, keep, &mut sel, Some(&*lane1.gate))?;
+            sel.sort_unstable();
+            Ok((sel, cap))
         },
     );
     let (idx1, cap1) = r1?;

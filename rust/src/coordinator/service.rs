@@ -75,10 +75,12 @@ use std::fmt;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::thread;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use crate::mpc::dealer::Hub;
+use crate::mpc::NetError;
 
 use super::job::{CancelToken, Cancelled, SelectionJob};
 use super::observe::{
@@ -124,6 +126,12 @@ impl JobStatus {
             self,
             JobStatus::Queued | JobStatus::Calibrating | JobStatus::Running { .. }
         )
+    }
+
+    /// Done / Failed / Cancelled — the job resolved; `poll`/`wait` carry
+    /// (or carried) its result and no further transitions happen.
+    pub fn is_terminal(self) -> bool {
+        !self.is_pending()
     }
 }
 
@@ -331,6 +339,32 @@ impl JobHandle {
                 self.shared.id
             )),
         }
+    }
+
+    /// [`wait`](JobHandle::wait) with a timeout: blocks at most `timeout`
+    /// and returns `None` if the job is still pending then — the building
+    /// block for stall detection (`selectformer serve` warns on every
+    /// `None`).  On resolution within the window it behaves exactly like
+    /// `wait`: the result is handed out once, and a later call reports it
+    /// already claimed (as `Some(Err(..))`, never `None` — `None` always
+    /// means "still running").
+    pub fn wait_for(&self, timeout: Duration) -> Option<Result<SelectionOutcome>> {
+        let deadline = Instant::now() + timeout;
+        let mut cell = self.shared.cell.lock().unwrap();
+        while cell.status.is_pending() {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                return None;
+            }
+            cell = self.shared.done.wait_timeout(cell, remaining).unwrap().0;
+        }
+        Some(match cell.result.take() {
+            Some(result) => result,
+            None => Err(anyhow!(
+                "job {}: result already claimed by an earlier wait/poll",
+                self.shared.id
+            )),
+        })
     }
 
     /// Live progress feed: a receiver of owned [`JobUpdate`]s converted
@@ -611,21 +645,51 @@ fn worker_loop(inner: &Inner) {
                 Err(anyhow::Error::new(Cancelled))
             }
             Some(hub) => {
-                shared.cell.lock().unwrap().status = if job.has_calibration() {
-                    JobStatus::Calibrating
-                } else {
-                    JobStatus::Running { phase: 0, batches: 0 }
-                };
                 job.hub = Some(hub);
-                // per-job panic containment: a panicking job must not
-                // poison the pool — its handle resolves Err and the
-                // worker lives on
-                match catch_unwind(AssertUnwindSafe(|| job.run())) {
-                    Ok(result) => result,
-                    Err(payload) => Err(anyhow!(
-                        "selection job panicked: {}",
-                        panic_msg(&payload)
-                    )),
+                let retry = job.fault_policy().retry;
+                let mut attempt: u32 = 1;
+                loop {
+                    shared.cell.lock().unwrap().status = if job.has_calibration() {
+                        JobStatus::Calibrating
+                    } else {
+                        JobStatus::Running { phase: 0, batches: 0 }
+                    };
+                    // per-job panic containment: a panicking job must not
+                    // poison the pool — its handle resolves Err and the
+                    // worker lives on
+                    let result = match catch_unwind(AssertUnwindSafe(|| job.run())) {
+                        Ok(result) => result,
+                        Err(payload) => Err(anyhow!(
+                            "selection job panicked: {}",
+                            panic_msg(&payload)
+                        )),
+                    };
+                    // retry ONLY transport faults (NetError-rooted), and
+                    // only while the retry budget lasts and nobody has
+                    // cancelled meanwhile; everything else is terminal
+                    let net_fault = result
+                        .as_ref()
+                        .err()
+                        .map(|e| e.downcast_ref::<NetError>().is_some())
+                        .unwrap_or(false);
+                    if !net_fault
+                        || attempt >= retry.max_attempts
+                        || shared.cancel.is_cancelled()
+                    {
+                        break result;
+                    }
+                    attempt += 1;
+                    let _ = catch_unwind(AssertUnwindSafe(|| {
+                        job.emit(&JobEvent::Retrying { attempt });
+                    }));
+                    // rerun from scratch on a FRESH (private) hub grant:
+                    // the failed attempt may have parked products under
+                    // this job's keys, and replaying the same randomness
+                    // tags against the shared hub would collide.  Hub
+                    // choice is value-transparent, so the retried run is
+                    // byte-identical to an undisturbed one.
+                    job.hub = Some(Hub::new());
+                    thread::sleep(retry.backoff);
                 }
             }
         };
@@ -762,6 +826,34 @@ mod tests {
         let polled = h2.poll().expect("resolved after drain").expect("ok");
         assert_eq!(polled.selected.len(), 12);
         svc.drain(); // idle drain returns immediately
+        svc.shutdown();
+    }
+
+    #[test]
+    fn wait_for_times_out_then_resolves() {
+        let (proxy, ds) = tiny_setup("wait_for");
+        let svc = SelectionService::with_queue(1, 2);
+        let h = svc.submit(tiny_job(&proxy, &ds, 1)).expect("submit");
+        // bounded polls: each None must mean "still pending", and the job
+        // must resolve within the polling budget
+        let mut out = None;
+        for _ in 0..600 {
+            match h.wait_for(Duration::from_millis(50)) {
+                Some(r) => {
+                    out = Some(r);
+                    break;
+                }
+                None => assert!(h.status().is_pending(), "None ⇒ still pending"),
+            }
+        }
+        let out = out.expect("job must finish within 30s").expect("job outcome");
+        assert_eq!(out.selected.len(), 12);
+        assert!(h.status().is_terminal());
+        assert!(!h.status().is_pending());
+        // terminal + already claimed: Some(Err(..)), never None — None
+        // always means "still running"
+        let again = h.wait_for(Duration::ZERO).expect("terminal resolves");
+        assert!(again.unwrap_err().to_string().contains("already claimed"));
         svc.shutdown();
     }
 

@@ -20,6 +20,7 @@
 use anyhow::Result;
 
 use crate::mpc::cmp;
+use crate::mpc::net::NetResult;
 use crate::mpc::nonlin;
 use crate::mpc::proto::{
     self, matmul_batch, matmul_weight, recv_share, share_input, PartyCtx,
@@ -38,10 +39,10 @@ pub struct SecretLinear {
 }
 
 impl SecretLinear {
-    pub fn forward(&mut self, ctx: &mut PartyCtx, x: &Shared) -> Shared {
-        let mut y = matmul_weight(ctx, x, &mut self.w);
+    pub fn forward(&mut self, ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
+        let mut y = matmul_weight(ctx, x, &mut self.w)?;
         y.0.add_row_assign(&self.b.0);
-        y
+        Ok(y)
     }
 }
 
@@ -53,9 +54,9 @@ pub struct SecretMlp {
 }
 
 impl SecretMlp {
-    pub fn forward(&mut self, ctx: &mut PartyCtx, x: &Shared) -> Shared {
-        let h = self.l1.forward(ctx, x);
-        let h = cmp::relu(ctx, &h);
+    pub fn forward(&mut self, ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
+        let h = self.l1.forward(ctx, x)?;
+        let h = cmp::relu(ctx, &h)?;
         self.l2.forward(ctx, &h)
     }
 }
@@ -108,9 +109,9 @@ fn share_named(
                 "{name}: expected {shape:?}, file has {:?}",
                 t.shape
             );
-            Ok(share_input(ctx, &TensorR::from_f32(t)))
+            Ok(share_input(ctx, &TensorR::from_f32(t))?)
         }
-        None => Ok(recv_share(ctx, shape)),
+        None => Ok(recv_share(ctx, shape)?),
     }
 }
 
@@ -229,7 +230,7 @@ impl ModelMpc {
         ctx: &mut PartyCtx,
         x: &Shared,
         batch: usize,
-    ) -> (Shared, Shared) {
+    ) -> NetResult<(Shared, Shared)> {
         let cfg = self.cfg;
         let s = cfg.seq_len;
         let dh = cfg.d_head;
@@ -244,21 +245,21 @@ impl ModelMpc {
                 forward_layer(
                     ctx, layer, &cur, batch, s, dh, scale_dim, h, variant, self.approx,
                 )
-            });
+            })?;
         }
         // mean-pool over the sequence (local)
         let pooled = ctx.chan.compute(|| mean_pool(&cur, batch, s, cfg.d_model));
-        let logits = self.cls.forward(ctx, &pooled);
+        let logits = self.cls.forward(ctx, &pooled)?;
         let use_mlp_entropy =
             variant == Variant::Mlp && self.approx.entropy && self.mlp_se.is_some();
         let ent = if use_mlp_entropy {
             let se = self.mlp_se.as_mut().unwrap();
-            let e = ctx.op("mlp_entropy", |ctx| se.forward(ctx, &logits));
+            let e = ctx.op("mlp_entropy", |ctx| se.forward(ctx, &logits))?;
             Shared(e.0.reshape(&[batch]))
         } else {
-            nonlin::exact_entropy(ctx, &logits, batch, cfg.n_classes)
+            nonlin::exact_entropy(ctx, &logits, batch, cfg.n_classes)?
         };
-        (logits, ent)
+        Ok((logits, ent))
     }
 
     /// Fresh Beaver keys for a new session (avoids cross-session reuse).
@@ -318,9 +319,9 @@ impl ModelMpc {
     /// setup's traffic instead of paying it per lane.  Value-transparent:
     /// pre-opening consumes no stream randomness, so batch shares are
     /// bit-identical to the lazy first-use path (tested in proto.rs).
-    pub fn preopen_weight_deltas(&mut self, ctx: &mut PartyCtx) {
+    pub fn preopen_weight_deltas(&mut self, ctx: &mut PartyCtx) -> NetResult<()> {
         let mut ws = self.weights_mut();
-        proto::preopen_weight_deltas(ctx, &mut ws);
+        proto::preopen_weight_deltas(ctx, &mut ws)
     }
 }
 
@@ -336,12 +337,12 @@ fn forward_layer(
     h: usize,
     variant: Variant,
     approx: ApproxToggles,
-) -> Shared {
+) -> NetResult<Shared> {
     let rows = batch * s;
     let aw = h * dh;
-    let q = layer.wq.forward(ctx, x); // (rows, aw)
-    let k = layer.wk.forward(ctx, x);
-    let v = layer.wv.forward(ctx, x);
+    let q = layer.wq.forward(ctx, x)?; // (rows, aw)
+    let k = layer.wk.forward(ctx, x)?;
+    let v = layer.wv.forward(ctx, x)?;
 
     // split into per-(example, head) (s, dh) blocks
     let q_heads = ctx.chan.compute(|| split_heads(&q, batch, s, h, dh));
@@ -354,7 +355,7 @@ fn forward_layer(
     // all B·H score products in ONE round (§4.4 coalescing)
     let score_pairs: Vec<(&Shared, &Shared)> =
         q_heads.iter().zip(&kt_heads).collect();
-    let scores = ctx.op("qk_scores", |ctx| matmul_batch(ctx, &score_pairs));
+    let scores = ctx.op("qk_scores", |ctx| matmul_batch(ctx, &score_pairs))?;
     let scale = 1.0 / (scale_dim as f32).sqrt();
     let scaled: Vec<Shared> = scores
         .iter()
@@ -367,21 +368,21 @@ fn forward_layer(
     let probs_flat = match (variant, use_mlp_sm) {
         (Variant::Mlp, true) => {
             let sm = layer.mlp_sm.as_mut().unwrap();
-            ctx.op("mlp_softmax", |ctx| sm.forward(ctx, &flat))
+            ctx.op("mlp_softmax", |ctx| sm.forward(ctx, &flat))?
         }
-        (Variant::Quad, _) => quad_softmax(ctx, &flat, batch * h * s, s),
-        (Variant::Poly, _) => poly_softmax(ctx, &flat, batch * h * s, s),
-        _ => nonlin::exact_softmax(ctx, &flat, batch * h * s, s),
+        (Variant::Quad, _) => quad_softmax(ctx, &flat, batch * h * s, s)?,
+        (Variant::Poly, _) => poly_softmax(ctx, &flat, batch * h * s, s)?,
+        _ => nonlin::exact_softmax(ctx, &flat, batch * h * s, s)?,
     };
     let probs = ctx.chan.compute(|| unstack_rows(&probs_flat, batch * h, s, s));
 
     // all B·H attention·V products in one round
     let av_pairs: Vec<(&Shared, &Shared)> = probs.iter().zip(&v_heads).collect();
-    let attn = ctx.op("attn_v", |ctx| matmul_batch(ctx, &av_pairs));
+    let attn = ctx.op("attn_v", |ctx| matmul_batch(ctx, &av_pairs))?;
     let merged = ctx.chan.compute(|| merge_heads(&attn, batch, s, h, dh)); // (rows, aw)
     debug_assert_eq!(merged.shape(), &[rows, aw]);
 
-    let out = layer.wo.forward(ctx, &merged);
+    let out = layer.wo.forward(ctx, &merged)?;
     let res = proto::add(x, &out);
 
     // LayerNorm (attention)
@@ -392,34 +393,34 @@ fn forward_layer(
         let ln = layer.mlp_ln.as_mut().unwrap();
         let (g, b) = (&layer.ln_gamma, &layer.ln_beta);
         ctx.op("mlp_layernorm", |ctx| {
-            let (cen, var) = nonlin::layernorm_moments(ctx, &res, rows, dm);
-            let inv = ln.forward(ctx, &var);
+            let (cen, var) = nonlin::layernorm_moments(ctx, &res, rows, dm)?;
+            let inv = ln.forward(ctx, &var)?;
             ln_affine_secret(ctx, &cen, &inv, g, b, rows, dm)
-        })
+        })?
     } else {
         let (g, b) = (&layer.ln_gamma, &layer.ln_beta);
         ctx.op("layernorm", |ctx| {
-            let (cen, var) = nonlin::layernorm_moments(ctx, &res, rows, dm);
-            let inv = nonlin::exact_rsqrt(ctx, &var);
+            let (cen, var) = nonlin::layernorm_moments(ctx, &res, rows, dm)?;
+            let inv = nonlin::exact_rsqrt(ctx, &var)?;
             ln_affine_secret(ctx, &cen, &inv, g, b, rows, dm)
-        })
+        })?
     };
 
     // full targets: FFN (GeLU) + second LayerNorm — the Oracle's extra cost
     if let (Some((ffn1, ffn2)), Some((g2, b2))) =
         (layer.ffn.as_mut(), layer.ln2.as_ref())
     {
-        let h = ctx.op("ffn1", |ctx| ffn1.forward(ctx, &normed));
-        let h = nonlin::exact_gelu(ctx, &h);
-        let h = ctx.op("ffn2", |ctx| ffn2.forward(ctx, &h));
+        let h = ctx.op("ffn1", |ctx| ffn1.forward(ctx, &normed))?;
+        let h = nonlin::exact_gelu(ctx, &h)?;
+        let h = ctx.op("ffn2", |ctx| ffn2.forward(ctx, &h))?;
         let res2 = proto::add(&normed, &h);
         ctx.op("layernorm", |ctx| {
-            let (cen, var) = nonlin::layernorm_moments(ctx, &res2, rows, dm);
-            let inv = nonlin::exact_rsqrt(ctx, &var);
+            let (cen, var) = nonlin::layernorm_moments(ctx, &res2, rows, dm)?;
+            let inv = nonlin::exact_rsqrt(ctx, &var)?;
             ln_affine_secret(ctx, &cen, &inv, g2, b2, rows, dm)
         })
     } else {
-        normed
+        Ok(normed)
     }
 }
 
@@ -439,24 +440,29 @@ fn ln_affine_secret(
     beta: &Shared,
     rows: usize,
     cols: usize,
-) -> Shared {
+) -> NetResult<Shared> {
     let _ = rows;
     let inv_b = Shared(TensorR::from_vec(
         nonlin::broadcast_col(&inv.0.data, cols),
         cen.shape(),
     ));
-    let normed = proto::mul(ctx, cen, &inv_b);
+    let normed = proto::mul(ctx, cen, &inv_b)?;
     let gamma_b = Shared(TensorR::from_vec(
         nonlin::tile_rows(&gamma.0.data, normed.len() / cols),
         cen.shape(),
     ));
-    let mut scaled = proto::mul(ctx, &normed, &gamma_b);
+    let mut scaled = proto::mul(ctx, &normed, &gamma_b)?;
     scaled.0.add_row_assign(&beta.0);
-    scaled
+    Ok(scaled)
 }
 
 /// MPCFormer 2Quad: (x+5)² / Σ(x+5)².
-fn quad_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Shared {
+fn quad_softmax(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    rows: usize,
+    cols: usize,
+) -> NetResult<Shared> {
     ctx.op("quad_softmax", |ctx| {
         let shifted = proto::add_public(
             ctx,
@@ -466,10 +472,12 @@ fn quad_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
                 x.shape(),
             ),
         );
-        let sq = proto::mul(ctx, &shifted, &shifted);
+        let sq = proto::mul(ctx, &shifted, &shifted)?;
         let sums = nonlin::row_sums(&sq.0.data, cols);
-        let inv =
-            nonlin::exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
+        let inv = nonlin::exact_reciprocal(
+            ctx,
+            &Shared(TensorR::from_vec(sums, &[rows, 1])),
+        )?;
         let bro = nonlin::broadcast_col(&inv.0.data, cols);
         proto::mul(ctx, &sq, &Shared(TensorR::from_vec(bro, x.shape())))
     })
@@ -477,9 +485,14 @@ fn quad_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
 
 /// Bolt-style polynomial softmax: max-stabilized 6-term exp polynomial,
 /// exact normalization — accurate but round-heavy.
-fn poly_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Shared {
+fn poly_softmax(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    rows: usize,
+    cols: usize,
+) -> NetResult<Shared> {
     ctx.op("poly_softmax", |ctx| {
-        let max = cmp::max_last(ctx, x, rows, cols);
+        let max = cmp::max_last(ctx, x, rows, cols)?;
         let mut cen = x.0.clone();
         nonlin::sub_col_inplace(&mut cen.data, &max.0.data, cols);
         let xs = Shared(cen);
@@ -495,13 +508,15 @@ fn poly_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
             &one,
         );
         for _ in 0..6 {
-            acc = proto::mul(ctx, &acc, &acc);
+            acc = proto::mul(ctx, &acc, &acc)?;
         }
         // ReLU guards the clipped negative tail (Bolt's piecewise guard)
-        let e = cmp::relu(ctx, &acc);
+        let e = cmp::relu(ctx, &acc)?;
         let sums = nonlin::row_sums(&e.0.data, cols);
-        let inv =
-            nonlin::exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
+        let inv = nonlin::exact_reciprocal(
+            ctx,
+            &Shared(TensorR::from_vec(sums, &[rows, 1])),
+        )?;
         let bro = nonlin::broadcast_col(&inv.0.data, cols);
         proto::mul(ctx, &e, &Shared(TensorR::from_vec(bro, x.shape())))
     })

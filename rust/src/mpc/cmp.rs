@@ -21,7 +21,7 @@
 
 use crate::tensor::TensorR;
 
-use super::net::Role;
+use super::net::{NetResult, Role};
 use super::proto::{PartyCtx, Shared};
 
 /// XOR-shared bit-vectors, one u64 per element (bit i = value bit i).
@@ -29,7 +29,7 @@ struct BinShared(Vec<u64>);
 
 /// Step 1: arithmetic share → XOR shares of BOTH parties' words.
 /// Returns (bits of x0, bits of x1), each XOR-shared.
-fn a2b_input(ctx: &mut PartyCtx, x: &Shared) -> (BinShared, BinShared) {
+fn a2b_input(ctx: &mut PartyCtx, x: &Shared) -> NetResult<(BinShared, BinShared)> {
     let n = x.len();
     let masks: Vec<u64> = (0..n).map(|_| ctx.rng.next_u64()).collect();
     let my_masked: Vec<u64> = x
@@ -40,27 +40,32 @@ fn a2b_input(ctx: &mut PartyCtx, x: &Shared) -> (BinShared, BinShared) {
         .map(|(&v, &m)| (v as u64) ^ m)
         .collect();
     // send my mask, receive peer's mask — one round
-    let theirs = ctx
-        .chan
-        .exchange(masks.iter().map(|&m| m as i64).collect());
+    ctx.chan
+        .begin_exchange(masks.iter().map(|&m| m as i64).collect())?;
+    let theirs = ctx.chan.recv_exact(n)?;
     let their_masks: Vec<u64> = theirs.into_iter().map(|v| v as u64).collect();
     // my share of my word is (word ^ mask); my share of peer's word is its mask
-    match ctx.role {
+    Ok(match ctx.role {
         Role::ModelOwner => (BinShared(my_masked), BinShared(their_masks)),
         Role::DataOwner => (BinShared(their_masks), BinShared(my_masked)),
-    }
+    })
 }
 
 /// Open a batch of XOR-shared u64 vectors in one round.
-fn bin_open_pair(ctx: &mut PartyCtx, a: &[u64], b: &[u64]) -> (Vec<u64>, Vec<u64>) {
+fn bin_open_pair(
+    ctx: &mut PartyCtx,
+    a: &[u64],
+    b: &[u64],
+) -> NetResult<(Vec<u64>, Vec<u64>)> {
     let n = a.len();
     let mut payload: Vec<i64> = Vec::with_capacity(2 * n);
     payload.extend(a.iter().map(|&v| v as i64));
     payload.extend(b.iter().map(|&v| v as i64));
-    let theirs = ctx.chan.exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
+    let theirs = ctx.chan.recv_exact(2 * n)?;
     let da = (0..n).map(|i| a[i] ^ theirs[i] as u64).collect();
     let db = (0..n).map(|i| b[i] ^ theirs[n + i] as u64).collect();
-    (da, db)
+    Ok((da, db))
 }
 
 /// One batched round computing TWO bitwise ANDs over XOR shares:
@@ -71,7 +76,7 @@ fn bin_and2(
     y: &[u64],
     p: &[u64],
     q: &[u64],
-) -> (Vec<u64>, Vec<u64>) {
+) -> NetResult<(Vec<u64>, Vec<u64>)> {
     let n = x.len();
     let (u1, v1, w1) = ctx.dealer.bin_triples(n);
     let (u2, v2, w2) = ctx.dealer.bin_triples(n);
@@ -82,8 +87,8 @@ fn bin_and2(
     payload.extend((0..n).map(|i| (y[i] ^ v1[i]) as i64));
     payload.extend((0..n).map(|i| (p[i] ^ u2[i]) as i64));
     payload.extend((0..n).map(|i| (q[i] ^ v2[i]) as i64));
-    ctx.chan.begin_exchange(payload);
-    let theirs = ctx.chan.finish_exchange();
+    ctx.chan.begin_exchange(payload)?;
+    let theirs = ctx.chan.recv_exact(4 * n)?;
     let leader = ctx.is_leader();
     let mut z1 = Vec::with_capacity(n);
     let mut z2 = Vec::with_capacity(n);
@@ -102,19 +107,19 @@ fn bin_and2(
         z2.push(b);
     }
     ctx.arena.put(theirs);
-    (z1, z2)
+    Ok((z1, z2))
 }
 
 /// Single bitwise AND (wraps bin_and2 with a dummy second op would waste
 /// bytes; do it directly).
-fn bin_and(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
+fn bin_and(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> NetResult<Vec<u64>> {
     let n = x.len();
     let (u, v, w) = ctx.dealer.bin_triples(n);
     let mut payload = ctx.arena.take(2 * n);
     payload.extend((0..n).map(|i| (x[i] ^ u[i]) as i64));
     payload.extend((0..n).map(|i| (y[i] ^ v[i]) as i64));
-    ctx.chan.begin_exchange(payload);
-    let theirs = ctx.chan.finish_exchange();
+    ctx.chan.begin_exchange(payload)?;
+    let theirs = ctx.chan.recv_exact(2 * n)?;
     let leader = ctx.is_leader();
     let out = (0..n)
         .map(|i| {
@@ -128,29 +133,29 @@ fn bin_and(ctx: &mut PartyCtx, x: &[u64], y: &[u64]) -> Vec<u64> {
         })
         .collect();
     ctx.arena.put(theirs);
-    out
+    Ok(out)
 }
 
 /// LTZ: returns additive shares of the 0/1 indicator [x < 0].
-pub fn ltz(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn ltz(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("ltz", |ctx| ltz_inner(ctx, x))
 }
 
-fn ltz_inner(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+fn ltz_inner(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     let n = x.len();
     // 1. A2B input sharing
-    let (a, b) = a2b_input(ctx, x);
+    let (a, b) = a2b_input(ctx, x)?;
     // 2. Kogge–Stone binary addition of a + b; we need the sign bit of the
     //    64-bit wrapped sum.
     //    P = a ^ b (local), G = a ∧ b (1 AND round).
     let p0: Vec<u64> = a.0.iter().zip(&b.0).map(|(&x, &y)| x ^ y).collect();
-    let mut g = bin_and(ctx, &a.0, &b.0);
+    let mut g = bin_and(ctx, &a.0, &b.0)?;
     let mut p = p0.clone();
     for shift in [1u32, 2, 4, 8, 16, 32] {
         let g_s: Vec<u64> = g.iter().map(|&v| v << shift).collect();
         let p_s: Vec<u64> = p.iter().map(|&v| v << shift).collect();
         // (P ∧ G_s, P ∧ P_s) in one batched round
-        let (pg, pp) = bin_and2(ctx, &p, &g_s, &p, &p_s);
+        let (pg, pp) = bin_and2(ctx, &p, &g_s, &p, &p_s)?;
         for i in 0..n {
             g[i] ^= pg[i]; // G | (P & G_s): disjoint supports → XOR = OR
             p[i] = pp[i];
@@ -172,8 +177,8 @@ fn ltz_inner(ctx: &mut PartyCtx, x: &Shared) -> Shared {
         masked.extend(
             msb_packed.iter().zip(&r_bin).map(|(&m, &r)| (m ^ r) as i64),
         );
-        ctx.chan.begin_exchange(masked);
-        let theirs = ctx.chan.finish_exchange();
+        ctx.chan.begin_exchange(masked)?;
+        let theirs = ctx.chan.recv_exact(words)?;
         let out = msb_packed
             .iter()
             .zip(&r_bin)
@@ -195,19 +200,19 @@ fn ltz_inner(ctx: &mut PartyCtx, x: &Shared) -> Shared {
             share
         })
         .collect();
-    Shared(TensorR::from_vec(data, x.shape()))
+    Ok(Shared(TensorR::from_vec(data, x.shape())))
 }
 
 /// Shares of [a > b] as 0/1 integers.
-pub fn gt(ctx: &mut PartyCtx, a: &Shared, b: &Shared) -> Shared {
+pub fn gt(ctx: &mut PartyCtx, a: &Shared, b: &Shared) -> NetResult<Shared> {
     let diff = super::proto::sub(b, a); // b - a < 0  ⟺  a > b
     ltz(ctx, &diff)
 }
 
 /// ReLU(x) = x · (1 − LTZ(x)); one comparison + one raw Beaver product.
-pub fn relu(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn relu(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("relu", |ctx| {
-        let neg = ltz_inner(ctx, x);
+        let neg = ltz_inner(ctx, x)?;
         let pos = one_minus(ctx, &neg);
         super::proto::mul_raw(ctx, x, &pos)
     })
@@ -225,16 +230,26 @@ pub fn one_minus(ctx: &PartyCtx, s: &Shared) -> Shared {
 }
 
 /// select(c, a, b) = b + c·(a−b) for 0/1 integer shares c.
-pub fn select(ctx: &mut PartyCtx, c: &Shared, a: &Shared, b: &Shared) -> Shared {
+pub fn select(
+    ctx: &mut PartyCtx,
+    c: &Shared,
+    a: &Shared,
+    b: &Shared,
+) -> NetResult<Shared> {
     let diff = super::proto::sub(a, b);
-    let picked = super::proto::mul_raw(ctx, c, &diff);
-    super::proto::add(b, &picked)
+    let picked = super::proto::mul_raw(ctx, c, &diff)?;
+    Ok(super::proto::add(b, &picked))
 }
 
 /// Rowwise max of a (rows, cols) shared tensor via a comparison tree —
 /// ⌈log2 cols⌉ LTZ levels. This is the expensive part of EXACT softmax
 /// over MPC (what the paper's proxies avoid).
-pub fn max_last(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Shared {
+pub fn max_last(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    rows: usize,
+    cols: usize,
+) -> NetResult<Shared> {
     let mut cur: Vec<Vec<i64>> = (0..cols)
         .map(|j| (0..rows).map(|r| x.0.data[r * cols + j]).collect())
         .collect();
@@ -249,8 +264,8 @@ pub fn max_last(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
         }
         let a = Shared(TensorR::from_vec(a_data, &[n]));
         let b = Shared(TensorR::from_vec(b_data, &[n]));
-        let c = gt(ctx, &a, &b);
-        let m = select(ctx, &c, &a, &b);
+        let c = gt(ctx, &a, &b)?;
+        let m = select(ctx, &c, &a, &b)?;
         let mut next: Vec<Vec<i64>> = (0..half)
             .map(|j| m.0.data[j * rows..(j + 1) * rows].to_vec())
             .collect();
@@ -259,7 +274,7 @@ pub fn max_last(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Sha
         }
         cur = next;
     }
-    Shared(TensorR::from_vec(cur.pop().unwrap(), &[rows, 1]))
+    Ok(Shared(TensorR::from_vec(cur.pop().unwrap(), &[rows, 1])))
 }
 
 #[cfg(test)]
@@ -282,9 +297,9 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let xs = share_input(ctx, &x);
-                    let z = ltz(ctx, &xs);
-                    open(ctx, &z)
+                    let xs = share_input(ctx, &x).unwrap();
+                    let z = ltz(ctx, &xs).unwrap();
+                    open(ctx, &z).unwrap()
                         .data
                         .iter()
                         .map(|&v| v as f32)
@@ -292,9 +307,9 @@ mod tests {
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[n]);
-                let z = ltz(ctx, &xs);
-                let _ = open(ctx, &z);
+                let xs = recv_share(ctx, &[n]).unwrap();
+                let z = ltz(ctx, &xs).unwrap();
+                let _ = open(ctx, &z).unwrap();
             },
         );
         got
@@ -325,15 +340,15 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let xs = share_input(ctx, &x);
-                    let z = relu(ctx, &xs);
-                    open(ctx, &z).to_f32()
+                    let xs = share_input(ctx, &x).unwrap();
+                    let z = relu(ctx, &xs).unwrap();
+                    open(ctx, &z).unwrap().to_f32()
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[5]);
-                let z = relu(ctx, &xs);
-                let _ = open(ctx, &z);
+                let xs = recv_share(ctx, &[5]).unwrap();
+                let z = relu(ctx, &xs).unwrap();
+                let _ = open(ctx, &z).unwrap();
             },
         );
         for (g, v) in got.data.iter().zip(&vals) {
@@ -351,9 +366,9 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let xs = share_input(ctx, &x);
+                    let xs = share_input(ctx, &x).unwrap();
                     let before = (ctx.chan.meter.rounds, ctx.chan.meter.bytes);
-                    let _ = ltz(ctx, &xs);
+                    let _ = ltz(ctx, &xs).unwrap();
                     (
                         ctx.chan.meter.rounds - before.0,
                         ctx.chan.meter.bytes - before.1,
@@ -361,8 +376,8 @@ mod tests {
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[64]);
-                let _ = ltz(ctx, &xs);
+                let xs = recv_share(ctx, &[64]).unwrap();
+                let _ = ltz(ctx, &xs).unwrap();
             },
         );
         let (rounds, bytes) = rb;
@@ -394,15 +409,15 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let xs = share_input(ctx, &x);
-                    let m = max_last(ctx, &xs, rows, cols);
-                    open(ctx, &m).to_f32()
+                    let xs = share_input(ctx, &x).unwrap();
+                    let m = max_last(ctx, &xs, rows, cols).unwrap();
+                    open(ctx, &m).unwrap().to_f32()
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[rows, cols]);
-                let m = max_last(ctx, &xs, rows, cols);
-                let _ = open(ctx, &m);
+                let xs = recv_share(ctx, &[rows, cols]).unwrap();
+                let m = max_last(ctx, &xs, rows, cols).unwrap();
+                let _ = open(ctx, &m).unwrap();
             },
         );
         for (g, e) in got.data.iter().zip(&expect) {

@@ -21,6 +21,7 @@ use std::thread;
 use std::time::Instant;
 
 use super::dealer::Hub;
+use super::faults::FaultPolicy;
 use super::net::{chan_pair, CostMeter, Role};
 use super::proto::PartyCtx;
 
@@ -53,6 +54,21 @@ where
     run_pair_metered_hub(Hub::new(), dealer_seed, f0, f1)
 }
 
+/// [`run_pair_metered`] with an explicit [`FaultPolicy`] — recv deadlines
+/// (and, in tests, an injected fault plan) applied to both channels.
+pub fn run_pair_metered_cfg<R0, R1>(
+    dealer_seed: u64,
+    faults: &FaultPolicy,
+    f0: impl FnOnce(&mut PartyCtx) -> R0 + Send + 'static,
+    f1: impl FnOnce(&mut PartyCtx) -> R1 + Send + 'static,
+) -> ((R0, CostMeter), (R1, CostMeter))
+where
+    R0: Send + 'static,
+    R1: Send + 'static,
+{
+    run_pair_metered_hub_cfg(Hub::new(), dealer_seed, faults, f0, f1)
+}
+
 /// [`run_pair_metered`] against a caller-provided preprocessing [`Hub`] —
 /// the selector threads ONE hub through a phase's setup session, batch
 /// lanes and QuickSelect stage so parked C = A·B products survive stage
@@ -68,7 +84,24 @@ where
     R0: Send + 'static,
     R1: Send + 'static,
 {
-    let (c0, c1) = chan_pair();
+    run_pair_metered_hub_cfg(hub, dealer_seed, &FaultPolicy::default(), f0, f1)
+}
+
+/// [`run_pair_metered_hub`] with an explicit [`FaultPolicy`].
+pub fn run_pair_metered_hub_cfg<R0, R1>(
+    hub: Arc<Hub>,
+    dealer_seed: u64,
+    faults: &FaultPolicy,
+    f0: impl FnOnce(&mut PartyCtx) -> R0 + Send + 'static,
+    f1: impl FnOnce(&mut PartyCtx) -> R1 + Send + 'static,
+) -> ((R0, CostMeter), (R1, CostMeter))
+where
+    R0: Send + 'static,
+    R1: Send + 'static,
+{
+    let (mut c0, mut c1) = chan_pair();
+    faults.configure(&mut c0, Role::ModelOwner);
+    faults.configure(&mut c1, Role::DataOwner);
     let hub1 = hub.clone();
     let h1 = thread::Builder::new()
         .name("data-owner".into())
@@ -85,8 +118,13 @@ where
     let mut ctx0 = PartyCtx::new_with_hub(Role::ModelOwner, c0, dealer_seed, hub);
     let r0 = f0(&mut ctx0);
     ctx0.chan.meter.wall_s = t0.elapsed().as_secs_f64();
+    // Drop P0's endpoint BEFORE joining P1: if f0 bailed early on a wire
+    // error, P1 may still be blocked in recv — the drop disconnects the
+    // channel and unblocks it (PeerClosed) instead of deadlocking the join.
+    let meter0 = std::mem::take(&mut ctx0.chan.meter);
+    drop(ctx0);
     let out1 = h1.join().expect("data-owner thread panicked");
-    ((r0, ctx0.chan.meter), out1)
+    ((r0, meter0), out1)
 }
 
 /// A boxed party closure for one pipeline lane.
@@ -109,11 +147,11 @@ where
     run_pair_pipelined_hub(Hub::new(), dealer_seed, lanes)
 }
 
-/// [`run_pair_pipelined`] against a caller-provided [`Hub`] (see
-/// [`run_pair_metered_hub`] for why a phase shares one hub end to end).
-pub fn run_pair_pipelined_hub<R0, R1>(
+/// [`run_pair_pipelined_hub`] with an explicit [`FaultPolicy`].
+pub fn run_pair_pipelined_hub_cfg<R0, R1>(
     hub: Arc<Hub>,
     dealer_seed: u64,
+    faults: &FaultPolicy,
     lanes: Vec<(PartyFn<R0>, PartyFn<R1>)>,
 ) -> Vec<((R0, CostMeter), (R1, CostMeter))>
 where
@@ -125,7 +163,9 @@ where
     crate::tensor::set_gemm_sharers(2 * lanes.len());
     let mut handles = Vec::with_capacity(lanes.len());
     for (lane, (f0, f1)) in lanes.into_iter().enumerate() {
-        let (c0, c1) = chan_pair();
+        let (mut c0, mut c1) = chan_pair();
+        faults.configure(&mut c0, Role::ModelOwner);
+        faults.configure(&mut c1, Role::DataOwner);
         let hub0 = hub.clone();
         let hub1 = hub.clone();
         let h0 = thread::Builder::new()
@@ -167,6 +207,20 @@ where
     out
 }
 
+/// [`run_pair_pipelined`] against a caller-provided [`Hub`] (see
+/// [`run_pair_metered_hub`] for why a phase shares one hub end to end).
+pub fn run_pair_pipelined_hub<R0, R1>(
+    hub: Arc<Hub>,
+    dealer_seed: u64,
+    lanes: Vec<(PartyFn<R0>, PartyFn<R1>)>,
+) -> Vec<((R0, CostMeter), (R1, CostMeter))>
+where
+    R0: Send + 'static,
+    R1: Send + 'static,
+{
+    run_pair_pipelined_hub_cfg(hub, dealer_seed, &FaultPolicy::default(), lanes)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -179,12 +233,12 @@ mod tests {
         let ((_, m0), (_, m1)) = run_pair_metered(
             1,
             move |ctx| {
-                let sh = share_input(ctx, &x);
-                open(ctx, &sh);
+                let sh = share_input(ctx, &x).unwrap();
+                open(ctx, &sh).unwrap();
             },
             move |ctx| {
-                let sh = recv_share(ctx, &[3]);
-                open(ctx, &sh);
+                let sh = recv_share(ctx, &[3]).unwrap();
+                open(ctx, &sh).unwrap();
             },
         );
         assert!(m0.bytes > 0);
@@ -204,13 +258,13 @@ mod tests {
                 let x = TensorR::from_vec(vec![lane as i64 * 10 + 1], &[1]);
                 let f0: PartyFn<i64> = Box::new(move |ctx: &mut PartyCtx| {
                     ctx.reseed_for(lane);
-                    let sh = share_input(ctx, &x);
-                    open(ctx, &sh).data[0]
+                    let sh = share_input(ctx, &x).unwrap();
+                    open(ctx, &sh).unwrap().data[0]
                 });
                 let f1: PartyFn<i64> = Box::new(move |ctx: &mut PartyCtx| {
                     ctx.reseed_for(lane);
-                    let sh = recv_share(ctx, &[1]);
-                    open(ctx, &sh).data[0]
+                    let sh = recv_share(ctx, &[1]).unwrap();
+                    open(ctx, &sh).unwrap().data[0]
                 });
                 (f0, f1)
             })

@@ -1,0 +1,241 @@
+//! Deterministic fault injection for the MPC transport — the chaos
+//! harness the future TCP backend will be validated against.
+//!
+//! A [`FaultPlan`] is a seeded, *deterministic* schedule of exactly one
+//! wire fault, executed by the channel of ONE party (faults are counted
+//! per-endpoint: each party's send sequence is deterministic under
+//! `lanes = 1`, while a cross-party counter would race).  The plan's
+//! atomic counter is shared across every channel it is armed on — setup,
+//! eval and QuickSelect sessions of a job all advance the same message
+//! index, so "kill at message N" means the N-th send of the whole job.
+//! The counter keeps monotonically increasing across retry attempts,
+//! which makes every plan one-shot: a retried job runs clean.
+//!
+//! Fault modes map onto the [`NetError`] taxonomy:
+//!  * [`FaultMode::KillAt`] — the injected party's connection tears down
+//!    mid-send (`PeerClosed` locally; the peer sees `PeerClosed` once the
+//!    dead party's channel drops).
+//!  * [`FaultMode::StallAt`] — the injected party sleeps before the send;
+//!    a peer with a recv deadline surfaces `Timeout`.
+//!  * [`FaultMode::DropReplyAt`] — the frame is silently lost; the peer
+//!    surfaces `Timeout` (or `PeerClosed` once the sender exits).
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::net::{chan_pair, Chan, NetError, NetResult, Role};
+
+/// What goes wrong, and at which per-endpoint message index.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultMode {
+    /// Tear the connection down instead of performing send number `msg`.
+    KillAt { msg: u64 },
+    /// Sleep `dur` before performing send number `msg`.
+    StallAt { msg: u64, dur: Duration },
+    /// Silently drop send number `msg` (the sender meters it as sent).
+    DropReplyAt { msg: u64 },
+}
+
+/// A seeded single-fault schedule.  Construct with [`FaultPlan::new`] /
+/// [`FaultPlan::seeded`], arm on a channel via [`FaultyChan`] or a
+/// `FaultPolicy` with `inject` set, then drive the protocol normally.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// The party whose endpoint executes the fault.
+    pub party: Role,
+    pub mode: FaultMode,
+    /// Recorded provenance (e.g. the `SF_FAULT_SEED` that chose `msg`) so
+    /// a failing chaos run can be reproduced from its log line.
+    pub seed: u64,
+    counter: AtomicU64,
+    fired: AtomicBool,
+}
+
+impl FaultPlan {
+    pub fn new(party: Role, mode: FaultMode) -> Arc<FaultPlan> {
+        FaultPlan::seeded(party, mode, 0)
+    }
+
+    pub fn seeded(party: Role, mode: FaultMode, seed: u64) -> Arc<FaultPlan> {
+        Arc::new(FaultPlan {
+            party,
+            mode,
+            seed,
+            counter: AtomicU64::new(0),
+            fired: AtomicBool::new(false),
+        })
+    }
+
+    /// How many sends the armed endpoint has performed so far.
+    pub fn messages_seen(&self) -> u64 {
+        self.counter.load(Ordering::SeqCst)
+    }
+
+    /// Whether the scheduled fault has been executed.
+    pub fn has_fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// Channel hook: called before every send on an armed endpoint.
+    /// `Ok(true)` delivers, `Ok(false)` drops the frame, `Err` kills.
+    pub(crate) fn on_send(&self) -> NetResult<bool> {
+        let i = self.counter.fetch_add(1, Ordering::SeqCst);
+        match self.mode {
+            FaultMode::KillAt { msg } if i == msg => {
+                self.fired.store(true, Ordering::SeqCst);
+                Err(NetError::PeerClosed)
+            }
+            FaultMode::StallAt { msg, dur } if i == msg => {
+                self.fired.store(true, Ordering::SeqCst);
+                std::thread::sleep(dur);
+                Ok(true)
+            }
+            FaultMode::DropReplyAt { msg } if i == msg => {
+                self.fired.store(true, Ordering::SeqCst);
+                Ok(false)
+            }
+            _ => Ok(true),
+        }
+    }
+}
+
+/// Arms channels with a [`FaultPlan`]: wraps any channel pair so the
+/// injected party's endpoint executes the plan while the peer's endpoint
+/// passes through untouched.
+pub struct FaultyChan {
+    plan: Arc<FaultPlan>,
+}
+
+impl FaultyChan {
+    pub fn new(plan: Arc<FaultPlan>) -> FaultyChan {
+        FaultyChan { plan }
+    }
+
+    /// Arm `chan` if `role` is the plan's injected party; otherwise the
+    /// channel is returned unchanged.
+    pub fn wrap(&self, mut chan: Chan, role: Role) -> Chan {
+        if role == self.plan.party {
+            chan.inject = Some(self.plan.clone());
+        }
+        chan
+    }
+
+    /// A connected channel pair with the injected side armed
+    /// (index 0 = ModelOwner, index 1 = DataOwner, as in `chan_pair`).
+    pub fn pair(&self) -> (Chan, Chan) {
+        let (c0, c1) = chan_pair();
+        (self.wrap(c0, Role::ModelOwner), self.wrap(c1, Role::DataOwner))
+    }
+}
+
+/// How many times a net-failed job is attempted, and the pause between
+/// attempts.  `max_attempts = 1` (the default) means no retry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { max_attempts: 1, backoff: Duration::from_millis(50) }
+    }
+}
+
+/// Transport fault handling knobs, carried on `RuntimeProfile` and
+/// threaded down to every channel the engine builds.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPolicy {
+    /// Per-recv deadline applied to every channel.  `None` (the default)
+    /// blocks indefinitely — in-process channels still unblock when the
+    /// peer drops; a deadline additionally catches stalled-but-alive
+    /// peers as typed [`NetError::Timeout`]s.
+    pub recv_timeout: Option<Duration>,
+    /// Retry behaviour for jobs whose failure is rooted in a `NetError`.
+    pub retry: RetryPolicy,
+    /// Test/bench-only deterministic fault injector; see [`FaultPlan`].
+    #[doc(hidden)]
+    pub inject: Option<Arc<FaultPlan>>,
+}
+
+impl FaultPolicy {
+    /// A policy with a deadline and no retry — what the chaos tests use.
+    pub fn with_deadline(d: Duration) -> FaultPolicy {
+        FaultPolicy { recv_timeout: Some(d), ..Default::default() }
+    }
+
+    /// Apply this policy to one endpoint of a channel pair.
+    pub(crate) fn configure(&self, chan: &mut Chan, role: Role) {
+        chan.deadline = self.recv_timeout;
+        if let Some(plan) = &self.inject {
+            if plan.party == role {
+                chan.inject = Some(plan.clone());
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kill_at_fires_exactly_once_at_n() {
+        let plan = FaultPlan::new(Role::ModelOwner, FaultMode::KillAt { msg: 2 });
+        let fc = FaultyChan::new(plan.clone());
+        let (mut c0, c1) = fc.pair();
+        let _keepalive = c1;
+        assert!(c0.send_only(vec![1]).is_ok());
+        assert!(c0.send_only(vec![2]).is_ok());
+        assert_eq!(c0.send_only(vec![3]), Err(NetError::PeerClosed));
+        assert!(plan.has_fired());
+        // one-shot: the counter has moved past the fault point, so the
+        // same plan on a FRESH pair (a retry attempt) runs clean
+        let (mut r0, r1) = fc.pair();
+        let _keepalive2 = r1;
+        for i in 0..8 {
+            assert!(r0.send_only(vec![i]).is_ok());
+        }
+        assert_eq!(plan.messages_seen(), 11);
+    }
+
+    #[test]
+    fn drop_reply_loses_one_frame_but_meters_it() {
+        let plan = FaultPlan::new(Role::DataOwner, FaultMode::DropReplyAt { msg: 0 });
+        let fc = FaultyChan::new(plan);
+        let (mut c0, mut c1) = fc.pair();
+        c1.send_only(vec![1, 2]).unwrap(); // dropped
+        c1.send_only(vec![3]).unwrap(); // delivered
+        assert_eq!(c1.meter.messages, 2, "sender believes both frames left");
+        assert_eq!(c0.recv_only().unwrap(), vec![3], "first frame was lost");
+    }
+
+    #[test]
+    fn stall_trips_the_peer_deadline() {
+        let plan = FaultPlan::new(
+            Role::DataOwner,
+            FaultMode::StallAt { msg: 0, dur: Duration::from_millis(80) },
+        );
+        let fc = FaultyChan::new(plan);
+        let (mut c0, mut c1) = fc.pair();
+        c0.deadline = Some(Duration::from_millis(15));
+        let h = std::thread::spawn(move || c1.send_only(vec![1]));
+        match c0.recv_only() {
+            Err(NetError::Timeout { .. }) => {}
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+        h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn peer_endpoint_is_untouched() {
+        let plan = FaultPlan::new(Role::ModelOwner, FaultMode::KillAt { msg: 0 });
+        let fc = FaultyChan::new(plan.clone());
+        let (_c0, mut c1) = fc.pair();
+        for i in 0..4 {
+            c1.send_only(vec![i]).unwrap();
+        }
+        assert!(!plan.has_fired(), "DataOwner sends must not advance the plan");
+    }
+}

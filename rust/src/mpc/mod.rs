@@ -7,10 +7,12 @@
 pub mod cmp;
 pub mod dealer;
 pub mod engine;
+pub mod faults;
 pub mod net;
 pub mod nonlin;
 pub mod proto;
 
 pub use engine::{run_pair, run_pair_metered};
-pub use net::{CostMeter, NetConfig, OpRecord, Role};
+pub use faults::{FaultMode, FaultPlan, FaultPolicy, FaultyChan, RetryPolicy};
+pub use net::{CostMeter, NetConfig, NetError, NetResult, OpRecord, Role};
 pub use proto::{PartyCtx, Shared};

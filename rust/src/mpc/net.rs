@@ -7,8 +7,49 @@
 //! meters against a WAN model (paper setup: 100 MB/s, 100 ms) — DESIGN.md §3
 //! explains why this substitution preserves the paper's Fig 6/7 numbers.
 
-use std::sync::mpsc::{Receiver, Sender};
-use std::time::Instant;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::faults::FaultPlan;
+
+/// Typed wire failure.  Every fallible [`Chan`] operation returns one of
+/// these; the coordinator surfaces them as the anyhow root cause of a
+/// failed job (`err.downcast_ref::<NetError>()`), so callers can
+/// distinguish a dead peer from a protocol bug without string matching.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum NetError {
+    /// The peer's endpoint is gone — its thread exited or its `Chan`
+    /// dropped.  Detected immediately on both send and recv.
+    PeerClosed,
+    /// No message arrived within the configured per-recv deadline
+    /// ([`Chan::deadline`]); `op` names the protocol operation that was
+    /// waiting (as set by `PartyCtx::op`).
+    Timeout { op: &'static str, elapsed: Duration },
+    /// A frame arrived but its element count does not match what the
+    /// protocol step expected — the parties have desynchronised.
+    FrameMismatch { op: &'static str, expected: usize, got: usize },
+}
+
+impl std::fmt::Display for NetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NetError::PeerClosed => write!(f, "net: peer closed the connection"),
+            NetError::Timeout { op, elapsed } => {
+                write!(f, "net: recv deadline exceeded in op `{op}` after {elapsed:?}")
+            }
+            NetError::FrameMismatch { op, expected, got } => write!(
+                f,
+                "net: frame mismatch in op `{op}`: expected {expected} elements, got {got}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for NetError {}
+
+/// Result alias used throughout the MPC layer.
+pub type NetResult<T> = std::result::Result<T, NetError>;
 
 /// Which of the two computation parties we are.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -120,17 +161,66 @@ impl CostMeter {
 }
 
 /// Bidirectional channel to the peer, with metering.
+///
+/// All wire operations are fallible: a dead peer is [`NetError::PeerClosed`],
+/// a peer that stalls past [`Chan::deadline`] is [`NetError::Timeout`].
+/// Metering happens only on SUCCESS, so cost assertions are unaffected by
+/// the error paths.
 pub struct Chan {
     pub tx: Sender<Vec<i64>>,
     pub rx: Receiver<Vec<i64>>,
     pub meter: CostMeter,
+    /// Per-recv deadline.  `None` blocks forever (in-process channels
+    /// still unblock on peer drop); `Some(d)` turns a stalled-but-alive
+    /// peer into a typed [`NetError::Timeout`] after `d`.
+    pub deadline: Option<Duration>,
+    /// Label of the protocol op currently on the wire, for `Timeout` /
+    /// `FrameMismatch` attribution.  Maintained by `PartyCtx::op`.
+    pub op_label: &'static str,
+    /// Deterministic fault injector (test/bench only) — see `mpc::faults`.
+    pub(crate) inject: Option<Arc<FaultPlan>>,
 }
 
 impl Chan {
+    fn send_raw(&mut self, data: Vec<i64>) -> NetResult<()> {
+        let n = data.len();
+        if let Some(plan) = self.inject.clone() {
+            if !plan.on_send()? {
+                // injected drop: the frame is lost on the wire, but this
+                // endpoint believes it sent — meter and move on; the PEER
+                // will surface the failure as a recv Timeout.
+                self.meter.bytes += (n * 8) as u64;
+                self.meter.rounds += 1;
+                self.meter.messages += 1;
+                return Ok(());
+            }
+        }
+        self.tx.send(data).map_err(|_| NetError::PeerClosed)?;
+        self.meter.bytes += (n * 8) as u64;
+        self.meter.rounds += 1;
+        self.meter.messages += 1;
+        Ok(())
+    }
+
+    fn recv_raw(&mut self) -> NetResult<Vec<i64>> {
+        match self.deadline {
+            None => self.rx.recv().map_err(|_| NetError::PeerClosed),
+            Some(d) => {
+                let t0 = Instant::now();
+                self.rx.recv_timeout(d).map_err(|e| match e {
+                    RecvTimeoutError::Timeout => {
+                        NetError::Timeout { op: self.op_label, elapsed: t0.elapsed() }
+                    }
+                    RecvTimeoutError::Disconnected => NetError::PeerClosed,
+                })
+            }
+        }
+    }
+
     /// Send our payload and receive the peer's — one communication round
     /// (both directions fly concurrently, as in a real duplex link).
-    pub fn exchange(&mut self, data: Vec<i64>) -> Vec<i64> {
-        self.begin_exchange(data);
+    pub fn exchange(&mut self, data: Vec<i64>) -> NetResult<Vec<i64>> {
+        self.begin_exchange(data)?;
         self.finish_exchange()
     }
 
@@ -139,31 +229,38 @@ impl Chan {
     /// [`Chan::finish_exchange`] overlaps the wire time — the protocol
     /// layer uses this to rebuild Beaver deltas while the opening is in
     /// flight.
-    pub fn begin_exchange(&mut self, data: Vec<i64>) {
-        let n = data.len();
-        self.tx.send(data).expect("peer hung up");
-        self.meter.bytes += (n * 8) as u64;
-        self.meter.rounds += 1;
-        self.meter.messages += 1;
+    pub fn begin_exchange(&mut self, data: Vec<i64>) -> NetResult<()> {
+        self.send_raw(data)
     }
 
     /// Double-buffered exchange, half 2: block for the peer's payload.
-    pub fn finish_exchange(&mut self) -> Vec<i64> {
-        self.rx.recv().expect("peer hung up")
+    pub fn finish_exchange(&mut self) -> NetResult<Vec<i64>> {
+        self.recv_raw()
     }
 
     /// One-directional send (half a round; the matching `recv_only` on the
     /// peer side completes it). Used for input sharing.
-    pub fn send_only(&mut self, data: Vec<i64>) {
-        let n = data.len();
-        self.tx.send(data).expect("peer hung up");
-        self.meter.bytes += (n * 8) as u64;
-        self.meter.rounds += 1;
-        self.meter.messages += 1;
+    pub fn send_only(&mut self, data: Vec<i64>) -> NetResult<()> {
+        self.send_raw(data)
     }
 
-    pub fn recv_only(&mut self) -> Vec<i64> {
-        self.rx.recv().expect("peer hung up")
+    pub fn recv_only(&mut self) -> NetResult<Vec<i64>> {
+        self.recv_raw()
+    }
+
+    /// Receive and insist on an exact element count — the protocol layer's
+    /// desync tripwire ([`NetError::FrameMismatch`] instead of a later
+    /// shape panic).
+    pub fn recv_exact(&mut self, expected: usize) -> NetResult<Vec<i64>> {
+        let data = self.recv_raw()?;
+        if data.len() != expected {
+            return Err(NetError::FrameMismatch {
+                op: self.op_label,
+                expected,
+                got: data.len(),
+            });
+        }
+        Ok(data)
     }
 
     /// Time a block of *local* compute into the meter.
@@ -179,10 +276,15 @@ impl Chan {
 pub fn chan_pair() -> (Chan, Chan) {
     let (tx0, rx1) = std::sync::mpsc::channel();
     let (tx1, rx0) = std::sync::mpsc::channel();
-    (
-        Chan { tx: tx0, rx: rx0, meter: CostMeter::default() },
-        Chan { tx: tx1, rx: rx1, meter: CostMeter::default() },
-    )
+    let mk = |tx, rx| Chan {
+        tx,
+        rx,
+        meter: CostMeter::default(),
+        deadline: None,
+        op_label: "mpc",
+        inject: None,
+    };
+    (mk(tx0, rx0), mk(tx1, rx1))
 }
 
 #[cfg(test)]
@@ -193,16 +295,52 @@ mod tests {
     fn exchange_moves_data_and_meters() {
         let (mut c0, mut c1) = chan_pair();
         let h = std::thread::spawn(move || {
-            let got = c1.exchange(vec![7, 8]);
+            let got = c1.exchange(vec![7, 8]).unwrap();
             (got, c1.meter.clone())
         });
-        let got0 = c0.exchange(vec![1, 2, 3]);
+        let got0 = c0.exchange(vec![1, 2, 3]).unwrap();
         let (got1, m1) = h.join().unwrap();
         assert_eq!(got0, vec![7, 8]);
         assert_eq!(got1, vec![1, 2, 3]);
         assert_eq!(c0.meter.bytes, 24);
         assert_eq!(m1.bytes, 16);
         assert_eq!(c0.meter.rounds, 1);
+    }
+
+    #[test]
+    fn dead_peer_is_typed_not_a_panic() {
+        let (mut c0, c1) = chan_pair();
+        drop(c1);
+        assert_eq!(c0.exchange(vec![1, 2, 3]), Err(NetError::PeerClosed));
+        assert_eq!(c0.recv_only(), Err(NetError::PeerClosed));
+        assert_eq!(c0.send_only(vec![9]), Err(NetError::PeerClosed));
+        // failed operations must not meter
+        assert_eq!(c0.meter.bytes, 0);
+        assert_eq!(c0.meter.rounds, 0);
+    }
+
+    #[test]
+    fn recv_deadline_fires_with_op_attribution() {
+        let (mut c0, _c1_keepalive) = chan_pair();
+        c0.deadline = Some(Duration::from_millis(20));
+        c0.op_label = "ltz";
+        match c0.recv_only() {
+            Err(NetError::Timeout { op, elapsed }) => {
+                assert_eq!(op, "ltz");
+                assert!(elapsed >= Duration::from_millis(20));
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn recv_exact_flags_frame_mismatch() {
+        let (mut c0, mut c1) = chan_pair();
+        c1.send_only(vec![1, 2, 3]).unwrap();
+        match c0.recv_exact(5) {
+            Err(NetError::FrameMismatch { expected: 5, got: 3, .. }) => {}
+            other => panic!("expected FrameMismatch, got {other:?}"),
+        }
     }
 
     #[test]
@@ -228,10 +366,10 @@ mod tests {
     #[test]
     fn split_exchange_overlaps_and_meters_once() {
         let (mut c0, mut c1) = chan_pair();
-        let h = std::thread::spawn(move || c1.exchange(vec![9]));
-        c0.begin_exchange(vec![1, 2]);
+        let h = std::thread::spawn(move || c1.exchange(vec![9]).unwrap());
+        c0.begin_exchange(vec![1, 2]).unwrap();
         // local work here would overlap the wire; then collect
-        let got = c0.finish_exchange();
+        let got = c0.finish_exchange().unwrap();
         assert_eq!(got, vec![9]);
         assert_eq!(h.join().unwrap(), vec![1, 2]);
         assert_eq!(c0.meter.rounds, 1);

@@ -20,6 +20,7 @@ use crate::fixed;
 use crate::tensor::TensorR;
 
 use super::cmp;
+use super::net::NetResult;
 use super::proto::{self, PartyCtx, Shared};
 
 /// Shares of a public real constant (leader holds it, peer holds zero).
@@ -64,7 +65,7 @@ pub(crate) fn row_sums(data: &[i64], cols: usize) -> Vec<i64> {
 }
 
 /// exp(x) ≈ (1 + x/2^k)^(2^k) with k = 8 — 8 interactive squarings.
-pub fn exact_exp(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn exact_exp(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("exp", |ctx| {
         const K: u32 = 8;
         let scaled = proto::mul_public_fixed(x, 1.0 / (1u32 << K) as f32);
@@ -77,15 +78,15 @@ pub fn exact_exp(ctx: &mut PartyCtx, x: &Shared) -> Shared {
             ),
         );
         for _ in 0..K {
-            y = proto::mul(ctx, &y, &y);
+            y = proto::mul(ctx, &y, &y)?;
         }
-        y
+        Ok(y)
     })
 }
 
 /// 1/x for x > 0 ≈ Newton–Raphson with Crypten's exp-based init:
 /// y0 = 3·exp(0.5 − x) + 0.003.
-pub fn exact_reciprocal(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn exact_reciprocal(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("reciprocal", |ctx| {
         let half_minus = {
             let neg = Shared(x.0.neg());
@@ -95,7 +96,7 @@ pub fn exact_reciprocal(ctx: &mut PartyCtx, x: &Shared) -> Shared {
                 &TensorR::from_vec(vec![fixed::encode(0.5); x.len()], x.shape()),
             )
         };
-        let e = exact_exp(ctx, &half_minus);
+        let e = exact_exp(ctx, &half_minus)?;
         let mut y = proto::mul_public_fixed(&e, 3.0);
         y = proto::add_public(
             ctx,
@@ -104,7 +105,7 @@ pub fn exact_reciprocal(ctx: &mut PartyCtx, x: &Shared) -> Shared {
         );
         for _ in 0..10 {
             // y ← y·(2 − x·y)
-            let xy = proto::mul(ctx, x, &y);
+            let xy = proto::mul(ctx, x, &y)?;
             let two_minus = {
                 let neg = Shared(xy.0.neg());
                 proto::add_public(
@@ -113,18 +114,18 @@ pub fn exact_reciprocal(ctx: &mut PartyCtx, x: &Shared) -> Shared {
                     &TensorR::from_vec(vec![fixed::encode(2.0); x.len()], x.shape()),
                 )
             };
-            y = proto::mul(ctx, &y, &two_minus);
+            y = proto::mul(ctx, &y, &two_minus)?;
         }
-        y
+        Ok(y)
     })
 }
 
 /// 1/sqrt(x) for x > 0 — NR on y ← y·(3 − x·y²)/2 with exp init.
-pub fn exact_rsqrt(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn exact_rsqrt(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("rsqrt", |ctx| {
         let half = proto::mul_public_fixed(x, 0.5);
         let neg_half = Shared(half.0.neg());
-        let e = exact_exp(ctx, &neg_half);
+        let e = exact_exp(ctx, &neg_half)?;
         let mut y = proto::mul_public_fixed(&e, 2.2);
         y = proto::add_public(
             ctx,
@@ -132,8 +133,8 @@ pub fn exact_rsqrt(ctx: &mut PartyCtx, x: &Shared) -> Shared {
             &TensorR::from_vec(vec![fixed::encode(0.2); x.len()], x.shape()),
         );
         for _ in 0..10 {
-            let y2 = proto::mul(ctx, &y, &y);
-            let xy2 = proto::mul(ctx, x, &y2);
+            let y2 = proto::mul(ctx, &y, &y)?;
+            let xy2 = proto::mul(ctx, x, &y2)?;
             let three_minus = {
                 let neg = Shared(xy2.0.neg());
                 proto::add_public(
@@ -142,16 +143,16 @@ pub fn exact_rsqrt(ctx: &mut PartyCtx, x: &Shared) -> Shared {
                     &TensorR::from_vec(vec![fixed::encode(3.0); x.len()], x.shape()),
                 )
             };
-            let prod = proto::mul(ctx, &y, &three_minus);
+            let prod = proto::mul(ctx, &y, &three_minus)?;
             y = proto::mul_public_fixed(&prod, 0.5);
         }
-        y
+        Ok(y)
     })
 }
 
 /// ln(x) for x in (0, ~40) — iterative: y ← y + x·exp(−y) − 1 (3 rounds of
 /// exp + product), init y0 = x/31 − 1.59 (fit for the softmax-prob range).
-pub fn exact_log(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn exact_log(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("log", |ctx| {
         let mut y = proto::mul_public_fixed(x, 1.0 / 31.0);
         y = proto::add_public(
@@ -161,8 +162,8 @@ pub fn exact_log(ctx: &mut PartyCtx, x: &Shared) -> Shared {
         );
         for _ in 0..3 {
             let neg_y = Shared(y.0.neg());
-            let e = exact_exp(ctx, &neg_y);
-            let xe = proto::mul(ctx, x, &e);
+            let e = exact_exp(ctx, &neg_y)?;
+            let xe = proto::mul(ctx, x, &e)?;
             y = proto::add(&y, &xe);
             y = proto::add_public(
                 ctx,
@@ -170,15 +171,15 @@ pub fn exact_log(ctx: &mut PartyCtx, x: &Shared) -> Shared {
                 &TensorR::from_vec(vec![fixed::encode(-1.0); x.len()], x.shape()),
             );
         }
-        y
+        Ok(y)
     })
 }
 
 /// sigmoid(x) = 1/(1+exp(−x)) — exp + reciprocal composition.
-pub fn exact_sigmoid(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn exact_sigmoid(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("sigmoid", |ctx| {
         let neg = Shared(x.0.neg());
-        let e = exact_exp(ctx, &neg);
+        let e = exact_exp(ctx, &neg)?;
         let one_plus = proto::add_public(
             ctx,
             &e,
@@ -190,10 +191,10 @@ pub fn exact_sigmoid(ctx: &mut PartyCtx, x: &Shared) -> Shared {
 
 /// GeLU(x) ≈ x·sigmoid(1.702x) (the standard MPC-friendly identity) —
 /// still an exp + NR-reciprocal pipeline, i.e. expensive.
-pub fn exact_gelu(ctx: &mut PartyCtx, x: &Shared) -> Shared {
+pub fn exact_gelu(ctx: &mut PartyCtx, x: &Shared) -> NetResult<Shared> {
     ctx.op("gelu", |ctx| {
         let scaled = proto::mul_public_fixed(x, 1.702);
-        let s = exact_sigmoid(ctx, &scaled);
+        let s = exact_sigmoid(ctx, &scaled)?;
         proto::mul(ctx, x, &s)
     })
 }
@@ -201,30 +202,41 @@ pub fn exact_gelu(ctx: &mut PartyCtx, x: &Shared) -> Shared {
 /// EXACT softmax over the last axis of a (rows, cols) shared tensor:
 /// max-tree (log2(cols) comparisons) → exp → sum → reciprocal → product.
 /// This is the paper's Fig 2 cost monster.
-pub fn exact_softmax(ctx: &mut PartyCtx, x: &Shared, rows: usize, cols: usize) -> Shared {
+pub fn exact_softmax(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    rows: usize,
+    cols: usize,
+) -> NetResult<Shared> {
     ctx.op("softmax", |ctx| {
-        let max = cmp::max_last(ctx, x, rows, cols); // (rows,1)
+        let max = cmp::max_last(ctx, x, rows, cols)?; // (rows,1)
         // broadcast-subtract the rowwise max
         let mut cen = x.0.clone();
         sub_col_inplace(&mut cen.data, &max.0.data, cols);
-        let e = exact_exp(ctx, &Shared(cen));
+        let e = exact_exp(ctx, &Shared(cen))?;
         let sums = row_sums(&e.0.data, cols);
-        let inv = exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])));
+        let inv =
+            exact_reciprocal(ctx, &Shared(TensorR::from_vec(sums, &[rows, 1])))?;
         let bro = broadcast_col(&inv.0.data, cols);
         proto::mul(ctx, &e, &Shared(TensorR::from_vec(bro, &[rows, cols])))
     })
 }
 
 /// Exact prediction entropy −Σ p·ln p over logits (rows, cols).
-pub fn exact_entropy(ctx: &mut PartyCtx, logits: &Shared, rows: usize, cols: usize) -> Shared {
+pub fn exact_entropy(
+    ctx: &mut PartyCtx,
+    logits: &Shared,
+    rows: usize,
+    cols: usize,
+) -> NetResult<Shared> {
     ctx.op("entropy", |ctx| {
-        let p = exact_softmax(ctx, logits, rows, cols);
+        let p = exact_softmax(ctx, logits, rows, cols)?;
         // clamp-free: probabilities from softmax are > 0 in fixed point
-        let logp = exact_log(ctx, &p);
-        let plogp = proto::mul(ctx, &p, &logp);
+        let logp = exact_log(ctx, &p)?;
+        let plogp = proto::mul(ctx, &p, &logp)?;
         let sums: Vec<i64> =
             row_sums(&plogp.0.data, cols).iter().map(|&v| v.wrapping_neg()).collect();
-        Shared(TensorR::from_vec(sums, &[rows]))
+        Ok(Shared(TensorR::from_vec(sums, &[rows])))
     })
 }
 
@@ -236,10 +248,10 @@ pub fn exact_layernorm(
     beta: &TensorR,
     rows: usize,
     cols: usize,
-) -> Shared {
+) -> NetResult<Shared> {
     ctx.op("layernorm", |ctx| {
-        let (cen, var) = layernorm_moments(ctx, x, rows, cols);
-        let inv = exact_rsqrt(ctx, &var);
+        let (cen, var) = layernorm_moments(ctx, x, rows, cols)?;
+        let inv = exact_rsqrt(ctx, &var)?;
         layernorm_affine(ctx, &cen, &inv, gamma, beta, rows, cols)
     })
 }
@@ -251,19 +263,19 @@ pub fn layernorm_moments(
     x: &Shared,
     rows: usize,
     cols: usize,
-) -> (Shared, Shared) {
+) -> NetResult<(Shared, Shared)> {
     let mean = Shared(x.0.clone().reshape(&[rows, cols]).mean_last()); // (rows,1)
     let mut cen = x.0.clone();
     sub_col_inplace(&mut cen.data, &mean.0.data, cols);
     let cen = Shared(cen);
-    let sq = proto::mul(ctx, &cen, &cen);
+    let sq = proto::mul(ctx, &cen, &cen)?;
     let var = Shared(sq.0.clone().reshape(&[rows, cols]).mean_last());
     let var = proto::add_public(
         ctx,
         &var,
         &TensorR::from_vec(vec![fixed::encode(1e-5); rows], &[rows, 1]),
     );
-    (cen, var)
+    Ok((cen, var))
 }
 
 /// (x−μ)·inv·gamma + beta with public affine params.
@@ -275,10 +287,11 @@ pub fn layernorm_affine(
     beta: &TensorR,
     rows: usize,
     cols: usize,
-) -> Shared {
+) -> NetResult<Shared> {
     let _ = rows;
     let bro = broadcast_col(&inv.0.data, cols);
-    let normed = proto::mul(ctx, cen, &Shared(TensorR::from_vec(bro, cen.shape())));
+    let normed =
+        proto::mul(ctx, cen, &Shared(TensorR::from_vec(bro, cen.shape())))?;
     // public affine: elementwise gamma (scale) + beta (leader adds)
     let mut data = Vec::with_capacity(normed.len());
     for chunk in normed.0.data.chunks_exact(cols) {
@@ -293,7 +306,7 @@ pub fn layernorm_affine(
     if ctx.is_leader() {
         out.add_row_assign(beta);
     }
-    Shared(out)
+    Ok(Shared(out))
 }
 
 // ---------------------------------------------------------------------------
@@ -313,13 +326,13 @@ pub struct MlpWeights {
 }
 
 /// y = ReLU(x·W1 + b1)·W2 + b2 over a shared (rows, d_in) input.
-pub fn mlp_forward(ctx: &mut PartyCtx, x: &Shared, w: &MlpWeights) -> Shared {
+pub fn mlp_forward(ctx: &mut PartyCtx, x: &Shared, w: &MlpWeights) -> NetResult<Shared> {
     ctx.op("mlp_emul", |ctx| {
         let h = proto::matmul_public(ctx, x, &w.w1);
         let h = proto::add_public(ctx, &h, &broadcast_row(&w.b1, h.shape()));
-        let h = cmp::relu(ctx, &h);
+        let h = cmp::relu(ctx, &h)?;
         let o = proto::matmul_public(ctx, &h, &w.w2);
-        proto::add_public(ctx, &o, &broadcast_row(&w.b2, o.shape()))
+        Ok(proto::add_public(ctx, &o, &broadcast_row(&w.b2, o.shape())))
     })
 }
 
@@ -343,10 +356,10 @@ pub fn mlp_layernorm(
     w: &MlpWeights,
     rows: usize,
     cols: usize,
-) -> Shared {
+) -> NetResult<Shared> {
     ctx.op("mlp_layernorm", |ctx| {
-        let (cen, var) = layernorm_moments(ctx, x, rows, cols);
-        let inv = mlp_forward(ctx, &var, w); // (rows,1)
+        let (cen, var) = layernorm_moments(ctx, x, rows, cols)?;
+        let inv = mlp_forward(ctx, &var, w)?; // (rows,1)
         layernorm_affine(ctx, &cen, &inv, gamma, beta, rows, cols)
     })
 }
@@ -364,20 +377,20 @@ mod tests {
 
     fn both<F>(seed: u64, x: TensorR, f: F) -> TensorF
     where
-        F: Fn(&mut PartyCtx, &Shared) -> Shared + Send + Clone + 'static,
+        F: Fn(&mut PartyCtx, &Shared) -> NetResult<Shared> + Send + Clone + 'static,
     {
         let shape = x.shape.clone();
         let f1 = f.clone();
         let (got, _) = run_pair(
             seed,
             move |ctx| {
-                let xs = share_input(ctx, &x);
-                let z = f(ctx, &xs);
-                open(ctx, &z).to_f32()
+                let xs = share_input(ctx, &x).unwrap();
+                let z = f(ctx, &xs).unwrap();
+                open(ctx, &z).unwrap().to_f32()
             },
             move |ctx| {
-                let xs = recv_share(ctx, &shape);
-                let z = f1(ctx, &xs);
+                let xs = recv_share(ctx, &shape).unwrap();
+                let z = f1(ctx, &xs).unwrap();
                 let _ = open(ctx, &z);
             },
         );

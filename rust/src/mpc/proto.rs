@@ -17,7 +17,7 @@ use crate::tensor::TensorR;
 use crate::util::Rng;
 
 use super::dealer::Dealer;
-use super::net::{Chan, Role};
+use super::net::{Chan, NetResult, Role};
 
 /// Recycled `Vec<i64>` buffers for opening payloads — the cross-thread
 /// channels consume the vectors we send, but every exchange hands back the
@@ -106,10 +106,15 @@ impl PartyCtx {
         self.rng = Rng::new(mixed ^ (0x9e37 + self.role.index() as u64 * 77));
     }
 
-    /// Record the footprint of a logical op spanning `f`.
+    /// Record the footprint of a logical op spanning `f`.  Also labels the
+    /// channel for the op's duration, so a recv deadline that fires inside
+    /// `f` reports WHICH protocol step was starved (`NetError::Timeout.op`).
     pub fn op<R>(&mut self, name: &'static str, f: impl FnOnce(&mut Self) -> R) -> R {
         let before = self.chan.meter.snapshot();
+        let prev = self.chan.op_label;
+        self.chan.op_label = name;
         let r = f(self);
+        self.chan.op_label = prev;
         self.chan.meter.merge_op_into(name, before);
         r
     }
@@ -138,7 +143,7 @@ impl Shared {
 
 /// Secret-share a tensor this party owns in cleartext: sample a mask,
 /// send it to the peer, keep x − mask. Peer calls [`recv_share`].
-pub fn share_input(ctx: &mut PartyCtx, clear: &TensorR) -> Shared {
+pub fn share_input(ctx: &mut PartyCtx, clear: &TensorR) -> NetResult<Shared> {
     let mask: Vec<i64> = (0..clear.len()).map(|_| ctx.rng.next_i64()).collect();
     let my: Vec<i64> = clear
         .data
@@ -146,26 +151,30 @@ pub fn share_input(ctx: &mut PartyCtx, clear: &TensorR) -> Shared {
         .zip(&mask)
         .map(|(&x, &m)| x.wrapping_sub(m))
         .collect();
-    ctx.chan.send_only(mask);
-    Shared(TensorR::from_vec(my, &clear.shape))
+    ctx.chan.send_only(mask)?;
+    Ok(Shared(TensorR::from_vec(my, &clear.shape)))
 }
 
-/// Receive our share of a tensor the peer is inputting.
-pub fn recv_share(ctx: &mut PartyCtx, shape: &[usize]) -> Shared {
-    let data = ctx.chan.recv_only();
-    Shared(TensorR::from_vec(data, shape))
+/// Receive our share of a tensor the peer is inputting.  A frame whose
+/// element count disagrees with `shape` is a typed `FrameMismatch`, not a
+/// downstream shape panic.
+pub fn recv_share(ctx: &mut PartyCtx, shape: &[usize]) -> NetResult<Shared> {
+    let expected: usize = shape.iter().product();
+    let data = ctx.chan.recv_exact(expected)?;
+    Ok(Shared(TensorR::from_vec(data, shape)))
 }
 
 /// Open (reconstruct) a shared tensor to both parties. One round.
 /// The peer's buffer is reused as the result — no copy on either side.
-pub fn open(ctx: &mut PartyCtx, x: &Shared) -> TensorR {
+pub fn open(ctx: &mut PartyCtx, x: &Shared) -> NetResult<TensorR> {
     let mut payload = ctx.arena.take(x.len());
     payload.extend_from_slice(&x.0.data);
-    let mut theirs = ctx.chan.exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
+    let mut theirs = ctx.chan.recv_exact(x.len())?;
     for (v, &mine) in theirs.iter_mut().zip(&x.0.data) {
         *v = v.wrapping_add(mine);
     }
-    TensorR::from_vec(theirs, x.shape())
+    Ok(TensorR::from_vec(theirs, x.shape()))
 }
 
 /// Open several shared tensors in a single round (batched / coalesced):
@@ -173,13 +182,14 @@ pub fn open(ctx: &mut PartyCtx, x: &Shared) -> TensorR {
 /// pays ONE latency.  (The nonlinear ops already open whole tensors per
 /// step — their rows are batched inside `open`/`exchange` — so this is
 /// for cross-op coalescing.)
-pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> Vec<TensorR> {
+pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> NetResult<Vec<TensorR>> {
     let total = xs.iter().map(|x| x.len()).sum();
     let mut payload = ctx.arena.take(total);
     for x in xs {
         payload.extend_from_slice(&x.0.data);
     }
-    let theirs = ctx.chan.exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
+    let theirs = ctx.chan.recv_exact(total)?;
     let mut out = Vec::with_capacity(xs.len());
     let mut off = 0;
     for x in xs {
@@ -193,7 +203,7 @@ pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> Vec<TensorR> {
         off += n;
     }
     ctx.arena.put(theirs);
-    out
+    Ok(out)
 }
 
 // ---------------------------------------------------------------------------
@@ -268,10 +278,10 @@ fn trunc_shift_local_mut(ctx: &PartyCtx, a: &mut Shared, bits: u32) {
 
 /// Elementwise product of two shared fixed-point tensors (Beaver, one
 /// opening round, then local truncation).
-pub fn mul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
-    let mut raw = mul_raw(ctx, x, y);
+pub fn mul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> NetResult<Shared> {
+    let mut raw = mul_raw(ctx, x, y)?;
     trunc_local_mut(ctx, &mut raw);
-    raw
+    Ok(raw)
 }
 
 /// Elementwise product WITHOUT the fixed-point re-scale — for integer
@@ -280,7 +290,7 @@ pub fn mul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
 /// Zero-copy: the payload buffer ships by value (no clone); the masked
 /// differences the assembly needs are rebuilt while the opening is in
 /// flight (`begin_exchange`/`finish_exchange`).
-pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
+pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> NetResult<Shared> {
     assert_eq!(x.shape(), y.shape());
     let n = x.len();
     let (a, b, c) = ctx.chan.compute(|| ctx.dealer.triples(n));
@@ -292,7 +302,7 @@ pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
     for i in 0..n {
         payload.push(y.0.data[i].wrapping_sub(b[i]));
     }
-    ctx.chan.begin_exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
     // overlap the wire: rebuild our halves of the opened differences
     let mut eps = ctx.arena.take(n);
     let mut del = ctx.arena.take(n);
@@ -300,7 +310,7 @@ pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
         eps.push(x.0.data[i].wrapping_sub(a[i]));
         del.push(y.0.data[i].wrapping_sub(b[i]));
     }
-    let theirs = ctx.chan.finish_exchange();
+    let theirs = ctx.chan.recv_exact(2 * n)?;
     let leader = ctx.is_leader();
     let data = ctx.chan.compute(|| {
         let mut out = Vec::with_capacity(n);
@@ -321,7 +331,7 @@ pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
     ctx.arena.put(eps);
     ctx.arena.put(del);
     ctx.arena.put(theirs);
-    Shared(TensorR::from_vec(data, x.shape()))
+    Ok(Shared(TensorR::from_vec(data, x.shape())))
 }
 
 /// Product of THREE shared tensors in ONE opening round via a 3-factor
@@ -340,7 +350,12 @@ pub fn mul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
 /// (scale 1, no truncation) or operands known to be ≪ 1; keep sequential
 /// [`mul`]s for general fixed-point chains until a slack-bit trunc lands
 /// (see ROADMAP perf notes).
-pub fn mul3_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared, z: &Shared) -> Shared {
+pub fn mul3_raw(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    y: &Shared,
+    z: &Shared,
+) -> NetResult<Shared> {
     assert_eq!(x.shape(), y.shape());
     assert_eq!(x.shape(), z.shape());
     let n = x.len();
@@ -356,7 +371,7 @@ pub fn mul3_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared, z: &Shared) -> Share
     for i in 0..n {
         payload.push(z.0.data[i].wrapping_sub(c[i]));
     }
-    ctx.chan.begin_exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
     let mut ex = ctx.arena.take(n);
     let mut fy = ctx.arena.take(n);
     let mut gz = ctx.arena.take(n);
@@ -365,7 +380,7 @@ pub fn mul3_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared, z: &Shared) -> Share
         fy.push(y.0.data[i].wrapping_sub(b[i]));
         gz.push(z.0.data[i].wrapping_sub(c[i]));
     }
-    let theirs = ctx.chan.finish_exchange();
+    let theirs = ctx.chan.recv_exact(3 * n)?;
     let leader = ctx.is_leader();
     let data = ctx.chan.compute(|| {
         let mut out = Vec::with_capacity(n);
@@ -391,18 +406,18 @@ pub fn mul3_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared, z: &Shared) -> Share
     ctx.arena.put(fy);
     ctx.arena.put(gz);
     ctx.arena.put(theirs);
-    Shared(TensorR::from_vec(data, x.shape()))
+    Ok(Shared(TensorR::from_vec(data, x.shape())))
 }
 
 /// Shared (m,k) × shared (k,n) matrix product via one matrix Beaver
 /// triple: ONE opening round for the whole matmul, then local truncation.
-pub fn matmul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
-    let mut raw = matmul_raw(ctx, x, y);
+pub fn matmul(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> NetResult<Shared> {
+    let mut raw = matmul_raw(ctx, x, y)?;
     trunc_local_mut(ctx, &mut raw);
-    raw
+    Ok(raw)
 }
 
-pub fn matmul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
+pub fn matmul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> NetResult<Shared> {
     assert_eq!(x.0.rank(), 2);
     assert_eq!(y.0.rank(), 2);
     let (m, k) = (x.shape()[0], x.shape()[1]);
@@ -412,11 +427,11 @@ pub fn matmul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
     let mut payload = ctx.arena.take(m * k + k * n);
     payload.extend(x.0.data.iter().zip(&a.data).map(|(&p, &q)| p.wrapping_sub(q)));
     payload.extend(y.0.data.iter().zip(&b.data).map(|(&p, &q)| p.wrapping_sub(q)));
-    ctx.chan.begin_exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
     // overlap the wire: our halves of the opened eps/del matrices
     let mut eps = x.0.sub(&a);
     let mut del = y.0.sub(&b);
-    let theirs = ctx.chan.finish_exchange();
+    let theirs = ctx.chan.recv_exact(m * k + k * n)?;
     let leader = ctx.is_leader();
     let out = ctx.chan.compute(|| {
         for (v, &t) in eps.data.iter_mut().zip(&theirs[..m * k]) {
@@ -434,7 +449,7 @@ pub fn matmul_raw(ctx: &mut PartyCtx, x: &Shared, y: &Shared) -> Shared {
         z
     });
     ctx.arena.put(theirs);
-    Shared(out)
+    Ok(Shared(out))
 }
 
 /// Shared × PUBLIC matrix product — no interaction at all: each party
@@ -447,9 +462,12 @@ pub fn matmul_public(ctx: &PartyCtx, x: &Shared, w: &TensorR) -> Shared {
 /// Batched shared×shared matmuls: every pair's (X−A, Y−B) openings fly in
 /// ONE communication round — the per-head attention products of a whole
 /// batch collapse from B·H rounds to 1 (paper §4.4 coalescing).
-pub fn matmul_batch(ctx: &mut PartyCtx, pairs: &[(&Shared, &Shared)]) -> Vec<Shared> {
+pub fn matmul_batch(
+    ctx: &mut PartyCtx,
+    pairs: &[(&Shared, &Shared)],
+) -> NetResult<Vec<Shared>> {
     if pairs.is_empty() {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let mut triples = Vec::with_capacity(pairs.len());
     let mut total = 0;
@@ -466,13 +484,13 @@ pub fn matmul_batch(ctx: &mut PartyCtx, pairs: &[(&Shared, &Shared)]) -> Vec<Sha
         payload.extend(y.0.data.iter().zip(&t.1.data).map(|(&p, &q)| p.wrapping_sub(q)));
         triples.push(t);
     }
-    ctx.chan.begin_exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
     // overlap the wire: rebuild every pair's masked differences
     let mut deltas: Vec<(TensorR, TensorR)> = Vec::with_capacity(pairs.len());
     for ((x, y), (a, b, _)) in pairs.iter().zip(&triples) {
         deltas.push((x.0.sub(a), y.0.sub(b)));
     }
-    let theirs = ctx.chan.finish_exchange();
+    let theirs = ctx.chan.recv_exact(total)?;
     let leader = ctx.is_leader();
     let out = ctx.chan.compute(|| {
         let mut out = Vec::with_capacity(pairs.len());
@@ -497,7 +515,7 @@ pub fn matmul_batch(ctx: &mut PartyCtx, pairs: &[(&Shared, &Shared)]) -> Vec<Sha
         out
     });
     ctx.arena.put(theirs);
-    out
+    Ok(out)
 }
 
 /// A secret weight matrix for weight-stationary inference: the masked
@@ -542,7 +560,10 @@ impl SecretWeight {
 /// it opened the delta itself — only the wire payload (and its bytes)
 /// moves from the first batch into the setup session.  Both parties must
 /// pass the weights in the same order (structural model order does this).
-pub fn preopen_weight_deltas(ctx: &mut PartyCtx, weights: &mut [&mut SecretWeight]) {
+pub fn preopen_weight_deltas(
+    ctx: &mut PartyCtx,
+    weights: &mut [&mut SecretWeight],
+) -> NetResult<()> {
     let pending: Vec<usize> = weights
         .iter()
         .enumerate()
@@ -550,7 +571,7 @@ pub fn preopen_weight_deltas(ctx: &mut PartyCtx, weights: &mut [&mut SecretWeigh
         .map(|(i, _)| i)
         .collect();
     if pending.is_empty() {
-        return;
+        return Ok(());
     }
     let total: usize = pending.iter().map(|&i| weights[i].share.len()).sum();
     let mut payload = ctx.arena.take(total);
@@ -569,13 +590,13 @@ pub fn preopen_weight_deltas(ctx: &mut PartyCtx, weights: &mut [&mut SecretWeigh
         );
         b_shares.push(b_share);
     }
-    ctx.chan.begin_exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
     // overlap the wire: our halves of the opened deltas
     let mut halves: Vec<TensorR> = Vec::with_capacity(pending.len());
     for (&i, b_share) in pending.iter().zip(&b_shares) {
         halves.push(weights[i].share.sub(b_share));
     }
-    let theirs = ctx.chan.finish_exchange();
+    let theirs = ctx.chan.recv_exact(total)?;
     let mut off = 0;
     for (&i, mut half) in pending.iter().zip(halves) {
         let n = half.data.len();
@@ -586,10 +607,15 @@ pub fn preopen_weight_deltas(ctx: &mut PartyCtx, weights: &mut [&mut SecretWeigh
         weights[i].delta = Some(half);
     }
     ctx.arena.put(theirs);
+    Ok(())
 }
 
 /// Shared activations (m,k) × secret weight (k,n) with cached W−B.
-pub fn matmul_weight(ctx: &mut PartyCtx, x: &Shared, w: &mut SecretWeight) -> Shared {
+pub fn matmul_weight(
+    ctx: &mut PartyCtx,
+    x: &Shared,
+    w: &mut SecretWeight,
+) -> NetResult<Shared> {
     let (m, k) = (x.shape()[0], x.shape()[1]);
     let (k2, n) = (w.shape()[0], w.shape()[1]);
     assert_eq!(k, k2, "activation/weight inner dims");
@@ -603,7 +629,7 @@ pub fn matmul_weight(ctx: &mut PartyCtx, x: &Shared, w: &mut SecretWeight) -> Sh
             w.share.data.iter().zip(&b_share.data).map(|(&p, &q)| p.wrapping_sub(q)),
         );
     }
-    ctx.chan.begin_exchange(payload);
+    ctx.chan.begin_exchange(payload)?;
     // overlap the wire: our half of the opened X−A (and W−B on first use)
     let mut eps = x.0.sub(&a);
     let mut delta_half = if first_use {
@@ -613,7 +639,8 @@ pub fn matmul_weight(ctx: &mut PartyCtx, x: &Shared, w: &mut SecretWeight) -> Sh
     } else {
         None
     };
-    let theirs = ctx.chan.finish_exchange();
+    let expected = m * k + if first_use { k * n } else { 0 };
+    let theirs = ctx.chan.recv_exact(expected)?;
     for (v, &t) in eps.data.iter_mut().zip(&theirs[..m * k]) {
         *v = v.wrapping_add(t);
     }
@@ -635,7 +662,7 @@ pub fn matmul_weight(ctx: &mut PartyCtx, x: &Shared, w: &mut SecretWeight) -> Sh
         z.trunc_assign();
         z
     });
-    Shared(out)
+    Ok(Shared(out))
 }
 
 #[cfg(test)]
@@ -654,12 +681,12 @@ mod tests {
         let (r0, r1) = run_pair(42, {
             let x = x.clone();
             move |ctx| {
-                let sh = share_input(ctx, &x);
-                open(ctx, &sh)
+                let sh = share_input(ctx, &x).unwrap();
+                open(ctx, &sh).unwrap()
             }
         }, move |ctx| {
-            let sh = recv_share(ctx, &[4]);
-            open(ctx, &sh)
+            let sh = recv_share(ctx, &[4]).unwrap();
+            open(ctx, &sh).unwrap()
         });
         assert_eq!(r0, x);
         assert_eq!(r1, x);
@@ -675,17 +702,17 @@ mod tests {
             {
                 let (x, y) = (x.clone(), y.clone());
                 move |ctx| {
-                    let xs = share_input(ctx, &x);
-                    let ys = share_input(ctx, &y);
-                    let z = mul(ctx, &xs, &ys);
-                    open(ctx, &z).to_f32()
+                    let xs = share_input(ctx, &x).unwrap();
+                    let ys = share_input(ctx, &y).unwrap();
+                    let z = mul(ctx, &xs, &ys).unwrap();
+                    open(ctx, &z).unwrap().to_f32()
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[4]);
-                let ys = recv_share(ctx, &[4]);
-                let z = mul(ctx, &xs, &ys);
-                open(ctx, &z).to_f32()
+                let xs = recv_share(ctx, &[4]).unwrap();
+                let ys = recv_share(ctx, &[4]).unwrap();
+                let z = mul(ctx, &xs, &ys).unwrap();
+                open(ctx, &z).unwrap().to_f32()
             },
         );
         for (g, e) in got.data.iter().zip(expect) {
@@ -697,24 +724,24 @@ mod tests {
     fn beaver_matmul_matches_clear() {
         let a = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0], &[2, 3]);
         let b = TensorF::from_vec(vec![1.0, -1.0, 0.5, 2.0, -0.5, 1.0], &[3, 2]);
-        let expect = a.matmul(&b);
+        let expect = a.matmul(&b).unwrap();
         let (ar, br) = (TensorR::from_f32(&a), TensorR::from_f32(&b));
         let (got, _) = run_pair(
             9,
             {
                 let (ar, br) = (ar.clone(), br.clone());
                 move |ctx| {
-                    let xs = share_input(ctx, &ar);
-                    let ys = share_input(ctx, &br);
-                    let z = matmul(ctx, &xs, &ys);
-                    open(ctx, &z).to_f32()
+                    let xs = share_input(ctx, &ar).unwrap();
+                    let ys = share_input(ctx, &br).unwrap();
+                    let z = matmul(ctx, &xs, &ys).unwrap();
+                    open(ctx, &z).unwrap().to_f32()
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[2, 3]);
-                let ys = recv_share(ctx, &[3, 2]);
-                let z = matmul(ctx, &xs, &ys);
-                open(ctx, &z).to_f32()
+                let xs = recv_share(ctx, &[2, 3]).unwrap();
+                let ys = recv_share(ctx, &[3, 2]).unwrap();
+                let z = matmul(ctx, &xs, &ys).unwrap();
+                open(ctx, &z).unwrap().to_f32()
             },
         );
         assert!(got.max_abs_diff(&expect) < 1e-2);
@@ -728,17 +755,17 @@ mod tests {
             {
                 let a = a.clone();
                 move |ctx| {
-                    let xs = share_input(ctx, &a);
-                    let ys = share_input(ctx, &a);
+                    let xs = share_input(ctx, &a).unwrap();
+                    let ys = share_input(ctx, &a).unwrap();
                     let before = ctx.chan.meter.rounds;
-                    let _ = matmul(ctx, &xs, &ys);
+                    let _ = matmul(ctx, &xs, &ys).unwrap();
                     ctx.chan.meter.rounds - before
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[16, 16]);
-                let ys = recv_share(ctx, &[16, 16]);
-                let _ = matmul(ctx, &xs, &ys);
+                let xs = recv_share(ctx, &[16, 16]).unwrap();
+                let ys = recv_share(ctx, &[16, 16]).unwrap();
+                let _ = matmul(ctx, &xs, &ys).unwrap();
                 0u64
             },
         );
@@ -750,8 +777,8 @@ mod tests {
         let x1 = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
         let x2 = TensorF::from_vec(vec![-1.0, 0.5, 2.0, -2.0], &[2, 2]);
         let w = TensorF::from_vec(vec![0.5, 1.0, -1.0, 2.0], &[2, 2]);
-        let e1 = x1.matmul(&w);
-        let e2 = x2.matmul(&w);
+        let e1 = x1.matmul(&w).unwrap();
+        let e2 = x2.matmul(&w).unwrap();
         let (xr1, xr2, wr) =
             (TensorR::from_f32(&x1), TensorR::from_f32(&x2), TensorR::from_f32(&w));
         let ((got, bytes_second), _) = run_pair(
@@ -759,29 +786,29 @@ mod tests {
             {
                 let (xr1, xr2, wr) = (xr1.clone(), xr2.clone(), wr.clone());
                 move |ctx| {
-                    let ws = share_input(ctx, &wr);
+                    let ws = share_input(ctx, &wr).unwrap();
                     let mut sw = SecretWeight::new(ws.0, 99);
-                    let a = share_input(ctx, &xr1);
-                    let b = share_input(ctx, &xr2);
-                    let z1 = matmul_weight(ctx, &a, &mut sw);
+                    let a = share_input(ctx, &xr1).unwrap();
+                    let b = share_input(ctx, &xr2).unwrap();
+                    let z1 = matmul_weight(ctx, &a, &mut sw).unwrap();
                     let before = ctx.chan.meter.bytes;
-                    let z2 = matmul_weight(ctx, &b, &mut sw);
+                    let z2 = matmul_weight(ctx, &b, &mut sw).unwrap();
                     let second_cost = ctx.chan.meter.bytes - before;
                     (
-                        (open(ctx, &z1).to_f32(), open(ctx, &z2).to_f32()),
+                        (open(ctx, &z1).unwrap().to_f32(), open(ctx, &z2).unwrap().to_f32()),
                         second_cost,
                     )
                 }
             },
             move |ctx| {
-                let ws = recv_share(ctx, &[2, 2]);
+                let ws = recv_share(ctx, &[2, 2]).unwrap();
                 let mut sw = SecretWeight::new(ws.0, 99);
-                let a = recv_share(ctx, &[2, 2]);
-                let b = recv_share(ctx, &[2, 2]);
-                let z1 = matmul_weight(ctx, &a, &mut sw);
-                let z2 = matmul_weight(ctx, &b, &mut sw);
-                let _ = open(ctx, &z1);
-                let _ = open(ctx, &z2);
+                let a = recv_share(ctx, &[2, 2]).unwrap();
+                let b = recv_share(ctx, &[2, 2]).unwrap();
+                let z1 = matmul_weight(ctx, &a, &mut sw).unwrap();
+                let z2 = matmul_weight(ctx, &b, &mut sw).unwrap();
+                let _ = open(ctx, &z1).unwrap();
+                let _ = open(ctx, &z2).unwrap();
             },
         );
         assert!(got.0.max_abs_diff(&e1) < 1e-2);
@@ -806,27 +833,27 @@ mod tests {
         let party0 = |warm: bool| {
             let (x, w) = (x.clone(), w.clone());
             move |ctx: &mut PartyCtx| {
-                let ws = share_input(ctx, &w);
+                let ws = share_input(ctx, &w).unwrap();
                 let mut sw = SecretWeight::new(ws.0, 7);
                 if warm {
-                    preopen_weight_deltas(ctx, &mut [&mut sw]);
+                    preopen_weight_deltas(ctx, &mut [&mut sw]).unwrap();
                     assert!(sw.delta_is_open());
                 }
-                let a = share_input(ctx, &x);
+                let a = share_input(ctx, &x).unwrap();
                 let before = ctx.chan.meter.bytes;
-                let z = matmul_weight(ctx, &a, &mut sw);
+                let z = matmul_weight(ctx, &a, &mut sw).unwrap();
                 (z.0.data.clone(), ctx.chan.meter.bytes - before)
             }
         };
         let party1 = |warm: bool| {
             move |ctx: &mut PartyCtx| {
-                let ws = recv_share(ctx, &[2, 2]);
+                let ws = recv_share(ctx, &[2, 2]).unwrap();
                 let mut sw = SecretWeight::new(ws.0, 7);
                 if warm {
-                    preopen_weight_deltas(ctx, &mut [&mut sw]);
+                    preopen_weight_deltas(ctx, &mut [&mut sw]).unwrap();
                 }
-                let a = recv_share(ctx, &[2, 2]);
-                let z = matmul_weight(ctx, &a, &mut sw);
+                let a = recv_share(ctx, &[2, 2]).unwrap();
+                let z = matmul_weight(ctx, &a, &mut sw).unwrap();
                 z.0.data.clone()
             }
         };
@@ -843,26 +870,26 @@ mod tests {
     fn matmul_batch_is_one_round() {
         let a = TensorF::from_vec(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
         let b = TensorF::from_vec(vec![0.5, -1.0, 1.5, 2.0], &[2, 2]);
-        let expect = a.matmul(&b);
+        let expect = a.matmul(&b).unwrap();
         let (ar, br) = (TensorR::from_f32(&a), TensorR::from_f32(&b));
         let ((got, rounds), _) = run_pair(
             19,
             {
                 let (ar, br) = (ar.clone(), br.clone());
                 move |ctx| {
-                    let xs = share_input(ctx, &ar);
-                    let ys = share_input(ctx, &br);
+                    let xs = share_input(ctx, &ar).unwrap();
+                    let ys = share_input(ctx, &br).unwrap();
                     let before = ctx.chan.meter.rounds;
-                    let zs = matmul_batch(ctx, &[(&xs, &ys), (&ys, &xs), (&xs, &xs)]);
+                    let zs = matmul_batch(ctx, &[(&xs, &ys), (&ys, &xs), (&xs, &xs)]).unwrap();
                     let r = ctx.chan.meter.rounds - before;
-                    (open(ctx, &zs[0]).to_f32(), r)
+                    (open(ctx, &zs[0]).unwrap().to_f32(), r)
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[2, 2]);
-                let ys = recv_share(ctx, &[2, 2]);
-                let zs = matmul_batch(ctx, &[(&xs, &ys), (&ys, &xs), (&xs, &xs)]);
-                let _ = open(ctx, &zs[0]);
+                let xs = recv_share(ctx, &[2, 2]).unwrap();
+                let ys = recv_share(ctx, &[2, 2]).unwrap();
+                let zs = matmul_batch(ctx, &[(&xs, &ys), (&ys, &xs), (&xs, &xs)]).unwrap();
+                let _ = open(ctx, &zs[0]).unwrap();
             },
         );
         assert!(got.max_abs_diff(&expect) < 1e-2);
@@ -889,21 +916,21 @@ mod tests {
             {
                 let (xe, ye, ze) = (xe.clone(), ye.clone(), ze.clone());
                 move |ctx| {
-                    let xs = share_input(ctx, &xe);
-                    let ys = share_input(ctx, &ye);
-                    let zs = share_input(ctx, &ze);
+                    let xs = share_input(ctx, &xe).unwrap();
+                    let ys = share_input(ctx, &ye).unwrap();
+                    let zs = share_input(ctx, &ze).unwrap();
                     let before = ctx.chan.meter.rounds;
-                    let p = mul3_raw(ctx, &xs, &ys, &zs);
+                    let p = mul3_raw(ctx, &xs, &ys, &zs).unwrap();
                     let r = ctx.chan.meter.rounds - before;
-                    (open(ctx, &p), r)
+                    (open(ctx, &p).unwrap(), r)
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[8]);
-                let ys = recv_share(ctx, &[8]);
-                let zs = recv_share(ctx, &[8]);
-                let p = mul3_raw(ctx, &xs, &ys, &zs);
-                let _ = open(ctx, &p);
+                let xs = recv_share(ctx, &[8]).unwrap();
+                let ys = recv_share(ctx, &[8]).unwrap();
+                let zs = recv_share(ctx, &[8]).unwrap();
+                let p = mul3_raw(ctx, &xs, &ys, &zs).unwrap();
+                let _ = open(ctx, &p).unwrap();
             },
         );
         assert_eq!(rounds, 1, "three-factor product must open in one round");
@@ -919,16 +946,16 @@ mod tests {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let xs = share_input(ctx, &x);
+                    let xs = share_input(ctx, &x).unwrap();
                     // multiply by 1.0 (encoded) then truncate
                     let one = mul_public_fixed(&xs, 1.0);
-                    open(ctx, &one).to_f32()
+                    open(ctx, &one).unwrap().to_f32()
                 }
             },
             move |ctx| {
-                let xs = recv_share(ctx, &[5]);
+                let xs = recv_share(ctx, &[5]).unwrap();
                 let one = mul_public_fixed(&xs, 1.0);
-                open(ctx, &one).to_f32()
+                open(ctx, &one).unwrap().to_f32()
             },
         );
         for (g, e) in got.data.iter().zip(&vals) {

@@ -13,15 +13,18 @@
 //! and the proxy's ranking signal drowns (measured during bring-up: rmse
 //! 2e-2 vs spread 8e-3; standardized, 1e-4).
 
+use anyhow::Result;
+
 use crate::util::Rng;
 
 use super::clear::{entropy_rows, softmax_row};
 use super::emit::quantize_mlp;
-use super::mlp::{fit_mlp, train_mlp, Mlp};
+use super::mlp::{fit_mlp, train_mlp_gated, Mlp};
 
 /// Fit MLP_sm for one layer: score rows ~ N(μ,σ)^s → softmax(row).
 /// Returns the QUANTIZED MLP and its RMSE on a fresh held-out sample
 /// (measured after quantization — what will actually run over MPC).
+/// `stop` is polled at Adam-epoch boundaries (cooperative cancellation).
 pub fn train_mlp_sm(
     rng: &mut Rng,
     (mu, sigma): (f32, f32),
@@ -29,7 +32,8 @@ pub fn train_mlp_sm(
     d_hidden: usize,
     steps: usize,
     batch: usize,
-) -> (Mlp, f32) {
+    stop: Option<&dyn Fn() -> Result<()>>,
+) -> Result<(Mlp, f32)> {
     let sigma = sigma.max(1e-3);
     let sample = |r: &mut Rng, n: usize| -> (Vec<f32>, Vec<f32>) {
         let x: Vec<f32> = (0..n * seq_len).map(|_| mu + sigma * r.normal()).collect();
@@ -40,14 +44,22 @@ pub fn train_mlp_sm(
         (x, y)
     };
     let mut mlp = Mlp::init(rng, seq_len, d_hidden, seq_len);
-    train_mlp(&mut mlp, rng, steps, 2e-3, 0.0, |r| {
-        let (x, y) = sample(r, batch);
-        (x, y, batch)
-    });
+    train_mlp_gated(
+        &mut mlp,
+        rng,
+        steps,
+        2e-3,
+        0.0,
+        |r| {
+            let (x, y) = sample(r, batch);
+            (x, y, batch)
+        },
+        stop,
+    )?;
     quantize_mlp(&mut mlp);
     let (hx, hy) = sample(rng, 1024);
     let rmse = mlp.rmse(&hx, &hy, 1024);
-    (mlp, rmse)
+    Ok((mlp, rmse))
 }
 
 /// Fit MLP_ln for one layer: u = var + LN_EPS ~ clipped N(μ, 1.5σ) →
@@ -58,7 +70,8 @@ pub fn train_mlp_ln(
     (mu, sigma): (f32, f32),
     d_hidden: usize,
     steps: usize,
-) -> (Mlp, f32) {
+    stop: Option<&dyn Fn() -> Result<()>>,
+) -> Result<(Mlp, f32)> {
     let sigma = sigma.max(1e-4 * mu.max(1e-6));
     // real variances sit within ~2σ of μ; clipping there keeps the 1/√u
     // blow-up out of the regression target
@@ -76,12 +89,21 @@ pub fn train_mlp_ln(
         .sqrt()
         .max(1e-6);
     let mut mlp = Mlp::init(rng, 1, d_hidden, 1);
-    train_mlp(&mut mlp, rng, steps, 1e-2, 0.0, |r| {
-        let u = sample_u(r, 1024);
-        let z: Vec<f32> = u.iter().map(|&v| (v - mu) / sigma).collect();
-        let y: Vec<f32> = u.iter().map(|&v| (1.0 / v.sqrt() - y_mu) / y_sig).collect();
-        (z, y, 1024)
-    });
+    train_mlp_gated(
+        &mut mlp,
+        rng,
+        steps,
+        1e-2,
+        0.0,
+        |r| {
+            let u = sample_u(r, 1024);
+            let z: Vec<f32> = u.iter().map(|&v| (v - mu) / sigma).collect();
+            let y: Vec<f32> =
+                u.iter().map(|&v| (1.0 / v.sqrt() - y_mu) / y_sig).collect();
+            (z, y, 1024)
+        },
+        stop,
+    )?;
     // fold input standardization: z = (u − μ)/σ  →  consume raw u
     let shift = mu / sigma;
     for j in 0..mlp.d_hidden {
@@ -101,7 +123,7 @@ pub fn train_mlp_ln(
     let hu = sample_u(rng, 4096);
     let hy: Vec<f32> = hu.iter().map(|&u| 1.0 / u.sqrt()).collect();
     let rmse = mlp.rmse(&hu, &hy, 4096);
-    (mlp, rmse)
+    Ok((mlp, rmse))
 }
 
 /// Fit MLP_se ex vivo: logits ~ N(μ,σ)^C → entropy(softmax(logits)).
@@ -114,7 +136,8 @@ pub fn train_mlp_se(
     d_hidden: usize,
     steps: usize,
     batch: usize,
-) -> (Mlp, f32) {
+    stop: Option<&dyn Fn() -> Result<()>>,
+) -> Result<(Mlp, f32)> {
     let sigma = sigma.max(1e-3);
     let sample = |r: &mut Rng, n: usize| -> (Vec<f32>, Vec<f32>) {
         let x: Vec<f32> = (0..n * n_classes).map(|_| mu + sigma * r.normal()).collect();
@@ -122,14 +145,22 @@ pub fn train_mlp_se(
         (x, y)
     };
     let mut mlp = Mlp::init(rng, n_classes, d_hidden, 1);
-    train_mlp(&mut mlp, rng, steps, 2e-3, 0.0, |r| {
-        let (x, y) = sample(r, batch);
-        (x, y, batch)
-    });
+    train_mlp_gated(
+        &mut mlp,
+        rng,
+        steps,
+        2e-3,
+        0.0,
+        |r| {
+            let (x, y) = sample(r, batch);
+            (x, y, batch)
+        },
+        stop,
+    )?;
     quantize_mlp(&mut mlp);
     let (hx, hy) = sample(rng, 1024);
     let rmse = mlp.rmse(&hx, &hy, 1024);
-    (mlp, rmse)
+    Ok((mlp, rmse))
 }
 
 /// Pearson correlation of two equal-length signals (0 when degenerate).
@@ -220,7 +251,7 @@ mod tests {
     #[test]
     fn sm_substitute_approximates_softmax() {
         let mut rng = Rng::new(11);
-        let (mlp, rmse) = train_mlp_sm(&mut rng, (0.0, 0.8), 8, 16, 400, 256);
+        let (mlp, rmse) = train_mlp_sm(&mut rng, (0.0, 0.8), 8, 16, 400, 256, None).unwrap();
         assert!(rmse < 0.05, "sm rmse {rmse}");
         // rows roughly sum to one
         let x: Vec<f32> = (0..8).map(|_| rng.uniform(-1.5, 1.5)).collect();
@@ -233,7 +264,7 @@ mod tests {
     fn ln_substitute_tracks_rsqrt_even_at_small_variance() {
         let mut rng = Rng::new(13);
         // the hard regime: u ≈ 5e-3 → 1/√u ≈ 14, spread ~2
-        let (mlp, rmse) = train_mlp_ln(&mut rng, (5e-3, 1.2e-3), 16, 800);
+        let (mlp, rmse) = train_mlp_ln(&mut rng, (5e-3, 1.2e-3), 16, 800, None).unwrap();
         assert!(rmse < 0.3, "ln rmse {rmse} (targets ≈ 14)");
         let u = [4e-3f32, 5e-3, 6.5e-3];
         let y = mlp.forward(&u, 3);
@@ -246,7 +277,7 @@ mod tests {
     #[test]
     fn se_substitute_orders_entropy() {
         let mut rng = Rng::new(17);
-        let (mlp, rmse) = train_mlp_se(&mut rng, (0.0, 1.0), 3, 16, 600, 256);
+        let (mlp, rmse) = train_mlp_se(&mut rng, (0.0, 1.0), 3, 16, 600, 256, None).unwrap();
         assert!(rmse < 0.3, "se rmse {rmse}");
         let peaked = [3.0f32, -1.0, -1.0];
         let flat = [0.1f32, 0.0, -0.1];

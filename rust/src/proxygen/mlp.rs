@@ -14,7 +14,14 @@
 //! All math is plain f32 on row-major slices; everything is deterministic
 //! given the caller's [`Rng`].
 
+use anyhow::Result;
+
 use crate::util::Rng;
+
+/// Adam updates between stop-callback polls in [`train_mlp_gated`] — the
+/// cancel-latency bound during calibration: a cancelled job stops within
+/// one such epoch of the distiller noticing.
+pub const ADAM_EPOCH: usize = 100;
 
 /// y = x·W + b: (rows, d_in) → (rows, d_out), row-major, accumulated in f32.
 pub(crate) fn linear_forward(
@@ -179,8 +186,29 @@ pub fn train_mlp<F>(
     steps: usize,
     lr: f32,
     wd: f32,
-    mut make_batch: F,
+    make_batch: F,
 ) -> f32
+where
+    F: FnMut(&mut Rng) -> (Vec<f32>, Vec<f32>, usize),
+{
+    match train_mlp_gated(mlp, rng, steps, lr, wd, make_batch, None) {
+        Ok(loss) => loss,
+        Err(_) => unreachable!("ungated training cannot be cancelled"),
+    }
+}
+
+/// [`train_mlp`] with a cooperative stop callback, polled every
+/// [`ADAM_EPOCH`] updates: an `Err` from `stop` aborts training there,
+/// so cancel latency is bounded by one epoch of Adam steps.
+pub fn train_mlp_gated<F>(
+    mlp: &mut Mlp,
+    rng: &mut Rng,
+    steps: usize,
+    lr: f32,
+    wd: f32,
+    mut make_batch: F,
+    stop: Option<&dyn Fn() -> Result<()>>,
+) -> Result<f32>
 where
     F: FnMut(&mut Rng) -> (Vec<f32>, Vec<f32>, usize),
 {
@@ -191,6 +219,11 @@ where
     let mut a_b2 = Adam::new(dout);
     let mut loss = 0f32;
     for t in 1..=steps as i32 {
+        if (t as usize - 1) % ADAM_EPOCH == 0 {
+            if let Some(s) = stop {
+                s()?;
+            }
+        }
         let (x, y, rows) = make_batch(rng);
         debug_assert_eq!(x.len(), rows * din);
         debug_assert_eq!(y.len(), rows * dout);
@@ -228,7 +261,7 @@ where
         a_w2.step(&mut mlp.w2, &gw2, lr, t);
         a_b2.step(&mut mlp.b2, &gb2, lr, t);
     }
-    loss
+    Ok(loss)
 }
 
 /// A linear layer y = x·W + b — the proxy classifier head during the
@@ -310,6 +343,41 @@ mod tests {
         let y: Vec<f32> = x.iter().map(|&v| v.max(0.0)).collect();
         let rmse = mlp.rmse(&x, &y, 4);
         assert!(rmse < 0.05, "rmse {rmse}");
+    }
+
+    #[test]
+    fn gated_training_cancels_within_one_epoch() {
+        use std::cell::Cell;
+        let mut rng = Rng::new(23);
+        let mut mlp = Mlp::init(&mut rng, 1, 4, 1);
+        let batches = Cell::new(0usize);
+        let polls = Cell::new(0usize);
+        let stop = || -> Result<()> {
+            polls.set(polls.get() + 1);
+            if polls.get() > 2 {
+                anyhow::bail!("cancelled")
+            }
+            Ok(())
+        };
+        let out = train_mlp_gated(
+            &mut mlp,
+            &mut rng,
+            10 * ADAM_EPOCH,
+            1e-2,
+            0.0,
+            |r| {
+                batches.set(batches.get() + 1);
+                let x: Vec<f32> = (0..8).map(|_| r.uniform(-1.0, 1.0)).collect();
+                let y = x.clone();
+                (x, y, 8)
+            },
+            Some(&stop),
+        );
+        assert!(out.is_err(), "third poll must cancel the fit");
+        // polls at t = 1, 101, 201: the first two pass, the third aborts,
+        // so EXACTLY two epochs of batches ran — the latency bound
+        assert_eq!(batches.get(), 2 * ADAM_EPOCH);
+        assert_eq!(polls.get(), 3);
     }
 
     #[test]

@@ -59,7 +59,7 @@ pub use clear::{
 };
 pub use emit::{quantize, MAX_WEIGHT_ABS};
 pub use fit::{analytic_entropy_head, fit_entropy_head, train_mlp_ln, train_mlp_se, train_mlp_sm};
-pub use mlp::{fit_linear, fit_mlp, train_mlp, Linear, Mlp};
+pub use mlp::{fit_linear, fit_mlp, train_mlp, train_mlp_gated, Linear, Mlp, ADAM_EPOCH};
 
 /// Hyperparameters of one distillation run.  The defaults are the
 /// bring-up-validated recipe; [`DistillConfig::quick`] trades fit
@@ -185,6 +185,24 @@ pub fn distill_proxies(
     specs: &[ProxySpec],
     cfg: &DistillConfig,
 ) -> Result<Vec<(WeightFile, ProxyFitReport)>> {
+    distill_proxies_gated(target, ds, bootstrap, specs, cfg, None)
+}
+
+/// [`distill_proxies`] with a cooperative stop callback: `stop` is
+/// polled between module fits and at every Adam-epoch boundary inside
+/// them ([`ADAM_EPOCH`] steps), so a cancelled [`SelectionJob`] abandons
+/// calibration within one training epoch instead of finishing the
+/// current phase's distillation.
+///
+/// [`SelectionJob`]: crate::coordinator::SelectionJob
+pub fn distill_proxies_gated(
+    target: &WeightFile,
+    ds: &Dataset,
+    bootstrap: &[usize],
+    specs: &[ProxySpec],
+    cfg: &DistillConfig,
+    stop: Option<&dyn Fn() -> Result<()>>,
+) -> Result<Vec<(WeightFile, ProxyFitReport)>> {
     let tcfg = target.config().context("target weight file config")?;
     ensure!(tcfg.d_ff > 0, "distillation needs a FULL target (d_ff > 0)");
     ensure!(
@@ -218,12 +236,16 @@ pub fn distill_proxies(
         let mut best: Option<(WeightFile, ProxyFitReport)> = None;
         let mut attempts = 0;
         for attempt in 0..=cfg.retries {
+            if let Some(s) = stop {
+                s()?;
+            }
             let mut s = cfg.seed
                 ^ (pi as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
                 ^ ((attempt as u64 + 1) << 48);
             let mut rng = Rng::new(splitmix64(&mut s));
-            let (wf, mut report) =
-                distill_one(target, &tcfg, spec, &teacher, &boot_toks, nb, boot_k, cfg, &mut rng)?;
+            let (wf, mut report) = distill_one(
+                target, &tcfg, spec, &teacher, &boot_toks, nb, boot_k, cfg, &mut rng, stop,
+            )?;
             attempts = attempt + 1;
             report.phase = pi;
             let accept = report.boot_overlap >= cfg.accept_boot_overlap;
@@ -258,6 +280,7 @@ fn distill_one(
     boot_k: usize,
     cfg: &DistillConfig,
     rng: &mut Rng,
+    stop: Option<&dyn Fn() -> Result<()>>,
 ) -> Result<(WeightFile, ProxyFitReport)> {
     // stage 2: ex-vivo substitutes from the synthesized regression sets
     let mut modules = Vec::with_capacity(2 * spec.n_layers + 1);
@@ -271,10 +294,12 @@ fn distill_one(
             spec.d_mlp,
             cfg.mlp_steps,
             cfg.batch,
-        );
+            stop,
+        )?;
         modules.push(ModuleFit { module: format!("layer{i}.mlp_sm"), rmse });
         mlps_sm.push(sm);
-        let (ln, rmse) = train_mlp_ln(rng, teacher.stats.ln[i], spec.d_mlp, cfg.ln_steps);
+        let (ln, rmse) =
+            train_mlp_ln(rng, teacher.stats.ln[i], spec.d_mlp, cfg.ln_steps, stop)?;
         modules.push(ModuleFit { module: format!("layer{i}.mlp_ln"), rmse });
         mlps_ln.push(ln);
     }
@@ -285,10 +310,14 @@ fn distill_one(
         spec.d_mlp,
         cfg.se_steps,
         cfg.batch,
-    );
+        stop,
+    )?;
     // stage 3: prune + assemble
     let mut parts = emit::prune_to_proxy(target, tcfg, spec, mlps_sm, mlps_ln, se0)?;
     // stage 4: head-only in-vivo refit on the trunk's real activations
+    if let Some(s) = stop {
+        s()?;
+    }
     let pooled = parts.pooled(boot_toks, nb);
     fit_linear(
         &mut parts.cls,

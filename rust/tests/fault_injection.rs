@@ -1,0 +1,416 @@
+//! Fault injection: the engine must fail loudly, typed, and safely.
+//!
+//! Transport faults (a dead peer, a stalled peer, a desynchronised
+//! frame) surface as [`NetError`]s threaded up through the protocol
+//! stack — never a panic or a hang — and a net-failed job inside the
+//! queue service resolves to [`JobStatus::Failed`] with the `NetError`
+//! as its typed root.  With a [`RetryPolicy`] armed, the service re-runs
+//! the job from scratch and the recovered outcome is byte-identical to
+//! an undisturbed run (the [`FaultPlan`] counter is one-shot, so the
+//! retry attempt sees a clean wire).
+//!
+//! The chaos sweep is environment-tunable for CI's chaos matrix:
+//!
+//!  * `SF_FAULT_MODE`  — `kill` (default) / `stall` / `drop`
+//!  * `SF_FAULT_SEED`  — picks which message indices the sweep samples
+//!  * `SF_FAULT_EXHAUSTIVE` — set to sweep EVERY message index
+//!
+//! Non-transport failure modes (malformed artifacts, API misuse, a
+//! panicking observer inside the service) keep their original coverage
+//! at the bottom of the file.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use selectformer::coordinator::quickselect::top_k_indices;
+use selectformer::coordinator::{
+    testutil, EventCounters, JobEvent, JobObserver, JobStatus, RuntimeProfile,
+    SelectionJob, SelectionService,
+};
+use selectformer::data::{synth, Dataset, SynthSpec};
+use selectformer::models::WeightFile;
+use selectformer::mpc::engine::run_pair;
+use selectformer::mpc::net::chan_pair;
+use selectformer::mpc::proto::{recv_share, share_input, Shared};
+use selectformer::mpc::{
+    FaultMode, FaultPlan, FaultPolicy, NetError, NetResult, RetryPolicy, Role,
+};
+use selectformer::tensor::TensorR;
+
+// ---------------------------------------------------------------------------
+// typed wire errors
+
+#[test]
+fn peer_disconnect_is_typed_peer_closed_not_a_hang() {
+    // P1 exits immediately; P0's exchange must surface PeerClosed — not
+    // deadlock, and since the fallible-Chan migration not a panic either.
+    let (mut c0, c1) = chan_pair();
+    drop(c1);
+    assert_eq!(c0.exchange(vec![1, 2, 3]), Err(NetError::PeerClosed));
+    // the error is sticky, not a one-off: the endpoint stays dead
+    assert_eq!(c0.recv_only(), Err(NetError::PeerClosed));
+}
+
+#[test]
+fn desync_is_frame_mismatch_not_a_shape_panic() {
+    // P0 shares a [4] tensor, P1 expects [5]: equal element counts are
+    // indistinguishable (by design — shares are opaque), but a WRONG
+    // element count is the parties desynchronising and must surface as
+    // the typed FrameMismatch tripwire.
+    let (_r0, r1) = run_pair(
+        1,
+        |ctx| -> NetResult<()> {
+            let x = TensorR::from_vec(vec![1, 2, 3, 4], &[4]);
+            share_input(ctx, &x)?;
+            Ok(())
+        },
+        |ctx| -> NetResult<()> {
+            recv_share(ctx, &[5])?; // wrong size
+            Ok(())
+        },
+    );
+    match r1 {
+        Err(NetError::FrameMismatch { expected, got, .. }) => {
+            assert_eq!((expected, got), (5, 4));
+        }
+        other => panic!("expected FrameMismatch, got {other:?}"),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// chaos sweep: deterministic fault injection through the full job stack
+
+fn env_u64(name: &str, default: u64) -> u64 {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// The sweep workload: a serial (`lanes = 1`) two-phase selection — both
+/// phases run the same tiny proxy, 48 candidates -> 24 -> 12 — so fault
+/// points cover setup, eval batches, QuickSelect and the phase boundary.
+struct Chaos {
+    proxy: PathBuf,
+    ds: Arc<Dataset>,
+}
+
+impl Chaos {
+    fn new(tag: &str) -> Chaos {
+        let dir = std::env::temp_dir().join("sf_fault_injection").join(tag);
+        let proxy = dir.join("p.sfw");
+        testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+        let ds = Arc::new(synth(
+            &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+            48,
+            false,
+            5,
+        ));
+        Chaos { proxy, ds }
+    }
+
+    fn job(
+        &self,
+        tag: u64,
+        faults: FaultPolicy,
+        counters: Option<Arc<EventCounters>>,
+    ) -> SelectionJob<'static> {
+        let mut builder = SelectionJob::builder_shared(
+            [self.proxy.as_path(), self.proxy.as_path()],
+            self.ds.clone(),
+        )
+        .keep_counts(vec![24, 12])
+        .runtime(RuntimeProfile {
+            batch: 16,
+            lanes: 1,
+            faults,
+            ..Default::default()
+        })
+        .job_tag(tag);
+        if let Some(counters) = counters {
+            builder = builder.observer(counters);
+        }
+        builder.build().expect("job must validate")
+    }
+
+    /// Undisturbed selection + the armed endpoint's total send count
+    /// (probed with a fault scheduled at a message index never reached).
+    fn baseline(&self, tag: u64) -> (Vec<usize>, u64) {
+        let probe =
+            FaultPlan::new(Role::ModelOwner, FaultMode::KillAt { msg: u64::MAX });
+        let faults = FaultPolicy {
+            recv_timeout: Some(Duration::from_secs(10)),
+            retry: RetryPolicy::default(),
+            inject: Some(probe.clone()),
+        };
+        let outcome =
+            self.job(tag, faults, None).run().expect("undisturbed baseline");
+        assert!(!probe.has_fired());
+        (outcome.selected, probe.messages_seen())
+    }
+}
+
+#[test]
+fn fault_sweep_fails_then_retries_byte_identical() {
+    let chaos = Chaos::new("sweep");
+    let seed = env_u64("SF_FAULT_SEED", 0xc4a0);
+    let mode = std::env::var("SF_FAULT_MODE").unwrap_or_else(|_| "kill".into());
+    let (baseline, total) = chaos.baseline(0);
+    assert_eq!(baseline.len(), 12);
+    assert!(total >= 8, "probe counted only {total} sends");
+
+    // stall/drop attempts burn their recv deadline (and the stall sleep)
+    // per injection, so those modes sample fewer points; kill is cheap.
+    let (deadline, points_target) = match mode.as_str() {
+        "kill" => {
+            (Duration::from_secs(10), if cfg!(debug_assertions) { 12 } else { 48 })
+        }
+        "stall" | "drop" => (Duration::from_millis(150), 6),
+        other => panic!("SF_FAULT_MODE={other} (kill|stall|drop)"),
+    };
+    let fault_at = |msg: u64| match mode.as_str() {
+        "kill" => FaultMode::KillAt { msg },
+        "stall" => FaultMode::StallAt { msg, dur: Duration::from_millis(900) },
+        _ => FaultMode::DropReplyAt { msg },
+    };
+    let exhaustive = std::env::var("SF_FAULT_EXHAUSTIVE").is_ok();
+    let stride = if exhaustive { 1 } else { (total / points_target).max(1) };
+    let mut points: Vec<u64> = (0..total)
+        .step_by(stride as usize)
+        .map(|n| n + seed % stride)
+        .filter(|&n| n < total)
+        .collect();
+    points.extend([0, total - 1]);
+    points.sort_unstable();
+    points.dedup();
+    println!(
+        "chaos sweep: mode={mode} seed={seed} total={total} points={}",
+        points.len()
+    );
+
+    for &n in &points {
+        let plan = FaultPlan::seeded(Role::ModelOwner, fault_at(n), seed);
+        let counters = EventCounters::new();
+        let faults = FaultPolicy {
+            recv_timeout: Some(deadline),
+            retry: RetryPolicy {
+                max_attempts: 2,
+                backoff: Duration::from_millis(1),
+            },
+            inject: Some(plan.clone()),
+        };
+        // fresh one-worker service per point: the retry machinery under
+        // test lives in the service's worker loop
+        let service = SelectionService::with_queue(1, 1);
+        let handle = service
+            .submit(chaos.job(0, faults, Some(counters.clone())))
+            .expect("submit");
+        match handle.wait() {
+            Ok(outcome) => {
+                assert!(plan.has_fired(), "fault@{n} ({mode}) never fired");
+                assert_eq!(
+                    counters.retries.load(Ordering::SeqCst),
+                    1,
+                    "fault@{n} ({mode}): exactly one retry expected"
+                );
+                assert_eq!(
+                    outcome.selected, baseline,
+                    "fault@{n} ({mode}) seed {seed}: retried run must be \
+                     byte-identical to the undisturbed baseline"
+                );
+                assert_eq!(handle.status(), JobStatus::Done);
+                assert!(handle.status().is_terminal());
+            }
+            Err(e) => panic!(
+                "fault@{n} ({mode}) seed {seed}: retry did not recover: {e:#}"
+            ),
+        }
+        service.shutdown();
+    }
+}
+
+#[test]
+fn net_fault_without_retry_fails_typed_and_service_stays_healthy() {
+    let chaos = Chaos::new("spot");
+    let (baseline, total) = chaos.baseline(7);
+
+    // one shared service across every spot kill: proves a net-failed job
+    // does not poison the pool or the shared preprocessing hub
+    let service = SelectionService::with_queue(1, 2);
+    for (i, n) in [0, total / 2, total - 1].into_iter().enumerate() {
+        let plan = FaultPlan::new(Role::ModelOwner, FaultMode::KillAt { msg: n });
+        let faults = FaultPolicy {
+            recv_timeout: Some(Duration::from_secs(10)),
+            retry: RetryPolicy::default(), // max_attempts = 1: no retry
+            inject: Some(plan.clone()),
+        };
+        let handle = service
+            .submit(chaos.job(100 + i as u64, faults, None))
+            .expect("submit");
+        let err = handle.wait().expect_err("killed job must fail");
+        assert!(plan.has_fired(), "kill@{n} never fired");
+        assert!(
+            err.downcast_ref::<NetError>().is_some(),
+            "kill@{n}: failure must be rooted in NetError, got: {err:#}"
+        );
+        assert_eq!(handle.status(), JobStatus::Failed);
+        assert!(handle.status().is_terminal());
+    }
+
+    // hub healthy: a clean job with the baseline's tag on the SAME
+    // service still produces the undisturbed selection
+    let clean = service
+        .submit(chaos.job(7, FaultPolicy::default(), None))
+        .expect("submit clean");
+    let outcome = clean.wait().expect("clean job after net faults");
+    assert_eq!(outcome.selected, baseline);
+    service.shutdown();
+}
+
+#[test]
+fn stall_surfaces_as_timeout_with_op_label() {
+    // a stalled-but-alive peer trips the recv deadline: the typed root
+    // must be Timeout (not PeerClosed) and name the waiting operation
+    let chaos = Chaos::new("stall_typed");
+    let plan = FaultPlan::new(
+        Role::ModelOwner,
+        FaultMode::StallAt { msg: 2, dur: Duration::from_millis(900) },
+    );
+    let faults = FaultPolicy {
+        recv_timeout: Some(Duration::from_millis(100)),
+        retry: RetryPolicy::default(),
+        inject: Some(plan.clone()),
+    };
+    let err = chaos
+        .job(3, faults, None)
+        .run()
+        .expect_err("stalled job must fail");
+    match err.downcast_ref::<NetError>() {
+        Some(NetError::Timeout { op, elapsed }) => {
+            assert!(!op.is_empty(), "timeout must name its protocol op");
+            assert!(*elapsed >= Duration::from_millis(100));
+        }
+        // the stalled party itself can observe the peer's deadline exit
+        // first; PeerClosed is the only other legal typed root here
+        Some(NetError::PeerClosed) => {}
+        other => {
+            panic!("expected typed Timeout/PeerClosed root, got {other:?} ({err:#})")
+        }
+    }
+    assert!(plan.has_fired());
+}
+
+// ---------------------------------------------------------------------------
+// non-transport failure modes (pre-existing coverage, kept)
+
+#[test]
+fn quickselect_k_too_large_is_rejected() {
+    let result = std::panic::catch_unwind(|| {
+        run_pair(
+            2,
+            |ctx| {
+                let x = Shared(TensorR::from_vec(vec![1, 2, 3], &[3]));
+                let _ = top_k_indices(ctx, &x, 5);
+            },
+            |ctx| {
+                let x = Shared(TensorR::from_vec(vec![1, 2, 3], &[3]));
+                let _ = top_k_indices(ctx, &x, 5);
+            },
+        );
+    });
+    assert!(result.is_err());
+}
+
+#[test]
+fn corrupt_sfw_is_an_error() {
+    let dir = std::env::temp_dir().join("sf_failure");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("corrupt.sfw");
+    let mut f = std::fs::File::create(&p).unwrap();
+    f.write_all(b"SFWT").unwrap();
+    f.write_all(&1u32.to_le_bytes()).unwrap();
+    f.write_all(&3u32.to_le_bytes()).unwrap(); // claims 3 tensors, has none
+    drop(f);
+    assert!(WeightFile::load(&p).is_err());
+
+    let p2 = dir.join("badmagic.sfw");
+    std::fs::write(&p2, b"XXXX0000").unwrap();
+    assert!(WeightFile::load(&p2).is_err());
+}
+
+#[test]
+fn corrupt_dataset_is_an_error() {
+    let dir = std::env::temp_dir().join("sf_failure");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("bad.bin");
+    std::fs::write(&p, b"SFDS\x01\x00\x00\x00").unwrap(); // truncated header
+    assert!(Dataset::load(&p).is_err());
+    let p2 = dir.join("badmagic.bin");
+    std::fs::write(&p2, b"NOPE\x01\x00\x00\x00").unwrap();
+    assert!(Dataset::load(&p2).is_err());
+}
+
+/// Observer that detonates on the first completed batch — making the
+/// job's protocol thread panic mid-selection, the worst-behaved "user
+/// code inside the service" we can simulate.
+struct PanicOnFirstBatch;
+
+impl JobObserver for PanicOnFirstBatch {
+    fn on_event(&self, event: &JobEvent<'_>) {
+        if matches!(event, JobEvent::BatchCompleted { .. }) {
+            panic!("observer bomb: injected mid-phase panic");
+        }
+    }
+}
+
+#[test]
+fn panicking_job_is_contained_per_job() {
+    let dir = std::env::temp_dir().join("sf_failure_panic");
+    let proxy = dir.join("p.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+    let ds = Arc::new(synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        48,
+        false,
+        5,
+    ));
+    let job = |tag: u64, bomb: bool| -> SelectionJob<'static> {
+        let mut builder = SelectionJob::builder_shared([proxy.as_path()], ds.clone())
+            .keep_counts(vec![12])
+            .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+            .job_tag(tag);
+        if bomb {
+            builder = builder.observer(Arc::new(PanicOnFirstBatch));
+        }
+        builder.build().expect("job must validate")
+    };
+
+    let service = SelectionService::with_queue(1, 2);
+    let bombed = service.submit(job(1, true)).expect("submit bombed job");
+    let err = bombed.wait().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("panicked"),
+        "panic must surface as the job's error: {err:#}"
+    );
+    assert_eq!(bombed.status(), JobStatus::Failed);
+    // a panic is NOT a transport fault: it must not be retried and must
+    // not read as a NetError
+    assert!(err.downcast_ref::<NetError>().is_none());
+
+    // the pool kept serving: a clean job on the SAME service (and worker)
+    // still runs to completion
+    let clean = service.submit(job(2, false)).expect("submit clean job");
+    let outcome = clean.wait().expect("pool must survive a per-job panic");
+    assert_eq!(outcome.selected.len(), 12);
+    assert_eq!(clean.status(), JobStatus::Done);
+    service.shutdown();
+}
+
+#[test]
+fn missing_artifacts_surface_cleanly() {
+    use selectformer::exp::Cell;
+    let cell = Cell::new(Path::new("/nonexistent"), "x", "y");
+    assert!(!cell.exists());
+    assert!(cell.train_dataset().is_err());
+    assert!(cell.bootstrap_indices().is_err());
+}

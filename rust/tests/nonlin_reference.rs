@@ -18,6 +18,7 @@
 use selectformer::mpc::engine::run_pair;
 use selectformer::mpc::nonlin::{self, MlpWeights};
 use selectformer::mpc::proto::{open, recv_share, share_input, PartyCtx, Shared};
+use selectformer::mpc::NetResult;
 use selectformer::proxygen::{entropy_rows, Mlp};
 use selectformer::tensor::{TensorF, TensorR};
 use selectformer::util::proptest_lite::check;
@@ -25,21 +26,21 @@ use selectformer::util::Rng;
 
 fn both<F>(seed: u64, x: TensorR, f: F) -> TensorF
 where
-    F: Fn(&mut PartyCtx, &Shared) -> Shared + Send + Clone + 'static,
+    F: Fn(&mut PartyCtx, &Shared) -> NetResult<Shared> + Send + Clone + 'static,
 {
     let shape = x.shape.clone();
     let f1 = f.clone();
     let (got, _) = run_pair(
         seed,
         move |ctx| {
-            let xs = share_input(ctx, &x);
-            let z = f(ctx, &xs);
-            open(ctx, &z).to_f32()
+            let xs = share_input(ctx, &x).unwrap();
+            let z = f(ctx, &xs).unwrap();
+            open(ctx, &z).unwrap().to_f32()
         },
         move |ctx| {
-            let xs = recv_share(ctx, &shape);
-            let z = f1(ctx, &xs);
-            let _ = open(ctx, &z);
+            let xs = recv_share(ctx, &shape).unwrap();
+            let z = f1(ctx, &xs).unwrap();
+            open(ctx, &z).unwrap();
         },
     );
     got
@@ -144,7 +145,8 @@ fn mlp_forward_matches_f32_reference_on_random_mlps() {
 fn trained_entropy_mlp_over_mpc_tracks_clear() {
     let mut rng = Rng::new(0x7ea);
     let (mlp, rmse) =
-        selectformer::proxygen::train_mlp_se(&mut rng, (0.0, 1.0), 4, 16, 600, 256);
+        selectformer::proxygen::train_mlp_se(&mut rng, (0.0, 1.0), 4, 16, 600, 256, None)
+            .unwrap();
     assert!(rmse < 0.3, "ex-vivo se rmse {rmse}");
     let rows = 24;
     let logits: Vec<f32> = (0..rows * 4).map(|_| rng.uniform(-2.0, 2.0)).collect();

@@ -36,13 +36,13 @@ fn prop_quickselect_matches_bruteforce() {
                 {
                     let x = x.clone();
                     move |ctx| {
-                        let sh = share_input(ctx, &x);
-                        top_k_indices(ctx, &sh, k)
+                        let sh = share_input(ctx, &x).unwrap();
+                        top_k_indices(ctx, &sh, k).unwrap()
                     }
                 },
                 move |ctx| {
-                    let sh = recv_share(ctx, &[n]);
-                    top_k_indices(ctx, &sh, k).0
+                    let sh = recv_share(ctx, &[n]).unwrap();
+                    top_k_indices(ctx, &sh, k).unwrap().0
                 },
             );
             if got != got1 {
@@ -70,16 +70,16 @@ fn stream_vs_barrier(vals: &[f32], k: usize, seed: u64) -> (Vec<usize>, Vec<usiz
         {
             let x = x.clone();
             move |ctx| {
-                let sh = share_input(ctx, &x);
+                let sh = share_input(ctx, &x).unwrap();
                 let mut sink = ChannelSink::collector();
-                let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+                top_k_streamed(ctx, &sh, k, &mut sink).unwrap();
                 sink.order
             }
         },
         move |ctx| {
-            let sh = recv_share(ctx, &[n]);
+            let sh = recv_share(ctx, &[n]).unwrap();
             let mut sink = ChannelSink::collector();
-            let _ = top_k_streamed(ctx, &sh, k, &mut sink);
+            top_k_streamed(ctx, &sh, k, &mut sink).unwrap();
             sink.order
         },
     );
@@ -89,13 +89,13 @@ fn stream_vs_barrier(vals: &[f32], k: usize, seed: u64) -> (Vec<usize>, Vec<usiz
         {
             let x = x.clone();
             move |ctx| {
-                let sh = share_input(ctx, &x);
-                top_k_indices(ctx, &sh, k)
+                let sh = share_input(ctx, &x).unwrap();
+                top_k_indices(ctx, &sh, k).unwrap()
             }
         },
         move |ctx| {
-            let sh = recv_share(ctx, &[n]);
-            top_k_indices(ctx, &sh, k).0
+            let sh = recv_share(ctx, &[n]).unwrap();
+            top_k_indices(ctx, &sh, k).unwrap().0
         },
     );
     (order, barrier.0)
@@ -353,7 +353,7 @@ fn prop_shares_leak_nothing_statistically() {
             {
                 let x = x.clone();
                 move |ctx| {
-                    let sh = share_input(ctx, &x);
+                    let sh = share_input(ctx, &x).unwrap();
                     let mut hist = [0usize; 256];
                     for &v in &sh.0.data {
                         hist[(v & 0xff) as usize] += 1;
@@ -362,7 +362,7 @@ fn prop_shares_leak_nothing_statistically() {
                 }
             },
             move |ctx| {
-                let _ = recv_share(ctx, &[n]);
+                recv_share(ctx, &[n]).unwrap();
             },
         );
         let expected = n as f64 / 256.0;

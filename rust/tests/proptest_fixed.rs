@@ -86,7 +86,7 @@ fn extreme_magnitudes_clamp_never_wrap() {
 fn trained_mlp_weights_roundtrip_through_the_grid() {
     let mut rng = Rng::new(0x90d);
     // an MLP_ln-style fit whose folded W1 carries LARGE magnitudes (1/σ)
-    let (mlp, _) = proxygen::train_mlp_ln(&mut rng, (5e-3, 1.2e-3), 8, 400);
+    let (mlp, _) = proxygen::train_mlp_ln(&mut rng, (5e-3, 1.2e-3), 8, 400, None).unwrap();
     let params: Vec<f32> = mlp
         .w1
         .iter()

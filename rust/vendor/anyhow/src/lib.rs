@@ -127,16 +127,79 @@ impl<T> Context<T> for Option<T> {
     }
 }
 
+/// Dispatch support for `anyhow!($expr)` — the same autoref-specialization
+/// trick the real crate uses: a typed `std::error::Error` value resolves to
+/// [`kind::Trait`] (root preserved via [`Error::new`]), an existing
+/// [`Error`] passes through unchanged via [`kind::Boxed`], and anything
+/// else that is `Display` falls back to [`kind::Adhoc`] ([`Error::msg`]).
+/// Method resolution picks the impl with the fewest autorefs, so the order
+/// of preference is value impls first, `&T` fallback last.
+#[doc(hidden)]
+pub mod kind {
+    use super::Error;
+    use std::fmt::Display;
+
+    pub struct Adhoc;
+
+    pub trait AdhocKind: Sized {
+        fn anyhow_kind(&self) -> Adhoc {
+            Adhoc
+        }
+    }
+
+    impl<T: Display + Send + Sync + 'static> AdhocKind for &T {}
+
+    impl Adhoc {
+        pub fn new<M: Display>(self, message: M) -> Error {
+            Error::msg(message)
+        }
+    }
+
+    pub struct Trait;
+
+    pub trait TraitKind: Sized {
+        fn anyhow_kind(&self) -> Trait {
+            Trait
+        }
+    }
+
+    impl<E: std::error::Error + Send + Sync + 'static> TraitKind for E {}
+
+    impl Trait {
+        pub fn new<E: std::error::Error + Send + Sync + 'static>(self, error: E) -> Error {
+            Error::new(error)
+        }
+    }
+
+    pub struct Boxed;
+
+    pub trait BoxedKind: Sized {
+        fn anyhow_kind(&self) -> Boxed {
+            Boxed
+        }
+    }
+
+    impl BoxedKind for Error {}
+
+    impl Boxed {
+        pub fn new(self, error: Error) -> Error {
+            error
+        }
+    }
+}
+
 #[macro_export]
 macro_rules! anyhow {
     ($msg:literal $(,)?) => {
         $crate::Error::msg(format!($msg))
     };
+    ($err:expr $(,)?) => {{
+        use $crate::kind::*;
+        let error = $err;
+        (&error).anyhow_kind().new(error)
+    }};
     ($fmt:expr, $($arg:tt)*) => {
         $crate::Error::msg(format!($fmt, $($arg)*))
-    };
-    ($err:expr $(,)?) => {
-        $crate::Error::msg($err)
     };
 }
 
@@ -239,6 +302,25 @@ mod tests {
         assert_eq!(via_any.to_string(), "layer 2: layer 1: marker error");
         // a plain message error has no typed root
         assert!(!Error::msg("free-form").is::<Marker>());
+    }
+
+    #[test]
+    fn anyhow_macro_preserves_typed_roots() {
+        // typed std error expression -> root preserved (kind::Trait)
+        let e = anyhow!(Marker);
+        assert!(e.is::<Marker>());
+        // existing anyhow::Error passes through unchanged (kind::Boxed)
+        let e2 = anyhow!(e.context("outer"));
+        assert!(e2.is::<Marker>());
+        assert_eq!(e2.to_string(), "outer: marker error");
+        // plain Display value falls back to Error::msg (kind::Adhoc)
+        let s = String::from("free-form");
+        assert!(!anyhow!(s).is::<Marker>());
+        // and bail!(typed) keeps the root too
+        fn f() -> Result<()> {
+            bail!(Marker);
+        }
+        assert!(f().unwrap_err().is::<Marker>());
     }
 
     #[test]
