@@ -48,7 +48,7 @@ fn main() -> anyhow::Result<()> {
 
     // group the op trace into the paper's categories; nested primitive
     // spans (exp/ltz/…) are skipped so bytes aren't double-booked
-    let mut groups: BTreeMap<&str, (u64, u64, f64)> = BTreeMap::new();
+    let mut groups: BTreeMap<&str, (f64, u64, f64)> = BTreeMap::new();
     for op in &out.meter_p0.ops {
         if matches!(
             op.name,
@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
             _ => "linear (qkv/proj)",
         };
         let e = groups.entry(key).or_default();
-        e.0 += op.rounds;
+        e.0 += op.rounds();
         e.1 += op.bytes;
         e.2 += op.compute_s;
     }
@@ -79,25 +79,25 @@ fn main() -> anyhow::Result<()> {
     );
     let mut rows = Vec::new();
     for (name, (rounds, bytes, compute)) in &groups {
-        let sim = *rounds as f64 * net.latency + *bytes as f64 / net.bandwidth + compute;
+        let sim = *rounds * net.latency + *bytes as f64 / net.bandwidth + compute;
         table.row(vec![
             name.to_string(),
-            rounds.to_string(),
+            format!("{rounds:.1}"),
             fmt_bytes(*bytes),
             format!("{:.1}%", 100.0 * *bytes as f64 / total_bytes.max(1) as f64),
             fmt_duration(sim),
         ]);
         rows.push(vec![
             name.to_string(),
-            rounds.to_string(),
+            format!("{rounds:.1}"),
             bytes.to_string(),
             format!("{compute:.4}"),
         ]);
     }
     table.print();
     println!(
-        "total: {} rounds, {} sent by P0, sim {}",
-        out.meter_p0.rounds,
+        "total: {:.1} rounds, {} sent by P0, sim {}",
+        out.meter_p0.rounds(),
         fmt_bytes(out.meter_p0.bytes),
         fmt_duration(out.serial_delay)
     );

@@ -19,6 +19,7 @@ use selectformer::mpc::engine::run_pair_metered;
 use selectformer::mpc::proto::{
     matmul, mul, recv_share, share_input, PartyCtx, Shared,
 };
+use selectformer::mpc::TransportConfig;
 use selectformer::tensor::{TensorF, TensorR};
 use selectformer::util::report::{fmt_bytes, Table};
 use selectformer::util::Rng;
@@ -43,7 +44,7 @@ where
             move |ctx| {
                 let xs = share_input(ctx, &x).unwrap();
                 let b0 = ctx.chan.meter.bytes;
-                let r0 = ctx.chan.meter.rounds;
+                let hr0 = ctx.chan.meter.half_rounds;
                 let t0 = Instant::now();
                 for _ in 0..iters {
                     f(ctx, &xs).unwrap();
@@ -51,7 +52,7 @@ where
                 (
                     t0.elapsed().as_secs_f64() / iters as f64,
                     (ctx.chan.meter.bytes - b0) / iters as u64,
-                    (ctx.chan.meter.rounds - r0) / iters as u64,
+                    (ctx.chan.meter.half_rounds - hr0) / iters as u64,
                 )
             }
         },
@@ -62,13 +63,13 @@ where
             }
         },
     );
-    let (elapsed, bytes, rounds) = elapsed_tuple(tuple_out);
+    let (elapsed, bytes, half_rounds) = elapsed_tuple(tuple_out);
     vec![
         name.to_string(),
         format!("{shape:?}"),
         format!("{:.3} ms", elapsed * 1e3),
         format!("{:.2} Melem/s", n as f64 / elapsed / 1e6),
-        rounds.to_string(),
+        format!("{:.1}", half_rounds as f64 / 2.0),
         fmt_bytes(bytes),
     ]
 }
@@ -148,29 +149,43 @@ fn bench_e2e() -> Vec<BenchRow> {
     );
     let cands: Vec<usize> = (0..256).collect();
     let lanes = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).min(4);
-    let run = |lanes: usize, overlap: bool| {
+    let run = |lanes: usize, overlap: bool, transport: TransportConfig| {
         SelectionJob::builder([p1.as_path(), p2.as_path()], &ds)
             .candidates(cands.clone())
             .schedule(schedule.clone())
-            .runtime(RuntimeProfile { batch: 16, lanes, overlap, ..Default::default() })
+            .runtime(RuntimeProfile {
+                batch: 16,
+                lanes,
+                overlap,
+                transport,
+                ..Default::default()
+            })
             .build()
             .expect("job config")
             .run()
             .expect("selection")
     };
-    let serial = run(1, false);
-    let piped = run(lanes, false);
-    let overlapped = run(lanes, true);
+    let serial = run(1, false, TransportConfig::default());
+    let piped = run(lanes, false, TransportConfig::default());
+    let overlapped = run(lanes, true, TransportConfig::default());
+    let tcp = run(1, false, TransportConfig::tcp());
     assert_eq!(serial.selected, piped.selected, "pipelined must select identically");
     assert_eq!(serial.selected, overlapped.selected, "overlapped must select identically");
+    assert_eq!(serial.selected, tcp.selected, "loopback TCP must select identically");
+    assert_eq!(
+        serial.total_bytes(),
+        tcp.total_bytes(),
+        "the wire must not change metered protocol traffic"
+    );
     let mut table = Table::new(
         "2-phase selection, 256 candidates (tiny proxy)",
         &["mode", "lanes", "wall", "speedup", "setup hidden"],
     );
-    let (ws, wp, wo) = (
+    let (ws, wp, wo, wt) = (
         serial.total_wall_s(),
         piped.total_wall_s(),
         overlapped.total_wall_s(),
+        tcp.total_wall_s(),
     );
     table.row(vec![
         "serial".into(),
@@ -192,6 +207,13 @@ fn bench_e2e() -> Vec<BenchRow> {
         format!("{:.2} s", wo),
         format!("{:.2}×", ws / wo),
         format!("{:.3} s", overlapped.overlapped_setup_wall_s()),
+    ]);
+    table.row(vec![
+        "tcp loopback".into(),
+        "1".into(),
+        format!("{:.2} s", wt),
+        format!("{:.2}×", ws / wt),
+        "-".into(),
     ]);
     table.print();
 
@@ -234,6 +256,7 @@ fn bench_e2e() -> Vec<BenchRow> {
             lanes,
             overlapped.overlapped_setup_wall_s() * 1e9,
         ),
+        BenchRow::new("select_2phase_tcp_loopback", "n=256,batch=16", 1, wt * 1e9),
     ];
     rows.extend(selectformer::benchkit::phase_breakdown_rows(
         "select_2phase_overlapped",

@@ -44,6 +44,6 @@ fn main() {
     println!("true mean entropy:      {mean:.4} (never revealed in threshold mode)");
     println!("appraised average:      {avg:.4}");
     println!("threshold (> {threshold}):     {}", if above { "ABOVE" } else { "below" });
-    println!("appraisal cost:         {} rounds, {}", m0.rounds, fmt_bytes(m0.bytes));
+    println!("appraisal cost:         {:.1} rounds, {}", m0.rounds(), fmt_bytes(m0.bytes));
     println!("\nonly the average (or the single bit) left the MPC boundary.");
 }

@@ -43,8 +43,8 @@ fn main() -> anyhow::Result<()> {
 
     println!("\nselected {} indices (first 10): {:?}",
              out.survivors.len(), &out.survivors[..10]);
-    println!("MPC cost: {} rounds, {} exchanged",
-             out.meter_p0.rounds,
+    println!("MPC cost: {:.1} rounds, {} exchanged",
+             out.meter_p0.rounds(),
              fmt_bytes(out.meter_p0.bytes + out.meter_p1.bytes));
     println!("simulated WAN delay: {} (serial: {})",
              fmt_duration(out.sim_delay), fmt_duration(out.serial_delay));

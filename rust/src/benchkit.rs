@@ -50,12 +50,12 @@ pub fn profile_deep_target(
         batch,
         setup_bytes: p1.setup_bytes
             + (p2.setup_bytes.saturating_sub(p1.setup_bytes)) * (scale - 1),
-        setup_rounds: p1.setup_rounds
-            + (p2.setup_rounds.saturating_sub(p1.setup_rounds)) * (scale - 1),
+        setup_half_rounds: p1.setup_half_rounds
+            + (p2.setup_half_rounds.saturating_sub(p1.setup_half_rounds)) * (scale - 1),
         batch_bytes: p1.batch_bytes
             + (p2.batch_bytes.saturating_sub(p1.batch_bytes)) * (scale - 1),
-        batch_rounds: p1.batch_rounds
-            + (p2.batch_rounds.saturating_sub(p1.batch_rounds)) * (scale - 1),
+        batch_half_rounds: p1.batch_half_rounds
+            + (p2.batch_half_rounds.saturating_sub(p1.batch_half_rounds)) * (scale - 1),
         batch_compute_s: p1.batch_compute_s
             + (p2.batch_compute_s - p1.batch_compute_s) * (fscale - 1.0),
     })

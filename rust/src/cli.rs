@@ -17,7 +17,17 @@
 //!                      [--seed N] [--out proxies/]
 //! selectformer serve   --jobs <manifest> [--workers 2] [--queue 4]
 //!                      [--progress] [--journal jobs.wal]
+//! selectformer party   --listen <host:port|unix:path> | --connect <addr>
+//!                      --proxies p1.sfw[;p2.sfw…] | --data corpus.bin | --synth N
+//!                      --keep k1[;k2…] [--batch 16] [--seed N] [--out idx.txt]
+//!                      [--latency-ms L --bandwidth-mbs B]
 //! ```
+//!
+//! `party` runs ONE MPC party in this process over a real socket — the
+//! model owner passes `--proxies`, the data owner `--data`/`--synth`; the
+//! connect handshake pins protocol version, roles, a dealer-seed
+//! fingerprint and a digest of `--keep`/`--batch`, so misconfigured pairs
+//! fail typed instead of desyncing mid-protocol.
 //!
 //! `serve` runs the async job-queue daemon over a manifest: one job per
 //! line, `key=value` fields —
@@ -71,8 +81,16 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             value: &[
                 "artifacts", "target", "bench", "budget", "batch", "lanes",
                 "policy", "method", "out", "bandwidth-mbs", "latency-ms",
+                "transport",
             ],
             boolean: &["overlap", "progress"],
+        },
+        "party" => CmdSpec {
+            value: &[
+                "listen", "connect", "proxies", "data", "synth", "keep",
+                "batch", "seed", "out", "bandwidth-mbs", "latency-ms",
+            ],
+            boolean: &[],
         },
         "e2e" => CmdSpec {
             value: &[
@@ -255,6 +273,13 @@ fn profile_from(args: &Args) -> Result<RuntimeProfile> {
             latency: args.f64_or("latency-ms", 100.0)? / 1e3,
         },
         faults: Default::default(),
+        // physical channel backend: mem (default) | tcp | unix —
+        // byte-identical selections on every backend (tests/tcp_equiv.rs)
+        transport: match args.get("transport") {
+            Some(v) => crate::mpc::wire::TransportConfig::parse(v)
+                .with_context(|| format!("--transport {v} (known: mem, tcp, unix)"))?,
+            None => Default::default(),
+        },
     })
 }
 
@@ -272,6 +297,7 @@ pub fn run(argv: &[String]) -> Result<()> {
     match args.command.as_str() {
         "info" => cmd_info(&args),
         "select" => cmd_select(&args),
+        "party" => cmd_party(&args),
         "e2e" => cmd_e2e(&args),
         "train" => cmd_train(&args),
         "appraise" => cmd_appraise(&args),
@@ -864,7 +890,7 @@ fn cmd_select(args: &Args) -> Result<()> {
             t.row(vec![
                 format!("{}", i + 1),
                 p.survivors.len().to_string(),
-                p.meter_p0.rounds.to_string(),
+                format!("{:.1}", p.meter_p0.rounds()),
                 fmt_bytes(p.meter_p0.bytes + p.meter_p1.bytes),
                 setup,
                 fmt_duration(p.drain_wall_s),
@@ -883,6 +909,154 @@ fn cmd_select(args: &Args) -> Result<()> {
             .collect::<Vec<_>>()
             .join("\n");
         std::fs::write(out, body + "\n")?;
+        println!("indices written to {out}");
+    }
+    Ok(())
+}
+
+/// `selectformer party` — one MPC party as its own OS process, over TCP
+/// or a Unix socket.  The role is inferred from the inputs: `--proxies`
+/// makes this process the model owner (P0), `--data`/`--synth` the data
+/// owner (P1).  Either side may `--listen` (port 0 resolves at bind time
+/// and the bound address is announced on stdout) while the other
+/// `--connect`s.  The selection walked is the serial reference protocol,
+/// so the final indices match an in-process `serve`/`select` run over the
+/// same inputs and seed (tests/tcp_equiv.rs).
+fn cmd_party(args: &Args) -> Result<()> {
+    use crate::coordinator::party::{run_data_owner, run_model_owner, PartyPlan};
+    use crate::data::{self, SynthSpec};
+    use crate::mpc::net::Role;
+    use crate::mpc::wire::{connect_party, PartyListener, Shaping};
+    use std::time::Duration;
+
+    let keeps = args
+        .get("keep")
+        .context("--keep <k1[;k2…]> required (absolute survivor counts)")?
+        .split(';')
+        .map(|v| v.parse::<usize>().with_context(|| format!("--keep component `{v}`")))
+        .collect::<Result<Vec<usize>>>()?;
+    let batch = args.usize_or("batch", 16)?;
+    ensure!(batch > 0, "--batch must be positive");
+    let seed = args.usize_or("seed", 0x5e1ec7)? as u64;
+    let shaping = if args.has("latency-ms") || args.has("bandwidth-mbs") {
+        Some(Shaping {
+            latency: Duration::from_secs_f64(args.f64_or("latency-ms", 0.0)? / 1e3),
+            bandwidth: match args.get("bandwidth-mbs") {
+                Some(_) => args.f64_or("bandwidth-mbs", 0.0)? * 1e6,
+                None => f64::INFINITY,
+            },
+        })
+    } else {
+        None
+    };
+    let plan = PartyPlan { keeps, batch, approx: ApproxToggles::OURS };
+    let digest = plan.params_digest();
+
+    // role from inputs: the model owner holds the proxies, the data owner
+    // the corpus
+    let proxies = args.get("proxies");
+    let role = if proxies.is_some() { Role::ModelOwner } else { Role::DataOwner };
+
+    // establish the channel: bind-and-announce, or connect with a short
+    // grace period so start order between the two processes doesn't matter
+    let chan = match (args.get("listen"), args.get("connect")) {
+        (Some(_), Some(_)) => bail!("--listen and --connect are mutually exclusive"),
+        (None, None) => bail!("party needs --listen <addr> or --connect <addr>"),
+        (Some(addr), None) => {
+            let listener = PartyListener::bind(addr)?;
+            // machine-readable: tests and wrapper scripts parse this line
+            println!("party listening on {}", listener.local_addr());
+            listener.accept_party(role, seed, digest, shaping)?
+        }
+        (None, Some(addr)) => {
+            let mut last = None;
+            let mut chan = None;
+            for _ in 0..50 {
+                match connect_party(addr, role, seed, digest, shaping) {
+                    Ok(c) => {
+                        chan = Some(c);
+                        break;
+                    }
+                    // only "nobody listening yet" retries; a failed
+                    // HANDSHAKE is a real misconfiguration — fail now
+                    Err(crate::mpc::net::NetError::Handshake { reason })
+                        if reason.starts_with("connect") =>
+                    {
+                        last = Some(reason);
+                        std::thread::sleep(Duration::from_millis(100));
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+            }
+            match chan {
+                Some(c) => c,
+                None => bail!(
+                    "could not reach peer at {addr}: {}",
+                    last.unwrap_or_default()
+                ),
+            }
+        }
+    };
+    println!("connected as {role:?} (transport {})", chan.transport_kind());
+
+    let t0 = std::time::Instant::now();
+    let progress = |phase: usize, survivors: usize| {
+        println!("phase {} done: {} survivors", phase + 1, survivors);
+    };
+    let report = match proxies {
+        Some(list) => {
+            for flag in ["data", "synth"] {
+                ensure!(
+                    !args.has(flag),
+                    "--{flag} belongs to the data owner; this process holds --proxies"
+                );
+            }
+            let weights = list
+                .split(';')
+                .map(|p| WeightFile::load(std::path::Path::new(p)))
+                .collect::<Result<Vec<WeightFile>>>()?;
+            run_model_owner(chan, seed, &weights, &plan, progress)?
+        }
+        None => {
+            let ds = match (args.get("data"), args.get("synth")) {
+                (Some(_), Some(_)) => {
+                    bail!("--data and --synth are mutually exclusive — pick one corpus")
+                }
+                (Some(p), None) => crate::data::Dataset::load(std::path::Path::new(p))?,
+                (None, Some(n)) => {
+                    let n: usize = n.parse().with_context(|| format!("--synth {n}"))?;
+                    data::synth(&SynthSpec::default(), n, false, seed ^ 0xda7a)
+                }
+                (None, None) => bail!(
+                    "party needs --proxies (model owner) or --data/--synth (data owner)"
+                ),
+            };
+            run_data_owner(chan, seed, &ds, &plan, progress)?
+        }
+    };
+    println!(
+        "selected {} points in {:.1}s wall ({} moved, {:.1} rounds)",
+        report.selected.len(),
+        t0.elapsed().as_secs_f64(),
+        fmt_bytes(report.meter.bytes),
+        report.meter.rounds(),
+    );
+    // both parties hold the (public) selection; either may persist it
+    let body: String = report
+        .selected
+        .iter()
+        .map(|i| i.to_string())
+        .collect::<Vec<_>>()
+        .join(",");
+    println!("indices: {body}");
+    if let Some(out) = args.get("out") {
+        let lines: String = report
+            .selected
+            .iter()
+            .map(|i| i.to_string())
+            .collect::<Vec<_>>()
+            .join("\n");
+        std::fs::write(out, lines + "\n")?;
         println!("indices written to {out}");
     }
     Ok(())

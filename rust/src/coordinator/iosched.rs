@@ -53,30 +53,31 @@ pub fn delay(
 /// Round count after (optional) coalescing of latency-bound ops.
 fn effective_rounds(p0: &CostMeter, net: &NetConfig, policy: SchedPolicy) -> f64 {
     match policy {
-        SchedPolicy::Sequential | SchedPolicy::Overlapped => p0.rounds as f64,
+        SchedPolicy::Sequential | SchedPolicy::Overlapped => p0.rounds(),
         SchedPolicy::Coalesced | SchedPolicy::CoalescedOverlapped => {
             // bandwidth-delay product: payloads below this are latency-bound
             let bdp = net.bandwidth * net.latency;
             if p0.ops.is_empty() {
                 // no trace — assume the global mix coalesces uniformly
-                return p0.rounds as f64 / COALESCE_WINDOW;
+                return p0.rounds() / COALESCE_WINDOW;
             }
             let mut total = 0.0;
             let mut traced = 0u64;
             for op in &p0.ops {
-                traced += op.rounds;
-                if op.rounds == 0 {
+                traced += op.half_rounds;
+                if op.half_rounds == 0 {
                     continue;
                 }
-                let per_round = op.bytes as f64 / op.rounds as f64;
+                let rounds = op.rounds();
+                let per_round = op.bytes as f64 / rounds;
                 if per_round < 0.1 * bdp {
-                    total += op.rounds as f64 / COALESCE_WINDOW;
+                    total += rounds / COALESCE_WINDOW;
                 } else {
-                    total += op.rounds as f64;
+                    total += rounds;
                 }
             }
             // rounds outside any traced op (setup etc.) stay serial
-            total + p0.rounds.saturating_sub(traced) as f64
+            total + p0.half_rounds.saturating_sub(traced) as f64 / 2.0
         }
     }
 }
@@ -98,18 +99,30 @@ mod tests {
     use super::*;
     use crate::mpc::net::OpRecord;
 
-    fn meter(bytes: u64, rounds: u64, compute: f64, ops: Vec<OpRecord>) -> CostMeter {
-        CostMeter { bytes, rounds, messages: rounds, compute_s: compute, ops, ..Default::default() }
+    fn meter(bytes: u64, half_rounds: u64, compute: f64, ops: Vec<OpRecord>) -> CostMeter {
+        CostMeter {
+            bytes,
+            half_rounds,
+            messages: half_rounds / 2,
+            compute_s: compute,
+            ops,
+            ..Default::default()
+        }
     }
 
     #[test]
     fn policies_are_monotone() {
         let ops = vec![
-            OpRecord { name: "mlp", rounds: 80, bytes: 80 * 100, compute_s: 0.5 },
-            OpRecord { name: "matmul", rounds: 20, bytes: 200_000_000, compute_s: 1.0 },
+            OpRecord { name: "mlp", half_rounds: 160, bytes: 80 * 100, compute_s: 0.5 },
+            OpRecord {
+                name: "matmul",
+                half_rounds: 40,
+                bytes: 200_000_000,
+                compute_s: 1.0,
+            },
         ];
-        let p0 = meter(200_008_000, 100, 1.5, ops);
-        let p1 = meter(200_008_000, 100, 1.5, vec![]);
+        let p0 = meter(200_008_000, 200, 1.5, ops);
+        let p1 = meter(200_008_000, 200, 1.5, vec![]);
         let net = NetConfig::default();
         let seq = delay(&p0, &p1, &net, SchedPolicy::Sequential);
         let coal = delay(&p0, &p1, &net, SchedPolicy::Coalesced);
@@ -124,11 +137,11 @@ mod tests {
         // one op, bandwidth-bound: per-round payload ≫ BDP
         let big = vec![OpRecord {
             name: "matmul",
-            rounds: 10,
+            half_rounds: 20,
             bytes: 10 * 200_000_000,
             compute_s: 0.0,
         }];
-        let p = meter(2_000_000_000, 10, 0.0, big);
+        let p = meter(2_000_000_000, 20, 0.0, big);
         let seq = delay(&p, &p, &net, SchedPolicy::Sequential);
         let coal = delay(&p, &p, &net, SchedPolicy::Coalesced);
         assert!((seq - coal).abs() < 1e-9, "bandwidth-bound ops don't coalesce");
@@ -137,7 +150,7 @@ mod tests {
     #[test]
     fn overlap_hides_compute_behind_comm() {
         let net = NetConfig::default();
-        let p = meter(1_000_000_000, 10, 5.0, vec![]); // 10s payload, 5s compute
+        let p = meter(1_000_000_000, 20, 5.0, vec![]); // 10s payload, 5s compute
         let seq = delay(&p, &p, &net, SchedPolicy::Sequential);
         let ovl = delay(&p, &p, &net, SchedPolicy::Overlapped);
         assert!(seq > 15.0);

@@ -47,6 +47,7 @@ use crate::models::{ApproxToggles, WeightFile};
 use crate::mpc::dealer::Hub;
 use crate::mpc::faults::FaultPolicy;
 use crate::mpc::net::NetConfig;
+use crate::mpc::wire::TransportConfig;
 use crate::proxygen::{self, DistillConfig, ProxyFitReport};
 
 use super::iosched::SchedPolicy;
@@ -204,6 +205,12 @@ pub struct RuntimeProfile {
     pub policy: SchedPolicy,
     /// WAN model used for the simulated delay attribution.
     pub net: NetConfig,
+    /// Transport backend the engine builds its channel pairs over:
+    /// in-memory channels (the default), loopback TCP, or a Unix socket
+    /// pair (`mpc::wire`).  Like every other profile knob it may not
+    /// change a byte of the selection — tests/tcp_equiv.rs holds the
+    /// socket backends to byte-identity with the in-memory reference.
+    pub transport: TransportConfig,
     /// Transport fault handling: per-recv deadline, retry policy for
     /// net-failed jobs (honored by the
     /// [`SelectionService`](super::service::SelectionService) worker
@@ -222,6 +229,7 @@ impl Default for RuntimeProfile {
             overlap: false,
             policy: SchedPolicy::CoalescedOverlapped,
             net: NetConfig::default(),
+            transport: TransportConfig::default(),
             faults: FaultPolicy::default(),
         }
     }
@@ -685,6 +693,7 @@ impl<'a> SelectionJob<'a> {
             capture_shares: self.privacy.capture_shares(),
             job_tag: self.job_tag,
             faults: self.profile.faults.clone(),
+            transport: self.profile.transport,
         }
     }
 
@@ -847,6 +856,7 @@ impl<'a> SelectionJob<'a> {
                             i,
                             opts.job_tag,
                             &opts.faults,
+                            &opts.transport,
                         )?
                     }
                 };
@@ -869,11 +879,12 @@ impl<'a> SelectionJob<'a> {
                     let (approx, seed, job) =
                         (opts.approx, opts.dealer_seed, opts.job_tag);
                     let faults = opts.faults.clone();
+                    let transport = opts.transport;
                     let next = i + 1;
                     prefetch.0 = Some(thread::spawn(move || {
                         let weights = src.load(next)?;
                         selector::setup_phase_session_on(
-                            hub, weights, approx, seed, next, job, &faults,
+                            hub, weights, approx, seed, next, job, &faults, &transport,
                         )
                     }));
                 }
@@ -1004,6 +1015,7 @@ pub(crate) fn run_legacy(
             overlap: opts.overlap || force_overlap,
             policy: opts.policy,
             net: opts.net,
+            transport: opts.transport,
             faults: opts.faults.clone(),
         })
         .approx(opts.approx)

@@ -32,7 +32,23 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{ensure, Context, Result};
+use anyhow::{Context, Result};
+
+/// A manifest rejected at the journal's API boundary.  Typed (like
+/// `NetError`) so callers can downcast a failed submit and report it as a
+/// client error instead of a daemon fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct InvalidManifest {
+    pub reason: &'static str,
+}
+
+impl std::fmt::Display for InvalidManifest {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "invalid journal manifest: {}", self.reason)
+    }
+}
+
+impl std::error::Error for InvalidManifest {}
 
 /// One journaled job a restarted daemon still owes a terminal stamp.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -103,7 +119,16 @@ impl JobJournal {
                     }
                 }
                 "done" => {
-                    finished.insert(id, it.next().unwrap_or("ok"));
+                    // a `done` record is only terminal if its status field
+                    // survived the append intact — a torn `done <id>` (or a
+                    // truncated status) must NOT count as `done ok`, or a
+                    // crash mid-stamp silently drops the job from replay.
+                    match it.next() {
+                        Some(status @ ("ok" | "failed" | "cancelled")) => {
+                            finished.insert(id, status);
+                        }
+                        _ => continue, // torn mid-append: not terminal
+                    }
                 }
                 _ => {}
             }
@@ -144,12 +169,21 @@ impl JobJournal {
     /// Log a newly submitted manifest; returns its fresh journal id.
     /// Call BEFORE handing the job to the service — under-reporting is
     /// the one failure the WAL may not have.
+    ///
+    /// The manifest becomes the record's line tail verbatim, so anything
+    /// that could forge additional WAL records on replay (embedded `\n` or
+    /// `\r`) is rejected here with a typed [`InvalidManifest`].
     pub fn record_submit(&self, manifest: &str) -> Result<u64> {
         let manifest = manifest.trim();
-        ensure!(
-            !manifest.is_empty() && !manifest.contains('\n'),
-            "journal manifests are single non-empty lines"
-        );
+        if manifest.is_empty() {
+            return Err(InvalidManifest { reason: "manifest is empty" }.into());
+        }
+        if manifest.contains('\n') || manifest.contains('\r') {
+            return Err(InvalidManifest {
+                reason: "manifest contains a line break (would forge WAL records)",
+            }
+            .into());
+        }
         let id = {
             let mut next = self.next_id.lock().unwrap();
             let id = *next;
@@ -240,10 +274,38 @@ mod tests {
     }
 
     #[test]
-    fn submit_rejects_multiline_manifests() {
+    fn submit_rejects_multiline_manifests_with_typed_error() {
         let path = tmp("reject");
         let (j, _) = JobJournal::open(&path).unwrap();
-        assert!(j.record_submit("").is_err());
-        assert!(j.record_submit("a\nb").is_err());
+        for bad in ["", "a\nb", "a\rb", "a\r\nforged 9 x"] {
+            let err = j.record_submit(bad).unwrap_err();
+            assert!(
+                err.downcast_ref::<InvalidManifest>().is_some(),
+                "expected InvalidManifest for {bad:?}, got {err:#}"
+            );
+        }
+        // a rejected submit must not burn an id or write a record
+        assert_eq!(j.record_submit("proxies=a.sfw synth=64 keep=8").unwrap(), 0);
+    }
+
+    #[test]
+    fn torn_done_is_not_done_ok() {
+        // regression (replay bug, PR 7): a crash mid-`done` append used to
+        // replay as `done ok`, silently dropping the job.
+        let path = tmp("torn_done");
+        let (j, _) = JobJournal::open(&path).unwrap();
+        let a = j.record_submit("proxies=a.sfw synth=64 keep=8").unwrap();
+        let b = j.record_submit("proxies=b.sfw synth=64 keep=8 tag=1").unwrap();
+        j.record_start(a).unwrap();
+        drop(j);
+        // crash tears the status off a's `done` line, and truncates b's
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str(&format!("done {a}\ndone {b} o"));
+        std::fs::write(&path, text).unwrap();
+        let (_, pending) = JobJournal::open(&path).unwrap();
+        assert_eq!(pending.len(), 2, "both torn `done`s must still replay");
+        assert_eq!(pending[0].id, a);
+        assert!(pending[0].was_inflight);
+        assert_eq!(pending[1].id, b);
     }
 }

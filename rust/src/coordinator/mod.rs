@@ -51,6 +51,7 @@ pub mod job;
 pub mod journal;
 pub mod market;
 pub mod observe;
+pub mod party;
 pub mod phase;
 pub mod planner;
 pub mod quickselect;
@@ -64,6 +65,7 @@ pub use job::{
     RuntimeProfile, SelectionJob, SelectionJobBuilder,
 };
 pub use journal::{JobJournal, PendingJob};
+pub use party::{run_data_owner, run_model_owner, PartyPlan, PartyReport};
 pub use observe::{
     ChannelObserver, EventCounters, FanoutObserver, JobEvent, JobObserver,
     JobUpdate, StderrProgress,

@@ -35,9 +35,11 @@ pub enum JobEvent<'a> {
     /// previous phase; `keep` of them will survive this one.
     PhaseStarted { phase: usize, n_candidates: usize, keep: usize },
     /// Candidate batch `batch` of phase `phase` finished its MPC forward;
-    /// `bytes` / `rounds` are the model owner's metered cost for exactly
-    /// this batch.  Batches from different lanes may report out of order.
-    BatchCompleted { phase: usize, batch: usize, bytes: u64, rounds: u64 },
+    /// `bytes` / `half_rounds` are the model owner's metered cost for
+    /// exactly this batch (a round trip is 2 half-rounds; see
+    /// [`CostMeter::rounds`](crate::mpc::CostMeter::rounds)).  Batches
+    /// from different lanes may report out of order.
+    BatchCompleted { phase: usize, batch: usize, bytes: u64, half_rounds: u64 },
     /// QuickSelect proved dataset index `index` is in phase `phase`'s
     /// top-k — emitted the moment the partition confirms it, long before
     /// the full survivor set is known.
@@ -72,12 +74,13 @@ pub enum JobUpdate {
     /// See [`JobEvent::PhaseStarted`].
     PhaseStarted { phase: usize, n_candidates: usize, keep: usize },
     /// See [`JobEvent::BatchCompleted`].
-    BatchCompleted { phase: usize, batch: usize, bytes: u64, rounds: u64 },
+    BatchCompleted { phase: usize, batch: usize, bytes: u64, half_rounds: u64 },
     /// See [`JobEvent::SurvivorConfirmed`].
     SurvivorConfirmed { phase: usize, index: usize },
     /// See [`JobEvent::PhaseFinished`]; `bytes` is both parties' metered
-    /// traffic for the phase, `rounds` the model owner's round count.
-    PhaseFinished { phase: usize, survivors: usize, bytes: u64, rounds: u64 },
+    /// traffic for the phase, `half_rounds` the model owner's half-round
+    /// count (2 per round trip).
+    PhaseFinished { phase: usize, survivors: usize, bytes: u64, half_rounds: u64 },
     /// See [`JobEvent::Retrying`].
     Retrying { attempt: u32 },
     /// See [`JobEvent::Cancelled`].
@@ -99,12 +102,12 @@ impl From<&JobEvent<'_>> for JobUpdate {
                     keep: *keep,
                 }
             }
-            JobEvent::BatchCompleted { phase, batch, bytes, rounds } => {
+            JobEvent::BatchCompleted { phase, batch, bytes, half_rounds } => {
                 JobUpdate::BatchCompleted {
                     phase: *phase,
                     batch: *batch,
                     bytes: *bytes,
-                    rounds: *rounds,
+                    half_rounds: *half_rounds,
                 }
             }
             JobEvent::SurvivorConfirmed { phase, index } => {
@@ -114,7 +117,7 @@ impl From<&JobEvent<'_>> for JobUpdate {
                 phase: *phase,
                 survivors: outcome.survivors.len(),
                 bytes: outcome.meter_p0.bytes + outcome.meter_p1.bytes,
-                rounds: outcome.meter_p0.rounds,
+                half_rounds: outcome.meter_p0.half_rounds,
             },
             JobEvent::Retrying { attempt } => {
                 JobUpdate::Retrying { attempt: *attempt }
@@ -225,7 +228,7 @@ pub struct EventCounters {
     pub phases_finished: AtomicU64,
     pub batches: AtomicU64,
     pub batch_bytes: AtomicU64,
-    pub batch_rounds: AtomicU64,
+    pub batch_half_rounds: AtomicU64,
     pub survivors: AtomicU64,
     pub retries: AtomicU64,
     pub cancellations: AtomicU64,
@@ -246,10 +249,10 @@ impl JobObserver for EventCounters {
             JobEvent::PhaseStarted { .. } => {
                 self.phases_started.fetch_add(1, Ordering::Relaxed);
             }
-            JobEvent::BatchCompleted { bytes, rounds, .. } => {
+            JobEvent::BatchCompleted { bytes, half_rounds, .. } => {
                 self.batches.fetch_add(1, Ordering::Relaxed);
                 self.batch_bytes.fetch_add(*bytes, Ordering::Relaxed);
-                self.batch_rounds.fetch_add(*rounds, Ordering::Relaxed);
+                self.batch_half_rounds.fetch_add(*half_rounds, Ordering::Relaxed);
             }
             JobEvent::SurvivorConfirmed { .. } => {
                 self.survivors.fetch_add(1, Ordering::Relaxed);
@@ -296,23 +299,23 @@ impl JobObserver for StderrProgress {
                     keep
                 );
             }
-            JobEvent::BatchCompleted { phase, batch, bytes, rounds } => {
+            JobEvent::BatchCompleted { phase, batch, bytes, half_rounds } => {
                 eprintln!(
-                    "[phase {}] batch {} done ({} B, {} rounds)",
+                    "[phase {}] batch {} done ({} B, {:.1} rounds)",
                     phase + 1,
                     batch,
                     bytes,
-                    rounds
+                    *half_rounds as f64 / 2.0
                 );
             }
             JobEvent::SurvivorConfirmed { .. } => {}
             JobEvent::PhaseFinished { phase, outcome } => {
                 eprintln!(
-                    "[phase {}] done: {} survivors, {:.2}s wall ({} rounds)",
+                    "[phase {}] done: {} survivors, {:.2}s wall ({:.1} rounds)",
                     phase + 1,
                     outcome.survivors.len(),
                     outcome.wall_s(),
-                    outcome.meter_p0.rounds
+                    outcome.meter_p0.rounds()
                 );
             }
             JobEvent::Retrying { attempt } => {
@@ -346,8 +349,18 @@ mod tests {
         };
         c.on_event(&JobEvent::PhaseCalibrated { phase: 0, fit: &fit });
         c.on_event(&JobEvent::PhaseStarted { phase: 0, n_candidates: 10, keep: 4 });
-        c.on_event(&JobEvent::BatchCompleted { phase: 0, batch: 0, bytes: 7, rounds: 2 });
-        c.on_event(&JobEvent::BatchCompleted { phase: 0, batch: 1, bytes: 5, rounds: 3 });
+        c.on_event(&JobEvent::BatchCompleted {
+            phase: 0,
+            batch: 0,
+            bytes: 7,
+            half_rounds: 4,
+        });
+        c.on_event(&JobEvent::BatchCompleted {
+            phase: 0,
+            batch: 1,
+            bytes: 5,
+            half_rounds: 6,
+        });
         c.on_event(&JobEvent::SurvivorConfirmed { phase: 0, index: 3 });
         c.on_event(&JobEvent::SurvivorConfirmed { phase: 0, index: 9 });
         let out = crate::coordinator::selector::PhaseOutcome {
@@ -370,7 +383,7 @@ mod tests {
         assert_eq!(c.phases_started.load(Ordering::Relaxed), 1);
         assert_eq!(c.batches.load(Ordering::Relaxed), 2);
         assert_eq!(c.batch_bytes.load(Ordering::Relaxed), 12);
-        assert_eq!(c.batch_rounds.load(Ordering::Relaxed), 5);
+        assert_eq!(c.batch_half_rounds.load(Ordering::Relaxed), 10);
         assert_eq!(c.survivors.load(Ordering::Relaxed), 2);
         assert_eq!(c.phases_finished.load(Ordering::Relaxed), 1);
         assert_eq!(c.cancellations.load(Ordering::Relaxed), 1);
@@ -384,7 +397,7 @@ mod tests {
             phase: 1,
             batch: 0,
             bytes: 9,
-            rounds: 4,
+            half_rounds: 8,
         });
         obs.on_event(&JobEvent::Cancelled);
         assert_eq!(
@@ -393,7 +406,7 @@ mod tests {
         );
         assert_eq!(
             rx.try_recv().unwrap(),
-            JobUpdate::BatchCompleted { phase: 1, batch: 0, bytes: 9, rounds: 4 }
+            JobUpdate::BatchCompleted { phase: 1, batch: 0, bytes: 9, half_rounds: 8 }
         );
         assert_eq!(rx.try_recv().unwrap(), JobUpdate::Cancelled);
         // dropping the receiver detaches the channel instead of erroring

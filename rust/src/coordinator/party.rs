@@ -1,0 +1,376 @@
+//! Single-party selection drivers for the two-process deployment
+//! (`selectformer party --listen` / `--connect`).
+//!
+//! The in-process runtimes spawn both MPC parties on threads of one OS
+//! process; this module runs ONE party against a socket [`Chan`]
+//! produced by [`PartyListener`](crate::mpc::wire::PartyListener) /
+//! [`connect_party`](crate::mpc::wire::connect_party), so the
+//! model owner and the data owner can live in separate processes (or
+//! machines).  The protocol walked here is exactly the serial reference
+//! oracle (`selector::run_phase_serial`): the same session setup, the
+//! same per-batch randomness tags, the same QuickSelect — so the final
+//! selection is identical to an in-process run over the same inputs
+//! (asserted end-to-end in tests/tcp_equiv.rs).
+//!
+//! What travels on the wire beyond the oracle's protocol frames is a
+//! tiny clear-text control prologue, all of it public by the paper's
+//! threat model:
+//!
+//!   1. the data owner announces its candidate count `n` (dataset sizes
+//!      are public — the marketplace advertises them);
+//!   2. per phase, the model owner announces the proxy [`ModelConfig`]
+//!      (architecture shapes are public; weights stay shared).
+//!
+//! Everything secret (weights, activations, entropies) moves as additive
+//! shares, exactly as in-process.  The dealer needs no third process:
+//! preprocessing is a deterministic seeded generator (see
+//! [`mpc::dealer`](crate::mpc::dealer)), so each party derives its own
+//! half locally and the connect handshake pins a seed FINGERPRINT to
+//! catch misconfiguration without revealing the seed.
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::data::Dataset;
+use crate::fixed;
+use crate::models::{ApproxToggles, ModelConfig, WeightFile};
+use crate::mpc::net::{Chan, CostMeter, Role};
+use crate::mpc::proto::{PartyCtx, Shared};
+use crate::mpc::wire::digest_params;
+use crate::tensor::TensorR;
+
+use super::quickselect::{top_k_streamed_gated, ChannelSink};
+use super::selector::{
+    gather_tokens, namespace_tag, p0_eval_batches, p0_send_session, p1_eval_batches,
+    p1_recv_session, qs_tag, setup_tag, CancelGate, LaneCfg,
+};
+
+/// Knobs both parties must agree on; folded into the handshake's
+/// parameter digest so a mismatch fails typed at connect time.
+#[derive(Clone, Debug)]
+pub struct PartyPlan {
+    /// survivors kept per phase (absolute counts, one per phase proxy)
+    pub keeps: Vec<usize>,
+    pub batch: usize,
+    pub approx: ApproxToggles,
+}
+
+impl PartyPlan {
+    /// The public-parameter digest pinned by the wire handshake.
+    pub fn params_digest(&self) -> u64 {
+        let mut words = vec![
+            self.batch as u64,
+            self.keeps.len() as u64,
+            approx_code(&self.approx),
+        ];
+        words.extend(self.keeps.iter().map(|&k| k as u64));
+        digest_params(&words)
+    }
+}
+
+/// What a finished party run hands back to the CLI.
+#[derive(Clone, Debug)]
+pub struct PartyReport {
+    /// final surviving dataset indices (both parties agree; public)
+    pub selected: Vec<usize>,
+    /// per-phase survivor counts, for progress reporting
+    pub phase_sizes: Vec<usize>,
+    /// this party's wire meter across the whole run
+    pub meter: CostMeter,
+}
+
+fn approx_code(a: &ApproxToggles) -> u64 {
+    (a.softmax as u64) | (a.layernorm as u64) << 1 | (a.entropy as u64) << 2
+}
+
+// ---------------------------------------------------------------------------
+// ModelConfig wire frame (public architecture shapes)
+// ---------------------------------------------------------------------------
+
+const CFG_FRAME_LEN: usize = 11;
+
+fn cfg_to_frame(cfg: &ModelConfig) -> Vec<i64> {
+    vec![
+        cfg.n_layers as i64,
+        cfg.n_heads as i64,
+        cfg.d_model as i64,
+        cfg.d_head as i64,
+        cfg.d_mlp as i64,
+        cfg.seq_len as i64,
+        cfg.vocab as i64,
+        cfg.n_classes as i64,
+        cfg.variant_code as i64,
+        cfg.d_ff as i64,
+        cfg.attn_scale_dim as i64,
+    ]
+}
+
+fn cfg_from_frame(frame: &[i64]) -> Result<ModelConfig> {
+    ensure!(
+        frame.len() == CFG_FRAME_LEN,
+        "model-config frame has {} words, expected {CFG_FRAME_LEN}",
+        frame.len()
+    );
+    ensure!(
+        frame.iter().all(|&w| w >= 0),
+        "model-config frame carries a negative shape"
+    );
+    Ok(ModelConfig {
+        n_layers: frame[0] as usize,
+        n_heads: frame[1] as usize,
+        d_model: frame[2] as usize,
+        d_head: frame[3] as usize,
+        d_mlp: frame[4] as usize,
+        seq_len: frame[5] as usize,
+        vocab: frame[6] as usize,
+        n_classes: frame[7] as usize,
+        variant_code: frame[8] as u32,
+        d_ff: frame[9] as usize,
+        attn_scale_dim: frame[10] as usize,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// One serial phase, single-party halves
+// ---------------------------------------------------------------------------
+
+fn lane_for(phase: usize, n: usize, batch: usize, cfg: &ModelConfig) -> LaneCfg {
+    LaneCfg {
+        job: 0,
+        phase,
+        n,
+        batch,
+        seq_len: cfg.seq_len,
+        dm: cfg.d_model,
+        range: 0..n.div_ceil(batch),
+        gate: CancelGate::none(),
+    }
+}
+
+/// Model-owner half of one serial phase — the P0 closure of
+/// `run_phase_serial`, lifted out of the two-thread engine.
+fn p0_phase(
+    ctx: &mut PartyCtx,
+    wf: &WeightFile,
+    cfg: ModelConfig,
+    approx: ApproxToggles,
+    phase: usize,
+    n: usize,
+    batch: usize,
+    keep: usize,
+) -> Result<Vec<usize>> {
+    let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
+    let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
+    let lane = lane_for(phase, n, batch, &cfg);
+    let mut model = ctx.op("session_setup", |ctx| {
+        ctx.reseed_for(namespace_tag(0, setup_tag(phase)));
+        p0_send_session(ctx, wf, cfg, approx, emb_tok_enc, emb_pos_enc)
+    })?;
+    let ent_shares = p0_eval_batches(ctx, &mut model, &lane, &None)?;
+    ctx.reseed_for(namespace_tag(0, qs_tag(phase)));
+    let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
+    let mut sink = ChannelSink::collector();
+    top_k_streamed_gated(ctx, &ent, keep, &mut sink, Some(&*lane.gate))?;
+    let mut idx = sink.order;
+    idx.sort_unstable();
+    Ok(idx)
+}
+
+/// Data-owner half of one serial phase — the P1 closure of
+/// `run_phase_serial`, lifted out of the two-thread engine.
+#[allow(clippy::too_many_arguments)]
+fn p1_phase(
+    ctx: &mut PartyCtx,
+    cand_tokens: &[u32],
+    cfg: ModelConfig,
+    approx: ApproxToggles,
+    phase: usize,
+    n: usize,
+    batch: usize,
+    keep: usize,
+) -> Result<Vec<usize>> {
+    let lane = lane_for(phase, n, batch, &cfg);
+    let (mut model, emb_tok, emb_pos) = ctx.op("session_setup", |ctx| {
+        ctx.reseed_for(namespace_tag(0, setup_tag(phase)));
+        p1_recv_session(ctx, cfg, approx)
+    })?;
+    let ent_shares =
+        p1_eval_batches(ctx, &mut model, cand_tokens, &emb_tok, &emb_pos, &lane)?;
+    ctx.reseed_for(namespace_tag(0, qs_tag(phase)));
+    let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
+    let mut sel: Vec<usize> = Vec::with_capacity(keep);
+    top_k_streamed_gated(ctx, &ent, keep, &mut sel, Some(&*lane.gate))?;
+    sel.sort_unstable();
+    Ok(sel)
+}
+
+// ---------------------------------------------------------------------------
+// Whole-run drivers
+// ---------------------------------------------------------------------------
+
+/// Run the model-owner side of a multi-phase selection over an
+/// already-handshaken channel.  `phase_weights[i]` is the phase-i proxy;
+/// the data owner's candidate count arrives as the first control frame.
+pub fn run_model_owner(
+    chan: Chan,
+    dealer_seed: u64,
+    phase_weights: &[WeightFile],
+    plan: &PartyPlan,
+    mut progress: impl FnMut(usize, usize),
+) -> Result<PartyReport> {
+    ensure!(
+        phase_weights.len() == plan.keeps.len(),
+        "{} phase proxies but {} keep counts",
+        phase_weights.len(),
+        plan.keeps.len()
+    );
+    let mut ctx = PartyCtx::new(Role::ModelOwner, chan, dealer_seed);
+    let hello = ctx.chan.recv_only().context("waiting for candidate count")?;
+    ensure!(hello.len() == 1 && hello[0] > 0, "bad candidate-count frame");
+    let n0 = hello[0] as usize;
+    // public candidate index space: 0..n0 at phase 0, survivors after
+    let mut cands: Vec<usize> = (0..n0).collect();
+    let mut phase_sizes = Vec::with_capacity(plan.keeps.len());
+    for (phase, (wf, &keep)) in phase_weights.iter().zip(&plan.keeps).enumerate() {
+        let n = cands.len();
+        ensure!(keep <= n, "phase {phase}: keep {keep} exceeds {n} candidates");
+        let cfg = wf.config()?;
+        ctx.chan.send_only(cfg_to_frame(&cfg))?;
+        let local = p0_phase(&mut ctx, wf, cfg, plan.approx, phase, n, plan.batch, keep)?;
+        cands = local.iter().map(|&j| cands[j]).collect();
+        phase_sizes.push(cands.len());
+        progress(phase, cands.len());
+    }
+    Ok(PartyReport { selected: cands, phase_sizes, meter: ctx.chan.meter.clone() })
+}
+
+/// Run the data-owner side of a multi-phase selection over an
+/// already-handshaken channel.  Candidates are the whole dataset; each
+/// phase's proxy architecture arrives from the model owner.
+pub fn run_data_owner(
+    chan: Chan,
+    dealer_seed: u64,
+    dataset: &Dataset,
+    plan: &PartyPlan,
+    mut progress: impl FnMut(usize, usize),
+) -> Result<PartyReport> {
+    let n0 = dataset.n;
+    ensure!(n0 > 0, "empty dataset");
+    let mut ctx = PartyCtx::new(Role::DataOwner, chan, dealer_seed);
+    ctx.chan.send_only(vec![n0 as i64])?;
+    let mut cands: Vec<usize> = (0..n0).collect();
+    let mut phase_sizes = Vec::with_capacity(plan.keeps.len());
+    for (phase, &keep) in plan.keeps.iter().enumerate() {
+        let n = cands.len();
+        ensure!(keep <= n, "phase {phase}: keep {keep} exceeds {n} candidates");
+        let frame = ctx.chan.recv_only().context("waiting for phase model config")?;
+        let cfg = cfg_from_frame(&frame)?;
+        if cfg.seq_len != dataset.seq_len {
+            bail!(
+                "phase {phase}: model seq_len {} != dataset seq_len {}",
+                cfg.seq_len,
+                dataset.seq_len
+            );
+        }
+        let toks = gather_tokens(dataset, &cands);
+        let local =
+            p1_phase(&mut ctx, &toks, cfg, plan.approx, phase, n, plan.batch, keep)?;
+        cands = local.iter().map(|&j| cands[j]).collect();
+        phase_sizes.push(cands.len());
+        progress(phase, cands.len());
+    }
+    Ok(PartyReport { selected: cands, phase_sizes, meter: ctx.chan.meter.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::{PrivacyMode, RuntimeProfile, SelectionJob};
+    use crate::data::{synth, SynthSpec};
+    use crate::mpc::wire::{connect_party, PartyListener};
+
+    fn cfg_frame_round_trips(cfg: ModelConfig) {
+        let back = cfg_from_frame(&cfg_to_frame(&cfg)).unwrap();
+        assert_eq!(back, cfg);
+    }
+
+    #[test]
+    fn model_config_frame_round_trips() {
+        cfg_frame_round_trips(ModelConfig::bert_paper());
+        cfg_frame_round_trips(ModelConfig::proxy(&ModelConfig::bert_paper(), 1, 1, 2));
+        assert!(cfg_from_frame(&[1, 2, 3]).is_err(), "short frame must fail");
+        let mut bad = cfg_to_frame(&ModelConfig::bert_paper());
+        bad[2] = -5;
+        assert!(cfg_from_frame(&bad).is_err(), "negative shape must fail");
+    }
+
+    #[test]
+    fn params_digest_separates_plans() {
+        let a = PartyPlan { keeps: vec![12, 6], batch: 8, approx: ApproxToggles::OURS };
+        let b = PartyPlan { keeps: vec![12, 6], batch: 16, approx: ApproxToggles::OURS };
+        let c = PartyPlan { keeps: vec![6, 12], batch: 8, approx: ApproxToggles::OURS };
+        assert_ne!(a.params_digest(), b.params_digest());
+        assert_ne!(a.params_digest(), c.params_digest());
+        assert_eq!(a.params_digest(), a.clone().params_digest());
+    }
+
+    /// The two-process invariant, in-process: the party drivers connected
+    /// over a real Unix socket select exactly what the in-process job
+    /// runtime selects over the same inputs.
+    #[test]
+    fn split_parties_match_in_process_selection() {
+        let dir = std::env::temp_dir().join("sf_party_split_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p1 = dir.join("p1.sfw");
+        let p2 = dir.join("p2.sfw");
+        crate::coordinator::testutil::write_random_proxy_sfw(&p1, 1, 1, 2, 16, 64, 2, 8);
+        crate::coordinator::testutil::write_random_proxy_sfw(&p2, 2, 2, 4, 16, 64, 2, 8);
+        let ds = synth(
+            &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+            32,
+            false,
+            5,
+        );
+        let plan = PartyPlan { keeps: vec![12, 6], batch: 8, approx: ApproxToggles::OURS };
+        // the default dealer seed of SelectionOptions, so the split run is
+        // judged against the in-process default run
+        let seed = 0x5e1ec7u64;
+
+        let sock = dir.join("party.sock");
+        let addr = format!("unix:{}", sock.display());
+        let listener = PartyListener::bind(&addr).unwrap();
+        let bound = listener.local_addr();
+        let digest = plan.params_digest();
+        let plan1 = plan.clone();
+        let ds1 = ds.clone();
+        let h = std::thread::spawn(move || {
+            let chan = connect_party(&bound, Role::DataOwner, seed, digest, None).unwrap();
+            run_data_owner(chan, seed, &ds1, &plan1, |_, _| {}).unwrap()
+        });
+        let chan = listener
+            .accept_party(Role::ModelOwner, seed, digest, None)
+            .unwrap();
+        let weights = [
+            WeightFile::load(&p1).unwrap(),
+            WeightFile::load(&p2).unwrap(),
+        ];
+        let r0 = run_model_owner(chan, seed, &weights, &plan, |_, _| {}).unwrap();
+        let r1 = h.join().unwrap();
+        assert_eq!(r0.selected, r1.selected, "parties must agree");
+        assert_eq!(r0.phase_sizes, vec![12, 6]);
+
+        // reference: the in-process job runtime over the same inputs
+        let outcome = SelectionJob::builder([p1.as_path(), p2.as_path()], &ds)
+            .keep_counts(plan.keeps.clone())
+            .runtime(RuntimeProfile { batch: plan.batch, ..Default::default() })
+            .privacy(PrivacyMode::Production)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(
+            r0.selected, outcome.selected,
+            "two-process selection must match the in-process runtime"
+        );
+        assert!(r0.meter.bytes > 0 && r1.meter.bytes > 0);
+    }
+}

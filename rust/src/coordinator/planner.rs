@@ -29,10 +29,12 @@ pub struct PhaseCostProfile {
     pub batch: usize,
     /// one-time session setup (weight sharing): bytes both ways
     pub setup_bytes: u64,
-    pub setup_rounds: u64,
+    /// setup latency in HALF-rounds (one metered send or recv; a round
+    /// trip is 2 — matches [`CostMeter::half_rounds`](crate::mpc::CostMeter))
+    pub setup_half_rounds: u64,
     /// marginal per-batch forward cost
     pub batch_bytes: u64,
-    pub batch_rounds: u64,
+    pub batch_half_rounds: u64,
     pub batch_compute_s: f64,
 }
 
@@ -41,19 +43,20 @@ impl PhaseCostProfile {
     pub fn estimate(&self, n_points: usize, net: &NetConfig, policy: SchedPolicy) -> f64 {
         let n_batches = n_points.div_ceil(self.batch) as u64;
         let bytes = self.setup_bytes + n_batches * self.batch_bytes + qs_bytes(n_points);
-        let mut rounds = self.setup_rounds + n_batches * self.batch_rounds;
+        let mut half_rounds = self.setup_half_rounds + n_batches * self.batch_half_rounds;
         let compute = n_batches as f64 * self.batch_compute_s;
-        let qs_rounds = qs_rounds(n_points);
+        let qs_half_rounds = qs_half_rounds(n_points);
         match policy {
             SchedPolicy::Sequential | SchedPolicy::Overlapped => {}
             SchedPolicy::Coalesced | SchedPolicy::CoalescedOverlapped => {
                 // latency-bound rounds coalesce across the batch window
-                rounds = self.setup_rounds
-                    + ((n_batches * self.batch_rounds) as f64
+                half_rounds = self.setup_half_rounds
+                    + ((n_batches * self.batch_half_rounds) as f64
                         / super::iosched::COALESCE_WINDOW) as u64;
             }
         }
-        let lat = (rounds + qs_rounds) as f64 * net.latency;
+        // 2 half-rounds = 1 round trip = 1 latency payment
+        let lat = (half_rounds + qs_half_rounds) as f64 * 0.5 * net.latency;
         let payload = bytes as f64 / net.bandwidth / 2.0; // both-ways → one-way max
         match policy {
             SchedPolicy::Sequential | SchedPolicy::Coalesced => lat + payload + compute,
@@ -68,11 +71,11 @@ fn qs_bytes(n: usize) -> u64 {
     (3.4 * n as f64 * 432.0) as u64
 }
 
-fn qs_rounds(n: usize) -> u64 {
+fn qs_half_rounds(n: usize) -> u64 {
     if n <= 1 {
         return 0;
     }
-    2 * (n as f64).log2().ceil() as u64 * 9
+    2 * (2 * (n as f64).log2().ceil() as u64 * 9)
 }
 
 /// Measure a phase profile by running 1- and 2-batch sessions with random
@@ -109,19 +112,19 @@ pub fn profile_phase(cfg: &ModelConfig, batch: usize) -> Result<PhaseCostProfile
     let o2 = measure(2 * batch)?;
     let b1 = o1.meter_p0.bytes + o1.meter_p1.bytes;
     let b2 = o2.meter_p0.bytes + o2.meter_p1.bytes;
-    let r1 = o1.meter_p0.rounds;
-    let r2 = o2.meter_p0.rounds;
+    let r1 = o1.meter_p0.half_rounds;
+    let r2 = o2.meter_p0.half_rounds;
     let c1 = o1.meter_p0.compute_s.max(o1.meter_p1.compute_s);
     let c2 = o2.meter_p0.compute_s.max(o2.meter_p1.compute_s);
     let batch_bytes = b2.saturating_sub(b1);
-    let batch_rounds = r2.saturating_sub(r1);
+    let batch_half_rounds = r2.saturating_sub(r1);
     Ok(PhaseCostProfile {
         cfg: *cfg,
         batch,
         setup_bytes: b1.saturating_sub(batch_bytes),
-        setup_rounds: r1.saturating_sub(batch_rounds),
+        setup_half_rounds: r1.saturating_sub(batch_half_rounds),
         batch_bytes,
-        batch_rounds,
+        batch_half_rounds,
         batch_compute_s: (c2 - c1).max(1e-6),
     })
 }
@@ -280,9 +283,9 @@ mod tests {
             cfg: tiny_proxy_cfg(1, 1, 2, 16, 64, 2, 8),
             batch: 8,
             setup_bytes: 50_000,
-            setup_rounds: 4,
+            setup_half_rounds: 8,
             batch_bytes: 120_000,
-            batch_rounds: 60,
+            batch_half_rounds: 120,
             batch_compute_s: 0.004,
         };
         let net = NetConfig::default();

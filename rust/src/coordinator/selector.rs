@@ -65,6 +65,7 @@ use crate::mpc::engine::{
 };
 use crate::mpc::faults::FaultPolicy;
 use crate::mpc::net::{CostMeter, NetConfig};
+use crate::mpc::wire::TransportConfig;
 use crate::mpc::proto::{recv_share, share_input, PartyCtx, Shared};
 use crate::tensor::{TensorF, TensorR};
 
@@ -273,6 +274,10 @@ pub struct SelectionOptions {
     /// Transport fault handling: per-recv deadlines, retry policy and the
     /// test-only deterministic injector (see [`FaultPolicy`]).
     pub faults: FaultPolicy,
+    /// Physical backend for the party channels: in-memory (default),
+    /// loopback TCP, or a Unix socketpair — byte-identical selections on
+    /// every backend (tests/tcp_equiv.rs).
+    pub transport: TransportConfig,
 }
 
 impl Default for SelectionOptions {
@@ -289,6 +294,7 @@ impl Default for SelectionOptions {
             capture_shares: false,
             job_tag: 0,
             faults: FaultPolicy::default(),
+            transport: TransportConfig::default(),
         }
     }
 }
@@ -350,8 +356,14 @@ impl SelectionOutcome {
             .map(|p| p.meter_p0.bytes + p.meter_p1.bytes)
             .sum()
     }
-    pub fn total_rounds(&self) -> u64 {
-        self.phases.iter().map(|p| p.meter_p0.rounds).sum()
+    /// Total protocol rounds (half-rounds are symmetric across parties,
+    /// so the model owner's meter is the protocol's).
+    pub fn total_rounds(&self) -> f64 {
+        self.total_half_rounds() as f64 / 2.0
+    }
+    /// Exact half-round total (see [`CostMeter::half_rounds`]).
+    pub fn total_half_rounds(&self) -> u64 {
+        self.phases.iter().map(|p| p.meter_p0.half_rounds).sum()
     }
     /// One-time session-setup traffic across phases (both parties).
     pub fn total_setup_bytes(&self) -> u64 {
@@ -374,16 +386,16 @@ impl SelectionOutcome {
 
 /// The batch-grid coordinates one lane walks (shared by both parties).
 #[derive(Clone)]
-struct LaneCfg {
-    job: u64,
-    phase: usize,
-    n: usize,
-    batch: usize,
-    seq_len: usize,
-    dm: usize,
-    range: Range<usize>,
+pub(crate) struct LaneCfg {
+    pub(crate) job: u64,
+    pub(crate) phase: usize,
+    pub(crate) n: usize,
+    pub(crate) batch: usize,
+    pub(crate) seq_len: usize,
+    pub(crate) dm: usize,
+    pub(crate) range: Range<usize>,
     /// cooperative-cancellation checkpoints, one per batch slot
-    gate: Arc<CancelGate>,
+    pub(crate) gate: Arc<CancelGate>,
 }
 
 /// A [`ChannelSink`] that additionally reports each confirmed survivor to
@@ -412,7 +424,7 @@ impl SurvivorSink for ObservedSink {
 /// opened — bit-identical either way).  Emits one `BatchCompleted` event
 /// per batch with the model owner's metered traffic for exactly that
 /// batch.
-fn p0_eval_batches(
+pub(crate) fn p0_eval_batches(
     ctx: &mut PartyCtx,
     model: &mut ModelMpc,
     lane: &LaneCfg,
@@ -423,7 +435,7 @@ fn p0_eval_batches(
         lane.gate.checkpoint(b)?;
         ctx.reseed_for(namespace_tag(lane.job, unit_tag(lane.phase, b)));
         let bytes0 = ctx.chan.meter.bytes;
-        let rounds0 = ctx.chan.meter.rounds;
+        let half0 = ctx.chan.meter.half_rounds;
         let rows = lane.batch * lane.seq_len;
         let x = recv_share(ctx, &[rows, lane.dm])?;
         let (_logits, e) = model.forward(ctx, &x, lane.batch)?;
@@ -434,7 +446,7 @@ fn p0_eval_batches(
                 phase: lane.phase,
                 batch: b,
                 bytes: ctx.chan.meter.bytes - bytes0,
-                rounds: ctx.chan.meter.rounds - rounds0,
+                half_rounds: ctx.chan.meter.half_rounds - half0,
             });
         }
     }
@@ -442,7 +454,7 @@ fn p0_eval_batches(
 }
 
 /// Data-owner side: embed + share each batch, collect entropy shares.
-fn p1_eval_batches(
+pub(crate) fn p1_eval_batches(
     ctx: &mut PartyCtx,
     model: &mut ModelMpc,
     cand_tokens: &[u32],
@@ -513,7 +525,7 @@ impl PhaseSession {
 /// Model-owner half of a session setup: release the embedding tables and
 /// stream the weight shares.  Shared verbatim by the serial oracle and
 /// the broadcast session so the two paths cannot drift.
-fn p0_send_session(
+pub(crate) fn p0_send_session(
     ctx: &mut PartyCtx,
     wf: &WeightFile,
     cfg: ModelConfig,
@@ -528,7 +540,7 @@ fn p0_send_session(
 
 /// Data-owner half of a session setup: receive + decode the released
 /// embedding tables, then build the model from received weight shares.
-fn p1_recv_session(
+pub(crate) fn p1_recv_session(
     ctx: &mut PartyCtx,
     cfg: ModelConfig,
     approx: ApproxToggles,
@@ -561,6 +573,7 @@ pub fn setup_phase_session(
         phase,
         0,
         &FaultPolicy::default(),
+        &TransportConfig::default(),
     )
 }
 
@@ -571,6 +584,7 @@ pub fn setup_phase_session(
 /// byte-identical whichever hub it runs on.
 ///
 /// [`SelectionService`]: super::service::SelectionService
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn setup_phase_session_on(
     hub: Arc<Hub>,
     wf: Arc<WeightFile>,
@@ -579,6 +593,7 @@ pub(crate) fn setup_phase_session_on(
     phase: usize,
     job: u64,
     faults: &FaultPolicy,
+    transport: &TransportConfig,
 ) -> Result<PhaseSession> {
     let cfg = wf.config()?;
     let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
@@ -588,6 +603,7 @@ pub(crate) fn setup_phase_session_on(
         hub.clone(),
         dealer_seed,
         faults,
+        transport,
         {
             let wf = wf.clone();
             move |ctx: &mut PartyCtx| -> Result<ModelMpc> {
@@ -712,6 +728,7 @@ pub(crate) fn run_phase_drain(
         session.hub.clone(),
         opts.dealer_seed,
         &opts.faults,
+        &opts.transport,
         lane_fns,
     );
 
@@ -745,6 +762,7 @@ pub(crate) fn run_phase_drain(
         session.hub.clone(),
         opts.dealer_seed,
         &opts.faults,
+        &opts.transport,
         move |ctx: &mut PartyCtx| -> Result<QsOut> {
             gate.checkpoint(qs_slot)?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
@@ -881,6 +899,7 @@ pub(crate) fn run_phase_at(
             phase,
             opts.job_tag,
             &opts.faults,
+            &opts.transport,
         )?;
         let drain = run_phase_drain(
             &session,
@@ -1018,6 +1037,7 @@ pub(crate) fn run_phase_serial(
     let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_cfg(
         opts.dealer_seed,
         &faults,
+        &opts.transport,
         move |ctx: &mut PartyCtx| -> Result<P0Out> {
             let t0 = Instant::now();
             let bytes0 = ctx.chan.meter.bytes;

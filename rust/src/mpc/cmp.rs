@@ -367,10 +367,10 @@ mod tests {
                 let x = x.clone();
                 move |ctx| {
                     let xs = share_input(ctx, &x).unwrap();
-                    let before = (ctx.chan.meter.rounds, ctx.chan.meter.bytes);
+                    let before = (ctx.chan.meter.half_rounds, ctx.chan.meter.bytes);
                     let _ = ltz(ctx, &xs).unwrap();
                     (
-                        ctx.chan.meter.rounds - before.0,
+                        ctx.chan.meter.half_rounds - before.0,
                         ctx.chan.meter.bytes - before.1,
                     )
                 }
@@ -380,8 +380,8 @@ mod tests {
                 let _ = ltz(ctx, &xs).unwrap();
             },
         );
-        let (rounds, bytes) = rb;
-        assert_eq!(rounds, 9, "LTZ rounds");
+        let (half_rounds, bytes) = rb;
+        assert_eq!(half_rounds, 18, "LTZ rounds (9 round trips = 18 halves)");
         let per_elem_both_ways = 2.0 * bytes as f64 / 64.0;
         assert!(
             (380.0..500.0).contains(&per_elem_both_ways),

@@ -22,8 +22,22 @@ use std::time::Instant;
 
 use super::dealer::Hub;
 use super::faults::FaultPolicy;
-use super::net::{chan_pair, CostMeter, Role};
+use super::net::{Chan, CostMeter, Role};
 use super::proto::PartyCtx;
+use super::wire::{loopback_pair, TransportConfig};
+
+/// Build the party channel pair for one session: the configured transport
+/// backend (in-memory mpsc, loopback TCP, or a Unix socketpair — all
+/// handshaken for the socket kinds), then the fault policy layered on top.
+/// Transport setup is environmental (loopback bind/accept); failure here
+/// is a panic with the typed error in the message, not a protocol result.
+fn build_pair(transport: &TransportConfig, dealer_seed: u64, faults: &FaultPolicy) -> (Chan, Chan) {
+    let (mut c0, mut c1) =
+        loopback_pair(transport, dealer_seed).expect("transport setup (loopback)");
+    faults.configure(&mut c0, Role::ModelOwner);
+    faults.configure(&mut c1, Role::DataOwner);
+    (c0, c1)
+}
 
 /// Run the two parties and return both closure results.
 pub fn run_pair<R0, R1>(
@@ -54,11 +68,13 @@ where
     run_pair_metered_hub(Hub::new(), dealer_seed, f0, f1)
 }
 
-/// [`run_pair_metered`] with an explicit [`FaultPolicy`] — recv deadlines
-/// (and, in tests, an injected fault plan) applied to both channels.
+/// [`run_pair_metered`] with an explicit [`FaultPolicy`] and transport —
+/// recv deadlines (and, in tests, an injected fault plan) applied to both
+/// channels, over the backend [`TransportConfig`] selects.
 pub fn run_pair_metered_cfg<R0, R1>(
     dealer_seed: u64,
     faults: &FaultPolicy,
+    transport: &TransportConfig,
     f0: impl FnOnce(&mut PartyCtx) -> R0 + Send + 'static,
     f1: impl FnOnce(&mut PartyCtx) -> R1 + Send + 'static,
 ) -> ((R0, CostMeter), (R1, CostMeter))
@@ -66,7 +82,7 @@ where
     R0: Send + 'static,
     R1: Send + 'static,
 {
-    run_pair_metered_hub_cfg(Hub::new(), dealer_seed, faults, f0, f1)
+    run_pair_metered_hub_cfg(Hub::new(), dealer_seed, faults, transport, f0, f1)
 }
 
 /// [`run_pair_metered`] against a caller-provided preprocessing [`Hub`] —
@@ -84,14 +100,22 @@ where
     R0: Send + 'static,
     R1: Send + 'static,
 {
-    run_pair_metered_hub_cfg(hub, dealer_seed, &FaultPolicy::default(), f0, f1)
+    run_pair_metered_hub_cfg(
+        hub,
+        dealer_seed,
+        &FaultPolicy::default(),
+        &TransportConfig::default(),
+        f0,
+        f1,
+    )
 }
 
-/// [`run_pair_metered_hub`] with an explicit [`FaultPolicy`].
+/// [`run_pair_metered_hub`] with an explicit [`FaultPolicy`] + transport.
 pub fn run_pair_metered_hub_cfg<R0, R1>(
     hub: Arc<Hub>,
     dealer_seed: u64,
     faults: &FaultPolicy,
+    transport: &TransportConfig,
     f0: impl FnOnce(&mut PartyCtx) -> R0 + Send + 'static,
     f1: impl FnOnce(&mut PartyCtx) -> R1 + Send + 'static,
 ) -> ((R0, CostMeter), (R1, CostMeter))
@@ -99,9 +123,7 @@ where
     R0: Send + 'static,
     R1: Send + 'static,
 {
-    let (mut c0, mut c1) = chan_pair();
-    faults.configure(&mut c0, Role::ModelOwner);
-    faults.configure(&mut c1, Role::DataOwner);
+    let (c0, c1) = build_pair(transport, dealer_seed, faults);
     let hub1 = hub.clone();
     let h1 = thread::Builder::new()
         .name("data-owner".into())
@@ -147,11 +169,13 @@ where
     run_pair_pipelined_hub(Hub::new(), dealer_seed, lanes)
 }
 
-/// [`run_pair_pipelined_hub`] with an explicit [`FaultPolicy`].
+/// [`run_pair_pipelined_hub`] with an explicit [`FaultPolicy`] +
+/// transport (each lane gets its own connected pair over the backend).
 pub fn run_pair_pipelined_hub_cfg<R0, R1>(
     hub: Arc<Hub>,
     dealer_seed: u64,
     faults: &FaultPolicy,
+    transport: &TransportConfig,
     lanes: Vec<(PartyFn<R0>, PartyFn<R1>)>,
 ) -> Vec<((R0, CostMeter), (R1, CostMeter))>
 where
@@ -163,9 +187,7 @@ where
     crate::tensor::set_gemm_sharers(2 * lanes.len());
     let mut handles = Vec::with_capacity(lanes.len());
     for (lane, (f0, f1)) in lanes.into_iter().enumerate() {
-        let (mut c0, mut c1) = chan_pair();
-        faults.configure(&mut c0, Role::ModelOwner);
-        faults.configure(&mut c1, Role::DataOwner);
+        let (c0, c1) = build_pair(transport, dealer_seed, faults);
         let hub0 = hub.clone();
         let hub1 = hub.clone();
         let h0 = thread::Builder::new()
@@ -218,7 +240,13 @@ where
     R0: Send + 'static,
     R1: Send + 'static,
 {
-    run_pair_pipelined_hub_cfg(hub, dealer_seed, &FaultPolicy::default(), lanes)
+    run_pair_pipelined_hub_cfg(
+        hub,
+        dealer_seed,
+        &FaultPolicy::default(),
+        &TransportConfig::default(),
+        lanes,
+    )
 }
 
 #[cfg(test)]
@@ -228,7 +256,7 @@ mod tests {
     use crate::tensor::TensorR;
 
     #[test]
-    fn meters_are_collected() {
+    fn meters_are_collected_and_rounds_are_symmetric() {
         let x = TensorR::from_vec(vec![1, 2, 3], &[3]);
         let ((_, m0), (_, m1)) = run_pair_metered(
             1,
@@ -243,10 +271,38 @@ mod tests {
         );
         assert!(m0.bytes > 0);
         assert!(m1.bytes > 0);
-        assert_eq!(m0.rounds, 2); // input share + open
-        assert_eq!(m1.rounds, 1); // open only
+        // regression (metering bug, PR 7): input sharing is HALF a round —
+        // P0: send half + open exchange (2 halves) = 3; P1: recv half +
+        // open exchange = 3.  The parties must agree (CostMeter contract).
+        assert_eq!(m0.half_rounds, 3);
+        assert_eq!(m1.half_rounds, 3);
+        assert_eq!(m0.half_rounds, m1.half_rounds);
         assert!(m0.wall_s > 0.0);
         assert!(m1.wall_s > 0.0);
+    }
+
+    #[test]
+    fn tcp_transport_runs_the_same_protocol() {
+        use crate::mpc::wire::TransportConfig;
+        let x = TensorR::from_vec(vec![4, 5, 6], &[3]);
+        let want = x.clone();
+        let ((r0, m0), (r1, m1)) = run_pair_metered_cfg(
+            1,
+            &FaultPolicy::default(),
+            &TransportConfig::tcp(),
+            move |ctx| {
+                let sh = share_input(ctx, &x).unwrap();
+                open(ctx, &sh).unwrap()
+            },
+            move |ctx| {
+                let sh = recv_share(ctx, &[3]).unwrap();
+                open(ctx, &sh).unwrap()
+            },
+        );
+        assert_eq!(r0.data, want.data);
+        assert_eq!(r1.data, want.data);
+        assert_eq!(m0.half_rounds, 3);
+        assert_eq!(m1.half_rounds, 3);
     }
 
     #[test]

@@ -1,5 +1,9 @@
 //! Deterministic fault injection for the MPC transport — the chaos
-//! harness the future TCP backend will be validated against.
+//! harness every transport backend is validated against.  The injector
+//! hooks [`Chan`]'s send path ABOVE the [`Transport`](super::net::Transport)
+//! trait, so the same seeded kill/stall/drop plans run unchanged over the
+//! in-memory channels and the socket backends (`mpc::wire`); the chaos CI
+//! matrix sweeps both (`SF_FAULT_TRANSPORT`).
 //!
 //! A [`FaultPlan`] is a seeded, *deterministic* schedule of exactly one
 //! wire fault, executed by the channel of ONE party (faults are counted
@@ -127,6 +131,18 @@ impl FaultyChan {
         let (c0, c1) = chan_pair();
         (self.wrap(c0, Role::ModelOwner), self.wrap(c1, Role::DataOwner))
     }
+
+    /// Like [`FaultyChan::pair`], but over an arbitrary transport backend
+    /// — the injector generalizes for free because it hooks above the
+    /// [`Transport`](super::net::Transport) trait.
+    pub fn pair_over(
+        &self,
+        transport: &super::wire::TransportConfig,
+        dealer_seed: u64,
+    ) -> NetResult<(Chan, Chan)> {
+        let (c0, c1) = super::wire::loopback_pair(transport, dealer_seed)?;
+        Ok((self.wrap(c0, Role::ModelOwner), self.wrap(c1, Role::DataOwner)))
+    }
 }
 
 /// How many times a net-failed job is attempted, and the pause between
@@ -226,6 +242,19 @@ mod tests {
             other => panic!("expected Timeout, got {other:?}"),
         }
         h.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn kill_plan_fires_identically_over_tcp() {
+        use crate::mpc::wire::TransportConfig;
+        let plan = FaultPlan::new(Role::ModelOwner, FaultMode::KillAt { msg: 2 });
+        let fc = FaultyChan::new(plan.clone());
+        let (mut c0, c1) = fc.pair_over(&TransportConfig::tcp(), 3).unwrap();
+        let _keepalive = c1;
+        assert!(c0.send_only(vec![1]).is_ok());
+        assert!(c0.send_only(vec![2]).is_ok());
+        assert_eq!(c0.send_only(vec![3]), Err(NetError::PeerClosed));
+        assert!(plan.has_fired());
     }
 
     #[test]

@@ -11,8 +11,10 @@ pub mod faults;
 pub mod net;
 pub mod nonlin;
 pub mod proto;
+pub mod wire;
 
 pub use engine::{run_pair, run_pair_metered};
 pub use faults::{FaultMode, FaultPlan, FaultPolicy, FaultyChan, RetryPolicy};
-pub use net::{CostMeter, NetConfig, NetError, NetResult, OpRecord, Role};
+pub use net::{CostMeter, NetConfig, NetError, NetResult, OpRecord, Role, Transport};
 pub use proto::{PartyCtx, Shared};
+pub use wire::{Shaping, TransportConfig, TransportKind};

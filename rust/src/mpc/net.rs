@@ -1,11 +1,15 @@
 //! Party-to-party transport + communication cost accounting.
 //!
-//! The two parties run on two OS threads connected by channels; every
-//! protocol message physically moves between them (no shared-state
-//! shortcuts on the data path), and the transport meters bytes / rounds /
-//! local compute per logical operation.  Delays are *simulated* from those
-//! meters against a WAN model (paper setup: 100 MB/s, 100 ms) — DESIGN.md §3
-//! explains why this substitution preserves the paper's Fig 6/7 numbers.
+//! The two parties talk through a [`Transport`] — in-process mpsc channels
+//! by default (two OS threads), or a real socket backend from
+//! [`super::wire`] (TCP / Unix) when the parties are separate processes.
+//! Every protocol message physically moves between them (no shared-state
+//! shortcuts on the data path), and the channel meters bytes / half-rounds
+//! / local compute per logical operation.  Delays are *simulated* from
+//! those meters against a WAN model (paper setup: 100 MB/s, 100 ms) —
+//! DESIGN.md §3 explains why this substitution preserves the paper's
+//! Fig 6/7 numbers — and with the socket backend's latency shaping the
+//! simulated delay can be validated against measured wall-clock.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
@@ -19,8 +23,8 @@ use super::faults::FaultPlan;
 /// distinguish a dead peer from a protocol bug without string matching.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum NetError {
-    /// The peer's endpoint is gone — its thread exited or its `Chan`
-    /// dropped.  Detected immediately on both send and recv.
+    /// The peer's endpoint is gone — its thread exited, its `Chan`
+    /// dropped, or its socket closed.  Detected on both send and recv.
     PeerClosed,
     /// No message arrived within the configured per-recv deadline
     /// ([`Chan::deadline`]); `op` names the protocol operation that was
@@ -29,6 +33,10 @@ pub enum NetError {
     /// A frame arrived but its element count does not match what the
     /// protocol step expected — the parties have desynchronised.
     FrameMismatch { op: &'static str, expected: usize, got: usize },
+    /// The connect handshake failed: protocol version, role, dealer-seed
+    /// fingerprint, or public-parameter digest disagreed.  Surfaced as a
+    /// typed error at connect time instead of a mid-protocol hang.
+    Handshake { reason: String },
 }
 
 impl std::fmt::Display for NetError {
@@ -42,6 +50,7 @@ impl std::fmt::Display for NetError {
                 f,
                 "net: frame mismatch in op `{op}`: expected {expected} elements, got {got}"
             ),
+            NetError::Handshake { reason } => write!(f, "net: handshake failed: {reason}"),
         }
     }
 }
@@ -92,41 +101,59 @@ impl Default for NetConfig {
 #[derive(Clone, Debug)]
 pub struct OpRecord {
     pub name: &'static str,
-    pub rounds: u64,
+    /// Half-rounds (see [`CostMeter::half_rounds`]) spanned by this op.
+    pub half_rounds: u64,
     pub bytes: u64,
     pub compute_s: f64,
 }
 
-/// Per-party meter. `bytes` counts bytes SENT by this party; protocol
-/// rounds are symmetric so either party's `rounds` is the protocol's.
+impl OpRecord {
+    /// Rounds as a real number — exact, since halves are representable.
+    pub fn rounds(&self) -> f64 {
+        self.half_rounds as f64 / 2.0
+    }
+}
+
+/// Per-party meter. `bytes` counts bytes SENT by this party; rounds are
+/// metered in HALF-rounds: each successful send and each successful recv
+/// on this endpoint counts one half-round.  A duplex exchange is one send
+/// plus one recv = 2 halves = 1 round on EACH party, and a one-directional
+/// `send_only`/`recv_only` pair is 1 half on each side — so `half_rounds`
+/// is symmetric across parties and either party's count is the protocol's.
+/// (Metering whole rounds per send — the pre-PR-7 scheme — over-charged
+/// one-directional input sharing by 2× and made the parties disagree.)
 #[derive(Clone, Debug, Default)]
 pub struct CostMeter {
     pub bytes: u64,
-    pub rounds: u64,
+    pub half_rounds: u64,
     pub messages: u64,
     pub compute_s: f64,
     /// MEASURED wall-clock of the session this meter belongs to, stamped
     /// by the engine at teardown.  Unlike the simulated delays derived
-    /// from `bytes`/`rounds`, this is real elapsed time — the number the
-    /// pipelined runtime is judged on.
+    /// from `bytes`/`half_rounds`, this is real elapsed time — the number
+    /// the pipelined runtime is judged on.
     pub wall_s: f64,
     pub ops: Vec<OpRecord>,
 }
 
 impl CostMeter {
+    /// Protocol rounds as a real number — exact, since halves of integers
+    /// are representable in f64.
+    pub fn rounds(&self) -> f64 {
+        self.half_rounds as f64 / 2.0
+    }
+
     /// Simulated serial wall-clock under `net` (no overlap): every round
     /// pays one latency; payload is pipelined at line rate.
     pub fn serial_delay(&self, net: &NetConfig) -> f64 {
-        self.rounds as f64 * net.latency
-            + self.bytes as f64 / net.bandwidth
-            + self.compute_s
+        self.rounds() * net.latency + self.bytes as f64 / net.bandwidth + self.compute_s
     }
 
     /// Fold another meter into this one (pipelined lanes sum their
     /// traffic; wall-clock takes the max — lanes run concurrently).
     pub fn absorb(&mut self, other: &CostMeter) {
         self.bytes += other.bytes;
-        self.rounds += other.rounds;
+        self.half_rounds += other.half_rounds;
         self.messages += other.messages;
         self.compute_s += other.compute_s;
         self.wall_s = self.wall_s.max(other.wall_s);
@@ -137,14 +164,14 @@ impl CostMeter {
         let (b0, r0, c0) = before;
         self.ops.push(OpRecord {
             name,
-            rounds: self.rounds - r0,
+            half_rounds: self.half_rounds - r0,
             bytes: self.bytes - b0,
             compute_s: self.compute_s - c0,
         });
     }
 
     pub fn snapshot(&self) -> (u64, u64, f64) {
-        (self.bytes, self.rounds, self.compute_s)
+        (self.bytes, self.half_rounds, self.compute_s)
     }
 
     /// Bytes attributed to ops named `name` — the setup-vs-drain split:
@@ -154,9 +181,58 @@ impl CostMeter {
         self.ops.iter().filter(|o| o.name == name).map(|o| o.bytes).sum()
     }
 
-    /// Rounds attributed to ops named `name`.
-    pub fn rounds_for(&self, name: &str) -> u64 {
-        self.ops.iter().filter(|o| o.name == name).map(|o| o.rounds).sum()
+    /// Half-rounds attributed to ops named `name`.
+    pub fn half_rounds_for(&self, name: &str) -> u64 {
+        self.ops.iter().filter(|o| o.name == name).map(|o| o.half_rounds).sum()
+    }
+}
+
+/// The physical link under a [`Chan`]: moves `Vec<i64>` frames between the
+/// two parties.  Implementations: the in-process [`MpscTransport`] built
+/// by [`chan_pair`], and the socket-backed `wire::SocketTransport` (TCP /
+/// Unix) for genuinely separate processes.  Metering, deadline policy, op
+/// attribution, and fault injection all live ABOVE this trait in `Chan`,
+/// so they behave identically over every backend.
+pub trait Transport: Send {
+    /// Ship one frame.  Must not block indefinitely on a slow peer —
+    /// in-flight buffering is the transport's job (mpsc is unbounded; the
+    /// socket backend queues onto a writer thread), so protocol patterns
+    /// where both parties send before either receives cannot deadlock.
+    fn send(&mut self, data: Vec<i64>) -> NetResult<()>;
+    /// Block for the next frame, up to `deadline` (`None` = forever; a
+    /// vanished peer must still surface [`NetError::PeerClosed`]).  `op`
+    /// labels any [`NetError::Timeout`] produced.
+    fn recv(&mut self, deadline: Option<Duration>, op: &'static str) -> NetResult<Vec<i64>>;
+    /// Human tag for diagnostics: `"mpsc"`, `"tcp"`, `"unix"`.
+    fn kind(&self) -> &'static str;
+}
+
+/// In-process transport: a pair of unbounded mpsc channels.
+pub struct MpscTransport {
+    tx: Sender<Vec<i64>>,
+    rx: Receiver<Vec<i64>>,
+}
+
+impl Transport for MpscTransport {
+    fn send(&mut self, data: Vec<i64>) -> NetResult<()> {
+        self.tx.send(data).map_err(|_| NetError::PeerClosed)
+    }
+
+    fn recv(&mut self, deadline: Option<Duration>, op: &'static str) -> NetResult<Vec<i64>> {
+        match deadline {
+            None => self.rx.recv().map_err(|_| NetError::PeerClosed),
+            Some(d) => {
+                let t0 = Instant::now();
+                self.rx.recv_timeout(d).map_err(|e| match e {
+                    RecvTimeoutError::Timeout => NetError::Timeout { op, elapsed: t0.elapsed() },
+                    RecvTimeoutError::Disconnected => NetError::PeerClosed,
+                })
+            }
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        "mpsc"
     }
 }
 
@@ -167,21 +243,39 @@ impl CostMeter {
 /// Metering happens only on SUCCESS, so cost assertions are unaffected by
 /// the error paths.
 pub struct Chan {
-    pub tx: Sender<Vec<i64>>,
-    pub rx: Receiver<Vec<i64>>,
+    transport: Box<dyn Transport>,
     pub meter: CostMeter,
-    /// Per-recv deadline.  `None` blocks forever (in-process channels
-    /// still unblock on peer drop); `Some(d)` turns a stalled-but-alive
-    /// peer into a typed [`NetError::Timeout`] after `d`.
+    /// Per-recv deadline.  `None` blocks forever (a dropped peer still
+    /// unblocks with `PeerClosed` on every backend); `Some(d)` turns a
+    /// stalled-but-alive peer into a typed [`NetError::Timeout`] after `d`
+    /// (mapped onto socket read timeouts by the wire backend).
     pub deadline: Option<Duration>,
     /// Label of the protocol op currently on the wire, for `Timeout` /
     /// `FrameMismatch` attribution.  Maintained by `PartyCtx::op`.
     pub op_label: &'static str,
     /// Deterministic fault injector (test/bench only) — see `mpc::faults`.
+    /// Sits above the transport, so kill/stall/drop plans apply to the
+    /// socket backends exactly as to the in-memory one.
     pub(crate) inject: Option<Arc<FaultPlan>>,
 }
 
 impl Chan {
+    /// Wrap any transport in a metered channel.
+    pub fn from_transport(transport: Box<dyn Transport>) -> Chan {
+        Chan {
+            transport,
+            meter: CostMeter::default(),
+            deadline: None,
+            op_label: "mpc",
+            inject: None,
+        }
+    }
+
+    /// Which backend this channel runs over (`"mpsc"`, `"tcp"`, `"unix"`).
+    pub fn transport_kind(&self) -> &'static str {
+        self.transport.kind()
+    }
+
     fn send_raw(&mut self, data: Vec<i64>) -> NetResult<()> {
         let n = data.len();
         if let Some(plan) = self.inject.clone() {
@@ -190,31 +284,22 @@ impl Chan {
                 // endpoint believes it sent — meter and move on; the PEER
                 // will surface the failure as a recv Timeout.
                 self.meter.bytes += (n * 8) as u64;
-                self.meter.rounds += 1;
+                self.meter.half_rounds += 1;
                 self.meter.messages += 1;
                 return Ok(());
             }
         }
-        self.tx.send(data).map_err(|_| NetError::PeerClosed)?;
+        self.transport.send(data)?;
         self.meter.bytes += (n * 8) as u64;
-        self.meter.rounds += 1;
+        self.meter.half_rounds += 1;
         self.meter.messages += 1;
         Ok(())
     }
 
     fn recv_raw(&mut self) -> NetResult<Vec<i64>> {
-        match self.deadline {
-            None => self.rx.recv().map_err(|_| NetError::PeerClosed),
-            Some(d) => {
-                let t0 = Instant::now();
-                self.rx.recv_timeout(d).map_err(|e| match e {
-                    RecvTimeoutError::Timeout => {
-                        NetError::Timeout { op: self.op_label, elapsed: t0.elapsed() }
-                    }
-                    RecvTimeoutError::Disconnected => NetError::PeerClosed,
-                })
-            }
-        }
+        let data = self.transport.recv(self.deadline, self.op_label)?;
+        self.meter.half_rounds += 1;
+        Ok(data)
     }
 
     /// Send our payload and receive the peer's — one communication round
@@ -272,18 +357,11 @@ impl Chan {
     }
 }
 
-/// Build a connected channel pair (one per party).
+/// Build a connected in-memory channel pair (one per party).
 pub fn chan_pair() -> (Chan, Chan) {
     let (tx0, rx1) = std::sync::mpsc::channel();
     let (tx1, rx0) = std::sync::mpsc::channel();
-    let mk = |tx, rx| Chan {
-        tx,
-        rx,
-        meter: CostMeter::default(),
-        deadline: None,
-        op_label: "mpc",
-        inject: None,
-    };
+    let mk = |tx, rx| Chan::from_transport(Box::new(MpscTransport { tx, rx }));
     (mk(tx0, rx0), mk(tx1, rx1))
 }
 
@@ -304,7 +382,30 @@ mod tests {
         assert_eq!(got1, vec![1, 2, 3]);
         assert_eq!(c0.meter.bytes, 24);
         assert_eq!(m1.bytes, 16);
-        assert_eq!(c0.meter.rounds, 1);
+        // one duplex exchange = 2 half-rounds = 1 round, on BOTH parties
+        assert_eq!(c0.meter.half_rounds, 2);
+        assert_eq!(m1.half_rounds, 2);
+        assert!((c0.meter.rounds() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_directional_send_is_half_a_round_on_each_side() {
+        // regression for the pre-PR-7 metering bug: send_only charged a
+        // FULL round on the sender and nothing on the receiver, making
+        // rounds asymmetric and double-charging input-sharing latency.
+        let (mut c0, mut c1) = chan_pair();
+        c1.send_only(vec![1, 2, 3]).unwrap();
+        let got = c0.recv_only().unwrap();
+        assert_eq!(got, vec![1, 2, 3]);
+        assert_eq!(c0.meter.half_rounds, 1);
+        assert_eq!(c1.meter.half_rounds, 1);
+        assert!((c0.meter.rounds() - 0.5).abs() < 1e-12);
+        assert!((c1.meter.rounds() - 0.5).abs() < 1e-12);
+        // bytes/messages stay send-side-only
+        assert_eq!(c0.meter.bytes, 0);
+        assert_eq!(c1.meter.bytes, 24);
+        assert_eq!(c0.meter.messages, 0);
+        assert_eq!(c1.meter.messages, 1);
     }
 
     #[test]
@@ -316,7 +417,7 @@ mod tests {
         assert_eq!(c0.send_only(vec![9]), Err(NetError::PeerClosed));
         // failed operations must not meter
         assert_eq!(c0.meter.bytes, 0);
-        assert_eq!(c0.meter.rounds, 0);
+        assert_eq!(c0.meter.half_rounds, 0);
     }
 
     #[test]
@@ -347,7 +448,7 @@ mod tests {
     fn serial_delay_model() {
         let m = CostMeter {
             bytes: 100_000_000,
-            rounds: 10,
+            half_rounds: 20, // 10 rounds
             messages: 10,
             compute_s: 1.0,
             ..Default::default()
@@ -372,7 +473,7 @@ mod tests {
         let got = c0.finish_exchange().unwrap();
         assert_eq!(got, vec![9]);
         assert_eq!(h.join().unwrap(), vec![1, 2]);
-        assert_eq!(c0.meter.rounds, 1);
+        assert_eq!(c0.meter.half_rounds, 2);
         assert_eq!(c0.meter.bytes, 16);
     }
 
@@ -380,25 +481,25 @@ mod tests {
     fn op_attribution_sums_by_name() {
         let m = CostMeter {
             ops: vec![
-                OpRecord { name: "session_setup", rounds: 3, bytes: 100, compute_s: 0.0 },
-                OpRecord { name: "layer", rounds: 5, bytes: 40, compute_s: 0.0 },
-                OpRecord { name: "session_setup", rounds: 1, bytes: 7, compute_s: 0.0 },
+                OpRecord { name: "session_setup", half_rounds: 3, bytes: 100, compute_s: 0.0 },
+                OpRecord { name: "layer", half_rounds: 5, bytes: 40, compute_s: 0.0 },
+                OpRecord { name: "session_setup", half_rounds: 1, bytes: 7, compute_s: 0.0 },
             ],
             ..Default::default()
         };
         assert_eq!(m.bytes_for("session_setup"), 107);
-        assert_eq!(m.rounds_for("session_setup"), 4);
+        assert_eq!(m.half_rounds_for("session_setup"), 4);
         assert_eq!(m.bytes_for("layer"), 40);
         assert_eq!(m.bytes_for("missing"), 0);
     }
 
     #[test]
     fn absorb_sums_traffic_maxes_wall() {
-        let mut a = CostMeter { bytes: 10, rounds: 2, wall_s: 1.0, ..Default::default() };
-        let b = CostMeter { bytes: 5, rounds: 1, wall_s: 3.0, ..Default::default() };
+        let mut a = CostMeter { bytes: 10, half_rounds: 2, wall_s: 1.0, ..Default::default() };
+        let b = CostMeter { bytes: 5, half_rounds: 1, wall_s: 3.0, ..Default::default() };
         a.absorb(&b);
         assert_eq!(a.bytes, 15);
-        assert_eq!(a.rounds, 3);
+        assert_eq!(a.half_rounds, 3);
         assert!((a.wall_s - 3.0).abs() < 1e-12);
     }
 }

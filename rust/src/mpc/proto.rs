@@ -757,9 +757,9 @@ mod tests {
                 move |ctx| {
                     let xs = share_input(ctx, &a).unwrap();
                     let ys = share_input(ctx, &a).unwrap();
-                    let before = ctx.chan.meter.rounds;
+                    let before = ctx.chan.meter.half_rounds;
                     let _ = matmul(ctx, &xs, &ys).unwrap();
-                    ctx.chan.meter.rounds - before
+                    ctx.chan.meter.half_rounds - before
                 }
             },
             move |ctx| {
@@ -769,7 +769,7 @@ mod tests {
                 0u64
             },
         );
-        assert_eq!(rounds, 1, "matrix beaver must cost exactly one round");
+        assert_eq!(rounds, 2, "matrix beaver must cost exactly one round (2 halves)");
     }
 
     #[test]
@@ -879,9 +879,9 @@ mod tests {
                 move |ctx| {
                     let xs = share_input(ctx, &ar).unwrap();
                     let ys = share_input(ctx, &br).unwrap();
-                    let before = ctx.chan.meter.rounds;
+                    let before = ctx.chan.meter.half_rounds;
                     let zs = matmul_batch(ctx, &[(&xs, &ys), (&ys, &xs), (&xs, &xs)]).unwrap();
-                    let r = ctx.chan.meter.rounds - before;
+                    let r = ctx.chan.meter.half_rounds - before;
                     (open(ctx, &zs[0]).unwrap().to_f32(), r)
                 }
             },
@@ -893,7 +893,7 @@ mod tests {
             },
         );
         assert!(got.max_abs_diff(&expect) < 1e-2);
-        assert_eq!(rounds, 1, "three matmuls, one round");
+        assert_eq!(rounds, 2, "three matmuls, one round (2 halves)");
     }
 
     #[test]
@@ -919,9 +919,9 @@ mod tests {
                     let xs = share_input(ctx, &xe).unwrap();
                     let ys = share_input(ctx, &ye).unwrap();
                     let zs = share_input(ctx, &ze).unwrap();
-                    let before = ctx.chan.meter.rounds;
+                    let before = ctx.chan.meter.half_rounds;
                     let p = mul3_raw(ctx, &xs, &ys, &zs).unwrap();
-                    let r = ctx.chan.meter.rounds - before;
+                    let r = ctx.chan.meter.half_rounds - before;
                     (open(ctx, &p).unwrap(), r)
                 }
             },
@@ -933,7 +933,7 @@ mod tests {
                 let _ = open(ctx, &p).unwrap();
             },
         );
-        assert_eq!(rounds, 1, "three-factor product must open in one round");
+        assert_eq!(rounds, 2, "three-factor product must open in one round (2 halves)");
         assert_eq!(got.data, expect);
     }
 

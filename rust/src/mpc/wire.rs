@@ -1,0 +1,710 @@
+//! Socket transport: the real wire under [`Chan`](super::net::Chan).
+//!
+//! Frames are length-prefixed little-endian i64 payloads (`u32` element
+//! count, then `n × 8` bytes), carried over TCP or a Unix domain socket.
+//! A connect-time handshake pins the protocol version, the two [`Role`]s,
+//! a one-way fingerprint of the dealer seed, and a digest of the public
+//! job parameters — any disagreement surfaces as a typed
+//! [`NetError::Handshake`] at connect time instead of a mid-protocol hang
+//! or a silent share mismatch.
+//!
+//! Sends are queued onto a per-endpoint writer thread, preserving the
+//! unbounded-buffer semantics of the in-memory mpsc backend: protocol
+//! patterns where both parties send before either receives (every
+//! `exchange`) cannot deadlock on full socket buffers.  Recv deadlines map
+//! onto `SO_RCVTIMEO`; a closed peer socket reads as EOF and surfaces as
+//! [`NetError::PeerClosed`], exactly like a dropped in-memory channel.
+//!
+//! Optional [`Shaping`] sleeps each received frame by a WAN latency +
+//! serialization delay, so the simulated [`CostMeter::serial_delay`]
+//! model can be validated against measured wall-clock over a real socket.
+//!
+//! [`CostMeter::serial_delay`]: super::net::CostMeter::serial_delay
+
+use std::io::{BufReader, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::net::{chan_pair, Chan, NetError, NetResult, Role, Transport};
+
+/// Wire protocol version — bumped whenever framing or handshake change.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Handshake magic: `"SFWIRE"` packed into the low 6 bytes of an i64.
+const HELLO_MAGIC: i64 = 0x5346_5749_5245; // "SFWIRE"
+
+/// Hard cap on a single frame's element count (256 Mi elements = 2 GiB).
+/// A corrupted or hostile length prefix above this is rejected as a
+/// [`NetError::FrameMismatch`] BEFORE any allocation happens.
+pub const MAX_FRAME_ELEMS: usize = 1 << 28;
+
+/// Frame-decode read buffer; also bounds the initial `Vec` reservation so
+/// a plausible-but-wrong length prefix cannot trigger a huge allocation.
+const READ_CHUNK: usize = 1 << 16;
+
+// ---------------------------------------------------------------------------
+// Framing codec (pure functions — proptested in tests/wire_proptest.rs)
+// ---------------------------------------------------------------------------
+
+/// Encode one frame: `u32` LE element count, then each element as i64 LE.
+pub fn encode_frame(data: &[i64]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + data.len() * 8);
+    out.extend_from_slice(&(data.len() as u32).to_le_bytes());
+    for &x in data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn map_io(e: std::io::Error, op: &'static str, t0: Instant) -> NetError {
+    match e.kind() {
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut => {
+            NetError::Timeout { op, elapsed: t0.elapsed() }
+        }
+        _ => NetError::PeerClosed,
+    }
+}
+
+/// Read exactly `buf.len()` bytes. A clean EOF before the first byte is
+/// `Ok(false)`; EOF mid-buffer (a torn frame) is [`NetError::PeerClosed`].
+fn read_full(
+    r: &mut impl Read,
+    buf: &mut [u8],
+    op: &'static str,
+    t0: Instant,
+) -> NetResult<bool> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 { Ok(false) } else { Err(NetError::PeerClosed) };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(map_io(e, op, t0)),
+        }
+    }
+    Ok(true)
+}
+
+/// Decode one frame from any byte stream.  Allocation is bounded: the
+/// length prefix is validated against [`MAX_FRAME_ELEMS`] before any
+/// reservation, and the payload `Vec` grows only as bytes actually arrive
+/// (initial reservation capped at [`READ_CHUNK`] worth of elements) — so a
+/// corrupted length yields a typed error, never an OOM or a panic.
+pub fn read_frame_from(r: &mut impl Read, op: &'static str) -> NetResult<Vec<i64>> {
+    let t0 = Instant::now();
+    let mut hdr = [0u8; 4];
+    if !read_full(r, &mut hdr, op, t0)? {
+        return Err(NetError::PeerClosed); // clean EOF between frames
+    }
+    let n = u32::from_le_bytes(hdr) as usize;
+    if n > MAX_FRAME_ELEMS {
+        return Err(NetError::FrameMismatch { op, expected: MAX_FRAME_ELEMS, got: n });
+    }
+    let mut out: Vec<i64> = Vec::with_capacity(n.min(READ_CHUNK / 8));
+    let mut chunk = [0u8; READ_CHUNK];
+    let mut remaining = n * 8;
+    while remaining > 0 {
+        let want = remaining.min(READ_CHUNK);
+        if !read_full(r, &mut chunk[..want], op, t0)? {
+            return Err(NetError::PeerClosed); // truncated payload
+        }
+        for b in chunk[..want].chunks_exact(8) {
+            out.push(i64::from_le_bytes(b.try_into().expect("8-byte chunk")));
+        }
+        remaining -= want;
+    }
+    Ok(out)
+}
+
+fn write_frame(w: &mut impl Write, data: &[i64], op: &'static str) -> NetResult<()> {
+    let t0 = Instant::now();
+    let bytes = encode_frame(data);
+    w.write_all(&bytes).map_err(|e| map_io(e, op, t0))?;
+    w.flush().map_err(|e| map_io(e, op, t0))
+}
+
+// ---------------------------------------------------------------------------
+// Handshake
+// ---------------------------------------------------------------------------
+
+/// One-way fingerprint of the shared dealer seed: lets the parties agree
+/// they hold the SAME preprocessing stream without revealing the seed on
+/// the wire.
+pub fn seed_fingerprint(dealer_seed: u64) -> u64 {
+    let mut s = dealer_seed ^ 0x5f3e_7a1d_c0de_5eed;
+    crate::util::rng::splitmix64(&mut s)
+}
+
+/// Order-sensitive digest of public job parameters (batch size, phase
+/// keeps, candidate count, …) — handshake-checked so misconfigured
+/// parties fail typed at connect time, not with a mid-phase desync.
+pub fn digest_params(words: &[u64]) -> u64 {
+    let mut acc = 0xd1e5_700f_5e1e_c7edu64;
+    for &w in words {
+        let mut s = acc ^ w;
+        acc = crate::util::rng::splitmix64(&mut s);
+    }
+    acc
+}
+
+fn hello_frame(role: Role, seed_fp: u64, params_digest: u64) -> Vec<i64> {
+    vec![
+        HELLO_MAGIC,
+        WIRE_VERSION as i64,
+        role.index() as i64,
+        seed_fp as i64,
+        params_digest as i64,
+    ]
+}
+
+fn verify_hello(
+    frame: &[i64],
+    my_role: Role,
+    seed_fp: u64,
+    params_digest: u64,
+) -> NetResult<()> {
+    let fail = |reason: String| Err(NetError::Handshake { reason });
+    if frame.len() != 5 || frame[0] != HELLO_MAGIC {
+        return fail("peer did not speak the selectformer wire protocol".into());
+    }
+    if frame[1] != WIRE_VERSION as i64 {
+        return fail(format!(
+            "wire version mismatch: ours {WIRE_VERSION}, peer {}",
+            frame[1]
+        ));
+    }
+    if frame[2] != my_role.other().index() as i64 {
+        return fail(format!(
+            "role collision: both sides claim role {} — one party must be the model owner and one the data owner",
+            my_role.index()
+        ));
+    }
+    if frame[3] != seed_fp as i64 {
+        return fail("dealer-seed fingerprint mismatch: parties hold different preprocessing seeds".into());
+    }
+    if frame[4] != params_digest as i64 {
+        return fail("public-parameter digest mismatch: parties configured different jobs".into());
+    }
+    Ok(())
+}
+
+/// Run the symmetric connect handshake over a fresh stream: both sides
+/// write their hello first, then read the peer's (the hello fits any
+/// socket buffer, so write-then-read cannot deadlock).
+fn perform_handshake(
+    stream: &mut (impl Read + Write),
+    role: Role,
+    seed_fp: u64,
+    params_digest: u64,
+) -> NetResult<()> {
+    write_frame(stream, &hello_frame(role, seed_fp, params_digest), "handshake")?;
+    let peer = read_frame_from(stream, "handshake")?;
+    verify_hello(&peer, role, seed_fp, params_digest)
+}
+
+// ---------------------------------------------------------------------------
+// Stream abstraction over TCP / Unix sockets
+// ---------------------------------------------------------------------------
+
+/// The small surface [`SocketTransport`] needs from a connected duplex
+/// socket — implemented for [`TcpStream`] and [`UnixStream`].
+pub trait WireStream: Read + Write + Send {
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()>;
+    fn try_clone_stream(&self) -> std::io::Result<Box<dyn WireStream>>;
+    fn shutdown_write(&self) -> std::io::Result<()>;
+}
+
+impl WireStream for TcpStream {
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn try_clone_stream(&self) -> std::io::Result<Box<dyn WireStream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+    fn shutdown_write(&self) -> std::io::Result<()> {
+        self.shutdown(Shutdown::Write)
+    }
+}
+
+impl WireStream for UnixStream {
+    fn set_stream_read_timeout(&self, d: Option<Duration>) -> std::io::Result<()> {
+        self.set_read_timeout(d)
+    }
+    fn try_clone_stream(&self) -> std::io::Result<Box<dyn WireStream>> {
+        Ok(Box::new(self.try_clone()?))
+    }
+    fn shutdown_write(&self) -> std::io::Result<()> {
+        self.shutdown(Shutdown::Write)
+    }
+}
+
+fn establish_err(what: &str, e: std::io::Error) -> NetError {
+    NetError::Handshake { reason: format!("{what}: {e}") }
+}
+
+// ---------------------------------------------------------------------------
+// Transport configuration
+// ---------------------------------------------------------------------------
+
+/// Which physical backend carries the party-to-party frames.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process mpsc channels (the default; both parties on threads).
+    #[default]
+    InMemory,
+    /// Loopback TCP with the full framing + handshake stack.
+    Tcp,
+    /// A connected Unix-domain socket pair.
+    Unix,
+}
+
+/// WAN emulation applied by the socket backends: each received frame is
+/// delayed by `latency` plus its serialization time at `bandwidth`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Shaping {
+    /// one-way latency added to every received frame
+    pub latency: Duration,
+    /// emulated line rate, bytes/second (`f64::INFINITY` = unshaped)
+    pub bandwidth: f64,
+}
+
+/// How the engine should build the channel pair for a party run.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TransportConfig {
+    pub kind: TransportKind,
+    /// Optional WAN shaping (socket backends only).
+    pub shaping: Option<Shaping>,
+}
+
+impl TransportConfig {
+    pub fn tcp() -> Self {
+        TransportConfig { kind: TransportKind::Tcp, shaping: None }
+    }
+    pub fn unix() -> Self {
+        TransportConfig { kind: TransportKind::Unix, shaping: None }
+    }
+    /// Parse a CLI flag value: `mem` | `tcp` | `unix`.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "mem" | "memory" | "inmemory" => Some(TransportConfig::default()),
+            "tcp" => Some(TransportConfig::tcp()),
+            "unix" => Some(TransportConfig::unix()),
+            _ => None,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// SocketTransport
+// ---------------------------------------------------------------------------
+
+/// A [`Transport`] over a connected socket.  The read half lives on the
+/// calling party's thread; the write half is a dedicated writer thread fed
+/// through an unbounded queue (see module docs for why).
+pub struct SocketTransport {
+    tx: Option<Sender<Vec<i64>>>,
+    dead: Arc<AtomicBool>,
+    reader: BufReader<Box<dyn WireStream>>,
+    /// Second handle to the same socket, used to flip `SO_RCVTIMEO`.
+    ctrl: Box<dyn WireStream>,
+    writer: Option<std::thread::JoinHandle<()>>,
+    kind_tag: &'static str,
+    shaping: Option<Shaping>,
+    cur_timeout: Option<Duration>,
+}
+
+impl SocketTransport {
+    /// Wrap an already-handshaken stream.
+    fn new(
+        stream: Box<dyn WireStream>,
+        kind_tag: &'static str,
+        shaping: Option<Shaping>,
+    ) -> NetResult<SocketTransport> {
+        let mut write_half =
+            stream.try_clone_stream().map_err(|e| establish_err("clone socket", e))?;
+        let ctrl = stream.try_clone_stream().map_err(|e| establish_err("clone socket", e))?;
+        let dead = Arc::new(AtomicBool::new(false));
+        let dead_w = dead.clone();
+        let (tx, rx): (Sender<Vec<i64>>, Receiver<Vec<i64>>) = std::sync::mpsc::channel();
+        let writer = std::thread::Builder::new()
+            .name("sf-wire-writer".into())
+            .spawn(move || {
+                // drain the queue until every sender hangs up; on a write
+                // failure the peer is gone — flag it and stop.
+                while let Ok(frame) = rx.recv() {
+                    if write_frame(&mut write_half, &frame, "wire_send").is_err() {
+                        dead_w.store(true, Ordering::SeqCst);
+                        break;
+                    }
+                }
+                // queued frames are flushed; give the peer a clean EOF so
+                // its blocking reads turn into PeerClosed, like an mpsc
+                // sender drop.
+                let _ = write_half.shutdown_write();
+            })
+            .map_err(|e| establish_err("spawn writer", e))?;
+        Ok(SocketTransport {
+            tx: Some(tx),
+            dead,
+            reader: BufReader::with_capacity(READ_CHUNK, stream),
+            ctrl,
+            writer: Some(writer),
+            kind_tag,
+            shaping,
+            cur_timeout: None,
+        })
+    }
+}
+
+impl Transport for SocketTransport {
+    fn send(&mut self, data: Vec<i64>) -> NetResult<()> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(NetError::PeerClosed);
+        }
+        self.tx
+            .as_ref()
+            .expect("writer queue alive until drop")
+            .send(data)
+            .map_err(|_| NetError::PeerClosed)
+    }
+
+    fn recv(&mut self, deadline: Option<Duration>, op: &'static str) -> NetResult<Vec<i64>> {
+        if deadline != self.cur_timeout {
+            self.ctrl
+                .set_stream_read_timeout(deadline)
+                .map_err(|_| NetError::PeerClosed)?;
+            self.cur_timeout = deadline;
+        }
+        let frame = read_frame_from(&mut self.reader, op)?;
+        if let Some(sh) = self.shaping {
+            let ser = if sh.bandwidth.is_finite() && sh.bandwidth > 0.0 {
+                Duration::from_secs_f64((frame.len() * 8) as f64 / sh.bandwidth)
+            } else {
+                Duration::ZERO
+            };
+            std::thread::sleep(sh.latency + ser);
+        }
+        Ok(frame)
+    }
+
+    fn kind(&self) -> &'static str {
+        self.kind_tag
+    }
+}
+
+impl Drop for SocketTransport {
+    fn drop(&mut self) {
+        // Hang up the queue, then wait for the writer to flush what was
+        // already sent — protocol-final frames must reach the peer even if
+        // this endpoint drops its Chan immediately after sending.
+        drop(self.tx.take());
+        if let Some(h) = self.writer.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pair construction (in-process loopback) and party endpoints (CLI)
+// ---------------------------------------------------------------------------
+
+fn socket_chan(
+    stream: Box<dyn WireStream>,
+    kind_tag: &'static str,
+    shaping: Option<Shaping>,
+) -> NetResult<Chan> {
+    Ok(Chan::from_transport(Box::new(SocketTransport::new(stream, kind_tag, shaping)?)))
+}
+
+/// Build a connected, handshaken channel pair over the configured backend
+/// — the engine's channel factory.  `InMemory` delegates to [`chan_pair`];
+/// the socket kinds run the full framing + handshake stack over loopback,
+/// so in-process tests exercise exactly the code path two real processes
+/// would.
+pub fn loopback_pair(cfg: &TransportConfig, dealer_seed: u64) -> NetResult<(Chan, Chan)> {
+    let fp = seed_fingerprint(dealer_seed);
+    let (mut s0, mut s1): (Box<dyn WireStream>, Box<dyn WireStream>) = match cfg.kind {
+        TransportKind::InMemory => return Ok(chan_pair()),
+        TransportKind::Tcp => {
+            let listener = TcpListener::bind(("127.0.0.1", 0))
+                .map_err(|e| establish_err("bind loopback", e))?;
+            let addr = listener.local_addr().map_err(|e| establish_err("local_addr", e))?;
+            let a = TcpStream::connect(addr).map_err(|e| establish_err("connect loopback", e))?;
+            let (b, _) = listener.accept().map_err(|e| establish_err("accept loopback", e))?;
+            a.set_nodelay(true).map_err(|e| establish_err("nodelay", e))?;
+            b.set_nodelay(true).map_err(|e| establish_err("nodelay", e))?;
+            (Box::new(a), Box::new(b))
+        }
+        TransportKind::Unix => {
+            let (a, b) = UnixStream::pair().map_err(|e| establish_err("unix pair", e))?;
+            (Box::new(a), Box::new(b))
+        }
+    };
+    // Both hellos are written before either side reads — tiny frames, so
+    // this cannot deadlock even single-threaded.
+    write_frame(&mut s0, &hello_frame(Role::ModelOwner, fp, 0), "handshake")?;
+    write_frame(&mut s1, &hello_frame(Role::DataOwner, fp, 0), "handshake")?;
+    let h0 = read_frame_from(&mut s0, "handshake")?;
+    verify_hello(&h0, Role::ModelOwner, fp, 0)?;
+    let h1 = read_frame_from(&mut s1, "handshake")?;
+    verify_hello(&h1, Role::DataOwner, fp, 0)?;
+    let tag = if cfg.kind == TransportKind::Tcp { "tcp" } else { "unix" };
+    Ok((socket_chan(s0, tag, cfg.shaping)?, socket_chan(s1, tag, cfg.shaping)?))
+}
+
+enum ListenerKind {
+    Tcp(TcpListener),
+    Unix(UnixListener, String),
+}
+
+/// A bound, not-yet-accepted party endpoint (`selectformer party --listen`).
+/// Split from the accept so callers can announce the bound address (port 0
+/// resolves at bind time) before blocking.
+pub struct PartyListener {
+    inner: ListenerKind,
+}
+
+impl PartyListener {
+    /// Bind `host:port`, or `unix:<path>` for a Unix-domain socket.
+    pub fn bind(addr: &str) -> NetResult<PartyListener> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            let _ = std::fs::remove_file(path);
+            let l = UnixListener::bind(path).map_err(|e| establish_err("bind", e))?;
+            Ok(PartyListener { inner: ListenerKind::Unix(l, path.to_string()) })
+        } else {
+            let l = TcpListener::bind(addr).map_err(|e| establish_err("bind", e))?;
+            Ok(PartyListener { inner: ListenerKind::Tcp(l) })
+        }
+    }
+
+    /// The resolved bound address (announce this so the peer can connect).
+    pub fn local_addr(&self) -> String {
+        match &self.inner {
+            ListenerKind::Tcp(l) => l
+                .local_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_else(|_| "<unknown>".into()),
+            ListenerKind::Unix(_, p) => format!("unix:{p}"),
+        }
+    }
+
+    /// Accept the peer and run the handshake as `role`.
+    pub fn accept_party(
+        self,
+        role: Role,
+        dealer_seed: u64,
+        params_digest: u64,
+        shaping: Option<Shaping>,
+    ) -> NetResult<Chan> {
+        let (mut stream, tag): (Box<dyn WireStream>, &'static str) = match self.inner {
+            ListenerKind::Tcp(l) => {
+                let (s, _) = l.accept().map_err(|e| establish_err("accept", e))?;
+                s.set_nodelay(true).map_err(|e| establish_err("nodelay", e))?;
+                (Box::new(s), "tcp")
+            }
+            ListenerKind::Unix(l, path) => {
+                let (s, _) = l.accept().map_err(|e| establish_err("accept", e))?;
+                let _ = std::fs::remove_file(path);
+                (Box::new(s), "unix")
+            }
+        };
+        perform_handshake(&mut stream, role, seed_fingerprint(dealer_seed), params_digest)?;
+        socket_chan(stream, tag, shaping)
+    }
+}
+
+/// Connect to a listening peer (`selectformer party --connect`) and run
+/// the handshake as `role`.  `addr` is `host:port` or `unix:<path>`.
+pub fn connect_party(
+    addr: &str,
+    role: Role,
+    dealer_seed: u64,
+    params_digest: u64,
+    shaping: Option<Shaping>,
+) -> NetResult<Chan> {
+    let (mut stream, tag): (Box<dyn WireStream>, &'static str) =
+        if let Some(path) = addr.strip_prefix("unix:") {
+            let s = UnixStream::connect(path).map_err(|e| establish_err("connect", e))?;
+            (Box::new(s), "unix")
+        } else {
+            let s = TcpStream::connect(addr).map_err(|e| establish_err("connect", e))?;
+            s.set_nodelay(true).map_err(|e| establish_err("nodelay", e))?;
+            (Box::new(s), "tcp")
+        };
+    perform_handshake(&mut stream, role, seed_fingerprint(dealer_seed), params_digest)?;
+    socket_chan(stream, tag, shaping)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codec_round_trips() {
+        for payload in [vec![], vec![0i64], vec![i64::MIN, -1, 0, 1, i64::MAX], vec![42; 10_000]]
+        {
+            let bytes = encode_frame(&payload);
+            let mut cur = std::io::Cursor::new(bytes);
+            assert_eq!(read_frame_from(&mut cur, "t").unwrap(), payload);
+        }
+    }
+
+    #[test]
+    fn oversized_length_prefix_is_typed_before_allocating() {
+        let mut bytes = encode_frame(&[1, 2, 3]);
+        bytes[..4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let mut cur = std::io::Cursor::new(bytes);
+        match read_frame_from(&mut cur, "t") {
+            Err(NetError::FrameMismatch { expected, got, .. }) => {
+                assert_eq!(expected, MAX_FRAME_ELEMS);
+                assert_eq!(got, u32::MAX as usize);
+            }
+            other => panic!("expected FrameMismatch, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_frame_is_peer_closed() {
+        let bytes = encode_frame(&[1, 2, 3, 4]);
+        for cut in 0..bytes.len() {
+            let mut cur = std::io::Cursor::new(bytes[..cut].to_vec());
+            assert_eq!(read_frame_from(&mut cur, "t"), Err(NetError::PeerClosed), "cut={cut}");
+        }
+    }
+
+    #[test]
+    fn tcp_pair_moves_frames_both_ways() {
+        let cfg = TransportConfig::tcp();
+        let (mut c0, mut c1) = loopback_pair(&cfg, 7).unwrap();
+        let h = std::thread::spawn(move || {
+            let got = c1.exchange(vec![10, 20]).unwrap();
+            (got, c1.meter.clone())
+        });
+        let got0 = c0.exchange(vec![1, 2, 3]).unwrap();
+        let (got1, m1) = h.join().unwrap();
+        assert_eq!(got0, vec![10, 20]);
+        assert_eq!(got1, vec![1, 2, 3]);
+        assert_eq!(c0.meter.half_rounds, 2);
+        assert_eq!(m1.half_rounds, 2);
+        assert_eq!(c0.transport_kind(), "tcp");
+    }
+
+    #[test]
+    fn unix_pair_moves_frames_and_large_payload_does_not_deadlock() {
+        let cfg = TransportConfig::unix();
+        let (mut c0, mut c1) = loopback_pair(&cfg, 7).unwrap();
+        // both parties send ~8 MB before either receives — far beyond any
+        // socket buffer; the writer-thread design must absorb it.
+        let big0: Vec<i64> = (0..1_000_000).collect();
+        let big1: Vec<i64> = (0..1_000_000).map(|x| -x).collect();
+        let expect0 = big1.clone();
+        let expect1 = big0.clone();
+        let h = std::thread::spawn(move || c1.exchange(big1).unwrap());
+        let got0 = c0.exchange(big0).unwrap();
+        assert_eq!(got0, expect0);
+        assert_eq!(h.join().unwrap(), expect1);
+    }
+
+    #[test]
+    fn peer_drop_surfaces_as_peer_closed() {
+        let (mut c0, c1) = loopback_pair(&TransportConfig::tcp(), 7).unwrap();
+        drop(c1);
+        assert_eq!(c0.recv_only(), Err(NetError::PeerClosed));
+    }
+
+    #[test]
+    fn recv_deadline_maps_to_socket_timeout() {
+        let (mut c0, _keepalive) = loopback_pair(&TransportConfig::tcp(), 7).unwrap();
+        c0.deadline = Some(Duration::from_millis(30));
+        c0.op_label = "ltz";
+        match c0.recv_only() {
+            Err(NetError::Timeout { op, elapsed }) => {
+                assert_eq!(op, "ltz");
+                assert!(elapsed >= Duration::from_millis(25));
+            }
+            other => panic!("expected Timeout, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_seed_fingerprint_mismatch() {
+        // hand-build the two ends with different dealer seeds
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            perform_handshake(&mut s, Role::DataOwner, seed_fingerprint(111), 0)
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let r0 = perform_handshake(&mut s, Role::ModelOwner, seed_fingerprint(222), 0);
+        let r1 = h.join().unwrap();
+        for r in [r0, r1] {
+            match r {
+                Err(NetError::Handshake { reason }) => {
+                    assert!(reason.contains("fingerprint"), "{reason}")
+                }
+                other => panic!("expected Handshake error, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn handshake_rejects_role_collision() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+        let h = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            perform_handshake(&mut s, Role::ModelOwner, seed_fingerprint(5), 9)
+        });
+        let (mut s, _) = listener.accept().unwrap();
+        let r0 = perform_handshake(&mut s, Role::ModelOwner, seed_fingerprint(5), 9);
+        assert!(matches!(r0, Err(NetError::Handshake { .. })));
+        assert!(matches!(h.join().unwrap(), Err(NetError::Handshake { .. })));
+    }
+
+    #[test]
+    fn shaping_latency_shows_up_in_wall_clock() {
+        let lat = Duration::from_millis(5);
+        let cfg = TransportConfig {
+            kind: TransportKind::Tcp,
+            shaping: Some(Shaping { latency: lat, bandwidth: f64::INFINITY }),
+        };
+        let (mut c0, mut c1) = loopback_pair(&cfg, 7).unwrap();
+        let rounds = 8u32;
+        let h = std::thread::spawn(move || {
+            for _ in 0..rounds {
+                let got = c1.exchange(vec![1]).unwrap();
+                assert_eq!(got.len(), 1);
+            }
+            c1.meter.clone()
+        });
+        let t0 = Instant::now();
+        for _ in 0..rounds {
+            c0.exchange(vec![2]).unwrap();
+        }
+        let wall = t0.elapsed();
+        let m1 = h.join().unwrap();
+        // measured wall-clock must be at least the serial_delay the meter
+        // simulates for the same latency (bandwidth-free, compute-free)
+        let net = crate::mpc::net::NetConfig { bandwidth: f64::INFINITY, latency: 0.005 };
+        let simulated = c0.meter.serial_delay(&net);
+        assert!((c0.meter.rounds() - rounds as f64).abs() < 1e-12);
+        assert_eq!(c0.meter.half_rounds, m1.half_rounds);
+        assert!(
+            wall.as_secs_f64() >= simulated,
+            "wall {wall:?} < simulated {simulated}s"
+        );
+    }
+
+    #[test]
+    fn digest_params_is_order_sensitive() {
+        assert_ne!(digest_params(&[1, 2]), digest_params(&[2, 1]));
+        assert_eq!(digest_params(&[1, 2]), digest_params(&[1, 2]));
+    }
+}

@@ -34,7 +34,7 @@ fn run_actual(cfg: &ModelConfig, n: usize, batch: usize) -> (u64, u64) {
         .run()
         .unwrap();
     let out = &outcome.phases[0];
-    (out.meter_p0.bytes + out.meter_p1.bytes, out.meter_p0.rounds)
+    (out.meter_p0.bytes + out.meter_p1.bytes, out.meter_p0.half_rounds)
 }
 
 #[test]
@@ -71,10 +71,10 @@ fn layer_scaling_matches_direct_measurement() {
         direct.batch_bytes
     );
     assert!(
-        rel(scaled.batch_rounds, direct.batch_rounds) < 0.05,
-        "per-batch rounds: scaled {} vs direct {}",
-        scaled.batch_rounds,
-        direct.batch_rounds
+        rel(scaled.batch_half_rounds, direct.batch_half_rounds) < 0.05,
+        "per-batch half-rounds: scaled {} vs direct {}",
+        scaled.batch_half_rounds,
+        direct.batch_half_rounds
     );
 }
 
@@ -88,10 +88,10 @@ fn mlp_variant_is_much_cheaper_than_exact() {
     exact_cfg.variant_code = 3;
     let exact = profile_phase(&exact_cfg, batch).unwrap();
     assert!(
-        exact.batch_rounds > 3 * mlp.batch_rounds,
-        "exact {} rounds vs mlp {}",
-        exact.batch_rounds,
-        mlp.batch_rounds
+        exact.batch_half_rounds > 3 * mlp.batch_half_rounds,
+        "exact {} half-rounds vs mlp {}",
+        exact.batch_half_rounds,
+        mlp.batch_half_rounds
     );
     assert!(
         exact.batch_bytes > 2 * mlp.batch_bytes,

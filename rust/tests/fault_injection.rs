@@ -14,6 +14,9 @@
 //!  * `SF_FAULT_MODE`  — `kill` (default) / `stall` / `drop`
 //!  * `SF_FAULT_SEED`  — picks which message indices the sweep samples
 //!  * `SF_FAULT_EXHAUSTIVE` — set to sweep EVERY message index
+//!  * `SF_FAULT_TRANSPORT` — `mem` (default) / `tcp` / `unix`: run the
+//!    chaos workload over the corresponding [`TransportConfig`] backend,
+//!    so faults are injected above a REAL socket, not just the mpsc pair
 //!
 //! Non-transport failure modes (malformed artifacts, API misuse, a
 //! panicking observer inside the service) keep their original coverage
@@ -37,6 +40,7 @@ use selectformer::mpc::net::chan_pair;
 use selectformer::mpc::proto::{recv_share, share_input, Shared};
 use selectformer::mpc::{
     FaultMode, FaultPlan, FaultPolicy, NetError, NetResult, RetryPolicy, Role,
+    TransportConfig,
 };
 use selectformer::tensor::TensorR;
 
@@ -87,6 +91,15 @@ fn env_u64(name: &str, default: u64) -> u64 {
     std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// CI chaos-matrix transport dimension: `mem` (default) / `tcp` / `unix`.
+fn env_transport() -> TransportConfig {
+    match std::env::var("SF_FAULT_TRANSPORT") {
+        Ok(v) => TransportConfig::parse(&v)
+            .unwrap_or_else(|| panic!("SF_FAULT_TRANSPORT={v} (mem|tcp|unix)")),
+        Err(_) => TransportConfig::default(),
+    }
+}
+
 /// The sweep workload: a serial (`lanes = 1`) two-phase selection — both
 /// phases run the same tiny proxy, 48 candidates -> 24 -> 12 — so fault
 /// points cover setup, eval batches, QuickSelect and the phase boundary.
@@ -124,6 +137,7 @@ impl Chaos {
             batch: 16,
             lanes: 1,
             faults,
+            transport: env_transport(),
             ..Default::default()
         })
         .job_tag(tag);

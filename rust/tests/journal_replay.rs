@@ -139,3 +139,54 @@ fn restarted_queue_resumes_journaled_jobs_exactly_once() {
         "only the in-flight job is stamped as retried"
     );
 }
+
+#[test]
+fn torn_done_stamp_replays_the_job_instead_of_dropping_it() {
+    // regression (PR 7): a daemon crashing MID-`done`-append leaves a torn
+    // `done <id>` line with no status.  Replay used to read that as
+    // `done ok` and silently drop the job; it must resubmit it instead,
+    // and the re-run must reproduce the undisturbed selection.
+    let fx = Fixture::new();
+    let wal = std::env::temp_dir().join("sf_journal_replay").join("torn.wal");
+    let _ = std::fs::remove_file(&wal);
+    let expect = fx.job(9).run().unwrap().selected;
+
+    // --- incarnation 1: the job runs to completion, but the daemon dies
+    // halfway through stamping it terminal
+    let (journal, pending) = JobJournal::open(&wal).unwrap();
+    assert!(pending.is_empty());
+    let id = journal.record_submit("proxies=p.sfw synth=48 keep=12 tag=9").unwrap();
+    journal.record_start(id).unwrap();
+    let service = SelectionService::with_queue(1, 4);
+    let h = service.submit(fx.job(9)).unwrap();
+    assert_eq!(h.wait().unwrap().selected, expect);
+    service.shutdown();
+    drop(journal);
+    // simulate the crash tearing the status off the final append
+    let mut text = std::fs::read_to_string(&wal).unwrap();
+    text.push_str(&format!("done {id}"));
+    std::fs::write(&wal, text).unwrap();
+
+    // --- incarnation 2: the torn stamp is NOT terminal — the job replays
+    // as an in-flight retry and recomputes the same selection
+    let (journal, pending) = JobJournal::open(&wal).unwrap();
+    assert_eq!(pending.len(), 1, "a torn `done` must not count as done ok");
+    assert_eq!(pending[0].id, id);
+    assert!(pending[0].was_inflight, "the job had been claimed pre-crash");
+    journal.record_retry(id).unwrap();
+    journal.record_start(id).unwrap();
+    let service = SelectionService::with_queue(1, 4);
+    let h = service.submit(fx.job(9)).unwrap();
+    assert_eq!(
+        h.wait().unwrap().selected,
+        expect,
+        "replayed job must match the undisturbed selection"
+    );
+    journal.record_done(id, "ok").unwrap();
+    service.shutdown();
+    drop(journal);
+
+    // --- incarnation 3: the intact stamp is terminal; nothing replays
+    let (_journal, pending) = JobJournal::open(&wal).unwrap();
+    assert!(pending.is_empty(), "the re-stamped job must not replay again");
+}

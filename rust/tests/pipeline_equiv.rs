@@ -83,16 +83,16 @@ fn two_phase_pipelined_selection_is_identical_and_traffic_equal() {
     // metered traffic (deterministic — no CI flake): the broadcast setup
     // means 4 lanes move EXACTLY the bytes the serial pair moves; the only
     // round-count difference is the one batched delta pre-open per phase.
-    assert!(serial.total_bytes() > 0 && serial.total_rounds() > 0);
+    assert!(serial.total_bytes() > 0 && serial.total_half_rounds() > 0);
     assert_eq!(
         piped.total_bytes(),
         serial.total_bytes(),
         "lanes must share one session setup broadcast, not pay it per lane"
     );
     assert_eq!(
-        piped.total_rounds(),
-        serial.total_rounds() + schedule.n_phases() as u64,
-        "pipelined rounds = serial + one delta-pre-open round per phase"
+        piped.total_half_rounds(),
+        serial.total_half_rounds() + 2 * schedule.n_phases() as u64,
+        "pipelined half-rounds = serial + one delta-pre-open exchange per phase"
     );
     // both parties measured real wall-clock, whatever the machine load
     assert!(serial.total_wall_s() > 0.0 && piped.total_wall_s() > 0.0);

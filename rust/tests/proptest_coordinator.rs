@@ -222,7 +222,7 @@ fn prop_iosched_policies_ordered() {
             (0..n_ops)
                 .map(|_| OpRecord {
                     name: "op",
-                    rounds: 1 + r.below(50) as u64,
+                    half_rounds: 2 * (1 + r.below(50) as u64),
                     bytes: r.below(50_000_000) as u64,
                     compute_s: r.f64() * 2.0,
                 })
@@ -231,7 +231,7 @@ fn prop_iosched_policies_ordered() {
         |ops| {
             let p0 = CostMeter {
                 bytes: ops.iter().map(|o| o.bytes).sum(),
-                rounds: ops.iter().map(|o| o.rounds).sum(),
+                half_rounds: ops.iter().map(|o| o.half_rounds).sum(),
                 messages: 0,
                 compute_s: ops.iter().map(|o| o.compute_s).sum(),
                 ops: ops.clone(),

@@ -195,8 +195,8 @@ fn assert_identical(tag: &str, alone: &SelectionOutcome, svc: &SelectionOutcome)
             "{tag}: phase {p} P1 bytes"
         );
         assert_eq!(
-            a.meter_p0.rounds, b.meter_p0.rounds,
-            "{tag}: phase {p} rounds"
+            a.meter_p0.half_rounds, b.meter_p0.half_rounds,
+            "{tag}: phase {p} half-rounds"
         );
         assert_eq!(a.setup_bytes, b.setup_bytes, "{tag}: phase {p} setup bytes");
     }

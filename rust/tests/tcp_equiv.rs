@@ -1,0 +1,247 @@
+//! Transport equivalence — the PR 7 acceptance gate: a selection run over
+//! loopback TCP (and a Unix socket) must be BYTE-IDENTICAL to the
+//! in-memory mpsc pair — same survivors, same opened entropy scores, same
+//! per-party meter bytes AND half-rounds — across the lane/overlap matrix
+//! {1, 4} × {off, on}.  The wire is a dumb byte pipe under the same
+//! protocol: if anything diverges, the transport is reordering, dropping,
+//! or re-framing traffic.
+//!
+//! The final test drives the REAL two-process path: two
+//! `selectformer party` OS processes (spawned from the test binary's
+//! `CARGO_BIN_EXE_selectformer`) over loopback TCP must select exactly
+//! what one in-process job selects.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+
+use selectformer::coordinator::{
+    testutil, PhaseSchedule, PrivacyMode, ProxySpec, RuntimeProfile,
+    SelectionJob, SelectionOutcome,
+};
+use selectformer::data::{synth, Dataset, SynthSpec};
+use selectformer::mpc::TransportConfig;
+
+struct Fixture {
+    p1: std::path::PathBuf,
+    p2: std::path::PathBuf,
+    ds: Arc<Dataset>,
+    schedule: PhaseSchedule,
+}
+
+fn fixture(tag: &str) -> Fixture {
+    let dir = std::env::temp_dir().join("sf_tcp_equiv").join(tag);
+    let p1 = dir.join("phase1.sfw");
+    let p2 = dir.join("phase2.sfw");
+    testutil::write_random_proxy_sfw(&p1, 1, 1, 2, 16, 64, 2, 8);
+    testutil::write_random_proxy_sfw(&p2, 2, 2, 4, 16, 64, 2, 8);
+    let ds = Arc::new(synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        96,
+        false,
+        13,
+    ));
+    let schedule = PhaseSchedule::new(
+        vec![
+            ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            ProxySpec { n_layers: 2, n_heads: 2, d_mlp: 4 },
+        ],
+        vec![0.5, 0.5],
+    );
+    Fixture { p1, p2, ds, schedule }
+}
+
+fn run(
+    fx: &Fixture,
+    transport: TransportConfig,
+    lanes: usize,
+    overlap: bool,
+) -> SelectionOutcome {
+    SelectionJob::builder_shared([fx.p1.as_path(), fx.p2.as_path()], fx.ds.clone())
+        .candidates((0..fx.ds.n).collect())
+        .schedule(fx.schedule.clone())
+        .runtime(RuntimeProfile {
+            batch: 16,
+            lanes,
+            overlap,
+            transport,
+            ..Default::default()
+        })
+        .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true })
+        .build()
+        .expect("job config")
+        .run()
+        .expect("selection")
+}
+
+fn assert_identical(tag: &str, mem: &SelectionOutcome, wire: &SelectionOutcome) {
+    assert_eq!(mem.selected, wire.selected, "{tag}: final selection");
+    assert_eq!(mem.phases.len(), wire.phases.len(), "{tag}: phase count");
+    for (p, (a, b)) in mem.phases.iter().zip(&wire.phases).enumerate() {
+        assert_eq!(a.survivors, b.survivors, "{tag}: phase {p} survivors");
+        assert_eq!(
+            a.entropies, b.entropies,
+            "{tag}: phase {p} opened entropy scores"
+        );
+        assert_eq!(a.ent_shares, b.ent_shares, "{tag}: phase {p} entropy shares");
+        assert_eq!(a.meter_p0.bytes, b.meter_p0.bytes, "{tag}: phase {p} P0 bytes");
+        assert_eq!(a.meter_p1.bytes, b.meter_p1.bytes, "{tag}: phase {p} P1 bytes");
+        assert_eq!(
+            a.meter_p0.half_rounds, b.meter_p0.half_rounds,
+            "{tag}: phase {p} P0 half-rounds"
+        );
+        assert_eq!(
+            a.meter_p1.half_rounds, b.meter_p1.half_rounds,
+            "{tag}: phase {p} P1 half-rounds"
+        );
+    }
+}
+
+#[test]
+fn tcp_loopback_is_byte_identical_across_lane_overlap_matrix() {
+    let fx = fixture("tcp");
+    for (lanes, overlap) in [(1, false), (1, true), (4, false), (4, true)] {
+        let tag = format!("tcp lanes={lanes} overlap={overlap}");
+        let mem = run(&fx, TransportConfig::default(), lanes, overlap);
+        let tcp = run(&fx, TransportConfig::tcp(), lanes, overlap);
+        assert_identical(&tag, &mem, &tcp);
+        assert!(tcp.total_bytes() > 0, "{tag}: meter must see wire traffic");
+    }
+}
+
+#[test]
+fn unix_socket_is_byte_identical() {
+    let fx = fixture("unix");
+    let mem = run(&fx, TransportConfig::default(), 1, false);
+    let unix = run(&fx, TransportConfig::unix(), 1, false);
+    assert_identical("unix lanes=1", &mem, &unix);
+}
+
+#[test]
+fn shaped_transport_changes_wall_clock_not_bytes() {
+    // latency/bandwidth shaping must be observationally invisible to the
+    // protocol: identical selection and meters, only slower
+    use selectformer::mpc::Shaping;
+    use std::time::Duration;
+    let fx = fixture("shaped");
+    let mem = run(&fx, TransportConfig::default(), 1, false);
+    let shaped = TransportConfig {
+        shaping: Some(Shaping {
+            latency: Duration::from_micros(50),
+            bandwidth: f64::INFINITY,
+        }),
+        ..TransportConfig::tcp()
+    };
+    let slow = run(&fx, shaped, 1, false);
+    assert_identical("shaped tcp", &mem, &slow);
+}
+
+/// The real thing: two separate OS processes, one per party, loopback TCP.
+#[test]
+fn two_party_processes_match_in_process_selection() {
+    let bin = env!("CARGO_BIN_EXE_selectformer");
+    let dir = std::env::temp_dir().join("sf_tcp_equiv").join("procs");
+    let p1 = dir.join("phase1.sfw");
+    let p2 = dir.join("phase2.sfw");
+    // `party --synth` shapes its corpus with SynthSpec::default() — the
+    // proxies must share that geometry (seq 32, vocab 512)
+    testutil::write_random_proxy_sfw(&p1, 1, 1, 2, 32, 512, 2, 8);
+    testutil::write_random_proxy_sfw(&p2, 2, 2, 4, 32, 512, 2, 8);
+    let out_path = dir.join("selected.txt");
+
+    // the oracle: the same two phases in-process over the same synthetic
+    // corpus (`party --synth N` derives its dataset from the shared seed)
+    let seed = 0x5e1ec7u64; // the CLI's default dealer seed
+    let ds = selectformer::data::synth(
+        &SynthSpec::default(),
+        64,
+        false,
+        seed ^ 0xda7a, // cmd_party's synth derivation
+    );
+    let oracle = SelectionJob::builder([p1.as_path(), p2.as_path()], &ds)
+        .keep_counts(vec![24, 12])
+        .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+        .build()
+        .expect("oracle job")
+        .run()
+        .expect("oracle selection");
+
+    // model owner listens on an ephemeral port…
+    let proxies = format!("{};{}", p1.display(), p2.display());
+    let mut listener = Command::new(bin)
+        .args([
+            "party",
+            "--listen",
+            "127.0.0.1:0",
+            "--proxies",
+            &proxies,
+            "--keep",
+            "24;12",
+            "--batch",
+            "16",
+            "--out",
+        ])
+        .arg(&out_path)
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .spawn()
+        .expect("spawn model-owner party");
+    let mut lines = BufReader::new(listener.stdout.take().expect("stdout")).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("listener exited before announcing its address")
+            .expect("read listener stdout");
+        if let Some(rest) = line.strip_prefix("party listening on ") {
+            break rest.trim().to_string();
+        }
+    };
+
+    // …and the data owner connects to it from a second process
+    let connector = Command::new(bin)
+        .args([
+            "party",
+            "--connect",
+            &addr,
+            "--synth",
+            "64",
+            "--keep",
+            "24;12",
+            "--batch",
+            "16",
+        ])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::inherit())
+        .output()
+        .expect("run data-owner party");
+    assert!(
+        connector.status.success(),
+        "data-owner party failed:\n{}",
+        String::from_utf8_lossy(&connector.stdout)
+    );
+    let status = listener.wait().expect("wait model-owner party");
+    assert!(status.success(), "model-owner party failed");
+
+    let selected: Vec<usize> = std::fs::read_to_string(&out_path)
+        .expect("party --out file")
+        .lines()
+        .map(|l| l.trim().parse().expect("selected index"))
+        .collect();
+    assert_eq!(selected.len(), 12, "two phases 64 -> 24 -> 12");
+    assert_eq!(
+        selected, oracle.selected,
+        "two OS processes over TCP must select exactly what one process does"
+    );
+
+    // the data owner printed the SAME indices (both sides learn the set)
+    let data_out = String::from_utf8_lossy(&connector.stdout);
+    let printed = data_out
+        .lines()
+        .find_map(|l| l.strip_prefix("indices: "))
+        .expect("data owner prints the selected indices");
+    let theirs: Vec<usize> = printed
+        .split(',')
+        .map(|s| s.trim().parse().expect("index"))
+        .collect();
+    assert_eq!(theirs, selected, "both parties must learn the same index set");
+}

@@ -1,0 +1,143 @@
+//! Property tests over the wire framing codec (proptest-lite): whatever
+//! bytes arrive, `read_frame_from` must return either the encoded payload
+//! or a TYPED error — never panic, never hang, never allocate unboundedly.
+//!
+//!  * round-trip: decode(encode(xs)) == xs, for any i64 payload;
+//!  * truncation: every strict prefix of a frame decodes to PeerClosed;
+//!  * corrupted length: a length prefix above [`MAX_FRAME_ELEMS`] is a
+//!    FrameMismatch rejected BEFORE allocation; a plausible-but-wrong
+//!    length over a short stream is PeerClosed, not an OOM;
+//!  * arbitrary garbage never panics.
+
+use std::io::Cursor;
+
+use selectformer::mpc::wire::{encode_frame, read_frame_from, MAX_FRAME_ELEMS};
+use selectformer::mpc::NetError;
+use selectformer::util::proptest_lite::check;
+
+#[test]
+fn prop_round_trip_any_payload() {
+    check(
+        128,
+        0x31e1,
+        |r| {
+            let n = r.below(300);
+            (0..n).map(|_| r.next_i64()).collect::<Vec<i64>>()
+        },
+        |xs| {
+            let bytes = encode_frame(xs);
+            if bytes.len() != 4 + xs.len() * 8 {
+                return Err(format!("frame length {} for n={}", bytes.len(), xs.len()));
+            }
+            let mut cur = Cursor::new(bytes);
+            match read_frame_from(&mut cur, "prop") {
+                Ok(got) if &got == xs => Ok(()),
+                Ok(got) => Err(format!("decoded {} elems, wanted {}", got.len(), xs.len())),
+                Err(e) => Err(format!("round-trip failed: {e}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_frame_is_peer_closed() {
+    check(
+        128,
+        0x74a4,
+        |r| {
+            let n = 1 + r.below(64);
+            let xs: Vec<i64> = (0..n).map(|_| r.next_i64()).collect();
+            let bytes = encode_frame(&xs);
+            // any strict prefix, including a torn 4-byte header
+            let cut = r.below(bytes.len());
+            (bytes, cut)
+        },
+        |(bytes, cut)| {
+            let mut cur = Cursor::new(&bytes[..*cut]);
+            match read_frame_from(&mut cur, "prop") {
+                Err(NetError::PeerClosed) => Ok(()),
+                other => Err(format!("prefix len {cut}: expected PeerClosed, got {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_corrupted_length_is_bounded_frame_mismatch() {
+    // lengths ABOVE the cap: typed FrameMismatch carrying the cap and the
+    // claimed count, rejected before any payload allocation
+    check(
+        128,
+        0xbad_1e4,
+        |r| {
+            let claimed =
+                MAX_FRAME_ELEMS as u32 + 1 + r.below(1 << 20) as u32;
+            let mut bytes = claimed.to_le_bytes().to_vec();
+            // a little garbage after the header must not matter
+            bytes.extend((0..r.below(64)).map(|i| i as u8));
+            (bytes, claimed)
+        },
+        |(bytes, claimed)| {
+            let mut cur = Cursor::new(bytes.as_slice());
+            match read_frame_from(&mut cur, "prop") {
+                Err(NetError::FrameMismatch { expected, got, .. }) => {
+                    if expected != MAX_FRAME_ELEMS || got != *claimed as usize {
+                        return Err(format!(
+                            "mismatch fields expected={expected} got={got}"
+                        ));
+                    }
+                    Ok(())
+                }
+                other => Err(format!("claimed {claimed}: want FrameMismatch, got {other:?}")),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_plausible_length_over_short_stream_never_allocates_unboundedly() {
+    // lengths UNDER the cap but far beyond the actual stream: the decoder
+    // must stream-and-fail with PeerClosed — the Vec only grows as bytes
+    // actually arrive, so this completes instantly even for GiB claims
+    check(
+        64,
+        0x5702_c4ed,
+        |r| {
+            let claimed = 1 + r.below(MAX_FRAME_ELEMS - 1) as u32;
+            let mut bytes = claimed.to_le_bytes().to_vec();
+            let available = r.below(256);
+            bytes.extend((0..available).map(|i| (i * 7) as u8));
+            (bytes, claimed, available)
+        },
+        |(bytes, claimed, available)| {
+            if *available as u64 >= *claimed as u64 * 8 {
+                return Ok(()); // payload actually complete — covered by round-trip
+            }
+            let mut cur = Cursor::new(bytes.as_slice());
+            match read_frame_from(&mut cur, "prop") {
+                Err(NetError::PeerClosed) => Ok(()),
+                other => Err(format!(
+                    "claimed {claimed} with {available} bytes: want PeerClosed, got {other:?}"
+                )),
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_arbitrary_garbage_never_panics() {
+    check(
+        256,
+        0x6a4ba6e,
+        |r| {
+            let n = r.below(512);
+            (0..n).map(|_| r.below(256) as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            let mut cur = Cursor::new(bytes.as_slice());
+            // any typed outcome is fine; panicking or looping is the bug
+            let _ = read_frame_from(&mut cur, "prop");
+            Ok(())
+        },
+    );
+}
