@@ -17,6 +17,7 @@
 //!                      [--seed N] [--out proxies/]
 //! selectformer serve   --jobs <manifest> [--workers 2] [--queue 4]
 //!                      [--progress] [--journal jobs.wal]
+//! selectformer audit   [--root <repo>] [--out inventory.json] [--quiet]
 //! selectformer party   --listen <host:port|unix:path> | --connect <addr>
 //!                      --proxies p1.sfw[;p2.sfw…] | --data corpus.bin | --synth N
 //!                      --keep k1[;k2…] [--batch 16] [--seed N] [--out idx.txt]
@@ -129,6 +130,7 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             value: &["jobs", "workers", "queue", "journal"],
             boolean: &["progress"],
         },
+        "audit" => CmdSpec { value: &["root", "out"], boolean: &["quiet"] },
         other => bail!("unknown command `{other}` (try `selectformer info`)"),
     })
 }
@@ -305,6 +307,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "bench" => bench_acc::run(&args),
         "proxygen" => cmd_proxygen(&args),
         "serve" => cmd_serve(&args),
+        "audit" => cmd_audit(&args),
         other => bail!("unknown command `{other}` (try `selectformer info`)"),
     }
 }
@@ -800,6 +803,61 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "{failed} job(s) failed or were cancelled — see the [job N] lines above"
     );
     println!("all jobs resolved; service shut down");
+    Ok(())
+}
+
+/// `selectformer audit` — run the sfaudit leakage audit over this repo's
+/// `rust/src` tree: inventory every justified declassification site into
+/// `results/OPEN_AUDIT.json` and fail on any lint finding (unannotated
+/// open, share-typed value reaching a display macro, panic token in the
+/// fallible transport files, raw read off the deadline path, or a stale
+/// panic-allowlist entry).  Same engine as `cargo run -p sfaudit`.
+fn cmd_audit(args: &Args) -> Result<()> {
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => {
+            let cwd = std::env::current_dir().context("current dir")?;
+            sfaudit::find_root(&cwd).with_context(|| {
+                format!(
+                    "no repo root containing `{}` above {} — pass --root",
+                    sfaudit::AUDIT_ROOT_REL,
+                    cwd.display()
+                )
+            })?
+        }
+    };
+    let quiet = args.has("quiet");
+    let report = sfaudit::run_audit(&root).context("sfaudit scan")?;
+    if !quiet {
+        println!(
+            "audit: {} files scanned, {} justified declassification site(s)",
+            report.files_scanned,
+            report.open_sites.len()
+        );
+        for s in &report.open_sites {
+            println!("  {}:{}  {}(..)  — {}", s.file, s.line, s.call, s.justification);
+        }
+    }
+    for f in &report.findings {
+        eprintln!("audit[{}] {}:{}: {}", f.lint.name(), f.file, f.line, f.message);
+    }
+    ensure!(
+        report.is_clean(),
+        "{} leakage-audit finding(s) — see lines above",
+        report.findings.len()
+    );
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| root.join(sfaudit::INVENTORY_REL));
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir).with_context(|| format!("mkdir {dir:?}"))?;
+    }
+    std::fs::write(&out, sfaudit::render_inventory_json(&report))
+        .with_context(|| format!("write {out:?}"))?;
+    if !quiet {
+        println!("audit: clean — inventory written to {}", out.display());
+    }
     Ok(())
 }
 

@@ -18,6 +18,9 @@ pub fn appraise_average(ctx: &mut PartyCtx, entropies: &Shared) -> NetResult<f32
     }
     let inv_n = fixed::encode(1.0 / n as f32);
     let avg_share = fixed::trunc(acc.wrapping_mul(inv_n));
+    // OPEN-AUDIT: the average entropy IS this appraisal's agreed public
+    // output (paper §4.1); callers needing secrecy of the value use
+    // appraise_threshold instead
     let opened = open(ctx, &Shared(TensorR::from_vec(vec![avg_share], &[1])))?;
     Ok(fixed::decode(opened.data[0]))
 }
@@ -38,6 +41,8 @@ pub fn appraise_threshold(
     let avg = Shared(TensorR::from_vec(vec![avg_share], &[1]));
     let thr = crate::mpc::nonlin::const_share(ctx, threshold, &[1]);
     let gt = cmp::gt(ctx, &avg, &thr)?;
+    // OPEN-AUDIT: one-bit threshold verdict — the minimal agreed output of
+    // this appraisal mode; the average itself stays shared
     Ok(open(ctx, &gt)?.data[0] == 1)
 }
 

@@ -687,6 +687,8 @@ impl<'a> SelectionJob<'a> {
             policy: self.profile.policy,
             dealer_seed: self.dealer_seed,
             approx: self.approx,
+            // OPEN-AUDIT: forwards the caller's PrivacyMode::Debug opt-out;
+            // false (no reveal) for every non-Debug mode
             reveal_entropies: self.privacy.reveal_entropies(),
             lanes: self.profile.lanes,
             overlap: self.profile.overlap,

@@ -159,7 +159,7 @@ impl JobJournal {
 
     fn append(&self, record: String) -> Result<()> {
         debug_assert!(record.ends_with('\n') && record[..record.len() - 1].lines().count() <= 1);
-        let file = self.file.lock().unwrap();
+        let file = crate::util::sync::lock_unpoisoned(&self.file);
         (&*file)
             .write_all(record.as_bytes())
             .and_then(|()| file.sync_data())
@@ -185,7 +185,7 @@ impl JobJournal {
             .into());
         }
         let id = {
-            let mut next = self.next_id.lock().unwrap();
+            let mut next = crate::util::sync::lock_unpoisoned(&self.next_id);
             let id = *next;
             *next += 1;
             id

@@ -153,7 +153,11 @@ pub(crate) fn top_k_streamed_gated(
         let b = Shared(TensorR::from_vec(vec![pivot_share; m], &[m]));
         let gt_bits = ctx.op("qs_partition", |ctx| {
             let g = cmp::gt(ctx, &a, &b)?;
-            open(ctx, &g) // reveal ONLY the outcome bits
+            // OPEN-AUDIT: QuickSelect partition outcome bits — the paper's
+            // selection protocol publishes which candidates beat the pivot
+            // (the survivor set is the protocol's public output); entropy
+            // VALUES stay shared
+            open(ctx, &g)
         })?;
         stats.comparisons += m as u64;
         stats.partition_rounds += 1;
@@ -199,6 +203,8 @@ fn public_coin(ctx: &mut PartyCtx, n: usize) -> NetResult<usize> {
     // dealer streams are synchronized; draw one triple element as the coin
     let (a, _, _) = ctx.dealer.triples(1);
     // the SHARE differs per party, but a0+a1 is common — open it cheaply
+    // OPEN-AUDIT: joint pivot coin from dealer randomness — independent of
+    // all secret inputs, so its reconstruction reveals nothing about data
     let opened = open(
         ctx,
         &Shared(TensorR::from_vec(vec![a[0]], &[1])),

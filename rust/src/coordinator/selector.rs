@@ -617,6 +617,9 @@ pub(crate) fn setup_phase_session_on(
                         emb_tok_enc,
                         emb_pos_enc,
                     )?;
+                    // OPEN-AUDIT: weight deltas are one-time-pad masked
+                    // (uniform in the ring) before this pre-exchange; the
+                    // reconstruction is of masked values only
                     model.preopen_weight_deltas(ctx)?;
                     Ok(model)
                 })
@@ -626,6 +629,9 @@ pub(crate) fn setup_phase_session_on(
             ctx.op("session_setup", |ctx| {
                 ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                 let (mut model, emb_tok, emb_pos) = p1_recv_session(ctx, cfg, approx)?;
+                // OPEN-AUDIT: P1 side of the masked weight-delta
+                // pre-exchange (see the P0 closure above) — masked values
+                // only, uniform in the ring
                 model.preopen_weight_deltas(ctx)?;
                 Ok((model, emb_tok, emb_pos))
             })
@@ -768,6 +774,9 @@ pub(crate) fn run_phase_drain(
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent0, &[n]));
             let revealed = if reveal {
+                // OPEN-AUDIT: entropy values revealed ONLY under the
+                // caller's explicit PrivacyMode::Debug{reveal_entropies}
+                // opt-out — never on the default private path
                 Some(crate::mpc::proto::open(ctx, &ent)?.to_f32().data)
             } else {
                 None
@@ -787,6 +796,9 @@ pub(crate) fn run_phase_drain(
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent1, &[n]));
             if reveal {
+                // OPEN-AUDIT: P1 leg of the PrivacyMode::Debug
+                // entropy reveal — must mirror P0's open to keep the
+                // transcript symmetric
                 let _ = crate::mpc::proto::open(ctx, &ent)?;
             }
             let mut sel: Vec<usize> = Vec::with_capacity(keep);
@@ -1053,6 +1065,9 @@ pub(crate) fn run_phase_serial(
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             let revealed = if reveal {
+                // OPEN-AUDIT: entropy values revealed ONLY under the
+                // caller's explicit PrivacyMode::Debug{reveal_entropies}
+                // opt-out — never on the default private path
                 Some(crate::mpc::proto::open(ctx, &ent)?.to_f32().data)
             } else {
                 None
@@ -1084,6 +1099,9 @@ pub(crate) fn run_phase_serial(
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             if reveal {
+                // OPEN-AUDIT: P1 leg of the PrivacyMode::Debug
+                // entropy reveal — must mirror P0's open to keep the
+                // transcript symmetric
                 let _ = crate::mpc::proto::open(ctx, &ent)?;
             }
             let mut sel: Vec<usize> = Vec::with_capacity(keep);

@@ -81,6 +81,7 @@ use anyhow::{anyhow, Result};
 
 use crate::mpc::dealer::Hub;
 use crate::mpc::NetError;
+use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 use super::job::{CancelToken, Cancelled, SelectionJob};
 use super::observe::{
@@ -208,7 +209,7 @@ impl JobShared {
             Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
             Err(_) => JobStatus::Failed,
         };
-        let mut cell = self.cell.lock().unwrap();
+        let mut cell = lock_unpoisoned(&self.cell);
         cell.status = status;
         cell.result = Some(result);
         // under the cell lock: serializes against JobHandle::events(), so
@@ -226,7 +227,7 @@ struct StatusTracker(Arc<JobShared>);
 
 impl JobObserver for StatusTracker {
     fn on_event(&self, event: &JobEvent<'_>) {
-        let mut cell = self.0.cell.lock().unwrap();
+        let mut cell = lock_unpoisoned(&self.0.cell);
         match event {
             JobEvent::PhaseStarted { phase, .. } => {
                 cell.status = JobStatus::Running { phase: *phase, batches: 0 };
@@ -266,7 +267,7 @@ impl JobHandle {
 
     /// A point-in-time [`JobStatus`] snapshot (non-blocking).
     pub fn status(&self) -> JobStatus {
-        self.shared.cell.lock().unwrap().status
+        lock_unpoisoned(&self.shared.cell).status
     }
 
     /// Request cooperative cancellation.  A still-QUEUED job is pulled
@@ -282,7 +283,7 @@ impl JobHandle {
         // pend on an unrelated in-flight job)
         let Some(inner) = self.service.upgrade() else { return };
         let removed = {
-            let mut state = inner.state.lock().unwrap();
+            let mut state = lock_unpoisoned(&inner.state);
             let pos = state
                 .queue
                 .iter()
@@ -302,7 +303,7 @@ impl JobHandle {
             // locks and the Cancelled event runs observer code
             emit_cancelled_contained(&job);
             shared.finish(Err(Cancelled.into()));
-            let mut state = inner.state.lock().unwrap();
+            let mut state = lock_unpoisoned(&inner.state);
             state.active -= 1;
             inner.space.notify_one();
             gc_if_idle(&mut state, &inner);
@@ -315,7 +316,7 @@ impl JobHandle {
     /// calls return `None` and [`status`](JobHandle::status) carries the
     /// terminal state.
     pub fn poll(&self) -> Option<Result<SelectionOutcome>> {
-        let mut cell = self.shared.cell.lock().unwrap();
+        let mut cell = lock_unpoisoned(&self.shared.cell);
         if cell.status.is_pending() {
             return None;
         }
@@ -328,9 +329,9 @@ impl JobHandle {
     /// result is handed out once; a second `wait` (or a `wait` after a
     /// successful [`poll`](JobHandle::poll)) reports it already claimed.
     pub fn wait(&self) -> Result<SelectionOutcome> {
-        let mut cell = self.shared.cell.lock().unwrap();
+        let mut cell = lock_unpoisoned(&self.shared.cell);
         while cell.status.is_pending() {
-            cell = self.shared.done.wait(cell).unwrap();
+            cell = wait_unpoisoned(&self.shared.done, cell);
         }
         match cell.result.take() {
             Some(result) => result,
@@ -350,13 +351,13 @@ impl JobHandle {
     /// means "still running").
     pub fn wait_for(&self, timeout: Duration) -> Option<Result<SelectionOutcome>> {
         let deadline = Instant::now() + timeout;
-        let mut cell = self.shared.cell.lock().unwrap();
+        let mut cell = lock_unpoisoned(&self.shared.cell);
         while cell.status.is_pending() {
             let remaining = deadline.saturating_duration_since(Instant::now());
             if remaining.is_zero() {
                 return None;
             }
-            cell = self.shared.done.wait_timeout(cell, remaining).unwrap().0;
+            cell = wait_timeout_unpoisoned(&self.shared.done, cell, remaining).0;
         }
         Some(match cell.result.take() {
             Some(result) => result,
@@ -377,7 +378,7 @@ impl JobHandle {
     /// subscription, closing the earlier receiver mid-stream — fan out
     /// from one receiver if several components need the feed.
     pub fn events(&self) -> mpsc::Receiver<JobUpdate> {
-        let cell = self.shared.cell.lock().unwrap();
+        let cell = lock_unpoisoned(&self.shared.cell);
         if cell.status.is_pending() {
             // under the cell lock: JobShared::finish cannot slip between
             // the status check and the subscription
@@ -452,15 +453,21 @@ impl SelectionService {
             queue_cap: queue_cap.max(1),
             n_workers: workers.max(1),
         });
-        let workers = (0..inner.n_workers)
-            .map(|w| {
+        let workers: Vec<thread::JoinHandle<()>> = (0..inner.n_workers)
+            .map_while(|w| {
                 let inner = inner.clone();
                 thread::Builder::new()
                     .name(format!("sf-worker{w}"))
                     .spawn(move || worker_loop(&inner))
-                    .expect("spawn selection worker")
+                    .ok()
             })
             .collect();
+        if workers.is_empty() {
+            // no worker thread could spawn (resource exhaustion): nothing
+            // will ever claim the queue, so refuse intake — submitters get
+            // a typed SubmitError::ShuttingDown instead of hanging forever
+            lock_unpoisoned(&inner.state).shutdown = true;
+        }
         SelectionService { inner, workers }
     }
 
@@ -475,7 +482,7 @@ impl SelectionService {
     /// The service's CURRENT shared preprocessing hub (idle garbage
     /// collection swaps in a fresh one).
     pub fn hub(&self) -> Arc<Hub> {
-        self.inner.state.lock().unwrap().hub.clone()
+        lock_unpoisoned(&self.inner.state).hub.clone()
     }
 
     /// Enqueue a job, BLOCKING while the bounded queue is full; returns
@@ -485,7 +492,7 @@ impl SelectionService {
         &self,
         job: SelectionJob<'static>,
     ) -> Result<JobHandle, SubmitError> {
-        let mut state = self.inner.state.lock().unwrap();
+        let mut state = lock_unpoisoned(&self.inner.state);
         loop {
             if state.shutdown {
                 return Err(SubmitError::ShuttingDown(Box::new(job)));
@@ -493,7 +500,7 @@ impl SelectionService {
             if state.queue.len() < self.inner.queue_cap {
                 return Ok(self.enqueue(state, job));
             }
-            state = self.inner.space.wait(state).unwrap();
+            state = wait_unpoisoned(&self.inner.space, state);
         }
     }
 
@@ -504,7 +511,7 @@ impl SelectionService {
         &self,
         job: SelectionJob<'static>,
     ) -> Result<JobHandle, SubmitError> {
-        let state = self.inner.state.lock().unwrap();
+        let state = lock_unpoisoned(&self.inner.state);
         if state.shutdown {
             return Err(SubmitError::ShuttingDown(Box::new(job)));
         }
@@ -545,9 +552,9 @@ impl SelectionService {
     /// submitters postpone the idle edge: to drain just your own jobs
     /// under concurrent traffic, `wait()` on their handles instead.
     pub fn drain(&self) {
-        let mut state = self.inner.state.lock().unwrap();
+        let mut state = lock_unpoisoned(&self.inner.state);
         while state.active > 0 || !state.queue.is_empty() {
-            state = self.inner.idle.wait(state).unwrap();
+            state = wait_unpoisoned(&self.inner.idle, state);
         }
     }
 
@@ -561,7 +568,7 @@ impl SelectionService {
 
     fn shutdown_impl(&mut self) {
         let unstarted: Vec<(SelectionJob<'static>, Arc<JobShared>)> = {
-            let mut state = self.inner.state.lock().unwrap();
+            let mut state = lock_unpoisoned(&self.inner.state);
             state.shutdown = true;
             let unstarted: Vec<_> = state.queue.drain(..).collect();
             // keep the drained jobs counted as active until they are
@@ -581,7 +588,7 @@ impl SelectionService {
             shared.finish(Err(Cancelled.into()));
         }
         {
-            let mut state = self.inner.state.lock().unwrap();
+            let mut state = lock_unpoisoned(&self.inner.state);
             state.active -= n_unstarted;
             gc_if_idle(&mut state, &self.inner);
         }
@@ -617,7 +624,7 @@ fn worker_loop(inner: &Inner) {
         // already cancelled while queued gets NO hub grant — it will
         // never run, so its (seed, tag) pair must stay grantable
         let (mut job, shared, hub) = {
-            let mut state = inner.state.lock().unwrap();
+            let mut state = lock_unpoisoned(&inner.state);
             loop {
                 if let Some((job, shared)) = state.queue.pop_front() {
                     state.active += 1;
@@ -632,7 +639,7 @@ fn worker_loop(inner: &Inner) {
                 if state.shutdown {
                     return;
                 }
-                state = inner.work.wait(state).unwrap();
+                state = wait_unpoisoned(&inner.work, state);
             }
         };
 
@@ -649,7 +656,7 @@ fn worker_loop(inner: &Inner) {
                 let retry = job.fault_policy().retry;
                 let mut attempt: u32 = 1;
                 loop {
-                    shared.cell.lock().unwrap().status = if job.has_calibration() {
+                    lock_unpoisoned(&shared.cell).status = if job.has_calibration() {
                         JobStatus::Calibrating
                     } else {
                         JobStatus::Running { phase: 0, batches: 0 }
@@ -696,7 +703,7 @@ fn worker_loop(inner: &Inner) {
         shared.finish(result);
         drop(job); // release models/dataset before touching service state
 
-        let mut state = inner.state.lock().unwrap();
+        let mut state = lock_unpoisoned(&inner.state);
         state.active -= 1;
         gc_if_idle(&mut state, inner);
     }

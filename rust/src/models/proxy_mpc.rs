@@ -321,6 +321,9 @@ impl ModelMpc {
     /// bit-identical to the lazy first-use path (tested in proto.rs).
     pub fn preopen_weight_deltas(&mut self, ctx: &mut PartyCtx) -> NetResult<()> {
         let mut ws = self.weights_mut();
+        // OPEN-AUDIT: reconstructs W−B where B is a uniform dealer mask —
+        // the opened deltas are one-time-pad masked, indistinguishable
+        // from ring noise without B
         proto::preopen_weight_deltas(ctx, &mut ws)
     }
 }

@@ -166,6 +166,14 @@ pub fn recv_share(ctx: &mut PartyCtx, shape: &[usize]) -> NetResult<Shared> {
 
 /// Open (reconstruct) a shared tensor to both parties. One round.
 /// The peer's buffer is reused as the result — no copy on either side.
+///
+/// **Declassification.** This is the privacy boundary of the engine:
+/// whatever is opened here is public to both parties forever.  Every
+/// non-test call site must carry an adjacent `// OPEN-AUDIT: <why this
+/// value is public-by-protocol>` annotation — enforced by the `sfaudit`
+/// static pass (`cargo run -p sfaudit`), which compiles the justified
+/// sites into `results/OPEN_AUDIT.json`.  Those sites are also where the
+/// planned SPDZ MAC check (ROADMAP item 2) will attach.
 pub fn open(ctx: &mut PartyCtx, x: &Shared) -> NetResult<TensorR> {
     let mut payload = ctx.arena.take(x.len());
     payload.extend_from_slice(&x.0.data);
@@ -182,6 +190,9 @@ pub fn open(ctx: &mut PartyCtx, x: &Shared) -> NetResult<TensorR> {
 /// pays ONE latency.  (The nonlinear ops already open whole tensors per
 /// step — their rows are batched inside `open`/`exchange` — so this is
 /// for cross-op coalescing.)
+///
+/// **Declassification** — same audit contract as [`open`]: non-test call
+/// sites need an `// OPEN-AUDIT:` justification.
 pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> NetResult<Vec<TensorR>> {
     let total = xs.iter().map(|x| x.len()).sum();
     let mut payload = ctx.arena.take(total);
@@ -560,6 +571,10 @@ impl SecretWeight {
 /// it opened the delta itself — only the wire payload (and its bytes)
 /// moves from the first batch into the setup session.  Both parties must
 /// pass the weights in the same order (structural model order does this).
+///
+/// **Declassification** — the opened values are W−B with B a uniform
+/// dealer mask (one-time pad), but the audit contract of [`open`] still
+/// applies: non-test call sites need an `// OPEN-AUDIT:` justification.
 pub fn preopen_weight_deltas(
     ctx: &mut PartyCtx,
     weights: &mut [&mut SecretWeight],

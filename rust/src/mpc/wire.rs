@@ -115,7 +115,9 @@ pub fn read_frame_from(r: &mut impl Read, op: &'static str) -> NetResult<Vec<i64
             return Err(NetError::PeerClosed); // truncated payload
         }
         for b in chunk[..want].chunks_exact(8) {
-            out.push(i64::from_le_bytes(b.try_into().expect("8-byte chunk")));
+            let mut le = [0u8; 8];
+            le.copy_from_slice(b);
+            out.push(i64::from_le_bytes(le));
         }
         remaining -= want;
     }
@@ -367,11 +369,12 @@ impl Transport for SocketTransport {
         if self.dead.load(Ordering::SeqCst) {
             return Err(NetError::PeerClosed);
         }
-        self.tx
-            .as_ref()
-            .expect("writer queue alive until drop")
-            .send(data)
-            .map_err(|_| NetError::PeerClosed)
+        // tx is Some from construction until Drop; a None here means we
+        // are racing teardown, which reads the same as a closed peer
+        match self.tx.as_ref() {
+            Some(tx) => tx.send(data).map_err(|_| NetError::PeerClosed),
+            None => Err(NetError::PeerClosed),
+        }
     }
 
     fn recv(&mut self, deadline: Option<Duration>, op: &'static str) -> NetResult<Vec<i64>> {

@@ -1,8 +1,9 @@
-//! Shared utilities: deterministic PRNGs, a proptest-lite harness, and
-//! report/table writers.
+//! Shared utilities: deterministic PRNGs, a proptest-lite harness,
+//! poison-tolerant sync primitives, and report/table writers.
 
 pub mod proptest_lite;
 pub mod report;
 pub mod rng;
+pub mod sync;
 
 pub use rng::Rng;

@@ -1,0 +1,74 @@
+//! Poison-tolerant synchronization helpers for the service/transport
+//! layers.
+//!
+//! A worker panic is already contained by `catch_unwind`, but a panic in
+//! the narrow windows where a lock is held (observer callbacks, status
+//! updates) would poison the mutex and make every later `.lock().unwrap()`
+//! in the daemon panic in turn — one bad job taking down the queue, every
+//! handle, and `Drop`.  All service/transport state guarded by these
+//! helpers is valid at every lock release (plain scalar/collection
+//! updates, no multi-step invariants spanning an unwind point), so the
+//! right recovery is to keep the data and continue: the originating job
+//! resolves `JobStatus::Failed`, the daemon lives.
+//!
+//! These helpers are also how the sfaudit panic-free-transport lint stays
+//! clean: `unwrap_or_else(PoisonError::into_inner)` is a distinct token
+//! from `.unwrap()`, and the burned-down files route every lock through
+//! here instead of carrying per-site exemptions in panic_allowlist.txt.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// `mutex.lock()` that recovers the guard from a poisoned lock instead of
+/// panicking.
+pub fn lock_unpoisoned<T>(mutex: &Mutex<T>) -> MutexGuard<'_, T> {
+    mutex.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `condvar.wait(guard)` that recovers the guard from a poisoned lock.
+pub fn wait_unpoisoned<'a, T>(
+    condvar: &Condvar,
+    guard: MutexGuard<'a, T>,
+) -> MutexGuard<'a, T> {
+    condvar.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `condvar.wait_timeout(guard, dur)` that recovers the guard from a
+/// poisoned lock.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    condvar: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    condvar
+        .wait_timeout(guard, dur)
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "lock must actually be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+    }
+
+    #[test]
+    fn wait_timeout_passes_through() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let g = lock_unpoisoned(&m);
+        let (_g, timed_out) = wait_timeout_unpoisoned(&cv, g, Duration::from_millis(1));
+        assert!(timed_out.timed_out());
+    }
+}

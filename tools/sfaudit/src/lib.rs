@@ -1,0 +1,1094 @@
+//! `sfaudit` — the repo-custom leakage-audit static-analysis pass.
+//!
+//! The privacy claim of a 2PC engine rests on a small, explicit
+//! declassification surface: the only places secret-shared values may
+//! become public are the `proto::open` family and the `reveal_*`
+//! backdoors.  This crate machine-checks that surface over `rust/src/**`
+//! with a hand-rolled token-level scanner (no external parser — the tool
+//! must build in the offline vendored environment) and enforces four
+//! invariants:
+//!
+//! 1. **open-audit** — every non-test call site of `open` / `open_many` /
+//!    `preopen_weight_deltas` / `reveal_*` must carry an adjacent
+//!    `// OPEN-AUDIT: <why this value is public-by-protocol>` annotation.
+//!    The annotated sites become the machine-readable inventory emitted to
+//!    `results/OPEN_AUDIT.json` — the reviewable declassification surface,
+//!    and the attachment points for the ROADMAP's SPDZ MAC-check tier.
+//! 2. **secret-display** — share-typed values (type names `Shared` /
+//!    `AuthenticatedShare`, or any identifier containing `share`) must not
+//!    reach `println!`/`eprintln!`/`format!`/`write!`/`dbg!` outside
+//!    `#[cfg(test)]`, unless the site carries a
+//!    `// SECRET-DISPLAY-OK: <why>` justification (the
+//!    `PrivacyMode::Debug`-gated allow hatch).  Inline format captures
+//!    (`"{share:?}"`) are caught too.
+//! 3. **panic-free-transport** — `.unwrap()` / `.expect(` / `panic!` /
+//!    `unreachable!` / `todo!` / `unimplemented!` are banned in non-test
+//!    code of the fallible wire/service layers ([`PANIC_FILES`]).  A
+//!    checked-in allowlist (`tools/sfaudit/panic_allowlist.txt`) may
+//!    exempt named sites, and it can only SHRINK: an entry that no longer
+//!    matches anything is itself an error.
+//! 4. **wire-deadline** — in the socket wire path ([`DEADLINE_FILES`]),
+//!    raw blocking `Read` calls (`.read(` / `.read_exact(` / …) may only
+//!    appear inside the deadline-aware helpers ([`DEADLINE_SAFE_FNS`]),
+//!    whose callers inherit the `SO_RCVTIMEO` policy `Chan::recv`
+//!    installs.  Everything else must route through the frame codec.
+//!
+//! The scanner is line-and-token exact but deliberately syntax-light: it
+//! masks strings/comments, tracks `#[cfg(test)]` item bodies by brace
+//! depth, and matches call shapes on the token stream.  False negatives
+//! are possible through sufficiently creative aliasing — the audit is a
+//! tripwire and an inventory, not a proof — but every *ordinary* use of
+//! the declassification API is caught, and the paired fixture tests pin
+//! the detector behavior per lint.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
+
+// ---------------------------------------------------------------------------
+// Policy configuration (the audited surface)
+// ---------------------------------------------------------------------------
+
+/// Declassification functions matched exactly (plus the [`DECLASSIFY_PREFIX`]
+/// family).  `open`/`open_many` only count as MPC opens when called bare or
+/// `proto::`-qualified — `File::open`, `JobJournal::open` and other
+/// `Type::open(..)` / `.open(..)` resolutions are unrelated.
+pub const DECLASSIFY_EXACT: &[&str] = &["open", "open_many", "preopen_weight_deltas"];
+
+/// Any called function starting with this prefix is a declassification
+/// point (e.g. `reveal_entropies`).
+pub const DECLASSIFY_PREFIX: &str = "reveal_";
+
+/// The annotation that turns a declassification call site from a violation
+/// into an inventoried, justified open.
+pub const OPEN_AUDIT_TAG: &str = "OPEN-AUDIT:";
+
+/// The annotation that exempts a display/format site from the
+/// secret-display lint (the `PrivacyMode::Debug`-gated hatch).
+pub const SECRET_DISPLAY_TAG: &str = "SECRET-DISPLAY-OK:";
+
+/// Files whose non-test code must be panic-free (the fallible transport /
+/// service layers: a panic here kills a worker or a party process instead
+/// of resolving `JobStatus::Failed`).
+pub const PANIC_FILES: &[&str] = &[
+    "rust/src/mpc/net.rs",
+    "rust/src/mpc/wire.rs",
+    "rust/src/mpc/faults.rs",
+    "rust/src/coordinator/service.rs",
+    "rust/src/coordinator/journal.rs",
+    "rust/src/coordinator/party.rs",
+];
+
+/// Banned method-call tokens in [`PANIC_FILES`] (matched as `.tok(`).
+pub const PANIC_METHODS: &[&str] = &["unwrap", "expect"];
+
+/// Banned macro tokens in [`PANIC_FILES`] (matched as `tok!`).
+pub const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Files on the socket wire path where raw blocking reads are audited.
+pub const DEADLINE_FILES: &[&str] = &["rust/src/mpc/wire.rs"];
+
+/// Functions inside [`DEADLINE_FILES`] allowed to issue raw `Read` calls:
+/// the single EOF-/timeout-aware fill loop every frame decode routes
+/// through.  Deadlines reach it via `SO_RCVTIMEO` (set in `recv`) so a
+/// stalled peer surfaces as `NetError::Timeout`, never a silent hang.
+pub const DEADLINE_SAFE_FNS: &[&str] = &["read_full"];
+
+/// Raw blocking read methods audited by the wire-deadline lint.
+pub const RAW_READ_METHODS: &[&str] =
+    &["read", "read_exact", "read_to_end", "read_to_string", "read_vectored"];
+
+/// Formatting/display macros audited by the secret-display lint.
+pub const FORMAT_MACROS: &[&str] =
+    &["println", "eprintln", "print", "eprint", "format", "write", "writeln", "dbg"];
+
+/// Share-typed names matched exactly by the secret-display lint.
+pub const SECRET_TYPE_NAMES: &[&str] = &["Shared", "AuthenticatedShare"];
+
+/// Case-insensitive identifier substring that marks a value as share-like.
+pub const SECRET_IDENT_SUBSTR: &str = "share";
+
+/// Default location of the panic allowlist, relative to the repo root.
+pub const PANIC_ALLOWLIST_REL: &str = "tools/sfaudit/panic_allowlist.txt";
+
+/// Default inventory output path, relative to the repo root.
+pub const INVENTORY_REL: &str = "results/OPEN_AUDIT.json";
+
+/// Source tree audited, relative to the repo root.
+pub const AUDIT_ROOT_REL: &str = "rust/src";
+
+// ---------------------------------------------------------------------------
+// Lexer: Rust source → tokens + per-line comment text
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum TokKind {
+    Ident,
+    Num,
+    /// String literal (cooked, raw, or byte); `text` keeps the body so
+    /// inline format captures (`"{share:?}"`) stay visible to lints.
+    Str,
+    Lifetime,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub text: String,
+    pub line: u32,
+    pub kind: TokKind,
+    /// Inside a `#[cfg(test)]` / `#[test]` item body.
+    pub in_test: bool,
+    /// Name of the innermost enclosing `fn`, if any.
+    pub in_fn: Option<String>,
+}
+
+/// Lexed view of one source file: the masked token stream plus the comment
+/// text per line (annotations live in comments, so they are kept aside
+/// rather than discarded).
+pub struct FileLex {
+    pub toks: Vec<Tok>,
+    pub comments: BTreeMap<u32, String>,
+}
+
+pub fn lex(src: &str) -> FileLex {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: BTreeMap<u32, String> = BTreeMap::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+
+    let push = |text: String, line: u32, kind: TokKind, toks: &mut Vec<Tok>| {
+        toks.push(Tok { text, line, kind, in_test: false, in_fn: None });
+    };
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // comments
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            let mut text = String::new();
+            while i < n && b[i] != '\n' {
+                text.push(b[i]);
+                i += 1;
+            }
+            comments.entry(line).or_default().push_str(&text);
+            continue;
+        }
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1;
+            let mut text = String::new();
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else if b[i] == '\n' {
+                    comments.entry(line).or_default().push_str(&text);
+                    text.clear();
+                    line += 1;
+                    i += 1;
+                } else {
+                    text.push(b[i]);
+                    i += 1;
+                }
+            }
+            comments.entry(line).or_default().push_str(&text);
+            continue;
+        }
+        // raw / byte strings: r"..", r#".."#, b"..", br#".."#
+        if (c == 'r' || c == 'b') && i + 1 < n {
+            let mut j = i + 1;
+            if c == 'b' && j < n && b[j] == 'r' {
+                j += 1;
+            }
+            let raw = b[i] == 'r' || (c == 'b' && i + 1 < n && b[i + 1] == 'r');
+            let mut hashes = 0usize;
+            while raw && j < n && b[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && b[j] == '"' && (raw || c == 'b') {
+                // raw or byte string literal
+                let start_line = line;
+                let mut text = String::new();
+                j += 1;
+                loop {
+                    if j >= n {
+                        break;
+                    }
+                    if b[j] == '\n' {
+                        line += 1;
+                        text.push('\n');
+                        j += 1;
+                        continue;
+                    }
+                    if !raw && b[j] == '\\' && j + 1 < n {
+                        // a `\` line continuation hides a real newline
+                        if b[j + 1] == '\n' {
+                            line += 1;
+                        }
+                        text.push(b[j]);
+                        text.push(b[j + 1]);
+                        j += 2;
+                        continue;
+                    }
+                    if b[j] == '"' {
+                        if raw {
+                            let mut k = 0usize;
+                            while k < hashes && j + 1 + k < n && b[j + 1 + k] == '#' {
+                                k += 1;
+                            }
+                            if k == hashes {
+                                j += 1 + hashes;
+                                break;
+                            }
+                            text.push(b[j]);
+                            j += 1;
+                            continue;
+                        }
+                        j += 1;
+                        break;
+                    }
+                    text.push(b[j]);
+                    j += 1;
+                }
+                push(text, start_line, TokKind::Str, &mut toks);
+                i = j;
+                continue;
+            }
+            // not a string — fall through to identifier lexing
+        }
+        if c == '"' {
+            let start_line = line;
+            let mut text = String::new();
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    // a `\` line continuation hides a real newline
+                    if b[i + 1] == '\n' {
+                        line += 1;
+                    }
+                    text.push(b[i]);
+                    text.push(b[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                }
+                text.push(b[i]);
+                i += 1;
+            }
+            push(text, start_line, TokKind::Str, &mut toks);
+            continue;
+        }
+        if c == '\'' {
+            // lifetime ('a) vs char literal ('x', '\n', '\u{..}')
+            let is_lifetime = i + 1 < n
+                && (b[i + 1].is_alphabetic() || b[i + 1] == '_')
+                && !(i + 2 < n && b[i + 2] == '\'');
+            if is_lifetime {
+                let mut j = i + 1;
+                let mut text = String::from("'");
+                while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                    text.push(b[j]);
+                    j += 1;
+                }
+                push(text, line, TokKind::Lifetime, &mut toks);
+                i = j;
+                continue;
+            }
+            let mut j = i + 1;
+            while j < n {
+                if b[j] == '\\' && j + 1 < n {
+                    if b[j + 1] == '\n' {
+                        line += 1;
+                    }
+                    j += 2;
+                    continue;
+                }
+                if b[j] == '\'' {
+                    j += 1;
+                    break;
+                }
+                if b[j] == '\n' {
+                    line += 1;
+                }
+                j += 1;
+            }
+            push(String::new(), line, TokKind::Str, &mut toks);
+            i = j;
+            continue;
+        }
+        if c.is_alphabetic() || c == '_' {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n && (b[j].is_alphanumeric() || b[j] == '_') {
+                text.push(b[j]);
+                j += 1;
+            }
+            push(text, line, TokKind::Ident, &mut toks);
+            i = j;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut j = i;
+            let mut text = String::new();
+            while j < n {
+                let d = b[j];
+                if d.is_alphanumeric() || d == '_' {
+                    text.push(d);
+                    j += 1;
+                } else if d == '.' && j + 1 < n && b[j + 1].is_ascii_digit() {
+                    text.push(d);
+                    j += 1;
+                } else {
+                    break;
+                }
+            }
+            push(text, line, TokKind::Num, &mut toks);
+            i = j;
+            continue;
+        }
+        push(c.to_string(), line, TokKind::Punct, &mut toks);
+        i += 1;
+    }
+
+    let mut fl = FileLex { toks, comments };
+    mark_test_regions(&mut fl.toks);
+    mark_enclosing_fns(&mut fl.toks);
+    fl
+}
+
+/// Mark tokens inside `#[cfg(test)]` / `#[test]`-attributed item bodies.
+/// Attribute → the next `{` opens the region; a `;` before any `{` means
+/// the attribute decorated a braceless item (e.g. `mod tests;`).
+fn mark_test_regions(toks: &mut [Tok]) {
+    let mut depth: u32 = 0;
+    let mut pending = false;
+    let mut regions: Vec<u32> = Vec::new();
+    let mut i = 0usize;
+    while i < toks.len() {
+        let is = |t: &Tok, s: &str| t.kind == TokKind::Punct && t.text == s;
+        if is(&toks[i], "#") && i + 1 < toks.len() && is(&toks[i + 1], "[") {
+            // scan the attribute to its matching `]`, looking for `test`
+            let mut j = i + 2;
+            let mut brackets = 1u32;
+            let mut has_test = false;
+            while j < toks.len() && brackets > 0 {
+                if is(&toks[j], "[") {
+                    brackets += 1;
+                } else if is(&toks[j], "]") {
+                    brackets -= 1;
+                } else if toks[j].kind == TokKind::Ident && toks[j].text == "test" {
+                    has_test = true;
+                }
+                toks[j].in_test = !regions.is_empty();
+                j += 1;
+            }
+            toks[i].in_test = !regions.is_empty();
+            if i + 1 < toks.len() {
+                toks[i + 1].in_test = !regions.is_empty();
+            }
+            if has_test {
+                pending = true;
+            }
+            i = j;
+            continue;
+        }
+        if is(&toks[i], "{") {
+            depth += 1;
+            if pending {
+                regions.push(depth);
+                pending = false;
+            }
+        } else if is(&toks[i], "}") {
+            if regions.last() == Some(&depth) {
+                regions.pop();
+            }
+            depth = depth.saturating_sub(1);
+        } else if is(&toks[i], ";") && pending {
+            pending = false;
+        }
+        toks[i].in_test = !regions.is_empty();
+        i += 1;
+    }
+}
+
+/// Record the innermost enclosing `fn` name on every token (for the
+/// wire-deadline lint's helper allowlist).
+fn mark_enclosing_fns(toks: &mut [Tok]) {
+    let mut depth: u32 = 0;
+    let mut stack: Vec<(String, u32)> = Vec::new();
+    let mut pending: Option<String> = None;
+    for i in 0..toks.len() {
+        toks[i].in_fn = stack.last().map(|(name, _)| name.clone());
+        let t = &toks[i];
+        if t.kind == TokKind::Ident && t.text == "fn" {
+            if let Some(next) = toks.get(i + 1) {
+                if next.kind == TokKind::Ident {
+                    pending = Some(next.text.clone());
+                }
+            }
+        } else if t.kind == TokKind::Punct && t.text == "{" {
+            depth += 1;
+            if let Some(name) = pending.take() {
+                stack.push((name, depth));
+            }
+        } else if t.kind == TokKind::Punct && t.text == "}" {
+            if stack.last().map(|(_, d)| *d) == Some(depth) {
+                stack.pop();
+            }
+            depth = depth.saturating_sub(1);
+        } else if t.kind == TokKind::Punct && t.text == ";" && pending.is_some() {
+            pending = None; // braceless decl (trait method signature)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Findings / report model
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Lint {
+    OpenAudit,
+    SecretDisplay,
+    PanicFree,
+    WireDeadline,
+    StaleAllowlist,
+}
+
+impl Lint {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lint::OpenAudit => "open-audit",
+            Lint::SecretDisplay => "secret-display",
+            Lint::PanicFree => "panic-free-transport",
+            Lint::WireDeadline => "wire-deadline",
+            Lint::StaleAllowlist => "stale-allowlist",
+        }
+    }
+}
+
+/// One lint violation (diagnostic span = file:line).
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub lint: Lint,
+    pub file: String,
+    pub line: u32,
+    pub message: String,
+}
+
+/// One justified declassification point — an inventory row.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OpenSite {
+    pub file: String,
+    pub line: u32,
+    pub call: String,
+    pub justification: String,
+}
+
+/// Aggregated audit result over a tree (or a single scanned source).
+#[derive(Default)]
+pub struct Report {
+    pub open_sites: Vec<OpenSite>,
+    pub findings: Vec<Finding>,
+    /// Allowlist entries that matched a real site (still present).
+    pub allow_used: BTreeSet<String>,
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn is_clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Panic allowlist
+// ---------------------------------------------------------------------------
+
+/// A checked-in exemption: `<file> <fn> <token>` per line, `#` comments.
+/// The list may only shrink — entries that no longer match anything are
+/// reported as [`Lint::StaleAllowlist`] findings by [`run_audit`].
+#[derive(Clone, Debug, Default)]
+pub struct Allowlist {
+    pub entries: Vec<(String, String, String)>,
+}
+
+impl Allowlist {
+    pub fn parse(text: &str) -> Allowlist {
+        let mut entries = Vec::new();
+        for raw in text.lines() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split_whitespace().collect();
+            if fields.len() == 3 {
+                entries.push((
+                    fields[0].to_string(),
+                    fields[1].to_string(),
+                    fields[2].to_string(),
+                ));
+            }
+        }
+        Allowlist { entries }
+    }
+
+    fn permits(&self, file: &str, func: Option<&str>, token: &str) -> Option<String> {
+        let func = func.unwrap_or("<top>");
+        for (f, fun, tok) in &self.entries {
+            if f == file && fun == func && tok == token {
+                return Some(format!("{f} {fun} {tok}"));
+            }
+        }
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Annotation lookup
+// ---------------------------------------------------------------------------
+
+/// Find an annotation tagged `tag` for a call at `line`: on the same line,
+/// or in the contiguous run of comment-bearing lines immediately above.
+/// Returns the justification text after the tag; when the tag sits above
+/// the call, the comment lines between the tag and the call are
+/// continuations and are folded into the justification.
+fn annotation_for(comments: &BTreeMap<u32, String>, line: u32, tag: &str) -> Option<String> {
+    let extract = |text: &str| -> Option<String> {
+        text.find(tag).map(|p| text[p + tag.len()..].trim().to_string())
+    };
+    if let Some(text) = comments.get(&line) {
+        if let Some(j) = extract(text) {
+            return Some(j);
+        }
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        match comments.get(&l) {
+            Some(text) => {
+                if let Some(mut j) = extract(text) {
+                    for cont in (l + 1)..line {
+                        if let Some(t) = comments.get(&cont) {
+                            let t = t.trim_start_matches('/').trim();
+                            if !t.is_empty() {
+                                if !j.is_empty() {
+                                    j.push(' ');
+                                }
+                                j.push_str(t);
+                            }
+                        }
+                    }
+                    return Some(j);
+                }
+                if l == 1 {
+                    break;
+                }
+                l -= 1;
+            }
+            None => break, // annotation block must touch the call site
+        }
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// The lint passes over one file
+// ---------------------------------------------------------------------------
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// Next non-trivia token index after `i` (the stream is already trivia
+/// free, so this is just `i+1`, kept for clarity).
+fn next(toks: &[Tok], i: usize) -> Option<&Tok> {
+    toks.get(i + 1)
+}
+
+fn prev(toks: &[Tok], i: usize) -> Option<&Tok> {
+    if i == 0 {
+        None
+    } else {
+        toks.get(i - 1)
+    }
+}
+
+/// Scan one source file (pure: path is only a label) against every lint.
+/// `rel` must be the repo-relative path with forward slashes, e.g.
+/// `rust/src/mpc/wire.rs` — the per-file lint scopes key off it.
+pub fn scan_source(rel: &str, src: &str, allow: &Allowlist) -> Report {
+    let fl = lex(src);
+    let toks = &fl.toks;
+    let mut rpt = Report { files_scanned: 1, ..Default::default() };
+
+    let panic_scoped = PANIC_FILES.contains(&rel);
+    let deadline_scoped = DEADLINE_FILES.contains(&rel);
+
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            i += 1;
+            continue;
+        }
+        let name = t.text.as_str();
+        let followed_by_paren = next(toks, i).map(|x| is_punct(x, "(")).unwrap_or(false);
+        let followed_by_bang = next(toks, i).map(|x| is_punct(x, "!")).unwrap_or(false);
+        let after_fn = prev(toks, i)
+            .map(|x| x.kind == TokKind::Ident && x.text == "fn")
+            .unwrap_or(false);
+        let after_dot = prev(toks, i).map(|x| is_punct(x, ".")).unwrap_or(false);
+        // `::`-qualified? (two Punct ':' tokens precede)
+        let after_colons = i >= 2 && is_punct(&toks[i - 1], ":") && is_punct(&toks[i - 2], ":");
+        let qualifier = if after_colons && i >= 3 { Some(toks[i - 3].text.as_str()) } else { None };
+
+        // ---- lint 1: open-audit -------------------------------------------
+        let declassify = (DECLASSIFY_EXACT.contains(&name) || name.starts_with(DECLASSIFY_PREFIX))
+            && followed_by_paren
+            && !after_fn
+            && !t.in_test;
+        if declassify {
+            // `open`/`open_many` resolve against many types (File::open,
+            // JobJournal::open, OpenOptions::open…): only bare calls and
+            // `proto::`-qualified paths are the MPC primitives.
+            let is_open_family = name == "open" || name == "open_many";
+            let counted = if is_open_family {
+                !after_dot && (!after_colons || qualifier == Some("proto"))
+            } else {
+                true
+            };
+            if counted {
+                match annotation_for(&fl.comments, t.line, OPEN_AUDIT_TAG) {
+                    Some(justification) if !justification.is_empty() => {
+                        rpt.open_sites.push(OpenSite {
+                            file: rel.to_string(),
+                            line: t.line,
+                            call: name.to_string(),
+                            justification,
+                        });
+                    }
+                    _ => rpt.findings.push(Finding {
+                        lint: Lint::OpenAudit,
+                        file: rel.to_string(),
+                        line: t.line,
+                        message: format!(
+                            "declassification call `{name}(..)` without an adjacent \
+                             `// {OPEN_AUDIT_TAG} <why public-by-protocol>` annotation"
+                        ),
+                    }),
+                }
+            }
+        }
+
+        // ---- lint 2: secret-display ---------------------------------------
+        if FORMAT_MACROS.contains(&name) && followed_by_bang && !t.in_test {
+            // arguments span from the opening delimiter to its match
+            if let Some(open_idx) = toks
+                .get(i + 2)
+                .filter(|x| x.kind == TokKind::Punct && "([{".contains(x.text.as_str()))
+                .map(|_| i + 2)
+            {
+                let (close, _) = matching_close(toks, open_idx);
+                let mut leak: Option<String> = None;
+                for arg in &toks[open_idx + 1..close.min(toks.len())] {
+                    match arg.kind {
+                        TokKind::Ident if ident_is_secret(&arg.text) => {
+                            leak = Some(arg.text.clone());
+                            break;
+                        }
+                        TokKind::Str => {
+                            if let Some(cap) = str_secret_capture(&arg.text) {
+                                leak = Some(cap);
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+                if let Some(what) = leak {
+                    if annotation_for(&fl.comments, t.line, SECRET_DISPLAY_TAG).is_none() {
+                        rpt.findings.push(Finding {
+                            lint: Lint::SecretDisplay,
+                            file: rel.to_string(),
+                            line: t.line,
+                            message: format!(
+                                "share-typed value `{what}` reaches `{name}!` — secret \
+                                 shares must not be displayed/formatted outside \
+                                 PrivacyMode::Debug (annotate `// {SECRET_DISPLAY_TAG} \
+                                 <why>` if protocol-legal)"
+                            ),
+                        });
+                    }
+                }
+                i = close;
+                continue;
+            }
+        }
+
+        // ---- lint 3: panic-free transport ---------------------------------
+        if panic_scoped && !t.in_test {
+            let panic_method = PANIC_METHODS.contains(&name) && followed_by_paren && after_dot;
+            let panic_macro = PANIC_MACROS.contains(&name) && followed_by_bang;
+            if panic_method || panic_macro {
+                let token_label =
+                    if panic_macro { format!("{name}!") } else { format!(".{name}()") };
+                match allow.permits(rel, t.in_fn.as_deref(), name) {
+                    Some(key) => {
+                        rpt.allow_used.insert(key);
+                    }
+                    None => rpt.findings.push(Finding {
+                        lint: Lint::PanicFree,
+                        file: rel.to_string(),
+                        line: t.line,
+                        message: format!(
+                            "`{token_label}` in fallible transport/service code (fn \
+                             `{}`) — return a typed error so the daemon resolves \
+                             JobStatus::Failed instead of dying; panic_allowlist.txt \
+                             may exempt it but can only shrink",
+                            t.in_fn.as_deref().unwrap_or("<top>")
+                        ),
+                    }),
+                }
+            }
+        }
+
+        // ---- lint 4: wire-deadline ----------------------------------------
+        if deadline_scoped
+            && !t.in_test
+            && RAW_READ_METHODS.contains(&name)
+            && followed_by_paren
+            && after_dot
+            && !t
+                .in_fn
+                .as_deref()
+                .map(|f| DEADLINE_SAFE_FNS.contains(&f))
+                .unwrap_or(false)
+        {
+            rpt.findings.push(Finding {
+                lint: Lint::WireDeadline,
+                file: rel.to_string(),
+                line: t.line,
+                message: format!(
+                    "raw blocking `.{name}(` in fn `{}` — wire-path reads must \
+                     route through the deadline-aware helpers ({}) so SO_RCVTIMEO \
+                     turns a stalled peer into NetError::Timeout",
+                    t.in_fn.as_deref().unwrap_or("<top>"),
+                    DEADLINE_SAFE_FNS.join(", ")
+                ),
+            });
+        }
+
+        i += 1;
+    }
+    rpt
+}
+
+/// Index of the delimiter matching `toks[open_idx]` (`(`/`[`/`{`), plus
+/// the nesting-aware span end.  Falls back to the end of stream.
+fn matching_close(toks: &[Tok], open_idx: usize) -> (usize, u32) {
+    let open = toks[open_idx].text.as_str();
+    let close = match open {
+        "(" => ")",
+        "[" => "]",
+        _ => "}",
+    };
+    let mut depth = 0i32;
+    for (j, t) in toks.iter().enumerate().skip(open_idx) {
+        if t.kind == TokKind::Punct {
+            if "([{".contains(t.text.as_str()) {
+                depth += 1;
+            } else if ")]}".contains(t.text.as_str()) {
+                depth -= 1;
+                if depth == 0 && t.text == close {
+                    return (j, t.line);
+                }
+                if depth == 0 {
+                    return (j, t.line);
+                }
+            }
+        }
+    }
+    (toks.len(), toks.last().map(|t| t.line).unwrap_or(0))
+}
+
+fn ident_is_secret(name: &str) -> bool {
+    SECRET_TYPE_NAMES.contains(&name) || name.to_ascii_lowercase().contains(SECRET_IDENT_SUBSTR)
+}
+
+/// Inline format captures: `"{share}"` / `"{ent_shares:?}"` →
+/// `Some("ent_shares")` when the captured name is share-like.
+fn str_secret_capture(body: &str) -> Option<String> {
+    let bytes: Vec<char> = body.chars().collect();
+    let mut i = 0usize;
+    while i < bytes.len() {
+        if bytes[i] == '{' {
+            if i + 1 < bytes.len() && bytes[i + 1] == '{' {
+                i += 2; // escaped brace
+                continue;
+            }
+            let mut name = String::new();
+            let mut j = i + 1;
+            while j < bytes.len() && (bytes[j].is_alphanumeric() || bytes[j] == '_') {
+                name.push(bytes[j]);
+                j += 1;
+            }
+            if !name.is_empty()
+                && j < bytes.len()
+                && (bytes[j] == '}' || bytes[j] == ':')
+                && ident_is_secret(&name)
+            {
+                return Some(name);
+            }
+            i = j + 1;
+            continue;
+        }
+        i += 1;
+    }
+    None
+}
+
+// ---------------------------------------------------------------------------
+// Tree walk + aggregation
+// ---------------------------------------------------------------------------
+
+/// Collect `.rs` files under `dir`, sorted for deterministic output.
+pub fn collect_rs_files(dir: &Path) -> std::io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        for entry in std::fs::read_dir(&d)? {
+            let path = entry?.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+                out.push(path);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Run the full audit over `<root>/rust/src/**`, checking the panic
+/// allowlist at `<root>/tools/sfaudit/panic_allowlist.txt` (absent file =
+/// empty list) and flagging stale entries.  Pure scan — writing the
+/// inventory is the caller's choice via [`render_inventory_json`].
+pub fn run_audit(root: &Path) -> std::io::Result<Report> {
+    let allow_text =
+        std::fs::read_to_string(root.join(PANIC_ALLOWLIST_REL)).unwrap_or_default();
+    let allow = Allowlist::parse(&allow_text);
+    let src_root = root.join(AUDIT_ROOT_REL);
+    if !src_root.is_dir() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            format!("audit root {} not found under {}", AUDIT_ROOT_REL, root.display()),
+        ));
+    }
+    let mut report = Report::default();
+    for path in collect_rs_files(&src_root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = std::fs::read_to_string(&path)?;
+        let file_rpt = scan_source(&rel, &src, &allow);
+        report.open_sites.extend(file_rpt.open_sites);
+        report.findings.extend(file_rpt.findings);
+        report.allow_used.extend(file_rpt.allow_used);
+        report.files_scanned += 1;
+    }
+    // shrink-only allowlist: every surviving entry must still match a site
+    for (f, fun, tok) in &allow.entries {
+        let key = format!("{f} {fun} {tok}");
+        if !report.allow_used.contains(&key) {
+            report.findings.push(Finding {
+                lint: Lint::StaleAllowlist,
+                file: PANIC_ALLOWLIST_REL.to_string(),
+                line: 0,
+                message: format!(
+                    "allowlist entry `{key}` matches no remaining site — the \
+                     allowlist may only shrink; delete the line"
+                ),
+            });
+        }
+    }
+    report.findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.lint.name()).cmp(&(b.file.as_str(), b.line, b.lint.name()))
+    });
+    report.open_sites.sort_by(|a, b| (a.file.as_str(), a.line).cmp(&(b.file.as_str(), b.line)));
+    Ok(report)
+}
+
+// ---------------------------------------------------------------------------
+// Inventory emission (hand-rolled JSON — no serde in the offline set)
+// ---------------------------------------------------------------------------
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `results/OPEN_AUDIT.json`: the machine-readable declassification
+/// inventory.  Deterministic (sorted, no timestamps) so it can be diffed
+/// and snapshot-tested.
+pub fn render_inventory_json(report: &Report) -> String {
+    let mut counts: BTreeMap<&str, usize> = BTreeMap::new();
+    for site in &report.open_sites {
+        *counts.entry(site.call.as_str()).or_default() += 1;
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"version\": 1,\n");
+    out.push_str("  \"tool\": \"sfaudit\",\n");
+    out.push_str(&format!("  \"files_scanned\": {},\n", report.files_scanned));
+    out.push_str(&format!(
+        "  \"declassification_api\": [{}],\n",
+        DECLASSIFY_EXACT
+            .iter()
+            .map(|f| format!("\"{f}\""))
+            .chain(std::iter::once(format!("\"{DECLASSIFY_PREFIX}*\"")))
+            .collect::<Vec<_>>()
+            .join(", ")
+    ));
+    out.push_str("  \"counts\": {");
+    let count_rows: Vec<String> =
+        counts.iter().map(|(k, v)| format!("\"{}\": {}", json_escape(k), v)).collect();
+    out.push_str(&count_rows.join(", "));
+    out.push_str("},\n");
+    out.push_str("  \"open_sites\": [\n");
+    let rows: Vec<String> = report
+        .open_sites
+        .iter()
+        .map(|s| {
+            format!(
+                "    {{\"file\": \"{}\", \"line\": {}, \"call\": \"{}\", \
+                 \"justification\": \"{}\"}}",
+                json_escape(&s.file),
+                s.line,
+                json_escape(&s.call),
+                json_escape(&s.justification)
+            )
+        })
+        .collect();
+    out.push_str(&rows.join(",\n"));
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Locate the repo root: walk up from `start` until a directory containing
+/// [`AUDIT_ROOT_REL`] is found.
+pub fn find_root(start: &Path) -> Option<PathBuf> {
+    let mut dir = Some(start.to_path_buf());
+    while let Some(d) = dir {
+        if d.join(AUDIT_ROOT_REL).is_dir() {
+            return Some(d);
+        }
+        dir = d.parent().map(|p| p.to_path_buf());
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_masks_strings_and_keeps_comments() {
+        let fl = lex("let x = \"open(ctx)\"; // OPEN-AUDIT: nope\nfoo();");
+        assert!(fl.toks.iter().all(|t| t.text != "ctx"));
+        assert!(fl.comments.get(&1).map(|c| c.contains("OPEN-AUDIT:")).unwrap_or(false));
+        let idents: Vec<&str> = fl
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "x", "foo"]);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_marked() {
+        let src = "fn live() { open(ctx, x); }\n#[cfg(test)]\nmod tests {\n  \
+                   fn t() { open(ctx, x); }\n}\n";
+        let fl = lex(src);
+        let opens: Vec<&Tok> =
+            fl.toks.iter().filter(|t| t.kind == TokKind::Ident && t.text == "open").collect();
+        assert_eq!(opens.len(), 2);
+        assert!(!opens[0].in_test);
+        assert!(opens[1].in_test);
+    }
+
+    #[test]
+    fn enclosing_fn_names_are_tracked() {
+        let src = "fn outer() { let c = |x| { inner_call(); }; }\nfn other() {}";
+        let fl = lex(src);
+        let call = fl.toks.iter().find(|t| t.text == "inner_call").expect("tok");
+        assert_eq!(call.in_fn.as_deref(), Some("outer"));
+    }
+
+    #[test]
+    fn inline_format_captures_are_seen() {
+        assert_eq!(str_secret_capture("{avg_share:?}"), Some("avg_share".into()));
+        assert_eq!(str_secret_capture("plain {count}"), None);
+        assert_eq!(str_secret_capture("{{share}} escaped"), None);
+    }
+
+    #[test]
+    fn nested_block_comments_and_raw_strings_lex() {
+        let fl = lex("/* a /* b */ c */ let r = r#\"open(\"#; let s = b\"x\";");
+        let idents: Vec<&str> = fl
+            .toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, vec!["let", "r", "let", "s"]);
+    }
+
+    #[test]
+    fn string_line_continuations_keep_line_numbers() {
+        // a `\` at end of line inside a cooked string is a line
+        // continuation: the newline is consumed by the escape branch, and
+        // must still advance the line counter or every later diagnostic
+        // drifts upward
+        let fl = lex("let m = \"split \\\n    message\";\nlet after = 1;\n");
+        let after = fl
+            .toks
+            .iter()
+            .find(|t| t.kind == TokKind::Ident && t.text == "after")
+            .expect("ident after");
+        assert_eq!(after.line, 3);
+    }
+}

@@ -1,0 +1,112 @@
+//! `sfaudit` CLI: run the leakage audit over the repo tree.
+//!
+//! Exit codes: 0 = clean (inventory written), 1 = lint findings,
+//! 2 = usage / IO error.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "\
+sfaudit — SelectFormer leakage audit (declassification inventory + transport lints)
+
+USAGE:
+  sfaudit [--root <repo-root>] [--out <inventory.json>] [--quiet]
+
+OPTIONS:
+  --root <dir>   Repo root (contains rust/src). Default: auto-discover by
+                 walking up from the current directory.
+  --out <file>   Where to write the declassification inventory.
+                 Default: <root>/results/OPEN_AUDIT.json
+  --quiet        Suppress the per-site inventory summary on stdout.
+";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("sfaudit: error: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<ExitCode, String> {
+    let mut root: Option<PathBuf> = None;
+    let mut out: Option<PathBuf> = None;
+    let mut quiet = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => {
+                root = Some(PathBuf::from(
+                    it.next().ok_or("--root requires a value")?,
+                ))
+            }
+            "--out" => {
+                out = Some(PathBuf::from(it.next().ok_or("--out requires a value")?))
+            }
+            "--quiet" | "-q" => quiet = true,
+            "--help" | "-h" => {
+                print!("{USAGE}");
+                return Ok(ExitCode::SUCCESS);
+            }
+            other => return Err(format!("unknown argument `{other}`\n\n{USAGE}")),
+        }
+    }
+
+    let root = match root {
+        Some(r) => r,
+        None => {
+            let cwd = std::env::current_dir().map_err(|e| e.to_string())?;
+            sfaudit::find_root(&cwd).ok_or_else(|| {
+                format!(
+                    "could not find a repo root containing `{}` above {}; pass --root",
+                    sfaudit::AUDIT_ROOT_REL,
+                    cwd.display()
+                )
+            })?
+        }
+    };
+
+    let report = sfaudit::run_audit(&root).map_err(|e| e.to_string())?;
+
+    if !quiet {
+        println!(
+            "sfaudit: scanned {} files under {}/{}",
+            report.files_scanned,
+            root.display(),
+            sfaudit::AUDIT_ROOT_REL
+        );
+        println!(
+            "sfaudit: {} justified declassification site(s):",
+            report.open_sites.len()
+        );
+        for s in &report.open_sites {
+            println!("  {}:{}  {}(..)  — {}", s.file, s.line, s.call, s.justification);
+        }
+    }
+
+    for f in &report.findings {
+        eprintln!("sfaudit[{}] {}:{}: {}", f.lint.name(), f.file, f.line, f.message);
+    }
+
+    if report.is_clean() {
+        let out_path = out.unwrap_or_else(|| root.join(sfaudit::INVENTORY_REL));
+        if let Some(dir) = out_path.parent() {
+            std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+        }
+        std::fs::write(&out_path, sfaudit::render_inventory_json(&report))
+            .map_err(|e| e.to_string())?;
+        if !quiet {
+            println!("sfaudit: clean — inventory written to {}", out_path.display());
+        }
+        Ok(ExitCode::SUCCESS)
+    } else {
+        eprintln!(
+            "sfaudit: {} finding(s); inventory NOT written",
+            report.findings.len()
+        );
+        Ok(ExitCode::FAILURE)
+    }
+}

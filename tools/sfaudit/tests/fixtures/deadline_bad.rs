@@ -1,0 +1,11 @@
+// Fixture: raw blocking read outside the deadline-aware helper — flagged
+// when scanned under a DEADLINE_FILES path label.
+fn sneaky_read(sock: &mut TcpStream, buf: &mut [u8]) -> std::io::Result<()> {
+    sock.read_exact(buf)
+}
+
+fn drain(sock: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut out = Vec::new();
+    sock.read_to_end(&mut out)?;
+    Ok(out)
+}

@@ -1,0 +1,28 @@
+// Fixture: the blessed deadline-aware fill loop plus codec-level callers
+// that never touch the raw socket.
+fn read_full(r: &mut dyn Read, buf: &mut [u8], op: &str) -> NetResult<()> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        let n = r.read(&mut buf[filled..]).map_err(|e| classify(e, op))?;
+        if n == 0 {
+            return Err(NetError::PeerClosed);
+        }
+        filled += n;
+    }
+    Ok(())
+}
+
+fn read_frame(r: &mut dyn Read) -> NetResult<Frame> {
+    let mut header = [0u8; 8];
+    read_full(r, &mut header, "frame_header")?;
+    decode(&header)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn raw_reads_in_tests_are_fine() {
+        let mut buf = [0u8; 4];
+        cursor.read_exact(&mut buf).unwrap();
+    }
+}

@@ -1,0 +1,23 @@
+// Fixture: unannotated declassification calls — every one must be flagged.
+use crate::mpc::proto::{open, open_many, Shared};
+
+pub fn leak_one(ctx: &mut PartyCtx, x: &Shared) -> Result<TensorR, NetError> {
+    let v = open(ctx, x)?; // no OPEN-AUDIT tag
+    Ok(v)
+}
+
+pub fn leak_many(ctx: &mut PartyCtx, xs: &[Shared]) -> Result<Vec<TensorR>, NetError> {
+    open_many(ctx, xs)
+}
+
+pub fn leak_qualified(ctx: &mut PartyCtx, x: &Shared) -> Result<TensorR, NetError> {
+    crate::mpc::proto::open(ctx, x)
+}
+
+pub fn leak_reveal(opts: &Opts) -> bool {
+    opts.privacy.reveal_entropies()
+}
+
+pub fn leak_preopen(ctx: &mut PartyCtx, ws: &mut Weights) -> Result<(), NetError> {
+    preopen_weight_deltas(ctx, ws)
+}

@@ -1,0 +1,40 @@
+// Fixture: every declassification is annotated, and look-alike `open`
+// resolutions (File::open, .open(), fn definitions) are not counted.
+use crate::mpc::proto::{open, Shared};
+use std::fs::File;
+
+pub fn fine_same_line(ctx: &mut PartyCtx, g: &Shared) -> Result<TensorR, NetError> {
+    open(ctx, g) // OPEN-AUDIT: comparison outcome bit is the protocol's public output
+}
+
+pub fn fine_block_above(ctx: &mut PartyCtx, xs: &[Shared]) -> Result<Vec<TensorR>, NetError> {
+    // The pivot coin is sampled jointly and published to both parties.
+    // OPEN-AUDIT: public randomness; independent of any secret input
+    open_many(ctx, xs)
+}
+
+pub fn fine_multiline(ctx: &mut PartyCtx, ws: &mut Weights) -> Result<(), NetError> {
+    // OPEN-AUDIT: masked deltas are uniformly random under the one-time pad
+    preopen_weight_deltas(
+        ctx,
+        ws,
+    )
+}
+
+pub fn open(this_is_a_definition: u32) -> u32 {
+    this_is_a_definition
+}
+
+pub fn not_declassification(path: &str, j: &JobJournal) -> std::io::Result<File> {
+    let _ = j.open();
+    let _ = JobJournal::open(path);
+    File::open(path)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_only_open_needs_no_tag() {
+        let _ = open(ctx, &x).unwrap();
+    }
+}

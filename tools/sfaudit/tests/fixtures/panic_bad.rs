@@ -1,0 +1,14 @@
+// Fixture: panics in fallible transport code — flagged when scanned under
+// a PANIC_FILES path label.
+pub fn send_frame(&self, data: Vec<u8>) -> NetResult<()> {
+    let tx = self.tx.as_ref().unwrap();
+    tx.send(data).expect("writer queue alive");
+    Ok(())
+}
+
+pub fn decode(kind: u8) -> Frame {
+    match kind {
+        0 => Frame::Data,
+        _ => panic!("unknown frame kind"),
+    }
+}

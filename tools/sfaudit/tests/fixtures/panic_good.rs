@@ -1,0 +1,25 @@
+// Fixture: conforming transport code — typed errors, poison-tolerant
+// locking, and test-only unwraps.
+pub fn send_frame(&self, data: Vec<u8>) -> NetResult<()> {
+    match self.tx.as_ref() {
+        Some(tx) => tx.send(data).map_err(|_| NetError::PeerClosed),
+        None => Err(NetError::PeerClosed),
+    }
+}
+
+pub fn lock_state(&self) -> MutexGuard<'_, State> {
+    self.state.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+pub fn parse(v: Option<u8>) -> u8 {
+    v.unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        let t = make_transport().unwrap();
+        t.send_frame(vec![1]).expect("send");
+    }
+}

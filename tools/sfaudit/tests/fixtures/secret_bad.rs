@@ -1,0 +1,12 @@
+// Fixture: share-typed values reaching display/format macros — flagged.
+pub fn log_positional(share: &Shared) {
+    println!("state = {:?}", share);
+}
+
+pub fn log_inline_capture(ent_share: &Shared) {
+    eprintln!("debug {ent_share:?}");
+}
+
+pub fn into_journal(avg_share: &Shared) -> String {
+    format!("record {avg_share}")
+}

@@ -1,0 +1,23 @@
+// Fixture: conforming display usage — public values, an annotated
+// Debug-gated site, and test-only prints.
+pub fn log_public(count: usize, survivors: &[u32]) {
+    println!("selected {count} of {:?}", survivors);
+}
+
+pub fn debug_gated(share: &Shared) {
+    // SECRET-DISPLAY-OK: PrivacyMode::Debug capture path; caller gates on mode
+    eprintln!("debug share = {share:?}");
+}
+
+pub fn escaped_braces() {
+    println!("literal {{share}} is not a capture");
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_prints_are_fine() {
+        let share = Shared(TensorR::zeros(&[1]));
+        println!("{share:?}");
+    }
+}
