@@ -8,7 +8,7 @@
 use std::sync::Arc;
 use std::time::Instant;
 
-use selectformer::benchkit::{banner, write_bench_json, write_tsv, BenchRow};
+use selectformer::benchkit::{banner, require_rows, write_bench_json, write_tsv, BenchRow};
 use selectformer::coordinator::{
     testutil, PhaseSchedule, ProxySpec, RuntimeProfile, SelectionJob,
     SelectionService,
@@ -429,13 +429,101 @@ fn bench_faults() -> Vec<BenchRow> {
     ]
 }
 
+/// Telemetry cost + snapshot: the same tiny 1-phase selection with
+/// collection OFF vs ON (min-of-3 wall each), gated at <2% overhead, and
+/// the ON runs' wire/dealer counter totals persisted as rows so the
+/// instrument itself is part of the diffable trajectory.
+fn bench_telemetry() -> Vec<BenchRow> {
+    use selectformer::runtime::telemetry;
+    let dir = std::env::temp_dir().join("sf_bench_telemetry");
+    let proxy = dir.join("proxy.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+    let ds = synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        128,
+        false,
+        9,
+    );
+    let timed = || -> f64 {
+        let outcome = SelectionJob::builder([proxy.as_path()], &ds)
+            .keep_counts(vec![32])
+            .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+            .job_tag(1)
+            .build()
+            .expect("telemetry bench job")
+            .run()
+            .expect("telemetry bench outcome");
+        assert_eq!(outcome.selected.len(), 32);
+        outcome.total_wall_s()
+    };
+    let min3 = |f: &dyn Fn() -> f64| (0..3).map(|_| f()).fold(f64::INFINITY, f64::min);
+    telemetry::set_enabled(false);
+    let off = min3(&timed);
+    telemetry::reset();
+    telemetry::set_enabled(true);
+    let on = min3(&timed);
+    telemetry::set_enabled(false);
+    let pct = (on / off - 1.0) * 100.0;
+    assert!(
+        pct < 2.0,
+        "telemetry-on overhead {pct:.2}% exceeds the 2% gate (off {off:.3}s, on {on:.3}s)"
+    );
+    let mut table = Table::new(
+        "telemetry overhead (1-phase job, 128 candidates, min of 3)",
+        &["collection", "wall", "overhead"],
+    );
+    table.row(vec!["off".into(), format!("{:.3} s", off), "-".into()]);
+    table.row(vec!["on".into(), format!("{:.3} s", on), format!("{pct:.2}%")]);
+    table.print();
+    let mut rows = vec![
+        BenchRow::new("telemetry_overhead", &format!("pct={pct:.2}"), 1, (on - off).max(0.0) * 1e9),
+        BenchRow::new("telemetry_off_wall", "n=128,batch=16", 1, off * 1e9),
+        BenchRow::new("telemetry_on_wall", "n=128,batch=16", 1, on * 1e9),
+    ];
+    // merged snapshot: what the ON runs actually counted (3 runs' worth)
+    let snaps: [(&str, u64); 5] = [
+        ("telemetry_snap_wire_tx_bytes", telemetry::counter_total(telemetry::WIRE_TX_BYTES)),
+        ("telemetry_snap_wire_tx_frames", telemetry::counter_total(telemetry::WIRE_TX_FRAMES)),
+        ("telemetry_snap_half_rounds", telemetry::counter_total(telemetry::WIRE_HALF_ROUNDS)),
+        ("telemetry_snap_dealer_triples", telemetry::counter_total(telemetry::DEALER_TRIPLES)),
+        (
+            "telemetry_snap_send_frames_observed",
+            telemetry::histogram_total_count(telemetry::WIRE_SEND_FRAME_BYTES),
+        ),
+    ];
+    for (op, v) in snaps {
+        rows.push(BenchRow::new(op, "3 runs, n=128,batch=16", 1, v as f64));
+    }
+    telemetry::reset();
+    rows
+}
+
 fn main() {
     banner("microbench", "2PC primitive throughput (local wall-clock, per call)");
     let gemm_rows = bench_gemm();
+    require_rows("BENCH_gemm", &gemm_rows, &["gemm_seed_scalar", "gemm_packed"]);
     write_bench_json("BENCH_gemm", &gemm_rows);
     let mut e2e_rows = bench_e2e();
     e2e_rows.extend(bench_queue());
     e2e_rows.extend(bench_faults());
+    e2e_rows.extend(bench_telemetry());
+    require_rows(
+        "BENCH_e2e",
+        &e2e_rows,
+        &[
+            "select_2phase_serial",
+            "select_2phase_pipelined",
+            "select_2phase_overlapped",
+            "select_2phase_setup_hidden",
+            "select_2phase_tcp_loopback",
+            "service_queue_throughput",
+            "service_queue_latency_p50",
+            "service_queue_latency_p95",
+            "retry_overhead",
+            "journal_replay_ms",
+            "telemetry_overhead",
+        ],
+    );
     write_bench_json("BENCH_e2e", &e2e_rows);
     let mut t = Table::new(
         "MPC primitives",

@@ -1,0 +1,51 @@
+//! Produce the sample observability artifacts CI uploads: run a small
+//! job manifest through the REAL `selectformer serve` code path with
+//! telemetry enabled, leaving behind a Chrome/Perfetto trace
+//! (`trace.json`, loadable in ui.perfetto.dev) and a Prometheus text
+//! snapshot (`metrics.prom`, exactly what `--metrics` serves over HTTP).
+//! Standalone (no artifacts needed).
+//!
+//!     cargo run --release --example telemetry_export -- [out_dir]
+
+use selectformer::coordinator::testutil;
+
+fn main() -> anyhow::Result<()> {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "results".into());
+    let out = std::path::PathBuf::from(arg);
+    std::fs::create_dir_all(&out)?;
+    let dir = std::env::temp_dir().join("sf_telemetry_export");
+    let proxy = dir.join("proxy.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 96, 2, 8);
+    let manifest = dir.join("jobs.txt");
+    let line = format!("proxies={} synth=96 keep=24 tag=1 batch=16 lanes=2\n", proxy.display());
+    std::fs::write(&manifest, line)?;
+
+    let trace = out.join("trace.json");
+    let snapshot = out.join("metrics.prom");
+    let argv: Vec<String> = [
+        "serve",
+        "--jobs",
+        manifest.to_str().expect("temp path is utf8"),
+        "--metrics",
+        "127.0.0.1:0",
+        "--metrics-snapshot",
+        snapshot.to_str().expect("out path is utf8"),
+        "--trace",
+        trace.to_str().expect("out path is utf8"),
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+    selectformer::cli::run(&argv)?;
+
+    // the artifacts must exist and carry their expected markers
+    let prom = std::fs::read_to_string(&snapshot)?;
+    anyhow::ensure!(
+        prom.contains("sf_wire_tx_bytes_total"),
+        "metrics snapshot is missing the wire counters:\n{prom}"
+    );
+    let tr = std::fs::read_to_string(&trace)?;
+    anyhow::ensure!(tr.contains("\"ph\":\"X\""), "trace has no span events");
+    println!("telemetry artifacts: {} {}", trace.display(), snapshot.display());
+    Ok(())
+}

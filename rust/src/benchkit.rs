@@ -98,15 +98,25 @@ pub fn banner(name: &str, what: &str) {
     println!("================================================================");
 }
 
+/// The repo-root `results/` directory, anchored to the crate manifest so
+/// bench output lands in the SAME place no matter which directory `cargo
+/// bench` runs from.  The old cwd-relative `results/` silently scattered
+/// (or dropped) the trajectory files when benches ran from the workspace
+/// root — which is why results/BENCH_*.json stayed empty for several PRs.
+pub fn results_dir() -> std::path::PathBuf {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../results")).to_path_buf()
+}
+
 /// Write rows to results/<name>.tsv for EXPERIMENTS.md.
 pub fn write_tsv(name: &str, header: &[&str], rows: &[Vec<String>]) {
     let mut s = header.join("\t") + "\n";
     for r in rows {
         s += &(r.join("\t") + "\n");
     }
-    let dir = std::path::Path::new("results");
-    let _ = std::fs::create_dir_all(dir);
-    let _ = std::fs::write(dir.join(format!("{name}.tsv")), s);
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir).expect("create results/");
+    let path = dir.join(format!("{name}.tsv"));
+    std::fs::write(&path, s).unwrap_or_else(|e| panic!("write {path:?}: {e}"));
 }
 
 /// One measured row of a perf-trajectory bench (results/BENCH_*.json) —
@@ -163,8 +173,11 @@ pub fn phase_breakdown_rows(
 }
 
 /// Write perf rows to results/<name>.json (hand-rolled JSON — the offline
-/// crate set has no serde; fields are flat strings/numbers).
+/// crate set has no serde; fields are flat strings/numbers).  Fails loudly:
+/// an empty row set or an unwritable results/ is a broken bench, not a
+/// shrug — the trajectory files are the whole point of the perf pass.
 pub fn write_bench_json(name: &str, rows: &[BenchRow]) {
+    assert!(!rows.is_empty(), "bench {name}: refusing to write an empty trajectory");
     let mut s = String::from("[\n");
     for (i, r) in rows.iter().enumerate() {
         s.push_str(&format!(
@@ -177,7 +190,21 @@ pub fn write_bench_json(name: &str, rows: &[BenchRow]) {
         ));
     }
     s.push_str("]\n");
-    let dir = std::path::Path::new("results");
-    let _ = std::fs::create_dir_all(dir);
-    let _ = std::fs::write(dir.join(format!("{name}.json")), s);
+    let dir = results_dir();
+    std::fs::create_dir_all(&dir).expect("create results/");
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, s).unwrap_or_else(|e| panic!("write {path:?}: {e}"));
+    println!("wrote {}", path.display());
+}
+
+/// Assert every required op name produced at least one row — a refactor
+/// that silently stops emitting a tracked series must FAIL the bench run,
+/// not ship a hole in the trajectory.
+pub fn require_rows(name: &str, rows: &[BenchRow], required: &[&str]) {
+    for op in required {
+        assert!(
+            rows.iter().any(|r| r.op == *op),
+            "bench {name}: required row `{op}` is missing"
+        );
+    }
 }

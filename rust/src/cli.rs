@@ -16,7 +16,9 @@
 //!                      [--specs "1:1:2,3:4:16"] [--steps 600] [--quick]
 //!                      [--seed N] [--out proxies/]
 //! selectformer serve   --jobs <manifest> [--workers 2] [--queue 4]
-//!                      [--progress] [--journal jobs.wal]
+//!                      [--progress] [--journal jobs.wal] [--stall-warn 30]
+//!                      [--metrics host:port] [--metrics-snapshot out.prom]
+//!                      [--trace out.json]
 //! selectformer audit   [--root <repo>] [--out inventory.json] [--quiet]
 //! selectformer party   --listen <host:port|unix:path> | --connect <addr>
 //!                      --proxies p1.sfw[;p2.sfw…] | --data corpus.bin | --synth N
@@ -127,7 +129,10 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             boolean: &["quick"],
         },
         "serve" => CmdSpec {
-            value: &["jobs", "workers", "queue", "journal"],
+            value: &[
+                "jobs", "workers", "queue", "journal", "stall-warn", "metrics",
+                "metrics-snapshot", "trace",
+            ],
             boolean: &["progress"],
         },
         "audit" => CmdSpec { value: &["root", "out"], boolean: &["quiet"] },
@@ -562,17 +567,34 @@ fn serve_job_from(line: &str) -> Result<crate::coordinator::SelectionJob<'static
 /// resubmitted first (previously in-flight ones stamped as retries).
 fn cmd_serve(args: &Args) -> Result<()> {
     use crate::coordinator::{Cancelled, JobJournal, JobUpdate, SelectionService};
+    use crate::runtime::{telemetry, trace};
     use std::sync::mpsc::RecvTimeoutError;
     use std::time::Duration;
-
-    /// No event for this long ⇒ the printer checks whether the job is
-    /// merely slow or wedged and says so (`JobHandle::wait_for` below
-    /// gives the same periodic check during final resolution).
-    const STALL_WARN: Duration = Duration::from_secs(30);
 
     let workers = args.usize_or("workers", 2)?;
     let queue = args.usize_or("queue", workers.max(1) * 2)?;
     let progress = args.has("progress");
+    // no event for this long ⇒ the printer synthesizes JobUpdate::Stalled
+    // (`JobHandle::wait_for` below gives the same periodic check during
+    // final resolution)
+    let stall_secs = args.usize_or("stall-warn", 30)?;
+    ensure!(stall_secs > 0, "--stall-warn must be at least 1 second");
+    let stall_warn = Duration::from_secs(stall_secs as u64);
+    // any telemetry sink turns collection on for the whole process
+    let trace_path = args.get("trace").map(PathBuf::from);
+    let snapshot_path = args.get("metrics-snapshot").map(PathBuf::from);
+    if args.has("metrics") || trace_path.is_some() || snapshot_path.is_some() {
+        telemetry::set_enabled(true);
+    }
+    let _metrics_server = match args.get("metrics") {
+        Some(addr) => {
+            let server = telemetry::MetricsServer::bind(addr)
+                .with_context(|| format!("--metrics {addr}"))?;
+            println!("metrics: http://{}/metrics", server.local_addr());
+            Some(server)
+        }
+        None => None,
+    };
 
     // journal replay first: unfinished jobs from a previous incarnation
     // run before anything new, in their original submission order
@@ -681,23 +703,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         printers.push(std::thread::spawn(move || -> bool {
             let mut started = false;
             loop {
-                let update = match events.recv_timeout(STALL_WARN) {
+                let update = match events.recv_timeout(stall_warn) {
                     Ok(update) => update,
                     Err(RecvTimeoutError::Timeout) => {
-                        let status = handle.status();
-                        if status.is_terminal() {
+                        if handle.status().is_terminal() {
                             break;
                         }
-                        println!(
-                            "[job {id}] no event for {}s (status {status:?}) — \
-                             possible stall",
-                            STALL_WARN.as_secs()
-                        );
-                        continue;
+                        // synthesized consumer-side; routes through the
+                        // same printer match as real updates
+                        JobUpdate::Stalled { seconds: stall_warn.as_secs() }
                     }
                     Err(RecvTimeoutError::Disconnected) => break,
                 };
-                if !started {
+                // a synthesized stall is not a worker claim — only real
+                // job events stamp the journal start record
+                if !started && !matches!(update, JobUpdate::Stalled { .. }) {
                     started = true;
                     // first event = a worker claimed the job; stamp it so
                     // a crash from here on replays as a retry
@@ -751,12 +771,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     JobUpdate::Cancelled => {
                         println!("[job {id}] cancelled");
                     }
+                    JobUpdate::Stalled { seconds } => {
+                        let status = handle.status();
+                        if telemetry::enabled() {
+                            // the queue gauges say whether it is waiting
+                            // for a worker or wedged mid-protocol
+                            let l = telemetry::Labels::NONE;
+                            let depth = telemetry::gauge_value(telemetry::QUEUE_DEPTH, l);
+                            let active = telemetry::gauge_value(telemetry::QUEUE_ACTIVE, l);
+                            println!(
+                                "[job {id}] stalled: no event for {seconds}s (status \
+                                 {status:?}; queue depth {depth}, {active} active)"
+                            );
+                        } else {
+                            println!(
+                                "[job {id}] stalled: no event for {seconds}s (status \
+                                 {status:?})"
+                            );
+                        }
+                    }
                 }
             }
             // resolve through wait_for so a wedged resolution still
             // produces periodic signs of life instead of silence
             let result = loop {
-                match handle.wait_for(STALL_WARN) {
+                match handle.wait_for(stall_warn) {
                     Some(result) => break result,
                     None => println!(
                         "[job {id}] still {:?} — waiting",
@@ -798,6 +837,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     service.shutdown();
+    if let Some(path) = &trace_path {
+        trace::dump_chrome_trace(path).with_context(|| format!("--trace {path:?}"))?;
+        println!("trace: {} (load in chrome://tracing or ui.perfetto.dev)", path.display());
+    }
+    if let Some(path) = &snapshot_path {
+        std::fs::write(path, telemetry::render_prometheus())
+            .with_context(|| format!("--metrics-snapshot {path:?}"))?;
+        println!("metrics snapshot: {}", path.display());
+    }
     ensure!(
         failed == 0,
         "{failed} job(s) failed or were cancelled — see the [job N] lines above"
@@ -1362,6 +1410,16 @@ mod tests {
         assert!(Args::parse(&argv(&["serve", "--jobs", "m.txt", "--workers", "2"]))
             .is_ok());
         assert!(Args::parse(&argv(&["serve", "--bogus", "x"])).is_err());
+        // telemetry flags take values (addr / paths / seconds)
+        let a = Args::parse(&argv(&[
+            "serve", "--jobs", "m.txt", "--stall-warn", "5", "--metrics",
+            "127.0.0.1:0", "--trace", "t.json", "--metrics-snapshot", "m.prom",
+        ]))
+        .unwrap();
+        assert_eq!(a.usize_or("stall-warn", 30).unwrap(), 5);
+        assert_eq!(a.get("metrics"), Some("127.0.0.1:0"));
+        assert_eq!(a.get("trace"), Some("t.json"));
+        assert_eq!(a.get("metrics-snapshot"), Some("m.prom"));
     }
 
     #[test]

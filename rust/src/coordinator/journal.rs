@@ -34,6 +34,8 @@ use std::sync::Mutex;
 
 use anyhow::{Context, Result};
 
+use crate::runtime::telemetry;
+
 /// A manifest rejected at the journal's API boundary.  Typed (like
 /// `NetError`) so callers can downcast a failed submit and report it as a
 /// client error instead of a daemon fault.
@@ -138,6 +140,11 @@ impl JobJournal {
             .filter(|id| !finished.contains_key(id))
             .map(|id| jobs[id].clone())
             .collect();
+        telemetry::counter_add(
+            telemetry::JOURNAL_REPLAYED,
+            telemetry::Labels::NONE,
+            pending.len() as u64,
+        );
         let file = OpenOptions::new()
             .create(true)
             .append(true)
@@ -159,11 +166,17 @@ impl JobJournal {
 
     fn append(&self, record: String) -> Result<()> {
         debug_assert!(record.ends_with('\n') && record[..record.len() - 1].lines().count() <= 1);
+        let t0 = telemetry::maybe_now();
         let file = crate::util::sync::lock_unpoisoned(&self.file);
-        (&*file)
+        let out = (&*file)
             .write_all(record.as_bytes())
             .and_then(|()| file.sync_data())
-            .with_context(|| format!("journal append {:?}", self.path))
+            .with_context(|| format!("journal append {:?}", self.path));
+        drop(file);
+        if out.is_ok() {
+            telemetry::observe_since_us(telemetry::JOURNAL_APPEND_US, telemetry::Labels::NONE, t0);
+        }
+        out
     }
 
     /// Log a newly submitted manifest; returns its fresh journal id.

@@ -85,6 +85,11 @@ pub enum JobUpdate {
     Retrying { attempt: u32 },
     /// See [`JobEvent::Cancelled`].
     Cancelled,
+    /// Synthesized by event CONSUMERS (the `serve` status printer) when a
+    /// non-terminal job produced no update for a `--stall-warn` window.
+    /// Never emitted by the job itself — there is no matching
+    /// [`JobEvent`], so `From<&JobEvent>` cannot produce it.
+    Stalled { seconds: u64 },
 }
 
 impl From<&JobEvent<'_>> for JobUpdate {

@@ -67,6 +67,7 @@ use crate::mpc::faults::FaultPolicy;
 use crate::mpc::net::{CostMeter, NetConfig};
 use crate::mpc::wire::TransportConfig;
 use crate::mpc::proto::{recv_share, share_input, PartyCtx, Shared};
+use crate::runtime::telemetry;
 use crate::tensor::{TensorF, TensorR};
 
 use super::iosched::{self, SchedPolicy};
@@ -432,6 +433,7 @@ pub(crate) fn p0_eval_batches(
 ) -> Result<Vec<i64>> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
+        let _span = telemetry::span("batch.p0", lane.phase as u64, b as u64);
         lane.gate.checkpoint(b)?;
         ctx.reseed_for(namespace_tag(lane.job, unit_tag(lane.phase, b)));
         let bytes0 = ctx.chan.meter.bytes;
@@ -464,6 +466,7 @@ pub(crate) fn p1_eval_batches(
 ) -> Result<Vec<i64>> {
     let mut ent = Vec::with_capacity(lane.range.len() * lane.batch);
     for b in lane.range.clone() {
+        let _span = telemetry::span("batch.p1", lane.phase as u64, b as u64);
         lane.gate.checkpoint(b)?;
         ctx.reseed_for(namespace_tag(lane.job, unit_tag(lane.phase, b)));
         // assemble a batch (pad the tail by repeating example 0)
@@ -598,6 +601,7 @@ pub(crate) fn setup_phase_session_on(
     let cfg = wf.config()?;
     let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
     let emb_pos_enc = fixed::encode_vec(&wf.get("emb.pos")?.data);
+    let _span = telemetry::span("phase.setup", phase as u64, job);
     let t0 = Instant::now();
     let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_hub_cfg(
         hub.clone(),
@@ -696,6 +700,7 @@ pub(crate) fn run_phase_drain(
     let per = n_batches.div_ceil(lanes);
     let emb_tok = session.emb_tok.clone(); // Arc bump, not a table copy
     let emb_pos = session.emb_pos.clone();
+    let lanes_span = telemetry::span("phase.lanes", phase as u64, job);
     let t0 = Instant::now();
     // a lane party yields its entropy shares, or the Cancelled error it
     // stopped on at a latched batch boundary
@@ -750,6 +755,7 @@ pub(crate) fn run_phase_drain(
         ent0.extend(r0?);
         ent1.extend(r1?);
     }
+    drop(lanes_span);
     debug_assert_eq!(ent0.len(), n);
     debug_assert_eq!(ent1.len(), n);
     let shares = if opts.capture_shares {
@@ -761,6 +767,7 @@ pub(crate) fn run_phase_drain(
     // final stage: QuickSelect over the gathered shares, fresh pair on the
     // same hub; P0 streams confirmed survivors into `stream`
     let reveal = opts.reveal_entropies;
+    let _qs_span = telemetry::span("phase.qs", phase as u64, job);
     let qs_slot = gate.qs_slot();
     let gate1 = gate.clone();
     type QsOut = (Vec<usize>, SelectStats, Option<Vec<f32>>);

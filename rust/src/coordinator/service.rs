@@ -81,6 +81,7 @@ use anyhow::{anyhow, Result};
 
 use crate::mpc::dealer::Hub;
 use crate::mpc::NetError;
+use crate::runtime::telemetry;
 use crate::util::sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 
 use super::job::{CancelToken, Cancelled, SelectionJob};
@@ -192,6 +193,8 @@ struct JobShared {
     events: Arc<ChannelObserver>,
     cell: Mutex<JobCell>,
     done: Condvar,
+    /// Submission instant, for the submit→claim queue-wait histogram.
+    submitted: Instant,
 }
 
 struct JobCell {
@@ -209,6 +212,9 @@ impl JobShared {
             Err(e) if e.is::<Cancelled>() => JobStatus::Cancelled,
             Err(_) => JobStatus::Failed,
         };
+        if status == JobStatus::Cancelled {
+            telemetry::counter_add(telemetry::QUEUE_CANCELLED, telemetry::Labels::NONE, 1);
+        }
         let mut cell = lock_unpoisoned(&self.cell);
         cell.status = status;
         cell.result = Some(result);
@@ -290,6 +296,11 @@ impl JobHandle {
                 .position(|(_, shared)| Arc::ptr_eq(shared, &self.shared));
             let removed = pos.and_then(|p| state.queue.remove(p));
             if removed.is_some() {
+                telemetry::gauge_set(
+                    telemetry::QUEUE_DEPTH,
+                    telemetry::Labels::NONE,
+                    state.queue.len() as i64,
+                );
                 // count the job as momentarily ACTIVE while we resolve it
                 // below: the idle edge (drain() wakeups, hub GC) must not
                 // fire — from this thread or an independently finishing
@@ -535,12 +546,18 @@ impl SelectionService {
             events: events.clone(),
             cell: Mutex::new(JobCell { status: JobStatus::Queued, result: None }),
             done: Condvar::new(),
+            submitted: Instant::now(),
         });
         job.chain_observer(Arc::new(FanoutObserver(vec![
             Arc::new(StatusTracker(shared.clone())),
             events,
         ])));
         state.queue.push_back((job, shared.clone()));
+        telemetry::gauge_set(
+            telemetry::QUEUE_DEPTH,
+            telemetry::Labels::NONE,
+            state.queue.len() as i64,
+        );
         drop(state);
         self.inner.work.notify_one();
         JobHandle { shared, service: Arc::downgrade(&self.inner) }
@@ -571,6 +588,7 @@ impl SelectionService {
             let mut state = lock_unpoisoned(&self.inner.state);
             state.shutdown = true;
             let unstarted: Vec<_> = state.queue.drain(..).collect();
+            telemetry::gauge_set(telemetry::QUEUE_DEPTH, telemetry::Labels::NONE, 0);
             // keep the drained jobs counted as active until they are
             // resolved below, so a worker finishing meanwhile cannot hit
             // the idle edge (waking drain()ers) with handles still pending
@@ -628,6 +646,24 @@ fn worker_loop(inner: &Inner) {
             loop {
                 if let Some((job, shared)) = state.queue.pop_front() {
                     state.active += 1;
+                    if telemetry::enabled() {
+                        telemetry::gauge_set(
+                            telemetry::QUEUE_DEPTH,
+                            telemetry::Labels::NONE,
+                            state.queue.len() as i64,
+                        );
+                        telemetry::gauge_set(
+                            telemetry::QUEUE_ACTIVE,
+                            telemetry::Labels::NONE,
+                            state.active as i64,
+                        );
+                        let waited_us = shared.submitted.elapsed().as_micros() as u64;
+                        telemetry::observe(
+                            telemetry::QUEUE_WAIT_US,
+                            telemetry::Labels::NONE,
+                            waited_us,
+                        );
+                    }
                     let hub = if shared.cancel.is_cancelled() {
                         None
                     } else {
@@ -686,6 +722,7 @@ fn worker_loop(inner: &Inner) {
                         break result;
                     }
                     attempt += 1;
+                    telemetry::counter_add(telemetry::QUEUE_RETRIES, telemetry::Labels::NONE, 1);
                     let _ = catch_unwind(AssertUnwindSafe(|| {
                         job.emit(&JobEvent::Retrying { attempt });
                     }));
@@ -705,6 +742,7 @@ fn worker_loop(inner: &Inner) {
 
         let mut state = lock_unpoisoned(&inner.state);
         state.active -= 1;
+        telemetry::gauge_set(telemetry::QUEUE_ACTIVE, telemetry::Labels::NONE, state.active as i64);
         gc_if_idle(&mut state, inner);
     }
 }

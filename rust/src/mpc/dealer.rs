@@ -13,6 +13,7 @@
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
+use crate::runtime::telemetry::{self, Labels};
 use crate::tensor::TensorR;
 use crate::util::Rng;
 
@@ -40,7 +41,9 @@ impl Hub {
         let mut map = self.products.try_lock().ok()?;
         match map.get(&seq) {
             Some((producer, _)) if *producer != me => {
-                Some(map.remove(&seq).unwrap().1)
+                let got = map.remove(&seq).unwrap().1;
+                telemetry::counter_add(telemetry::DEALER_HUB_GRANTS, Labels::party(me.label()), 1);
+                Some(got)
             }
             _ => None,
         }
@@ -48,6 +51,7 @@ impl Hub {
 
     /// Park a freshly computed product for the peer (best effort).
     fn park(&self, seq: u64, me: Role, c: Arc<TensorR>) {
+        telemetry::counter_add(telemetry::DEALER_HUB_PARKS, Labels::party(me.label()), 1);
         if let Ok(mut map) = self.products.try_lock() {
             use std::collections::hash_map::Entry;
             match map.entry(seq) {
@@ -116,6 +120,17 @@ impl Dealer {
     /// Weight-stationary fixed-B correlations are deliberately NOT
     /// re-derived (they key off the session seed), so cached W−B deltas
     /// stay valid across batches.
+    /// Telemetry tap: count `n` minted correlations of `kind` (a static
+    /// name from a closed set) for this party.  Counts only — the
+    /// correlation values never reach telemetry.
+    fn note_minted(&self, kind: &'static str, n: usize) {
+        telemetry::counter_add(
+            telemetry::DEALER_TRIPLES,
+            Labels::party_op(self.role.label(), kind),
+            n as u64,
+        );
+    }
+
     pub fn reseed_for(&mut self, tag: u64) {
         let mut s = self.seed ^ tag.wrapping_mul(0x9E3779B97F4A7C15);
         let mixed = crate::util::rng::splitmix64(&mut s);
@@ -130,6 +145,7 @@ impl Dealer {
     /// (identical streams ⇒ consistent triples).
     pub fn triples(&mut self, n: usize) -> (Vec<i64>, Vec<i64>, Vec<i64>) {
         self.seq += 1;
+        self.note_minted("triples", n);
         let mut a_sh = Vec::with_capacity(n);
         let mut b_sh = Vec::with_capacity(n);
         let mut c_sh = Vec::with_capacity(n);
@@ -160,6 +176,7 @@ impl Dealer {
     /// see its docs for the fixed-point truncation caveat).
     pub fn triples3(&mut self, n: usize) -> [Vec<i64>; 7] {
         self.seq += 1;
+        self.note_minted("triples3", n);
         let mut out: [Vec<i64>; 7] = std::array::from_fn(|_| Vec::with_capacity(n));
         let leader = self.role == Role::ModelOwner;
         for _ in 0..n {
@@ -221,6 +238,7 @@ impl Dealer {
         k: usize,
         n: usize,
     ) -> (TensorR, TensorR, TensorR) {
+        self.note_minted("matrix_triple", 1);
         let a = self.rand_tensor(&[m, k]);
         let b = self.rand_tensor(&[k, n]);
         let a0 = self.rand_tensor(&[m, k]);
@@ -246,6 +264,7 @@ impl Dealer {
         k: usize,
         n: usize,
     ) -> (TensorR, TensorR, TensorR) {
+        self.note_minted("matrix_triple_fixed_b", 1);
         let (b_full, b_share) = self.fixed_b_for(key, k, n);
         let a = self.rand_tensor(&[m, k]);
         let a0 = self.rand_tensor(&[m, k]);
@@ -298,6 +317,7 @@ impl Dealer {
     /// returns shares of (u, v, w) with w = u & v. RNG-dominated → local.
     pub fn bin_triples(&mut self, n: usize) -> (Vec<u64>, Vec<u64>, Vec<u64>) {
         self.seq += 1;
+        self.note_minted("bin_triples", n);
         let mut u_sh = Vec::with_capacity(n);
         let mut v_sh = Vec::with_capacity(n);
         let mut w_sh = Vec::with_capacity(n);
@@ -327,6 +347,7 @@ impl Dealer {
     /// correlation.  Returns (packed_bin_share_words, arith_shares).
     pub fn bit_pairs(&mut self, n: usize) -> (Vec<u64>, Vec<i64>) {
         self.seq += 1;
+        self.note_minted("bit_pairs", n);
         let words = n.div_ceil(64);
         let mut bin = vec![0u64; words];
         let mut arith = Vec::with_capacity(n);

@@ -16,6 +16,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::faults::FaultPlan;
+use crate::runtime::telemetry::{self, Labels};
 
 /// Typed wire failure.  Every fallible [`Chan`] operation returns one of
 /// these; the coordinator surfaces them as the anyhow root cause of a
@@ -77,6 +78,13 @@ impl Role {
         match self {
             Role::ModelOwner => Role::DataOwner,
             Role::DataOwner => Role::ModelOwner,
+        }
+    }
+    /// Static telemetry label for this party (closed two-value set).
+    pub fn label(self) -> &'static str {
+        match self {
+            Role::ModelOwner => "model-owner",
+            Role::DataOwner => "data-owner",
         }
     }
 }
@@ -257,6 +265,10 @@ pub struct Chan {
     /// Sits above the transport, so kill/stall/drop plans apply to the
     /// socket backends exactly as to the in-memory one.
     pub(crate) inject: Option<Arc<FaultPlan>>,
+    /// Telemetry party tag (`"model-owner"` / `"data-owner"`), stamped by
+    /// the engine / process drivers where the role is known.  Pure
+    /// observation metadata — never read by the protocol.
+    pub party_label: Option<&'static str>,
 }
 
 impl Chan {
@@ -268,6 +280,7 @@ impl Chan {
             deadline: None,
             op_label: "mpc",
             inject: None,
+            party_label: None,
         }
     }
 
@@ -286,20 +299,51 @@ impl Chan {
                 self.meter.bytes += (n * 8) as u64;
                 self.meter.half_rounds += 1;
                 self.meter.messages += 1;
+                self.note_send(n, None);
                 return Ok(());
             }
         }
+        let t0 = telemetry::maybe_now();
         self.transport.send(data)?;
         self.meter.bytes += (n * 8) as u64;
         self.meter.half_rounds += 1;
         self.meter.messages += 1;
+        self.note_send(n, t0);
         Ok(())
     }
 
     fn recv_raw(&mut self) -> NetResult<Vec<i64>> {
+        let t0 = telemetry::maybe_now();
         let data = self.transport.recv(self.deadline, self.op_label)?;
         self.meter.half_rounds += 1;
+        if telemetry::enabled() {
+            let l = self.wire_labels();
+            telemetry::counter_add(telemetry::WIRE_HALF_ROUNDS, l, 1);
+            telemetry::observe_since_us(telemetry::WIRE_RECV_US, l, t0);
+        }
         Ok(data)
+    }
+
+    /// Telemetry label set for this channel's wire metrics: party + the
+    /// current op label only (sizes/counts/durations attach to these —
+    /// never payload).
+    fn wire_labels(&self) -> Labels {
+        Labels { party: self.party_label, op: Some(self.op_label), ..Labels::NONE }
+    }
+
+    /// Telemetry tap for one metered send.  Runs AFTER the meter update on
+    /// every path that counts a message, so the `sf_wire_send_frame_bytes`
+    /// histogram count tracks `CostMeter::messages` exactly.
+    fn note_send(&self, n: usize, t0: Option<Instant>) {
+        if !telemetry::enabled() {
+            return;
+        }
+        let l = self.wire_labels();
+        telemetry::counter_add(telemetry::WIRE_TX_BYTES, l, (n * 8) as u64);
+        telemetry::counter_add(telemetry::WIRE_TX_FRAMES, l, 1);
+        telemetry::counter_add(telemetry::WIRE_HALF_ROUNDS, l, 1);
+        telemetry::observe(telemetry::WIRE_SEND_FRAME_BYTES, l, (n * 8) as u64);
+        telemetry::observe_since_us(telemetry::WIRE_SEND_US, l, t0);
     }
 
     /// Send our payload and receive the peer's — one communication round

@@ -30,6 +30,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::net::{chan_pair, Chan, NetError, NetResult, Role, Transport};
+use crate::runtime::telemetry;
 
 /// Wire protocol version — bumped whenever framing or handshake change.
 pub const WIRE_VERSION: u16 = 1;
@@ -391,7 +392,13 @@ impl Transport for SocketTransport {
             } else {
                 Duration::ZERO
             };
-            std::thread::sleep(sh.latency + ser);
+            let delay = sh.latency + ser;
+            std::thread::sleep(delay);
+            telemetry::counter_add(
+                telemetry::WIRE_SHAPING_SLEEP_US,
+                telemetry::Labels::op(op),
+                delay.as_micros() as u64,
+            );
         }
         Ok(frame)
     }
@@ -433,7 +440,12 @@ fn socket_chan(
 pub fn loopback_pair(cfg: &TransportConfig, dealer_seed: u64) -> NetResult<(Chan, Chan)> {
     let fp = seed_fingerprint(dealer_seed);
     let (mut s0, mut s1): (Box<dyn WireStream>, Box<dyn WireStream>) = match cfg.kind {
-        TransportKind::InMemory => return Ok(chan_pair()),
+        TransportKind::InMemory => {
+            let (mut c0, mut c1) = chan_pair();
+            c0.party_label = Some(Role::ModelOwner.label());
+            c1.party_label = Some(Role::DataOwner.label());
+            return Ok((c0, c1));
+        }
         TransportKind::Tcp => {
             let listener = TcpListener::bind(("127.0.0.1", 0))
                 .map_err(|e| establish_err("bind loopback", e))?;
@@ -451,14 +463,20 @@ pub fn loopback_pair(cfg: &TransportConfig, dealer_seed: u64) -> NetResult<(Chan
     };
     // Both hellos are written before either side reads — tiny frames, so
     // this cannot deadlock even single-threaded.
+    let t0 = telemetry::maybe_now();
     write_frame(&mut s0, &hello_frame(Role::ModelOwner, fp, 0), "handshake")?;
     write_frame(&mut s1, &hello_frame(Role::DataOwner, fp, 0), "handshake")?;
     let h0 = read_frame_from(&mut s0, "handshake")?;
     verify_hello(&h0, Role::ModelOwner, fp, 0)?;
     let h1 = read_frame_from(&mut s1, "handshake")?;
     verify_hello(&h1, Role::DataOwner, fp, 0)?;
+    telemetry::observe_since_us(telemetry::WIRE_HANDSHAKE_US, telemetry::Labels::NONE, t0);
     let tag = if cfg.kind == TransportKind::Tcp { "tcp" } else { "unix" };
-    Ok((socket_chan(s0, tag, cfg.shaping)?, socket_chan(s1, tag, cfg.shaping)?))
+    let mut c0 = socket_chan(s0, tag, cfg.shaping)?;
+    let mut c1 = socket_chan(s1, tag, cfg.shaping)?;
+    c0.party_label = Some(Role::ModelOwner.label());
+    c1.party_label = Some(Role::DataOwner.label());
+    Ok((c0, c1))
 }
 
 enum ListenerKind {
@@ -517,8 +535,16 @@ impl PartyListener {
                 (Box::new(s), "unix")
             }
         };
+        let t0 = telemetry::maybe_now();
         perform_handshake(&mut stream, role, seed_fingerprint(dealer_seed), params_digest)?;
-        socket_chan(stream, tag, shaping)
+        telemetry::observe_since_us(
+            telemetry::WIRE_HANDSHAKE_US,
+            telemetry::Labels::party(role.label()),
+            t0,
+        );
+        let mut chan = socket_chan(stream, tag, shaping)?;
+        chan.party_label = Some(role.label());
+        Ok(chan)
     }
 }
 
@@ -540,8 +566,16 @@ pub fn connect_party(
             s.set_nodelay(true).map_err(|e| establish_err("nodelay", e))?;
             (Box::new(s), "tcp")
         };
+    let t0 = telemetry::maybe_now();
     perform_handshake(&mut stream, role, seed_fingerprint(dealer_seed), params_digest)?;
-    socket_chan(stream, tag, shaping)
+    telemetry::observe_since_us(
+        telemetry::WIRE_HANDSHAKE_US,
+        telemetry::Labels::party(role.label()),
+        t0,
+    );
+    let mut chan = socket_chan(stream, tag, shaping)?;
+    chan.party_label = Some(role.label());
+    Ok(chan)
 }
 
 #[cfg(test)]

@@ -6,6 +6,9 @@
 //! image's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
 //! (64-bit instruction ids) — see /opt/xla-example/README.md.
 
+pub mod telemetry;
+pub mod trace;
+
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

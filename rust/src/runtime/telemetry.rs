@@ -1,0 +1,776 @@
+//! `sftrace`: zero-dependency structured telemetry — metrics + spans.
+//!
+//! A global [`MetricsRegistry`]-style store (counters, gauges, fixed-bucket
+//! histograms keyed by a static metric name plus a small [`Labels`] set)
+//! and a [`Span`] RAII type that stamps monotonic enter/exit pairs into a
+//! bounded per-thread ring buffer (rendered to Chrome-trace JSON by
+//! [`super::trace`]).
+//!
+//! Design constraints, in order:
+//!
+//! 1. **Value-blind by construction.** The API only accepts sizes, counts
+//!    and durations — there is no way to attach a share, a tensor, or any
+//!    protocol payload to a metric or span. Labels are `&'static str` /
+//!    small integers. `sfaudit`'s `telemetry-value-blind` lint statically
+//!    rejects share-typed expressions at `telemetry::` call sites.
+//! 2. **Observation-pure.** Recording never touches the wire and never
+//!    perturbs protocol state; byte-identity of telemetry-on vs
+//!    telemetry-off runs is enforced by `tests/telemetry_equiv.rs`.
+//! 3. **Near-zero cost when off.** Telemetry is DISABLED by default; every
+//!    entry point is gated on one relaxed atomic load. The bench smoke
+//!    gate requires <2% wall overhead with telemetry ON.
+//!
+//! Label cardinality rule: every label value must come from a small closed
+//! set (party ∈ {model-owner, data-owner}, op = static protocol-op names,
+//! lane/phase = small indices, job = queue ids). Never label by candidate
+//! index, byte content, or anything data-dependent.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::sync::lock_unpoisoned;
+
+// ---------------------------------------------------------------------------
+// Global enable switch
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn telemetry collection on or off globally (default: off).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Whether telemetry collection is currently enabled.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// `Some(Instant::now())` only when telemetry is on — lets hot paths skip
+/// the clock read entirely when off.
+pub fn maybe_now() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Labels
+// ---------------------------------------------------------------------------
+
+/// The closed label set every metric is keyed by. All fields optional;
+/// unset fields are omitted from the exported series. Values are static
+/// strings or small integers ONLY — never protocol data.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
+pub struct Labels {
+    /// Queue job id.
+    pub job: Option<u64>,
+    /// Phase index within a multi-phase schedule.
+    pub phase: Option<u64>,
+    /// Pipeline lane index.
+    pub lane: Option<u64>,
+    /// `"model-owner"` / `"data-owner"` (or a coordinator-side tag).
+    pub party: Option<&'static str>,
+    /// Static protocol-op name (as maintained by `PartyCtx::op`).
+    pub op: Option<&'static str>,
+}
+
+impl Labels {
+    /// No labels at all.
+    pub const NONE: Labels = Labels { job: None, phase: None, lane: None, party: None, op: None };
+
+    /// Label by op only.
+    pub fn op(op: &'static str) -> Labels {
+        Labels { op: Some(op), ..Labels::NONE }
+    }
+
+    /// Label by party and op.
+    pub fn party_op(party: &'static str, op: &'static str) -> Labels {
+        Labels { party: Some(party), op: Some(op), ..Labels::NONE }
+    }
+
+    /// Label by party only.
+    pub fn party(party: &'static str) -> Labels {
+        Labels { party: Some(party), ..Labels::NONE }
+    }
+
+    fn render(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(j) = self.job {
+            parts.push(format!("job=\"{j}\""));
+        }
+        if let Some(p) = self.phase {
+            parts.push(format!("phase=\"{p}\""));
+        }
+        if let Some(l) = self.lane {
+            parts.push(format!("lane=\"{l}\""));
+        }
+        if let Some(p) = self.party {
+            parts.push(format!("party=\"{p}\""));
+        }
+        if let Some(o) = self.op {
+            parts.push(format!("op=\"{o}\""));
+        }
+        if parts.is_empty() {
+            String::new()
+        } else {
+            format!("{{{}}}", parts.join(","))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Metric cells
+// ---------------------------------------------------------------------------
+
+/// Number of fixed histogram buckets; bucket `i` covers values up to
+/// [`bucket_bound`]`(i)` inclusive (powers of two, 1 … 2^29). The unit is
+/// whatever the metric name says (`_us` → microseconds, `_bytes` → bytes).
+/// Values above the last bound land only in `+Inf` (count/sum stay exact).
+pub const N_BUCKETS: usize = 30;
+
+/// Upper bound (inclusive) of histogram bucket `i`: `2^i`.
+pub fn bucket_bound(i: usize) -> u64 {
+    1u64 << i
+}
+
+struct Histo {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Histo {
+    fn new() -> Histo {
+        Histo {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    fn observe(&self, v: u64) {
+        if let Some(i) = (0..N_BUCKETS).find(|&i| v <= bucket_bound(i)) {
+            self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        }
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+enum Metric {
+    Counter(AtomicU64),
+    Gauge(AtomicI64),
+    Histogram(Histo),
+}
+
+impl Metric {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+type Key = (&'static str, Labels);
+
+fn registry() -> &'static Mutex<HashMap<Key, Arc<Metric>>> {
+    static R: OnceLock<Mutex<HashMap<Key, Arc<Metric>>>> = OnceLock::new();
+    R.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+fn cell(name: &'static str, labels: Labels, make: fn() -> Metric) -> Arc<Metric> {
+    let mut map = lock_unpoisoned(registry());
+    map.entry((name, labels)).or_insert_with(|| Arc::new(make())).clone()
+}
+
+// ---------------------------------------------------------------------------
+// Recording API (all no-ops while disabled)
+// ---------------------------------------------------------------------------
+
+/// Add `v` to a counter. No-op while telemetry is off.
+pub fn counter_add(name: &'static str, labels: Labels, v: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Metric::Counter(c) = &*cell(name, labels, || Metric::Counter(AtomicU64::new(0))) {
+        c.fetch_add(v, Ordering::Relaxed);
+    }
+}
+
+/// Add `delta` (possibly negative) to a gauge. No-op while off.
+pub fn gauge_add(name: &'static str, labels: Labels, delta: i64) {
+    if !enabled() {
+        return;
+    }
+    if let Metric::Gauge(g) = &*cell(name, labels, || Metric::Gauge(AtomicI64::new(0))) {
+        g.fetch_add(delta, Ordering::Relaxed);
+    }
+}
+
+/// Set a gauge to an absolute value. No-op while off.
+pub fn gauge_set(name: &'static str, labels: Labels, v: i64) {
+    if !enabled() {
+        return;
+    }
+    if let Metric::Gauge(g) = &*cell(name, labels, || Metric::Gauge(AtomicI64::new(0))) {
+        g.store(v, Ordering::Relaxed);
+    }
+}
+
+/// Record one histogram observation. No-op while off.
+pub fn observe(name: &'static str, labels: Labels, v: u64) {
+    if !enabled() {
+        return;
+    }
+    if let Metric::Histogram(h) = &*cell(name, labels, || Metric::Histogram(Histo::new())) {
+        h.observe(v);
+    }
+}
+
+/// Record the microseconds elapsed since `t0` (as returned by
+/// [`maybe_now`]) into a histogram. No-op when `t0` is `None`.
+pub fn observe_since_us(name: &'static str, labels: Labels, t0: Option<Instant>) {
+    if let Some(t0) = t0 {
+        observe(name, labels, t0.elapsed().as_micros() as u64);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Read-back API (for tests, the stall watcher, and bench snapshots)
+// ---------------------------------------------------------------------------
+
+/// Current value of a counter (0 if never recorded).
+pub fn counter_value(name: &'static str, labels: Labels) -> u64 {
+    match lock_unpoisoned(registry()).get(&(name, labels)) {
+        Some(m) => match &**m {
+            Metric::Counter(c) => c.load(Ordering::Relaxed),
+            _ => 0,
+        },
+        None => 0,
+    }
+}
+
+/// Sum of a counter across ALL label sets.
+pub fn counter_total(name: &'static str) -> u64 {
+    lock_unpoisoned(registry())
+        .iter()
+        .filter(|((n, _), _)| *n == name)
+        .map(|(_, m)| match &**m {
+            Metric::Counter(c) => c.load(Ordering::Relaxed),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Current value of a gauge (0 if never recorded).
+pub fn gauge_value(name: &'static str, labels: Labels) -> i64 {
+    match lock_unpoisoned(registry()).get(&(name, labels)) {
+        Some(m) => match &**m {
+            Metric::Gauge(g) => g.load(Ordering::Relaxed),
+            _ => 0,
+        },
+        None => 0,
+    }
+}
+
+/// Total observation count of a histogram across ALL label sets.
+pub fn histogram_total_count(name: &'static str) -> u64 {
+    lock_unpoisoned(registry())
+        .iter()
+        .filter(|((n, _), _)| *n == name)
+        .map(|(_, m)| match &**m {
+            Metric::Histogram(h) => h.count.load(Ordering::Relaxed),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Total observed sum of a histogram across ALL label sets.
+pub fn histogram_total_sum(name: &'static str) -> u64 {
+    lock_unpoisoned(registry())
+        .iter()
+        .filter(|((n, _), _)| *n == name)
+        .map(|(_, m)| match &**m {
+            Metric::Histogram(h) => h.sum.load(Ordering::Relaxed),
+            _ => 0,
+        })
+        .sum()
+}
+
+/// Drop every metric and every recorded span (tracks stay registered so
+/// live threads keep writing). Test/bench hook.
+pub fn reset() {
+    lock_unpoisoned(registry()).clear();
+    let tracks = lock_unpoisoned(global_tracks());
+    for t in tracks.iter() {
+        let mut t = lock_unpoisoned(t);
+        t.events.clear();
+        t.dropped = 0;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+
+/// Render every metric in Prometheus text exposition format (v0.0.4),
+/// deterministically ordered by (metric name, label string).
+pub fn render_prometheus() -> String {
+    struct Row {
+        name: &'static str,
+        labels: String,
+        metric: Arc<Metric>,
+    }
+    let mut rows: Vec<Row> = {
+        let map = lock_unpoisoned(registry());
+        map.iter()
+            .map(|((name, labels), m)| Row {
+                name,
+                labels: labels.render(),
+                metric: m.clone(),
+            })
+            .collect()
+    };
+    rows.sort_by(|a, b| (a.name, &a.labels).cmp(&(b.name, &b.labels)));
+    let mut out = String::new();
+    let mut last_name = "";
+    for row in &rows {
+        if row.name != last_name {
+            out.push_str(&format!("# TYPE {} {}\n", row.name, row.metric.type_name()));
+            last_name = row.name;
+        }
+        match &*row.metric {
+            Metric::Counter(c) => {
+                let v = c.load(Ordering::Relaxed);
+                out.push_str(&format!("{}{} {v}\n", row.name, row.labels));
+            }
+            Metric::Gauge(g) => {
+                let v = g.load(Ordering::Relaxed);
+                out.push_str(&format!("{}{} {v}\n", row.name, row.labels));
+            }
+            Metric::Histogram(h) => {
+                let inner = row.labels.trim_start_matches('{').trim_end_matches('}');
+                let sep = if inner.is_empty() { "" } else { "," };
+                let mut cum = 0u64;
+                for (i, b) in h.buckets.iter().enumerate() {
+                    cum += b.load(Ordering::Relaxed);
+                    let bound = bucket_bound(i);
+                    let line = format!("_bucket{{{inner}{sep}le=\"{bound}\"}} {cum}\n");
+                    out.push_str(row.name);
+                    out.push_str(&line);
+                }
+                let count = h.count.load(Ordering::Relaxed);
+                out.push_str(row.name);
+                out.push_str(&format!("_bucket{{{inner}{sep}le=\"+Inf\"}} {count}\n"));
+                let sum = h.sum.load(Ordering::Relaxed);
+                out.push_str(&format!("{}_sum{} {sum}\n", row.name, row.labels));
+                out.push_str(&format!("{}_count{} {count}\n", row.name, row.labels));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Spans: RAII enter/exit pairs in bounded per-thread ring buffers
+// ---------------------------------------------------------------------------
+
+/// Per-thread span ring-buffer capacity; older events are dropped (and
+/// counted) once a track fills.
+pub const TRACK_CAPACITY: usize = 8192;
+
+/// One completed span: monotonic microsecond enter time + duration, plus
+/// two small numeric tags (phase / unit index). Never carries values.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanEvent {
+    /// Static span name (e.g. `"phase.drain"`).
+    pub name: &'static str,
+    /// Phase index tag.
+    pub phase: u64,
+    /// Unit tag (batch index, lane index, job id — caller-defined count).
+    pub unit: u64,
+    /// Microseconds since the process telemetry epoch.
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+}
+
+struct Track {
+    thread: String,
+    events: std::collections::VecDeque<SpanEvent>,
+    dropped: u64,
+}
+
+fn global_tracks() -> &'static Mutex<Vec<Arc<Mutex<Track>>>> {
+    static T: OnceLock<Mutex<Vec<Arc<Mutex<Track>>>>> = OnceLock::new();
+    T.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+thread_local! {
+    static LOCAL_TRACK: std::cell::RefCell<Option<Arc<Mutex<Track>>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn record_span(ev: SpanEvent) {
+    LOCAL_TRACK.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let cur = std::thread::current();
+            let name = cur.name().unwrap_or("unnamed").to_string();
+            let track = Arc::new(Mutex::new(Track {
+                thread: name,
+                events: std::collections::VecDeque::new(),
+                dropped: 0,
+            }));
+            lock_unpoisoned(global_tracks()).push(track.clone());
+            *slot = Some(track);
+        }
+        if let Some(track) = slot.as_ref() {
+            let mut t = lock_unpoisoned(track);
+            if t.events.len() >= TRACK_CAPACITY {
+                t.events.pop_front();
+                t.dropped += 1;
+            }
+            t.events.push_back(ev);
+        }
+    });
+}
+
+/// RAII span: construct via [`span`], drops record the enter/exit pair
+/// into this thread's ring buffer. Free (no clock read) while telemetry
+/// is off.
+pub struct Span {
+    name: &'static str,
+    phase: u64,
+    unit: u64,
+    start_us: u64,
+    armed: bool,
+}
+
+/// Open a span named `name` tagged with `(phase, unit)` indices. The tags
+/// are COUNTS/INDICES only — never pass protocol values.
+pub fn span(name: &'static str, phase: u64, unit: u64) -> Span {
+    let armed = enabled();
+    Span {
+        name,
+        phase,
+        unit,
+        start_us: if armed { now_us() } else { 0 },
+        armed,
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            let end = now_us();
+            record_span(SpanEvent {
+                name: self.name,
+                phase: self.phase,
+                unit: self.unit,
+                start_us: self.start_us,
+                dur_us: end.saturating_sub(self.start_us),
+            });
+        }
+    }
+}
+
+/// Snapshot every thread's recorded spans: `(thread_name, dropped, events)`
+/// per track, in registration order. Used by the Chrome-trace renderer.
+pub fn snapshot_tracks() -> Vec<(String, u64, Vec<SpanEvent>)> {
+    let tracks = lock_unpoisoned(global_tracks());
+    tracks
+        .iter()
+        .map(|t| {
+            let t = lock_unpoisoned(t);
+            (t.thread.clone(), t.dropped, t.events.iter().copied().collect())
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tiny hand-rolled HTTP listener for Prometheus scrapes
+// ---------------------------------------------------------------------------
+
+/// Minimal single-purpose HTTP server exposing [`render_prometheus`] at
+/// `GET /metrics` (and `/`). Zero dependencies: one accept thread, one
+/// short-lived handler per connection, shuts down on drop.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9184"`, port 0 for ephemeral) and
+    /// start serving in a background thread.
+    pub fn bind(addr: &str) -> std::io::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("sf-metrics".into())
+            .spawn(move || accept_loop(listener, stop2))?;
+        Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, stop: Arc<AtomicBool>) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((mut sock, _)) => {
+                let _ = handle_conn(&mut sock);
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+fn handle_conn(sock: &mut TcpStream) -> std::io::Result<()> {
+    sock.set_read_timeout(Some(Duration::from_millis(500)))?;
+    let mut buf = [0u8; 2048];
+    let n = sock.read(&mut buf)?;
+    let head = String::from_utf8_lossy(&buf[..n]);
+    let path = head
+        .lines()
+        .next()
+        .and_then(|l| l.split_whitespace().nth(1))
+        .unwrap_or("/");
+    if path == "/metrics" || path == "/" {
+        let body = render_prometheus();
+        let resp = format!(
+            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+             charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        sock.write_all(resp.as_bytes())?;
+    } else {
+        let resp = "HTTP/1.1 404 Not Found\r\nContent-Length: 0\r\nConnection: close\r\n\r\n";
+        sock.write_all(resp.as_bytes())?;
+    }
+    sock.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Well-known metric names (single source of truth for tests + docs)
+// ---------------------------------------------------------------------------
+
+/// Bytes sent on the wire (counter; labels: party, op).
+pub const WIRE_TX_BYTES: &str = "sf_wire_tx_bytes_total";
+/// Frames sent on the wire (counter; labels: party, op).
+pub const WIRE_TX_FRAMES: &str = "sf_wire_tx_frames_total";
+/// Half-rounds metered, send+recv (counter; labels: party, op).
+pub const WIRE_HALF_ROUNDS: &str = "sf_wire_half_rounds_total";
+/// Per-frame send payload size (histogram, bytes; labels: party, op).
+pub const WIRE_SEND_FRAME_BYTES: &str = "sf_wire_send_frame_bytes";
+/// Send call latency (histogram, µs; labels: party, op).
+pub const WIRE_SEND_US: &str = "sf_wire_send_us";
+/// Recv blocking latency (histogram, µs; labels: party, op).
+pub const WIRE_RECV_US: &str = "sf_wire_recv_us";
+/// Socket connect handshake duration (histogram, µs; labels: party).
+pub const WIRE_HANDSHAKE_US: &str = "sf_wire_handshake_us";
+/// Cumulative WAN-shaping sleep injected on recv (counter, µs).
+pub const WIRE_SHAPING_SLEEP_US: &str = "sf_wire_shaping_sleep_us_total";
+/// Correlations minted by the dealer (counter; labels: party, op=kind).
+pub const DEALER_TRIPLES: &str = "sf_dealer_triples_total";
+/// Hub grants: peer-parked products taken instead of recomputed (counter).
+pub const DEALER_HUB_GRANTS: &str = "sf_dealer_hub_grants_total";
+/// Hub parks: products parked for the peer (counter).
+pub const DEALER_HUB_PARKS: &str = "sf_dealer_hub_parks_total";
+/// Selection-service queue depth (gauge).
+pub const QUEUE_DEPTH: &str = "sf_queue_depth";
+/// Jobs currently executing (gauge).
+pub const QUEUE_ACTIVE: &str = "sf_queue_active";
+/// Submit→claim wait (histogram, µs).
+pub const QUEUE_WAIT_US: &str = "sf_queue_wait_us";
+/// Worker retries after NetError-rooted failures (counter).
+pub const QUEUE_RETRIES: &str = "sf_queue_retries_total";
+/// Jobs cancelled (counter).
+pub const QUEUE_CANCELLED: &str = "sf_queue_cancelled_total";
+/// Journal append+fsync latency (histogram, µs).
+pub const JOURNAL_APPEND_US: &str = "sf_journal_append_us";
+/// Journal records replayed at open (counter).
+pub const JOURNAL_REPLAYED: &str = "sf_journal_replayed_total";
+
+/// Serialize tests that toggle the global enable switch or inspect the
+/// global registry/tracks (shared with `super::trace` tests).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static M: Mutex<()> = Mutex::new(());
+    lock_unpoisoned(&M)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_a_noop() {
+        let _g = test_guard();
+        reset();
+        set_enabled(false);
+        counter_add("t_noop_total", Labels::NONE, 5);
+        observe("t_noop_us", Labels::NONE, 1);
+        assert_eq!(counter_value("t_noop_total", Labels::NONE), 0);
+        assert_eq!(histogram_total_count("t_noop_us"), 0);
+        assert!(maybe_now().is_none());
+    }
+
+    #[test]
+    fn counters_gauges_histograms_roundtrip() {
+        let _g = test_guard();
+        reset();
+        set_enabled(true);
+        let l = Labels::party_op("data-owner", "open");
+        counter_add("t_bytes_total", l, 7);
+        counter_add("t_bytes_total", l, 3);
+        gauge_add("t_depth", Labels::NONE, 2);
+        gauge_add("t_depth", Labels::NONE, -1);
+        observe("t_lat_us", l, 5);
+        observe("t_lat_us", l, 900);
+        set_enabled(false);
+        assert_eq!(counter_value("t_bytes_total", l), 10);
+        assert_eq!(counter_total("t_bytes_total"), 10);
+        assert_eq!(gauge_value("t_depth", Labels::NONE), 1);
+        assert_eq!(histogram_total_count("t_lat_us"), 2);
+        assert_eq!(histogram_total_sum("t_lat_us"), 905);
+    }
+
+    #[test]
+    fn prometheus_rendering_is_valid_and_deterministic() {
+        let _g = test_guard();
+        reset();
+        set_enabled(true);
+        counter_add("t_a_total", Labels::op("mul"), 4);
+        gauge_set("t_b_depth", Labels::NONE, 9);
+        observe("t_c_us", Labels::party("model-owner"), 100);
+        set_enabled(false);
+        let text = render_prometheus();
+        assert!(text.contains("# TYPE t_a_total counter"));
+        assert!(text.contains("t_a_total{op=\"mul\"} 4"));
+        assert!(text.contains("# TYPE t_b_depth gauge"));
+        assert!(text.contains("t_b_depth 9"));
+        assert!(text.contains("# TYPE t_c_us histogram"));
+        assert!(text.contains("t_c_us_bucket{party=\"model-owner\",le=\"128\"} 1"));
+        assert!(text.contains("t_c_us_bucket{party=\"model-owner\",le=\"+Inf\"} 1"));
+        assert!(text.contains("t_c_us_sum{party=\"model-owner\"} 100"));
+        assert!(text.contains("t_c_us_count{party=\"model-owner\"} 1"));
+        // every non-comment line is `name{labels} value` — minimal syntax check
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let mut it = line.rsplitn(2, ' ');
+            let val = it.next().unwrap();
+            assert!(val.parse::<i64>().is_ok(), "bad value in line: {line}");
+        }
+        assert_eq!(text, render_prometheus(), "deterministic");
+    }
+
+    #[test]
+    fn spans_record_into_thread_tracks() {
+        let _g = test_guard();
+        reset();
+        set_enabled(true);
+        std::thread::Builder::new()
+            .name("t-span-track".into())
+            .spawn(|| {
+                let _s = span("t.work", 2, 5);
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        set_enabled(false);
+        let tracks = snapshot_tracks();
+        let t = tracks
+            .iter()
+            .find(|(name, _, _)| name == "t-span-track")
+            .expect("track registered");
+        let ev = t.2.iter().find(|e| e.name == "t.work").expect("span recorded");
+        assert_eq!(ev.phase, 2);
+        assert_eq!(ev.unit, 5);
+    }
+
+    #[test]
+    fn track_ring_buffer_is_bounded() {
+        let _g = test_guard();
+        reset();
+        set_enabled(true);
+        std::thread::Builder::new()
+            .name("t-span-bound".into())
+            .spawn(|| {
+                for i in 0..(TRACK_CAPACITY + 10) {
+                    let _s = span("t.tick", 0, i as u64);
+                }
+            })
+            .unwrap()
+            .join()
+            .unwrap();
+        set_enabled(false);
+        let tracks = snapshot_tracks();
+        let t = tracks
+            .iter()
+            .find(|(name, _, _)| name == "t-span-bound")
+            .expect("track registered");
+        assert!(t.2.len() <= TRACK_CAPACITY);
+        assert!(t.1 >= 10, "dropped counter advanced");
+    }
+
+    #[test]
+    fn metrics_server_serves_prometheus_text() {
+        let _g = test_guard();
+        reset();
+        set_enabled(true);
+        counter_add("t_served_total", Labels::NONE, 42);
+        set_enabled(false);
+        let srv = MetricsServer::bind("127.0.0.1:0").expect("bind");
+        let mut sock = TcpStream::connect(srv.local_addr()).expect("connect");
+        sock.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        sock.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "got: {resp}");
+        assert!(resp.contains("text/plain; version=0.0.4"));
+        assert!(resp.contains("t_served_total 42"));
+        // unknown path → 404
+        let mut sock = TcpStream::connect(srv.local_addr()).expect("connect");
+        sock.write_all(b"GET /nope HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        sock.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 404"), "got: {resp}");
+    }
+}

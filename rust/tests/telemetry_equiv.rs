@@ -1,0 +1,168 @@
+//! Observation purity — the telemetry acceptance gate: a selection run
+//! with telemetry ON must be BYTE-IDENTICAL to the same run with it OFF —
+//! same survivors, same opened entropy scores, same captured shares, same
+//! per-party meter bytes AND half-rounds — across the lane/overlap matrix
+//! {1, 4} × {off, on} and both transports (in-memory mpsc, loopback TCP).
+//! Telemetry observes the wire; it must never BE the wire.
+//!
+//! The final test pins the metering cross-check: the wire-send histogram
+//! counts exactly the frames `CostMeter` counts (telemetry and the meter
+//! see the same traffic, one observation per frame, payload bytes only).
+
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use selectformer::coordinator::{
+    testutil, PhaseSchedule, PrivacyMode, ProxySpec, RuntimeProfile,
+    SelectionJob, SelectionOutcome,
+};
+use selectformer::data::{synth, Dataset, SynthSpec};
+use selectformer::mpc::net::chan_pair;
+use selectformer::mpc::TransportConfig;
+use selectformer::runtime::telemetry;
+
+/// Telemetry state (the enable flag, the metric registry, the span
+/// tracks) is process-global: every test in this binary serializes on
+/// this lock so toggling it in one test cannot contaminate another's
+/// telemetry-off baseline run.
+fn telemetry_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    let m = LOCK.get_or_init(|| Mutex::new(()));
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+struct Fixture {
+    p1: std::path::PathBuf,
+    p2: std::path::PathBuf,
+    ds: Arc<Dataset>,
+    schedule: PhaseSchedule,
+}
+
+fn fixture(tag: &str) -> Fixture {
+    let dir = std::env::temp_dir().join("sf_telemetry_equiv").join(tag);
+    let p1 = dir.join("phase1.sfw");
+    let p2 = dir.join("phase2.sfw");
+    testutil::write_random_proxy_sfw(&p1, 1, 1, 2, 16, 64, 2, 8);
+    testutil::write_random_proxy_sfw(&p2, 2, 2, 4, 16, 64, 2, 8);
+    let ds = Arc::new(synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        96,
+        false,
+        13,
+    ));
+    let schedule = PhaseSchedule::new(
+        vec![
+            ProxySpec { n_layers: 1, n_heads: 1, d_mlp: 2 },
+            ProxySpec { n_layers: 2, n_heads: 2, d_mlp: 4 },
+        ],
+        vec![0.5, 0.5],
+    );
+    Fixture { p1, p2, ds, schedule }
+}
+
+fn run(
+    fx: &Fixture,
+    transport: TransportConfig,
+    lanes: usize,
+    overlap: bool,
+) -> SelectionOutcome {
+    SelectionJob::builder_shared([fx.p1.as_path(), fx.p2.as_path()], fx.ds.clone())
+        .candidates((0..fx.ds.n).collect())
+        .schedule(fx.schedule.clone())
+        .runtime(RuntimeProfile {
+            batch: 16,
+            lanes,
+            overlap,
+            transport,
+            ..Default::default()
+        })
+        .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true })
+        .build()
+        .expect("job config")
+        .run()
+        .expect("selection")
+}
+
+fn assert_identical(tag: &str, off: &SelectionOutcome, on: &SelectionOutcome) {
+    assert_eq!(off.selected, on.selected, "{tag}: final selection");
+    assert_eq!(off.phases.len(), on.phases.len(), "{tag}: phase count");
+    for (p, (a, b)) in off.phases.iter().zip(&on.phases).enumerate() {
+        assert_eq!(a.survivors, b.survivors, "{tag}: phase {p} survivors");
+        assert_eq!(
+            a.entropies, b.entropies,
+            "{tag}: phase {p} opened entropy scores"
+        );
+        assert_eq!(a.ent_shares, b.ent_shares, "{tag}: phase {p} entropy shares");
+        assert_eq!(a.meter_p0.bytes, b.meter_p0.bytes, "{tag}: phase {p} P0 bytes");
+        assert_eq!(a.meter_p1.bytes, b.meter_p1.bytes, "{tag}: phase {p} P1 bytes");
+        assert_eq!(
+            a.meter_p0.half_rounds, b.meter_p0.half_rounds,
+            "{tag}: phase {p} P0 half-rounds"
+        );
+        assert_eq!(
+            a.meter_p1.half_rounds, b.meter_p1.half_rounds,
+            "{tag}: phase {p} P1 half-rounds"
+        );
+    }
+}
+
+/// One off/on pair per matrix cell; telemetry is re-enabled only for the
+/// "on" leg, and the registry is cleared between cells so the
+/// traffic-observed assertion is per-cell, not cumulative.
+fn off_on_matrix(fx: &Fixture, transport_tag: &str, mk: fn() -> TransportConfig) {
+    for (lanes, overlap) in [(1, false), (1, true), (4, false), (4, true)] {
+        let tag = format!("{transport_tag} lanes={lanes} overlap={overlap}");
+        telemetry::set_enabled(false);
+        telemetry::reset();
+        let off = run(fx, mk(), lanes, overlap);
+        telemetry::set_enabled(true);
+        let on = run(fx, mk(), lanes, overlap);
+        telemetry::set_enabled(false);
+        assert_identical(&tag, &off, &on);
+        let frames = telemetry::counter_total(telemetry::WIRE_TX_FRAMES);
+        assert!(frames > 0, "{tag}: telemetry must actually observe traffic");
+        telemetry::reset();
+    }
+}
+
+#[test]
+fn telemetry_on_is_byte_identical_in_memory() {
+    let _g = telemetry_lock();
+    let fx = fixture("mem");
+    off_on_matrix(&fx, "mem", TransportConfig::default);
+}
+
+#[test]
+fn telemetry_on_is_byte_identical_over_tcp() {
+    let _g = telemetry_lock();
+    let fx = fixture("tcp");
+    off_on_matrix(&fx, "tcp", TransportConfig::tcp);
+}
+
+/// The wire-send histogram and the CostMeter count the SAME traffic: one
+/// histogram observation per metered frame (including both directions),
+/// payload bytes agreeing exactly.  This is the invariant that makes the
+/// telemetry snapshot in BENCH_e2e.json cross-checkable against the
+/// meter-derived cost model.
+#[test]
+fn wire_send_histogram_counts_match_cost_meter_frames() {
+    let _g = telemetry_lock();
+    telemetry::set_enabled(true);
+    telemetry::reset();
+    let (mut c0, mut c1) = chan_pair();
+    for n in [1usize, 3, 17, 256] {
+        c0.send_only(vec![7i64; n]).expect("p0 send");
+        assert_eq!(c1.recv_only().expect("p1 recv").len(), n);
+        c1.send_only(vec![9i64; n]).expect("p1 send");
+        assert_eq!(c0.recv_only().expect("p0 recv").len(), n);
+    }
+    let frames = c0.meter.messages + c1.meter.messages;
+    let bytes = c0.meter.bytes + c1.meter.bytes;
+    assert!(frames >= 8, "eight one-directional sends were metered");
+    let h = telemetry::WIRE_SEND_FRAME_BYTES;
+    assert_eq!(telemetry::histogram_total_count(h), frames, "frame count");
+    assert_eq!(telemetry::histogram_total_sum(h), bytes, "frame bytes");
+    assert_eq!(telemetry::counter_total(telemetry::WIRE_TX_FRAMES), frames);
+    assert_eq!(telemetry::counter_total(telemetry::WIRE_TX_BYTES), bytes);
+    telemetry::set_enabled(false);
+    telemetry::reset();
+}

@@ -32,6 +32,12 @@
 //!    appear inside the deadline-aware helpers ([`DEADLINE_SAFE_FNS`]),
 //!    whose callers inherit the `SO_RCVTIMEO` policy `Chan::recv`
 //!    installs.  Everything else must route through the frame codec.
+//! 5. **telemetry-value-blind** — share-typed expressions (same detection
+//!    as secret-display) must not reach `telemetry::` / `Span::` calls
+//!    outside `#[cfg(test)]`.  Metrics and span labels may carry sizes,
+//!    counts and durations — never secret-shared values.  There is no
+//!    annotation hatch: the telemetry layer is value-blind by
+//!    construction, so a share in its arguments is always a bug.
 //!
 //! The scanner is line-and-token exact but deliberately syntax-light: it
 //! masks strings/comments, tracks `#[cfg(test)]` item bodies by brace
@@ -106,6 +112,10 @@ pub const SECRET_TYPE_NAMES: &[&str] = &["Shared", "AuthenticatedShare"];
 
 /// Case-insensitive identifier substring that marks a value as share-like.
 pub const SECRET_IDENT_SUBSTR: &str = "share";
+
+/// Path qualifiers whose calls the telemetry-value-blind lint audits:
+/// `telemetry::observe(..)`, `telemetry::span(..)`, `Span::enter(..)`, ….
+pub const TELEMETRY_QUALIFIERS: &[&str] = &["telemetry", "Span"];
 
 /// Default location of the panic allowlist, relative to the repo root.
 pub const PANIC_ALLOWLIST_REL: &str = "tools/sfaudit/panic_allowlist.txt";
@@ -473,6 +483,7 @@ pub enum Lint {
     PanicFree,
     WireDeadline,
     StaleAllowlist,
+    TelemetryValueBlind,
 }
 
 impl Lint {
@@ -483,6 +494,7 @@ impl Lint {
             Lint::PanicFree => "panic-free-transport",
             Lint::WireDeadline => "wire-deadline",
             Lint::StaleAllowlist => "stale-allowlist",
+            Lint::TelemetryValueBlind => "telemetry-value-blind",
         }
     }
 }
@@ -796,6 +808,49 @@ pub fn scan_source(rel: &str, src: &str, allow: &Allowlist) -> Report {
                     DEADLINE_SAFE_FNS.join(", ")
                 ),
             });
+        }
+
+        // ---- lint 5: telemetry-value-blind --------------------------------
+        if followed_by_paren
+            && !t.in_test
+            && qualifier.map(|q| TELEMETRY_QUALIFIERS.contains(&q)).unwrap_or(false)
+        {
+            let open_idx = i + 1;
+            let (close, _) = matching_close(toks, open_idx);
+            let mut leak: Option<String> = None;
+            for arg in &toks[open_idx + 1..close.min(toks.len())] {
+                match arg.kind {
+                    TokKind::Ident if ident_is_secret(&arg.text) => {
+                        leak = Some(arg.text.clone());
+                        break;
+                    }
+                    TokKind::Str => {
+                        if let Some(cap) = str_secret_capture(&arg.text) {
+                            leak = Some(cap);
+                            break;
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if let Some(what) = leak {
+                let qual = qualifier.unwrap_or("telemetry");
+                rpt.findings.push(Finding {
+                    lint: Lint::TelemetryValueBlind,
+                    file: rel.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "share-typed value `{what}` reaches `{qual}::{name}(..)` — \
+                         telemetry is value-blind by construction: metrics and span \
+                         labels may carry sizes, counts and durations, never \
+                         secret-shared values (no annotation hatch; restructure the \
+                         call site so only public aggregates are passed)"
+                    ),
+                });
+            }
+            // deliberately no token skip here: the argument span stays
+            // visible to the other lints (a `.unwrap()` inside telemetry
+            // args in a PANIC_FILE must still be flagged)
         }
 
         i += 1;

@@ -13,6 +13,8 @@ const PANIC_BAD: &str = include_str!("fixtures/panic_bad.rs");
 const PANIC_GOOD: &str = include_str!("fixtures/panic_good.rs");
 const DEADLINE_BAD: &str = include_str!("fixtures/deadline_bad.rs");
 const DEADLINE_GOOD: &str = include_str!("fixtures/deadline_good.rs");
+const TELEMETRY_BAD: &str = include_str!("fixtures/telemetry_bad.rs");
+const TELEMETRY_GOOD: &str = include_str!("fixtures/telemetry_good.rs");
 
 fn no_allow() -> Allowlist {
     Allowlist::default()
@@ -144,6 +146,30 @@ fn deadline_good_allows_reads_inside_read_full() {
 }
 
 // --------------------------------------------------------------------------
+// lint 5: telemetry-value-blind
+// --------------------------------------------------------------------------
+
+#[test]
+fn telemetry_bad_flags_share_typed_args_and_captures() {
+    let rpt = scan_source("rust/src/coordinator/fixture.rs", TELEMETRY_BAD, &no_allow());
+    let lines: Vec<u32> = rpt
+        .findings
+        .iter()
+        .filter(|f| f.lint == Lint::TelemetryValueBlind)
+        .map(|f| f.line)
+        .collect();
+    // value arg, span unit arg, Span:: label string capture
+    assert_eq!(lines, vec![3, 7, 11], "findings: {:#?}", rpt.findings);
+    assert!(rpt.findings.iter().all(|f| f.lint == Lint::TelemetryValueBlind));
+}
+
+#[test]
+fn telemetry_good_is_clean_and_scope_is_only_telemetry_calls() {
+    let rpt = scan_source("rust/src/coordinator/fixture.rs", TELEMETRY_GOOD, &no_allow());
+    assert!(rpt.is_clean(), "unexpected findings: {:#?}", rpt.findings);
+}
+
+// --------------------------------------------------------------------------
 // tree-level: stale allowlist, inventory JSON, binary exit codes
 // --------------------------------------------------------------------------
 
@@ -248,6 +274,12 @@ fn binary_exits_nonzero_per_violation_class() {
         ("v_secret", "rust/src/coordinator/fixture.rs", SECRET_BAD, "secret-display"),
         ("v_panic", "rust/src/mpc/wire.rs", PANIC_BAD, "panic-free-transport"),
         ("v_deadline", "rust/src/mpc/wire.rs", DEADLINE_BAD, "wire-deadline"),
+        (
+            "v_telemetry",
+            "rust/src/coordinator/fixture.rs",
+            TELEMETRY_BAD,
+            "telemetry-value-blind",
+        ),
     ] {
         let tree = TempTree::new(name, &[(rel, src)]);
         let (code, _stdout, stderr) = run_bin(&tree.root);

@@ -1,0 +1,12 @@
+// Fixture: share-typed expressions reaching telemetry calls — flagged.
+pub fn meter_share_value(share: &Shared, labels: Labels) {
+    telemetry::observe(telemetry::WIRE_SEND_FRAME_BYTES, labels, share.limb(0) as u64);
+}
+
+pub fn span_unit_from_share(ent_share: i64) {
+    let _s = telemetry::span("phase.lanes", 0, ent_share as u64);
+}
+
+pub fn span_label_capture(unit: u64) {
+    let _s = Span::labelled("row {avg_share}", unit);
+}

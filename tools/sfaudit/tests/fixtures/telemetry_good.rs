@@ -1,0 +1,23 @@
+// Fixture: conforming telemetry — sizes, counts and durations only; other
+// qualified calls may take shares; test code is exempt.
+pub fn meter_frame(n: usize, labels: Labels) {
+    telemetry::counter_add(telemetry::WIRE_TX_BYTES, labels, (n * 8) as u64);
+    telemetry::observe(telemetry::WIRE_SEND_FRAME_BYTES, labels, (n * 8) as u64);
+}
+
+pub fn span_phase(phase: u64, batch: u64) {
+    let _s = telemetry::span("batch.p0", phase, batch);
+}
+
+pub fn unrelated_qualified_call(share: &Shared) -> Shared {
+    proto::rotate(share)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_telemetry_may_touch_shares() {
+        let share = 7u64;
+        telemetry::observe(telemetry::WIRE_SEND_US, telemetry::Labels::NONE, share);
+    }
+}
