@@ -429,6 +429,87 @@ fn bench_faults() -> Vec<BenchRow> {
     ]
 }
 
+/// Malicious-tier overhead — what PR 10's SPDZ MAC accounting costs: the
+/// same tiny 1-phase selection under the default semi-honest tier vs
+/// `SecurityMode::Malicious` (min-of-3 wall each, identical survivors
+/// asserted first), plus the metered traffic growth of the authenticated
+/// triples and the batched MAC-check flushes, persisted as
+/// `malicious_overhead_*` rows so the price of the stronger adversary
+/// model is diffable PR over PR.
+fn bench_malicious() -> Vec<BenchRow> {
+    use selectformer::mpc::SecurityMode;
+    let dir = std::env::temp_dir().join("sf_bench_malicious");
+    let proxy = dir.join("proxy.sfw");
+    testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
+    let ds = synth(
+        &SynthSpec { seq_len: 16, vocab: 64, ..Default::default() },
+        128,
+        false,
+        9,
+    );
+    let run = |security: SecurityMode| {
+        SelectionJob::builder([proxy.as_path()], &ds)
+            .keep_counts(vec![32])
+            .runtime(RuntimeProfile { batch: 16, security, ..Default::default() })
+            .job_tag(1)
+            .build()
+            .expect("malicious bench job")
+            .run()
+            .expect("malicious bench outcome")
+    };
+    let sh = run(SecurityMode::SemiHonest);
+    let mal = run(SecurityMode::Malicious);
+    assert_eq!(
+        sh.selected, mal.selected,
+        "the malicious tier must select identically when nobody cheats"
+    );
+    let (sh_bytes, mal_bytes) = (sh.total_bytes(), mal.total_bytes());
+    assert!(
+        mal_bytes > sh_bytes,
+        "MAC accounting must cost metered traffic (sh {sh_bytes} vs mal {mal_bytes})"
+    );
+    let min3 = |security: SecurityMode| -> f64 {
+        (0..3).map(|_| run(security).total_wall_s()).fold(f64::INFINITY, f64::min)
+    };
+    let sh_wall = min3(SecurityMode::SemiHonest);
+    let mal_wall = min3(SecurityMode::Malicious);
+    let wall_pct = (mal_wall / sh_wall - 1.0) * 100.0;
+    let byte_pct = (mal_bytes as f64 / sh_bytes as f64 - 1.0) * 100.0;
+    let mut table = Table::new(
+        "malicious-security overhead (1-phase job, 128 candidates, min of 3)",
+        &["tier", "wall", "bytes (p0+p1)", "overhead"],
+    );
+    table.row(vec![
+        "semi-honest".into(),
+        format!("{:.3} s", sh_wall),
+        fmt_bytes(sh_bytes),
+        "-".into(),
+    ]);
+    table.row(vec![
+        "malicious".into(),
+        format!("{:.3} s", mal_wall),
+        fmt_bytes(mal_bytes),
+        format!("{wall_pct:+.2}% wall, {byte_pct:+.2}% bytes"),
+    ]);
+    table.print();
+    vec![
+        BenchRow::new("malicious_overhead_semi_honest_wall", "n=128,batch=16", 1, sh_wall * 1e9),
+        BenchRow::new("malicious_overhead_malicious_wall", "n=128,batch=16", 1, mal_wall * 1e9),
+        BenchRow::new(
+            "malicious_overhead_wall_pct",
+            &format!("pct={wall_pct:.2}"),
+            1,
+            (mal_wall - sh_wall).max(0.0) * 1e9,
+        ),
+        BenchRow::new(
+            "malicious_overhead_bytes_pct",
+            &format!("pct={byte_pct:.2}"),
+            1,
+            (mal_bytes - sh_bytes) as f64,
+        ),
+    ]
+}
+
 /// Telemetry cost + snapshot: the same tiny 1-phase selection with
 /// collection OFF vs ON (min-of-3 wall each), gated at <2% overhead, and
 /// the ON runs' wire/dealer counter totals persisted as rows so the
@@ -507,6 +588,7 @@ fn main() {
     e2e_rows.extend(bench_queue());
     e2e_rows.extend(bench_faults());
     e2e_rows.extend(bench_telemetry());
+    e2e_rows.extend(bench_malicious());
     require_rows(
         "BENCH_e2e",
         &e2e_rows,
@@ -522,6 +604,10 @@ fn main() {
             "retry_overhead",
             "journal_replay_ms",
             "telemetry_overhead",
+            "malicious_overhead_semi_honest_wall",
+            "malicious_overhead_malicious_wall",
+            "malicious_overhead_wall_pct",
+            "malicious_overhead_bytes_pct",
         ],
     );
     write_bench_json("BENCH_e2e", &e2e_rows);

@@ -5,6 +5,7 @@
 //! selectformer select  --target distilbert_s --bench sst2s [--budget 0.2]
 //!                      [--batch 16] [--lanes 4] [--overlap] [--progress]
 //!                      [--policy ours|serial|coalesced]
+//!                      [--security semi-honest|malicious]
 //!                      [--method ours|random|oracle|mpcformer|bolt|noattnsm|noattnln|noapprox]
 //! selectformer e2e     --target ... --bench ... [--budget 0.2] [--steps 300]
 //! selectformer train   --target ... --bench ... [--method ours|random|oracle] [--steps 300]
@@ -24,6 +25,7 @@
 //!                      --proxies p1.sfw[;p2.sfw…] | --data corpus.bin | --synth N
 //!                      --keep k1[;k2…] [--batch 16] [--seed N] [--out idx.txt]
 //!                      [--latency-ms L --bandwidth-mbs B]
+//!                      [--security semi-honest|malicious]
 //! ```
 //!
 //! `party` runs ONE MPC party in this process over a real socket — the
@@ -84,7 +86,7 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             value: &[
                 "artifacts", "target", "bench", "budget", "batch", "lanes",
                 "policy", "method", "out", "bandwidth-mbs", "latency-ms",
-                "transport",
+                "transport", "security",
             ],
             boolean: &["overlap", "progress"],
         },
@@ -92,13 +94,14 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             value: &[
                 "listen", "connect", "proxies", "data", "synth", "keep",
                 "batch", "seed", "out", "bandwidth-mbs", "latency-ms",
+                "security",
             ],
             boolean: &[],
         },
         "e2e" => CmdSpec {
             value: &[
                 "artifacts", "target", "bench", "budget", "steps", "batch",
-                "lanes", "policy", "bandwidth-mbs", "latency-ms",
+                "lanes", "policy", "bandwidth-mbs", "latency-ms", "security",
             ],
             boolean: &["overlap"],
         },
@@ -106,13 +109,14 @@ fn cmd_spec(command: &str) -> Result<CmdSpec> {
             value: &[
                 "artifacts", "target", "bench", "budget", "steps", "method",
                 "batch", "lanes", "policy", "bandwidth-mbs", "latency-ms",
+                "security",
             ],
             boolean: &["overlap"],
         },
         "appraise" => CmdSpec {
             value: &[
                 "artifacts", "target", "bench", "budget", "threshold", "batch",
-                "lanes", "policy", "bandwidth-mbs", "latency-ms",
+                "lanes", "policy", "bandwidth-mbs", "latency-ms", "security",
             ],
             boolean: &["overlap"],
         },
@@ -287,7 +291,19 @@ fn profile_from(args: &Args) -> Result<RuntimeProfile> {
                 .with_context(|| format!("--transport {v} (known: mem, tcp, unix)"))?,
             None => Default::default(),
         },
+        // adversary model: semi-honest (default) | malicious (SPDZ-style
+        // MAC accounting on every audited open; forged opens abort typed)
+        security: security_from(args)?,
     })
+}
+
+/// `--security` flag → [`SecurityMode`]; default semi-honest.
+fn security_from(args: &Args) -> Result<crate::mpc::auth::SecurityMode> {
+    match args.get("security") {
+        Some(v) => crate::mpc::auth::SecurityMode::parse(v)
+            .with_context(|| format!("--security {v} (known: semi-honest, malicious)")),
+        None => Ok(Default::default()),
+    }
 }
 
 fn budget_from(args: &Args) -> Result<f64> {
@@ -510,10 +526,14 @@ fn serve_job_from(line: &str) -> Result<crate::coordinator::SelectionJob<'static
             Some(("seed", v)) => seed = parse_usize(v)? as u64,
             Some(("lanes", v)) => profile.lanes = parse_usize(v)?,
             Some(("batch", v)) => profile.batch = parse_usize(v)?,
+            Some(("security", v)) => {
+                profile.security = crate::mpc::auth::SecurityMode::parse(v)
+                    .with_context(|| format!("manifest field `{field}`"))?;
+            }
             None if field == "overlap" => profile.overlap = true,
             _ => bail!(
                 "unknown manifest field `{field}` (known: proxies= data= \
-                 synth= keep= tag= seed= lanes= batch= overlap)"
+                 synth= keep= tag= seed= lanes= batch= security= overlap)"
             ),
         }
     }
@@ -1055,7 +1075,12 @@ fn cmd_party(args: &Args) -> Result<()> {
     } else {
         None
     };
-    let plan = PartyPlan { keeps, batch, approx: ApproxToggles::OURS };
+    let plan = PartyPlan {
+        keeps,
+        batch,
+        approx: ApproxToggles::OURS,
+        security: security_from(args)?,
+    };
     let digest = plan.params_digest();
 
     // role from inputs: the model owner holds the proxies, the data owner

@@ -22,6 +22,9 @@ pub fn appraise_average(ctx: &mut PartyCtx, entropies: &Shared) -> NetResult<f32
     // output (paper §4.1); callers needing secrecy of the value use
     // appraise_threshold instead
     let opened = open(ctx, &Shared(TensorR::from_vec(vec![avg_share], &[1])))?;
+    // the appraisal value leaves MPC here: settle the MAC ledger first
+    // (no-op under SecurityMode::SemiHonest)
+    crate::mpc::auth::flush_macs(ctx, "appraise_average")?;
     Ok(fixed::decode(opened.data[0]))
 }
 
@@ -43,7 +46,10 @@ pub fn appraise_threshold(
     let gt = cmp::gt(ctx, &avg, &thr)?;
     // OPEN-AUDIT: one-bit threshold verdict — the minimal agreed output of
     // this appraisal mode; the average itself stays shared
-    Ok(open(ctx, &gt)?.data[0] == 1)
+    let verdict = open(ctx, &gt)?.data[0] == 1;
+    // the one-bit verdict leaves MPC here: settle the MAC ledger first
+    crate::mpc::auth::flush_macs(ctx, "appraise_threshold")?;
+    Ok(verdict)
 }
 
 #[cfg(test)]

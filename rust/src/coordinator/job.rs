@@ -44,6 +44,7 @@ use anyhow::{anyhow, ensure, Context, Result};
 
 use crate::data::Dataset;
 use crate::models::{ApproxToggles, WeightFile};
+use crate::mpc::auth::SecurityMode;
 use crate::mpc::dealer::Hub;
 use crate::mpc::faults::FaultPolicy;
 use crate::mpc::net::NetConfig;
@@ -219,6 +220,15 @@ pub struct RuntimeProfile {
     /// retried job reruns from scratch on fresh sessions and must be
     /// byte-identical to an undisturbed run (tests/fault_injection.rs).
     pub faults: FaultPolicy,
+    /// Adversary model (`mpc::auth`).  The default semi-honest tier is
+    /// byte-identical to a profile without the field; `Malicious` arms
+    /// SPDZ-style MAC accounting on every audited open and aborts the job
+    /// typed (`NetError::MacCheckFailed`) if a reconstruction was forged.
+    /// Unlike the other profile knobs this one MAY change bytes on the
+    /// wire (the MAC-check flushes) — but never the selection itself:
+    /// an undisturbed malicious-mode run selects exactly the semi-honest
+    /// survivor set (tests/fault_injection.rs).
+    pub security: SecurityMode,
 }
 
 impl Default for RuntimeProfile {
@@ -231,6 +241,7 @@ impl Default for RuntimeProfile {
             net: NetConfig::default(),
             transport: TransportConfig::default(),
             faults: FaultPolicy::default(),
+            security: SecurityMode::default(),
         }
     }
 }
@@ -687,6 +698,8 @@ impl<'a> SelectionJob<'a> {
             policy: self.profile.policy,
             dealer_seed: self.dealer_seed,
             approx: self.approx,
+            // MAC-EXEMPT: Debug-gated configuration forwarding only — the
+            // reveal itself happens (and is annotated) at the selector opens
             // OPEN-AUDIT: forwards the caller's PrivacyMode::Debug opt-out;
             // false (no reveal) for every non-Debug mode
             reveal_entropies: self.privacy.reveal_entropies(),
@@ -696,6 +709,7 @@ impl<'a> SelectionJob<'a> {
             job_tag: self.job_tag,
             faults: self.profile.faults.clone(),
             transport: self.profile.transport,
+            security: self.profile.security,
         }
     }
 
@@ -859,6 +873,7 @@ impl<'a> SelectionJob<'a> {
                             opts.job_tag,
                             &opts.faults,
                             &opts.transport,
+                            opts.security,
                         )?
                     }
                 };
@@ -882,11 +897,13 @@ impl<'a> SelectionJob<'a> {
                         (opts.approx, opts.dealer_seed, opts.job_tag);
                     let faults = opts.faults.clone();
                     let transport = opts.transport;
+                    let security = opts.security;
                     let next = i + 1;
                     prefetch.0 = Some(thread::spawn(move || {
                         let weights = src.load(next)?;
                         selector::setup_phase_session_on(
                             hub, weights, approx, seed, next, job, &faults, &transport,
+                            security,
                         )
                     }));
                 }
@@ -1019,6 +1036,7 @@ pub(crate) fn run_legacy(
             net: opts.net,
             transport: opts.transport,
             faults: opts.faults.clone(),
+            security: opts.security,
         })
         .approx(opts.approx)
         .dealer_seed(opts.dealer_seed)

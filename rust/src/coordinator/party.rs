@@ -33,6 +33,7 @@ use anyhow::{bail, ensure, Context, Result};
 use crate::data::Dataset;
 use crate::fixed;
 use crate::models::{ApproxToggles, ModelConfig, WeightFile};
+use crate::mpc::auth::SecurityMode;
 use crate::mpc::net::{Chan, CostMeter, Role};
 use crate::mpc::proto::{PartyCtx, Shared};
 use crate::mpc::wire::digest_params;
@@ -52,6 +53,9 @@ pub struct PartyPlan {
     pub keeps: Vec<usize>,
     pub batch: usize,
     pub approx: ApproxToggles,
+    /// adversary model — both parties must run the same tier, so it is
+    /// pinned by the handshake digest (a mismatch fails typed at connect)
+    pub security: SecurityMode,
 }
 
 impl PartyPlan {
@@ -61,6 +65,7 @@ impl PartyPlan {
             self.batch as u64,
             self.keeps.len() as u64,
             approx_code(&self.approx),
+            self.security.is_malicious() as u64,
         ];
         words.extend(self.keeps.iter().map(|&k| k as u64));
         digest_params(&words)
@@ -224,6 +229,7 @@ pub fn run_model_owner(
         plan.keeps.len()
     );
     let mut ctx = PartyCtx::new(Role::ModelOwner, chan, dealer_seed);
+    ctx.set_security(plan.security);
     let hello = ctx.chan.recv_only().context("waiting for candidate count")?;
     ensure!(hello.len() == 1 && hello[0] > 0, "bad candidate-count frame");
     let n0 = hello[0] as usize;
@@ -256,6 +262,7 @@ pub fn run_data_owner(
     let n0 = dataset.n;
     ensure!(n0 > 0, "empty dataset");
     let mut ctx = PartyCtx::new(Role::DataOwner, chan, dealer_seed);
+    ctx.set_security(plan.security);
     ctx.chan.send_only(vec![n0 as i64])?;
     let mut cands: Vec<usize> = (0..n0).collect();
     let mut phase_sizes = Vec::with_capacity(plan.keeps.len());
@@ -305,9 +312,9 @@ mod tests {
 
     #[test]
     fn params_digest_separates_plans() {
-        let a = PartyPlan { keeps: vec![12, 6], batch: 8, approx: ApproxToggles::OURS };
-        let b = PartyPlan { keeps: vec![12, 6], batch: 16, approx: ApproxToggles::OURS };
-        let c = PartyPlan { keeps: vec![6, 12], batch: 8, approx: ApproxToggles::OURS };
+        let a = PartyPlan { keeps: vec![12, 6], batch: 8, approx: ApproxToggles::OURS, security: SecurityMode::SemiHonest };
+        let b = PartyPlan { keeps: vec![12, 6], batch: 16, approx: ApproxToggles::OURS, security: SecurityMode::SemiHonest };
+        let c = PartyPlan { keeps: vec![6, 12], batch: 8, approx: ApproxToggles::OURS, security: SecurityMode::SemiHonest };
         assert_ne!(a.params_digest(), b.params_digest());
         assert_ne!(a.params_digest(), c.params_digest());
         assert_eq!(a.params_digest(), a.clone().params_digest());
@@ -330,7 +337,7 @@ mod tests {
             false,
             5,
         );
-        let plan = PartyPlan { keeps: vec![12, 6], batch: 8, approx: ApproxToggles::OURS };
+        let plan = PartyPlan { keeps: vec![12, 6], batch: 8, approx: ApproxToggles::OURS, security: SecurityMode::SemiHonest };
         // the default dealer seed of SelectionOptions, so the split run is
         // judged against the in-process default run
         let seed = 0x5e1ec7u64;

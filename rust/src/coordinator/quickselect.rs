@@ -140,6 +140,12 @@ pub(crate) fn top_k_streamed_gated(
             break;
         }
         let coin = public_coin(ctx, pool.len())?;
+        // the coin steers control flow (pivot choice) the moment it is
+        // used, so under SecurityMode::Malicious its MAC must settle NOW —
+        // a forged coin open would otherwise desync the parties (frame
+        // mismatch) before any deferred check could run.  No-op (zero
+        // traffic) under SemiHonest.
+        crate::mpc::auth::flush_macs(ctx, "quickselect")?;
         let pivot_idx = pool[coin];
         let rest: Vec<usize> =
             pool.iter().copied().filter(|&i| i != pivot_idx).collect();
@@ -159,6 +165,12 @@ pub(crate) fn top_k_streamed_gated(
             // VALUES stay shared
             open(ctx, &g)
         })?;
+        // partition bits are public output AND control flow: settle their
+        // MACs before either party acts on them.  The whole round (m bits)
+        // is one batched zero-check — a forged partition open surfaces
+        // HERE as a typed MacCheckFailed on both parties symmetrically,
+        // while the parties are still in lockstep.
+        crate::mpc::auth::flush_macs(ctx, "quickselect")?;
         stats.comparisons += m as u64;
         stats.partition_rounds += 1;
         let mut above = Vec::new();
@@ -195,6 +207,10 @@ pub(crate) fn top_k_streamed_gated(
             }
         }
     }
+    // the survivor set leaves MPC at this boundary: settle anything the
+    // per-round flushes have not drained (a no-op in the common case, and
+    // always a no-op under SecurityMode::SemiHonest)
+    crate::mpc::auth::flush_macs(ctx, "quickselect")?;
     Ok(stats)
 }
 

@@ -63,6 +63,7 @@ use crate::mpc::engine::{
     run_pair_metered_cfg, run_pair_metered_hub_cfg, run_pair_pipelined_hub_cfg,
     PartyFn,
 };
+use crate::mpc::auth::{flush_macs, SecurityMode};
 use crate::mpc::faults::FaultPolicy;
 use crate::mpc::net::{CostMeter, NetConfig};
 use crate::mpc::wire::TransportConfig;
@@ -279,6 +280,10 @@ pub struct SelectionOptions {
     /// loopback TCP, or a Unix socketpair — byte-identical selections on
     /// every backend (tests/tcp_equiv.rs).
     pub transport: TransportConfig,
+    /// Adversary model: `SemiHonest` (default, byte-identical to the
+    /// pre-MAC engine) or `Malicious` — SPDZ MAC ledgers armed on every
+    /// party ctx, flushed at phase boundaries (see `mpc::auth`).
+    pub security: SecurityMode,
 }
 
 impl Default for SelectionOptions {
@@ -296,6 +301,7 @@ impl Default for SelectionOptions {
             job_tag: 0,
             faults: FaultPolicy::default(),
             transport: TransportConfig::default(),
+            security: SecurityMode::default(),
         }
     }
 }
@@ -452,6 +458,10 @@ pub(crate) fn p0_eval_batches(
             });
         }
     }
+    // lane boundary: entropy shares leave this session for QuickSelect —
+    // settle MACs over every in-band open of the forward passes (lazy
+    // weight-delta opens included).  No-op under SemiHonest.
+    flush_macs(ctx, "phase_eval")?;
     Ok(ent)
 }
 
@@ -484,6 +494,7 @@ pub(crate) fn p1_eval_batches(
         let take = (lane.n - b * lane.batch).min(lane.batch);
         ent.extend_from_slice(&e.0.data[..take]);
     }
+    flush_macs(ctx, "phase_eval")?;
     Ok(ent)
 }
 
@@ -577,6 +588,7 @@ pub fn setup_phase_session(
         0,
         &FaultPolicy::default(),
         &TransportConfig::default(),
+        SecurityMode::default(),
     )
 }
 
@@ -597,6 +609,7 @@ pub(crate) fn setup_phase_session_on(
     job: u64,
     faults: &FaultPolicy,
     transport: &TransportConfig,
+    security: SecurityMode,
 ) -> Result<PhaseSession> {
     let cfg = wf.config()?;
     let emb_tok_enc = fixed::encode_vec(&wf.get("emb.tok")?.data);
@@ -611,7 +624,8 @@ pub(crate) fn setup_phase_session_on(
         {
             let wf = wf.clone();
             move |ctx: &mut PartyCtx| -> Result<ModelMpc> {
-                ctx.op("session_setup", |ctx| {
+                ctx.set_security(security);
+                let model = ctx.op("session_setup", |ctx| {
                     ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                     let mut model = p0_send_session(
                         ctx,
@@ -626,11 +640,16 @@ pub(crate) fn setup_phase_session_on(
                     // reconstruction is of masked values only
                     model.preopen_weight_deltas(ctx)?;
                     Ok(model)
-                })
+                })?;
+                // phase boundary: the pre-opened deltas feed every lane —
+                // settle their MACs before the session is handed out
+                flush_macs(ctx, "session_setup")?;
+                Ok(model)
             }
         },
         move |ctx: &mut PartyCtx| -> Result<(ModelMpc, TensorF, TensorF)> {
-            ctx.op("session_setup", |ctx| {
+            ctx.set_security(security);
+            let out = ctx.op("session_setup", |ctx| {
                 ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                 let (mut model, emb_tok, emb_pos) = p1_recv_session(ctx, cfg, approx)?;
                 // OPEN-AUDIT: P1 side of the masked weight-delta
@@ -638,7 +657,9 @@ pub(crate) fn setup_phase_session_on(
                 // only, uniform in the ring
                 model.preopen_weight_deltas(ctx)?;
                 Ok((model, emb_tok, emb_pos))
-            })
+            })?;
+            flush_macs(ctx, "session_setup")?;
+            Ok(out)
         },
     );
     let model_p0 = r0?;
@@ -727,10 +748,13 @@ pub(crate) fn run_phase_drain(
         let mut m1 = session.model_p1.clone();
         let (ct, et, ep) = (cand_tokens.clone(), emb_tok.clone(), emb_pos.clone());
         let obs_l = obs.clone();
+        let security = opts.security;
         let f0: LaneFn = Box::new(move |ctx: &mut PartyCtx| {
+            ctx.set_security(security);
             p0_eval_batches(ctx, &mut m0, &lc, &obs_l)
         });
         let f1: LaneFn = Box::new(move |ctx: &mut PartyCtx| {
+            ctx.set_security(security);
             p1_eval_batches(ctx, &mut m1, &ct, &et, &ep, &lc1)
         });
         lane_fns.push((f0, f1));
@@ -767,6 +791,7 @@ pub(crate) fn run_phase_drain(
     // final stage: QuickSelect over the gathered shares, fresh pair on the
     // same hub; P0 streams confirmed survivors into `stream`
     let reveal = opts.reveal_entropies;
+    let security = opts.security;
     let _qs_span = telemetry::span("phase.qs", phase as u64, job);
     let qs_slot = gate.qs_slot();
     let gate1 = gate.clone();
@@ -777,10 +802,13 @@ pub(crate) fn run_phase_drain(
         &opts.faults,
         &opts.transport,
         move |ctx: &mut PartyCtx| -> Result<QsOut> {
+            ctx.set_security(security);
             gate.checkpoint(qs_slot)?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent0, &[n]));
             let revealed = if reveal {
+                // MAC-EXEMPT: Debug-mode diagnostic reveal; the values are
+                // deliberately published, so forging them gains nothing
                 // OPEN-AUDIT: entropy values revealed ONLY under the
                 // caller's explicit PrivacyMode::Debug{reveal_entropies}
                 // opt-out — never on the default private path
@@ -799,10 +827,12 @@ pub(crate) fn run_phase_drain(
             Ok((idx, stats, revealed))
         },
         move |ctx: &mut PartyCtx| -> Result<Vec<usize>> {
+            ctx.set_security(security);
             gate1.checkpoint(qs_slot)?;
             ctx.reseed_for(namespace_tag(job, qs_tag(phase)));
             let ent = Shared(TensorR::from_vec(ent1, &[n]));
             if reveal {
+                // MAC-EXEMPT: Debug-mode diagnostic reveal (see P0 leg)
                 // OPEN-AUDIT: P1 leg of the PrivacyMode::Debug
                 // entropy reveal — must mirror P0's open to keep the
                 // transcript symmetric
@@ -919,6 +949,7 @@ pub(crate) fn run_phase_at(
             opts.job_tag,
             &opts.faults,
             &opts.transport,
+            opts.security,
         )?;
         let drain = run_phase_drain(
             &session,
@@ -1051,6 +1082,7 @@ pub(crate) fn run_phase_serial(
     let approx = opts.approx;
     let reveal = opts.reveal_entropies;
     let capture = opts.capture_shares;
+    let security = opts.security;
     type P0Out = (Vec<usize>, SelectStats, Option<Vec<f32>>, Option<Vec<i64>>, u64, f64);
     let faults = opts.faults.clone();
     let ((r0, meter_p0), (r1, meter_p1)) = run_pair_metered_cfg(
@@ -1058,6 +1090,7 @@ pub(crate) fn run_phase_serial(
         &faults,
         &opts.transport,
         move |ctx: &mut PartyCtx| -> Result<P0Out> {
+            ctx.set_security(security);
             let t0 = Instant::now();
             let bytes0 = ctx.chan.meter.bytes;
             let mut model = ctx.op("session_setup", |ctx| {
@@ -1072,6 +1105,8 @@ pub(crate) fn run_phase_serial(
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             let revealed = if reveal {
+                // MAC-EXEMPT: Debug-mode diagnostic reveal; the values are
+                // deliberately published, so forging them gains nothing
                 // OPEN-AUDIT: entropy values revealed ONLY under the
                 // caller's explicit PrivacyMode::Debug{reveal_entropies}
                 // opt-out — never on the default private path
@@ -1089,6 +1124,7 @@ pub(crate) fn run_phase_serial(
             Ok((idx, stats, revealed, cap, setup_bytes, setup_wall))
         },
         move |ctx: &mut PartyCtx| -> Result<(Vec<usize>, Option<Vec<i64>>)> {
+            ctx.set_security(security);
             let mut model = ctx.op("session_setup", |ctx| {
                 ctx.reseed_for(namespace_tag(job, setup_tag(phase)));
                 p1_recv_session(ctx, cfg, approx)
@@ -1106,6 +1142,7 @@ pub(crate) fn run_phase_serial(
             let cap = if capture { Some(ent_shares.clone()) } else { None };
             let ent = Shared(TensorR::from_vec(ent_shares, &[n]));
             if reveal {
+                // MAC-EXEMPT: Debug-mode diagnostic reveal (see P0 leg)
                 // OPEN-AUDIT: P1 leg of the PrivacyMode::Debug
                 // entropy reveal — must mirror P0's open to keep the
                 // transcript symmetric

@@ -1,0 +1,631 @@
+//! SPDZ-style authenticated sharing — the opt-in malicious-security tier.
+//!
+//! Semi-honest additive sharing lets a cheating party forge an opened
+//! value: nothing binds the share it sends to the share it holds.  The
+//! SPDZ fix (Damgård et al.) is an information-theoretic MAC under a
+//! global key α held additively by the parties: every authenticated value
+//! x carries a MAC α·x, itself additively shared, and every opening is
+//! (eventually) checked against it.  A forged open of magnitude δ leaves
+//! a MAC residue α·δ the forger cannot cancel without knowing the peer's
+//! key share.
+//!
+//! This module provides both layers of that design:
+//!
+//!  * [`AuthShare`] — explicit `{share, mac}` vectors with communication-
+//!    free linear algebra (the lazy `public_modifier` trick makes public
+//!    constants free: they ride a third, publicly-agreed component and
+//!    never touch the MAC), dealer-minted authenticated Beaver triples
+//!    ([`super::dealer::Dealer::auth_triples`]) and an authenticated
+//!    [`mul`] whose difference openings are themselves MAC-checked.
+//!
+//!  * [`MacLedger`] — the deferred, one-round-amortized batched check the
+//!    selection pipeline actually runs on.  Every `proto::open` /
+//!    `open_many` / weight-delta preopen under
+//!    [`SecurityMode::Malicious`] enqueues `(opened, mac_share)` into the
+//!    per-party ledger; [`flush_macs`] collapses the whole backlog into a
+//!    single random-linear-combination zero-check — ONE ring element on
+//!    the wire per flush, regardless of how many openings it covers — at
+//!    phase boundaries and before any value leaves MPC.
+//!
+//! ## Check algebra
+//!
+//! For opening k the ledger accumulates, per party i,
+//!
+//! ```text
+//!   z_i += r_k · (α_i · x̂_k  −  m_{i,k})
+//! ```
+//!
+//! where x̂_k is the reconstruction THIS party computed, α_i its additive
+//! key share, and m_{i,k} its MAC share (α·x for ledger-synthesized MACs,
+//! the carried component for [`AuthShare`]s).  Summed across parties with
+//! honest traffic this telescopes to r·(α·x̂ − α·x) = 0.  A wire forgery
+//! that skews one party's reconstruction by δ leaves r·α_j·δ where α_j is
+//! the OTHER party's key share: with r and α forced odd (units mod 2^64),
+//! that vanishes only if α_j = 0 — probability 2^-64 over the key, i.e.
+//! deterministic detection for every real seed.  The r_k are drawn from a
+//! seed-agreed stream advanced only at record time, so both parties
+//! weight the same opening identically without communication.
+//!
+//! ## Threat model (what Malicious does and does not cover)
+//!
+//! Covered: integrity of every AUDITED opening (the non-Debug sites in
+//! `results/OPEN_AUDIT.json` — QuickSelect partition bits, pivot coins,
+//! appraisal outputs, masked weight-delta preopens).  A forged open
+//! surfaces as a typed [`NetError::MacCheckFailed`] at the next flush,
+//! never a panic and never a silently skewed selection.
+//!
+//! Not covered (documented residuals, see README "Security modes"):
+//! Beaver masked-difference exchanges inside `mul`/`matmul` are not yet
+//! MAC-checked on the selection path (tampering there corrupts shares
+//! CONSISTENTLY, so both parties later reconstruct the same wrong value —
+//! full `AuthShare` threading through the tensor layer is the follow-up);
+//! truncation is still the semi-honest local trick; and the symmetric
+//! trusted dealer means each party can derive the FULL key α from the
+//! common seed, so the tier defends against wire tampering and a
+//! cheating transport, not a party that also controls the dealer seed
+//! (an authenticated dealer is the second residual).
+
+use crate::runtime::telemetry::{self, Labels};
+use crate::util::Rng;
+
+use super::net::{NetError, NetResult};
+use super::proto::PartyCtx;
+
+/// Which adversary the engine defends against — carried on
+/// `RuntimeProfile` and threaded down to every `PartyCtx`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SecurityMode {
+    /// Honest-but-curious parties (the default): additive sharing only,
+    /// byte-identical to the pre-MAC engine.
+    #[default]
+    SemiHonest,
+    /// Wire-active adversary: every audited opening is enqueued for a
+    /// batched SPDZ MAC zero-check, flushed at phase boundaries.
+    Malicious,
+}
+
+impl SecurityMode {
+    pub fn is_malicious(self) -> bool {
+        self == SecurityMode::Malicious
+    }
+
+    /// Static label for telemetry / bench rows (closed two-value set).
+    pub fn label(self) -> &'static str {
+        match self {
+            SecurityMode::SemiHonest => "semi-honest",
+            SecurityMode::Malicious => "malicious",
+        }
+    }
+
+    /// Parse a CLI / `SF_SECURITY` spelling.  Accepts `semi-honest`,
+    /// `semihonest`, `semi_honest`, `malicious`.
+    pub fn parse(s: &str) -> Option<SecurityMode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "semi-honest" | "semihonest" | "semi_honest" => Some(SecurityMode::SemiHonest),
+            "malicious" => Some(SecurityMode::Malicious),
+            _ => None,
+        }
+    }
+}
+
+/// Salt for the ledger's random-linear-combination coefficient stream —
+/// distinct from every dealer salt so arming MACs never perturbs the
+/// triple streams (the SemiHonest byte-identity contract).
+const MAC_RLC_SALT: u64 = 0x00AC_C0EF_F1C1_E47u64;
+
+/// The deferred batched MAC check: an O(1)-memory accumulator of
+/// r_k-weighted MAC residues, flushed by [`flush_macs`].
+///
+/// Both parties must record the same openings in the same order (the SPMD
+/// protocol structure guarantees this) and flush at the same protocol
+/// points; the coefficient stream is derived from the shared session
+/// seed, so no coordination traffic is ever needed between flushes.
+pub struct MacLedger {
+    /// Σ r_k · (α_share·x̂_k − m_k), this party's half of the zero-check.
+    acc: i64,
+    /// Openings (ring elements) covered since the last flush.
+    opens: u64,
+    /// The agreed r_k stream — advanced only by [`MacLedger::record`].
+    rng: Rng,
+}
+
+impl MacLedger {
+    pub fn new(session_seed: u64) -> MacLedger {
+        MacLedger { acc: 0, opens: 0, rng: Rng::new(session_seed ^ MAC_RLC_SALT) }
+    }
+
+    /// Openings enqueued since the last flush.
+    pub fn pending(&self) -> u64 {
+        self.opens
+    }
+
+    /// Enqueue one opened batch: `opened` is the reconstruction THIS
+    /// party computed, `mac_shares` its additive MAC shares for the same
+    /// elements (α·share for ledger-synthesized MACs, the carried `mac`
+    /// component for [`AuthShare`] opens).  Each element gets a fresh odd
+    /// coefficient from the agreed stream.
+    pub fn record<I>(&mut self, alpha_share: i64, opened: &[i64], mac_shares: I)
+    where
+        I: IntoIterator<Item = i64>,
+    {
+        for (&x_hat, m) in opened.iter().zip(mac_shares) {
+            let r = self.rng.next_i64() | 1;
+            let residue = alpha_share.wrapping_mul(x_hat).wrapping_sub(m);
+            self.acc = self.acc.wrapping_add(r.wrapping_mul(residue));
+            self.opens += 1;
+        }
+    }
+
+    /// Drain the accumulator for a flush: returns (residue share, opens
+    /// covered) and resets both.  The coefficient stream is NOT reset —
+    /// it keeps advancing so successive batches never reuse weights.
+    fn take(&mut self) -> (i64, u64) {
+        let out = (self.acc, self.opens);
+        self.acc = 0;
+        self.opens = 0;
+        out
+    }
+}
+
+/// Per-party authentication state, armed on a `PartyCtx` by
+/// `PartyCtx::set_security(SecurityMode::Malicious)`.
+pub struct AuthState {
+    /// The full MAC key α (derivable by both parties under the symmetric
+    /// dealer — see the module docs' threat model).  Odd by construction.
+    pub alpha_full: i64,
+    /// This party's additive share of α.
+    pub alpha_share: i64,
+    /// The deferred batched check for every audited opening.
+    pub ledger: MacLedger,
+}
+
+impl AuthState {
+    pub fn new(alpha_full: i64, alpha_share: i64, session_seed: u64) -> AuthState {
+        AuthState { alpha_full, alpha_share, ledger: MacLedger::new(session_seed) }
+    }
+}
+
+/// Flush this party's MAC ledger: ONE ring element each way, then the
+/// zero test.  A no-op (no wire traffic at all) when the ctx is
+/// semi-honest or nothing was opened since the last flush — which is what
+/// keeps `SecurityMode::SemiHonest` byte-identical to the pre-MAC engine.
+///
+/// Both parties must call this at the same protocol point; each learns
+/// the same residue sum, so on a forgery BOTH return the typed
+/// [`NetError::MacCheckFailed`] and the session unwinds symmetrically
+/// (no half-failed hang).  `phase` names the flush point in the error.
+pub fn flush_macs(ctx: &mut PartyCtx, phase: &'static str) -> NetResult<()> {
+    let Some(auth) = ctx.auth.as_mut() else {
+        return Ok(());
+    };
+    if auth.ledger.pending() == 0 {
+        return Ok(());
+    }
+    let (mine, opens) = auth.ledger.take();
+    let t0 = telemetry::maybe_now();
+    let theirs = ctx.op("mac_check", |c| {
+        c.chan.begin_exchange(vec![mine])?;
+        c.chan.recv_exact(1)
+    })?;
+    let total = mine.wrapping_add(theirs.first().copied().unwrap_or_default());
+    if telemetry::enabled() {
+        let l = Labels { party: ctx.chan.party_label, op: Some("mac_check"), ..Labels::NONE };
+        telemetry::counter_add(telemetry::MAC_CHECKS, l, 1);
+        telemetry::observe(telemetry::MAC_BATCH_SIZE, l, opens);
+        telemetry::observe_since_us(telemetry::MAC_CHECK_US, l, t0);
+    }
+    if total != 0 {
+        return Err(NetError::MacCheckFailed { phase, opens });
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Explicit authenticated shares
+// ---------------------------------------------------------------------------
+
+/// A vector of authenticated values: this party's additive `share`, its
+/// additive MAC share (`Σ mac = α · Σ share`), and the lazy
+/// `public_modifier` — a publicly-agreed additive component that lets
+/// public constants join with NO communication and NO MAC update.  The
+/// plaintext is `Σ_parties share + public_modifier`; the MAC covers only
+/// the private part, which is exactly what an opening must defend.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct AuthShare {
+    pub share: Vec<i64>,
+    pub mac: Vec<i64>,
+    pub public_modifier: Vec<i64>,
+}
+
+impl AuthShare {
+    /// Wrap freshly dealt (share, mac) components with a zero modifier.
+    pub fn new(share: Vec<i64>, mac: Vec<i64>) -> AuthShare {
+        let n = share.len();
+        AuthShare { share, mac, public_modifier: vec![0; n] }
+    }
+
+    pub fn len(&self) -> usize {
+        self.share.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.share.is_empty()
+    }
+
+    /// Elementwise sum — pure local algebra on all three components.
+    pub fn add(&self, other: &AuthShare) -> AuthShare {
+        self.zip_with(other, i64::wrapping_add)
+    }
+
+    /// Elementwise difference.
+    pub fn sub(&self, other: &AuthShare) -> AuthShare {
+        self.zip_with(other, i64::wrapping_sub)
+    }
+
+    fn zip_with(&self, other: &AuthShare, f: fn(i64, i64) -> i64) -> AuthShare {
+        AuthShare {
+            share: self.share.iter().zip(&other.share).map(|(&a, &b)| f(a, b)).collect(),
+            mac: self.mac.iter().zip(&other.mac).map(|(&a, &b)| f(a, b)).collect(),
+            public_modifier: self
+                .public_modifier
+                .iter()
+                .zip(&other.public_modifier)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    /// Add a public constant vector — the lazy trick: only the modifier
+    /// moves; shares and MACs are untouched, so this costs nothing on the
+    /// wire and nothing at check time.  Both parties apply it (SPMD).
+    pub fn add_public(&self, c: &[i64]) -> AuthShare {
+        AuthShare {
+            share: self.share.clone(),
+            mac: self.mac.clone(),
+            public_modifier: self
+                .public_modifier
+                .iter()
+                .zip(c)
+                .map(|(&m, &k)| m.wrapping_add(k))
+                .collect(),
+        }
+    }
+
+    /// Multiply by a public scalar: all three components scale (the MAC
+    /// relation α·(k·x) = k·(α·x) is linear).
+    pub fn scale_public(&self, k: i64) -> AuthShare {
+        AuthShare {
+            share: self.share.iter().map(|&v| v.wrapping_mul(k)).collect(),
+            mac: self.mac.iter().map(|&v| v.wrapping_mul(k)).collect(),
+            public_modifier: self.public_modifier.iter().map(|&v| v.wrapping_mul(k)).collect(),
+        }
+    }
+
+    /// Affine map k·x + c in one local pass — still communication-free.
+    pub fn affine(&self, k: i64, c: &[i64]) -> AuthShare {
+        self.scale_public(k).add_public(c)
+    }
+}
+
+/// Open an authenticated vector and enqueue its MAC check: the private
+/// part crosses the wire (one round), the reconstruction is recorded in
+/// the ledger against the CARRIED mac component, and the public modifier
+/// is applied after.  The check itself is deferred to the next
+/// [`flush_macs`]; an unarmed (semi-honest) ctx degrades to an unchecked
+/// open.
+pub fn open_checked(ctx: &mut PartyCtx, x: &AuthShare) -> NetResult<Vec<i64>> {
+    let n = x.share.len();
+    let mut payload = ctx.arena.take(n);
+    payload.extend_from_slice(&x.share);
+    ctx.chan.begin_exchange(payload)?;
+    let mut opened = ctx.chan.recv_exact(n)?;
+    for (v, &mine) in opened.iter_mut().zip(&x.share) {
+        *v = v.wrapping_add(mine);
+    }
+    if let Some(auth) = ctx.auth.as_mut() {
+        auth.ledger.record(auth.alpha_share, &opened, x.mac.iter().copied());
+    }
+    for (v, &m) in opened.iter_mut().zip(&x.public_modifier) {
+        *v = v.wrapping_add(m);
+    }
+    Ok(opened)
+}
+
+/// Authenticated Beaver multiplication: z = x·y elementwise, with the
+/// output's MAC share assembled from the triple's MAC components so the
+/// product is as protected as its inputs.  The two difference openings
+/// (x−a, y−b) go through [`open_checked`] semantics — they are recorded
+/// in the ledger, so a forged difference is caught at the next flush
+/// (this is what makes SPDZ multiplication malicious-secure).
+///
+/// `alpha_share` is this party's key share (`AuthState::alpha_share`);
+/// passing it explicitly keeps the function total — no armed-ctx
+/// precondition to panic on.  Vectors of unequal length truncate to the
+/// shortest (caller contract: equal lengths).
+pub fn mul(
+    ctx: &mut PartyCtx,
+    alpha_share: i64,
+    x: &AuthShare,
+    y: &AuthShare,
+) -> NetResult<AuthShare> {
+    let n = x.share.len().min(y.share.len());
+    let alpha_full = ctx.auth.as_ref().map(|a| a.alpha_full).unwrap_or_default();
+    let t = ctx.chan.compute(|| ctx.dealer.auth_triples(n, alpha_full));
+    let [a, b, c, ma, mb, mc] = t;
+    // open (x−a, y−b) in one batched authenticated round
+    let ea = AuthShare {
+        share: x.share.iter().zip(&a).map(|(&p, &q)| p.wrapping_sub(q)).collect(),
+        mac: x.mac.iter().zip(&ma).map(|(&p, &q)| p.wrapping_sub(q)).collect(),
+        public_modifier: x.public_modifier[..n].to_vec(),
+    };
+    let db = AuthShare {
+        share: y.share.iter().zip(&b).map(|(&p, &q)| p.wrapping_sub(q)).collect(),
+        mac: y.mac.iter().zip(&mb).map(|(&p, &q)| p.wrapping_sub(q)).collect(),
+        public_modifier: y.public_modifier[..n].to_vec(),
+    };
+    let e = open_checked(ctx, &ea)?;
+    let d = open_checked(ctx, &db)?;
+    let leader = ctx.is_leader();
+    let mut share = Vec::with_capacity(n);
+    let mut mac = Vec::with_capacity(n);
+    for i in 0..n {
+        // z_i = c + e·b + d·a (+ e·d, leader only)
+        let mut z = c[i]
+            .wrapping_add(e[i].wrapping_mul(b[i]))
+            .wrapping_add(d[i].wrapping_mul(a[i]));
+        if leader {
+            z = z.wrapping_add(e[i].wrapping_mul(d[i]));
+        }
+        share.push(z);
+        // mac_z_i = mac_c + e·mac_b + d·mac_a + α_share·e·d (both parties)
+        let mz = mc[i]
+            .wrapping_add(e[i].wrapping_mul(mb[i]))
+            .wrapping_add(d[i].wrapping_mul(ma[i]))
+            .wrapping_add(alpha_share.wrapping_mul(e[i].wrapping_mul(d[i])));
+        mac.push(mz);
+    }
+    Ok(AuthShare::new(share, mac))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mpc::dealer::Dealer;
+    use crate::mpc::engine::run_pair;
+    use crate::mpc::net::Role;
+
+    #[test]
+    fn security_mode_parses_and_defaults() {
+        assert_eq!(SecurityMode::default(), SecurityMode::SemiHonest);
+        assert_eq!(SecurityMode::parse("semi-honest"), Some(SecurityMode::SemiHonest));
+        assert_eq!(SecurityMode::parse("SemiHonest"), Some(SecurityMode::SemiHonest));
+        assert_eq!(SecurityMode::parse("malicious"), Some(SecurityMode::Malicious));
+        assert_eq!(SecurityMode::parse("MALICIOUS"), Some(SecurityMode::Malicious));
+        assert_eq!(SecurityMode::parse("byzantine"), None);
+        assert!(SecurityMode::Malicious.is_malicious());
+        assert_eq!(SecurityMode::Malicious.label(), "malicious");
+    }
+
+    #[test]
+    fn mac_key_is_odd_consistent_and_position_independent() {
+        for seed in [1u64, 42, 0xdead_beef, u64::MAX] {
+            let d0 = Dealer::new(seed, Role::ModelOwner);
+            let mut d1 = Dealer::new(seed, Role::DataOwner);
+            let (a_full0, a_sh0) = d0.mac_key();
+            // the key must not depend on stream position
+            let _ = d1.triples(13);
+            d1.reseed_for(99);
+            let (a_full1, a_sh1) = d1.mac_key();
+            assert_eq!(a_full0, a_full1, "both parties derive the same full key");
+            assert_eq!(a_full0 & 1, 1, "alpha must be odd (a ring unit)");
+            assert_eq!(a_sh0.wrapping_add(a_sh1), a_full0, "shares sum to alpha");
+        }
+    }
+
+    #[test]
+    fn auth_triples_carry_valid_macs() {
+        let seed = 77;
+        let mut d0 = Dealer::new(seed, Role::ModelOwner);
+        let mut d1 = Dealer::new(seed, Role::DataOwner);
+        let (alpha, _) = d0.mac_key();
+        let t0 = d0.auth_triples(50, alpha);
+        let t1 = d1.auth_triples(50, alpha);
+        for i in 0..50 {
+            let v: Vec<i64> = (0..6).map(|j| t0[j][i].wrapping_add(t1[j][i])).collect();
+            let (a, b, c) = (v[0], v[1], v[2]);
+            assert_eq!(c, a.wrapping_mul(b), "triple {i}");
+            assert_eq!(v[3], alpha.wrapping_mul(a), "mac(a) at {i}");
+            assert_eq!(v[4], alpha.wrapping_mul(b), "mac(b) at {i}");
+            assert_eq!(v[5], alpha.wrapping_mul(c), "mac(c) at {i}");
+        }
+    }
+
+    /// Build a consistent two-party authenticated sharing of `x` for
+    /// wire-free ledger tests.
+    fn share_pair(alpha: i64, x: &[i64], rng: &mut crate::util::Rng) -> (AuthShare, AuthShare) {
+        let mut s0 = Vec::new();
+        let mut s1 = Vec::new();
+        let mut m0 = Vec::new();
+        let mut m1 = Vec::new();
+        for &v in x {
+            let r = rng.next_i64();
+            s0.push(r);
+            s1.push(v.wrapping_sub(r));
+            let mr = rng.next_i64();
+            m0.push(mr);
+            m1.push(alpha.wrapping_mul(v).wrapping_sub(mr));
+        }
+        (AuthShare::new(s0, m0), AuthShare::new(s1, m1))
+    }
+
+    #[test]
+    fn ledger_accepts_honest_opens_and_catches_a_forgery() {
+        let seed = 1234;
+        let alpha: i64 = (0x1357_9bdf_2468_aceu64 as i64) | 1;
+        let a_sh0 = 0x0fed_cba9_8765_432i64;
+        let a_sh1 = alpha.wrapping_sub(a_sh0);
+        let mut rng = crate::util::Rng::new(9);
+        let x = vec![5i64, -7, 0, i64::MAX, 123_456_789];
+        let (p0, p1) = share_pair(alpha, &x, &mut rng);
+        let opened: Vec<i64> =
+            p0.share.iter().zip(&p1.share).map(|(&a, &b)| a.wrapping_add(b)).collect();
+        // honest: both parties reconstruct the same values
+        let mut l0 = MacLedger::new(seed);
+        let mut l1 = MacLedger::new(seed);
+        l0.record(a_sh0, &opened, p0.mac.iter().copied());
+        l1.record(a_sh1, &opened, p1.mac.iter().copied());
+        assert_eq!(l0.pending(), x.len() as u64);
+        let (z0, _) = l0.take();
+        let (z1, _) = l1.take();
+        assert_eq!(z0.wrapping_add(z1), 0, "honest residues must cancel");
+        // forged: party 1's reconstruction of element 2 is off by one limb
+        let mut forged = opened.clone();
+        forged[2] ^= 1;
+        let mut f0 = MacLedger::new(seed);
+        let mut f1 = MacLedger::new(seed);
+        f0.record(a_sh0, &opened, p0.mac.iter().copied());
+        f1.record(a_sh1, &forged, p1.mac.iter().copied());
+        let (z0, _) = f0.take();
+        let (z1, _) = f1.take();
+        assert_ne!(z0.wrapping_add(z1), 0, "an odd-δ forgery must leave a residue");
+    }
+
+    #[test]
+    fn linear_ops_preserve_the_mac_invariant() {
+        let alpha: i64 = 0x600d_cafe | 1;
+        let mut rng = crate::util::Rng::new(31);
+        let x = vec![10i64, -3, 7];
+        let y = vec![2i64, 2, -9];
+        let (x0, x1) = share_pair(alpha, &x, &mut rng);
+        let (y0, y1) = share_pair(alpha, &y, &mut rng);
+        let k = 13i64;
+        let c = vec![100i64, -200, 300];
+        let z0 = x0.add(&y0).affine(k, &c);
+        let z1 = x1.add(&y1).affine(k, &c);
+        for i in 0..3 {
+            // plaintext = Σ shares + modifier (modifiers agree; count once)
+            assert_eq!(z0.public_modifier[i], z1.public_modifier[i]);
+            let priv_part = z0.share[i].wrapping_add(z1.share[i]);
+            let value = priv_part.wrapping_add(z0.public_modifier[i]);
+            let expect = x[i].wrapping_add(y[i]).wrapping_mul(k).wrapping_add(c[i]);
+            assert_eq!(value, expect, "value at {i}");
+            // MAC covers the private part only
+            let mac = z0.mac[i].wrapping_add(z1.mac[i]);
+            assert_eq!(mac, alpha.wrapping_mul(priv_part), "mac at {i}");
+        }
+        // sub too
+        let d0 = x0.sub(&y0);
+        let d1 = x1.sub(&y1);
+        for i in 0..3 {
+            let v = d0.share[i].wrapping_add(d1.share[i]);
+            assert_eq!(v, x[i].wrapping_sub(y[i]));
+            assert_eq!(d0.mac[i].wrapping_add(d1.mac[i]), alpha.wrapping_mul(v));
+        }
+    }
+
+    #[test]
+    fn add_public_is_mac_free_and_opens_correctly() {
+        let alpha: i64 = 0x0dd | 1;
+        let mut rng = crate::util::Rng::new(8);
+        let x = vec![4i64, -1];
+        let (x0, x1) = share_pair(alpha, &x, &mut rng);
+        let c = vec![1000i64, 2000];
+        let z0 = x0.add_public(&c);
+        let z1 = x1.add_public(&c);
+        assert_eq!(z0.share, x0.share, "shares untouched by a public add");
+        assert_eq!(z0.mac, x0.mac, "macs untouched by a public add");
+        let opened: Vec<i64> = z0
+            .share
+            .iter()
+            .zip(&z1.share)
+            .zip(&z0.public_modifier)
+            .map(|((&a, &b), &m)| a.wrapping_add(b).wrapping_add(m))
+            .collect();
+        assert_eq!(opened, vec![1004, 1999]);
+    }
+
+    #[test]
+    fn authenticated_mul_opens_to_the_product_and_flushes_clean() {
+        let seed = 2024;
+        let xv = vec![3i64, -4, 11, 0];
+        let yv = vec![5i64, 6, -2, 9];
+        let expect: Vec<i64> =
+            xv.iter().zip(&yv).map(|(&a, &b)| a.wrapping_mul(b)).collect();
+        let party = |role_is_p0: bool| {
+            let (xv, yv) = (xv.clone(), yv.clone());
+            move |ctx: &mut PartyCtx| {
+                ctx.set_security(SecurityMode::Malicious);
+                let (alpha, a_sh) = {
+                    let a = ctx.auth.as_ref().unwrap();
+                    (a.alpha_full, a.alpha_share)
+                };
+                // both parties derive the same deterministic sharing
+                let mut srng = crate::util::Rng::new(555);
+                let mut mine_x = (Vec::new(), Vec::new());
+                let mut mine_y = (Vec::new(), Vec::new());
+                for (dst, vals) in [(&mut mine_x, &xv), (&mut mine_y, &yv)] {
+                    for &v in vals.iter() {
+                        let r = srng.next_i64();
+                        let mr = srng.next_i64();
+                        if role_is_p0 {
+                            dst.0.push(r);
+                            dst.1.push(mr);
+                        } else {
+                            dst.0.push(v.wrapping_sub(r));
+                            dst.1.push(alpha.wrapping_mul(v).wrapping_sub(mr));
+                        }
+                    }
+                }
+                let xs = AuthShare::new(mine_x.0, mine_x.1);
+                let ys = AuthShare::new(mine_y.0, mine_y.1);
+                let z = mul(ctx, a_sh, &xs, &ys).unwrap();
+                let opened = open_checked(ctx, &z).unwrap();
+                flush_macs(ctx, "test").unwrap();
+                opened
+            }
+        };
+        let (r0, r1) = run_pair(seed, party(true), party(false));
+        assert_eq!(r0, expect);
+        assert_eq!(r1, expect);
+    }
+
+    #[test]
+    fn flush_is_silent_when_unarmed_or_empty() {
+        let ((bytes_unarmed, bytes_empty), _) = run_pair(
+            7,
+            |ctx: &mut PartyCtx| {
+                // unarmed: flush must not touch the wire
+                let b0 = ctx.chan.meter.bytes;
+                flush_macs(ctx, "p").unwrap();
+                let unarmed = ctx.chan.meter.bytes - b0;
+                // armed but nothing recorded: still silent
+                ctx.set_security(SecurityMode::Malicious);
+                let b1 = ctx.chan.meter.bytes;
+                flush_macs(ctx, "p").unwrap();
+                (unarmed, ctx.chan.meter.bytes - b1)
+            },
+            |ctx: &mut PartyCtx| {
+                flush_macs(ctx, "p").unwrap();
+                ctx.set_security(SecurityMode::Malicious);
+                flush_macs(ctx, "p").unwrap();
+            },
+        );
+        assert_eq!(bytes_unarmed, 0);
+        assert_eq!(bytes_empty, 0);
+    }
+
+    #[test]
+    fn set_security_toggles_and_back() {
+        run_pair(
+            3,
+            |ctx: &mut PartyCtx| {
+                assert!(ctx.auth.is_none(), "default is semi-honest");
+                ctx.set_security(SecurityMode::Malicious);
+                assert!(ctx.auth.is_some());
+                ctx.set_security(SecurityMode::SemiHonest);
+                assert!(ctx.auth.is_none());
+            },
+            |_ctx: &mut PartyCtx| {},
+        );
+    }
+}

@@ -313,6 +313,54 @@ impl Dealer {
         (b, share)
     }
 
+    /// This party's additive share of the global SPDZ MAC key α — plus the
+    /// full key, which the symmetric trusted-dealer model makes derivable
+    /// by both parties (they share the dealer seed; see `mpc::auth` for
+    /// the threat-model consequences).  Derived purely from the session
+    /// seed on a dedicated salt, consuming NO stream randomness and
+    /// independent of any [`reseed_for`](Dealer::reseed_for) position, so
+    /// arming authentication cannot shift the triple streams.
+    ///
+    /// α is forced ODD: an odd key is a unit mod 2^64, so a wire tamper of
+    /// odd magnitude δ yields a MAC residue α_share·δ that vanishes only
+    /// when the peer's key share is 0 — detection is deterministic for
+    /// every real seed rather than probabilistic per run.
+    pub fn mac_key(&self) -> (i64, i64) {
+        let mut krng = Rng::new(self.seed ^ 0x5fDC_Ba7A_11CEu64.wrapping_mul(0x2545F4914F6CDD1D));
+        let alpha = krng.next_i64() | 1;
+        let a0 = krng.next_i64();
+        let share = match self.role {
+            Role::ModelOwner => a0,
+            Role::DataOwner => alpha.wrapping_sub(a0),
+        };
+        (alpha, share)
+    }
+
+    /// `n` AUTHENTICATED Beaver triples under MAC key `alpha`: this
+    /// party's shares of (a, b, c=a·b) plus shares of the three MACs
+    /// (α·a, α·b, α·c).  Same symmetric-derivation pattern as
+    /// [`triples`](Dealer::triples): both parties walk the identical
+    /// stream, the leader keeps the fresh random shares, the data owner
+    /// keeps value − share.
+    pub fn auth_triples(&mut self, n: usize, alpha: i64) -> [Vec<i64>; 6] {
+        self.seq += 1;
+        self.note_minted("auth_triples", n);
+        let mut out: [Vec<i64>; 6] = std::array::from_fn(|_| Vec::with_capacity(n));
+        let leader = self.role == Role::ModelOwner;
+        for _ in 0..n {
+            let a = self.rng.next_i64();
+            let b = self.rng.next_i64();
+            let c = a.wrapping_mul(b);
+            let vals =
+                [a, b, c, alpha.wrapping_mul(a), alpha.wrapping_mul(b), alpha.wrapping_mul(c)];
+            for (slot, &v) in out.iter_mut().zip(&vals) {
+                let r = self.rng.next_i64();
+                slot.push(if leader { r } else { v.wrapping_sub(r) });
+            }
+        }
+        out
+    }
+
     /// `n` binary AND triples over u64 words (bitwise, XOR-shared):
     /// returns shares of (u, v, w) with w = u & v. RNG-dominated → local.
     pub fn bin_triples(&mut self, n: usize) -> (Vec<u64>, Vec<u64>, Vec<u64>) {

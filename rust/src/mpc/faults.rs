@@ -39,6 +39,15 @@ pub enum FaultMode {
     StallAt { msg: u64, dur: Duration },
     /// Silently drop send number `msg` (the sender meters it as sent).
     DropReplyAt { msg: u64 },
+    /// Forge send number `msg`: flip the low bit of its first limb before
+    /// it leaves this endpoint.  The frame still arrives (sizes, framing
+    /// and all later traffic are untouched), so the parties stay in
+    /// lockstep — a SEMANTIC fault, invisible to the transport layer.
+    /// Semi-honest sessions accept the forged value silently;
+    /// `SecurityMode::Malicious` catches it at the next MAC-ledger flush
+    /// when the tampered frame was an audited opening.  The odd delta
+    /// (XOR of bit 0) is a ring unit, so detection there is deterministic.
+    TamperAt { msg: u64 },
 }
 
 /// A seeded single-fault schedule.  Construct with [`FaultPlan::new`] /
@@ -81,9 +90,11 @@ impl FaultPlan {
         self.fired.load(Ordering::SeqCst)
     }
 
-    /// Channel hook: called before every send on an armed endpoint.
+    /// Channel hook: called before every send on an armed endpoint, with
+    /// mutable access to the outbound frame so semantic faults
+    /// ([`FaultMode::TamperAt`]) can corrupt payload in place.
     /// `Ok(true)` delivers, `Ok(false)` drops the frame, `Err` kills.
-    pub(crate) fn on_send(&self) -> NetResult<bool> {
+    pub(crate) fn on_send(&self, data: &mut [i64]) -> NetResult<bool> {
         let i = self.counter.fetch_add(1, Ordering::SeqCst);
         match self.mode {
             FaultMode::KillAt { msg } if i == msg => {
@@ -98,6 +109,13 @@ impl FaultPlan {
             FaultMode::DropReplyAt { msg } if i == msg => {
                 self.fired.store(true, Ordering::SeqCst);
                 Ok(false)
+            }
+            FaultMode::TamperAt { msg } if i == msg => {
+                self.fired.store(true, Ordering::SeqCst);
+                if let Some(v) = data.first_mut() {
+                    *v ^= 1;
+                }
+                Ok(true)
             }
             _ => Ok(true),
         }
@@ -255,6 +273,25 @@ mod tests {
         assert!(c0.send_only(vec![2]).is_ok());
         assert_eq!(c0.send_only(vec![3]), Err(NetError::PeerClosed));
         assert!(plan.has_fired());
+    }
+
+    #[test]
+    fn tamper_flips_one_limb_and_still_delivers() {
+        let plan = FaultPlan::new(Role::DataOwner, FaultMode::TamperAt { msg: 1 });
+        let fc = FaultyChan::new(plan.clone());
+        let (mut c0, mut c1) = fc.pair();
+        c1.send_only(vec![10, 20]).unwrap();
+        c1.send_only(vec![10, 20]).unwrap(); // this one is forged
+        c1.send_only(vec![30]).unwrap();
+        assert_eq!(c0.recv_only().unwrap(), vec![10, 20]);
+        assert_eq!(
+            c0.recv_only().unwrap(),
+            vec![11, 20],
+            "low bit of the first limb flips; frame still delivers"
+        );
+        assert_eq!(c0.recv_only().unwrap(), vec![30], "later frames untouched");
+        assert!(plan.has_fired());
+        assert_eq!(c1.meter.messages, 3, "a forged frame meters like an honest one");
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! MLP emulation fast path.  Parties run on two OS threads with metered
 //! channels; delays are simulated from the meters (DESIGN.md §3).
 
+pub mod auth;
 pub mod cmp;
 pub mod dealer;
 pub mod engine;
@@ -13,6 +14,7 @@ pub mod nonlin;
 pub mod proto;
 pub mod wire;
 
+pub use auth::{AuthShare, AuthState, MacLedger, SecurityMode};
 pub use engine::{run_pair, run_pair_metered};
 pub use faults::{FaultMode, FaultPlan, FaultPolicy, FaultyChan, RetryPolicy};
 pub use net::{CostMeter, NetConfig, NetError, NetResult, OpRecord, Role, Transport};

@@ -38,6 +38,13 @@ pub enum NetError {
     /// fingerprint, or public-parameter digest disagreed.  Surfaced as a
     /// typed error at connect time instead of a mid-protocol hang.
     Handshake { reason: String },
+    /// The batched SPDZ MAC zero-check failed at a ledger flush under
+    /// `SecurityMode::Malicious`: some opened value since the previous
+    /// flush was forged on the wire.  `phase` names the flush point,
+    /// `opens` how many openings the failed batch covered.  Deliberately
+    /// value-blind — neither the opened values nor the MAC residue leave
+    /// the check.
+    MacCheckFailed { phase: &'static str, opens: u64 },
 }
 
 impl std::fmt::Display for NetError {
@@ -52,6 +59,10 @@ impl std::fmt::Display for NetError {
                 "net: frame mismatch in op `{op}`: expected {expected} elements, got {got}"
             ),
             NetError::Handshake { reason } => write!(f, "net: handshake failed: {reason}"),
+            NetError::MacCheckFailed { phase, opens } => write!(
+                f,
+                "mac: batched MAC zero-check failed at `{phase}` covering {opens} opening(s) — an opened value was forged"
+            ),
         }
     }
 }
@@ -289,10 +300,10 @@ impl Chan {
         self.transport.kind()
     }
 
-    fn send_raw(&mut self, data: Vec<i64>) -> NetResult<()> {
+    fn send_raw(&mut self, mut data: Vec<i64>) -> NetResult<()> {
         let n = data.len();
         if let Some(plan) = self.inject.clone() {
-            if !plan.on_send()? {
+            if !plan.on_send(&mut data)? {
                 // injected drop: the frame is lost on the wire, but this
                 // endpoint believes it sent — meter and move on; the PEER
                 // will surface the failure as a recv Timeout.

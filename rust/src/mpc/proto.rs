@@ -16,6 +16,7 @@ use crate::fixed;
 use crate::tensor::TensorR;
 use crate::util::Rng;
 
+use super::auth::{AuthState, SecurityMode};
 use super::dealer::Dealer;
 use super::net::{Chan, NetResult, Role};
 
@@ -55,6 +56,11 @@ pub struct PartyCtx {
     pub rng: Rng,
     /// reusable payload buffers for the share hot path
     pub arena: Arena,
+    /// SPDZ authentication state — `Some` iff the session runs under
+    /// [`SecurityMode::Malicious`] (see [`PartyCtx::set_security`]).
+    /// `None` (the default) keeps every protocol path byte-identical to
+    /// the pre-MAC engine.
+    pub auth: Option<AuthState>,
     /// session seed, kept for per-batch stream derivation
     seed: u64,
 }
@@ -68,6 +74,7 @@ impl PartyCtx {
             dealer: Dealer::new(dealer_seed, role),
             rng,
             arena: Arena::default(),
+            auth: None,
             seed: dealer_seed,
         }
     }
@@ -86,8 +93,25 @@ impl PartyCtx {
             dealer: Dealer::new(dealer_seed, role).with_hub(hub),
             rng,
             arena: Arena::default(),
+            auth: None,
             seed: dealer_seed,
         }
+    }
+
+    /// Arm (or disarm) SPDZ authentication for this session.  Called by
+    /// both party closures at the same protocol point, BEFORE any audited
+    /// open.  The MAC key derives position-independently from the dealer
+    /// seed ([`Dealer::mac_key`]) and the ledger's coefficient stream
+    /// from the session seed, so arming consumes no stream randomness —
+    /// triple draws and masks are bit-identical in both modes.
+    pub fn set_security(&mut self, mode: SecurityMode) {
+        self.auth = match mode {
+            SecurityMode::SemiHonest => None,
+            SecurityMode::Malicious => {
+                let (alpha_full, alpha_share) = self.dealer.mac_key();
+                Some(AuthState::new(alpha_full, alpha_share, self.seed))
+            }
+        };
     }
 
     pub fn is_leader(&self) -> bool {
@@ -164,6 +188,29 @@ pub fn recv_share(ctx: &mut PartyCtx, shape: &[usize]) -> NetResult<Shared> {
     Ok(Shared(TensorR::from_vec(data, shape)))
 }
 
+/// Enqueue one audited opening in the MAC ledger — the attachment point
+/// of the malicious-security tier.  `opened` is the reconstruction this
+/// party computed, `mine` the share it contributed; the MAC share α·mine
+/// is synthesized on the fly (no per-value MAC storage on the semi-honest
+/// share type), weighted by the agreed coefficient stream, and folded
+/// into the deferred batch that [`super::auth::flush_macs`] zero-checks
+/// at the next phase boundary.  A no-op on a semi-honest ctx.
+///
+/// Every declassification path in this file (`open`, `open_many`,
+/// `preopen_weight_deltas`, `matmul_weight`'s lazy delta) routes through
+/// here — the sfaudit `mac-coverage` lint pins that invariant.
+fn mac_record_open(ctx: &mut PartyCtx, opened: &[i64], mine: &[i64]) {
+    if let Some(auth) = ctx.auth.as_mut() {
+        let alpha_full = auth.alpha_full;
+        // MacLedger::record with MAC shares α·x_i synthesized per element
+        auth.ledger.record(
+            auth.alpha_share,
+            opened,
+            mine.iter().map(|&x| alpha_full.wrapping_mul(x)),
+        );
+    }
+}
+
 /// Open (reconstruct) a shared tensor to both parties. One round.
 /// The peer's buffer is reused as the result — no copy on either side.
 ///
@@ -173,7 +220,8 @@ pub fn recv_share(ctx: &mut PartyCtx, shape: &[usize]) -> NetResult<Shared> {
 /// value is public-by-protocol>` annotation — enforced by the `sfaudit`
 /// static pass (`cargo run -p sfaudit`), which compiles the justified
 /// sites into `results/OPEN_AUDIT.json`.  Those sites are also where the
-/// planned SPDZ MAC check (ROADMAP item 2) will attach.
+/// SPDZ MAC check attaches under [`SecurityMode::Malicious`] (via
+/// [`mac_record_open`] just below).
 pub fn open(ctx: &mut PartyCtx, x: &Shared) -> NetResult<TensorR> {
     let mut payload = ctx.arena.take(x.len());
     payload.extend_from_slice(&x.0.data);
@@ -182,6 +230,7 @@ pub fn open(ctx: &mut PartyCtx, x: &Shared) -> NetResult<TensorR> {
     for (v, &mine) in theirs.iter_mut().zip(&x.0.data) {
         *v = v.wrapping_add(mine);
     }
+    mac_record_open(ctx, &theirs, &x.0.data);
     Ok(TensorR::from_vec(theirs, x.shape()))
 }
 
@@ -205,11 +254,12 @@ pub fn open_many(ctx: &mut PartyCtx, xs: &[&Shared]) -> NetResult<Vec<TensorR>> 
     let mut off = 0;
     for x in xs {
         let n = x.len();
-        let data = x.0.data
+        let data: Vec<i64> = x.0.data
             .iter()
             .zip(&theirs[off..off + n])
             .map(|(&a, &b)| a.wrapping_add(b))
             .collect();
+        mac_record_open(ctx, &data, &x.0.data);
         out.push(TensorR::from_vec(data, x.shape()));
         off += n;
     }
@@ -615,8 +665,14 @@ pub fn preopen_weight_deltas(
     let mut off = 0;
     for (&i, mut half) in pending.iter().zip(halves) {
         let n = half.data.len();
+        // our half doubles as the MAC witness: clone it before it becomes
+        // the full reconstruction (malicious mode only)
+        let mine = ctx.auth.is_some().then(|| half.data.clone());
         for (v, &t) in half.data.iter_mut().zip(&theirs[off..off + n]) {
             *v = v.wrapping_add(t);
+        }
+        if let Some(mine) = &mine {
+            mac_record_open(ctx, &half.data, mine);
         }
         off += n;
         weights[i].delta = Some(half);
@@ -660,8 +716,13 @@ pub fn matmul_weight(
         *v = v.wrapping_add(t);
     }
     if let Some(mut d) = delta_half.take() {
+        let mine = ctx.auth.is_some().then(|| d.data.clone());
         for (v, &t) in d.data.iter_mut().zip(&theirs[m * k..]) {
             *v = v.wrapping_add(t);
+        }
+        if let Some(mine) = &mine {
+            // the lazy W−B open is an audited declassification too
+            mac_record_open(ctx, &d.data, mine);
         }
         w.delta = Some(d);
     }

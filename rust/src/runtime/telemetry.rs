@@ -629,6 +629,12 @@ pub const QUEUE_CANCELLED: &str = "sf_queue_cancelled_total";
 pub const JOURNAL_APPEND_US: &str = "sf_journal_append_us";
 /// Journal records replayed at open (counter).
 pub const JOURNAL_REPLAYED: &str = "sf_journal_replayed_total";
+/// Batched SPDZ MAC zero-checks flushed (counter; labels: party, op).
+pub const MAC_CHECKS: &str = "sf_mac_checks_total";
+/// Openings covered per MAC-check flush (histogram; labels: party, op).
+pub const MAC_BATCH_SIZE: &str = "sf_mac_batch_size";
+/// MAC-check flush latency, exchange + zero test (histogram, µs).
+pub const MAC_CHECK_US: &str = "sf_mac_check_us";
 
 /// Serialize tests that toggle the global enable switch or inspect the
 /// global registry/tracks (shared with `super::trace` tests).

@@ -17,6 +17,16 @@
 //!  * `SF_FAULT_TRANSPORT` — `mem` (default) / `tcp` / `unix`: run the
 //!    chaos workload over the corresponding [`TransportConfig`] backend,
 //!    so faults are injected above a REAL socket, not just the mpsc pair
+//!  * `SF_SECURITY` — `semi-honest` (default) / `malicious`: run the
+//!    chaos workload under the corresponding [`SecurityMode`], so the
+//!    sweep also covers the SPDZ MAC-check traffic
+//!
+//! The tamper sweep at the bottom of the chaos section is the malicious
+//! tier's contract: a forged OPEN under semi-honest is accepted silently
+//! (or desyncs the parties into an unrelated typed error), while under
+//! `SecurityMode::Malicious` the batched MAC zero-check catches it as a
+//! typed [`NetError::MacCheckFailed`] — and an UNtampered malicious run
+//! selects exactly the semi-honest survivor set.
 //!
 //! Non-transport failure modes (malformed artifacts, API misuse, a
 //! panicking observer inside the service) keep their original coverage
@@ -40,7 +50,7 @@ use selectformer::mpc::net::chan_pair;
 use selectformer::mpc::proto::{recv_share, share_input, Shared};
 use selectformer::mpc::{
     FaultMode, FaultPlan, FaultPolicy, NetError, NetResult, RetryPolicy, Role,
-    TransportConfig,
+    SecurityMode, TransportConfig,
 };
 use selectformer::tensor::TensorR;
 
@@ -100,16 +110,31 @@ fn env_transport() -> TransportConfig {
     }
 }
 
+/// CI chaos-matrix security dimension: `semi-honest` (default) /
+/// `malicious`.
+fn env_security() -> SecurityMode {
+    match std::env::var("SF_SECURITY") {
+        Ok(v) => SecurityMode::parse(&v)
+            .unwrap_or_else(|| panic!("SF_SECURITY={v} (semi-honest|malicious)")),
+        Err(_) => SecurityMode::default(),
+    }
+}
+
 /// The sweep workload: a serial (`lanes = 1`) two-phase selection — both
 /// phases run the same tiny proxy, 48 candidates -> 24 -> 12 — so fault
 /// points cover setup, eval batches, QuickSelect and the phase boundary.
 struct Chaos {
     proxy: PathBuf,
     ds: Arc<Dataset>,
+    security: SecurityMode,
 }
 
 impl Chaos {
     fn new(tag: &str) -> Chaos {
+        Chaos::with_security(tag, env_security())
+    }
+
+    fn with_security(tag: &str, security: SecurityMode) -> Chaos {
         let dir = std::env::temp_dir().join("sf_fault_injection").join(tag);
         let proxy = dir.join("p.sfw");
         testutil::write_random_proxy_sfw(&proxy, 1, 1, 2, 16, 64, 2, 8);
@@ -119,7 +144,7 @@ impl Chaos {
             false,
             5,
         ));
-        Chaos { proxy, ds }
+        Chaos { proxy, ds, security }
     }
 
     fn job(
@@ -138,6 +163,7 @@ impl Chaos {
             lanes: 1,
             faults,
             transport: env_transport(),
+            security: self.security,
             ..Default::default()
         })
         .job_tag(tag);
@@ -312,6 +338,203 @@ fn stall_surfaces_as_timeout_with_op_label() {
         }
     }
     assert!(plan.has_fired());
+}
+
+// ---------------------------------------------------------------------------
+// tamper injection: the malicious-security tier's detection contract
+
+/// One share + one open + one ledger flush over a faultable pair; returns
+/// both parties' view of the opened values.  `tamper` forges the model
+/// owner's OPEN frame (message index 1: share transfer is 0, open is 1).
+fn open_once(
+    dealer_seed: u64,
+    security: SecurityMode,
+    tamper: bool,
+) -> (NetResult<Vec<i64>>, NetResult<Vec<i64>>, Arc<FaultPlan>) {
+    use selectformer::mpc::auth::flush_macs;
+    use selectformer::mpc::engine::run_pair_metered_cfg;
+    use selectformer::mpc::proto::open;
+
+    let plan = FaultPlan::new(
+        Role::ModelOwner,
+        FaultMode::TamperAt { msg: if tamper { 1 } else { u64::MAX } },
+    );
+    let faults = FaultPolicy {
+        recv_timeout: Some(Duration::from_secs(5)),
+        retry: RetryPolicy::default(),
+        inject: Some(plan.clone()),
+    };
+    let secret = TensorR::from_vec(vec![11, -7, 42, 0, 5], &[5]);
+    let ((r0, _), (r1, _)) = run_pair_metered_cfg(
+        dealer_seed,
+        &faults,
+        &TransportConfig::default(),
+        {
+            let secret = secret.clone();
+            move |ctx| -> NetResult<Vec<i64>> {
+                ctx.set_security(security);
+                let sh = share_input(ctx, &secret)?;
+                let opened = open(ctx, &sh)?;
+                flush_macs(ctx, "tamper_unit")?;
+                Ok(opened.data)
+            }
+        },
+        move |ctx| -> NetResult<Vec<i64>> {
+            ctx.set_security(security);
+            let sh = recv_share(ctx, &[5])?;
+            let opened = open(ctx, &sh)?;
+            flush_macs(ctx, "tamper_unit")?;
+            Ok(opened.data)
+        },
+    );
+    (r0, r1, plan)
+}
+
+#[test]
+fn forged_open_is_silent_semi_honest_but_typed_mac_failure_malicious() {
+    for seed in [0xbeadu64, 0x7777, 3] {
+        // untampered: both modes open identically (malicious adds ONLY the
+        // check traffic, never changes a value)
+        let (a0, a1, probe) = open_once(seed, SecurityMode::SemiHonest, false);
+        let truth = a0.expect("semi-honest open");
+        assert_eq!(truth, a1.unwrap());
+        assert!(!probe.has_fired());
+        let (m0, m1, _) = open_once(seed, SecurityMode::Malicious, false);
+        assert_eq!(m0.expect("clean malicious open"), truth, "seed {seed}");
+        assert_eq!(m1.unwrap(), truth);
+
+        // forged open, semi-honest: NO error — the data owner silently
+        // accepts a reconstruction that differs from the model owner's
+        let (s0, s1, plan) = open_once(seed, SecurityMode::SemiHonest, true);
+        assert!(plan.has_fired(), "seed {seed}: tamper never fired");
+        assert_eq!(s0.unwrap(), truth, "sender's own view is untouched");
+        let forged = s1.expect("semi-honest MUST accept the forgery");
+        assert_ne!(forged, truth, "seed {seed}: views diverged silently");
+
+        // forged open, malicious: BOTH parties abort with the typed,
+        // value-blind MacCheckFailed at the flush — deterministically
+        let (f0, f1, plan) = open_once(seed, SecurityMode::Malicious, true);
+        assert!(plan.has_fired());
+        let expected =
+            NetError::MacCheckFailed { phase: "tamper_unit", opens: 5 };
+        assert_eq!(f0.unwrap_err(), expected, "seed {seed}: model owner");
+        assert_eq!(f1.unwrap_err(), expected, "seed {seed}: data owner");
+    }
+}
+
+#[test]
+fn tamper_sweep_semi_honest_never_detects_malicious_does() {
+    let sh = Chaos::with_security("tamper_sh", SecurityMode::SemiHonest);
+    let (base_sel, total_sh) = sh.baseline(0);
+    let mal = Chaos::with_security("tamper_mal", SecurityMode::Malicious);
+    let (mal_sel, total_mal) = mal.baseline(0);
+    // the malicious tier is selection-transparent when nobody cheats…
+    assert_eq!(mal_sel, base_sel, "untampered malicious must select identically");
+    // …and its MAC-check flushes are real traffic
+    assert!(
+        total_mal > total_sh,
+        "malicious sends {total_mal} <= semi-honest {total_sh}"
+    );
+
+    // one tampered job at message index `n`, through the queue service;
+    // None = completed (the forgery was silently accepted)
+    let tampered = |chaos: &Chaos, n: u64, total: u64| -> Option<NetError> {
+        let plan =
+            FaultPlan::new(Role::ModelOwner, FaultMode::TamperAt { msg: n });
+        let faults = FaultPolicy {
+            recv_timeout: Some(Duration::from_secs(10)),
+            retry: RetryPolicy::default(), // no retry: observe the failure
+            inject: Some(plan.clone()),
+        };
+        let service = SelectionService::with_queue(1, 1);
+        let handle = service.submit(chaos.job(0, faults, None)).expect("submit");
+        let root = match handle.wait() {
+            Ok(outcome) => {
+                assert_eq!(
+                    outcome.selected.len(),
+                    12,
+                    "tamper@{n}: silent completion must still be well-formed"
+                );
+                None
+            }
+            Err(e) => Some(
+                e.downcast_ref::<NetError>()
+                    .cloned()
+                    .unwrap_or(NetError::PeerClosed),
+            ),
+        };
+        assert!(plan.has_fired(), "tamper@{n} never fired (total {total})");
+        // the hub stays healthy after a tampered job on the same service
+        let clean = service
+            .submit(chaos.job(0, FaultPolicy::default(), None))
+            .expect("submit clean");
+        assert_eq!(
+            clean.wait().expect("clean job after tamper").selected,
+            base_sel,
+            "tamper@{n}: hub must stay healthy"
+        );
+        service.shutdown();
+        root
+    };
+
+    // early points land in session setup / eval; the job's tail is the
+    // final phase's QuickSelect, where every open steers control flow —
+    // the densest region of audited opens and MAC flush frames.
+    let points = |total: u64| -> Vec<u64> {
+        let mut p = vec![0, total / 2];
+        p.extend((1..=5).map(|d| total.saturating_sub(d)));
+        p.sort_unstable();
+        p.dedup();
+        p
+    };
+
+    // semi-honest: forgeries are NEVER detected as MAC failures — they
+    // either pass silently or desync into an unrelated transport error
+    let sh_runs: Vec<(u64, Option<NetError>)> = points(total_sh)
+        .into_iter()
+        .map(|n| (n, tampered(&sh, n, total_sh)))
+        .collect();
+    assert!(
+        sh_runs
+            .iter()
+            .all(|(_, r)| !matches!(r, Some(NetError::MacCheckFailed { .. }))),
+        "semi-honest produced a MacCheckFailed: {sh_runs:?}"
+    );
+    assert!(
+        sh_runs.iter().any(|(_, r)| r.is_none()),
+        "no silently-accepted forgery in {sh_runs:?}"
+    );
+
+    // malicious: at least one forgery lands on an audited open and is
+    // caught as the typed, value-blind MacCheckFailed
+    let mal_runs: Vec<(u64, Option<NetError>)> = points(total_mal)
+        .into_iter()
+        .map(|n| (n, tampered(&mal, n, total_mal)))
+        .collect();
+    let detected: Vec<u64> = mal_runs
+        .iter()
+        .filter(|(_, r)| matches!(r, Some(NetError::MacCheckFailed { .. })))
+        .map(|&(n, _)| n)
+        .collect();
+    assert!(
+        !detected.is_empty(),
+        "no MacCheckFailed across malicious sweep: {mal_runs:?}"
+    );
+    // detection is deterministic: replaying a detected point detects again
+    assert!(
+        matches!(
+            tampered(&mal, detected[0], total_mal),
+            Some(NetError::MacCheckFailed { .. })
+        ),
+        "tamper@{} was not re-detected on replay",
+        detected[0]
+    );
+    println!(
+        "tamper sweep: semi-honest silent at {} of {} points; malicious \
+         detected MacCheckFailed at {detected:?}",
+        sh_runs.iter().filter(|(_, r)| r.is_none()).count(),
+        sh_runs.len()
+    );
 }
 
 // ---------------------------------------------------------------------------

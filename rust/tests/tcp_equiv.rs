@@ -10,6 +10,13 @@
 //! `selectformer party` OS processes (spawned from the test binary's
 //! `CARGO_BIN_EXE_selectformer`) over loopback TCP must select exactly
 //! what one in-process job selects.
+//!
+//! CI's `security: [semi-honest, malicious]` dimension runs this whole
+//! suite under `SF_SECURITY=malicious` too: the SPDZ MAC-check flushes
+//! add deterministic traffic, so transport equivalence (mem == tcp ==
+//! unix, byte-for-byte) must survive the malicious tier unchanged.  The
+//! `malicious_tier_*` test additionally pins the cross-mode contract:
+//! same survivors and scores as semi-honest, strictly more bytes.
 
 use std::io::{BufRead, BufReader};
 use std::process::{Command, Stdio};
@@ -20,7 +27,17 @@ use selectformer::coordinator::{
     SelectionJob, SelectionOutcome,
 };
 use selectformer::data::{synth, Dataset, SynthSpec};
-use selectformer::mpc::TransportConfig;
+use selectformer::mpc::{SecurityMode, TransportConfig};
+
+/// CI security dimension: `SF_SECURITY=semi-honest` (default) /
+/// `malicious` — every equivalence cell runs under this mode.
+fn env_security() -> SecurityMode {
+    match std::env::var("SF_SECURITY") {
+        Ok(v) => SecurityMode::parse(&v)
+            .unwrap_or_else(|| panic!("SF_SECURITY={v} (semi-honest|malicious)")),
+        Err(_) => SecurityMode::default(),
+    }
+}
 
 struct Fixture {
     p1: std::path::PathBuf,
@@ -57,6 +74,16 @@ fn run(
     lanes: usize,
     overlap: bool,
 ) -> SelectionOutcome {
+    run_secure(fx, transport, lanes, overlap, env_security())
+}
+
+fn run_secure(
+    fx: &Fixture,
+    transport: TransportConfig,
+    lanes: usize,
+    overlap: bool,
+    security: SecurityMode,
+) -> SelectionOutcome {
     SelectionJob::builder_shared([fx.p1.as_path(), fx.p2.as_path()], fx.ds.clone())
         .candidates((0..fx.ds.n).collect())
         .schedule(fx.schedule.clone())
@@ -65,6 +92,7 @@ fn run(
             lanes,
             overlap,
             transport,
+            security,
             ..Default::default()
         })
         .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true })
@@ -118,6 +146,36 @@ fn unix_socket_is_byte_identical() {
 }
 
 #[test]
+fn malicious_tier_selects_identically_and_costs_more() {
+    // honest execution: SecurityMode is selection-transparent — same
+    // survivors, same opened scores, same entropy shares — and its
+    // MAC-check flushes are the ONLY extra traffic (strictly more bytes,
+    // on every transport backend)
+    let fx = fixture("maltier");
+    for (transport, tag) in
+        [(TransportConfig::default(), "mem"), (TransportConfig::tcp(), "tcp")]
+    {
+        let sh =
+            run_secure(&fx, transport.clone(), 1, false, SecurityMode::SemiHonest);
+        let mal =
+            run_secure(&fx, transport, 1, false, SecurityMode::Malicious);
+        assert_eq!(sh.selected, mal.selected, "{tag}: selection");
+        for (p, (a, b)) in sh.phases.iter().zip(&mal.phases).enumerate() {
+            assert_eq!(a.survivors, b.survivors, "{tag}: phase {p} survivors");
+            assert_eq!(a.entropies, b.entropies, "{tag}: phase {p} scores");
+            assert_eq!(a.ent_shares, b.ent_shares, "{tag}: phase {p} shares");
+            assert!(
+                b.meter_p0.bytes > a.meter_p0.bytes,
+                "{tag}: phase {p}: malicious must pay for its MAC checks \
+                 ({} <= {})",
+                b.meter_p0.bytes,
+                a.meter_p0.bytes
+            );
+        }
+    }
+}
+
+#[test]
 fn shaped_transport_changes_wall_clock_not_bytes() {
     // latency/bandwidth shaping must be observationally invisible to the
     // protocol: identical selection and meters, only slower
@@ -158,9 +216,10 @@ fn two_party_processes_match_in_process_selection() {
         false,
         seed ^ 0xda7a, // cmd_party's synth derivation
     );
+    let security = env_security();
     let oracle = SelectionJob::builder([p1.as_path(), p2.as_path()], &ds)
         .keep_counts(vec![24, 12])
-        .runtime(RuntimeProfile { batch: 16, ..Default::default() })
+        .runtime(RuntimeProfile { batch: 16, security, ..Default::default() })
         .build()
         .expect("oracle job")
         .run()
@@ -179,6 +238,8 @@ fn two_party_processes_match_in_process_selection() {
             "24;12",
             "--batch",
             "16",
+            "--security",
+            security.label(),
             "--out",
         ])
         .arg(&out_path)
@@ -209,6 +270,8 @@ fn two_party_processes_match_in_process_selection() {
             "24;12",
             "--batch",
             "16",
+            "--security",
+            security.label(),
         ])
         .stdout(Stdio::piped())
         .stderr(Stdio::inherit())

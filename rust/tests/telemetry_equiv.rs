@@ -17,8 +17,19 @@ use selectformer::coordinator::{
 };
 use selectformer::data::{synth, Dataset, SynthSpec};
 use selectformer::mpc::net::chan_pair;
-use selectformer::mpc::TransportConfig;
+use selectformer::mpc::{SecurityMode, TransportConfig};
 use selectformer::runtime::telemetry;
+
+/// CI security dimension: `SF_SECURITY=semi-honest` (default) /
+/// `malicious` — observation purity must hold with the SPDZ MAC-check
+/// traffic on the wire too.
+fn env_security() -> SecurityMode {
+    match std::env::var("SF_SECURITY") {
+        Ok(v) => SecurityMode::parse(&v)
+            .unwrap_or_else(|| panic!("SF_SECURITY={v} (semi-honest|malicious)")),
+        Err(_) => SecurityMode::default(),
+    }
+}
 
 /// Telemetry state (the enable flag, the metric registry, the span
 /// tracks) is process-global: every test in this binary serializes on
@@ -65,6 +76,16 @@ fn run(
     lanes: usize,
     overlap: bool,
 ) -> SelectionOutcome {
+    run_secure(fx, transport, lanes, overlap, env_security())
+}
+
+fn run_secure(
+    fx: &Fixture,
+    transport: TransportConfig,
+    lanes: usize,
+    overlap: bool,
+    security: SecurityMode,
+) -> SelectionOutcome {
     SelectionJob::builder_shared([fx.p1.as_path(), fx.p2.as_path()], fx.ds.clone())
         .candidates((0..fx.ds.n).collect())
         .schedule(fx.schedule.clone())
@@ -73,6 +94,7 @@ fn run(
             lanes,
             overlap,
             transport,
+            security,
             ..Default::default()
         })
         .privacy(PrivacyMode::Debug { reveal_entropies: true, capture_shares: true })
@@ -136,6 +158,55 @@ fn telemetry_on_is_byte_identical_over_tcp() {
     let _g = telemetry_lock();
     let fx = fixture("tcp");
     off_on_matrix(&fx, "tcp", TransportConfig::tcp);
+}
+
+/// The malicious tier's MAC metrics obey the same purity contract: a
+/// `SecurityMode::Malicious` run with telemetry ON is byte-identical to
+/// the same run with it OFF, and the `sf_mac_checks_total` /
+/// `sf_mac_batch_size` series actually observe the ledger flushes (one
+/// batch-size observation per check, each batch settling ≥ 1 open).
+/// The metrics carry counts, sizes and durations only — never an opened
+/// value or a MAC residue.
+#[test]
+fn mac_check_metrics_are_value_blind_and_observed() {
+    let _g = telemetry_lock();
+    let fx = fixture("malicious");
+    telemetry::set_enabled(false);
+    telemetry::reset();
+    let off = run_secure(
+        &fx,
+        TransportConfig::default(),
+        1,
+        false,
+        SecurityMode::Malicious,
+    );
+    telemetry::set_enabled(true);
+    let on = run_secure(
+        &fx,
+        TransportConfig::default(),
+        1,
+        false,
+        SecurityMode::Malicious,
+    );
+    telemetry::set_enabled(false);
+    assert_identical("malicious mem lanes=1", &off, &on);
+    let checks = telemetry::counter_total(telemetry::MAC_CHECKS);
+    assert!(checks > 0, "a malicious run must flush its MAC ledger");
+    assert_eq!(
+        telemetry::histogram_total_count(telemetry::MAC_BATCH_SIZE),
+        checks,
+        "one batch-size observation per MAC check"
+    );
+    assert!(
+        telemetry::histogram_total_sum(telemetry::MAC_BATCH_SIZE) >= checks,
+        "every flushed batch settles at least one open"
+    );
+    assert_eq!(
+        telemetry::histogram_total_count(telemetry::MAC_CHECK_US),
+        checks,
+        "one duration observation per MAC check"
+    );
+    telemetry::reset();
 }
 
 /// The wire-send histogram and the CostMeter count the SAME traffic: one

@@ -38,6 +38,16 @@
 //!    counts and durations — never secret-shared values.  There is no
 //!    annotation hatch: the telemetry layer is value-blind by
 //!    construction, so a share in its arguments is always a bug.
+//! 6. **mac-coverage** — the malicious tier's detection surface must stay
+//!    total: every declassification primitive *defined* in
+//!    [`MAC_COVERED_FILE`] must route its reconstruction through
+//!    [`MAC_BRIDGE_FN`] (which feeds `MacLedger::record`), and every
+//!    `reveal_*` call site — the family that bypasses those primitives —
+//!    must carry an adjacent `// MAC-EXEMPT: <why>` annotation.  The
+//!    exemption is reserved for `PrivacyMode::Debug` reveal sites: its
+//!    text must say so (contain `Debug`), anywhere else it is itself a
+//!    finding.  An open the ledger never saw is an open a forged share
+//!    can silently corrupt under `SecurityMode::Malicious`.
 //!
 //! The scanner is line-and-token exact but deliberately syntax-light: it
 //! masks strings/comments, tracks `#[cfg(test)]` item bodies by brace
@@ -72,6 +82,20 @@ pub const OPEN_AUDIT_TAG: &str = "OPEN-AUDIT:";
 /// secret-display lint (the `PrivacyMode::Debug`-gated hatch).
 pub const SECRET_DISPLAY_TAG: &str = "SECRET-DISPLAY-OK:";
 
+/// The annotation that exempts a declassification site from the
+/// mac-coverage lint.  Reserved for `PrivacyMode::Debug` reveal sites —
+/// the exemption text must contain `Debug` or it is itself a finding.
+pub const MAC_EXEMPT_TAG: &str = "MAC-EXEMPT:";
+
+/// The bridge from the declassification primitives into the deferred
+/// SPDZ MAC batch (`MacLedger::record`): every primitive defined in
+/// [`MAC_COVERED_FILE`] must call it on the values it reconstructs.
+pub const MAC_BRIDGE_FN: &str = "mac_record_open";
+
+/// The file defining the declassification primitives, where mac-coverage
+/// audits the definitions themselves.
+pub const MAC_COVERED_FILE: &str = "rust/src/mpc/proto.rs";
+
 /// Files whose non-test code must be panic-free (the fallible transport /
 /// service layers: a panic here kills a worker or a party process instead
 /// of resolving `JobStatus::Failed`).
@@ -79,6 +103,7 @@ pub const PANIC_FILES: &[&str] = &[
     "rust/src/mpc/net.rs",
     "rust/src/mpc/wire.rs",
     "rust/src/mpc/faults.rs",
+    "rust/src/mpc/auth.rs",
     "rust/src/coordinator/service.rs",
     "rust/src/coordinator/journal.rs",
     "rust/src/coordinator/party.rs",
@@ -484,6 +509,7 @@ pub enum Lint {
     WireDeadline,
     StaleAllowlist,
     TelemetryValueBlind,
+    MacCoverage,
 }
 
 impl Lint {
@@ -495,6 +521,7 @@ impl Lint {
             Lint::WireDeadline => "wire-deadline",
             Lint::StaleAllowlist => "stale-allowlist",
             Lint::TelemetryValueBlind => "telemetry-value-blind",
+            Lint::MacCoverage => "mac-coverage",
         }
     }
 }
@@ -623,6 +650,38 @@ fn annotation_for(comments: &BTreeMap<u32, String>, line: u32, tag: &str) -> Opt
     None
 }
 
+/// Like [`annotation_for`] but returns ONLY the text following the tag on
+/// the tag's own line — no continuation folding.  The mac-coverage
+/// exemption hygiene check must judge the exemption text itself, not
+/// neighbouring annotations (e.g. an `OPEN-AUDIT:` block below the tag)
+/// folded into it.
+fn tag_text_for(comments: &BTreeMap<u32, String>, line: u32, tag: &str) -> Option<String> {
+    let extract = |text: &str| -> Option<String> {
+        text.find(tag).map(|p| text[p + tag.len()..].trim().to_string())
+    };
+    if let Some(text) = comments.get(&line) {
+        if let Some(j) = extract(text) {
+            return Some(j);
+        }
+    }
+    let mut l = line.saturating_sub(1);
+    while l >= 1 {
+        match comments.get(&l) {
+            Some(text) => {
+                if let Some(j) = extract(text) {
+                    return Some(j);
+                }
+                if l == 1 {
+                    break;
+                }
+                l -= 1;
+            }
+            None => break, // annotation block must touch the call site
+        }
+    }
+    None
+}
+
 // ---------------------------------------------------------------------------
 // The lint passes over one file
 // ---------------------------------------------------------------------------
@@ -690,6 +749,43 @@ pub fn scan_source(rel: &str, src: &str, allow: &Allowlist) -> Report {
                 true
             };
             if counted {
+                // ---- lint 6 (site half): mac-coverage ---------------------
+                // The exact primitives are MAC-covered inside their own
+                // bodies (checked below, per definition); the `reveal_*`
+                // family bypasses them, so each such site must carry the
+                // Debug-only MAC-EXEMPT annotation — and an exemption
+                // whose text does not say `Debug` is abuse anywhere.
+                let exemption = tag_text_for(&fl.comments, t.line, MAC_EXEMPT_TAG);
+                match &exemption {
+                    Some(text) if !text.contains("Debug") => {
+                        rpt.findings.push(Finding {
+                            lint: Lint::MacCoverage,
+                            file: rel.to_string(),
+                            line: t.line,
+                            message: format!(
+                                "`{MAC_EXEMPT_TAG}` on `{name}(..)` is reserved for \
+                                 PrivacyMode::Debug reveal sites — the exemption text \
+                                 must say so (mention `Debug`); non-Debug opens must \
+                                 route through `{MAC_BRIDGE_FN}` instead"
+                            ),
+                        });
+                    }
+                    None if name.starts_with(DECLASSIFY_PREFIX) => {
+                        rpt.findings.push(Finding {
+                            lint: Lint::MacCoverage,
+                            file: rel.to_string(),
+                            line: t.line,
+                            message: format!(
+                                "`{name}(..)` bypasses the MAC-recorded open \
+                                 primitives — a Debug-reveal site must carry an \
+                                 adjacent `// {MAC_EXEMPT_TAG} <why>` annotation so \
+                                 the malicious tier's uncovered surface stays \
+                                 explicit"
+                            ),
+                        });
+                    }
+                    _ => {}
+                }
                 match annotation_for(&fl.comments, t.line, OPEN_AUDIT_TAG) {
                     Some(justification) if !justification.is_empty() => {
                         rpt.open_sites.push(OpenSite {
@@ -854,6 +950,61 @@ pub fn scan_source(rel: &str, src: &str, allow: &Allowlist) -> Report {
         }
 
         i += 1;
+    }
+
+    // ---- lint 6 (definition half): mac-coverage ---------------------------
+    // In the file that defines the declassification primitives, each one
+    // must feed the values it reconstructs into the deferred MAC batch:
+    // its body contains a `mac_record_open(..)` (or a direct
+    // `MacLedger::record`) call.  And the bridge itself, if present, must
+    // still reach `record` — a severed bridge silently un-MACs every open.
+    if rel == MAC_COVERED_FILE {
+        let fn_body_has = |f: &str, tok: &str| {
+            toks.iter().any(|t| {
+                t.kind == TokKind::Ident
+                    && t.text == tok
+                    && !t.in_test
+                    && t.in_fn.as_deref() == Some(f)
+            })
+        };
+        for (i, t) in toks.iter().enumerate() {
+            let is_fn_def = t.kind == TokKind::Ident
+                && !t.in_test
+                && i >= 1
+                && toks[i - 1].kind == TokKind::Ident
+                && toks[i - 1].text == "fn";
+            if !is_fn_def {
+                continue;
+            }
+            let name = t.text.as_str();
+            if DECLASSIFY_EXACT.contains(&name)
+                && !fn_body_has(name, MAC_BRIDGE_FN)
+                && !fn_body_has(name, "record")
+            {
+                rpt.findings.push(Finding {
+                    lint: Lint::MacCoverage,
+                    file: rel.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "declassification primitive `fn {name}` reconstructs \
+                         without routing through `{MAC_BRIDGE_FN}` / \
+                         `MacLedger::record` — under SecurityMode::Malicious a \
+                         forged share through this open would go undetected"
+                    ),
+                });
+            }
+            if name == MAC_BRIDGE_FN && !fn_body_has(name, "record") {
+                rpt.findings.push(Finding {
+                    lint: Lint::MacCoverage,
+                    file: rel.to_string(),
+                    line: t.line,
+                    message: format!(
+                        "`{MAC_BRIDGE_FN}` no longer feeds `MacLedger::record` — \
+                         the bridge into the deferred MAC batch is severed"
+                    ),
+                });
+            }
+        }
     }
     rpt
 }

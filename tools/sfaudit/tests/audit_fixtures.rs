@@ -15,6 +15,8 @@ const DEADLINE_BAD: &str = include_str!("fixtures/deadline_bad.rs");
 const DEADLINE_GOOD: &str = include_str!("fixtures/deadline_good.rs");
 const TELEMETRY_BAD: &str = include_str!("fixtures/telemetry_bad.rs");
 const TELEMETRY_GOOD: &str = include_str!("fixtures/telemetry_good.rs");
+const MAC_BAD: &str = include_str!("fixtures/mac_bad.rs");
+const MAC_GOOD: &str = include_str!("fixtures/mac_good.rs");
 
 fn no_allow() -> Allowlist {
     Allowlist::default()
@@ -170,6 +172,53 @@ fn telemetry_good_is_clean_and_scope_is_only_telemetry_calls() {
 }
 
 // --------------------------------------------------------------------------
+// lint 6: mac-coverage
+// --------------------------------------------------------------------------
+
+#[test]
+fn mac_bad_flags_severed_bridge_uncovered_primitive_and_exempt_abuse() {
+    let rpt = scan_source("rust/src/mpc/proto.rs", MAC_BAD, &no_allow());
+    let mut lines: Vec<u32> = rpt
+        .findings
+        .iter()
+        .filter(|f| f.lint == Lint::MacCoverage)
+        .map(|f| f.line)
+        .collect();
+    lines.sort_unstable();
+    // 3: `fn open` never calls mac_record_open; 8: the bridge fn lost its
+    // ledger.record call; 17: MAC-EXEMPT whose text does not say Debug;
+    // 19: reveal_* site with no MAC-EXEMPT at all
+    assert_eq!(lines, vec![3, 8, 17, 19], "findings: {:#?}", rpt.findings);
+    // the OPEN-AUDIT annotations are present, so no open-audit findings —
+    // mac-coverage is a separate, additional obligation
+    assert!(rpt.findings.iter().all(|f| f.lint == Lint::MacCoverage));
+}
+
+#[test]
+fn mac_good_is_clean_and_still_inventoried() {
+    let rpt = scan_source("rust/src/mpc/proto.rs", MAC_GOOD, &no_allow());
+    assert!(rpt.is_clean(), "unexpected findings: {:#?}", rpt.findings);
+    let calls: Vec<&str> = rpt.open_sites.iter().map(|s| s.call.as_str()).collect();
+    assert_eq!(calls, vec!["open", "reveal_scores"]);
+}
+
+#[test]
+fn mac_definition_check_is_scoped_to_the_primitive_file() {
+    // the same severed-bridge source scanned under any other path raises
+    // no definition findings (other trees define unrelated `fn open`s) —
+    // but site-level rules (exempt abuse, uncovered reveal) still apply
+    let rpt = scan_source("rust/src/coordinator/fixture.rs", MAC_BAD, &no_allow());
+    let mut lines: Vec<u32> = rpt
+        .findings
+        .iter()
+        .filter(|f| f.lint == Lint::MacCoverage)
+        .map(|f| f.line)
+        .collect();
+    lines.sort_unstable();
+    assert_eq!(lines, vec![17, 19], "findings: {:#?}", rpt.findings);
+}
+
+// --------------------------------------------------------------------------
 // tree-level: stale allowlist, inventory JSON, binary exit codes
 // --------------------------------------------------------------------------
 
@@ -280,6 +329,7 @@ fn binary_exits_nonzero_per_violation_class() {
             TELEMETRY_BAD,
             "telemetry-value-blind",
         ),
+        ("v_mac", "rust/src/mpc/proto.rs", MAC_BAD, "mac-coverage"),
     ] {
         let tree = TempTree::new(name, &[(rel, src)]);
         let (code, _stdout, stderr) = run_bin(&tree.root);

@@ -1,0 +1,21 @@
+//! Violating fixture for the mac-coverage lint (scanned as proto.rs).
+
+pub fn open(ctx: &mut Ctx, x: &Shared) -> NetResult<TensorR> {
+    let theirs = ctx.chan.exchange(x.0.clone())?;
+    Ok(reconstruct(theirs, &x.0))
+}
+
+fn mac_record_open(ctx: &mut Ctx, opened: &[i64]) {
+    let _ = (ctx, opened); // the ledger call was lost in a refactor
+}
+
+pub fn caller(ctx: &mut Ctx) -> NetResult<()> {
+    // OPEN-AUDIT: verdict bit is the public output
+    let _ = open(ctx, &bit)?;
+    // MAC-EXEMPT: temporary, will fix later
+    // OPEN-AUDIT: debug scores
+    let _ = open(ctx, &scores)?;
+    // OPEN-AUDIT: debug reveal of entropies
+    let _ = reveal_scores(ctx)?;
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Conforming fixture for the mac-coverage lint (scanned as proto.rs).
+
+fn mac_record_open(ctx: &mut Ctx, opened: &[i64], mine: &[i64]) {
+    if let Some(auth) = ctx.auth.as_mut() {
+        auth.ledger.record(auth.alpha_share, opened, mine.iter());
+    }
+}
+
+pub fn open(ctx: &mut Ctx, x: &Shared) -> NetResult<TensorR> {
+    let theirs = ctx.chan.exchange(x.0.clone())?;
+    mac_record_open(ctx, &theirs, &x.0);
+    Ok(reconstruct(theirs))
+}
+
+pub fn caller(ctx: &mut Ctx) -> NetResult<()> {
+    // OPEN-AUDIT: verdict bit is the public output
+    let _ = open(ctx, &bit)?;
+    // MAC-EXEMPT: Debug-gated diagnostic reveal — deliberately public
+    // OPEN-AUDIT: entropy values under the caller's Debug opt-out
+    let _ = reveal_scores(ctx)?;
+    Ok(())
+}
